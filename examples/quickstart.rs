@@ -1,0 +1,53 @@
+//! Quickstart: decentralized linear regression with Q-GADMM in ~40 lines.
+//!
+//! Ten workers on a chain, 2-bit stochastic quantization, loss-gap curve
+//! printed as it converges to the centralized optimum.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::net::topology::Topology;
+
+fn main() {
+    // 1. Data: a 20k×6 regression set, uniformly sharded over 10 workers.
+    let data = LinRegDataset::synthesize(&LinRegSpec::default(), 42);
+    let (_, f_star) = data.optimum(); // centralized optimum for the metric
+    let workers = 10;
+    let partition = Partition::contiguous(data.samples(), workers);
+
+    // 2. Algorithm: Q-GADMM = GADMM + 2-bit stochastic quantization.
+    let cfg = GadmmConfig {
+        workers,
+        rho: 6400.0,
+        dual_step: 1.0,
+        quant: Some(QuantConfig::default()), // None ⇒ full-precision GADMM
+    };
+    let problem = LinRegProblem::new(&data, &partition, cfg.rho);
+    let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 7);
+
+    // 3. Train until the decentralized objective matches F* to 1e-4.
+    let opts = RunOptions {
+        iterations: 5_000,
+        eval_every: 1,
+        stop_below: Some(1e-4),
+        stop_above: None,
+    };
+    let report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
+
+    for p in report.recorder.thinned(12).points {
+        println!(
+            "iter {:>5}  |F - F*| = {:>12.5e}   bits sent = {}",
+            p.iteration, p.value, p.bits
+        );
+    }
+    println!(
+        "\nconverged in {} iterations — every broadcast was {} bits instead of {} (32-bit)",
+        report.iterations_run,
+        2 * data.features() + 64,
+        32 * data.features(),
+    );
+}

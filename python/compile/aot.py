@@ -1,0 +1,163 @@
+"""AOT lowering: JAX L2 graphs -> HLO text artifacts + manifest.json.
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that the pinned xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Each artifact is one jitted function lowered at fixed shapes; the manifest
+records input/output shapes, dtypes and the constants baked into the
+lowering (batch size, bits, Adam hyperparameters) so the Rust runtime can
+validate call sites at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _shapes(specs):
+    return [list(s.shape) for s in specs]
+
+
+def build_artifacts(mlp_batch: int, eval_batch: int, linreg_d: int, quant_dims, bits_map):
+    """Returns {name: (lowered, input_specs, output_info, constants)}."""
+    arts = {}
+
+    # --- quantizer artifacts: one per (d, bits) pair -----------------------
+    for d in quant_dims:
+        bits = bits_map[d]
+        fn = jax.jit(lambda t, h, u, _b=bits: model.quantize_step(t, h, u, _b))
+        ins = [spec(d), spec(d), spec(d)]
+        arts[f"squant_d{d}_b{bits}"] = (
+            fn.lower(*ins),
+            ins,
+            {"outputs": [[d], [d], []]},
+            {"bits": bits, "dims": d},
+        )
+
+    # --- linreg local solve ------------------------------------------------
+    d = linreg_d
+    fn = jax.jit(model.linreg_local)
+    ins = [spec(d, d), spec(d), spec(d), spec(d), spec(d), spec(d), spec(), spec(), spec()]
+    arts[f"linreg_local_d{d}"] = (
+        fn.lower(*ins),
+        ins,
+        {"outputs": [[d]]},
+        {"dims": d},
+    )
+
+    # --- MLP artifacts ------------------------------------------------------
+    dd = model.MLP_DIMS
+    b = mlp_batch
+    fn = jax.jit(model.mlp_local_adam)
+    ins = [
+        spec(dd),
+        spec(b, model.MLP_IN),
+        spec(b, model.MLP_OUT),
+        spec(dd),
+        spec(dd),
+        spec(dd),
+        spec(dd),
+        spec(),
+        spec(),
+        spec(),
+    ]
+    arts["mlp_local"] = (
+        fn.lower(*ins),
+        ins,
+        {"outputs": [[dd]]},
+        {
+            "dims": dd,
+            "batch": b,
+            "local_iters": model.LOCAL_ITERS,
+            "adam_lr": model.ADAM_LR,
+        },
+    )
+
+    fn = jax.jit(model.mlp_grad)
+    ins = [spec(dd), spec(b, model.MLP_IN), spec(b, model.MLP_OUT)]
+    arts["mlp_grad"] = (
+        fn.lower(*ins),
+        ins,
+        {"outputs": [[dd]]},
+        {"dims": dd, "batch": b},
+    )
+
+    fn = jax.jit(model.mlp_eval)
+    ins = [spec(dd), spec(eval_batch, model.MLP_IN)]
+    arts["mlp_eval"] = (
+        fn.lower(*ins),
+        ins,
+        {"outputs": [[eval_batch, model.MLP_OUT]]},
+        {"dims": dd, "batch": eval_batch},
+    )
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--mlp-batch", type=int, default=100)
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--linreg-d", type=int, default=6)
+    ap.add_argument(
+        "--skip-mlp",
+        action="store_true",
+        help="only build the (fast) linreg + quantizer artifacts",
+    )
+    args = ap.parse_args()
+
+    quant_dims = [args.linreg_d, model.MLP_DIMS]
+    bits_map = {args.linreg_d: 2, model.MLP_DIMS: 8}
+    arts = build_artifacts(
+        args.mlp_batch, args.eval_batch, args.linreg_d, quant_dims, bits_map
+    )
+    if args.skip_mlp:
+        arts = {k: v for k, v in arts.items() if not k.startswith("mlp")}
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "artifacts": {}}
+    for name, (lowered, ins, outs, consts) in arts.items():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _shapes(ins),
+            "outputs": outs["outputs"],
+            "constants": consts,
+        }
+        print(f"wrote {fname}: {len(text)} chars, inputs={_shapes(ins)}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused ADMM right-hand-side assembly for the linear
+regression local solve (eqs. (14)-(17)).
+
+    rhs = b + mask_l * (lam_l + rho * th_l) + mask_r * (-lam_r + rho * th_r)
+
+Fusing the four masked vector terms avoids materializing intermediates in
+HBM; at d = 6 it is a single VMEM tile, but the kernel is written blocked
+so the same artifact family scales to large-d sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+
+
+def _rhs_kernel(scalar_ref, b_ref, lam_l_ref, lam_r_ref, th_l_ref, th_r_ref, o_ref):
+    rho = scalar_ref[0]
+    mask_l = scalar_ref[1]
+    mask_r = scalar_ref[2]
+    o_ref[...] = (
+        b_ref[...]
+        + mask_l * (lam_l_ref[...] + rho * th_l_ref[...])
+        + mask_r * (-lam_r_ref[...] + rho * th_r_ref[...])
+    )
+
+
+@jax.jit
+def admm_rhs(b, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho):
+    """Assemble the local-solve rhs. Masks are 0.0/1.0 f32 scalars encoding
+    the presence of the left/right neighbor (chain ends have one)."""
+    d = b.shape[0]
+    scalars = jnp.stack(
+        [jnp.float32(rho), jnp.float32(mask_l), jnp.float32(mask_r)]
+    )
+    padded = pl.cdiv(d, BLOCK) * BLOCK
+    pad = padded - d
+
+    def p(v):
+        return jnp.pad(v, (0, pad))
+
+    out = pl.pallas_call(
+        _rhs_kernel,
+        grid=(padded // BLOCK,),
+        in_specs=[pl.BlockSpec((3,), lambda i: (0,))]
+        + [pl.BlockSpec((BLOCK,), lambda i: (i,))] * 5,
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(scalars, p(b), p(lam_l), p(lam_r), p(th_l), p(th_r))
+    return out[:d]

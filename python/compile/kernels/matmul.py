@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: VMEM-tiled matmul for the MLP forward path.
+
+The paper's DNN task is dominated by dense layers (784-128-64-10); this is
+the MXU-shaped kernel the L2 model graphs call for every matmul, with a
+``jax.custom_vjp`` so the Q-SGADMM local training step can differentiate
+through it (the backward passes are themselves Pallas matmuls of the
+transposed operands).
+
+TPU mapping (DESIGN.md §5): grid (M/BM, N/BN, K/BK); x tile (BM, BK) and
+w tile (BK, BN) staged to VMEM, f32 accumulation in the output tile across
+the K axis (revisited output block). At the defaults (BM, BK, BN) =
+(128, 128, 128) the working set is 3·128·128·4 B = 192 KiB. Operands are
+zero-padded to tile multiples by the wrapper.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BK = 128
+BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a, bm, bn):
+    m, n = a.shape
+    pm = pl.cdiv(m, bm) * bm - m
+    pn = pl.cdiv(n, bn) * bn - n
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _matmul_raw(x, w):
+    """Tiled pallas matmul of f32[m,k] @ f32[k,n] (zero-padded to tiles)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    xp = _pad2(x, BM, BK)
+    wp = _pad2(w, BK, BN)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // BM, np_ // BN, kp // BK),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pallas_matmul(x, w):
+    """Differentiable tiled matmul: both forward and backward run on the
+    L1 kernel, so the whole Q-SGADMM local step lowers into Pallas tiles."""
+    return _matmul_raw(x, w)
+
+
+def _fwd(x, w):
+    return _matmul_raw(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    # dx = g @ wᵀ ; dw = xᵀ @ g — transposes fused into the same kernel.
+    dx = _matmul_raw(g, w.T)
+    dw = _matmul_raw(x.T, g)
+    return dx, dw
+
+
+pallas_matmul.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit)
+def matmul(x, w):
+    """Jitted convenience wrapper (tests, eval graphs)."""
+    return pallas_matmul(x, w)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth the
+pytest suite checks the Pallas kernels against (and the spec the Rust
+native backend mirrors)."""
+
+import jax.numpy as jnp
+
+
+def squant_ref(theta, theta_hat, u, bits: int):
+    """Reference stochastic quantizer (eqs. (6)-(13))."""
+    num_levels = jnp.float32((1 << bits) - 1)
+    radius = jnp.max(jnp.abs(theta - theta_hat)).astype(jnp.float32)
+    delta = jnp.where(radius > 0.0, 2.0 * radius / num_levels, 1.0)
+    c = (theta - theta_hat + radius) / delta
+    fl = jnp.floor(c)
+    p = c - fl
+    q = jnp.clip(fl + (u < p).astype(jnp.float32), 0.0, num_levels)
+    hat = theta_hat + delta * q - radius
+    zero = radius <= 0.0
+    q = jnp.where(zero, jnp.zeros_like(q), q)
+    hat = jnp.where(zero, theta_hat, hat)
+    return q, hat, radius
+
+
+def matmul_ref(x, w):
+    """Reference dense matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def admm_rhs_ref(b, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho):
+    """Reference fused rhs assembly."""
+    rho = jnp.float32(rho)
+    return (
+        b
+        + jnp.float32(mask_l) * (lam_l + rho * th_l)
+        + jnp.float32(mask_r) * (-lam_r + rho * th_r)
+    )

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: the stochastic quantizer of Q-GADMM (Sec. III-A).
+
+Elementwise over the model vector, staged through VMEM-sized tiles:
+
+    c      = (theta - theta_hat + R) / delta          (eq. (6))
+    p      = c - floor(c)                             (eq. (10))
+    q      = floor(c) + [u < p]                       (eq. (7))
+    th_new = theta_hat + delta * q - R                (eq. (13))
+
+The radius ``R = max|theta - theta_hat|`` is a full-vector reduction, so it
+is computed by the calling L2 graph (one pass) and fed to the kernel as a
+scalar; the kernel is the bandwidth-bound elementwise hot loop.
+
+Arithmetic is expression-identical to the Rust native quantizer
+(``rust/src/quant/mod.rs``): fed the same uniforms the two backends emit
+identical integer levels (the `artifact_parity` integration test pins
+this).
+
+TPU mapping (DESIGN.md §5): one grid axis over d/BLOCK tiles; five streams
+(theta, theta_hat, u in; q, theta_hat out) of BLOCK f32 each ⇒ VMEM
+footprint 5·BLOCK·4 B = 160 KiB at BLOCK = 8192, well under a core's
+~16 MiB VMEM with generous double-buffering headroom. All ops are VPU
+elementwise — no MXU, no transcendentals.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size along the model dimension. 8192 f32 = 32 KiB per stream.
+BLOCK = 8192
+
+
+def _squant_kernel(scalar_ref, theta_ref, hat_ref, u_ref, q_ref, out_hat_ref):
+    """One VMEM tile of the quantizer. scalar_ref = (radius, delta, num_levels)."""
+    radius = scalar_ref[0]
+    delta = scalar_ref[1]
+    num_levels = scalar_ref[2]
+    theta = theta_ref[...]
+    hat = hat_ref[...]
+    u = u_ref[...]
+
+    c = (theta - hat + radius) / delta
+    fl = jnp.floor(c)
+    p = c - fl
+    up = (u < p).astype(jnp.float32)
+    q = jnp.clip(fl + up, 0.0, num_levels)
+    q_ref[...] = q
+    out_hat_ref[...] = hat + delta * q - radius
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def squant(theta, theta_hat, u, bits: int):
+    """Quantize ``theta`` against ``theta_hat`` with stochastic rounding.
+
+    Args:
+      theta: f32[d] current model.
+      theta_hat: f32[d] previously-quantized model (the shared mirror).
+      u: f32[d] iid uniforms in [0, 1) deciding the rounding.
+      bits: quantizer resolution b (levels = 2**b - 1).
+
+    Returns:
+      (q, theta_hat_new, radius): f32[d] integer levels, f32[d] reconstructed
+      model, f32[] radius. radius == 0 ⇒ q = 0 and theta_hat_new = theta_hat
+      (matches the Rust backend's zero-radius short-circuit).
+    """
+    d = theta.shape[0]
+    num_levels = jnp.float32((1 << bits) - 1)
+    radius = jnp.max(jnp.abs(theta - theta_hat)).astype(jnp.float32)
+    # Guard against radius == 0 (theta == theta_hat exactly): delta=1 makes
+    # the kernel compute q = floor(0/1 + 0) safely; outputs are masked below.
+    safe_delta = jnp.where(radius > 0.0, 2.0 * radius / num_levels, 1.0)
+    scalars = jnp.stack([radius, safe_delta, num_levels])
+
+    padded = pl.cdiv(d, BLOCK) * BLOCK
+    pad = padded - d
+    theta_p = jnp.pad(theta, (0, pad))
+    hat_p = jnp.pad(theta_hat, (0, pad))
+    u_p = jnp.pad(u, (0, pad))
+
+    q_p, hat_new_p = pl.pallas_call(
+        _squant_kernel,
+        grid=(padded // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),  # scalars replicated per tile
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(scalars, theta_p, hat_p, u_p)
+
+    q = q_p[:d]
+    hat_new = hat_new_p[:d]
+    zero = radius <= 0.0
+    q = jnp.where(zero, jnp.zeros_like(q), q)
+    hat_new = jnp.where(zero, theta_hat, hat_new)
+    return q, hat_new, radius

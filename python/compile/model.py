@@ -1,0 +1,167 @@
+"""L2: the paper's per-worker compute graphs in JAX, calling the L1 Pallas
+kernels, AOT-lowered by ``aot.py`` into the HLO artifacts the Rust
+coordinator executes through PJRT.
+
+Graphs (one artifact each):
+
+* ``quantize_step``  — radius + L1 ``squant`` kernel (eqs. (6)-(13));
+* ``linreg_local``   — the closed-form GADMM primal update for linear
+  regression (eqs. (14)-(17)): L1 ``admm_rhs`` kernel + an unrolled
+  Cholesky solve (plain HLO ops only — no LAPACK custom-calls, which the
+  pinned xla_extension 0.5.1 could not resolve);
+* ``mlp_local``      — the Q-SGADMM local solve (Sec. V-B): 10 unrolled
+  Adam steps on CE(minibatch) + the augmented-Lagrangian penalty, forward
+  and backward through the L1 ``pallas_matmul`` kernel;
+* ``mlp_grad``       — one minibatch CE gradient (the SGD/QSGD uplink);
+* ``mlp_eval``       — batch logits for accuracy evaluation.
+
+Parameter layout is the flat row-major ``[in, out]`` order of
+``rust/src/model/mlp.rs`` (bias-free 784-128-64-10 ⇒ d = 109,184).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.admm_rhs import admm_rhs
+from compile.kernels.matmul import pallas_matmul
+from compile.kernels.squant import squant
+
+# ---------------------------------------------------------------------------
+# MLP definition (must mirror rust/src/model/mlp.rs exactly).
+# ---------------------------------------------------------------------------
+
+MLP_IN, MLP_H1, MLP_H2, MLP_OUT = 784, 128, 64, 10
+MLP_DIMS = MLP_IN * MLP_H1 + MLP_H1 * MLP_H2 + MLP_H2 * MLP_OUT  # 109,184
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+LOCAL_ITERS = 10
+
+
+def unflatten(theta):
+    """Flat f32[109184] -> (w1[784,128], w2[128,64], w3[64,10])."""
+    o1 = MLP_IN * MLP_H1
+    o2 = o1 + MLP_H1 * MLP_H2
+    w1 = theta[:o1].reshape(MLP_IN, MLP_H1)
+    w2 = theta[o1:o2].reshape(MLP_H1, MLP_H2)
+    w3 = theta[o2:].reshape(MLP_H2, MLP_OUT)
+    return w1, w2, w3
+
+
+def mlp_logits(theta, x):
+    """Forward pass through the L1 tiled-matmul kernel."""
+    w1, w2, w3 = unflatten(theta)
+    h1 = jax.nn.relu(pallas_matmul(x, w1))
+    h2 = jax.nn.relu(pallas_matmul(h1, w2))
+    return pallas_matmul(h2, w3)
+
+
+def mlp_ce_loss(theta, x, y_onehot):
+    """Mean cross-entropy over the minibatch."""
+    logits = mlp_logits(theta, x)
+    logz = jax.scipy.special.logsumexp(logits, axis=1)
+    picked = jnp.sum(logits * y_onehot, axis=1)
+    return jnp.mean(logz - picked)
+
+
+def _penalty(theta, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho):
+    """Augmented-Lagrangian penalty of eq. (14)/(16), masked at chain ends."""
+    left = mask_l * (
+        jnp.vdot(lam_l, th_l - theta) + 0.5 * rho * jnp.sum((th_l - theta) ** 2)
+    )
+    right = mask_r * (
+        jnp.vdot(lam_r, theta - th_r) + 0.5 * rho * jnp.sum((theta - th_r) ** 2)
+    )
+    return left + right
+
+
+def mlp_local_adam(theta, x, y_onehot, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho):
+    """The Q-SGADMM local solve: LOCAL_ITERS fresh-state Adam steps on
+    CE(minibatch; θ) + penalty(θ; λ, θ̂). Returns the updated flat model."""
+
+    def aug_loss(t):
+        return mlp_ce_loss(t, x, y_onehot) + _penalty(
+            t, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho
+        )
+
+    grad_fn = jax.grad(aug_loss)
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    for t in range(1, LOCAL_ITERS + 1):
+        g = grad_fn(theta)
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / (1.0 - ADAM_B1**t)
+        vhat = v / (1.0 - ADAM_B2**t)
+        theta = theta - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta
+
+
+def mlp_grad(theta, x, y_onehot):
+    """Minibatch CE gradient — the (Q)SGD uplink payload."""
+    return jax.grad(mlp_ce_loss)(theta, x, y_onehot)
+
+
+def mlp_eval(theta, x):
+    """Batch logits for accuracy evaluation."""
+    return mlp_logits(theta, x)
+
+
+# ---------------------------------------------------------------------------
+# Linear-regression local solve.
+# ---------------------------------------------------------------------------
+
+
+def chol_solve_unrolled(a, rhs, d: int):
+    """Cholesky solve of an SPD d×d system, fully unrolled at trace time.
+
+    Emits only mul/add/sqrt/div HLO ops — deliberately avoiding
+    ``jnp.linalg`` (which lowers to LAPACK custom-calls the pinned
+    xla_extension cannot execute). d = 6 ⇒ ~100 scalar ops.
+    """
+    l = [[None] * d for _ in range(d)]
+    for i in range(d):
+        for j in range(i + 1):
+            s = a[i, j]
+            for k in range(j):
+                s = s - l[i][k] * l[j][k]
+            if i == j:
+                l[i][j] = jnp.sqrt(s)
+            else:
+                l[i][j] = s / l[j][j]
+    # Forward substitution: L y = rhs
+    y = [None] * d
+    for i in range(d):
+        s = rhs[i]
+        for k in range(i):
+            s = s - l[i][k] * y[k]
+        y[i] = s / l[i][i]
+    # Backward: Lᵀ x = y
+    x = [None] * d
+    for i in reversed(range(d)):
+        s = y[i]
+        for k in range(i + 1, d):
+            s = s - l[k][i] * x[k]
+        x[i] = s / l[i][i]
+    return jnp.stack(x)
+
+
+def linreg_local(a, b, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho):
+    """GADMM primal update (eqs. (14)-(17)):
+    ``(A + ρ·(mask_l+mask_r)·I) θ = admm_rhs(...)``."""
+    d = b.shape[0]
+    rhs = admm_rhs(b, lam_l, lam_r, th_l, th_r, mask_l, mask_r, rho)
+    mat = a + rho * (mask_l + mask_r) * jnp.eye(d, dtype=jnp.float32)
+    return chol_solve_unrolled(mat, rhs, d)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer step (wraps the L1 kernel; one artifact per (d, bits)).
+# ---------------------------------------------------------------------------
+
+
+def quantize_step(theta, theta_hat, u, bits: int):
+    """See kernels/squant.py; returns (q, theta_hat_new, radius)."""
+    return squant(theta, theta_hat, u, bits)

@@ -1,0 +1,7 @@
+"""Make the ``compile`` package importable whether pytest runs from the
+repo root or from ``python/``."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

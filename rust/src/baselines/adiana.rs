@@ -1,0 +1,340 @@
+//! ADIANA — Accelerated DIANA (Li, Kovalev, Qian, Richtárik, 2020), the
+//! strongest PS baseline in Fig. 2/3.
+//!
+//! Structure (strongly-convex variant, mean-of-functions formulation
+//! `f = (1/N) Σ f_i`):
+//!
+//! ```text
+//!   x^k       = τ z^k + (1−τ) y^k
+//!   g^k       = h^k + (1/N) Σ_i Q(∇f_i(x^k) − h_i^k)          (unbiased)
+//!   y^{k+1}   = x^k − η g^k
+//!   z^{k+1}   = (1 + γμ)^{-1} (z^k + γμ x^k − γ g^k)
+//!   h_i^{k+1} = h_i^k + α Q(∇f_i(w^k) − h_i^k)                (shift learning)
+//!   w^{k+1}   = y^k   with probability p                      (anchor)
+//! ```
+//!
+//! Every worker uploads **two** quantized vectors per iteration (the
+//! x-gradient difference and the anchor-gradient difference), matching the
+//! paper's payload accounting for A-DIANA: `2·(b·d) + header` vs Q-GADMM's
+//! single `b·d`. The step sizes follow the ADIANA paper's structure with
+//! the quantizer variance parameter `ω = d/(2^b − 1)²` (stochastic
+//! rounding against an ℓ∞ range); see DESIGN.md §6 for the documented
+//! simplifications.
+
+use super::ps::{charge_round_bits_only, PsNetwork};
+use super::BaselineReport;
+use crate::comm::CommStats;
+use crate::config::QuantConfig;
+use crate::data::linreg::{LinRegDataset, WorkerStats};
+use crate::data::partition::Partition;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::quant::StochasticQuantizer;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Options for an ADIANA run.
+#[derive(Clone, Debug)]
+pub struct AdianaOptions {
+    pub iterations: u64,
+    pub quant: QuantConfig,
+    pub net: Option<PsNetwork>,
+    pub eval_every: u64,
+    pub stop_below: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for AdianaOptions {
+    fn default() -> Self {
+        AdianaOptions {
+            iterations: 2_000,
+            quant: QuantConfig::default(),
+            net: None,
+            eval_every: 1,
+            stop_below: None,
+            seed: 1,
+        }
+    }
+}
+
+/// Run ADIANA; the curve carries the loss gap `|F(y^k) − F*|`.
+pub fn run_adiana_linreg(
+    data: &LinRegDataset,
+    workers: usize,
+    opts: &AdianaOptions,
+) -> BaselineReport {
+    let d = data.features();
+    let n = workers as f64;
+    let partition = Partition::contiguous(data.samples(), workers);
+    let stats: Vec<WorkerStats> = (0..workers)
+        .map(|w| {
+            let (lo, hi) = partition.bounds(w);
+            data.sufficient_stats(lo, hi)
+        })
+        .collect();
+    let (_, f_star) = data.optimum();
+
+    // Mean Hessian H = (1/N) Σ A_n; L = λ_max(H), μ = λ_min(H) via
+    // spectral shift (H is SPD for full-rank synthetic data).
+    let mut h_mat = stats[0].a.clone();
+    let mut b_g = stats[0].b.clone();
+    let mut yy_g = stats[0].yy;
+    for s in stats.iter().skip(1) {
+        h_mat = h_mat.add(&s.a);
+        for (bg, bs) in b_g.iter_mut().zip(&s.b) {
+            *bg += bs;
+        }
+        yy_g += s.yy;
+    }
+    // Global sufficient statistics for O(d²) objective evaluation.
+    let global = WorkerStats {
+        a: h_mat.clone(),
+        b: b_g,
+        yy: yy_g,
+    };
+    let mut mean_h = crate::linalg::Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            mean_h.set(i, j, h_mat.get(i, j) / n);
+        }
+    }
+    let l_smooth = mean_h.spectral_radius_spd(200);
+    // μ = L − λ_max(L·I − H).
+    let mut shifted = crate::linalg::Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            let v = if i == j { l_smooth } else { 0.0 } - mean_h.get(i, j);
+            shifted.set(i, j, v);
+        }
+    }
+    let mu = (l_smooth - shifted.spectral_radius_spd(200)).max(1e-12);
+
+    // Quantizer variance parameter and ADIANA step sizes.
+    let bits = opts.quant.bits.max(1);
+    let omega = d as f64 / (((1u64 << bits) - 1) as f64).powi(2);
+    let alpha = 1.0 / (1.0 + omega);
+    let eta = (1.0 / (2.0 * l_smooth)).min(n / (64.0 * omega.max(1e-12) * l_smooth));
+    // Conservative momentum as in the ADIANA paper's theory (√(ημ/8)
+    // rather than the idealized √(ημ)); with oracle (L, μ) and the
+    // aggressive constant our ADIANA would outrun the paper's reported
+    // behaviour — see EXPERIMENTS.md for the sensitivity note.
+    let tau = (eta * mu / 8.0).sqrt().min(0.5);
+    let gamma = eta / (2.0 * (tau + eta * mu));
+    let p_anchor = tau.clamp(0.01, 1.0);
+
+    let mut root = Rng::seed_from_u64(opts.seed);
+    let mut worker_state: Vec<(StochasticQuantizer, StochasticQuantizer, Rng, Vec<f64>)> = (0
+        ..workers)
+        .map(|wid| {
+            (
+                StochasticQuantizer::new(d, opts.quant.policy()), // x-grad stream
+                StochasticQuantizer::new(d, opts.quant.policy()), // anchor stream
+                root.fork(wid as u64),
+                vec![0.0f64; d], // h_i shift
+            )
+        })
+        .collect();
+    let mut anchor_rng = root.fork(0xA17C);
+
+    let mut y = vec![0.0f64; d];
+    let mut z = vec![0.0f64; d];
+    let mut w_anchor = vec![0.0f64; d];
+    let mut h_mean = vec![0.0f64; d];
+
+    let mut recorder = Recorder::new("ADIANA");
+    let mut comm = CommStats::default();
+    let mut compute = Stopwatch::new();
+    let mut iterations_run = 0;
+
+    let mut x = vec![0.0f64; d];
+    let mut g = vec![0.0f64; d];
+    let mut diff_f32 = vec![0.0f32; d];
+
+    for k in 1..=opts.iterations {
+        compute.start();
+        for i in 0..d {
+            x[i] = tau * z[i] + (1.0 - tau) * y[i];
+        }
+        // Workers: two quantized messages each.
+        g.copy_from_slice(&h_mean);
+        let mut uplink_bits = 0u64;
+        let mut h_mean_delta = vec![0.0f64; d];
+        for (widx, s) in stats.iter().enumerate() {
+            let (qx, qw, rng, h_i) = &mut worker_state[widx];
+            // Message 1: Q(∇f_i(x) − h_i), memoryless against the shift.
+            let gx = s.gradient(&x);
+            for i in 0..d {
+                diff_f32[i] = (gx[i] - h_i[i]) as f32;
+            }
+            qx.reset_to(&vec![0.0f32; d]);
+            let m1 = qx.quantize(&diff_f32, rng);
+            uplink_bits += m1.payload_bits();
+            for i in 0..d {
+                g[i] += qx.theta_hat()[i] as f64 / n;
+            }
+            // Message 2: Q(∇f_i(w) − h_i) → shift learning.
+            let gw = s.gradient(&w_anchor);
+            for i in 0..d {
+                diff_f32[i] = (gw[i] - h_i[i]) as f32;
+            }
+            qw.reset_to(&vec![0.0f32; d]);
+            let m2 = qw.quantize(&diff_f32, rng);
+            uplink_bits += m2.payload_bits();
+            for i in 0..d {
+                let delta = alpha * qw.theta_hat()[i] as f64;
+                h_i[i] += delta;
+                h_mean_delta[i] += delta / n;
+            }
+        }
+        for i in 0..d {
+            h_mean[i] += h_mean_delta[i];
+        }
+
+        // Server updates.
+        for i in 0..d {
+            y[i] = x[i] - eta * g[i];
+        }
+        let denom = 1.0 + gamma * mu;
+        for i in 0..d {
+            z[i] = (z[i] + gamma * mu * x[i] - gamma * g[i]) / denom;
+        }
+        if anchor_rng.uniform() < p_anchor {
+            w_anchor.copy_from_slice(&y);
+        }
+        compute.stop();
+
+        let per_worker_bits = uplink_bits / workers as u64;
+        let downlink_bits = 32 * d as u64;
+        match &opts.net {
+            Some(net) => net.charge_round(&mut comm, per_worker_bits, downlink_bits),
+            None => charge_round_bits_only(&mut comm, workers, per_worker_bits, downlink_bits),
+        }
+
+        iterations_run = k;
+        if k % opts.eval_every == 0 {
+            let value = (global.objective(&y) - f_star).abs();
+            recorder.push(CurvePoint {
+                iteration: k,
+                comm_rounds: k * (workers as u64 + 1),
+                bits: comm.bits,
+                energy_joules: comm.energy_joules,
+                compute_secs: compute.seconds() / workers as f64,
+                value,
+            });
+            if opts.stop_below.map(|t| value <= t).unwrap_or(false) {
+                break;
+            }
+        }
+    }
+
+    BaselineReport {
+        recorder,
+        comm,
+        iterations_run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::gd::{run_gd_linreg, GdOptions};
+    use crate::baselines::QuantMode;
+    use crate::data::linreg::LinRegSpec;
+
+    fn data() -> LinRegDataset {
+        LinRegDataset::synthesize(
+            &LinRegSpec {
+                samples: 2_000,
+                // Moderate conditioning so the GD-family converges within
+                // test-sized iteration budgets.
+                scale_spread: 4.0,
+                ..LinRegSpec::default()
+            },
+            23,
+        )
+    }
+
+    #[test]
+    fn adiana_converges() {
+        let ds = data();
+        let rep = run_adiana_linreg(
+            &ds,
+            8,
+            &AdianaOptions {
+                iterations: 4_000,
+                ..AdianaOptions::default()
+            },
+        );
+        let start = rep.recorder.points[0].value;
+        assert!(
+            rep.final_value() < 1e-4 * start,
+            "start={start} end={}",
+            rep.final_value()
+        );
+    }
+
+    #[test]
+    fn adiana_faster_than_qgd_in_iterations() {
+        // The acceleration claim the paper leans on: ADIANA reaches the
+        // target in fewer iterations than (quantized) GD. Acceleration
+        // only pays off on ill-conditioned problems — use the full
+        // default conditioning (κ ≈ 3.7e3) here.
+        let ds = LinRegDataset::synthesize(
+            &LinRegSpec {
+                samples: 2_000,
+                ..LinRegSpec::default()
+            },
+            23,
+        );
+        let target = {
+            let probe = run_gd_linreg(
+                &ds,
+                8,
+                &GdOptions {
+                    iterations: 1,
+                    ..GdOptions::default()
+                },
+            );
+            probe.recorder.points[0].value * 1e-5
+        };
+        let adiana = run_adiana_linreg(
+            &ds,
+            8,
+            &AdianaOptions {
+                iterations: 20_000,
+                stop_below: Some(target),
+                ..AdianaOptions::default()
+            },
+        );
+        let qgd = run_gd_linreg(
+            &ds,
+            8,
+            &GdOptions {
+                iterations: 20_000,
+                quant: Some((QuantConfig::default(), QuantMode::Memory)),
+                stop_below: Some(target),
+                ..GdOptions::default()
+            },
+        );
+        assert!(
+            adiana.iterations_run < qgd.iterations_run,
+            "adiana {} vs qgd {}",
+            adiana.iterations_run,
+            qgd.iterations_run
+        );
+    }
+
+    #[test]
+    fn adiana_payload_is_two_quantized_vectors() {
+        let ds = data();
+        let rep = run_adiana_linreg(
+            &ds,
+            4,
+            &AdianaOptions {
+                iterations: 5,
+                ..AdianaOptions::default()
+            },
+        );
+        // Per iteration: 4 workers × 2×(2·6+64) uplink + 192 downlink.
+        assert_eq!(rep.comm.bits, 5 * (4 * 2 * (2 * 6 + 64) + 192));
+    }
+}

@@ -1,0 +1,42 @@
+//! Parameter-server baselines of Sec. V: GD, QGD, ADIANA (linear
+//! regression) and SGD, QSGD (DNN classification).
+//!
+//! All baselines share the star topology machinery in [`ps`]: per
+//! iteration, every one of the N workers uploads its (possibly quantized)
+//! gradient to the parameter server over a `B/N` bandwidth slice, and the
+//! PS broadcasts the full-precision model back over the whole band —
+//! `N + 1` communication rounds per iteration and
+//! `N·payload + 32·d` bits, exactly the accounting of Sec. V-A.
+
+pub mod adiana;
+pub mod gd;
+pub mod ps;
+pub mod sgd;
+
+use crate::comm::CommStats;
+use crate::metrics::recorder::Recorder;
+
+/// Outcome of a baseline run (same shape as the coordinator's report).
+#[derive(Clone, Debug)]
+pub struct BaselineReport {
+    pub recorder: Recorder,
+    pub comm: CommStats,
+    pub iterations_run: u64,
+}
+
+impl BaselineReport {
+    pub fn final_value(&self) -> f64 {
+        self.recorder.last_value().unwrap_or(f64::NAN)
+    }
+}
+
+/// How a quantized baseline compresses its uplinks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantMode {
+    /// Quantize the difference from the previously-quantized vector
+    /// (DIANA-style memory). Error vanishes as the stream stabilizes ⇒
+    /// exact convergence. Used by QGD/QSGD here (see DESIGN.md §6).
+    Memory,
+    /// Quantize each vector from scratch (range = ‖v‖∞ every round).
+    Memoryless,
+}

@@ -1,0 +1,121 @@
+//! Star-topology (parameter-server) communication substrate.
+//!
+//! Encapsulates the Sec. V-A cost model for PS algorithms: uplink
+//! distances worker→PS, one broadcast downlink priced at the farthest
+//! worker, bandwidth `B/N` per uploading worker and the full band `B` for
+//! the PS downlink.
+
+use crate::comm::CommStats;
+use crate::net::channel::{transmission_energy, BandwidthPolicy, ChannelParams};
+use crate::net::geometry::{min_sum_distance_index, Point};
+
+/// Wireless context for a PS deployment.
+#[derive(Clone, Debug)]
+pub struct PsNetwork {
+    pub params: ChannelParams,
+    /// Bandwidth per uploading worker (B/N).
+    pub uplink_bw: f64,
+    /// Bandwidth of the PS downlink broadcast (full band).
+    pub downlink_bw: f64,
+    /// Distance from each worker to the PS (meters).
+    pub uplink_dist: Vec<f64>,
+    /// PS broadcast distance (max worker distance).
+    pub downlink_dist: f64,
+}
+
+impl PsNetwork {
+    /// Build from dropped worker positions: the PS is co-located with the
+    /// worker of minimum sum-distance (the paper's rule). All N workers
+    /// upload; the PS-co-located worker's own uplink is free (distance 0),
+    /// so worker counts stay comparable with the GADMM-family runs.
+    pub fn from_geometry(params: ChannelParams, points: &[Point]) -> (PsNetwork, usize) {
+        let ps = min_sum_distance_index(points);
+        let n = points.len();
+        let uplink_dist: Vec<f64> = (0..n).map(|i| points[i].distance(&points[ps])).collect();
+        let downlink_dist = uplink_dist.iter().copied().fold(0.0, f64::max);
+        (
+            PsNetwork {
+                params,
+                uplink_bw: BandwidthPolicy::PsFamily.per_worker_hz(&params, n),
+                downlink_bw: params.total_bandwidth_hz,
+                uplink_dist,
+                downlink_dist,
+            },
+            ps,
+        )
+    }
+
+    /// Number of uploading workers.
+    pub fn workers(&self) -> usize {
+        self.uplink_dist.len()
+    }
+
+    /// Charge one full PS iteration: every worker uploads `uplink_bits`,
+    /// the PS broadcasts `downlink_bits`.
+    pub fn charge_round(&self, comm: &mut CommStats, uplink_bits: u64, downlink_bits: u64) {
+        for &dist in &self.uplink_dist {
+            let e = transmission_energy(&self.params, self.uplink_bw, dist, uplink_bits);
+            comm.record(uplink_bits, e);
+        }
+        let e = transmission_energy(
+            &self.params,
+            self.downlink_bw,
+            self.downlink_dist,
+            downlink_bits,
+        );
+        comm.record(downlink_bits, e);
+    }
+}
+
+/// Bits-only accounting when no geometry is in play (unit tests, quick
+/// runs): same payload math, zero energy.
+pub fn charge_round_bits_only(
+    comm: &mut CommStats,
+    workers: usize,
+    uplink_bits: u64,
+    downlink_bits: u64,
+) {
+    for _ in 0..workers {
+        comm.record(uplink_bits, 0.0);
+    }
+    comm.record(downlink_bits, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::geometry::Area;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn geometry_construction() {
+        let mut rng = Rng::seed_from_u64(3);
+        let pts = Area::default().drop_workers(10, &mut rng);
+        let (net, ps) = PsNetwork::from_geometry(ChannelParams::default(), &pts);
+        assert!(ps < 10);
+        assert_eq!(net.workers(), 10);
+        assert_eq!(net.uplink_dist[ps], 0.0);
+        assert!(net.downlink_dist >= net.uplink_dist.iter().cloned().fold(0.0, f64::max) - 1e-9);
+        assert!(net.uplink_bw < net.downlink_bw);
+    }
+
+    #[test]
+    fn charge_round_counts() {
+        let mut rng = Rng::seed_from_u64(4);
+        let pts = Area::default().drop_workers(5, &mut rng);
+        let (net, _) = PsNetwork::from_geometry(ChannelParams::default(), &pts);
+        let mut comm = CommStats::default();
+        net.charge_round(&mut comm, 192, 192);
+        assert_eq!(comm.transmissions, 5 + 1);
+        assert_eq!(comm.bits, 6 * 192);
+        assert!(comm.energy_joules > 0.0);
+    }
+
+    #[test]
+    fn bits_only_charging() {
+        let mut comm = CommStats::default();
+        charge_round_bits_only(&mut comm, 4, 100, 200);
+        assert_eq!(comm.bits, 600);
+        assert_eq!(comm.energy_joules, 0.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! SGD and QSGD on the DNN classification task — the PS baselines of
+//! Fig. 4/5.
+//!
+//! Per iteration: every worker samples a 100-image minibatch from its
+//! shard, computes the MLP gradient at the global model `w`, and uploads
+//! it (32·d bits full precision; `b·d + 64` quantized). The PS averages
+//! and steps `w ← w − η·mean(g)` and broadcasts `w`.
+
+use super::ps::{charge_round_bits_only, PsNetwork};
+use super::{BaselineReport, QuantMode};
+use crate::comm::CommStats;
+use crate::config::QuantConfig;
+use crate::data::images::{ImageDataset, PIXELS};
+use crate::data::partition::Partition;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::model::mlp::{accuracy, backward, forward, MlpDims, MlpScratch};
+use crate::quant::StochasticQuantizer;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Options for an (Q)SGD run.
+#[derive(Clone, Debug)]
+pub struct SgdOptions {
+    pub iterations: u64,
+    pub lr: f32,
+    pub batch: usize,
+    /// `Some` ⇒ QSGD.
+    pub quant: Option<(QuantConfig, QuantMode)>,
+    pub net: Option<PsNetwork>,
+    pub eval_every: u64,
+    pub stop_above: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for SgdOptions {
+    fn default() -> Self {
+        SgdOptions {
+            iterations: 500,
+            lr: 0.1,
+            batch: 100,
+            quant: None,
+            net: None,
+            eval_every: 5,
+            stop_above: None,
+            seed: 1,
+        }
+    }
+}
+
+struct Shard {
+    x: Vec<f32>,
+    y: Vec<u8>,
+}
+
+/// Run (Q)SGD; the curve carries the test accuracy of the PS model.
+pub fn run_sgd_images(
+    data: &ImageDataset,
+    workers: usize,
+    dims: MlpDims,
+    opts: &SgdOptions,
+) -> BaselineReport {
+    assert_eq!(dims.input, PIXELS);
+    let d = dims.dims();
+    let partition = Partition::contiguous(data.train_len(), workers);
+    let shards: Vec<Shard> = (0..workers)
+        .map(|w| {
+            let idx = partition.shard(w);
+            let mut x = Vec::with_capacity(idx.len() * PIXELS);
+            let mut y = Vec::with_capacity(idx.len());
+            for &i in idx {
+                x.extend_from_slice(data.train_row(i));
+                y.push(data.train_y[i]);
+            }
+            Shard { x, y }
+        })
+        .collect();
+    let batch = opts
+        .batch
+        .min(shards.iter().map(|s| s.y.len()).min().unwrap_or(1));
+
+    let mut root = Rng::seed_from_u64(opts.seed);
+    let mut worker_rngs: Vec<Rng> = (0..workers).map(|w| root.fork(w as u64)).collect();
+    let mut quantizers: Option<Vec<StochasticQuantizer>> = opts
+        .quant
+        .map(|(qc, _)| (0..workers).map(|_| StochasticQuantizer::new(d, qc.policy())).collect());
+    let mode = opts.quant.map(|(_, m)| m);
+    let zeros = vec![0.0f32; d];
+
+    let mut w = dims.init_theta(&mut Rng::seed_from_u64(opts.seed ^ 0x1517));
+    let mut recorder = Recorder::new(if opts.quant.is_some() { "QSGD" } else { "SGD" });
+    let mut comm = CommStats::default();
+    let mut compute = Stopwatch::new();
+    let mut iterations_run = 0;
+
+    let mut scratch = MlpScratch::new(&dims, batch);
+    let mut grad = vec![0.0f32; d];
+    let mut mean_g = vec![0.0f32; d];
+    let mut mb_x = vec![0.0f32; batch * PIXELS];
+    let mut mb_y = vec![0u8; batch];
+
+    for k in 1..=opts.iterations {
+        mean_g.iter_mut().for_each(|x| *x = 0.0);
+        let mut uplink_bits_total = 0u64;
+        for widx in 0..workers {
+            let shard = &shards[widx];
+            let rng = &mut worker_rngs[widx];
+            for s in 0..batch {
+                let i = rng.below(shard.y.len());
+                mb_x[s * PIXELS..(s + 1) * PIXELS]
+                    .copy_from_slice(&shard.x[i * PIXELS..(i + 1) * PIXELS]);
+                mb_y[s] = shard.y[i];
+            }
+            compute.start();
+            forward(&dims, &w, &mb_x, &mut scratch);
+            let _ = backward(&dims, &w, &mb_x, &mb_y, &mut scratch, &mut grad);
+            let bits = match quantizers.as_mut() {
+                Some(qs) => {
+                    let q = &mut qs[widx];
+                    if mode == Some(QuantMode::Memoryless) {
+                        q.reset_to(&zeros);
+                    }
+                    let msg = q.quantize(&grad, rng);
+                    let ghat = q.theta_hat();
+                    for i in 0..d {
+                        mean_g[i] += ghat[i];
+                    }
+                    msg.payload_bits()
+                }
+                None => {
+                    for i in 0..d {
+                        mean_g[i] += grad[i];
+                    }
+                    32 * d as u64
+                }
+            };
+            compute.stop();
+            uplink_bits_total += bits;
+        }
+        compute.start();
+        let scale = opts.lr / workers as f32;
+        for i in 0..d {
+            w[i] -= scale * mean_g[i];
+        }
+        compute.stop();
+
+        let per_worker_bits = uplink_bits_total / workers as u64;
+        let downlink_bits = 32 * d as u64;
+        match &opts.net {
+            Some(net) => net.charge_round(&mut comm, per_worker_bits, downlink_bits),
+            None => charge_round_bits_only(&mut comm, workers, per_worker_bits, downlink_bits),
+        }
+
+        iterations_run = k;
+        if k % opts.eval_every == 0 {
+            let value = accuracy(&dims, &w, &data.test_x, &data.test_y);
+            recorder.push(CurvePoint {
+                iteration: k,
+                comm_rounds: k * (workers as u64 + 1),
+                bits: comm.bits,
+                energy_joules: comm.energy_joules,
+                compute_secs: compute.seconds() / workers as f64,
+                value,
+            });
+            if opts.stop_above.map(|t| value >= t).unwrap_or(false) {
+                break;
+            }
+        }
+    }
+
+    BaselineReport {
+        recorder,
+        comm,
+        iterations_run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::ImageSpec;
+
+    fn data() -> ImageDataset {
+        ImageDataset::synthesize(
+            &ImageSpec {
+                train: 1_000,
+                test: 300,
+                ..ImageSpec::default()
+            },
+            13,
+        )
+    }
+
+    #[test]
+    fn sgd_learns() {
+        let ds = data();
+        let rep = run_sgd_images(
+            &ds,
+            2,
+            MlpDims::paper(),
+            &SgdOptions {
+                iterations: 60,
+                eval_every: 10,
+                ..SgdOptions::default()
+            },
+        );
+        assert!(rep.final_value() > 0.5, "accuracy={}", rep.final_value());
+    }
+
+    #[test]
+    fn qsgd_learns_with_8bit() {
+        let ds = data();
+        let rep = run_sgd_images(
+            &ds,
+            2,
+            MlpDims::paper(),
+            &SgdOptions {
+                iterations: 60,
+                eval_every: 10,
+                quant: Some((
+                    QuantConfig {
+                        bits: 8,
+                        ..QuantConfig::default()
+                    },
+                    QuantMode::Memory,
+                )),
+                ..SgdOptions::default()
+            },
+        );
+        assert!(rep.final_value() > 0.5, "accuracy={}", rep.final_value());
+    }
+
+    #[test]
+    fn qsgd_payload_accounting() {
+        let ds = data();
+        let d = MlpDims::paper().dims() as u64;
+        let rep = run_sgd_images(
+            &ds,
+            2,
+            MlpDims::paper(),
+            &SgdOptions {
+                iterations: 3,
+                eval_every: 1,
+                quant: Some((
+                    QuantConfig {
+                        bits: 8,
+                        ..QuantConfig::default()
+                    },
+                    QuantMode::Memory,
+                )),
+                ..SgdOptions::default()
+            },
+        );
+        assert_eq!(rep.comm.bits, 3 * (2 * (8 * d + 64) + 32 * d));
+    }
+}

@@ -1,0 +1,112 @@
+//! Command-line parsing (no `clap` offline — a small, strict parser).
+//!
+//! Grammar: `qgadmm <subcommand> [--key value | --flag] ...`
+//! Flags map onto [`crate::config::KvMap`] so the config file and the CLI
+//! share one override pipeline (CLI wins).
+
+use crate::config::KvMap;
+
+/// A parsed invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Invocation {
+    pub command: String,
+    pub flags: KvMap,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Parse errors with usage context.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing subcommand\n{USAGE}")]
+    MissingCommand,
+    #[error("unknown flag syntax {0:?} (flags are --key [value])\n{USAGE}")]
+    BadFlag(String),
+}
+
+pub const USAGE: &str = "\
+qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
+
+USAGE:
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|all> [options]
+  qgadmm train-linreg  [--workers N --rho R --bits B --iters K --use-xla true]
+  qgadmm train-dnn     [--workers N --rho R --bits B --iters K]
+  qgadmm info          (artifact + platform report)
+
+COMMON OPTIONS (also accepted from --config <file> as key = value lines):
+  --workers N          number of workers (linreg default 50, dnn 10)
+  --rho R              disagreement penalty
+  --bits B             quantizer resolution (0 = full precision)
+  --iters K            iteration cap
+  --drops N            random drops for the CDF figures
+  --seed S             base seed
+  --out DIR            results directory (default: results)
+  --use-xla BOOL       execute local solves through the PJRT artifacts
+  --bandwidth_mhz F    system bandwidth
+  --quick BOOL         reduced-scale figure runs (CI-sized)
+";
+
+/// Parse `argv[1..]`.
+pub fn parse(args: &[String]) -> Result<Invocation, CliError> {
+    let mut it = args.iter().peekable();
+    let command = it.next().ok_or(CliError::MissingCommand)?.clone();
+    let mut flags = KvMap::new();
+    let mut positional = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            if key.is_empty() {
+                return Err(CliError::BadFlag(a.clone()));
+            }
+            // `--key=value` or `--key value` or bare boolean `--key`.
+            if let Some((k, v)) = key.split_once('=') {
+                flags.set(k, v);
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = it.next().unwrap();
+                flags.set(key, v);
+            } else {
+                flags.set(key, "true");
+            }
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Ok(Invocation {
+        command,
+        flags,
+        positional,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let inv = parse(&v(&["figures", "--fig", "fig2", "--drops", "100", "--quick"])).unwrap();
+        assert_eq!(inv.command, "figures");
+        assert_eq!(inv.flags.get("fig"), Some("fig2"));
+        assert_eq!(inv.flags.get("drops"), Some("100"));
+        assert_eq!(inv.flags.get("quick"), Some("true"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_positional() {
+        let inv = parse(&v(&["train-linreg", "--rho=6400", "extra"])).unwrap();
+        assert_eq!(inv.flags.get("rho"), Some("6400"));
+        assert_eq!(inv.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn rejects_missing_command_and_bad_flags() {
+        assert!(matches!(parse(&[]), Err(CliError::MissingCommand)));
+        assert!(matches!(
+            parse(&v(&["figures", "--"])),
+            Err(CliError::BadFlag(_))
+        ));
+    }
+}

@@ -1,0 +1,103 @@
+//! Messaging layer: payload types, bit-exact accounting, and the
+//! in-process transport used by the threaded decentralized runtime.
+//!
+//! Payload sizes follow Sec. III-A exactly:
+//! * full-precision model broadcast (GADMM/SGADMM, and PS up/downlinks):
+//!   `32·d` bits;
+//! * quantized broadcast (Q-GADMM/Q-SGADMM, QGD, QSGD, ADIANA):
+//!   `b·d + b_R + b_b = b·d + 64` bits.
+
+pub mod transport;
+
+use crate::quant::QuantizedMsg;
+
+/// What a message carries.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Full-precision f32 vector (32·d bits on the wire).
+    Full(Vec<f32>),
+    /// Stochastically quantized difference (b·d + 64 bits).
+    Quantized(QuantizedMsg),
+    /// Control/termination marker (not charged).
+    Stop,
+}
+
+impl Payload {
+    /// Wire size in bits, as accounted in every figure.
+    pub fn bits(&self) -> u64 {
+        match self {
+            Payload::Full(v) => 32 * v.len() as u64,
+            Payload::Quantized(q) => q.payload_bits(),
+            Payload::Stop => 0,
+        }
+    }
+}
+
+/// One point-to-point (or broadcast-replicated) message.
+#[derive(Clone, Debug)]
+pub struct Message {
+    /// Chain position (or worker id for PS topologies) of the sender.
+    pub from: usize,
+    /// Iteration index the payload belongs to.
+    pub round: u64,
+    pub payload: Payload,
+}
+
+/// Running communication totals for one algorithm run. A *broadcast* to
+/// two neighbors is one transmission (one channel use, one energy charge)
+/// — the radio medium delivers to both.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// Number of transmissions (channel uses).
+    pub transmissions: u64,
+    /// Total bits put on the air.
+    pub bits: u64,
+    /// Total transmit energy in joules (Shannon model).
+    pub energy_joules: f64,
+}
+
+impl CommStats {
+    pub fn record(&mut self, bits: u64, energy_joules: f64) {
+        self.transmissions += 1;
+        self.bits += bits;
+        self.energy_joules += energy_joules;
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.transmissions += other.transmissions;
+        self.bits += other.bits;
+        self.energy_joules += other.energy_joules;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_bit_accounting() {
+        assert_eq!(Payload::Full(vec![0.0; 6]).bits(), 192);
+        let q = QuantizedMsg {
+            bits: 2,
+            radius: 1.0,
+            levels: vec![0; 6],
+        };
+        assert_eq!(Payload::Quantized(q).bits(), 2 * 6 + 64);
+        assert_eq!(Payload::Stop.bits(), 0);
+    }
+
+    #[test]
+    fn stats_accumulate_and_merge() {
+        let mut a = CommStats::default();
+        a.record(100, 1.5);
+        a.record(50, 0.5);
+        assert_eq!(a.transmissions, 2);
+        assert_eq!(a.bits, 150);
+        assert!((a.energy_joules - 2.0).abs() < 1e-12);
+        let mut b = CommStats::default();
+        b.record(10, 0.25);
+        a.merge(&b);
+        assert_eq!(a.bits, 160);
+        assert_eq!(a.transmissions, 3);
+    }
+}

@@ -1,0 +1,132 @@
+//! In-process transport: one mailbox per worker over `std::sync::mpsc`.
+//!
+//! The threaded decentralized runtime (`coordinator::threaded`) runs each
+//! worker on its own OS thread; neighbors exchange [`Message`]s through
+//! these endpoints. The transport is topology-agnostic — the runtime
+//! decides who sends to whom — and imposes the same at-most-once, ordered
+//! delivery a reliable link layer would.
+
+use super::Message;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Transport failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    #[error("peer {0} disconnected")]
+    Disconnected(usize),
+    #[error("timed out waiting for a message after {0:?}")]
+    Timeout(Duration),
+}
+
+/// One worker's handle: senders to every peer, plus its own inbox.
+pub struct Endpoint {
+    id: usize,
+    peers: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+}
+
+impl Endpoint {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Send to peer `to`. Cloned per call — payloads are small (quantized)
+    /// or shared-cost (full precision vectors are moved by the caller).
+    pub fn send(&self, to: usize, msg: Message) -> Result<(), TransportError> {
+        self.peers[to]
+            .send(msg)
+            .map_err(|_| TransportError::Disconnected(to))
+    }
+
+    /// Blocking receive with timeout (deadlock insurance for tests and the
+    /// runtime's shutdown path).
+    pub fn recv(&self, timeout: Duration) -> Result<Message, TransportError> {
+        self.inbox.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout(timeout),
+            RecvTimeoutError::Disconnected => TransportError::Disconnected(self.id),
+        })
+    }
+}
+
+/// Build a fully-connected in-process network of `n` endpoints.
+pub fn in_process_network(n: usize) -> Vec<Endpoint> {
+    let mut senders = Vec::with_capacity(n);
+    let mut inboxes = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Message>();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(id, inbox)| Endpoint {
+            id,
+            peers: senders.clone(),
+            inbox,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Payload;
+
+    #[test]
+    fn ring_pass() {
+        let n = 4;
+        let endpoints = in_process_network(n);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let next = (ep.id() + 1) % 4;
+                    ep.send(
+                        next,
+                        Message {
+                            from: ep.id(),
+                            round: 0,
+                            payload: Payload::Full(vec![ep.id() as f32]),
+                        },
+                    )
+                    .unwrap();
+                    let got = ep.recv(Duration::from_secs(5)).unwrap();
+                    assert_eq!(got.from, (ep.id() + 3) % 4);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn timeout_reports() {
+        let eps = in_process_network(2);
+        let err = eps[0].recv(Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout(_)));
+    }
+
+    #[test]
+    fn ordered_delivery() {
+        let eps = in_process_network(2);
+        for round in 0..10 {
+            eps[1]
+                .send(
+                    0,
+                    Message {
+                        from: 1,
+                        round,
+                        payload: Payload::Stop,
+                    },
+                )
+                .unwrap();
+        }
+        for round in 0..10 {
+            let m = eps[0].recv(Duration::from_secs(1)).unwrap();
+            assert_eq!(m.round, round);
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! Experiment configuration.
+//!
+//! Two layers:
+//! * typed configs consumed by the engines ([`GadmmConfig`], [`PsConfig`],
+//!   [`QuantConfig`], [`NetConfig`]) with paper-faithful defaults;
+//! * a minimal `key = value` config-file format ([`KvMap`], a TOML subset:
+//!   comments with `#`, bare sections ignored) so runs are scriptable
+//!   without `serde`. CLI flags override file values (see `cli`).
+
+use crate::net::channel::ChannelParams;
+use crate::quant::BitPolicy;
+use std::collections::BTreeMap;
+
+/// Stochastic-quantizer configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Fixed bit-width `b` (paper: 2 for linreg, 8 for the DNN task).
+    pub bits: u8,
+    /// Use the adaptive eq. (11) rule instead of a fixed width.
+    pub adaptive: bool,
+    /// Cap for the adaptive rule.
+    pub max_bits: u8,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            bits: 2,
+            adaptive: false,
+            max_bits: 16,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn policy(&self) -> BitPolicy {
+        if self.adaptive {
+            BitPolicy::Adaptive {
+                min_bits: self.bits,
+                max_bits: self.max_bits,
+            }
+        } else {
+            BitPolicy::Fixed(self.bits)
+        }
+    }
+}
+
+/// GADMM-family engine configuration.
+#[derive(Clone, Debug)]
+pub struct GadmmConfig {
+    /// Number of workers N (paper: 50 linreg, 10 DNN).
+    pub workers: usize,
+    /// Disagreement penalty ρ (paper: 24 linreg, 20 DNN).
+    pub rho: f32,
+    /// Dual damping α: 1.0 for convex Q-GADMM (eq. (18)); 0.01 for
+    /// Q-SGADMM (Sec. V-B).
+    pub dual_step: f32,
+    /// `Some` ⇒ quantized variant (Q-GADMM / Q-SGADMM); `None` ⇒ full
+    /// precision (GADMM / SGADMM).
+    pub quant: Option<QuantConfig>,
+}
+
+impl Default for GadmmConfig {
+    fn default() -> Self {
+        GadmmConfig {
+            workers: 50,
+            rho: 24.0,
+            dual_step: 1.0,
+            quant: Some(QuantConfig::default()),
+        }
+    }
+}
+
+/// Parameter-server baseline configuration (GD/QGD/SGD/QSGD/ADIANA).
+#[derive(Clone, Debug)]
+pub struct PsConfig {
+    pub workers: usize,
+    /// Step size. `None` ⇒ auto-tune to 1/L from the data (GD-family).
+    pub lr: Option<f64>,
+    /// Quantize uplinks (QGD/QSGD/ADIANA).
+    pub quant: Option<QuantConfig>,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig {
+            workers: 50,
+            lr: None,
+            quant: None,
+        }
+    }
+}
+
+/// Wireless testbed configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Deployment square side (m). Paper: 250.
+    pub area_side: f64,
+    pub channel: ChannelParams,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            area_side: 250.0,
+            channel: ChannelParams::default(),
+        }
+    }
+}
+
+/// Top-level experiment description used by the CLI and figure harness.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub gadmm: GadmmConfig,
+    pub net: NetConfig,
+    /// Max iterations per run.
+    pub iterations: u64,
+    /// Loss-gap target (linreg figures).
+    pub loss_target: f64,
+    /// Accuracy target (DNN figures).
+    pub accuracy_target: f64,
+    /// Number of random drops for the CDF figures.
+    pub drops: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// Output directory for reports.
+    pub results_dir: String,
+    /// Execute local solves through the PJRT artifacts instead of the
+    /// native backend (requires `make artifacts`).
+    pub use_xla: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            gadmm: GadmmConfig::default(),
+            net: NetConfig::default(),
+            iterations: 2_000,
+            loss_target: 1e-4,
+            accuracy_target: 0.90,
+            drops: 20,
+            seed: 1,
+            results_dir: "results".to_string(),
+            use_xla: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Apply `key = value` overrides (from file or CLI).
+    pub fn apply_kv(&mut self, kv: &KvMap) -> Result<(), ConfigError> {
+        for (k, v) in kv.iter() {
+            self.apply_one(k, v)?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let bad = |why: &str| ConfigError::BadValue {
+            key: key.to_string(),
+            value: value.to_string(),
+            why: why.to_string(),
+        };
+        match key {
+            "workers" => self.gadmm.workers = value.parse().map_err(|_| bad("usize"))?,
+            "rho" => self.gadmm.rho = value.parse().map_err(|_| bad("f32"))?,
+            "dual_step" | "dual-step" | "alpha" => {
+                self.gadmm.dual_step = value.parse().map_err(|_| bad("f32"))?
+            }
+            "bits" => {
+                let bits: u8 = value.parse().map_err(|_| bad("u8"))?;
+                if bits == 0 {
+                    self.gadmm.quant = None; // bits=0 means full precision
+                } else {
+                    let mut q = self.gadmm.quant.unwrap_or_default();
+                    q.bits = bits;
+                    self.gadmm.quant = Some(q);
+                }
+            }
+            "adaptive_bits" | "adaptive-bits" => {
+                let mut q = self.gadmm.quant.unwrap_or_default();
+                q.adaptive = value.parse().map_err(|_| bad("bool"))?;
+                self.gadmm.quant = Some(q);
+            }
+            "iterations" | "iters" => {
+                self.iterations = value.parse().map_err(|_| bad("u64"))?
+            }
+            "loss_target" | "loss-target" => self.loss_target = value.parse().map_err(|_| bad("f64"))?,
+            "accuracy_target" | "accuracy-target" => {
+                self.accuracy_target = value.parse().map_err(|_| bad("f64"))?
+            }
+            "drops" => self.drops = value.parse().map_err(|_| bad("usize"))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad("u64"))?,
+            "results_dir" | "results-dir" | "out" => self.results_dir = value.to_string(),
+            "use_xla" | "use-xla" => self.use_xla = value.parse().map_err(|_| bad("bool"))?,
+            "bandwidth_mhz" | "bandwidth-mhz" => {
+                self.net.channel.total_bandwidth_hz =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e6
+            }
+            "slot_ms" | "slot-ms" => {
+                self.net.channel.slot_secs =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
+            }
+            "area_side" | "area-side" => self.net.area_side = value.parse().map_err(|_| bad("f64"))?,
+            _ => {
+                return Err(ConfigError::UnknownKey {
+                    key: key.to_string(),
+                })
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Ordered string→string map parsed from `key = value` lines.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvMap {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvMap {
+    pub fn new() -> KvMap {
+        KvMap::default()
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Parse config text: `key = value` per line, `#` comments, blank lines
+    /// and `[section]` headers ignored (sections exist for human grouping).
+    pub fn parse(text: &str) -> Result<KvMap, ConfigError> {
+        let mut map = KvMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(ConfigError::Syntax {
+                    line: lineno + 1,
+                    text: raw.to_string(),
+                });
+            };
+            let key = k.trim();
+            let val = v.trim().trim_matches('"');
+            if key.is_empty() {
+                return Err(ConfigError::Syntax {
+                    line: lineno + 1,
+                    text: raw.to_string(),
+                });
+            }
+            map.set(key, val);
+        }
+        Ok(map)
+    }
+}
+
+/// Configuration errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config syntax error on line {line}: {text:?}")]
+    Syntax { line: usize, text: String },
+    #[error("unknown config key {key:?}")]
+    UnknownKey { key: String },
+    #[error("bad value for {key:?}: {value:?} (expected {why})")]
+    BadValue {
+        key: String,
+        value: String,
+        why: String,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_file() {
+        let text = r#"
+            # experiment
+            [run]
+            workers = 10
+            rho = 12.5
+            bits = 2
+            results_dir = "out/run1"
+        "#;
+        let kv = KvMap::parse(text).unwrap();
+        assert_eq!(kv.get("workers"), Some("10"));
+        assert_eq!(kv.get("results_dir"), Some("out/run1"));
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.workers, 10);
+        assert_eq!(cfg.gadmm.rho, 12.5);
+        assert_eq!(cfg.gadmm.quant.unwrap().bits, 2);
+        assert_eq!(cfg.results_dir, "out/run1");
+    }
+
+    #[test]
+    fn bits_zero_disables_quantization() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("bits", "0");
+        cfg.apply_kv(&kv).unwrap();
+        assert!(cfg.gadmm.quant.is_none());
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_value() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("wurkers", "10");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::UnknownKey { .. })
+        ));
+        let mut kv2 = KvMap::new();
+        kv2.set("workers", "ten");
+        assert!(matches!(
+            cfg.apply_kv(&kv2),
+            Err(ConfigError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_syntax_errors() {
+        assert!(KvMap::parse("just words\n").is_err());
+        assert!(KvMap::parse(" = novalue\n").is_err());
+        assert!(KvMap::parse("# fine\n[ok]\na = 1\n").is_ok());
+    }
+
+    #[test]
+    fn bandwidth_in_mhz() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("bandwidth_mhz", "40");
+        kv.set("slot_ms", "100");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.net.channel.total_bandwidth_hz, 40e6);
+        assert_eq!(cfg.net.channel.slot_secs, 0.1);
+    }
+
+    #[test]
+    fn quant_policy_mapping() {
+        let q = QuantConfig {
+            bits: 3,
+            adaptive: false,
+            max_bits: 16,
+        };
+        assert_eq!(q.policy(), crate::quant::BitPolicy::Fixed(3));
+        let qa = QuantConfig {
+            adaptive: true,
+            ..q
+        };
+        assert_eq!(
+            qa.policy(),
+            crate::quant::BitPolicy::Adaptive {
+                min_bits: 3,
+                max_bits: 16
+            }
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! The paper's system contribution: the GADMM-family decentralized
+//! training coordinator.
+//!
+//! * [`engine`] — the head/tail alternating engine (Algorithm 1):
+//!   deterministic in-process scheduler used by the figure harness and the
+//!   statistical sweeps. Handles all four variants — GADMM, Q-GADMM,
+//!   SGADMM, Q-SGADMM — via [`crate::config::GadmmConfig`].
+//! * [`threaded`] — the distributed runtime: one OS thread per worker,
+//!   neighbor messages over the `comm::transport` mailboxes; bit-for-bit
+//!   equivalent to the deterministic engine given the same seeds (enforced
+//!   by the `threaded_equivalence` integration test).
+//! * [`residuals`] — primal/dual residual and quantization-error tracking
+//!   (the Theorem 1/2 quantities).
+
+pub mod engine;
+pub mod residuals;
+pub mod threaded;
+
+pub use engine::{EnergyCtx, GadmmEngine, RunOptions, RunReport};
+
+use crate::config::GadmmConfig;
+use crate::data::images::ImageDataset;
+use crate::data::linreg::LinRegDataset;
+use crate::data::partition::Partition;
+use crate::model::linreg::LinRegProblem;
+use crate::model::mlp::{MlpDims, MlpProblem};
+use crate::net::topology::Topology;
+
+/// Convenience driver: run a GADMM-family algorithm on a linear-regression
+/// dataset over an identity chain (no geometry ⇒ no energy accounting) and
+/// return the loss-gap curve. Used by tests and the quickstart example;
+/// the figure harness drives [`GadmmEngine`] directly with geometry.
+pub fn run_linreg(
+    cfg: &GadmmConfig,
+    data: &LinRegDataset,
+    iterations: u64,
+    seed: u64,
+) -> anyhow::Result<RunReport> {
+    let partition = Partition::contiguous(data.samples(), cfg.workers);
+    let problem = LinRegProblem::new(data, &partition, cfg.rho);
+    let topo = Topology::line(cfg.workers);
+    let (_, f_star) = data.optimum();
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, topo, seed);
+    let opts = RunOptions {
+        iterations,
+        eval_every: 1,
+        stop_below: None,
+        ..RunOptions::default()
+    };
+    Ok(engine.run(&opts, |eng| {
+        let f: f64 = (0..eng.workers())
+            .map(|p| eng.local_objective_at(p))
+            .sum();
+        (f - f_star).abs()
+    }))
+}
+
+/// Convenience driver for the DNN task (SGADMM / Q-SGADMM): returns the
+/// test-accuracy curve of the worker-averaged model.
+pub fn run_mlp(
+    cfg: &GadmmConfig,
+    data: &ImageDataset,
+    iterations: u64,
+    eval_every: u64,
+    seed: u64,
+) -> anyhow::Result<RunReport> {
+    let partition = Partition::contiguous(data.train_len(), cfg.workers);
+    let problem = MlpProblem::new(data, &partition, MlpDims::paper(), seed ^ 0xD1A);
+    let init = problem.initial_theta(seed ^ 0x1517);
+    let topo = Topology::line(cfg.workers);
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, topo, seed);
+    engine.set_initial_theta(&init);
+    let opts = RunOptions {
+        iterations,
+        eval_every,
+        stop_below: None,
+        ..RunOptions::default()
+    };
+    Ok(engine.run(&opts, |eng| {
+        let thetas: Vec<Vec<f32>> = (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
+        eng.problem().average_model_accuracy(&thetas)
+    }))
+}

@@ -1,0 +1,368 @@
+//! The distributed runtime: one OS thread per worker, neighbor messages
+//! over `comm::transport` mailboxes.
+//!
+//! Protocol per iteration `k` (matches Algorithm 1 and the deterministic
+//! engine exactly):
+//!
+//! * **head** (even chain position): solve against the mirrors (tails'
+//!   `θ̂` from iteration `k−1`), broadcast the (quantized) update to both
+//!   neighbors, then block on the tails' iteration-`k` broadcasts;
+//! * **tail** (odd position): block on the heads' iteration-`k`
+//!   broadcasts, solve, broadcast;
+//! * both then update their link duals locally from the shared `θ̂`s
+//!   (eq. (18)) — no extra communication.
+//!
+//! Every worker also reports `(θ_k, f_n(θ_k), bits)` to the leader on an
+//! out-of-band metrics channel (instrumentation, not charged). Given the
+//! same seed, this runtime is **bit-for-bit equivalent** to
+//! [`super::engine::GadmmEngine`] — enforced by the `threaded_equivalence`
+//! integration test.
+
+use crate::comm::transport::{in_process_network, Endpoint};
+use crate::comm::{CommStats, Message, Payload};
+use crate::config::GadmmConfig;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::model::{NeighborCtx, WorkerSolver};
+use crate::quant::{Mirror, StochasticQuantizer};
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Duration;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Per-iteration worker report to the leader.
+struct WorkerReport {
+    pos: usize,
+    iteration: u64,
+    theta: Vec<f32>,
+    objective: f64,
+    bits: u64,
+}
+
+/// Outcome of a threaded run.
+pub struct ThreadedReport {
+    pub recorder: Recorder,
+    pub comm: CommStats,
+    /// Final model per chain position.
+    pub thetas: Vec<Vec<f32>>,
+}
+
+/// Run `iterations` of (Q-)GADMM over `solvers` (chain position order)
+/// on real threads. `metric` is evaluated by the leader on the collected
+/// `(θ, Σf_n)` each iteration; by convention it receives the sum of local
+/// objectives so loss-gap metrics are cheap to form.
+pub fn run_threaded(
+    cfg: &GadmmConfig,
+    solvers: Vec<Box<dyn WorkerSolver>>,
+    iterations: u64,
+    seed: u64,
+    mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
+) -> anyhow::Result<ThreadedReport> {
+    let n = solvers.len();
+    assert_eq!(cfg.workers, n, "config/solver count mismatch");
+    assert!(n >= 2);
+    let d = solvers[0].dims();
+
+    let endpoints = in_process_network(n);
+    let (report_tx, report_rx) = channel::<WorkerReport>();
+
+    // Seed forks must match the deterministic engine exactly.
+    let mut root = Rng::seed_from_u64(seed);
+    let rngs: Vec<Rng> = (0..n).map(|p| root.fork(p as u64)).collect();
+
+    let mut handles = Vec::with_capacity(n);
+    for (pos, (solver, (endpoint, rng))) in solvers
+        .into_iter()
+        .zip(endpoints.into_iter().zip(rngs.into_iter()))
+        .enumerate()
+    {
+        let cfg = cfg.clone();
+        let tx = report_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_main(pos, n, d, cfg, solver, endpoint, rng, tx, iterations)
+        }));
+    }
+    drop(report_tx);
+
+    // Leader: aggregate per-iteration reports into the metric curve.
+    // Workers pipeline (a head can be one iteration ahead of a distant
+    // tail), so reports arrive interleaved across iterations — buffer
+    // until an iteration is complete, then process in order.
+    let mut recorder = Recorder::new("threaded-run");
+    let mut comm = CommStats::default();
+    let mut thetas = vec![vec![0.0f32; d]; n];
+    let mut pending: std::collections::BTreeMap<u64, Vec<WorkerReport>> =
+        std::collections::BTreeMap::new();
+    for k in 1..=iterations {
+        while pending.get(&k).map(|v| v.len()).unwrap_or(0) < n {
+            let rep = report_rx
+                .recv_timeout(RECV_TIMEOUT)
+                .map_err(|e| anyhow::anyhow!("leader starved at iteration {k}: {e}"))?;
+            assert!(
+                rep.iteration >= k,
+                "worker {} regressed to iteration {}",
+                rep.pos,
+                rep.iteration
+            );
+            pending.entry(rep.iteration).or_default().push(rep);
+        }
+        let batch = pending.remove(&k).expect("just completed");
+        let mut objective_sum = 0.0f64;
+        let mut bits_this_iter = 0u64;
+        for rep in batch {
+            objective_sum += rep.objective;
+            bits_this_iter += rep.bits;
+            thetas[rep.pos] = rep.theta;
+        }
+        comm.record(bits_this_iter, 0.0);
+        comm.transmissions += n as u64 - 1; // record() charged 1; n total
+        let value = metric(objective_sum, &thetas);
+        recorder.push(CurvePoint {
+            iteration: k,
+            comm_rounds: k * n as u64,
+            bits: comm.bits,
+            energy_joules: 0.0,
+            compute_secs: 0.0,
+            value,
+        });
+    }
+
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok(ThreadedReport {
+        recorder,
+        comm,
+        thetas,
+    })
+}
+
+/// The worker thread body.
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    pos: usize,
+    n: usize,
+    d: usize,
+    cfg: GadmmConfig,
+    mut solver: Box<dyn WorkerSolver>,
+    endpoint: Endpoint,
+    mut rng: Rng,
+    report: Sender<WorkerReport>,
+    iterations: u64,
+) -> anyhow::Result<()> {
+    let is_head = pos % 2 == 0;
+    let left = (pos > 0).then(|| pos - 1);
+    let right = (pos + 1 < n).then(|| pos + 1);
+    let neighbor_count = usize::from(left.is_some()) + usize::from(right.is_some());
+
+    let mut theta = vec![0.0f32; d];
+    let mut lambda_left = left.map(|_| vec![0.0f32; d]);
+    let mut lambda_right = right.map(|_| vec![0.0f32; d]);
+    let mut mirror_left = left.map(|_| Mirror::new(d));
+    let mut mirror_right = right.map(|_| Mirror::new(d));
+    let mut quantizer = cfg
+        .quant
+        .map(|q| StochasticQuantizer::new(d, q.policy()));
+    // Own view (what neighbors believe about us) — needed for the dual
+    // update, which must use θ̂ on *both* ends of each link.
+    let mut own_view = vec![0.0f32; d];
+
+    for k in 1..=iterations {
+        // Tails receive the heads' fresh broadcasts before solving.
+        if !is_head {
+            for _ in 0..neighbor_count {
+                let msg = endpoint.recv(RECV_TIMEOUT)?;
+                apply_neighbor(
+                    msg,
+                    pos,
+                    left,
+                    right,
+                    mirror_left.as_mut(),
+                    mirror_right.as_mut(),
+                )?;
+            }
+        }
+
+        // Local primal solve (eq. (14)–(17)).
+        {
+            let ctx = NeighborCtx {
+                lambda_left: lambda_left.as_deref(),
+                lambda_right: lambda_right.as_deref(),
+                theta_left: mirror_left.as_ref().map(|m| m.theta_hat()),
+                theta_right: mirror_right.as_ref().map(|m| m.theta_hat()),
+                rho: cfg.rho,
+            };
+            solver.solve(&ctx, &mut theta);
+        }
+
+        // Broadcast the update (one transmission reaches both neighbors).
+        let bits;
+        match quantizer.as_mut() {
+            Some(q) => {
+                let msg = q.quantize(&theta, &mut rng);
+                bits = msg.payload_bits();
+                own_view.copy_from_slice(q.theta_hat());
+                for nb in [left, right].into_iter().flatten() {
+                    endpoint.send(
+                        nb,
+                        Message {
+                            from: pos,
+                            round: k,
+                            payload: Payload::Quantized(msg.clone()),
+                        },
+                    )?;
+                }
+            }
+            None => {
+                bits = 32 * d as u64;
+                own_view.copy_from_slice(&theta);
+                for nb in [left, right].into_iter().flatten() {
+                    endpoint.send(
+                        nb,
+                        Message {
+                            from: pos,
+                            round: k,
+                            payload: Payload::Full(theta.clone()),
+                        },
+                    )?;
+                }
+            }
+        }
+
+        // Heads receive the tails' iteration-k broadcasts after sending.
+        if is_head {
+            for _ in 0..neighbor_count {
+                let msg = endpoint.recv(RECV_TIMEOUT)?;
+                apply_neighbor(
+                    msg,
+                    pos,
+                    left,
+                    right,
+                    mirror_left.as_mut(),
+                    mirror_right.as_mut(),
+                )?;
+            }
+        }
+
+        // Local dual updates (eq. (18)) from the shared θ̂s.
+        let step = cfg.dual_step * cfg.rho;
+        if let (Some(lam), Some(m)) = (lambda_left.as_mut(), mirror_left.as_ref()) {
+            let nb = m.theta_hat();
+            for i in 0..d {
+                lam[i] += step * (nb[i] - own_view[i]);
+            }
+        }
+        if let (Some(lam), Some(m)) = (lambda_right.as_mut(), mirror_right.as_ref()) {
+            let nb = m.theta_hat();
+            for i in 0..d {
+                lam[i] += step * (own_view[i] - nb[i]);
+            }
+        }
+
+        report
+            .send(WorkerReport {
+                pos,
+                iteration: k,
+                theta: theta.clone(),
+                objective: solver.objective(&theta),
+                bits,
+            })
+            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+    }
+    Ok(())
+}
+
+/// Apply a neighbor broadcast to the correct mirror.
+fn apply_neighbor(
+    msg: Message,
+    pos: usize,
+    left: Option<usize>,
+    right: Option<usize>,
+    mirror_left: Option<&mut Mirror>,
+    mirror_right: Option<&mut Mirror>,
+) -> anyhow::Result<()> {
+    let mirror = if Some(msg.from) == left {
+        mirror_left
+    } else if Some(msg.from) == right {
+        mirror_right
+    } else {
+        anyhow::bail!("worker {pos} got message from non-neighbor {}", msg.from);
+    }
+    .ok_or_else(|| anyhow::anyhow!("no mirror for sender {}", msg.from))?;
+
+    match msg.payload {
+        Payload::Quantized(q) => mirror.apply(&q),
+        Payload::Full(v) => mirror.reset_to(&v),
+        Payload::Stop => anyhow::bail!("unexpected stop"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+    use crate::data::linreg::{LinRegDataset, LinRegSpec};
+    use crate::data::partition::Partition;
+    use crate::model::linreg::LinRegProblem;
+
+    fn solvers(workers: usize, rho: f32, seed: u64) -> (LinRegDataset, Vec<Box<dyn WorkerSolver>>) {
+        let spec = LinRegSpec {
+            samples: 1_200,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, seed);
+        let part = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &part, rho);
+        let boxed: Vec<Box<dyn WorkerSolver>> = problem
+            .into_workers()
+            .into_iter()
+            .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
+            .collect();
+        (data, boxed)
+    }
+
+    #[test]
+    fn threaded_qgadmm_converges() {
+        let workers = 6;
+        let (data, boxed) = solvers(workers, 1600.0, 31);
+        let (_, f_star) = data.optimum();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            quant: Some(QuantConfig::default()),
+        };
+        let report = run_threaded(&cfg, boxed, 600, 7, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+        let gap = report.recorder.last_value().unwrap();
+        let start = report.recorder.points[0].value;
+        assert!(gap < 1e-3 * start, "gap={gap} start={start}");
+        // 6 broadcasts/iter × 600 iters, quantized payloads.
+        assert_eq!(report.comm.bits, 600 * 6 * (2 * 6 + 64));
+        assert_eq!(report.comm.transmissions, 600 * 6);
+    }
+
+    #[test]
+    fn threaded_full_precision_converges() {
+        let workers = 4;
+        let (data, boxed) = solvers(workers, 1600.0, 33);
+        let (_, f_star) = data.optimum();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            quant: None,
+        };
+        let report = run_threaded(&cfg, boxed, 500, 3, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+        let gap = report.recorder.last_value().unwrap();
+        let start = report.recorder.points[0].value;
+        assert!(gap < 1e-3 * start, "gap={gap} start={start}");
+    }
+}

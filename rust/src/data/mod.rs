@@ -1,0 +1,20 @@
+//! Dataset substrates.
+//!
+//! The paper evaluates on California Housing (linear regression, d = 6) and
+//! MNIST (10-class 28×28 images, MLP with d = 109,184 parameters). Neither
+//! is fetchable in this offline environment, so this module synthesizes
+//! matched substitutes (documented in DESIGN.md §6):
+//!
+//! * [`linreg`] — a 20,000 × 6 standardized, mildly-correlated regression
+//!   set with known ground truth: the convex landscape Q-GADMM's Theorem 2
+//!   is exercised on depends only on the spectrum of Σ XᵀX, which this
+//!   generator controls.
+//! * [`images`] — a procedural 10-class 28×28 image set (smooth per-class
+//!   templates + shift/noise) at MNIST's exact tensor shapes, learnable by
+//!   the paper's 784-128-64-10 MLP.
+//! * [`partition`] — uniform sample partitioning across N workers, as in
+//!   Sec. V ("we uniformly distribute the samples across 50 workers").
+
+pub mod images;
+pub mod linreg;
+pub mod partition;

@@ -1,0 +1,117 @@
+//! Uniform sample partitioning across workers.
+//!
+//! Sec. V: "We uniformly distribute the samples across 50 workers." The
+//! partitioner supports contiguous splits (deterministic) and shuffled
+//! splits (iid assignment), both exact: every sample belongs to exactly one
+//! worker and worker loads differ by at most one sample.
+
+use crate::util::rng::Rng;
+
+/// An assignment of `total` sample indices to `workers` shards.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Contiguous split: worker `w` gets rows `[w·⌈T/N⌉-ish ...)`; loads are
+    /// balanced to within one sample.
+    pub fn contiguous(total: usize, workers: usize) -> Partition {
+        assert!(workers > 0 && workers <= total, "need ≥1 sample per worker");
+        let mut shards = Vec::with_capacity(workers);
+        let base = total / workers;
+        let extra = total % workers;
+        let mut start = 0usize;
+        for w in 0..workers {
+            let len = base + usize::from(w < extra);
+            shards.push((start..start + len).collect());
+            start += len;
+        }
+        Partition { shards }
+    }
+
+    /// IID split: samples are shuffled with `rng` then dealt contiguously.
+    pub fn shuffled(total: usize, workers: usize, rng: &mut Rng) -> Partition {
+        assert!(workers > 0 && workers <= total);
+        let mut idx: Vec<usize> = (0..total).collect();
+        rng.shuffle(&mut idx);
+        let mut p = Partition::contiguous(total, workers);
+        for shard in p.shards.iter_mut() {
+            for slot in shard.iter_mut() {
+                *slot = idx[*slot];
+            }
+        }
+        p
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, w: usize) -> &[usize] {
+        &self.shards[w]
+    }
+
+    /// `(lo, hi)` bounds for contiguous shards (panics if non-contiguous).
+    pub fn bounds(&self, w: usize) -> (usize, usize) {
+        let s = &self.shards[w];
+        let lo = s[0];
+        let hi = s[s.len() - 1] + 1;
+        assert_eq!(hi - lo, s.len(), "shard {w} is not contiguous");
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn contiguous_covers_exactly() {
+        let p = Partition::contiguous(103, 10);
+        let mut all: Vec<usize> = p
+            .shards
+            .iter()
+            .flat_map(|s| s.iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // Balanced to within one.
+        let lens: Vec<usize> = (0..10).map(|w| p.shard(w).len()).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn shuffled_is_permutation_partition() {
+        property("shuffled partition", 50, |rng| {
+            let total = 20 + rng.below(500);
+            let workers = 1 + rng.below(total.min(32));
+            let p = Partition::shuffled(total, workers, rng);
+            let mut all: Vec<usize> = p
+                .shards
+                .iter()
+                .flat_map(|s| s.iter().copied())
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..total).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn bounds_for_contiguous() {
+        let p = Partition::contiguous(20_000, 50);
+        assert_eq!(p.bounds(0), (0, 400));
+        assert_eq!(p.bounds(49), (19_600, 20_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "not contiguous")]
+    fn bounds_panics_for_shuffled() {
+        let mut rng = Rng::seed_from_u64(1);
+        // With 200 samples over 2 workers a shuffle is (overwhelmingly)
+        // non-contiguous; the accessor must refuse rather than mislead.
+        let p = Partition::shuffled(200, 2, &mut rng);
+        let _ = p.bounds(0);
+    }
+}

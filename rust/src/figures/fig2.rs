@@ -1,0 +1,62 @@
+//! Fig. 2 — linear regression: loss `|F − F*|` vs (a) communication
+//! rounds, (b) transmitted bits, (c) consumed energy, for Q-GADMM, GADMM,
+//! GD, QGD and ADIANA at N = 50 workers, 2 MHz, τ = 1 ms.
+
+use super::helpers::{q2, run_gadmm_linreg, run_ps_linreg, LinregWorld, LINREG_RHO};
+use crate::config::ExperimentConfig;
+use crate::metrics::report::FigureReport;
+use std::path::Path;
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    if quick {
+        cfg.gadmm.workers = cfg.gadmm.workers.min(10);
+    }
+    let (gadmm_iters, ps_iters) = if quick { (1_500, 4_000) } else { (8_000, 30_000) };
+    let world = LinregWorld::new(&cfg, cfg.seed, cfg.seed ^ 0xF16);
+    let target = cfg.loss_target;
+
+    let mut rep = FigureReport::new("fig2");
+    rep.meta("task", "linear regression");
+    rep.meta("workers", cfg.gadmm.workers);
+    rep.meta("rho", LINREG_RHO);
+    rep.meta("bits", 2);
+    rep.meta("bandwidth_hz", cfg.net.channel.total_bandwidth_hz);
+    rep.meta("loss_target", target);
+    rep.meta("seed", cfg.seed);
+
+    rep.add(
+        run_gadmm_linreg(
+            "Q-GADMM-2bits",
+            &world,
+            &cfg,
+            q2(),
+            LINREG_RHO,
+            gadmm_iters,
+            Some(target),
+            cfg.seed,
+        )
+        .thinned(2_000),
+    );
+    rep.add(
+        run_gadmm_linreg(
+            "GADMM",
+            &world,
+            &cfg,
+            None,
+            LINREG_RHO,
+            gadmm_iters,
+            Some(target),
+            cfg.seed,
+        )
+        .thinned(2_000),
+    );
+    for algo in ["GD", "QGD", "ADIANA"] {
+        rep.add(run_ps_linreg(algo, &world, &cfg, ps_iters, Some(target), cfg.seed).thinned(2_000));
+    }
+
+    let path = rep.write(Path::new(&cfg.results_dir))?;
+    println!("{}", rep.summary(Some(target), None));
+    println!("fig2 written to {}", path.display());
+    Ok(())
+}

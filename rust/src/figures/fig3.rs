@@ -1,0 +1,112 @@
+//! Fig. 3 — CDF of the total consumed energy to reach loss 1e-4 over
+//! random worker drops, at system bandwidths 10, 2 and 1 MHz.
+//!
+//! Observation exploited here (it is how the simulator works, not an
+//! approximation): an algorithm's *trajectory* — iterations and payloads —
+//! does not depend on the bandwidth; only the energy price per
+//! transmission does. Each drop is therefore run once per algorithm, and
+//! the three bandwidth panels reprice the same trajectory.
+
+use super::helpers::{q2, run_gadmm_linreg, run_ps_linreg, LinregWorld, LINREG_RHO};
+use crate::config::ExperimentConfig;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::FigureReport;
+use crate::util::stats::ecdf;
+use std::path::Path;
+
+const ALGOS: &[&str] = &["Q-GADMM-2bits", "GADMM", "GD", "QGD", "ADIANA"];
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    if quick {
+        cfg.gadmm.workers = cfg.gadmm.workers.min(10);
+        cfg.drops = cfg.drops.min(5);
+    }
+    let (gadmm_iters, ps_iters) = if quick { (1_500, 4_000) } else { (8_000, 30_000) };
+    let target = cfg.loss_target;
+    let bandwidths_mhz = [10.0, 2.0, 1.0];
+
+    // energies[bw][algo] = Vec of per-drop energy-to-target (J).
+    let mut energies =
+        vec![vec![Vec::<f64>::new(); ALGOS.len()]; bandwidths_mhz.len()];
+    let mut unreached = vec![0usize; ALGOS.len()];
+
+    for drop in 0..cfg.drops {
+        let drop_seed = cfg.seed ^ (0xD00 + drop as u64);
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            for (bi, bw) in bandwidths_mhz.iter().enumerate() {
+                let mut c = cfg.clone();
+                c.net.channel.total_bandwidth_hz = bw * 1e6;
+                let world = LinregWorld::new(&c, c.seed, drop_seed);
+                // The trajectory is bandwidth-independent, but rerunning per
+                // bandwidth keeps the accounting end-to-end (the runs are
+                // cheap; correctness over cleverness).
+                let rec = match *algo {
+                    "Q-GADMM-2bits" => run_gadmm_linreg(
+                        algo, &world, &c, q2(), LINREG_RHO, gadmm_iters, Some(target),
+                        c.seed ^ drop as u64,
+                    ),
+                    "GADMM" => run_gadmm_linreg(
+                        algo, &world, &c, None, LINREG_RHO, gadmm_iters, Some(target),
+                        c.seed ^ drop as u64,
+                    ),
+                    _ => run_ps_linreg(algo, &world, &c, ps_iters, Some(target), c.seed ^ drop as u64),
+                };
+                match rec.energy_to(target) {
+                    Some(e) => energies[bi][ai].push(e),
+                    None => {
+                        if bi == 0 {
+                            unreached[ai] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        println!("fig3: drop {}/{} done", drop + 1, cfg.drops);
+    }
+
+    for (bi, bw) in bandwidths_mhz.iter().enumerate() {
+        let mut rep = FigureReport::new(&format!("fig3_bw{}mhz", bw));
+        rep.meta("task", "linreg energy CDF");
+        rep.meta("bandwidth_mhz", bw);
+        rep.meta("drops", cfg.drops);
+        rep.meta("loss_target", target);
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            if energies[bi][ai].is_empty() {
+                continue;
+            }
+            // Encode the CDF as a Recorder curve: value = P[E <= x],
+            // energy_joules = x.
+            let mut rec = Recorder::new(algo);
+            for (i, (x, p)) in ecdf(&energies[bi][ai]).into_iter().enumerate() {
+                rec.push(CurvePoint {
+                    iteration: i as u64 + 1,
+                    comm_rounds: 0,
+                    bits: 0,
+                    energy_joules: x,
+                    compute_secs: 0.0,
+                    value: p,
+                });
+            }
+            rep.add(rec);
+        }
+        let path = rep.write(Path::new(&cfg.results_dir))?;
+        println!("== fig3 @ {bw} MHz: median energy to target ==");
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            let mut xs = energies[bi][ai].clone();
+            if xs.is_empty() {
+                println!("   {algo:<16} (target never reached, {} drops)", unreached[ai]);
+                continue;
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!(
+                "   {algo:<16} median {:.3e} J  min {:.3e}  max {:.3e}",
+                crate::util::stats::percentile(&xs, 0.5),
+                xs[0],
+                xs[xs.len() - 1]
+            );
+        }
+        println!("written to {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Fig. 4 — image classification (DNN): test accuracy vs (a) communication
+//! rounds, (b) transmitted bits, (c) consumed energy, for Q-SGADMM,
+//! SGADMM, SGD and QSGD at N = 10 workers, 40 MHz, τ = 100 ms.
+//!
+//! The four curves are independent and compute-heavy (each iteration runs
+//! ten 109k-parameter Adam steps per worker), so they run on four OS
+//! threads.
+
+use super::helpers::{q8, run_gadmm_dnn, run_ps_dnn, DnnWorld, DNN_RHO};
+use crate::config::ExperimentConfig;
+use crate::metrics::recorder::Recorder;
+use crate::metrics::report::FigureReport;
+use std::path::Path;
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    cfg.net.channel = crate::net::channel::ChannelParams::dnn_default();
+    let workers = 10usize;
+    let (iters, ps_iters, eval_every) = if quick { (30, 120, 5) } else { (200, 800, 5) };
+    let world = DnnWorld::new(&cfg, workers, quick, cfg.seed);
+
+    let mut rep = FigureReport::new("fig4");
+    rep.meta("task", "image classification (MLP 784-128-64-10, d=109184)");
+    rep.meta("workers", workers);
+    rep.meta("rho", DNN_RHO);
+    rep.meta("alpha", super::helpers::DNN_ALPHA);
+    rep.meta("bits", 8);
+    rep.meta("bandwidth_mhz", 40);
+    rep.meta("train_size", world.data.train_len());
+    rep.meta("accuracy_target", cfg.accuracy_target);
+
+    let curves: Vec<Recorder> = std::thread::scope(|s| {
+        let world = &world;
+        let cfg = &cfg;
+        let handles = vec![
+            s.spawn(move || {
+                run_gadmm_dnn(
+                    "Q-SGADMM-8bits", world, cfg, q8(), DNN_RHO, iters, eval_every, None,
+                    cfg.seed,
+                )
+            }),
+            s.spawn(move || {
+                run_gadmm_dnn(
+                    "SGADMM", world, cfg, None, DNN_RHO, iters, eval_every, None, cfg.seed,
+                )
+            }),
+            s.spawn(move || run_ps_dnn("SGD", world, cfg, ps_iters, eval_every, None, cfg.seed)),
+            s.spawn(move || run_ps_dnn("QSGD", world, cfg, ps_iters, eval_every, None, cfg.seed)),
+        ];
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for c in curves {
+        rep.add(c);
+    }
+
+    let path = rep.write(Path::new(&cfg.results_dir))?;
+    println!("{}", rep.summary(None, Some(cfg.accuracy_target)));
+    println!("fig4 written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Fig. 5 — CDF of the consumed energy to reach the target test accuracy
+//! over random drops, at system bandwidths 400, 100 and 40 MHz.
+//!
+//! DNN trajectories are expensive, and — as in Fig. 3 — they do not depend
+//! on the geometry or the bandwidth (only the energy pricing does). Each
+//! algorithm therefore runs a small number of trajectory seeds; every
+//! (drop, bandwidth) pair reprices a trajectory with the per-iteration
+//! energy of that drop's geometry. This is exact for the simulator.
+
+use super::helpers::{q8, run_gadmm_dnn, run_ps_dnn, DnnWorld, DNN_RHO};
+use crate::config::ExperimentConfig;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::FigureReport;
+use crate::net::channel::{transmission_energy, BandwidthPolicy, ChannelParams};
+use crate::net::geometry::Area;
+use crate::net::topology::Topology;
+use crate::util::rng::Rng;
+use crate::util::stats::ecdf;
+use std::path::Path;
+
+const ALGOS: &[&str] = &["Q-SGADMM-8bits", "SGADMM", "SGD", "QSGD"];
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    cfg.net.channel = ChannelParams::dnn_default();
+    let workers = 10usize;
+    let (iters, ps_iters, eval_every, traj_seeds) =
+        if quick { (30, 120, 5, 1) } else { (200, 800, 5, 3) };
+    let target = cfg.accuracy_target;
+    let d = crate::model::mlp::MlpDims::paper().dims() as u64;
+
+    // 1. Trajectories: (bits-per-broadcast, iterations-to-target) per algo
+    //    per trajectory seed. Bits per iteration are constant per algo.
+    let mut iters_to_target = vec![Vec::<u64>::new(); ALGOS.len()];
+    for t in 0..traj_seeds {
+        let seed = cfg.seed ^ (0x51D + t as u64);
+        let world = DnnWorld::new(&cfg, workers, quick, seed);
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            let rec = match *algo {
+                "Q-SGADMM-8bits" => run_gadmm_dnn(
+                    algo, &world, &cfg, q8(), DNN_RHO, iters, eval_every, Some(target), seed,
+                ),
+                "SGADMM" => run_gadmm_dnn(
+                    algo, &world, &cfg, None, DNN_RHO, iters, eval_every, Some(target), seed,
+                ),
+                _ => run_ps_dnn(algo, &world, &cfg, ps_iters, eval_every, Some(target), seed),
+            };
+            if let Some(p) = rec.first_above(target) {
+                iters_to_target[ai].push(p.iteration);
+            } else {
+                println!(
+                    "fig5: {algo} (seed {t}) did not reach {target} (best {:?})",
+                    rec.last_value()
+                );
+            }
+        }
+        println!("fig5: trajectory seed {}/{} done", t + 1, traj_seeds);
+    }
+
+    // 2. Price the trajectories over random drops × bandwidths.
+    for bw_mhz in [400.0, 100.0, 40.0] {
+        let mut params = cfg.net.channel;
+        params.total_bandwidth_hz = bw_mhz * 1e6;
+        let mut rep = FigureReport::new(&format!("fig5_bw{}mhz", bw_mhz as u64));
+        rep.meta("task", "DNN energy CDF");
+        rep.meta("bandwidth_mhz", bw_mhz);
+        rep.meta("accuracy_target", target);
+        rep.meta("drops", cfg.drops);
+        println!("== fig5 @ {bw_mhz} MHz ==");
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            if iters_to_target[ai].is_empty() {
+                println!("   {algo:<16} target unreached in {iters} iterations");
+                continue;
+            }
+            let gadmm_family = ai < 2;
+            let bits_per_worker: u64 = match *algo {
+                "Q-SGADMM-8bits" | "QSGD" => 8 * d + 64,
+                _ => 32 * d,
+            };
+            let mut energies = Vec::with_capacity(cfg.drops);
+            for drop in 0..cfg.drops {
+                let mut rng = Rng::seed_from_u64(cfg.seed ^ (0xE5 + drop as u64));
+                let points = Area {
+                    side: cfg.net.area_side,
+                }
+                .drop_workers(workers, &mut rng);
+                // Per-iteration energy for this geometry.
+                let per_iter: f64 = if gadmm_family {
+                    let topo = Topology::nearest_neighbor_chain(&points);
+                    let bw = BandwidthPolicy::GadmmFamily.per_worker_hz(&params, workers);
+                    (0..workers)
+                        .map(|p| {
+                            transmission_energy(
+                                &params,
+                                bw,
+                                topo.broadcast_distance(&points, p),
+                                bits_per_worker,
+                            )
+                        })
+                        .sum()
+                } else {
+                    let (net, _) =
+                        crate::baselines::ps::PsNetwork::from_geometry(params, &points);
+                    let up: f64 = net
+                        .uplink_dist
+                        .iter()
+                        .map(|&dist| {
+                            transmission_energy(&params, net.uplink_bw, dist, bits_per_worker)
+                        })
+                        .sum();
+                    up + transmission_energy(
+                        &params,
+                        net.downlink_bw,
+                        net.downlink_dist,
+                        32 * d,
+                    )
+                };
+                let k = iters_to_target[ai][drop % iters_to_target[ai].len()];
+                energies.push(per_iter * k as f64);
+            }
+            let mut rec = Recorder::new(algo);
+            for (i, (x, p)) in ecdf(&energies).into_iter().enumerate() {
+                rec.push(CurvePoint {
+                    iteration: i as u64 + 1,
+                    comm_rounds: 0,
+                    bits: 0,
+                    energy_joules: x,
+                    compute_secs: 0.0,
+                    value: p,
+                });
+            }
+            let mut xs = energies.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!(
+                "   {algo:<16} median {:.3e} J (iters-to-target {:?})",
+                crate::util::stats::percentile(&xs, 0.5),
+                iters_to_target[ai]
+            );
+            rep.add(rec);
+        }
+        let path = rep.write(Path::new(&cfg.results_dir))?;
+        println!("written to {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Fig. 6 — scalability in the number of workers: total transmitted bits
+//! to reach the target, vs N, for (a) linear regression (Q-GADMM vs
+//! GADMM, expect a roughly linear growth and a constant ≈(32d)/(bd+64)
+//! payload-ratio gap) and (b) the DNN task (Q-SGADMM vs SGADMM).
+
+use super::helpers::{
+    q2, q8, run_gadmm_dnn, run_gadmm_linreg, DnnWorld, DNN_RHO, LINREG_RHO,
+};
+use crate::config::ExperimentConfig;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::FigureReport;
+use std::path::Path;
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    // ---------------- (a) linear regression ------------------------------
+    let ns: &[usize] = if quick { &[6, 10, 14] } else { &[10, 20, 30, 40, 50] };
+    let iters = if quick { 3_000 } else { 12_000 };
+    let target = cfg.loss_target;
+    let mut rep = FigureReport::new("fig6a_linreg");
+    rep.meta("task", "bits to reach loss target vs N");
+    rep.meta("loss_target", target);
+    let mut q_curve = Recorder::new("Q-GADMM-2bits");
+    let mut f_curve = Recorder::new("GADMM");
+    println!("== fig6a: bits to loss {target} vs N ==");
+    for (i, &n) in ns.iter().enumerate() {
+        let mut c = cfg.clone();
+        c.gadmm.workers = n;
+        let world = super::helpers::LinregWorld::new(&c, c.seed, c.seed ^ (0x6A + n as u64));
+        let q = run_gadmm_linreg("q", &world, &c, q2(), LINREG_RHO, iters, Some(target), c.seed);
+        let f = run_gadmm_linreg("f", &world, &c, None, LINREG_RHO, iters, Some(target), c.seed);
+        let (qb, fb) = (q.bits_to(target), f.bits_to(target));
+        println!(
+            "   N={n:>3}  Q-GADMM {:>14}  GADMM {:>14}  ratio {:.2}",
+            qb.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            fb.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            match (qb, fb) {
+                (Some(q), Some(f)) if q > 0 => f as f64 / q as f64,
+                _ => f64::NAN,
+            }
+        );
+        for (curve, bits) in [(&mut q_curve, qb), (&mut f_curve, fb)] {
+            if let Some(b) = bits {
+                curve.push(CurvePoint {
+                    iteration: i as u64 + 1,
+                    comm_rounds: n as u64, // x-axis carrier: N
+                    bits: b,
+                    energy_joules: 0.0,
+                    compute_secs: 0.0,
+                    value: b as f64,
+                });
+            }
+        }
+    }
+    rep.add(q_curve);
+    rep.add(f_curve);
+    let path = rep.write(Path::new(&cfg.results_dir))?;
+    println!("fig6a written to {}", path.display());
+
+    // ---------------- (b) DNN -------------------------------------------
+    let ns_dnn: &[usize] = if quick { &[4, 6] } else { &[4, 6, 10] };
+    let (iters_dnn, eval_every) = if quick { (30, 5) } else { (200, 5) };
+    let target_acc = cfg.accuracy_target;
+    let mut rep = FigureReport::new("fig6b_dnn");
+    rep.meta("task", "bits to reach accuracy target vs N");
+    rep.meta("accuracy_target", target_acc);
+    let mut q_curve = Recorder::new("Q-SGADMM-8bits");
+    let mut f_curve = Recorder::new("SGADMM");
+    println!("== fig6b: bits to accuracy {target_acc} vs N ==");
+    for (i, &n) in ns_dnn.iter().enumerate() {
+        let mut c = cfg.clone();
+        c.net.channel = crate::net::channel::ChannelParams::dnn_default();
+        let world = DnnWorld::new(&c, n, quick, c.seed ^ n as u64);
+        let (q, f) = std::thread::scope(|s| {
+            let (world, c) = (&world, &c);
+            let h1 = s.spawn(move || {
+                run_gadmm_dnn(
+                    "q", world, c, q8(), DNN_RHO, iters_dnn, eval_every,
+                    Some(target_acc), c.seed,
+                )
+            });
+            let h2 = s.spawn(move || {
+                run_gadmm_dnn(
+                    "f", world, c, None, DNN_RHO, iters_dnn, eval_every,
+                    Some(target_acc), c.seed,
+                )
+            });
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        let (qb, fb) = (
+            q.first_above(target_acc).map(|p| p.bits),
+            f.first_above(target_acc).map(|p| p.bits),
+        );
+        println!(
+            "   N={n:>3}  Q-SGADMM {:>16}  SGADMM {:>16}  ratio {:.2}",
+            qb.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            fb.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            match (qb, fb) {
+                (Some(q), Some(f)) if q > 0 => f as f64 / q as f64,
+                _ => f64::NAN,
+            }
+        );
+        for (curve, bits) in [(&mut q_curve, qb), (&mut f_curve, fb)] {
+            if let Some(b) = bits {
+                curve.push(CurvePoint {
+                    iteration: i as u64 + 1,
+                    comm_rounds: n as u64,
+                    bits: b,
+                    energy_joules: 0.0,
+                    compute_secs: 0.0,
+                    value: b as f64,
+                });
+            }
+        }
+    }
+    rep.add(q_curve);
+    rep.add(f_curve);
+    let path = rep.write(Path::new(&cfg.results_dir))?;
+    println!("fig6b written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Fig. 7 — sensitivity to the disagreement penalty ρ: (a) linreg loss vs
+//! rounds for Q-GADMM/GADMM at several ρ (paper: larger ρ converges
+//! faster on the convex task); (b) DNN accuracy vs rounds for Q-SGADMM
+//! (paper: smaller ρ reaches the top accuracy faster on near-iid shards).
+
+use super::helpers::{q2, q8, run_gadmm_dnn, run_gadmm_linreg, DnnWorld, LinregWorld};
+use crate::config::ExperimentConfig;
+use crate::metrics::report::FigureReport;
+use std::path::Path;
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    // ---------------- (a) linreg ρ sweep ---------------------------------
+    let mut c = cfg.clone();
+    if quick {
+        c.gadmm.workers = c.gadmm.workers.min(10);
+    }
+    let iters = if quick { 2_000 } else { 8_000 };
+    let rhos: &[f32] = &[400.0, 1_600.0, 6_400.0, 25_600.0];
+    let world = LinregWorld::new(&c, c.seed, c.seed ^ 0x77);
+    let mut rep = FigureReport::new("fig7a_linreg_rho");
+    rep.meta("task", "rho sensitivity, linreg");
+    rep.meta("workers", c.gadmm.workers);
+    for &rho in rhos {
+        rep.add(
+            run_gadmm_linreg(
+                &format!("Q-GADMM rho={rho}"),
+                &world,
+                &c,
+                q2(),
+                rho,
+                iters,
+                Some(c.loss_target),
+                c.seed,
+            )
+            .thinned(1_000),
+        );
+        rep.add(
+            run_gadmm_linreg(
+                &format!("GADMM rho={rho}"),
+                &world,
+                &c,
+                None,
+                rho,
+                iters,
+                Some(c.loss_target),
+                c.seed,
+            )
+            .thinned(1_000),
+        );
+    }
+    let path = rep.write(Path::new(&c.results_dir))?;
+    println!("{}", rep.summary(Some(c.loss_target), None));
+    println!("fig7a written to {}", path.display());
+
+    // ---------------- (b) DNN ρ sweep ------------------------------------
+    let mut c = cfg.clone();
+    c.net.channel = crate::net::channel::ChannelParams::dnn_default();
+    let (iters_dnn, eval_every) = if quick { (25, 5) } else { (150, 5) };
+    let world = DnnWorld::new(&c, 10, quick, c.seed ^ 0x7B);
+    let rhos_dnn: &[f32] = &[2.0, 20.0, 200.0];
+    let mut rep = FigureReport::new("fig7b_dnn_rho");
+    rep.meta("task", "rho sensitivity, DNN");
+    let curves: Vec<_> = std::thread::scope(|s| {
+        let (world, c) = (&world, &c);
+        rhos_dnn
+            .iter()
+            .map(|&rho| {
+                s.spawn(move || {
+                    run_gadmm_dnn(
+                        &format!("Q-SGADMM rho={rho}"),
+                        world,
+                        c,
+                        q8(),
+                        rho,
+                        iters_dnn,
+                        eval_every,
+                        None,
+                        c.seed,
+                    )
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for curve in curves {
+        rep.add(curve);
+    }
+    let path = rep.write(Path::new(&c.results_dir))?;
+    println!("{}", rep.summary(None, Some(c.accuracy_target)));
+    println!("fig7b written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Fig. 8 — computation-time overhead of quantization: loss/accuracy vs
+//! cumulative *local computation* seconds (communication excluded), for
+//! (a) Q-GADMM vs GADMM and (b) Q-SGADMM vs SGADMM. The curves carry
+//! wall-clock measurements of this implementation's solve+quantize work
+//! (the paper's MATLAB/TF absolute numbers are not comparable; the
+//! *relative* gap is the reproduced quantity).
+
+use super::helpers::{
+    q2, q8, run_gadmm_dnn, run_gadmm_linreg, DnnWorld, LinregWorld, DNN_RHO, LINREG_RHO,
+};
+use crate::config::ExperimentConfig;
+use crate::metrics::report::FigureReport;
+use std::path::Path;
+
+pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    // ---------------- (a) linreg ------------------------------------------
+    let mut c = cfg.clone();
+    if quick {
+        c.gadmm.workers = c.gadmm.workers.min(10);
+    }
+    let iters = if quick { 2_000 } else { 8_000 };
+    let world = LinregWorld::new(&c, c.seed, c.seed ^ 0x88);
+    let mut rep = FigureReport::new("fig8a_linreg_time");
+    rep.meta("task", "loss vs local computation time");
+    let q = run_gadmm_linreg(
+        "Q-GADMM-2bits", &world, &c, q2(), LINREG_RHO, iters, Some(c.loss_target), c.seed,
+    );
+    let f = run_gadmm_linreg(
+        "GADMM", &world, &c, None, LINREG_RHO, iters, Some(c.loss_target), c.seed,
+    );
+    let overhead = match (
+        q.first_below(c.loss_target),
+        f.first_below(c.loss_target),
+    ) {
+        (Some(pq), Some(pf)) if pf.compute_secs > 0.0 => {
+            Some(pq.compute_secs / pf.compute_secs)
+        }
+        _ => None,
+    };
+    println!(
+        "fig8a: compute-time ratio Q-GADMM/GADMM to target: {}",
+        overhead
+            .map(|r| format!("{r:.2}x (paper reports ~1.4x)"))
+            .unwrap_or_else(|| "target unreached".into())
+    );
+    rep.add(q.thinned(1_000));
+    rep.add(f.thinned(1_000));
+    let path = rep.write(Path::new(&c.results_dir))?;
+    println!("fig8a written to {}", path.display());
+
+    // ---------------- (b) DNN ----------------------------------------------
+    let mut c = cfg.clone();
+    c.net.channel = crate::net::channel::ChannelParams::dnn_default();
+    let (iters_dnn, eval_every) = if quick { (25, 5) } else { (150, 5) };
+    let world = DnnWorld::new(&c, 10, quick, c.seed ^ 0x89);
+    let mut rep = FigureReport::new("fig8b_dnn_time");
+    rep.meta("task", "accuracy vs local computation time");
+    // Serial on purpose: wall-clock timing must not share cores.
+    let q = run_gadmm_dnn(
+        "Q-SGADMM-8bits", &world, &c, q8(), DNN_RHO, iters_dnn, eval_every, None, c.seed,
+    );
+    let f = run_gadmm_dnn(
+        "SGADMM", &world, &c, None, DNN_RHO, iters_dnn, eval_every, None, c.seed,
+    );
+    if let (Some(pq), Some(pf)) = (q.points.last(), f.points.last()) {
+        if pf.compute_secs > 0.0 {
+            println!(
+                "fig8b: compute secs/iter Q-SGADMM {:.4} vs SGADMM {:.4} (ratio {:.2}x)",
+                pq.compute_secs / pq.iteration as f64,
+                pf.compute_secs / pf.iteration as f64,
+                (pq.compute_secs / pq.iteration as f64) / (pf.compute_secs / pf.iteration as f64)
+            );
+        }
+    }
+    rep.add(q);
+    rep.add(f);
+    let path = rep.write(Path::new(&c.results_dir))?;
+    println!("fig8b written to {}", path.display());
+    Ok(())
+}

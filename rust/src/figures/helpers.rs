@@ -1,0 +1,319 @@
+//! Shared experiment plumbing for the figure generators: geometry drops,
+//! energy contexts, and named runners for every algorithm in Sec. V.
+
+use crate::baselines::adiana::{run_adiana_linreg, AdianaOptions};
+use crate::baselines::gd::{run_gd_linreg, GdOptions};
+use crate::baselines::ps::PsNetwork;
+use crate::baselines::sgd::{run_sgd_images, SgdOptions};
+use crate::baselines::QuantMode;
+use crate::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+use crate::coordinator::engine::{EnergyCtx, GadmmEngine, RunOptions};
+use crate::data::images::{ImageDataset, ImageSpec};
+use crate::data::linreg::{LinRegDataset, LinRegSpec};
+use crate::data::partition::Partition;
+use crate::metrics::recorder::Recorder;
+use crate::model::linreg::LinRegProblem;
+use crate::model::mlp::{MlpDims, MlpProblem};
+use crate::net::channel::BandwidthPolicy;
+use crate::net::geometry::{Area, Point};
+use crate::net::topology::Topology;
+use crate::util::rng::Rng;
+
+/// The linreg default: ρ tuned to the synthetic dataset's Hessian scale
+/// (the paper's ρ = 24 was tuned to California Housing's raw units; see
+/// DESIGN.md §6 and the fig7 sweep).
+pub const LINREG_RHO: f32 = 6400.0;
+/// DNN defaults per Sec. V-B.
+pub const DNN_RHO: f32 = 20.0;
+pub const DNN_ALPHA: f32 = 0.01;
+pub const DNN_BITS: u8 = 8;
+
+/// One deployed linreg experiment: dataset + geometry + chain.
+pub struct LinregWorld {
+    pub data: LinRegDataset,
+    pub f_star: f64,
+    pub points: Vec<Point>,
+    pub topo: Topology,
+}
+
+impl LinregWorld {
+    pub fn new(cfg: &ExperimentConfig, data_seed: u64, drop_seed: u64) -> LinregWorld {
+        let spec = LinRegSpec {
+            samples: 20_000,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, data_seed);
+        let (_, f_star) = data.optimum();
+        let mut rng = Rng::seed_from_u64(drop_seed);
+        let points = Area {
+            side: cfg.net.area_side,
+        }
+        .drop_workers(cfg.gadmm.workers, &mut rng);
+        let topo = Topology::nearest_neighbor_chain(&points);
+        LinregWorld {
+            data,
+            f_star,
+            points,
+            topo,
+        }
+    }
+
+    /// GADMM-family wireless context over the chain.
+    pub fn gadmm_energy(&self, cfg: &ExperimentConfig) -> EnergyCtx {
+        let n = self.topo.len();
+        EnergyCtx {
+            params: cfg.net.channel,
+            per_worker_bw: BandwidthPolicy::GadmmFamily
+                .per_worker_hz(&cfg.net.channel, n),
+            broadcast_dist: (0..n)
+                .map(|p| self.topo.broadcast_distance(&self.points, p))
+                .collect(),
+        }
+    }
+
+    /// PS-family wireless context over the same drop.
+    pub fn ps_network(&self, cfg: &ExperimentConfig) -> PsNetwork {
+        PsNetwork::from_geometry(cfg.net.channel, &self.points).0
+    }
+}
+
+/// Run one GADMM-family variant on a [`LinregWorld`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_gadmm_linreg(
+    name: &str,
+    world: &LinregWorld,
+    cfg: &ExperimentConfig,
+    quant: Option<QuantConfig>,
+    rho: f32,
+    iterations: u64,
+    stop_below: Option<f64>,
+    seed: u64,
+) -> Recorder {
+    let gcfg = GadmmConfig {
+        workers: cfg.gadmm.workers,
+        rho,
+        dual_step: 1.0,
+        quant,
+    };
+    let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
+    let problem = LinRegProblem::new(&world.data, &partition, rho);
+    let mut engine = GadmmEngine::new(gcfg, problem, world.topo.clone(), seed);
+    engine.set_energy_ctx(world.gadmm_energy(cfg));
+    let f_star = world.f_star;
+    let opts = RunOptions {
+        iterations,
+        eval_every: 1,
+        stop_below,
+        stop_above: None,
+    };
+    let mut report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
+    report.recorder.name = name.to_string();
+    report.recorder
+}
+
+/// Run a PS baseline on a [`LinregWorld`]; `algo` ∈ {"GD","QGD","ADIANA"}.
+pub fn run_ps_linreg(
+    algo: &str,
+    world: &LinregWorld,
+    cfg: &ExperimentConfig,
+    iterations: u64,
+    stop_below: Option<f64>,
+    seed: u64,
+) -> Recorder {
+    let net = Some(world.ps_network(cfg));
+    let workers = cfg.gadmm.workers;
+    let mut rec = match algo {
+        "GD" => {
+            run_gd_linreg(
+                &world.data,
+                workers,
+                &GdOptions {
+                    iterations,
+                    stop_below,
+                    net,
+                    seed,
+                    eval_every: 1,
+                    ..GdOptions::default()
+                },
+            )
+            .recorder
+        }
+        "QGD" => {
+            run_gd_linreg(
+                &world.data,
+                workers,
+                &GdOptions {
+                    iterations,
+                    stop_below,
+                    net,
+                    seed,
+                    eval_every: 1,
+                    quant: Some((QuantConfig::default(), QuantMode::Memory)),
+                    ..GdOptions::default()
+                },
+            )
+            .recorder
+        }
+        "ADIANA" => {
+            run_adiana_linreg(
+                &world.data,
+                workers,
+                &AdianaOptions {
+                    iterations,
+                    stop_below,
+                    net,
+                    seed,
+                    eval_every: 1,
+                    ..AdianaOptions::default()
+                },
+            )
+            .recorder
+        }
+        other => panic!("unknown PS algorithm {other}"),
+    };
+    rec.name = algo.to_string();
+    rec
+}
+
+/// One deployed DNN experiment.
+pub struct DnnWorld {
+    pub data: ImageDataset,
+    pub points: Vec<Point>,
+    pub topo: Topology,
+}
+
+impl DnnWorld {
+    pub fn new(cfg: &ExperimentConfig, workers: usize, quick: bool, seed: u64) -> DnnWorld {
+        let spec = if quick {
+            ImageSpec {
+                train: 2_000,
+                test: 600,
+                ..ImageSpec::default()
+            }
+        } else {
+            ImageSpec {
+                train: 10_000,
+                test: 3_000,
+                ..ImageSpec::default()
+            }
+        };
+        let data = ImageDataset::synthesize(&spec, seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xD0);
+        let points = Area {
+            side: cfg.net.area_side,
+        }
+        .drop_workers(workers, &mut rng);
+        let topo = Topology::nearest_neighbor_chain(&points);
+        DnnWorld { data, points, topo }
+    }
+
+    pub fn gadmm_energy(&self, cfg: &ExperimentConfig) -> EnergyCtx {
+        let n = self.topo.len();
+        EnergyCtx {
+            params: cfg.net.channel,
+            per_worker_bw: BandwidthPolicy::GadmmFamily
+                .per_worker_hz(&cfg.net.channel, n),
+            broadcast_dist: (0..n)
+                .map(|p| self.topo.broadcast_distance(&self.points, p))
+                .collect(),
+        }
+    }
+}
+
+/// Run SGADMM / Q-SGADMM on a [`DnnWorld`]; accuracy of the averaged model.
+#[allow(clippy::too_many_arguments)]
+pub fn run_gadmm_dnn(
+    name: &str,
+    world: &DnnWorld,
+    cfg: &ExperimentConfig,
+    quant: Option<QuantConfig>,
+    rho: f32,
+    iterations: u64,
+    eval_every: u64,
+    stop_above: Option<f64>,
+    seed: u64,
+) -> Recorder {
+    let workers = world.topo.len();
+    let gcfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: DNN_ALPHA,
+        quant,
+    };
+    let partition = Partition::contiguous(world.data.train_len(), workers);
+    let problem = MlpProblem::new(&world.data, &partition, MlpDims::paper(), seed ^ 0xD1A);
+    let init = problem.initial_theta(seed ^ 0x1517);
+    let mut engine = GadmmEngine::new(gcfg, problem, world.topo.clone(), seed);
+    engine.set_initial_theta(&init);
+    engine.set_energy_ctx(world.gadmm_energy(cfg));
+    let opts = RunOptions {
+        iterations,
+        eval_every,
+        stop_below: None,
+        stop_above,
+    };
+    let mut report = engine.run(&opts, |eng| {
+        let thetas: Vec<Vec<f32>> = (0..eng.workers())
+            .map(|p| eng.theta_at(p).to_vec())
+            .collect();
+        eng.problem().average_model_accuracy(&thetas)
+    });
+    report.recorder.name = name.to_string();
+    report.recorder
+}
+
+/// Run SGD / QSGD on a [`DnnWorld`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_ps_dnn(
+    algo: &str,
+    world: &DnnWorld,
+    cfg: &ExperimentConfig,
+    iterations: u64,
+    eval_every: u64,
+    stop_above: Option<f64>,
+    seed: u64,
+) -> Recorder {
+    let workers = world.topo.len();
+    let net = Some(PsNetwork::from_geometry(cfg.net.channel, &world.points).0);
+    let quant = match algo {
+        "SGD" => None,
+        "QSGD" => Some((
+            QuantConfig {
+                bits: DNN_BITS,
+                ..QuantConfig::default()
+            },
+            QuantMode::Memory,
+        )),
+        other => panic!("unknown PS DNN algorithm {other}"),
+    };
+    let mut rec = run_sgd_images(
+        &world.data,
+        workers,
+        MlpDims::paper(),
+        &SgdOptions {
+            iterations,
+            eval_every,
+            stop_above,
+            quant,
+            net,
+            seed,
+            ..SgdOptions::default()
+        },
+    )
+    .recorder;
+    rec.name = algo.to_string();
+    rec
+}
+
+/// Quantized-variant config at the paper's linreg resolution (2 bits).
+pub fn q2() -> Option<QuantConfig> {
+    Some(QuantConfig::default())
+}
+
+/// Quantized-variant config at the paper's DNN resolution (8 bits).
+pub fn q8() -> Option<QuantConfig> {
+    Some(QuantConfig {
+        bits: DNN_BITS,
+        ..QuantConfig::default()
+    })
+}

@@ -1,0 +1,43 @@
+//! Figure-regeneration harness: one generator per table/figure of the
+//! paper's evaluation (Sec. V). Each generator reruns the corresponding
+//! experiment end-to-end (workload, sweep, baselines) and writes
+//! `results/<fig>/…` CSV/JSON plus a printed summary with the same series
+//! the paper plots. See DESIGN.md §4 for the experiment index.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod helpers;
+pub mod thm2;
+
+use crate::config::ExperimentConfig;
+
+/// All known figure ids, in paper order.
+pub const ALL_FIGS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2",
+];
+
+/// Dispatch a figure id (or `all`).
+pub fn run(fig: &str, cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
+    match fig {
+        "fig2" => fig2::run(cfg, quick),
+        "fig3" => fig3::run(cfg, quick),
+        "fig4" => fig4::run(cfg, quick),
+        "fig5" => fig5::run(cfg, quick),
+        "fig6" => fig6::run(cfg, quick),
+        "fig7" => fig7::run(cfg, quick),
+        "fig8" => fig8::run(cfg, quick),
+        "thm2" => thm2::run(cfg, quick),
+        "all" => {
+            for f in ALL_FIGS {
+                run(f, cfg, quick)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure {other:?}; known: {ALL_FIGS:?} or 'all'"),
+    }
+}

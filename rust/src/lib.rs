@@ -1,0 +1,45 @@
+//! # qgadmm — Quantized Group ADMM for communication-efficient decentralized ML
+//!
+//! Production-quality reproduction of *Q-GADMM: Quantized Group ADMM for
+//! Communication Efficient Decentralized Machine Learning* (Elgabli, Park,
+//! Bedi, Ben Issaid, Bennis, Aggarwal) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the decentralized training coordinator: chain
+//!   topology, head/tail alternating scheduler, stochastic quantization and
+//!   bit-exact wire format, wireless energy model, parameter-server
+//!   baselines, metrics and the figure-regeneration harness.
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs for the
+//!   per-worker local problems, AOT-lowered to HLO text once at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the hot spots
+//!   (stochastic quantizer, tiled matmul, ADMM rhs builder).
+//!
+//! The Rust binary is self-contained after `make artifacts`: artifacts are
+//! loaded and executed through the PJRT CPU client (`runtime`), and a
+//! bit-faithful native backend (`model`) backs the large statistical sweeps.
+
+pub mod baselines;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod quant;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for the public API surface used by examples.
+pub mod prelude {
+    pub use crate::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+    pub use crate::data::partition::Partition;
+    pub use crate::metrics::recorder::Recorder;
+    pub use crate::net::topology::Topology;
+    pub use crate::quant::StochasticQuantizer;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,393 @@
+//! Dense linear algebra substrate.
+//!
+//! Small, allocation-conscious routines backing the native execution path:
+//! the per-worker linear-regression ADMM solve is a d×d SPD system
+//! (`A + cI`) solved by Cholesky; the global optimum is the N-aggregated
+//! normal-equation solve; the MLP path needs matmuls with f64 accumulation.
+//!
+//! Matrices are row-major `f64` (`Mat`). Hot-path vector kernels exist for
+//! both `f32` (algorithm state, matching the XLA artifacts) and `f64`
+//! (objective evaluation and metrics, where round-off would pollute the
+//! 1e-4 loss-gap target of the paper's figures).
+
+pub mod vecops;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == cols), "ragged rows");
+        Mat {
+            rows: rows.len(),
+            cols,
+            data: rows.iter().flatten().copied().collect(),
+        }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// `self + other` (same shape).
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// In-place `self += c * I` (square only).
+    pub fn add_diag(&mut self, c: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += c;
+        }
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (c, &o) in crow.iter_mut().zip(orow) {
+                    *c += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * self` — the Gram matrix `XᵀX` used for the per-worker
+    /// normal equations (computed once per worker at setup).
+    pub fn gram(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * self.cols..(i + 1) * self.cols];
+                for (o, &xj) in orow.iter_mut().zip(row) {
+                    *o += xi * xj;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * v`.
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let s = v[r];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += s * x;
+            }
+        }
+        out
+    }
+
+    /// `self * v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            out[r] = vecops::dot_f64(self.row(r), v);
+        }
+        out
+    }
+
+    /// Cholesky factorization of an SPD matrix: returns lower-triangular L
+    /// with `L Lᵀ = self`. Errors if the matrix is not positive definite.
+    pub fn cholesky(&self) -> Result<Chol, LinalgError> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.get(i, j);
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(LinalgError::NotPositiveDefinite { pivot: i, value: s });
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Chol { n, l })
+    }
+
+    /// Solve `self * x = b` for SPD `self` via Cholesky.
+    pub fn solve_spd(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        Ok(self.cholesky()?.solve(b))
+    }
+
+    /// Largest eigenvalue of an SPD matrix by power iteration (used to tune
+    /// the GD baseline's step size to 1/L).
+    pub fn spectral_radius_spd(&self, iters: usize) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let w = self.matvec(&v);
+            let norm = vecops::norm2_f64(&w);
+            if norm == 0.0 {
+                return 0.0;
+            }
+            lambda = norm;
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+        }
+        lambda
+    }
+}
+
+/// Cached Cholesky factor — the per-worker local solve reuses the factor
+/// across every ADMM iteration (the matrix `A + cI` is fixed given ρ).
+#[derive(Clone, Debug)]
+pub struct Chol {
+    n: usize,
+    l: Vec<f64>,
+}
+
+impl Chol {
+    /// Solve `L Lᵀ x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Allocation-free solve for the hot path.
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        // Forward: L y = b
+        for i in 0..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        // Backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Entry `L[i][j]` of the lower-triangular factor (0 above diagonal).
+    pub fn l_entry(&self, i: usize, j: usize) -> f64 {
+        if j > i {
+            0.0
+        } else {
+            self.l[i * self.n + j]
+        }
+    }
+}
+
+/// Linear-algebra failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {pivot} (value {value})")]
+    NotPositiveDefinite { pivot: usize, value: f64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Mat {
+        // A = B Bᵀ + I for a fixed B — guaranteed SPD.
+        let b = Mat::from_rows(&[
+            vec![1.0, 2.0, 0.5],
+            vec![0.0, 1.5, -1.0],
+            vec![2.0, 0.0, 1.0],
+        ]);
+        let mut a = b.matmul(&transpose(&b));
+        a.add_diag(1.0);
+        a
+    }
+
+    fn transpose(m: &Mat) -> Mat {
+        let mut t = Mat::zeros(m.cols(), m.rows());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                t.set(j, i, m.get(i, j));
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = spd3();
+        let i = Mat::identity(3);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn cholesky_solve_roundtrip() {
+        let a = spd3();
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = a.solve_spd(&b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(
+            m.cholesky(),
+            Err(LinalgError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = x.gram();
+        let explicit = transpose(&x).matmul(&x);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((g.get(i, j) - explicit.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn t_matvec_matches_explicit() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let v = vec![1.0, 0.5, -1.0];
+        let got = x.t_matvec(&v);
+        let want = transpose(&x).matvec(&v);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn spectral_radius_of_diagonal() {
+        let mut m = Mat::zeros(3, 3);
+        m.set(0, 0, 2.0);
+        m.set(1, 1, 7.0);
+        m.set(2, 2, 1.0);
+        let l = m.spectral_radius_spd(100);
+        assert!((l - 7.0).abs() < 1e-6, "l={l}");
+    }
+
+    #[test]
+    fn chol_solve_in_place_matches_solve() {
+        let a = spd3();
+        let chol = a.cholesky().unwrap();
+        let b = vec![0.3, -1.2, 2.2];
+        let x1 = chol.solve(&b);
+        let mut x2 = b.clone();
+        chol.solve_in_place(&mut x2);
+        assert_eq!(x1, x2);
+    }
+}

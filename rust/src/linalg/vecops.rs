@@ -1,0 +1,148 @@
+//! Vector kernels for the algorithm hot path.
+//!
+//! f32 variants operate on the algorithm state (model/dual vectors —
+//! matching the f32 precision of the XLA artifacts and the paper's 32-bit
+//! baseline payload); f64 variants back objective evaluation and metrics.
+//! All are written to autovectorize (no bounds checks in the loop bodies —
+//! slices are pre-asserted to equal length).
+
+#[inline]
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// f32 dot with f64 accumulation (loss terms on 109k-dim MLP vectors lose
+/// precision with a f32 accumulator).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+#[inline]
+pub fn norm2_f64(a: &[f64]) -> f64 {
+    dot_f64(a, a).sqrt()
+}
+
+#[inline]
+pub fn norm2_sq_f32(a: &[f32]) -> f64 {
+    dot_f32(a, a)
+}
+
+/// ‖a − b‖² with f64 accumulation.
+#[inline]
+pub fn dist_sq_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// ℓ∞ norm of `a − b` — this is the quantization radius R_n^k of eq. (6)
+/// (the infinity norm of the model difference, see Fig. 1(b)).
+#[inline]
+pub fn linf_diff_f32(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut m = 0.0f32;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).abs();
+        if d > m {
+            m = d;
+        }
+    }
+    m
+}
+
+/// `out = a + s * b`.
+#[inline]
+pub fn axpy_f32(out: &mut [f32], a: &[f32], s: f32, b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + s * b[i];
+    }
+}
+
+/// `y += s * x` in place.
+#[inline]
+pub fn axpy_inplace_f32(y: &mut [f32], s: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += s * x[i];
+    }
+}
+
+/// Elementwise `out = a - b`.
+#[inline]
+pub fn sub_f32(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Widen f32 → f64.
+pub fn to_f64(a: &[f32]) -> Vec<f64> {
+    a.iter().map(|&x| x as f64).collect()
+}
+
+/// Narrow f64 → f32.
+pub fn to_f32(a: &[f64]) -> Vec<f32> {
+    a.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot_f64(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot_f32(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn linf_diff_is_max_abs() {
+        let a = [1.0f32, -5.0, 2.0];
+        let b = [0.5f32, -2.0, 2.0];
+        assert_eq!(linf_diff_f32(&a, &b), 3.0);
+        assert_eq!(linf_diff_f32(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn axpy_variants() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let mut out = [0.0f32; 2];
+        axpy_f32(&mut out, &a, 0.5, &b);
+        assert_eq!(out, [6.0, 12.0]);
+        let mut y = [1.0f32, 1.0];
+        axpy_inplace_f32(&mut y, 2.0, &a);
+        assert_eq!(y, [3.0, 5.0]);
+    }
+
+    #[test]
+    fn dist_sq() {
+        assert_eq!(dist_sq_f32(&[1.0, 2.0], &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        let xs = [0.5f32, -1.25, 3.0];
+        let back = to_f32(&to_f64(&xs));
+        assert_eq!(back, xs);
+    }
+}

@@ -1,0 +1,211 @@
+//! `qgadmm` — leader entrypoint + CLI.
+//!
+//! Subcommands: `figures` (regenerate any paper figure), `train-linreg`
+//! and `train-dnn` (single runs, optionally through the PJRT artifacts),
+//! `info` (artifact/platform report). See `qgadmm --help`.
+
+use qgadmm::cli::{self, USAGE};
+use qgadmm::config::{ExperimentConfig, KvMap};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::data::images::{ImageDataset, ImageSpec};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::figures;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::mlp::{MlpDims, MlpProblem};
+use qgadmm::net::topology::Topology;
+use qgadmm::runtime::solver::{XlaLinRegProblem, XlaMlpProblem};
+use qgadmm::runtime::Runtime;
+
+/// Flags handled by main itself (not ExperimentConfig keys).
+const META_FLAGS: &[&str] = &["fig", "quick", "config", "help"];
+
+fn build_config(flags: &KvMap) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        cfg.apply_kv(&KvMap::parse(&text)?)?;
+    }
+    let mut overrides = KvMap::new();
+    for (k, v) in flags.iter() {
+        if !META_FLAGS.contains(&k) {
+            overrides.set(k, v);
+        }
+    }
+    cfg.apply_kv(&overrides)?;
+    Ok(cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") || args.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let inv = cli::parse(&args)?;
+    match inv.command.as_str() {
+        "figures" => {
+            let cfg = build_config(&inv.flags)?;
+            let fig = inv.flags.get("fig").unwrap_or("all");
+            let quick = inv.flags.get("quick").map(|v| v == "true").unwrap_or(false);
+            figures::run(fig, &cfg, quick)
+        }
+        "train-linreg" => {
+            let cfg = build_config(&inv.flags)?;
+            train_linreg(&cfg)
+        }
+        "train-dnn" => {
+            let cfg = build_config(&inv.flags)?;
+            train_dnn(&cfg)
+        }
+        "info" => info(),
+        other => {
+            anyhow::bail!("unknown subcommand {other:?}\n{USAGE}");
+        }
+    }
+}
+
+/// Single linreg run printing the loss curve; `--use-xla true` routes the
+/// local solves through the PJRT artifact.
+fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    let spec = LinRegSpec::default();
+    let data = LinRegDataset::synthesize(&spec, cfg.seed);
+    let (_, f_star) = data.optimum();
+    let partition = Partition::contiguous(data.samples(), cfg.gadmm.workers);
+    let topo = Topology::line(cfg.gadmm.workers);
+    let mut gcfg = cfg.gadmm.clone();
+    if gcfg.rho == 24.0 {
+        // The paper's ρ=24 was tuned to California Housing units; the
+        // synthetic default needs the fig7-tuned value.
+        gcfg.rho = qgadmm::figures::helpers::LINREG_RHO;
+    }
+    let opts = RunOptions {
+        iterations: cfg.iterations,
+        eval_every: 1,
+        stop_below: Some(cfg.loss_target),
+        stop_above: None,
+    };
+    let variant = if gcfg.quant.is_some() { "Q-GADMM" } else { "GADMM" };
+    let report = if cfg.use_xla {
+        let rt = Runtime::load(Runtime::default_dir())?;
+        println!("platform: {} (XLA-backed local solves)", rt.platform());
+        let problem = XlaLinRegProblem::new(&rt, &data, &partition)?;
+        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+        engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
+    } else {
+        let problem = LinRegProblem::new(&data, &partition, gcfg.rho);
+        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+        engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
+    };
+    print_curve(variant, &report.recorder, 15);
+    println!(
+        "{} finished: {} iterations, final gap {:.3e}, {} bits, compute {:.3}s",
+        variant,
+        report.iterations_run,
+        report.final_loss_gap(),
+        report.comm.bits,
+        report
+            .recorder
+            .points
+            .last()
+            .map(|p| p.compute_secs)
+            .unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+/// Single DNN run (Q-SGADMM / SGADMM) printing the accuracy curve.
+fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    let workers = if cfg.gadmm.workers == 50 { 10 } else { cfg.gadmm.workers };
+    let spec = ImageSpec::default();
+    let data = ImageDataset::synthesize(&spec, cfg.seed);
+    let partition = Partition::contiguous(data.train_len(), workers);
+    let topo = Topology::line(workers);
+    let mut gcfg = cfg.gadmm.clone();
+    gcfg.workers = workers;
+    gcfg.dual_step = qgadmm::figures::helpers::DNN_ALPHA;
+    if gcfg.rho == 24.0 {
+        gcfg.rho = qgadmm::figures::helpers::DNN_RHO;
+    }
+    if let Some(q) = gcfg.quant.as_mut() {
+        if q.bits == 2 {
+            q.bits = qgadmm::figures::helpers::DNN_BITS;
+        }
+    }
+    let variant = if gcfg.quant.is_some() { "Q-SGADMM" } else { "SGADMM" };
+    let opts = RunOptions {
+        iterations: cfg.iterations.min(500),
+        eval_every: 5,
+        stop_below: None,
+        stop_above: Some(cfg.accuracy_target),
+    };
+    let report = if cfg.use_xla {
+        let rt = Runtime::load(Runtime::default_dir())?;
+        println!("platform: {} (XLA-backed local solves)", rt.platform());
+        let problem = XlaMlpProblem::new(&rt, &data, &partition, cfg.seed ^ 0xD1A)?;
+        let init = problem.initial_theta(cfg.seed ^ 0x1517);
+        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+        engine.set_initial_theta(&init);
+        engine.run(&opts, |eng| {
+            let thetas: Vec<Vec<f32>> =
+                (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
+            eng.problem().average_model_accuracy(&thetas)
+        })
+    } else {
+        let problem = MlpProblem::new(&data, &partition, MlpDims::paper(), cfg.seed ^ 0xD1A);
+        let init = problem.initial_theta(cfg.seed ^ 0x1517);
+        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+        engine.set_initial_theta(&init);
+        engine.run(&opts, |eng| {
+            let thetas: Vec<Vec<f32>> =
+                (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
+            eng.problem().average_model_accuracy(&thetas)
+        })
+    };
+    print_curve(variant, &report.recorder, 20);
+    println!(
+        "{} finished: {} iterations, accuracy {:.4}, {} bits",
+        variant,
+        report.iterations_run,
+        report.recorder.last_value().unwrap_or(f64::NAN),
+        report.comm.bits,
+    );
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    if !Runtime::available() {
+        println!(
+            "no artifacts at {:?} — run `make artifacts`",
+            Runtime::default_dir()
+        );
+        return Ok(());
+    }
+    let rt = Runtime::load(Runtime::default_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut names: Vec<_> = rt.manifest().artifacts.keys().collect();
+    names.sort();
+    for name in names {
+        let a = &rt.manifest().artifacts[name];
+        println!(
+            "  {name:<24} inputs={:?} outputs={:?} constants={:?}",
+            a.inputs, a.outputs, a.constants
+        );
+    }
+    Ok(())
+}
+
+fn print_curve(name: &str, rec: &qgadmm::metrics::recorder::Recorder, rows: usize) {
+    println!("== {name} ==");
+    println!(
+        "{:>8} {:>10} {:>14} {:>14} {:>12}",
+        "iter", "rounds", "bits", "value", "compute_s"
+    );
+    let thin = rec.thinned(rows.max(2));
+    for p in &thin.points {
+        println!(
+            "{:>8} {:>10} {:>14} {:>14.6e} {:>12.4}",
+            p.iteration, p.comm_rounds, p.bits, p.value, p.compute_secs
+        );
+    }
+}

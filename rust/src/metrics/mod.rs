@@ -1,0 +1,6 @@
+//! Metrics: convergence curves indexed by the paper's three x-axes
+//! (communication rounds, transmitted bits, consumed energy) plus local
+//! computation time (Fig. 8), with CSV/JSON reporting.
+
+pub mod recorder;
+pub mod report;

@@ -1,0 +1,214 @@
+//! Convergence-curve recorder.
+//!
+//! Every algorithm run produces a [`Recorder`]: one [`CurvePoint`] per
+//! iteration carrying the cumulative communication state (rounds, bits,
+//! energy, local compute seconds) and the figure-of-merit (loss gap
+//! `|F − F*|` for regression, test accuracy for classification). The
+//! figure harness slices these curves along whichever x-axis the paper
+//! plots.
+
+use crate::util::json::Json;
+
+/// One iteration's snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Iteration index `k`.
+    pub iteration: u64,
+    /// Cumulative communication rounds (GADMM-family: 2 per iteration —
+    /// head phase + tail phase; PS-family: 2 per iteration — upload +
+    /// download).
+    pub comm_rounds: u64,
+    /// Cumulative bits transmitted system-wide.
+    pub bits: u64,
+    /// Cumulative transmit energy (J) system-wide.
+    pub energy_joules: f64,
+    /// Cumulative *local computation* seconds (Fig. 8's x-axis).
+    pub compute_secs: f64,
+    /// Figure of merit: loss gap `|F − F*|` or test accuracy, per run kind.
+    pub value: f64,
+}
+
+/// A named convergence curve.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Recorder {
+    pub fn new(name: &str) -> Recorder {
+        Recorder {
+            name: name.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        debug_assert!(
+            self.points
+                .last()
+                .map(|q| q.iteration < p.iteration
+                    && q.bits <= p.bits
+                    && q.energy_joules <= p.energy_joules)
+                .unwrap_or(true),
+            "curve must advance monotonically"
+        );
+        self.points.push(p);
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|p| p.value)
+    }
+
+    /// First point at which `value <= target` (loss-style metric).
+    /// Returns the snapshot where the threshold was crossed.
+    pub fn first_below(&self, target: f64) -> Option<&CurvePoint> {
+        self.points.iter().find(|p| p.value <= target)
+    }
+
+    /// First point at which `value >= target` (accuracy-style metric).
+    pub fn first_above(&self, target: f64) -> Option<&CurvePoint> {
+        self.points.iter().find(|p| p.value >= target)
+    }
+
+    /// Bits needed to reach a loss target (`None` if never reached).
+    pub fn bits_to(&self, target: f64) -> Option<u64> {
+        self.first_below(target).map(|p| p.bits)
+    }
+
+    /// Energy needed to reach a loss target.
+    pub fn energy_to(&self, target: f64) -> Option<f64> {
+        self.first_below(target).map(|p| p.energy_joules)
+    }
+
+    /// Serialize to JSON (used by `results/*.json`).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("name", Json::Str(self.name.clone()));
+        obj.set(
+            "iteration",
+            Json::from_f64s(&self.points.iter().map(|p| p.iteration as f64).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "comm_rounds",
+            Json::from_f64s(&self.points.iter().map(|p| p.comm_rounds as f64).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "bits",
+            Json::from_f64s(&self.points.iter().map(|p| p.bits as f64).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "energy_joules",
+            Json::from_f64s(&self.points.iter().map(|p| p.energy_joules).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "compute_secs",
+            Json::from_f64s(&self.points.iter().map(|p| p.compute_secs).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "value",
+            Json::from_f64s(&self.points.iter().map(|p| p.value).collect::<Vec<_>>()),
+        );
+        obj
+    }
+
+    /// CSV rows (`iteration,comm_rounds,bits,energy_joules,compute_secs,value`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iteration,comm_rounds,bits,energy_joules,compute_secs,value\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{},{:.9e},{:.9e},{:.9e}\n",
+                p.iteration, p.comm_rounds, p.bits, p.energy_joules, p.compute_secs, p.value
+            ));
+        }
+        out
+    }
+
+    /// Thin the curve to at most `max_points` (uniform stride), keeping the
+    /// final point — figure outputs don't need every iteration.
+    pub fn thinned(&self, max_points: usize) -> Recorder {
+        assert!(max_points >= 2);
+        if self.points.len() <= max_points {
+            return self.clone();
+        }
+        let stride = self.points.len().div_ceil(max_points);
+        let mut out = Recorder::new(&self.name);
+        for (i, p) in self.points.iter().enumerate() {
+            if i % stride == 0 {
+                out.points.push(*p);
+            }
+        }
+        if out.points.last().map(|p| p.iteration) != self.points.last().map(|p| p.iteration) {
+            out.points.push(*self.points.last().unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(i: u64, bits: u64, energy: f64, value: f64) -> CurvePoint {
+        CurvePoint {
+            iteration: i,
+            comm_rounds: 2 * i,
+            bits,
+            energy_joules: energy,
+            compute_secs: i as f64 * 0.01,
+            value,
+        }
+    }
+
+    #[test]
+    fn thresholds() {
+        let mut r = Recorder::new("test");
+        r.push(pt(1, 100, 1.0, 0.5));
+        r.push(pt(2, 200, 2.0, 0.1));
+        r.push(pt(3, 300, 3.0, 0.01));
+        assert_eq!(r.bits_to(0.1), Some(200));
+        assert_eq!(r.energy_to(0.005), None);
+        assert_eq!(r.first_above(0.4).unwrap().iteration, 1);
+        assert_eq!(r.last_value(), Some(0.01));
+    }
+
+    #[test]
+    fn json_roundtrip_lengths() {
+        let mut r = Recorder::new("x");
+        r.push(pt(1, 10, 0.1, 1.0));
+        r.push(pt(2, 20, 0.2, 0.5));
+        let j = r.to_json();
+        assert_eq!(j.get("bits").unwrap().as_arr().unwrap().len(), 2);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = Recorder::new("x");
+        r.push(pt(1, 10, 0.1, 1.0));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("iteration,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn thinning_keeps_last() {
+        let mut r = Recorder::new("x");
+        for i in 1..=100 {
+            r.push(pt(i, i * 10, i as f64, 1.0 / i as f64));
+        }
+        let t = r.thinned(10);
+        assert!(t.points.len() <= 12);
+        assert_eq!(t.points.last().unwrap().iteration, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotonically")]
+    #[cfg(debug_assertions)]
+    fn rejects_non_monotone() {
+        let mut r = Recorder::new("x");
+        r.push(pt(2, 20, 0.2, 0.5));
+        r.push(pt(1, 10, 0.1, 1.0));
+    }
+}

@@ -1,0 +1,157 @@
+//! Figure/series reporting: writes `results/<figure>/…` files and prints
+//! the same rows/series the paper's plots show.
+
+use super::recorder::Recorder;
+use crate::util::json::Json;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A collection of curves belonging to one figure panel.
+#[derive(Clone, Debug, Default)]
+pub struct FigureReport {
+    pub figure: String,
+    pub curves: Vec<Recorder>,
+    /// Free-form metadata (settings used, seeds, targets).
+    pub meta: Vec<(String, String)>,
+}
+
+impl FigureReport {
+    pub fn new(figure: &str) -> FigureReport {
+        FigureReport {
+            figure: figure.to_string(),
+            curves: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn meta(&mut self, key: &str, value: impl ToString) -> &mut Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn add(&mut self, curve: Recorder) -> &mut Self {
+        self.curves.push(curve);
+        self
+    }
+
+    /// Write `results/<figure>/<curve>.csv` plus a combined JSON document.
+    pub fn write(&self, results_dir: &Path) -> std::io::Result<PathBuf> {
+        let dir = results_dir.join(&self.figure);
+        std::fs::create_dir_all(&dir)?;
+        for c in &self.curves {
+            let mut f = std::fs::File::create(dir.join(format!("{}.csv", sanitize(&c.name))))?;
+            f.write_all(c.to_csv().as_bytes())?;
+        }
+        let mut obj = Json::obj();
+        obj.set("figure", Json::Str(self.figure.clone()));
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, Json::Str(v.clone()));
+        }
+        obj.set("meta", meta);
+        obj.set(
+            "curves",
+            Json::Arr(self.curves.iter().map(|c| c.thinned(400).to_json()).collect()),
+        );
+        let path = dir.join("figure.json");
+        std::fs::write(&path, obj.to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Human-readable summary table: for each curve, the threshold
+    /// crossings the paper reports.
+    pub fn summary(&self, loss_target: Option<f64>, acc_target: Option<f64>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.figure));
+        for (k, v) in &self.meta {
+            out.push_str(&format!("   {k} = {v}\n"));
+        }
+        out.push_str(&format!(
+            "{:<22} {:>10} {:>14} {:>14} {:>12} {:>12}\n",
+            "algorithm", "iters", "final", "bits", "energy(J)", "reached@iter"
+        ));
+        for c in &self.curves {
+            let last = c.points.last();
+            let (bits, energy, reach) = match (loss_target, acc_target) {
+                (Some(t), _) => {
+                    let p = c.first_below(t);
+                    (
+                        p.map(|p| p.bits),
+                        p.map(|p| p.energy_joules),
+                        p.map(|p| p.iteration),
+                    )
+                }
+                (_, Some(t)) => {
+                    let p = c.first_above(t);
+                    (
+                        p.map(|p| p.bits),
+                        p.map(|p| p.energy_joules),
+                        p.map(|p| p.iteration),
+                    )
+                }
+                _ => (None, None, None),
+            };
+            out.push_str(&format!(
+                "{:<22} {:>10} {:>14} {:>14} {:>12} {:>12}\n",
+                c.name,
+                last.map(|p| p.iteration.to_string()).unwrap_or_default(),
+                last.map(|p| format!("{:.3e}", p.value)).unwrap_or_default(),
+                bits.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+                energy
+                    .map(|e| format!("{e:.3e}"))
+                    .unwrap_or_else(|| "-".into()),
+                reach.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            ));
+        }
+        out
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::CurvePoint;
+
+    fn curve(name: &str, vals: &[f64]) -> Recorder {
+        let mut r = Recorder::new(name);
+        for (i, &v) in vals.iter().enumerate() {
+            r.push(CurvePoint {
+                iteration: i as u64 + 1,
+                comm_rounds: 2 * (i as u64 + 1),
+                bits: 100 * (i as u64 + 1),
+                energy_joules: 0.5 * (i as f64 + 1.0),
+                compute_secs: 0.0,
+                value: v,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn write_and_summarize() {
+        let dir = std::env::temp_dir().join(format!("qgadmm_report_{}", std::process::id()));
+        let mut rep = FigureReport::new("fig2");
+        rep.meta("rho", 24.0);
+        rep.add(curve("Q-GADMM", &[1.0, 0.1, 0.001]));
+        rep.add(curve("GD", &[1.0, 0.5, 0.2]));
+        let path = rep.write(&dir).unwrap();
+        assert!(path.exists());
+        assert!(dir.join("fig2").join("Q-GADMM.csv").exists());
+        let s = rep.summary(Some(0.01), None);
+        assert!(s.contains("Q-GADMM"));
+        assert!(s.contains("300")); // bits at crossing
+        assert!(s.contains('-')); // GD never reaches
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("Q-GADMM (2 bits)"), "Q-GADMM__2_bits_");
+    }
+}

@@ -1,0 +1,100 @@
+//! Adam optimizer (Kingma & Ba) — the local solver of Q-SGADMM.
+//!
+//! The paper runs "Adam optimizer with a learning rate 0.001 and ten
+//! iterations when solving the local problem at each worker". The state is
+//! reset per local solve (each round poses a *different* local problem —
+//! the duals and neighbor models move), matching the L2 artifact, which
+//! fuses 10 fresh-state Adam steps into one executable.
+
+/// Adam state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    /// Paper defaults: lr = 0.001, β₁ = 0.9, β₂ = 0.999, ε = 1e-8.
+    pub fn new(dims: usize, lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dims],
+            v: vec![0.0; dims],
+            t: 0,
+        }
+    }
+
+    /// Reset moments for a fresh local solve.
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+
+    /// One Adam step: `params ← params − lr·m̂/(√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr = self.lr;
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = ½‖x − c‖²; Adam with enough steps lands near c.
+        let c = [3.0f32, -2.0, 0.5];
+        let mut x = [0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Bias correction makes the first step ≈ lr·sign(g).
+        let mut x = [0.0f32];
+        let mut opt = Adam::new(1, 0.001);
+        opt.step(&mut x, &[42.0]);
+        assert!((x[0] + 0.001).abs() < 1e-6, "x={}", x[0]);
+    }
+
+    #[test]
+    fn reset_restores_initial_behaviour() {
+        let mut a = Adam::new(2, 0.01);
+        let mut x1 = [1.0f32, 1.0];
+        a.step(&mut x1, &[1.0, -1.0]);
+        a.reset();
+        let mut x2 = [1.0f32, 1.0];
+        a.step(&mut x2, &[1.0, -1.0]);
+        assert_eq!(x1, x2);
+    }
+}

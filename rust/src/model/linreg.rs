@@ -1,0 +1,269 @@
+//! Linear-regression local problem (the paper's convex task, Sec. V-A).
+//!
+//! Worker `n` holds sufficient statistics `(A_n, b_n)` of its data shard.
+//! The GADMM primal update (eqs. (14)–(17)) is the exact minimizer of a
+//! quadratic:
+//!
+//! ```text
+//!   (A_n + ρ·deg·I) θ  =  b_n + [left](λ_l + ρ θ̂_l) + [right](−λ_r + ρ θ̂_r)
+//! ```
+//!
+//! where `deg ∈ {1, 2}` is the number of chain neighbors. The LHS matrix is
+//! constant across iterations, so each worker factors it once (Cholesky)
+//! and the per-iteration cost is one triangular solve + rhs assembly —
+//! the same structure the L1 `admm_rhs` Pallas kernel + L2 solve use.
+//!
+//! [`LinRegWorker`] is the single-worker solver (shipped to threads by the
+//! distributed runtime); [`LinRegProblem`] is the fleet view the
+//! deterministic engine drives.
+
+use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use crate::data::linreg::{LinRegDataset, WorkerStats};
+use crate::data::partition::Partition;
+use crate::linalg::Chol;
+
+/// One worker's linreg solver: cached Cholesky factors for both possible
+/// neighbor degrees, plus rhs scratch.
+pub struct LinRegWorker {
+    stats: WorkerStats,
+    /// `[deg=1, deg=2]` factors of `A + ρ·deg·I`.
+    factors: [Chol; 2],
+    rho: f64,
+    rhs: Vec<f64>,
+}
+
+impl LinRegWorker {
+    pub fn new(stats: WorkerStats, rho: f32) -> LinRegWorker {
+        let dims = stats.dims();
+        let make = |deg: f64| {
+            let mut m = stats.a.clone();
+            m.add_diag(rho as f64 * deg);
+            m.cholesky().expect("A + ρ·deg·I is SPD for ρ > 0")
+        };
+        LinRegWorker {
+            factors: [make(1.0), make(2.0)],
+            stats,
+            rho: rho as f64,
+            rhs: vec![0.0; dims],
+        }
+    }
+
+    pub fn stats(&self) -> &WorkerStats {
+        &self.stats
+    }
+}
+
+impl WorkerSolver for LinRegWorker {
+    fn dims(&self) -> usize {
+        self.stats.dims()
+    }
+
+    fn solve(&mut self, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        let d = self.dims();
+        assert_eq!(out.len(), d);
+        let deg = ctx.degree();
+        assert!(deg >= 1, "chain workers always have ≥1 neighbor");
+        let rho = self.rho;
+
+        // rhs = b + [l](λ_l + ρ θ̂_l) + [r](−λ_r + ρ θ̂_r)
+        self.rhs.copy_from_slice(&self.stats.b);
+        if let (Some(lam), Some(th)) = (ctx.lambda_left, ctx.theta_left) {
+            for i in 0..d {
+                self.rhs[i] += lam[i] as f64 + rho * th[i] as f64;
+            }
+        }
+        if let (Some(lam), Some(th)) = (ctx.lambda_right, ctx.theta_right) {
+            for i in 0..d {
+                self.rhs[i] += -(lam[i] as f64) + rho * th[i] as f64;
+            }
+        }
+        self.factors[deg - 1].solve_in_place(&mut self.rhs);
+        for i in 0..d {
+            out[i] = self.rhs[i] as f32;
+        }
+    }
+
+    fn objective(&self, theta: &[f32]) -> f64 {
+        let t64: Vec<f64> = theta.iter().map(|&x| x as f64).collect();
+        self.stats.objective(&t64)
+    }
+}
+
+/// Fleet view over all workers' linreg state.
+pub struct LinRegProblem {
+    workers: Vec<LinRegWorker>,
+}
+
+impl LinRegProblem {
+    /// Build from a dataset + contiguous partition, with penalty ρ.
+    pub fn new(data: &LinRegDataset, partition: &Partition, rho: f32) -> LinRegProblem {
+        LinRegProblem {
+            workers: (0..partition.workers())
+                .map(|w| {
+                    let (lo, hi) = partition.bounds(w);
+                    LinRegWorker::new(data.sufficient_stats(lo, hi), rho)
+                })
+                .collect(),
+        }
+    }
+
+    /// Split into per-worker solvers for the threaded runtime.
+    pub fn into_workers(self) -> Vec<LinRegWorker> {
+        self.workers
+    }
+
+    pub fn stats(&self, worker: usize) -> &WorkerStats {
+        self.workers[worker].stats()
+    }
+
+    /// Sum of local objectives at per-worker models — the decentralized
+    /// objective `F = Σ_n f_n(θ_n)` of eq. (1).
+    pub fn global_objective(&self, thetas: &[Vec<f32>]) -> f64 {
+        assert_eq!(thetas.len(), self.workers.len());
+        thetas
+            .iter()
+            .enumerate()
+            .map(|(w, t)| self.objective(w, t))
+            .sum()
+    }
+}
+
+impl LocalProblem for LinRegProblem {
+    fn dims(&self) -> usize {
+        self.workers[0].dims()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        self.workers[worker].solve(ctx, out);
+    }
+
+    fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
+        self.workers[worker].objective(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::linreg::LinRegSpec;
+
+    fn problem(workers: usize, rho: f32) -> (LinRegDataset, LinRegProblem) {
+        let spec = LinRegSpec {
+            samples: 1_000,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 11);
+        let part = Partition::contiguous(data.samples(), workers);
+        let p = LinRegProblem::new(&data, &part, rho);
+        (data, p)
+    }
+
+    /// Numerically verify the solve is the argmin of the augmented local
+    /// objective by probing random perturbations.
+    #[test]
+    fn solve_is_local_minimum() {
+        let (_, mut p) = problem(4, 5.0);
+        let d = p.dims();
+        let lam_l = vec![0.3f32; 6];
+        let lam_r = vec![-0.2f32; 6];
+        let th_l = vec![0.5f32; 6];
+        let th_r = vec![-0.1f32; 6];
+        let ctx = NeighborCtx {
+            lambda_left: Some(&lam_l),
+            lambda_right: Some(&lam_r),
+            theta_left: Some(&th_l),
+            theta_right: Some(&th_r),
+            rho: 5.0,
+        };
+        let mut theta = vec![0.0f32; d];
+        p.solve(1, &ctx, &mut theta);
+
+        let aug = |p: &LinRegProblem, th: &[f32]| -> f64 {
+            let f = p.objective(1, th);
+            let mut v = f;
+            for i in 0..d {
+                v += lam_l[i] as f64 * (th_l[i] as f64 - th[i] as f64);
+                v += lam_r[i] as f64 * (th[i] as f64 - th_r[i] as f64);
+                v += 2.5 * (th_l[i] as f64 - th[i] as f64).powi(2);
+                v += 2.5 * (th[i] as f64 - th_r[i] as f64).powi(2);
+            }
+            v
+        };
+        let base = aug(&p, &theta);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(3);
+        for _ in 0..50 {
+            let mut pert = theta.clone();
+            for v in pert.iter_mut() {
+                *v += (rng.normal() as f32) * 0.01;
+            }
+            assert!(
+                aug(&p, &pert) >= base - 1e-4,
+                "found lower point: {} < {base}",
+                aug(&p, &pert)
+            );
+        }
+    }
+
+    /// End worker (degree 1): eq. (15)/(17) — only one penalty term.
+    #[test]
+    fn end_worker_update_matches_manual() {
+        let (_, mut p) = problem(3, 2.0);
+        let d = p.dims();
+        let lam = vec![0.1f32; 6];
+        let th = vec![0.7f32; 6];
+        let ctx = NeighborCtx {
+            lambda_left: None,
+            lambda_right: Some(&lam),
+            theta_left: None,
+            theta_right: Some(&th),
+            rho: 2.0,
+        };
+        let mut got = vec![0.0f32; d];
+        p.solve(0, &ctx, &mut got);
+        // Manual: (A + ρI) θ = b − λ + ρ θ̂_r
+        let stats = p.stats(0).clone();
+        let mut m = stats.a.clone();
+        m.add_diag(2.0);
+        let rhs: Vec<f64> = (0..d)
+            .map(|i| stats.b[i] - lam[i] as f64 + 2.0 * th[i] as f64)
+            .collect();
+        let want = m.solve_spd(&rhs).unwrap();
+        for i in 0..d {
+            assert!((got[i] as f64 - want[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fleet_and_worker_solvers_agree() {
+        let (_, p) = problem(3, 2.0);
+        let mut fleet = p;
+        let lam = vec![0.1f32; 6];
+        let th = vec![0.7f32; 6];
+        let ctx = NeighborCtx {
+            lambda_left: None,
+            lambda_right: Some(&lam),
+            theta_left: None,
+            theta_right: Some(&th),
+            rho: 2.0,
+        };
+        let mut via_fleet = vec![0.0f32; 6];
+        fleet.solve(0, &ctx, &mut via_fleet);
+        let mut workers = fleet.into_workers();
+        let mut via_worker = vec![0.0f32; 6];
+        workers[0].solve(&ctx, &mut via_worker);
+        assert_eq!(via_fleet, via_worker);
+    }
+
+    #[test]
+    fn global_objective_sums_locals() {
+        let (_, p) = problem(5, 1.0);
+        let thetas: Vec<Vec<f32>> = (0..5).map(|w| vec![w as f32 * 0.1; 6]).collect();
+        let total = p.global_objective(&thetas);
+        let manual: f64 = (0..5).map(|w| p.objective(w, &thetas[w])).sum();
+        assert_eq!(total, manual);
+    }
+}

@@ -1,0 +1,76 @@
+//! Native model math — the Rust mirror of the L2 JAX graphs.
+//!
+//! Two local problems back the paper's two tasks:
+//!
+//! * [`linreg`] — the convex least-squares worker objective with its
+//!   closed-form ADMM primal update (eqs. (14)–(17) specialize to one SPD
+//!   solve per worker per iteration; the `A + cI` Cholesky factor is cached
+//!   across iterations);
+//! * [`mlp`] — the paper's 784-128-64-10 bias-free MLP (exactly
+//!   d = 109,184 parameters) with manual forward/backward and the
+//!   Q-SGADMM local update: 10 Adam steps on the augmented Lagrangian of a
+//!   100-sample minibatch ([`adam`]).
+//!
+//! These implementations are structurally identical to
+//! `python/compile/model.py`; the `artifact_parity` integration tests pin
+//! the two backends together.
+
+pub mod adam;
+pub mod linreg;
+pub mod mlp;
+
+/// Neighbor context for a local primal update — everything worker `n`
+/// knows about its chain neighbors when solving eq. (14)/(16): the dual
+/// variables on its (≤2) links and the neighbors' reconstructed models.
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborCtx<'a> {
+    /// λ_{n−1} (None for the first worker in the chain).
+    pub lambda_left: Option<&'a [f32]>,
+    /// λ_n (None for the last worker).
+    pub lambda_right: Option<&'a [f32]>,
+    /// Left neighbor's model as this worker sees it (θ̂ or θ).
+    pub theta_left: Option<&'a [f32]>,
+    /// Right neighbor's model as this worker sees it.
+    pub theta_right: Option<&'a [f32]>,
+    /// Disagreement penalty ρ.
+    pub rho: f32,
+}
+
+impl<'a> NeighborCtx<'a> {
+    /// Number of attached penalty terms (1 at the chain ends, else 2).
+    pub fn degree(&self) -> usize {
+        usize::from(self.theta_left.is_some()) + usize::from(self.theta_right.is_some())
+    }
+}
+
+/// A single worker's local solver — the unit the *threaded* runtime ships
+/// to a worker thread. [`LocalProblem`] is the whole-fleet view the
+/// deterministic engine drives; the two are bit-compatible for the same
+/// underlying math.
+pub trait WorkerSolver: Send {
+    fn dims(&self) -> usize;
+    /// Same contract as [`LocalProblem::solve`] for this worker.
+    fn solve(&mut self, ctx: &NeighborCtx<'_>, out: &mut [f32]);
+    /// Local objective `f_n(θ)`.
+    fn objective(&self, theta: &[f32]) -> f64;
+}
+
+/// A per-worker local problem the GADMM engine can drive. `worker` indexes
+/// the worker id (data shard), not the chain position.
+pub trait LocalProblem {
+    /// Model dimension d.
+    fn dims(&self) -> usize;
+
+    /// Number of workers.
+    fn workers(&self) -> usize;
+
+    /// The primal update: minimize
+    /// `f_n(θ) + ⟨λ_l, θ̂_l − θ⟩ + ⟨λ_r, θ − θ̂_r⟩ + ρ/2‖θ̂_l − θ‖² + ρ/2‖θ − θ̂_r‖²`
+    /// writing the argmin (exact or approximate) into `out`. `out` enters
+    /// holding the worker's previous model (warm start for iterative
+    /// solvers).
+    fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]);
+
+    /// Local objective `f_n(θ)` (used for the global loss metric).
+    fn objective(&self, worker: usize, theta: &[f32]) -> f64;
+}

@@ -1,0 +1,148 @@
+//! Shannon-capacity energy model (Sec. V-A).
+//!
+//! Each transmission must deliver `bits` within slot `τ`, so the rate is
+//! `R = bits/τ` bit/s. With allocated bandwidth `B` Hz, noise PSD `N₀`
+//! W/Hz, and free-space power-law attenuation `D²`, the required transmit
+//! power is `P = D² · N₀ · B · (2^{R/B} − 1)` and the consumed energy is
+//! `E = P · τ` (the paper's eq. in Sec. V-A-1; the duplicated τ in their
+//! formula is a typo — dimensional analysis requires `E = Pτ`).
+
+/// Physical-layer parameters. Defaults are the paper's linear-regression
+/// setting: 2 MHz system bandwidth, N₀ = 1e-6 W/Hz, τ = 1 ms.
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelParams {
+    /// Total system bandwidth in Hz.
+    pub total_bandwidth_hz: f64,
+    /// Noise power spectral density in W/Hz.
+    pub noise_psd: f64,
+    /// Transmission slot in seconds.
+    pub slot_secs: f64,
+}
+
+impl Default for ChannelParams {
+    fn default() -> Self {
+        ChannelParams {
+            total_bandwidth_hz: 2e6,
+            noise_psd: 1e-6,
+            slot_secs: 1e-3,
+        }
+    }
+}
+
+impl ChannelParams {
+    /// The paper's image-classification setting (Sec. V-B): 40 MHz,
+    /// τ = 100 ms.
+    pub fn dnn_default() -> Self {
+        ChannelParams {
+            total_bandwidth_hz: 40e6,
+            noise_psd: 1e-6,
+            slot_secs: 0.1,
+        }
+    }
+}
+
+/// Per-worker bandwidth allocation (Sec. V-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BandwidthPolicy {
+    /// GADMM-family: head/tail alternation means at most half the workers
+    /// transmit per communication round, so each gets `4B/N` — "the
+    /// available bandwidth to the nth worker … is (4/N) MHz" of 2 MHz.
+    GadmmFamily,
+    /// PS-family (GD/QGD/ADIANA/SGD/QSGD): all N workers compete, each gets
+    /// `2B/N` of the paper's 2 MHz — i.e. `B/N`... the paper states
+    /// "(2/N) MHz", which over a 2 MHz system is `B·(1/N)·?`; we read it as
+    /// total B divided evenly over N simultaneous uploaders: `B/N`,
+    /// matching "(2/N) MHz" at B = 2 MHz exactly.
+    PsFamily,
+}
+
+impl BandwidthPolicy {
+    /// Bandwidth available to a single transmitting worker.
+    pub fn per_worker_hz(&self, params: &ChannelParams, workers: usize) -> f64 {
+        assert!(workers > 0);
+        match self {
+            // (4/N) MHz at B = 2 MHz ⇒ 2B/(N/2) = 4B/N? The paper's text
+            // says each of the N/2 simultaneously-transmitting workers
+            // shares the full band: B/(N/2) = 2B/N = (4/N) MHz at 2 MHz.
+            BandwidthPolicy::GadmmFamily => 2.0 * params.total_bandwidth_hz / workers as f64,
+            BandwidthPolicy::PsFamily => params.total_bandwidth_hz / workers as f64,
+        }
+    }
+}
+
+/// Energy (J) to deliver `bits` over `distance_m` in one slot with
+/// bandwidth `bandwidth_hz`.
+pub fn transmission_energy(
+    params: &ChannelParams,
+    bandwidth_hz: f64,
+    distance_m: f64,
+    bits: u64,
+) -> f64 {
+    if bits == 0 {
+        return 0.0;
+    }
+    let rate = bits as f64 / params.slot_secs; // bits/s
+    let snr_required = (rate / bandwidth_hz).exp2() - 1.0;
+    let power = distance_m * distance_m * params.noise_psd * bandwidth_hz * snr_required;
+    power * params.slot_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> ChannelParams {
+        ChannelParams::default()
+    }
+
+    #[test]
+    fn energy_zero_for_zero_bits() {
+        assert_eq!(transmission_energy(&p(), 1e5, 100.0, 0), 0.0);
+    }
+
+    #[test]
+    fn energy_monotone_in_bits_distance_and_inverse_bandwidth() {
+        let e1 = transmission_energy(&p(), 1e5, 100.0, 1_000);
+        let e2 = transmission_energy(&p(), 1e5, 100.0, 2_000);
+        assert!(e2 > e1, "more bits must cost more");
+        let e3 = transmission_energy(&p(), 1e5, 200.0, 1_000);
+        assert!(e3 > e1, "longer links must cost more");
+        let e4 = transmission_energy(&p(), 2e5, 100.0, 1_000);
+        assert!(e4 < e1, "more bandwidth must cost less (above the lambert point for these rates)");
+    }
+
+    #[test]
+    fn energy_formula_known_value() {
+        // bits = B·τ ⇒ R/B = 1 ⇒ SNR = 1 ⇒ P = D²·N₀·B, E = P·τ.
+        let params = ChannelParams {
+            total_bandwidth_hz: 1e6,
+            noise_psd: 1e-6,
+            slot_secs: 1e-3,
+        };
+        let b = 1e5;
+        let bits = (b * params.slot_secs) as u64; // 100 bits
+        let e = transmission_energy(&params, b, 10.0, bits);
+        let want = 10.0 * 10.0 * 1e-6 * 1e5 * 1.0 * 1e-3;
+        assert!((e - want).abs() < 1e-12, "e={e} want={want}");
+    }
+
+    #[test]
+    fn exponential_blowup_when_band_starved() {
+        // Quantization's whole point: at fixed B, halving bits reduces the
+        // required SNR exponentially, not linearly.
+        let b = 1e4;
+        let e_full = transmission_energy(&p(), b, 100.0, 32 * 6);
+        let e_quant = transmission_energy(&p(), b, 100.0, 2 * 6 + 64);
+        assert!(e_full / e_quant > 2.0, "ratio={}", e_full / e_quant);
+    }
+
+    #[test]
+    fn bandwidth_policies() {
+        let params = p();
+        let g = BandwidthPolicy::GadmmFamily.per_worker_hz(&params, 50);
+        let s = BandwidthPolicy::PsFamily.per_worker_hz(&params, 50);
+        // Paper: (4/50) MHz vs (2/50) MHz at 2 MHz system bandwidth.
+        assert!((g - 4e6 / 50.0).abs() < 1e-6, "g={g}");
+        assert!((s - 2e6 / 50.0).abs() < 1e-6, "s={s}");
+    }
+}

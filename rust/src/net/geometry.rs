@@ -1,0 +1,93 @@
+//! Worker placement and distances.
+
+use crate::util::rng::Rng;
+
+/// A position in the deployment area (meters).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Point {
+    pub fn distance(&self, other: &Point) -> f64 {
+        let dx = self.x - other.x;
+        let dy = self.y - other.y;
+        (dx * dx + dy * dy).sqrt()
+    }
+}
+
+/// Square deployment area with uniform random drops. Paper: 250×250 m².
+#[derive(Clone, Copy, Debug)]
+pub struct Area {
+    pub side: f64,
+}
+
+impl Default for Area {
+    fn default() -> Self {
+        Area { side: 250.0 }
+    }
+}
+
+impl Area {
+    /// Drop `n` workers uniformly at random.
+    pub fn drop_workers(&self, n: usize, rng: &mut Rng) -> Vec<Point> {
+        (0..n)
+            .map(|_| Point {
+                x: rng.range(0.0, self.side),
+                y: rng.range(0.0, self.side),
+            })
+            .collect()
+    }
+}
+
+/// Index of the worker with minimum sum-distance to all others — the
+/// paper's parameter-server selection rule ("we choose the worker with the
+/// minimum sum distance to all workers as the PS").
+pub fn min_sum_distance_index(points: &[Point]) -> usize {
+    assert!(!points.is_empty());
+    let mut best = (f64::INFINITY, 0usize);
+    for (i, p) in points.iter().enumerate() {
+        let s: f64 = points.iter().map(|q| p.distance(q)).sum();
+        if s < best.0 {
+            best = (s, i);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_known() {
+        let a = Point { x: 0.0, y: 0.0 };
+        let b = Point { x: 3.0, y: 4.0 };
+        assert_eq!(a.distance(&b), 5.0);
+        assert_eq!(a.distance(&a), 0.0);
+    }
+
+    #[test]
+    fn drops_stay_in_area() {
+        let mut rng = Rng::seed_from_u64(1);
+        let area = Area::default();
+        for p in area.drop_workers(500, &mut rng) {
+            assert!((0.0..=250.0).contains(&p.x));
+            assert!((0.0..=250.0).contains(&p.y));
+        }
+    }
+
+    #[test]
+    fn ps_selection_picks_center() {
+        // Cross layout: the center point minimizes sum distance.
+        let pts = vec![
+            Point { x: 50.0, y: 50.0 },
+            Point { x: 0.0, y: 50.0 },
+            Point { x: 100.0, y: 50.0 },
+            Point { x: 50.0, y: 0.0 },
+            Point { x: 50.0, y: 100.0 },
+        ];
+        assert_eq!(min_sum_distance_index(&pts), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Wireless system simulator — the paper's evaluation testbed (Sec. V-A).
+//!
+//! Reimplements the authors' own simulation model: workers dropped
+//! uniformly in a 250×250 m² grid; free-space propagation; each message
+//! must be delivered within a transmission slot τ, so the transmitter picks
+//! the power that achieves rate `R = bits/τ` over its allocated bandwidth
+//! via the Shannon capacity, giving `P = D²·N₀·B·(2^{R/B} − 1)` and energy
+//! `E = P·τ`.
+//!
+//! Bandwidth allocation follows Sec. V-A: with total system bandwidth `B`,
+//! GADMM-family workers get `2B/(N/2) = 4B/N` (only half the workers — one
+//! group — transmit in any communication round) while PS-family workers get
+//! `B/N` wait — the paper says `2/N` MHz out of 2 MHz total, i.e. `B/N`;
+//! see [`channel::BandwidthPolicy`].
+
+pub mod channel;
+pub mod geometry;
+pub mod topology;

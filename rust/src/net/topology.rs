@@ -1,0 +1,281 @@
+//! Chain topology construction.
+//!
+//! GADMM/Q-GADMM operate on a connected chain: worker `n` talks to workers
+//! `n−1` and `n+1` only, heads at odd positions, tails at even (1-indexed
+//! as in the paper; 0-indexed here: heads at even indices). For physically
+//! dropped workers we build the chain with the heuristic referenced in
+//! Sec. V-A ("we implement the heuristic described in [23] to find the
+//! neighbors of each worker"): a greedy nearest-neighbor chain, then a
+//! 2-opt pass that removes crossing links — minimizing the link distances
+//! the energy model charges.
+
+use crate::net::geometry::Point;
+
+/// A chain over worker ids: `order[i]` is the worker occupying chain
+/// position `i`. Heads are even positions, tails odd positions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    order: Vec<usize>,
+}
+
+impl Topology {
+    /// Identity chain 0–1–2–…–(n−1), used when no geometry is in play.
+    pub fn line(n: usize) -> Topology {
+        assert!(n >= 2, "a chain needs at least two workers");
+        Topology {
+            order: (0..n).collect(),
+        }
+    }
+
+    /// Build a chain over dropped workers: greedy nearest-neighbor from the
+    /// point with minimal x (deterministic anchor), then 2-opt until no
+    /// improving swap exists (bounded passes).
+    pub fn nearest_neighbor_chain(points: &[Point]) -> Topology {
+        let n = points.len();
+        assert!(n >= 2);
+        let start = (0..n)
+            .min_by(|&a, &b| points[a].x.partial_cmp(&points[b].x).unwrap())
+            .unwrap();
+        let mut used = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        used[start] = true;
+        order.push(start);
+        for _ in 1..n {
+            let last = *order.last().unwrap();
+            let next = (0..n)
+                .filter(|&i| !used[i])
+                .min_by(|&a, &b| {
+                    points[last]
+                        .distance(&points[a])
+                        .partial_cmp(&points[last].distance(&points[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            used[next] = true;
+            order.push(next);
+        }
+        let mut topo = Topology { order };
+        topo.two_opt(points, 20);
+        topo
+    }
+
+    /// 2-opt improvement: reverse segments while that shortens total chain
+    /// length. `max_passes` bounds the work (each pass is O(n²)).
+    fn two_opt(&mut self, points: &[Point], max_passes: usize) {
+        let n = self.order.len();
+        for _ in 0..max_passes {
+            let mut improved = false;
+            for i in 0..n - 1 {
+                for j in i + 1..n {
+                    // Reversing order[i..=j] changes only the links
+                    // (i−1, i) and (j, j+1).
+                    let before = self.link_cost(points, i.wrapping_sub(1), i)
+                        + self.link_cost(points, j, j + 1);
+                    let after = self.link_cost_pair(points, i.wrapping_sub(1), j)
+                        + self.link_cost_pair(points, i, j + 1);
+                    if after + 1e-12 < before {
+                        self.order[i..=j].reverse();
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    fn link_cost(&self, points: &[Point], a: usize, b: usize) -> f64 {
+        self.link_cost_pair(points, a, b)
+    }
+
+    /// Distance between chain positions `a` and `b`, treating out-of-range
+    /// positions (the virtual ends) as zero-cost.
+    fn link_cost_pair(&self, points: &[Point], a: usize, b: usize) -> f64 {
+        if a >= self.order.len() || b >= self.order.len() {
+            return 0.0;
+        }
+        points[self.order[a]].distance(&points[self.order[b]])
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Worker id at chain position `pos`.
+    pub fn worker_at(&self, pos: usize) -> usize {
+        self.order[pos]
+    }
+
+    /// Chain position of worker `id`.
+    pub fn position_of(&self, id: usize) -> usize {
+        self.order
+            .iter()
+            .position(|&w| w == id)
+            .expect("worker not in topology")
+    }
+
+    /// Is chain position `pos` a head? (positions 0, 2, 4, … — the paper's
+    /// workers 1, 3, 5, …).
+    pub fn is_head_position(pos: usize) -> bool {
+        pos % 2 == 0
+    }
+
+    /// Neighbor chain positions of position `pos` (1 or 2 entries).
+    pub fn neighbor_positions(&self, pos: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(2);
+        if pos > 0 {
+            out.push(pos - 1);
+        }
+        if pos + 1 < self.order.len() {
+            out.push(pos + 1);
+        }
+        out
+    }
+
+    /// Total chain length under a geometry (sum of link distances).
+    pub fn total_length(&self, points: &[Point]) -> f64 {
+        self.order
+            .windows(2)
+            .map(|w| points[w[0]].distance(&points[w[1]]))
+            .sum()
+    }
+
+    /// Max per-worker broadcast distance: for each position, the farthest
+    /// of its (≤2) neighbors — the distance the energy model charges for a
+    /// broadcast transmission.
+    pub fn broadcast_distance(&self, points: &[Point], pos: usize) -> f64 {
+        self.neighbor_positions(pos)
+            .into_iter()
+            .map(|q| points[self.order[pos]].distance(&points[self.order[q]]))
+            .fold(0.0, f64::max)
+    }
+
+    /// Validity: the order must be a permutation of 0..n.
+    pub fn validate(&self) -> bool {
+        let mut seen = vec![false; self.order.len()];
+        for &w in &self.order {
+            if w >= seen.len() || seen[w] {
+                return false;
+            }
+            seen[w] = true;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::geometry::Area;
+    use crate::testing::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn line_topology_basics() {
+        let t = Topology::line(5);
+        assert_eq!(t.len(), 5);
+        assert!(t.validate());
+        assert_eq!(t.neighbor_positions(0), vec![1]);
+        assert_eq!(t.neighbor_positions(2), vec![1, 3]);
+        assert_eq!(t.neighbor_positions(4), vec![3]);
+        assert!(Topology::is_head_position(0));
+        assert!(!Topology::is_head_position(1));
+    }
+
+    #[test]
+    fn heads_and_tails_never_adjacent_within_group() {
+        // Adjacent chain positions always alternate head/tail — the
+        // alternating-update property GADMM requires.
+        let t = Topology::line(9);
+        for pos in 0..t.len() - 1 {
+            assert_ne!(
+                Topology::is_head_position(pos),
+                Topology::is_head_position(pos + 1)
+            );
+        }
+    }
+
+    #[test]
+    fn nn_chain_is_hamiltonian_permutation() {
+        property("nn chain valid", 30, |rng: &mut Rng| {
+            let n = 2 + rng.below(60);
+            let pts = Area::default().drop_workers(n, rng);
+            let t = Topology::nearest_neighbor_chain(&pts);
+            assert_eq!(t.len(), n);
+            assert!(t.validate());
+        });
+    }
+
+    #[test]
+    fn two_opt_no_longer_than_greedy() {
+        let mut rng = Rng::seed_from_u64(77);
+        let pts = Area::default().drop_workers(40, &mut rng);
+        let improved = Topology::nearest_neighbor_chain(&pts);
+        // Raw greedy (without 2-opt) for comparison: rebuild manually.
+        let n = pts.len();
+        let start = (0..n)
+            .min_by(|&a, &b| pts[a].x.partial_cmp(&pts[b].x).unwrap())
+            .unwrap();
+        let mut used = vec![false; n];
+        let mut order = vec![start];
+        used[start] = true;
+        for _ in 1..n {
+            let last = *order.last().unwrap();
+            let next = (0..n)
+                .filter(|&i| !used[i])
+                .min_by(|&a, &b| {
+                    pts[last]
+                        .distance(&pts[a])
+                        .partial_cmp(&pts[last].distance(&pts[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            used[next] = true;
+            order.push(next);
+        }
+        let greedy = Topology { order };
+        assert!(improved.total_length(&pts) <= greedy.total_length(&pts) + 1e-9);
+    }
+
+    #[test]
+    fn chain_on_collinear_points_is_sorted() {
+        let pts: Vec<Point> = [3.0, 0.0, 4.0, 1.0, 2.0]
+            .iter()
+            .map(|&x| Point { x, y: 0.0 })
+            .collect();
+        let t = Topology::nearest_neighbor_chain(&pts);
+        let xs: Vec<f64> = (0..5).map(|p| pts[t.worker_at(p)].x).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rev: Vec<f64> = sorted.iter().rev().copied().collect();
+        assert!(xs == sorted || xs == rev, "{xs:?}");
+    }
+
+    #[test]
+    fn broadcast_distance_is_max_neighbor() {
+        let pts = vec![
+            Point { x: 0.0, y: 0.0 },
+            Point { x: 1.0, y: 0.0 },
+            Point { x: 4.0, y: 0.0 },
+        ];
+        let t = Topology::line(3);
+        assert_eq!(t.broadcast_distance(&pts, 0), 1.0);
+        assert_eq!(t.broadcast_distance(&pts, 1), 3.0);
+        assert_eq!(t.broadcast_distance(&pts, 2), 3.0);
+    }
+
+    #[test]
+    fn position_of_inverts_worker_at() {
+        let mut rng = Rng::seed_from_u64(5);
+        let pts = Area::default().drop_workers(12, &mut rng);
+        let t = Topology::nearest_neighbor_chain(&pts);
+        for pos in 0..t.len() {
+            assert_eq!(t.position_of(t.worker_at(pos)), pos);
+        }
+    }
+}

@@ -1,0 +1,483 @@
+//! Stochastic quantization — the compression core of Q-GADMM (Sec. III-A).
+//!
+//! Every transmission in Q-GADMM carries the *difference* between the
+//! current model `θ_n^k` and the previously-quantized model `θ̂_n^{k-1}`,
+//! quantized with an adaptive range and unbiased stochastic rounding:
+//!
+//! * radius `R_n^k = ‖θ_n^k − θ̂_n^{k-1}‖_∞` (Fig. 1(b));
+//! * step `Δ_n^k = 2 R_n^k / (2^{b_n^k} − 1)` over `2^b − 1` levels;
+//! * coordinate `c_i = (θ_i − θ̂_i + R)/Δ` (eq. (6));
+//! * stochastic rounding `q_i = ⌈c_i⌉ w.p. p_i, ⌊c_i⌋ w.p. 1−p_i` with
+//!   `p_i = c_i − ⌊c_i⌋` (eqs. (7)–(10)) — unbiased by construction;
+//! * bit-growth rule `b_n^k ≥ ⌈log2(1 + (2^{b_n^{k-1}}−1) R_n^k/R_n^{k-1})⌉`
+//!   (eq. (11)) guaranteeing a non-increasing step size Δ, the condition
+//!   Theorem 2 needs for convergence;
+//! * receiver reconstruction `θ̂_n^k = θ̂_n^{k-1} + Δ q − R·1` (eq. (13)).
+//!
+//! The wire payload is exactly `b·d + b_R + b_b` bits (`b_R = b_b = 32`):
+//! the packed levels plus the f32 radius and the bit-width. [`bitpack`]
+//! implements the bit-exact codec.
+//!
+//! All arithmetic is f32 and expression-identical to the Pallas kernel
+//! (`python/compile/kernels/squant.py`); fed the same uniforms, the two
+//! backends produce identical integer levels (verified by the
+//! `artifact_parity` integration test).
+
+pub mod bitpack;
+
+use crate::linalg::vecops;
+use crate::util::rng::Rng;
+
+/// Sent payload of one quantized model update.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedMsg {
+    /// Bit-width used for every dimension (`b_n^k`).
+    pub bits: u8,
+    /// Quantization radius `R_n^k`.
+    pub radius: f32,
+    /// Integer levels `q_i ∈ [0, 2^bits − 1]`, one per dimension.
+    pub levels: Vec<u32>,
+}
+
+impl QuantizedMsg {
+    /// Exact payload size on the wire in bits: `b·d + b_R + b_b`
+    /// (Sec. III-A). `b_R = b_b = 32` following the paper.
+    pub fn payload_bits(&self) -> u64 {
+        self.bits as u64 * self.levels.len() as u64 + 32 + 32
+    }
+
+    /// Serialize to the packed wire format (see [`bitpack`]).
+    pub fn encode(&self) -> Vec<u8> {
+        bitpack::encode_msg(self)
+    }
+
+    /// Parse the packed wire format.
+    pub fn decode(bytes: &[u8], dims: usize) -> Result<QuantizedMsg, bitpack::CodecError> {
+        bitpack::decode_msg(bytes, dims)
+    }
+}
+
+/// Quantizer bit-width policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BitPolicy {
+    /// Fixed `b` for all `n, k` — the setting used in every experiment of
+    /// Sec. V ("the quantizer resolution … remains constant over iterations
+    /// and across workers").
+    Fixed(u8),
+    /// Adaptive per eq. (11): the minimum `b_n^k` that keeps Δ
+    /// non-increasing, floored at `min_bits` and capped at `max_bits`.
+    Adaptive { min_bits: u8, max_bits: u8 },
+}
+
+/// Sender-side stochastic quantizer state for one worker.
+///
+/// Holds `θ̂_n^{k-1}` (the previously quantized model), the previous radius
+/// and bit-width (for the eq. (11) rule), and scratch for allocation-free
+/// quantization on the hot path.
+#[derive(Clone, Debug)]
+pub struct StochasticQuantizer {
+    policy: BitPolicy,
+    theta_hat: Vec<f32>,
+    prev_radius: f32,
+    prev_bits: u8,
+    steps: u64,
+}
+
+impl StochasticQuantizer {
+    /// `dims`-dimensional quantizer with `θ̂^{(0)} = 0` (the paper
+    /// initializes all models to zero, so sender and receiver mirrors start
+    /// in agreement).
+    pub fn new(dims: usize, policy: BitPolicy) -> Self {
+        let init_bits = match policy {
+            BitPolicy::Fixed(b) => b,
+            BitPolicy::Adaptive { min_bits, .. } => min_bits,
+        };
+        assert!(init_bits >= 1 && init_bits <= 16, "bits must be in 1..=16");
+        StochasticQuantizer {
+            policy,
+            theta_hat: vec![0.0; dims],
+            prev_radius: 0.0,
+            prev_bits: init_bits,
+            steps: 0,
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.theta_hat.len()
+    }
+
+    /// Re-anchor `θ̂` to a known shared vector (used when all workers start
+    /// from an identical non-zero initialization that neighbors know
+    /// without communication, e.g. a seed-shared DNN init).
+    pub fn reset_to(&mut self, theta: &[f32]) {
+        self.theta_hat.copy_from_slice(theta);
+        self.prev_radius = 0.0;
+        self.steps = 0;
+    }
+
+    /// The current `θ̂_n` (what every neighbor believes this worker's model
+    /// to be).
+    pub fn theta_hat(&self) -> &[f32] {
+        &self.theta_hat
+    }
+
+    /// Bit-width that eq. (11) mandates for radius `r` given the previous
+    /// `(bits, radius)` state.
+    pub fn bits_rule(prev_bits: u8, prev_radius: f32, radius: f32) -> u8 {
+        if prev_radius <= 0.0 || radius <= 0.0 {
+            return prev_bits;
+        }
+        let levels_prev = (1u64 << prev_bits) as f64 - 1.0;
+        let need = (1.0 + levels_prev * (radius as f64 / prev_radius as f64)).log2();
+        need.ceil().max(1.0) as u8
+    }
+
+    /// Quantize `θ_n^k` against the stored `θ̂_n^{k-1}`, updating the stored
+    /// mirror, and return the message to broadcast. Draws one uniform per
+    /// dimension from `rng`, inline in the elementwise loop (one fused pass
+    /// instead of a fill + a quantize pass — the 109k-dim uplink is
+    /// bandwidth-bound; see EXPERIMENTS.md §Perf). The draw order matches
+    /// [`Rng::fill_uniform_f32`], so results are identical to
+    /// [`Self::quantize_with_uniforms`] fed a pre-filled buffer.
+    pub fn quantize(&mut self, theta: &[f32], rng: &mut Rng) -> QuantizedMsg {
+        let d = self.theta_hat.len();
+        assert_eq!(theta.len(), d, "dimension mismatch");
+
+        let radius = vecops::linf_diff_f32(theta, &self.theta_hat);
+        let bits = match self.policy {
+            BitPolicy::Fixed(b) => b,
+            BitPolicy::Adaptive { min_bits, max_bits } => {
+                if self.steps == 0 {
+                    min_bits
+                } else {
+                    Self::bits_rule(self.prev_bits, self.prev_radius, radius)
+                        .clamp(min_bits, max_bits)
+                }
+            }
+        };
+
+        let mut levels = vec![0u32; d];
+        if radius > 0.0 {
+            let num_levels = ((1u32 << bits) - 1) as f32;
+            let delta = 2.0 * radius / num_levels;
+            for i in 0..d {
+                let c = (theta[i] - self.theta_hat[i] + radius) / delta;
+                let floor = c.floor();
+                let p = c - floor;
+                let up = (rng.uniform_f32() < p) as u32;
+                let q = (floor as i64 + up as i64).clamp(0, num_levels as i64) as u32;
+                levels[i] = q;
+                self.theta_hat[i] = self.theta_hat[i] + delta * q as f32 - radius;
+            }
+        } else {
+            // Consume d uniforms anyway to keep the RNG stream aligned
+            // with the buffer-based path.
+            for _ in 0..d {
+                let _ = rng.uniform_f32();
+            }
+        }
+
+        self.prev_radius = radius;
+        self.prev_bits = bits;
+        self.steps += 1;
+        QuantizedMsg {
+            bits,
+            radius,
+            levels,
+        }
+    }
+
+    /// Deterministic core used by [`Self::quantize`] and by the
+    /// XLA-parity tests (which feed the same uniforms to the Pallas
+    /// kernel). `uniforms[i] ∈ [0, 1)` decides the stochastic rounding of
+    /// dimension `i`.
+    pub fn quantize_with_uniforms(&mut self, theta: &[f32], uniforms: &[f32]) -> QuantizedMsg {
+        let d = self.theta_hat.len();
+        assert_eq!(theta.len(), d);
+        assert_eq!(uniforms.len(), d);
+
+        let radius = vecops::linf_diff_f32(theta, &self.theta_hat);
+        let bits = match self.policy {
+            BitPolicy::Fixed(b) => b,
+            BitPolicy::Adaptive { min_bits, max_bits } => {
+                if self.steps == 0 {
+                    min_bits
+                } else {
+                    Self::bits_rule(self.prev_bits, self.prev_radius, radius)
+                        .clamp(min_bits, max_bits)
+                }
+            }
+        };
+
+        let mut levels = vec![0u32; d];
+        if radius > 0.0 {
+            let num_levels = ((1u32 << bits) - 1) as f32;
+            let delta = 2.0 * radius / num_levels;
+            for i in 0..d {
+                // eq. (6): c_i = (θ_i − θ̂_i + R)/Δ  ∈ [0, 2^b − 1]
+                let c = (theta[i] - self.theta_hat[i] + radius) / delta;
+                let floor = c.floor();
+                // eq. (10): round up w.p. frac(c)
+                let p = c - floor;
+                let up = (uniforms[i] < p) as u32;
+                let q = (floor as i64 + up as i64).clamp(0, num_levels as i64) as u32;
+                levels[i] = q;
+                // eq. (13): sender updates its own mirror exactly like the
+                // receiver will, keeping both in bit-agreement.
+                self.theta_hat[i] = self.theta_hat[i] + delta * q as f32 - radius;
+            }
+        }
+        // radius == 0 ⇒ θ == θ̂ exactly; send all-zero levels with R = 0 and
+        // leave the mirror unchanged (receiver reconstruction is a no-op).
+
+        self.prev_radius = radius;
+        self.prev_bits = bits;
+        self.steps += 1;
+        QuantizedMsg {
+            bits,
+            radius,
+            levels,
+        }
+    }
+
+    /// Quantization step size `Δ_n^k` of the most recent message.
+    pub fn last_delta(&self) -> f32 {
+        if self.prev_radius <= 0.0 {
+            0.0
+        } else {
+            2.0 * self.prev_radius / (((1u32 << self.prev_bits) - 1) as f32)
+        }
+    }
+}
+
+/// Receiver-side mirror of a neighbor's quantized model: applies eq. (13)
+/// to reconstruct `θ̂` from successive messages. Starts at zero, in
+/// agreement with the sender's initial state.
+#[derive(Clone, Debug)]
+pub struct Mirror {
+    theta_hat: Vec<f32>,
+}
+
+impl Mirror {
+    pub fn new(dims: usize) -> Self {
+        Mirror {
+            theta_hat: vec![0.0; dims],
+        }
+    }
+
+    pub fn theta_hat(&self) -> &[f32] {
+        &self.theta_hat
+    }
+
+    /// Re-anchor to a known shared initialization (see
+    /// [`StochasticQuantizer::reset_to`]).
+    pub fn reset_to(&mut self, theta: &[f32]) {
+        self.theta_hat.copy_from_slice(theta);
+    }
+
+    /// Apply one received message: `θ̂ ← θ̂ + Δ q − R·1` (eq. (13)).
+    pub fn apply(&mut self, msg: &QuantizedMsg) {
+        assert_eq!(msg.levels.len(), self.theta_hat.len());
+        if msg.radius <= 0.0 {
+            return;
+        }
+        let num_levels = ((1u32 << msg.bits) - 1) as f32;
+        let delta = 2.0 * msg.radius / num_levels;
+        for (t, &q) in self.theta_hat.iter_mut().zip(&msg.levels) {
+            *t = *t + delta * q as f32 - msg.radius;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn zero_difference_sends_zero_radius() {
+        let mut q = StochasticQuantizer::new(4, BitPolicy::Fixed(2));
+        let msg = q.quantize(&[0.0; 4], &mut rt(1));
+        assert_eq!(msg.radius, 0.0);
+        assert_eq!(q.theta_hat(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn mirror_tracks_sender_exactly() {
+        let d = 32;
+        let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let mut m = Mirror::new(d);
+        let mut rng = rt(7);
+        let mut theta = vec![0.0f32; d];
+        for step in 0..50 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.37).sin();
+            }
+            let msg = q.quantize(&theta, &mut rng);
+            m.apply(&msg);
+            assert_eq!(m.theta_hat(), q.theta_hat(), "diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_delta() {
+        // |θ̂_i − θ_i| ≤ Δ for every dimension (stochastic rounding moves at
+        // most one level).
+        let d = 64;
+        let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(3));
+        let mut rng = rt(3);
+        let mut theta = vec![0.0f32; d];
+        for step in 1..20 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = (i as f32 - 30.0) * 0.01 * step as f32;
+            }
+            let _ = q.quantize(&theta, &mut rng);
+            let delta = q.last_delta();
+            for i in 0..d {
+                assert!(
+                    (q.theta_hat()[i] - theta[i]).abs() <= delta * 1.0001 + 1e-7,
+                    "dim {i}: err {} > Δ {delta}",
+                    (q.theta_hat()[i] - theta[i]).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_statistical() {
+        // E[θ̂ − θ] = 0: quantize the same vector from the same prior state
+        // many times with fresh randomness; the mean error must vanish.
+        let d = 8;
+        let theta: Vec<f32> = (0..d).map(|i| 0.1 * i as f32 - 0.35).collect();
+        let trials = 20_000;
+        let mut rng = rt(11);
+        let mut mean_err = vec![0.0f64; d];
+        for _ in 0..trials {
+            let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+            let _ = q.quantize(&theta, &mut rng);
+            for i in 0..d {
+                mean_err[i] += (q.theta_hat()[i] - theta[i]) as f64;
+            }
+        }
+        // Δ = 2·0.35/3 ≈ 0.2333; SEM per dim ≈ Δ/2/sqrt(trials) ≈ 8e-4.
+        for (i, e) in mean_err.iter().enumerate() {
+            let m = e / trials as f64;
+            assert!(m.abs() < 5e-3, "dim {i} biased: {m}");
+        }
+    }
+
+    #[test]
+    fn variance_bound_theorem() {
+        // E‖ε‖² ≤ d Δ²/4 (Sec. III-A).
+        let d = 16;
+        let theta: Vec<f32> = (0..d).map(|i| (i as f32 * 1.3).cos()).collect();
+        let trials = 5_000;
+        let mut rng = rt(13);
+        let mut sum_sq = 0.0f64;
+        let mut delta = 0.0f32;
+        for _ in 0..trials {
+            let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+            let _ = q.quantize(&theta, &mut rng);
+            delta = q.last_delta();
+            sum_sq += vecops::dist_sq_f32(q.theta_hat(), &theta);
+        }
+        let mean_sq = sum_sq / trials as f64;
+        let bound = d as f64 * (delta as f64) * (delta as f64) / 4.0;
+        assert!(
+            mean_sq <= bound * 1.05,
+            "E‖ε‖² = {mean_sq} > bound {bound}"
+        );
+    }
+
+    #[test]
+    fn bits_rule_keeps_delta_nonincreasing() {
+        // For random (R_prev, R) pairs, the bit-width from eq. (11) must
+        // give Δ_k ≤ Δ_{k-1}.
+        let mut rng = rt(17);
+        for _ in 0..1000 {
+            let prev_bits = 1 + (rng.below(8) as u8);
+            let r_prev = rng.range(1e-4, 10.0) as f32;
+            let r = rng.range(1e-4, 10.0) as f32;
+            let b = StochasticQuantizer::bits_rule(prev_bits, r_prev, r);
+            let delta_prev = 2.0 * r_prev / (((1u64 << prev_bits) - 1) as f32);
+            let delta = 2.0 * r / (((1u64 << b.min(32)) - 1) as f32);
+            assert!(
+                delta <= delta_prev * 1.0001,
+                "b={b} prev_bits={prev_bits} r_prev={r_prev} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_respects_caps() {
+        let mut q = StochasticQuantizer::new(
+            4,
+            BitPolicy::Adaptive {
+                min_bits: 2,
+                max_bits: 8,
+            },
+        );
+        let mut rng = rt(19);
+        // Large jump after a tiny one forces the rule upward; cap applies.
+        let _ = q.quantize(&[1e-3, 0.0, 0.0, 0.0], &mut rng);
+        let msg = q.quantize(&[100.0, -100.0, 50.0, 0.0], &mut rng);
+        assert!(msg.bits >= 2 && msg.bits <= 8);
+    }
+
+    #[test]
+    fn payload_bits_formula() {
+        let msg = QuantizedMsg {
+            bits: 2,
+            radius: 1.0,
+            levels: vec![0; 6],
+        };
+        assert_eq!(msg.payload_bits(), 2 * 6 + 64);
+        let msg8 = QuantizedMsg {
+            bits: 8,
+            radius: 1.0,
+            levels: vec![0; 109_184],
+        };
+        assert_eq!(msg8.payload_bits(), 8 * 109_184 + 64);
+    }
+
+    #[test]
+    fn fused_quantize_matches_buffered_path() {
+        // quantize() draws uniforms inline; it must produce exactly the
+        // same message as quantize_with_uniforms() fed a pre-filled
+        // buffer from an identical RNG.
+        let d = 300;
+        let mut rng_a = rt(23);
+        let mut rng_b = rt(23);
+        let mut qa = StochasticQuantizer::new(d, BitPolicy::Fixed(3));
+        let mut qb = StochasticQuantizer::new(d, BitPolicy::Fixed(3));
+        let mut theta = vec![0.0f32; d];
+        for step in 0..10 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.1).sin();
+            }
+            let ma = qa.quantize(&theta, &mut rng_a);
+            let mut u = vec![0.0f32; d];
+            rng_b.fill_uniform_f32(&mut u);
+            let mb = qb.quantize_with_uniforms(&theta, &u);
+            assert_eq!(ma, mb, "step {step}");
+            assert_eq!(qa.theta_hat(), qb.theta_hat());
+        }
+    }
+
+    #[test]
+    fn exact_grid_points_quantize_exactly() {
+        // If θ − θ̂ lands exactly on a grid level, p = 0 and the result is
+        // deterministic regardless of the uniform draw.
+        let d = 3;
+        let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        // R = 3, Δ = 2·3/3 = 2 ⇒ representable offsets {−3, −1, +1, +3}.
+        let theta = [3.0f32, -3.0, 1.0];
+        let msg = q.quantize_with_uniforms(&theta, &[0.999, 0.999, 0.999]);
+        assert_eq!(msg.radius, 3.0);
+        assert_eq!(msg.levels, vec![3, 0, 2]);
+        assert_eq!(q.theta_hat(), &[3.0, -3.0, 1.0]);
+    }
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them
+//! from the L3 hot path through the `xla` crate's PJRT CPU client.
+//!
+//! Python is *never* on this path — the manifest + HLO text are the whole
+//! interface. Artifact shapes are validated against the manifest at load
+//! time and call sites are shape-checked on every invocation.
+
+pub mod solver;
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Runtime failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("artifact {0:?} not found (run `make artifacts`)")]
+    NotFound(String),
+    #[error("artifact {name:?}: input {index} has {got} elements, want shape {want:?}")]
+    BadInput {
+        name: String,
+        index: usize,
+        got: usize,
+        want: Vec<usize>,
+    },
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub constants: HashMap<String, f64>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, RuntimeError> {
+        let doc = Json::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let format = doc.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if format != "hlo-text-v1" {
+            return Err(RuntimeError::Manifest(format!(
+                "unsupported manifest format {format:?}"
+            )));
+        }
+        let arts = doc
+            .get("artifacts")
+            .ok_or_else(|| RuntimeError::Manifest("missing 'artifacts'".into()))?;
+        let Json::Obj(map) = arts else {
+            return Err(RuntimeError::Manifest("'artifacts' not an object".into()));
+        };
+        let mut artifacts = HashMap::new();
+        for (name, meta) in map {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>, RuntimeError> {
+                meta.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| {
+                                RuntimeError::Manifest(format!("{name}: bad shape in {key}"))
+                            })?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize().ok_or_else(|| {
+                                    RuntimeError::Manifest(format!("{name}: bad dim in {key}"))
+                                })
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing file")))?;
+            let mut constants = HashMap::new();
+            if let Some(Json::Obj(cs)) = meta.get("constants") {
+                for (k, v) in cs {
+                    if let Some(x) = v.as_f64() {
+                        constants.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: shapes("inputs")?,
+                    outputs: shapes("outputs")?,
+                    constants,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with f32 buffers in manifest input order. Returns the
+    /// outputs as flat f32 vectors (manifest output order).
+    pub fn call(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(RuntimeError::BadInput {
+                name: self.meta.name.clone(),
+                index: inputs.len(),
+                got: inputs.len(),
+                want: vec![self.meta.inputs.len()],
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(RuntimeError::BadInput {
+                    name: self.meta.name.clone(),
+                    index: i,
+                    got: buf.len(),
+                    want: shape.clone(),
+                });
+            }
+            let lit = if shape.is_empty() {
+                xla::Literal::scalar(buf[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact registry: PJRT client + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: std::cell::RefCell<HashMap<String, std::rc::Rc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client. Executables are
+    /// compiled on first use (compile time for the MLP local step is
+    /// nontrivial; figure runs that only need linreg shouldn't pay it).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir.as_ref())?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            compiled: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if necessary) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<std::rc::Rc<Artifact>, RuntimeError> {
+        if let Some(a) = self.compiled.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::NotFound(name.to_string()))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let artifact = std::rc::Rc::new(Artifact { meta, exe });
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Default artifact directory: `$QGADMM_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("QGADMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if a manifest exists at the default location.
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "format": "hlo-text-v1",
+            "artifacts": {
+                "squant_d6_b2": {
+                    "file": "squant_d6_b2.hlo.txt",
+                    "inputs": [[6], [6], [6]],
+                    "outputs": [[6], [6], []],
+                    "constants": {"bits": 2, "dims": 6}
+                }
+            }
+        }"#;
+        let m = Manifest::parse(text, Path::new("/tmp/x")).unwrap();
+        let a = &m.artifacts["squant_d6_b2"];
+        assert_eq!(a.inputs, vec![vec![6], vec![6], vec![6]]);
+        assert_eq!(a.outputs[2], Vec::<usize>::new());
+        assert_eq!(a.constants["bits"], 2.0);
+        assert_eq!(a.file, Path::new("/tmp/x/squant_d6_b2.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        let text = r#"{"format": "v999", "artifacts": {}}"#;
+        assert!(matches!(
+            Manifest::parse(text, Path::new(".")),
+            Err(RuntimeError::Manifest(_))
+        ));
+    }
+}

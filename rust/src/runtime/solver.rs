@@ -1,0 +1,260 @@
+//! XLA-backed local problems: the same [`LocalProblem`] contract as the
+//! native backend, but every primal update executes the AOT artifact
+//! through PJRT — the flagship three-layer path (L3 Rust engine → L2 jax
+//! graph → L1 Pallas kernels, compiled once at build time).
+//!
+//! Objective evaluation (metrics only, not on the request path) stays
+//! native. The quantizer runs natively inside the engine on both backends
+//! — it is a sub-microsecond elementwise pass, and the `squant_*`
+//! artifacts exist so the parity suite can pin the native implementation
+//! to the Pallas kernel bit-for-bit (same uniforms ⇒ same levels).
+
+use super::{Artifact, Runtime, RuntimeError};
+use crate::data::images::{ImageDataset, PIXELS};
+use crate::data::linreg::{LinRegDataset, WorkerStats};
+use crate::data::partition::Partition;
+use crate::model::mlp::MlpDims;
+use crate::model::{LocalProblem, NeighborCtx};
+use crate::util::rng::Rng;
+use std::rc::Rc;
+
+/// Linear-regression local problem solved through the `linreg_local_d{d}`
+/// artifact.
+pub struct XlaLinRegProblem {
+    artifact: Rc<Artifact>,
+    stats: Vec<WorkerStats>,
+    /// Per-worker A as flat f32 (artifact input layout).
+    a_f32: Vec<Vec<f32>>,
+    b_f32: Vec<Vec<f32>>,
+    dims: usize,
+    zeros: Vec<f32>,
+}
+
+impl XlaLinRegProblem {
+    pub fn new(
+        rt: &Runtime,
+        data: &LinRegDataset,
+        partition: &Partition,
+    ) -> Result<XlaLinRegProblem, RuntimeError> {
+        let d = data.features();
+        let artifact = rt.artifact(&format!("linreg_local_d{d}"))?;
+        let stats: Vec<WorkerStats> = (0..partition.workers())
+            .map(|w| {
+                let (lo, hi) = partition.bounds(w);
+                data.sufficient_stats(lo, hi)
+            })
+            .collect();
+        let a_f32 = stats.iter().map(|s| s.a.to_f32()).collect();
+        let b_f32 = stats
+            .iter()
+            .map(|s| s.b.iter().map(|&x| x as f32).collect())
+            .collect();
+        Ok(XlaLinRegProblem {
+            artifact,
+            stats,
+            a_f32,
+            b_f32,
+            dims: d,
+            zeros: vec![0.0; d],
+        })
+    }
+}
+
+impl LocalProblem for XlaLinRegProblem {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn workers(&self) -> usize {
+        self.stats.len()
+    }
+
+    fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        let z = &self.zeros;
+        let mask_l = [f32::from(ctx.theta_left.is_some())];
+        let mask_r = [f32::from(ctx.theta_right.is_some())];
+        let rho = [ctx.rho];
+        let outs = self
+            .artifact
+            .call(&[
+                &self.a_f32[worker],
+                &self.b_f32[worker],
+                ctx.lambda_left.unwrap_or(z),
+                ctx.lambda_right.unwrap_or(z),
+                ctx.theta_left.unwrap_or(z),
+                ctx.theta_right.unwrap_or(z),
+                &mask_l,
+                &mask_r,
+                &rho,
+            ])
+            .expect("linreg artifact execution failed");
+        out.copy_from_slice(&outs[0]);
+    }
+
+    fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
+        let t64: Vec<f64> = theta.iter().map(|&x| x as f64).collect();
+        self.stats[worker].objective(&t64)
+    }
+}
+
+/// DNN local problem (Q-SGADMM) solved through the `mlp_local` artifact:
+/// one PJRT execution = minibatch forward/backward × 10 Adam steps, all
+/// fused into a single compiled module.
+pub struct XlaMlpProblem {
+    artifact: Rc<Artifact>,
+    dims: MlpDims,
+    batch: usize,
+    shards: Vec<(Vec<f32>, Vec<u8>)>,
+    rngs: Vec<Rng>,
+    minibatch_x: Vec<f32>,
+    minibatch_y: Vec<f32>, // one-hot, artifact input layout
+    test_x: Vec<f32>,
+    test_y: Vec<u8>,
+    zeros: Vec<f32>,
+}
+
+impl XlaMlpProblem {
+    pub fn new(
+        rt: &Runtime,
+        data: &ImageDataset,
+        partition: &Partition,
+        seed: u64,
+    ) -> Result<XlaMlpProblem, RuntimeError> {
+        let artifact = rt.artifact("mlp_local")?;
+        let dims = MlpDims::paper();
+        let batch = artifact
+            .meta()
+            .constants
+            .get("batch")
+            .map(|&b| b as usize)
+            .unwrap_or(100);
+        let mut root = Rng::seed_from_u64(seed);
+        let shards = (0..partition.workers())
+            .map(|w| {
+                let idx = partition.shard(w);
+                let mut x = Vec::with_capacity(idx.len() * PIXELS);
+                let mut y = Vec::with_capacity(idx.len());
+                for &i in idx {
+                    x.extend_from_slice(data.train_row(i));
+                    y.push(data.train_y[i]);
+                }
+                (x, y)
+            })
+            .collect::<Vec<_>>();
+        let rngs = (0..partition.workers()).map(|w| root.fork(w as u64)).collect();
+        Ok(XlaMlpProblem {
+            artifact,
+            dims,
+            batch,
+            shards,
+            rngs,
+            minibatch_x: vec![0.0; batch * PIXELS],
+            minibatch_y: vec![0.0; batch * 10],
+            test_x: data.test_x.clone(),
+            test_y: data.test_y.clone(),
+            zeros: vec![0.0; dims.dims()],
+        })
+    }
+
+    pub fn initial_theta(&self, seed: u64) -> Vec<f32> {
+        self.dims.init_theta(&mut Rng::seed_from_u64(seed))
+    }
+
+    /// Test accuracy of the worker-averaged model (native forward).
+    pub fn average_model_accuracy(&self, thetas: &[Vec<f32>]) -> f64 {
+        let d = self.dims.dims();
+        let mut avg = vec![0.0f32; d];
+        for t in thetas {
+            for i in 0..d {
+                avg[i] += t[i];
+            }
+        }
+        let n = thetas.len() as f32;
+        avg.iter_mut().for_each(|v| *v /= n);
+        crate::model::mlp::accuracy(&self.dims, &avg, &self.test_x, &self.test_y)
+    }
+}
+
+impl LocalProblem for XlaMlpProblem {
+    fn dims(&self) -> usize {
+        self.dims.dims()
+    }
+
+    fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        // Sample the minibatch natively (data marshalling, not compute).
+        let (sx, sy) = &self.shards[worker];
+        let rng = &mut self.rngs[worker];
+        let n = sy.len();
+        self.minibatch_y.iter_mut().for_each(|v| *v = 0.0);
+        for s in 0..self.batch {
+            let i = rng.below(n);
+            self.minibatch_x[s * PIXELS..(s + 1) * PIXELS]
+                .copy_from_slice(&sx[i * PIXELS..(i + 1) * PIXELS]);
+            self.minibatch_y[s * 10 + sy[i] as usize] = 1.0;
+        }
+        let z = &self.zeros;
+        let mask_l = [f32::from(ctx.theta_left.is_some())];
+        let mask_r = [f32::from(ctx.theta_right.is_some())];
+        let rho = [ctx.rho];
+        let outs = self
+            .artifact
+            .call(&[
+                out,
+                &self.minibatch_x,
+                &self.minibatch_y,
+                ctx.lambda_left.unwrap_or(z),
+                ctx.lambda_right.unwrap_or(z),
+                ctx.theta_left.unwrap_or(z),
+                ctx.theta_right.unwrap_or(z),
+                &mask_l,
+                &mask_r,
+                &rho,
+            ])
+            .expect("mlp_local artifact execution failed");
+        out.copy_from_slice(&outs[0]);
+    }
+
+    fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
+        // Mean CE over a capped shard slice (native; metrics only).
+        use crate::model::mlp::{ce_loss, forward, MlpScratch};
+        let (sx, sy) = &self.shards[worker];
+        let n = sy.len().min(256);
+        let mut scratch = MlpScratch::new(&self.dims, n);
+        forward(&self.dims, theta, &sx[..n * PIXELS], &mut scratch);
+        ce_loss(&self.dims, &scratch, &sy[..n]) * sy.len() as f64
+    }
+}
+
+/// Thin wrapper over a `squant_d*_b*` artifact for the parity tests and
+/// the XLA quickstart: quantize `theta` against `theta_hat` with caller-
+/// provided uniforms, returning `(levels, theta_hat_new, radius)`.
+pub struct XlaQuantizer {
+    artifact: Rc<Artifact>,
+    dims: usize,
+}
+
+impl XlaQuantizer {
+    pub fn new(rt: &Runtime, dims: usize, bits: u8) -> Result<XlaQuantizer, RuntimeError> {
+        Ok(XlaQuantizer {
+            artifact: rt.artifact(&format!("squant_d{dims}_b{bits}"))?,
+            dims,
+        })
+    }
+
+    pub fn quantize(
+        &self,
+        theta: &[f32],
+        theta_hat: &[f32],
+        uniforms: &[f32],
+    ) -> Result<(Vec<u32>, Vec<f32>, f32), RuntimeError> {
+        assert_eq!(theta.len(), self.dims);
+        let outs = self.artifact.call(&[theta, theta_hat, uniforms])?;
+        let levels = outs[0].iter().map(|&q| q as u32).collect();
+        let radius = outs[2][0];
+        Ok((levels, outs[1].clone(), radius))
+    }
+}

@@ -1,0 +1,117 @@
+//! Mini property-testing harness.
+//!
+//! The offline environment carries no `proptest`/`quickcheck`, so this
+//! module provides the randomized-testing idiom the test suite relies on:
+//! run a property over many seeded random cases; on failure, report the
+//! exact case seed so the failure is reproducible with
+//! `QGADMM_PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` against `cases` seeded random inputs. Each case gets an
+/// independent [`Rng`]; panics inside the property are annotated with the
+/// case seed before propagating.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let base = std::env::var("QGADMM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base {
+        // Reproduce a single failing case.
+        let mut rng = Rng::seed_from_u64(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(fxhash(name));
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}; reproduce with \
+                 QGADMM_PROP_SEED={seed} cargo test"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Tiny FNV-style string hash, to decorrelate different properties' seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose_f32(got: &[f32], want: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for i in 0..got.len() {
+        let tol = atol + rtol * want[i].abs();
+        assert!(
+            (got[i] - want[i]).abs() <= tol,
+            "{ctx}: index {i}: got {} want {} (tol {tol})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_allclose_f64(got: &[f64], want: &[f64], atol: f64, rtol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for i in 0..got.len() {
+        let tol = atol + rtol * want[i].abs();
+        assert!(
+            (got[i] - want[i]).abs() <= tol,
+            "{ctx}: index {i}: got {} want {} (tol {tol})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("counter", 25, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate")]
+    fn property_propagates_failure() {
+        property("fails", 10, |rng| {
+            if rng.below(2) == 0 {
+                panic!("deliberate");
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose_f32(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 0.0, "t");
+        assert_allclose_f64(&[100.0], &[100.5], 0.0, 1e-2, "t");
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose_f32(&[1.0], &[1.1], 1e-3, 0.0, "t");
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment carries no `rand`, `serde`, or timing
+//! crates, so this module implements the pieces the rest of the system
+//! needs: a fast seedable PRNG ([`rng`]), summary statistics and empirical
+//! CDFs ([`stats`]), a JSON emitter and a small recursive-descent JSON
+//! parser ([`json`]) used for the artifact manifest and metric reports, and
+//! a stopwatch ([`timer`]).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,97 @@
+//! Wall-clock stopwatch + simple scoped timing, used by the benchmark
+//! harness and by Fig. 8 (loss/accuracy vs local computation time).
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating elapsed time across start/stop
+/// intervals. Fig. 8 accumulates *local computation* time only (the
+/// quantization + local solve work), excluding orchestration, so the engine
+/// starts/stops this watch around the compute sections.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    accumulated: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            accumulated: Duration::ZERO,
+            started: None,
+        }
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated seconds (includes a currently-running interval).
+    pub fn seconds(&self) -> f64 {
+        let mut d = self.accumulated;
+        if let Some(t0) = self.started {
+            d += t0.elapsed();
+        }
+        d.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.accumulated = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut w = Stopwatch::new();
+        w.start();
+        std::thread::sleep(Duration::from_millis(5));
+        w.stop();
+        let a = w.seconds();
+        assert!(a >= 0.004, "a={a}");
+        w.start();
+        std::thread::sleep(Duration::from_millis(5));
+        w.stop();
+        assert!(w.seconds() > a);
+        w.reset();
+        assert_eq!(w.seconds(), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut w = Stopwatch::new();
+        w.stop();
+        assert_eq!(w.seconds(), 0.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Native ↔ XLA backend parity: the same math must come out of the Rust
+//! implementations and the AOT-compiled Pallas/JAX artifacts.
+//!
+//! These tests need `make artifacts`; they skip (with a loud message) when
+//! the manifest is missing so `cargo test` stays green on a fresh clone.
+
+use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::{LocalProblem, NeighborCtx};
+use qgadmm::net::topology::Topology;
+use qgadmm::quant::{BitPolicy, StochasticQuantizer};
+use qgadmm::runtime::solver::{XlaLinRegProblem, XlaQuantizer};
+use qgadmm::runtime::Runtime;
+use qgadmm::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::available() {
+        eprintln!("SKIP: no artifacts at {:?} (run `make artifacts`)", Runtime::default_dir());
+        return None;
+    }
+    Some(Runtime::load(Runtime::default_dir()).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn squant_artifact_matches_native_quantizer() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let d = 6;
+    let xq = XlaQuantizer::new(&rt, d, 2).unwrap();
+    let mut rng = Rng::seed_from_u64(42);
+    let mut mismatch_total = 0usize;
+    let mut coords_total = 0usize;
+    for trial in 0..50 {
+        let mut native = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let theta: Vec<f32> = (0..d).map(|_| rng.uniform_f32() * 4.0 - 2.0).collect();
+        let hat: Vec<f32> = (0..d).map(|_| rng.uniform_f32() * 4.0 - 2.0).collect();
+        let uniforms: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+        native.reset_to(&hat);
+        let msg = native.quantize_with_uniforms(&theta, &uniforms);
+        let (levels, hat_new, radius) = xq.quantize(&theta, &hat, &uniforms).unwrap();
+        // Radius is an exact max — must agree bit-for-bit.
+        assert_eq!(radius, msg.radius, "trial {trial}");
+        // Levels may flip by one at FMA-sensitive boundaries (see
+        // python/tests/test_squant.py); count but bound the flips.
+        for i in 0..d {
+            coords_total += 1;
+            let diff = (levels[i] as i64 - msg.levels[i] as i64).abs();
+            assert!(diff <= 1, "trial {trial} dim {i}: {} vs {}", levels[i], msg.levels[i]);
+            if diff != 0 {
+                mismatch_total += 1;
+            }
+        }
+        let delta = if msg.radius > 0.0 {
+            2.0 * msg.radius / 3.0
+        } else {
+            0.0
+        };
+        for i in 0..d {
+            assert!(
+                (hat_new[i] - native.theta_hat()[i]).abs() <= delta + 1e-6,
+                "trial {trial} dim {i}"
+            );
+        }
+    }
+    assert!(
+        (mismatch_total as f64) < 0.01 * coords_total as f64 + 2.0,
+        "too many level flips: {mismatch_total}/{coords_total}"
+    );
+}
+
+#[test]
+fn linreg_artifact_matches_native_solve() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = LinRegSpec {
+        samples: 1_200,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 9);
+    let workers = 4;
+    let partition = Partition::contiguous(data.samples(), workers);
+    let rho = 1600.0f32;
+    let mut native = LinRegProblem::new(&data, &partition, rho);
+    let mut xla = XlaLinRegProblem::new(&rt, &data, &partition).unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+
+    for w in 0..workers {
+        let d = native.dims();
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..d).map(|_| rng.uniform_f32() - 0.5).collect()
+        };
+        let (lam_l, lam_r, th_l, th_r) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let ctx = NeighborCtx {
+            lambda_left: (w > 0).then_some(lam_l.as_slice()),
+            lambda_right: (w + 1 < workers).then_some(lam_r.as_slice()),
+            theta_left: (w > 0).then_some(th_l.as_slice()),
+            theta_right: (w + 1 < workers).then_some(th_r.as_slice()),
+            rho,
+        };
+        let mut out_native = vec![0.0f32; d];
+        let mut out_xla = vec![0.0f32; d];
+        native.solve(w, &ctx, &mut out_native);
+        xla.solve(w, &ctx, &mut out_xla);
+        for i in 0..d {
+            // Native solves in f64 then narrows; the artifact is f32
+            // end-to-end with large (~1e4-scale) Gram entries — compare at
+            // f32-appropriate relative tolerance.
+            let tol = 1e-3 * (1.0 + out_native[i].abs());
+            assert!(
+                (out_native[i] - out_xla[i]).abs() <= tol,
+                "worker {w} dim {i}: native {} xla {}",
+                out_native[i],
+                out_xla[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_converges_identically_on_both_backends() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = LinRegSpec {
+        samples: 1_000,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 31);
+    let (_, f_star) = data.optimum();
+    let workers = 6;
+    let partition = Partition::contiguous(data.samples(), workers);
+    let rho = 1600.0f32;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant: Some(QuantConfig::default()),
+    };
+    let opts = RunOptions {
+        iterations: 1_000,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+
+    let native_gap = {
+        let problem = LinRegProblem::new(&data, &partition, rho);
+        let mut engine = GadmmEngine::new(cfg.clone(), problem, Topology::line(workers), 5);
+        let rep = engine.run(&opts, |e| (e.global_objective() - f_star).abs());
+        rep.final_loss_gap()
+    };
+    let xla_gap = {
+        let problem = XlaLinRegProblem::new(&rt, &data, &partition).unwrap();
+        let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 5);
+        let rep = engine.run(&opts, |e| (e.global_objective() - f_star).abs());
+        rep.final_loss_gap()
+    };
+    // Same seeds, near-identical arithmetic: both must converge to the
+    // same loss regime (f32 drift compounds over 400 iterations, so this
+    // is an order-of-magnitude check, not bit equality).
+    assert!(native_gap < 1.0, "native gap {native_gap}");
+    assert!(xla_gap < 1.0, "xla gap {xla_gap}");
+    assert!(
+        (native_gap.log10() - xla_gap.log10()).abs() < 2.0,
+        "backends diverged: native {native_gap:.3e} vs xla {xla_gap:.3e}"
+    );
+}
+
+#[test]
+fn mlp_artifacts_match_native_forward_and_grad() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use qgadmm::model::mlp::{backward, forward, MlpDims, MlpScratch};
+    let dims = MlpDims::paper();
+    let d = dims.dims();
+    let mut rng = Rng::seed_from_u64(77);
+    let theta = dims.init_theta(&mut rng);
+    let batch = 100;
+    let mut x = vec![0.0f32; batch * dims.input];
+    rng.fill_uniform_f32(&mut x);
+    let labels: Vec<u8> = (0..batch).map(|_| rng.below(10) as u8).collect();
+    let mut y_onehot = vec![0.0f32; batch * 10];
+    for (s, &l) in labels.iter().enumerate() {
+        y_onehot[s * 10 + l as usize] = 1.0;
+    }
+
+    // mlp_grad artifact vs native backward.
+    let grad_art = rt.artifact("mlp_grad").unwrap();
+    let outs = grad_art.call(&[&theta, &x, &y_onehot]).unwrap();
+    let mut scratch = MlpScratch::new(&dims, batch);
+    let mut grad_native = vec![0.0f32; d];
+    forward(&dims, &theta, &x, &mut scratch);
+    let _ = backward(&dims, &theta, &x, &labels, &mut scratch, &mut grad_native);
+    let mut max_err = 0.0f32;
+    for i in 0..d {
+        max_err = max_err.max((outs[0][i] - grad_native[i]).abs());
+    }
+    assert!(max_err < 1e-3, "grad max err {max_err}");
+
+    // mlp_eval artifact vs native forward logits.
+    let eval_art = rt.artifact("mlp_eval").unwrap();
+    let eval_batch = eval_art.meta().inputs[1][0];
+    let mut xe = vec![0.0f32; eval_batch * dims.input];
+    rng.fill_uniform_f32(&mut xe);
+    let outs = eval_art.call(&[&theta, &xe]).unwrap();
+    let mut scratch = MlpScratch::new(&dims, eval_batch);
+    forward(&dims, &theta, &xe, &mut scratch);
+    // Logit comparison through a fresh forward.
+    let logits_native = {
+        let mut v = vec![0.0f32; eval_batch * 10];
+        // forward stores logits in scratch; re-run to fill.
+        forward(&dims, &theta, &xe, &mut scratch);
+        v.copy_from_slice(scratch_logits(&scratch, eval_batch));
+        v
+    };
+    let mut max_err = 0.0f32;
+    for i in 0..eval_batch * 10 {
+        max_err = max_err.max((outs[0][i] - logits_native[i]).abs());
+    }
+    assert!(max_err < 1e-2, "eval max err {max_err}");
+}
+
+// Accessor shim: MlpScratch keeps logits private to the crate; go through
+// the public forward-path by reading them via accuracy-equivalent API.
+fn scratch_logits(scratch: &qgadmm::model::mlp::MlpScratch, _batch: usize) -> &[f32] {
+    scratch.logits()
+}

@@ -1,0 +1,206 @@
+//! System-level convergence properties across the algorithm family —
+//! Theorem 2's guarantees and the paper's headline comparisons, exercised
+//! end-to-end on the native backend.
+
+use qgadmm::baselines::gd::{run_gd_linreg, GdOptions};
+use qgadmm::baselines::QuantMode;
+use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::net::geometry::Area;
+use qgadmm::net::topology::Topology;
+use qgadmm::testing::property;
+use qgadmm::util::rng::Rng;
+
+const RHO: f32 = 1600.0;
+
+fn data(seed: u64) -> LinRegDataset {
+    LinRegDataset::synthesize(
+        &LinRegSpec {
+            samples: 2_000,
+            ..LinRegSpec::default()
+        },
+        seed,
+    )
+}
+
+fn engine(
+    data: &LinRegDataset,
+    workers: usize,
+    quant: Option<QuantConfig>,
+    topo: Topology,
+    seed: u64,
+) -> (GadmmEngine<LinRegProblem>, f64) {
+    let partition = Partition::contiguous(data.samples(), workers);
+    let problem = LinRegProblem::new(data, &partition, RHO);
+    let cfg = GadmmConfig {
+        workers,
+        rho: RHO,
+        dual_step: 1.0,
+        quant,
+    };
+    let (_, f_star) = data.optimum();
+    (GadmmEngine::new(cfg, problem, topo, seed), f_star)
+}
+
+#[test]
+fn qgadmm_tracks_gadmm_iteration_for_iteration() {
+    // Paper headline: Q-GADMM converges as fast as GADMM per iteration.
+    // Uses the figure-default ρ (6400): at that operating point the
+    // 2-bit trajectory tracks full precision within ~25% (see
+    // examples/probe sweeps); under-damped ρ exaggerates the early
+    // quantization-noise phase.
+    let ds = data(1);
+    let workers = 8;
+    let partition = Partition::contiguous(ds.samples(), workers);
+    let rho = 6400.0f32;
+    let mk = |quant| {
+        let problem = LinRegProblem::new(&ds, &partition, rho);
+        GadmmEngine::new(
+            GadmmConfig { workers, rho, dual_step: 1.0, quant },
+            problem,
+            Topology::line(workers),
+            3,
+        )
+    };
+    let (_, f_star) = ds.optimum();
+    let mut q_eng = mk(Some(QuantConfig::default()));
+    let mut f_eng = mk(None);
+    let mut q_gaps = Vec::new();
+    let mut f_gaps = Vec::new();
+    for _ in 0..2_000 {
+        q_eng.iterate();
+        f_eng.iterate();
+        q_gaps.push((q_eng.global_objective() - f_star).abs());
+        f_gaps.push((f_eng.global_objective() - f_star).abs());
+    }
+    // Early iterations are dominated by the (still-large) quantization
+    // radius; the paper's "same convergence speed" claim is about the
+    // annealed regime. Compare at a tight target.
+    let target = f_gaps[0] * 1e-7;
+    let q_at = q_gaps.iter().position(|&g| g < target);
+    let f_at = f_gaps.iter().position(|&g| g < target);
+    let (q_at, f_at) = (q_at.expect("Q-GADMM reached"), f_at.expect("GADMM reached"));
+    let ratio = q_at as f64 / f_at.max(1) as f64;
+    assert!(
+        (0.5..1.6).contains(&ratio),
+        "Q-GADMM {}, GADMM {} iterations to target (ratio {ratio})",
+        q_at,
+        f_at
+    );
+}
+
+#[test]
+fn qgadmm_beats_gadmm_on_bits_by_payload_ratio() {
+    // Payload: (2·6+64) vs 32·6 bits/broadcast = 4.05x; identical per-
+    // iteration convergence (above) makes the end-to-end bit ratio ≈ the
+    // payload ratio (the paper's Fig. 6 reports 3.5x on its settings).
+    let ds = data(5);
+    let workers = 8;
+    let target = 1e-3;
+    let run = |quant| {
+        let (mut eng, f_star) = engine(&ds, workers, quant, Topology::line(workers), 11);
+        let opts = RunOptions {
+            iterations: 3_000,
+            eval_every: 1,
+            stop_below: Some(target),
+            stop_above: None,
+        };
+        let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
+        rep.recorder.bits_to(target).expect("reached")
+    };
+    let q_bits = run(Some(QuantConfig::default()));
+    let f_bits = run(None);
+    let ratio = f_bits as f64 / q_bits as f64;
+    assert!(
+        (2.0..6.5).contains(&ratio),
+        "bits ratio {ratio}: q={q_bits} f={f_bits}"
+    );
+}
+
+#[test]
+fn residuals_vanish_under_quantization_theorem2() {
+    let ds = data(7);
+    let workers = 10;
+    let (mut eng, _) = engine(&ds, workers, Some(QuantConfig::default()), Topology::line(workers), 13);
+    let first = eng.iterate();
+    let mut last = first;
+    for _ in 0..1_200 {
+        last = eng.iterate();
+    }
+    assert!(last.primal_sq < first.primal_sq * 1e-6, "{last:?}");
+    assert!(last.dual_sq < first.dual_sq * 1e-6, "{last:?}");
+    assert!(last.quant_err_sq < first.quant_err_sq * 1e-6, "{last:?}");
+}
+
+#[test]
+fn adaptive_bit_rule_converges() {
+    let ds = data(9);
+    let workers = 6;
+    let quant = Some(QuantConfig {
+        bits: 2,
+        adaptive: true,
+        max_bits: 8,
+    });
+    let (mut eng, f_star) = engine(&ds, workers, quant, Topology::line(workers), 17);
+    for _ in 0..1_000 {
+        eng.iterate();
+    }
+    let gap = (eng.global_objective() - f_star).abs();
+    assert!(gap < 1e-2, "gap={gap}");
+}
+
+#[test]
+fn random_geometry_chains_converge() {
+    // Property: Q-GADMM converges on the nearest-neighbor chain of any
+    // random drop (the topology heuristic never breaks the algorithm).
+    property("geometry chains", 5, |rng: &mut Rng| {
+        let workers = 4 + rng.below(8);
+        let pts = Area::default().drop_workers(workers, rng);
+        let topo = Topology::nearest_neighbor_chain(&pts);
+        let ds = data(100 + workers as u64);
+        let (mut eng, f_star) = engine(&ds, workers, Some(QuantConfig::default()), topo, 19);
+        let start = (eng.global_objective() - f_star).abs();
+        for _ in 0..800 {
+            eng.iterate();
+        }
+        let gap = (eng.global_objective() - f_star).abs();
+        assert!(gap < 1e-2 * start.max(1.0), "N={workers} gap={gap}");
+    });
+}
+
+#[test]
+fn quantized_gd_eventually_matches_gd_loss() {
+    // Sanity across families: QGD (memory mode) achieves the same loss
+    // levels as GD, just like Q-GADMM vs GADMM.
+    let ds = LinRegDataset::synthesize(
+        &LinRegSpec {
+            samples: 2_000,
+            scale_spread: 4.0,
+            ..LinRegSpec::default()
+        },
+        21,
+    );
+    let gd = run_gd_linreg(
+        &ds,
+        6,
+        &GdOptions {
+            iterations: 3_000,
+            ..GdOptions::default()
+        },
+    );
+    let qgd = run_gd_linreg(
+        &ds,
+        6,
+        &GdOptions {
+            iterations: 3_000,
+            quant: Some((QuantConfig::default(), QuantMode::Memory)),
+            ..GdOptions::default()
+        },
+    );
+    let g = gd.final_value();
+    let q = qgd.final_value();
+    assert!(q < 1e3 * g.max(1e-12), "QGD {q} vs GD {g}");
+}

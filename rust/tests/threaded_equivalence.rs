@@ -1,0 +1,96 @@
+//! The distributed (threads + mailboxes) runtime must be bit-for-bit
+//! equivalent to the deterministic engine given the same seed — same
+//! models, same quantization decisions, same bits on the wire.
+
+use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::coordinator::threaded::run_threaded;
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::WorkerSolver;
+use qgadmm::net::topology::Topology;
+
+fn world(workers: usize) -> (LinRegDataset, Partition) {
+    let spec = LinRegSpec {
+        samples: 1_400,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 71);
+    let partition = Partition::contiguous(data.samples(), workers);
+    (data, partition)
+}
+
+fn run_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
+    let (data, partition) = world(workers);
+    let rho = 1600.0f32;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant,
+    };
+
+    // Deterministic engine.
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, Topology::line(workers), seed);
+    let opts = RunOptions {
+        iterations: iters,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    let eng_report = engine.run(&opts, |e| e.global_objective());
+
+    // Threaded runtime over the same per-worker solvers.
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let solvers: Vec<Box<dyn WorkerSolver>> = problem
+        .into_workers()
+        .into_iter()
+        .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
+        .collect();
+    let thr_report = run_threaded(&cfg, solvers, iters, seed, |obj, _| obj).unwrap();
+
+    // Bit-for-bit: final models identical, every recorded objective equal,
+    // same bits on the air.
+    for p in 0..workers {
+        assert_eq!(
+            engine.theta_at(p),
+            thr_report.thetas[p].as_slice(),
+            "theta diverged at position {p}"
+        );
+    }
+    assert_eq!(eng_report.comm.bits, thr_report.comm.bits);
+    assert_eq!(eng_report.recorder.points.len(), thr_report.recorder.points.len());
+    for (a, b) in eng_report
+        .recorder
+        .points
+        .iter()
+        .zip(&thr_report.recorder.points)
+    {
+        assert_eq!(a.value, b.value, "objective diverged at iteration {}", a.iteration);
+    }
+}
+
+#[test]
+fn quantized_runs_are_bit_identical() {
+    run_pair(Some(QuantConfig::default()), 6, 60, 2024);
+}
+
+#[test]
+fn full_precision_runs_are_bit_identical() {
+    run_pair(None, 5, 60, 7);
+}
+
+#[test]
+fn odd_worker_counts_and_higher_bits() {
+    run_pair(
+        Some(QuantConfig {
+            bits: 4,
+            ..QuantConfig::default()
+        }),
+        7,
+        40,
+        99,
+    );
+}
