@@ -28,9 +28,10 @@ pub const USAGE: &str = "\
 qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
 
 USAGE:
-  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|all> [options]
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|all> [options]
   qgadmm train-linreg  [--workers N --rho R --bits B --iters K --use-xla true]
   qgadmm train-dnn     [--workers N --rho R --bits B --iters K]
+  qgadmm simulate      [--loss P --workers N --iters K ...sim options]
   qgadmm info          (artifact + platform report)
 
 COMMON OPTIONS (also accepted from --config <file> as key = value lines):
@@ -44,6 +45,23 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --use-xla BOOL       execute local solves through the PJRT artifacts
   --bandwidth_mhz F    system bandwidth
   --quick BOOL         reduced-scale figure runs (CI-sized)
+
+SIMULATOR OPTIONS (the discrete-event network model; `simulate`, fig_sim):
+  --loss P             frame loss probability in [0, 1]
+  --ge_to_bad P        Gilbert-Elliott good->bad transition (enables bursts)
+  --ge_to_good P       Gilbert-Elliott bad->good transition
+  --ge_loss_bad P      loss probability in the bad state
+  --link_rate_mbps F   link serialization rate (default 1 Mb/s)
+  --frame_overhead_ms F  fixed per-frame overhead (default 1 ms)
+  --compute_ms F       mean local-solve time (default 2 ms)
+  --compute_jitter F   exponential jitter fraction in [0, 1]
+  --stragglers N       how many workers run slow
+  --straggler_factor F slowdown multiplier for stragglers
+  --max_attempts N     ARQ attempt cap per frame (default 8)
+  --arq_timeout_ms F   retransmission timeout (default 2 ms)
+  --dropouts LIST      fault schedule, e.g. \"3@50,7@120\" (worker@iteration)
+  --sim_seed S         simulator-side randomness seed
+  --trace BOOL         record the full event trace
 ";
 
 /// Parse `argv[1..]`.

@@ -1,13 +1,19 @@
-//! Messaging layer: payload types, bit-exact accounting, and the
-//! in-process transport used by the threaded decentralized runtime.
+//! Messaging layer: payload types, bit-exact accounting, the framed wire
+//! codec, and the in-process transport used by the threaded decentralized
+//! runtime.
 //!
 //! Payload sizes follow Sec. III-A exactly:
 //! * full-precision model broadcast (GADMM/SGADMM, and PS up/downlinks):
 //!   `32·d` bits;
 //! * quantized broadcast (Q-GADMM/Q-SGADMM, QGD, QSGD, ADIANA):
 //!   `b·d + b_R + b_b = b·d + 64` bits.
+//!
+//! [`wire`] frames whole messages into the byte stream a link layer
+//! carries (used by the `sim` discrete-event simulator); the overhead over
+//! the accounting above is a fixed, property-tested constant.
 
 pub mod transport;
+pub mod wire;
 
 use crate::quant::QuantizedMsg;
 

@@ -2,9 +2,12 @@
 //!
 //! The threaded decentralized runtime (`coordinator::threaded`) runs each
 //! worker on its own OS thread; neighbors exchange [`Message`]s through
-//! these endpoints. The transport is topology-agnostic — the runtime
-//! decides who sends to whom — and imposes the same at-most-once, ordered
-//! delivery a reliable link layer would.
+//! these endpoints. The transport enforces the topology it was built
+//! with: an endpoint only holds senders to its declared neighbors, so a
+//! chain network of `n` workers keeps O(n) sender handles instead of the
+//! O(n²) full mesh, and a misdirected send is a [`TransportError`] rather
+//! than a silent protocol violation. Delivery is at-most-once and
+//! ordered, as a reliable link layer would provide.
 
 use super::Message;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -17,12 +20,15 @@ pub enum TransportError {
     Disconnected(usize),
     #[error("timed out waiting for a message after {0:?}")]
     Timeout(Duration),
+    #[error("worker {from} has no link to {to} in this topology")]
+    NotANeighbor { from: usize, to: usize },
 }
 
-/// One worker's handle: senders to every peer, plus its own inbox.
+/// One worker's handle: senders to its reachable peers, plus its own
+/// inbox. `peers[q]` is `Some` only if `q` was declared a neighbor.
 pub struct Endpoint {
     id: usize,
-    peers: Vec<Sender<Message>>,
+    peers: Vec<Option<Sender<Message>>>,
     inbox: Receiver<Message>,
 }
 
@@ -31,12 +37,20 @@ impl Endpoint {
         self.id
     }
 
-    /// Send to peer `to`. Cloned per call — payloads are small (quantized)
-    /// or shared-cost (full precision vectors are moved by the caller).
+    /// Can this endpoint legally send to `to`?
+    pub fn is_neighbor(&self, to: usize) -> bool {
+        self.peers.get(to).map(|p| p.is_some()).unwrap_or(false)
+    }
+
+    /// Send to peer `to`. Sending to a worker outside this endpoint's
+    /// neighbor set is a topology violation and fails loudly.
     pub fn send(&self, to: usize, msg: Message) -> Result<(), TransportError> {
-        self.peers[to]
-            .send(msg)
-            .map_err(|_| TransportError::Disconnected(to))
+        let tx = self
+            .peers
+            .get(to)
+            .and_then(|p| p.as_ref())
+            .ok_or(TransportError::NotANeighbor { from: self.id, to })?;
+        tx.send(msg).map_err(|_| TransportError::Disconnected(to))
     }
 
     /// Blocking receive with timeout (deadlock insurance for tests and the
@@ -49,8 +63,15 @@ impl Endpoint {
     }
 }
 
-/// Build a fully-connected in-process network of `n` endpoints.
-pub fn in_process_network(n: usize) -> Vec<Endpoint> {
+/// Build an in-process network of `n` endpoints restricted to
+/// `neighbors`: endpoint `i` can send only to the workers in
+/// `neighbors[i]`. Sender handles are cloned per *link*, so a chain
+/// topology allocates O(n) handles, not the O(n²) full mesh.
+pub fn in_process_network_with_neighbors(
+    n: usize,
+    neighbors: &[Vec<usize>],
+) -> Vec<Endpoint> {
+    assert_eq!(neighbors.len(), n, "need one neighbor list per worker");
     let mut senders = Vec::with_capacity(n);
     let mut inboxes = Vec::with_capacity(n);
     for _ in 0..n {
@@ -61,10 +82,38 @@ pub fn in_process_network(n: usize) -> Vec<Endpoint> {
     inboxes
         .into_iter()
         .enumerate()
-        .map(|(id, inbox)| Endpoint {
-            id,
-            peers: senders.clone(),
-            inbox,
+        .map(|(id, inbox)| {
+            let mut peers: Vec<Option<Sender<Message>>> = vec![None; n];
+            for &q in &neighbors[id] {
+                assert!(q < n, "neighbor {q} out of range for {n} workers");
+                peers[q] = Some(senders[q].clone());
+            }
+            Endpoint { id, peers, inbox }
+        })
+        .collect()
+}
+
+/// Build a fully-connected in-process network of `n` endpoints (every
+/// worker may send to every other, and to itself — useful for PS-style
+/// tests). Prefer [`in_process_network_with_neighbors`] when the topology
+/// is known.
+pub fn in_process_network(n: usize) -> Vec<Endpoint> {
+    let all: Vec<Vec<usize>> = (0..n).map(|_| (0..n).collect()).collect();
+    in_process_network_with_neighbors(n, &all)
+}
+
+/// Neighbor lists for an identity chain: worker `i` links to `i−1`/`i+1`.
+pub fn chain_neighbors(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            let mut nb = Vec::with_capacity(2);
+            if i > 0 {
+                nb.push(i - 1);
+            }
+            if i + 1 < n {
+                nb.push(i + 1);
+            }
+            nb
         })
         .collect()
 }
@@ -77,7 +126,8 @@ mod tests {
     #[test]
     fn ring_pass() {
         let n = 4;
-        let endpoints = in_process_network(n);
+        let ring: Vec<Vec<usize>> = (0..n).map(|i| vec![(i + 1) % n, (i + n - 1) % n]).collect();
+        let endpoints = in_process_network_with_neighbors(n, &ring);
         let handles: Vec<_> = endpoints
             .into_iter()
             .map(|ep| {
@@ -128,5 +178,72 @@ mod tests {
             let m = eps[0].recv(Duration::from_secs(1)).unwrap();
             assert_eq!(m.round, round);
         }
+    }
+
+    #[test]
+    fn chain_restricts_sends() {
+        let n = 5;
+        let eps = in_process_network_with_neighbors(n, &chain_neighbors(n));
+        // Legal chain sends work.
+        assert!(eps[2].is_neighbor(1));
+        assert!(eps[2].is_neighbor(3));
+        eps[2]
+            .send(
+                3,
+                Message {
+                    from: 2,
+                    round: 0,
+                    payload: Payload::Stop,
+                },
+            )
+            .unwrap();
+        // Misdirected sends are a typed error, not a delivery.
+        assert!(!eps[2].is_neighbor(0));
+        let err = eps[2]
+            .send(
+                0,
+                Message {
+                    from: 2,
+                    round: 0,
+                    payload: Payload::Stop,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            TransportError::NotANeighbor { from: 2, to: 0 }
+        ));
+        // Out-of-range target is also a topology error.
+        let err = eps[4]
+            .send(
+                99,
+                Message {
+                    from: 4,
+                    round: 0,
+                    payload: Payload::Stop,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            TransportError::NotANeighbor { from: 4, to: 99 }
+        ));
+    }
+
+    #[test]
+    fn chain_neighbor_lists_shape() {
+        let nb = chain_neighbors(4);
+        assert_eq!(nb, vec![vec![1], vec![0, 2], vec![1, 3], vec![2]]);
+    }
+
+    #[test]
+    fn chain_endpoint_count_is_linear() {
+        // 100-worker chain: 2·99 sender handles total, not 100².
+        let eps = in_process_network_with_neighbors(100, &chain_neighbors(100));
+        let handles: usize = eps
+            .iter()
+            .map(|e| e.peers.iter().filter(|p| p.is_some()).count())
+            .sum();
+        assert_eq!(handles, 2 * 99);
     }
 }

@@ -1,0 +1,413 @@
+//! Bit-exact framed wire codec for whole [`Message`]s.
+//!
+//! [`crate::quant::bitpack`] serializes a quantized *payload*; this module
+//! frames any [`Payload`] variant — full precision, quantized, or control —
+//! into the byte stream a real link layer would carry, so the simulator
+//! (`sim`) and any future socket transport move exactly the bytes the
+//! paper's bit accounting claims, plus a fixed, documented frame overhead.
+//!
+//! Frame layout (little-endian):
+//! ```text
+//!   [0]        u8   magic (0xA9)
+//!   [1]        u8   payload tag: 0 = Stop, 1 = Full, 2 = Quantized
+//!   [2..6]     u32  sender chain position / worker id
+//!   [6..14]    u64  round (iteration index)
+//!   [14..18]   u32  body length in bytes
+//!   [18..22]   u32  CRC-32 (IEEE) of the body
+//!   [22..]     body
+//! ```
+//! Bodies:
+//! * `Stop` — empty;
+//! * `Full(v)` — `4·d` bytes of little-endian f32 (exactly `32·d` bits,
+//!   matching [`Payload::bits`]);
+//! * `Quantized(q)` — the [`bitpack`] encoding (`1 + 4 + ⌈b·d/8⌉` bytes;
+//!   [`Payload::bits`] charges `b·d + 64`, i.e. never *less* than the body
+//!   carries).
+//!
+//! The invariant tested by `frame_size_matches_bit_accounting` (and the
+//! `wire_codec` integration suite): for every payload,
+//! `0 < encoded_len·8 − Payload::bits() ≤ OVERHEAD_BITS`.
+
+use super::{Message, Payload};
+use crate::quant::bitpack::{self, CodecError};
+use crate::quant::QuantizedMsg;
+
+/// Frame header size in bytes.
+pub const HEADER_BYTES: usize = 22;
+
+/// Worst-case framing overhead in bits: the header plus the quantized
+/// body's own header/padding slack relative to the paper's `b·d + 64`
+/// accounting. Every frame satisfies
+/// `encoded_len·8 − payload.bits() ∈ (0, OVERHEAD_BITS]`.
+pub const OVERHEAD_BITS: u64 = (HEADER_BYTES as u64) * 8;
+
+const MAGIC: u8 = 0xA9;
+const TAG_STOP: u8 = 0;
+const TAG_FULL: u8 = 1;
+const TAG_QUANTIZED: u8 = 2;
+
+/// Wire-level failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("frame truncated: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("bad magic byte 0x{0:02x}")]
+    BadMagic(u8),
+    #[error("unknown payload tag {0}")]
+    BadTag(u8),
+    #[error("checksum mismatch: header says 0x{expected:08x}, body hashes to 0x{got:08x}")]
+    ChecksumMismatch { expected: u32, got: u32 },
+    #[error("body length {got} inconsistent with a {expected}-byte {kind} body")]
+    BadBodyLength {
+        kind: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    #[error("quantized body: {0}")]
+    Codec(#[from] CodecError),
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 checksum of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Exact encoded body length for a payload, without serializing.
+pub fn body_len(payload: &Payload) -> usize {
+    match payload {
+        Payload::Stop => 0,
+        Payload::Full(v) => 4 * v.len(),
+        Payload::Quantized(q) => 5 + (q.bits as usize * q.levels.len()).div_ceil(8),
+    }
+}
+
+/// Exact encoded frame length (header + body) for a payload.
+pub fn frame_len(payload: &Payload) -> usize {
+    HEADER_BYTES + body_len(payload)
+}
+
+/// Serialize one message into a framed byte vector.
+pub fn encode_frame(msg: &Message) -> Vec<u8> {
+    let body = match &msg.payload {
+        Payload::Stop => Vec::new(),
+        Payload::Full(v) => {
+            let mut b = Vec::with_capacity(4 * v.len());
+            for x in v {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            b
+        }
+        Payload::Quantized(q) => bitpack::encode_msg(q),
+    };
+    let tag = match &msg.payload {
+        Payload::Stop => TAG_STOP,
+        Payload::Full(_) => TAG_FULL,
+        Payload::Quantized(_) => TAG_QUANTIZED,
+    };
+    let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+    out.push(MAGIC);
+    out.push(tag);
+    out.extend_from_slice(&(msg.from as u32).to_le_bytes());
+    out.extend_from_slice(&msg.round.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]])
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Parse one frame from the front of `bytes`. `dims` is the model
+/// dimension the receiver expects (fixed per run, so it is not carried on
+/// the wire). Returns the message and the number of bytes consumed, so a
+/// byte stream carrying back-to-back frames can be walked.
+pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(WireError::Truncated {
+            need: HEADER_BYTES,
+            have: bytes.len(),
+        });
+    }
+    if bytes[0] != MAGIC {
+        return Err(WireError::BadMagic(bytes[0]));
+    }
+    let tag = bytes[1];
+    let from = read_u32(bytes, 2) as usize;
+    let round = read_u64(bytes, 6);
+    let len = read_u32(bytes, 14) as usize;
+    let expected_crc = read_u32(bytes, 18);
+    let total = HEADER_BYTES + len;
+    if bytes.len() < total {
+        return Err(WireError::Truncated {
+            need: total,
+            have: bytes.len(),
+        });
+    }
+    let body = &bytes[HEADER_BYTES..total];
+    let got_crc = crc32(body);
+    if got_crc != expected_crc {
+        return Err(WireError::ChecksumMismatch {
+            expected: expected_crc,
+            got: got_crc,
+        });
+    }
+    let payload = match tag {
+        TAG_STOP => {
+            if len != 0 {
+                return Err(WireError::BadBodyLength {
+                    kind: "stop",
+                    expected: 0,
+                    got: len,
+                });
+            }
+            Payload::Stop
+        }
+        TAG_FULL => {
+            if len != 4 * dims {
+                return Err(WireError::BadBodyLength {
+                    kind: "full-precision",
+                    expected: 4 * dims,
+                    got: len,
+                });
+            }
+            let mut v = Vec::with_capacity(dims);
+            for i in 0..dims {
+                let at = 4 * i;
+                v.push(f32::from_le_bytes([
+                    body[at],
+                    body[at + 1],
+                    body[at + 2],
+                    body[at + 3],
+                ]));
+            }
+            Payload::Full(v)
+        }
+        TAG_QUANTIZED => {
+            let q = QuantizedMsg::decode(body, dims)?;
+            let expected = 5 + (q.bits as usize * dims).div_ceil(8);
+            if len != expected {
+                return Err(WireError::BadBodyLength {
+                    kind: "quantized",
+                    expected,
+                    got: len,
+                });
+            }
+            Payload::Quantized(q)
+        }
+        other => return Err(WireError::BadTag(other)),
+    };
+    Ok((
+        Message {
+            from,
+            round,
+            payload,
+        },
+        total,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+    use crate::util::rng::Rng;
+
+    fn random_payload(rng: &mut Rng) -> Payload {
+        match rng.below(3) {
+            0 => Payload::Stop,
+            1 => {
+                let d = rng.below(64);
+                Payload::Full((0..d).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect())
+            }
+            _ => {
+                let bits = 1 + rng.below(16) as u8;
+                let d = rng.below(64);
+                let max = 1u64 << bits;
+                Payload::Quantized(QuantizedMsg {
+                    bits,
+                    radius: rng.uniform_f32() * 10.0,
+                    levels: (0..d).map(|_| rng.below(max as usize) as u32).collect(),
+                })
+            }
+        }
+    }
+
+    fn dims_of(p: &Payload) -> usize {
+        match p {
+            Payload::Stop => 0,
+            Payload::Full(v) => v.len(),
+            Payload::Quantized(q) => q.levels.len(),
+        }
+    }
+
+    fn assert_payload_eq(a: &Payload, b: &Payload) {
+        match (a, b) {
+            (Payload::Stop, Payload::Stop) => {}
+            (Payload::Full(x), Payload::Full(y)) => assert_eq!(x, y),
+            (Payload::Quantized(x), Payload::Quantized(y)) => assert_eq!(x, y),
+            _ => panic!("payload variant changed across the wire"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_every_variant() {
+        property("wire frame roundtrip", 300, |rng: &mut Rng| {
+            let payload = random_payload(rng);
+            let dims = dims_of(&payload);
+            let msg = Message {
+                from: rng.below(1000),
+                round: rng.next_u64() >> 1,
+                payload,
+            };
+            let bytes = encode_frame(&msg);
+            assert_eq!(bytes.len(), frame_len(&msg.payload));
+            let (back, consumed) = decode_frame(&bytes, dims).unwrap();
+            assert_eq!(consumed, bytes.len());
+            assert_eq!(back.from, msg.from);
+            assert_eq!(back.round, msg.round);
+            assert_payload_eq(&back.payload, &msg.payload);
+        });
+    }
+
+    #[test]
+    fn frame_size_matches_bit_accounting() {
+        // encoded_len·8 − Payload::bits() ∈ (0, OVERHEAD_BITS] for every
+        // payload — the wire never under-counts the paper's accounting and
+        // never exceeds it by more than the fixed frame overhead.
+        property("wire overhead bound", 300, |rng: &mut Rng| {
+            let payload = random_payload(rng);
+            let wire_bits = 8 * frame_len(&payload) as u64;
+            let accounted = payload.bits();
+            assert!(
+                wire_bits > accounted,
+                "frame smaller than accounting: {wire_bits} <= {accounted}"
+            );
+            assert!(
+                wire_bits - accounted <= OVERHEAD_BITS,
+                "overhead {} > bound {OVERHEAD_BITS}",
+                wire_bits - accounted
+            );
+        });
+    }
+
+    #[test]
+    fn stream_of_frames_walks() {
+        let msgs = vec![
+            Message {
+                from: 0,
+                round: 1,
+                payload: Payload::Full(vec![1.0, -2.0]),
+            },
+            Message {
+                from: 1,
+                round: 1,
+                payload: Payload::Quantized(QuantizedMsg {
+                    bits: 2,
+                    radius: 0.5,
+                    levels: vec![3, 0],
+                }),
+            },
+            Message {
+                from: 2,
+                round: 2,
+                payload: Payload::Stop,
+            },
+        ];
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode_frame(m));
+        }
+        let mut at = 0usize;
+        for m in &msgs {
+            let dims = dims_of(&m.payload);
+            let (back, used) = decode_frame(&stream[at..], dims).unwrap();
+            assert_eq!(back.from, m.from);
+            assert_eq!(back.round, m.round);
+            assert_payload_eq(&back.payload, &m.payload);
+            at += used;
+        }
+        assert_eq!(at, stream.len());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let msg = Message {
+            from: 3,
+            round: 9,
+            payload: Payload::Full(vec![1.5, 2.5, -3.5]),
+        };
+        let good = encode_frame(&msg);
+
+        // Body bit-flip → checksum mismatch.
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x40;
+        assert!(matches!(
+            decode_frame(&bad, 3),
+            Err(WireError::ChecksumMismatch { .. })
+        ));
+
+        // Magic corruption.
+        let mut bad = good.clone();
+        bad[0] = 0x00;
+        assert!(matches!(decode_frame(&bad, 3), Err(WireError::BadMagic(0))));
+
+        // Unknown tag.
+        let mut bad = good.clone();
+        bad[1] = 7;
+        assert!(matches!(decode_frame(&bad, 3), Err(WireError::BadTag(7))));
+
+        // Truncation (header and body).
+        assert!(matches!(
+            decode_frame(&good[..10], 3),
+            Err(WireError::Truncated { .. })
+        ));
+        assert!(matches!(
+            decode_frame(&good[..good.len() - 1], 3),
+            Err(WireError::Truncated { .. })
+        ));
+
+        // Wrong receiver dims.
+        assert!(matches!(
+            decode_frame(&good, 4),
+            Err(WireError::BadBodyLength { .. })
+        ));
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789" under CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

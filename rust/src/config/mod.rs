@@ -9,6 +9,7 @@
 
 use crate::net::channel::ChannelParams;
 use crate::quant::BitPolicy;
+use crate::sim::link::{ComputeModel, LatencyModel, LossModel};
 use std::collections::BTreeMap;
 
 /// Stochastic-quantizer configuration.
@@ -108,11 +109,194 @@ impl Default for NetConfig {
     }
 }
 
+/// One scheduled worker failure for the fault-injection scenarios.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dropout {
+    /// Worker id that disappears.
+    pub worker: usize,
+    /// Iteration (1-based) at whose start the worker is gone; the chain is
+    /// re-stitched over the survivors before that iteration runs.
+    pub at_iteration: u64,
+}
+
+/// Gilbert–Elliott burst-loss parameters (the good-state loss probability
+/// is [`SimConfig::loss`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurstParams {
+    /// Per-frame good→bad transition probability.
+    pub to_bad: f64,
+    /// Per-frame bad→good transition probability.
+    pub to_good: f64,
+    /// Loss probability while in the bad state.
+    pub loss_bad: f64,
+}
+
+impl Default for BurstParams {
+    fn default() -> Self {
+        BurstParams {
+            to_bad: 0.05,
+            to_good: 0.25,
+            loss_bad: 1.0,
+        }
+    }
+}
+
+/// Discrete-event simulator configuration (`coordinator::simulated`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Frame loss probability (Bernoulli; with [`Self::burst`] set, the
+    /// good-state loss probability of the Gilbert–Elliott chain).
+    pub loss: f64,
+    /// Enable bursty Gilbert–Elliott loss instead of iid loss.
+    pub burst: Option<BurstParams>,
+    /// Link serialization rate in bit/s (`<= 0` ⇒ instantaneous).
+    pub link_rate_bps: f64,
+    /// Fixed per-frame overhead in seconds (MAC, processing).
+    pub per_frame_overhead_secs: f64,
+    /// Propagation delay per meter of link distance (s/m).
+    pub prop_secs_per_m: f64,
+    /// Mean local-solve time per iteration in seconds.
+    pub compute_mean_secs: f64,
+    /// Exponential-jitter fraction of the solve time, in `[0, 1]`.
+    pub compute_jitter: f64,
+    /// Number of straggler workers (the highest worker ids).
+    pub stragglers: usize,
+    /// Compute-time multiplier applied to stragglers.
+    pub straggler_factor: f64,
+    /// ARQ attempt cap per frame; past it the frame is abandoned and the
+    /// receiver's mirror goes stale for the round.
+    pub max_attempts: u32,
+    /// Retransmission timeout charged per lost attempt (seconds).
+    pub arq_timeout_secs: f64,
+    /// Scheduled worker failures.
+    pub dropouts: Vec<Dropout>,
+    /// Seed for all simulator-side randomness (link loss, compute jitter);
+    /// the *model* randomness keeps the engine's seed so loss-free runs
+    /// are bit-identical to `GadmmEngine`.
+    pub seed: u64,
+    /// Record the full event trace (determinism tests, debugging).
+    pub record_trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            loss: 0.0,
+            burst: None,
+            link_rate_bps: 1e6,
+            per_frame_overhead_secs: 1e-3,
+            prop_secs_per_m: 1.0 / 2.998e8,
+            compute_mean_secs: 2e-3,
+            compute_jitter: 0.2,
+            stragglers: 0,
+            straggler_factor: 4.0,
+            max_attempts: 8,
+            arq_timeout_secs: 2e-3,
+            dropouts: Vec::new(),
+            seed: 7,
+            record_trace: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The idealized-network limit: no loss, zero latency, zero compute
+    /// time. In this configuration `coordinator::simulated` reproduces
+    /// `GadmmEngine` bit-for-bit (see the `sim_determinism` suite).
+    pub fn ideal() -> SimConfig {
+        SimConfig {
+            loss: 0.0,
+            burst: None,
+            link_rate_bps: 0.0,
+            per_frame_overhead_secs: 0.0,
+            prop_secs_per_m: 0.0,
+            compute_mean_secs: 0.0,
+            compute_jitter: 0.0,
+            stragglers: 0,
+            straggler_factor: 1.0,
+            max_attempts: 1,
+            arq_timeout_secs: 0.0,
+            dropouts: Vec::new(),
+            seed: 7,
+            record_trace: false,
+        }
+    }
+
+    pub fn loss_model(&self) -> LossModel {
+        match self.burst {
+            Some(b) => LossModel::GilbertElliott {
+                to_bad: b.to_bad,
+                to_good: b.to_good,
+                loss_good: self.loss.clamp(0.0, 1.0),
+                loss_bad: b.loss_bad,
+            },
+            None => LossModel::bernoulli(self.loss),
+        }
+    }
+
+    pub fn latency_model(&self) -> LatencyModel {
+        LatencyModel {
+            rate_bps: self.link_rate_bps,
+            per_frame_secs: self.per_frame_overhead_secs,
+            prop_secs_per_m: self.prop_secs_per_m,
+        }
+    }
+
+    pub fn compute_model(&self) -> ComputeModel {
+        ComputeModel {
+            mean_secs: self.compute_mean_secs,
+            jitter: self.compute_jitter,
+        }
+    }
+
+    /// Straggler factor for worker `id` out of `n`: the `stragglers`
+    /// highest ids run `straggler_factor`× slower.
+    pub fn compute_scale(&self, id: usize, n: usize) -> f64 {
+        if self.stragglers > 0 && id + self.stragglers >= n {
+            self.straggler_factor.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Parse a dropout schedule of the form `"3@50,7@120"` (worker 3 drops
+    /// before iteration 50, worker 7 before iteration 120). `;` also
+    /// separates entries.
+    pub fn parse_dropouts(text: &str) -> Result<Vec<Dropout>, String> {
+        let mut out = Vec::new();
+        for part in text.split([',', ';']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (w, k) = part
+                .split_once('@')
+                .ok_or_else(|| format!("bad dropout {part:?} (want worker@iteration)"))?;
+            let worker = w
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad dropout worker in {part:?}"))?;
+            let at_iteration = k
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| format!("bad dropout iteration in {part:?}"))?;
+            out.push(Dropout {
+                worker,
+                at_iteration,
+            });
+        }
+        Ok(out)
+    }
+}
+
 /// Top-level experiment description used by the CLI and figure harness.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub gadmm: GadmmConfig,
     pub net: NetConfig,
+    /// Discrete-event simulator settings (the `simulate` subcommand and
+    /// `figures::fig_sim`).
+    pub sim: SimConfig,
     /// Max iterations per run.
     pub iterations: u64,
     /// Loss-gap target (linreg figures).
@@ -135,6 +319,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             gadmm: GadmmConfig::default(),
             net: NetConfig::default(),
+            sim: SimConfig::default(),
             iterations: 2_000,
             loss_target: 1e-4,
             accuracy_target: 0.90,
@@ -202,6 +387,72 @@ impl ExperimentConfig {
                     value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
             }
             "area_side" | "area-side" => self.net.area_side = value.parse().map_err(|_| bad("f64"))?,
+            "loss" => {
+                let p: f64 = value.parse().map_err(|_| bad("f64"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad("probability in [0, 1]"));
+                }
+                self.sim.loss = p;
+            }
+            "ge_to_bad" | "ge-to-bad" => {
+                let p: f64 = value.parse().map_err(|_| bad("f64"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad("probability in [0, 1]"));
+                }
+                let mut b = self.sim.burst.unwrap_or_default();
+                b.to_bad = p;
+                self.sim.burst = Some(b);
+            }
+            "ge_to_good" | "ge-to-good" => {
+                let p: f64 = value.parse().map_err(|_| bad("f64"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad("probability in [0, 1]"));
+                }
+                let mut b = self.sim.burst.unwrap_or_default();
+                b.to_good = p;
+                self.sim.burst = Some(b);
+            }
+            "ge_loss_bad" | "ge-loss-bad" => {
+                let p: f64 = value.parse().map_err(|_| bad("f64"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad("probability in [0, 1]"));
+                }
+                let mut b = self.sim.burst.unwrap_or_default();
+                b.loss_bad = p;
+                self.sim.burst = Some(b);
+            }
+            "link_rate_mbps" | "link-rate-mbps" => {
+                self.sim.link_rate_bps =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e6
+            }
+            "frame_overhead_ms" | "frame-overhead-ms" => {
+                self.sim.per_frame_overhead_secs =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
+            }
+            "compute_ms" | "compute-ms" => {
+                self.sim.compute_mean_secs =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
+            }
+            "compute_jitter" | "compute-jitter" => {
+                self.sim.compute_jitter = value.parse().map_err(|_| bad("f64"))?
+            }
+            "stragglers" => self.sim.stragglers = value.parse().map_err(|_| bad("usize"))?,
+            "straggler_factor" | "straggler-factor" => {
+                self.sim.straggler_factor = value.parse().map_err(|_| bad("f64"))?
+            }
+            "max_attempts" | "max-attempts" => {
+                self.sim.max_attempts = value.parse().map_err(|_| bad("u32"))?
+            }
+            "arq_timeout_ms" | "arq-timeout-ms" => {
+                self.sim.arq_timeout_secs =
+                    value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
+            }
+            "sim_seed" | "sim-seed" => self.sim.seed = value.parse().map_err(|_| bad("u64"))?,
+            "dropouts" | "drop" => {
+                self.sim.dropouts =
+                    SimConfig::parse_dropouts(value).map_err(|why| bad(&why))?
+            }
+            "trace" => self.sim.record_trace = value.parse().map_err(|_| bad("bool"))?,
             _ => {
                 return Err(ConfigError::UnknownKey {
                     key: key.to_string(),
@@ -347,6 +598,73 @@ mod tests {
         cfg.apply_kv(&kv).unwrap();
         assert_eq!(cfg.net.channel.total_bandwidth_hz, 40e6);
         assert_eq!(cfg.net.channel.slot_secs, 0.1);
+    }
+
+    #[test]
+    fn sim_keys_apply() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("loss", "0.15");
+        kv.set("link_rate_mbps", "2");
+        kv.set("compute_ms", "5");
+        kv.set("stragglers", "2");
+        kv.set("straggler_factor", "8");
+        kv.set("max_attempts", "4");
+        kv.set("dropouts", "3@50, 7@120");
+        kv.set("trace", "true");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.sim.loss, 0.15);
+        assert_eq!(cfg.sim.link_rate_bps, 2e6);
+        assert_eq!(cfg.sim.compute_mean_secs, 5e-3);
+        assert_eq!(cfg.sim.stragglers, 2);
+        assert_eq!(cfg.sim.straggler_factor, 8.0);
+        assert_eq!(cfg.sim.max_attempts, 4);
+        assert_eq!(
+            cfg.sim.dropouts,
+            vec![
+                Dropout {
+                    worker: 3,
+                    at_iteration: 50
+                },
+                Dropout {
+                    worker: 7,
+                    at_iteration: 120
+                }
+            ]
+        );
+        assert!(cfg.sim.record_trace);
+
+        let mut kv = KvMap::new();
+        kv.set("loss", "1.5");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        let mut kv = KvMap::new();
+        kv.set("dropouts", "3-50");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn sim_loss_model_selection() {
+        let mut s = SimConfig::default();
+        s.loss = 0.1;
+        assert_eq!(
+            s.loss_model(),
+            crate::sim::link::LossModel::Bernoulli { p: 0.1 }
+        );
+        s.burst = Some(BurstParams::default());
+        assert!(matches!(
+            s.loss_model(),
+            crate::sim::link::LossModel::GilbertElliott { .. }
+        ));
+        assert_eq!(
+            SimConfig::ideal().loss_model(),
+            crate::sim::link::LossModel::Perfect
+        );
     }
 
     #[test]

@@ -9,14 +9,22 @@
 //!   neighbor messages over the `comm::transport` mailboxes; bit-for-bit
 //!   equivalent to the deterministic engine given the same seeds (enforced
 //!   by the `threaded_equivalence` integration test).
+//! * [`simulated`] — the same protocol driven through the `sim`
+//!   discrete-event network simulator: framed bytes over per-link
+//!   latency/loss models with ARQ, straggler compute distributions, and
+//!   worker-dropout fault injection with chain re-stitching; bit-for-bit
+//!   the deterministic engine in the ideal-network limit (enforced by the
+//!   `sim_determinism` integration test).
 //! * [`residuals`] — primal/dual residual and quantization-error tracking
 //!   (the Theorem 1/2 quantities).
 
 pub mod engine;
 pub mod residuals;
+pub mod simulated;
 pub mod threaded;
 
 pub use engine::{EnergyCtx, GadmmEngine, RunOptions, RunReport};
+pub use simulated::{SimReport, SimulatedGadmm};
 
 use crate::config::GadmmConfig;
 use crate::data::images::ImageDataset;

@@ -18,7 +18,7 @@
 //! [`super::engine::GadmmEngine`] — enforced by the `threaded_equivalence`
 //! integration test.
 
-use crate::comm::transport::{in_process_network, Endpoint};
+use crate::comm::transport::{chain_neighbors, in_process_network_with_neighbors, Endpoint};
 use crate::comm::{CommStats, Message, Payload};
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
@@ -63,7 +63,10 @@ pub fn run_threaded(
     assert!(n >= 2);
     let d = solvers[0].dims();
 
-    let endpoints = in_process_network(n);
+    // The chain topology is known up front, so endpoints only hold
+    // senders to their actual neighbors (O(n) handles, and a misdirected
+    // send would surface as a TransportError instead of a bad delivery).
+    let endpoints = in_process_network_with_neighbors(n, &chain_neighbors(n));
     let (report_tx, report_rx) = channel::<WorkerReport>();
 
     // Seed forks must match the deterministic engine exactly.

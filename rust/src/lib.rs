@@ -8,7 +8,11 @@
 //! * **L3 (this crate)** — the decentralized training coordinator: chain
 //!   topology, head/tail alternating scheduler, stochastic quantization and
 //!   bit-exact wire format, wireless energy model, parameter-server
-//!   baselines, metrics and the figure-regeneration harness.
+//!   baselines, metrics and the figure-regeneration harness — plus the
+//!   [`sim`] discrete-event network simulator (virtual clock, per-link
+//!   latency/loss models with ARQ, straggler distributions, worker-dropout
+//!   fault injection) that turns bits-only curves into time-to-accuracy
+//!   curves under link imperfections.
 //! * **L2 (`python/compile/model.py`)** — JAX compute graphs for the
 //!   per-worker local problems, AOT-lowered to HLO text once at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the hot spots
@@ -31,6 +35,7 @@ pub mod model;
 pub mod net;
 pub mod quant;
 pub mod runtime;
+pub mod sim;
 pub mod testing;
 pub mod util;
 

@@ -2,11 +2,14 @@
 //!
 //! Subcommands: `figures` (regenerate any paper figure), `train-linreg`
 //! and `train-dnn` (single runs, optionally through the PJRT artifacts),
-//! `info` (artifact/platform report). See `qgadmm --help`.
+//! `simulate` (GADMM vs Q-GADMM through the discrete-event network
+//! simulator, with a time-to-target JSON report), `info`
+//! (artifact/platform report). See `qgadmm --help`.
 
 use qgadmm::cli::{self, USAGE};
 use qgadmm::config::{ExperimentConfig, KvMap};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::coordinator::simulated::SimReport;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -57,6 +60,10 @@ fn main() -> anyhow::Result<()> {
         "train-dnn" => {
             let cfg = build_config(&inv.flags)?;
             train_dnn(&cfg)
+        }
+        "simulate" => {
+            let cfg = build_config(&inv.flags)?;
+            simulate(&cfg, &inv.flags)
         }
         "info" => info(),
         other => {
@@ -171,6 +178,104 @@ fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         report.comm.bits,
     );
     Ok(())
+}
+
+/// GADMM vs Q-GADMM through the discrete-event network simulator at the
+/// configured loss rate; writes `results/simulate/report.json` with
+/// time-to-target, retransmission, and stale-round numbers per algorithm.
+fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
+    use qgadmm::figures::fig_sim::run_sim_linreg;
+    use qgadmm::figures::helpers::LinregWorld;
+    use qgadmm::util::json::Json;
+
+    let mut c = cfg.clone();
+    // The default experiment scale is tuned for the engine sweeps; the
+    // simulator's headline number needs the target actually reached, so
+    // resize the *defaults* — an explicit --workers / --iters always wins.
+    if flags.get("workers").is_none() {
+        c.gadmm.workers = c.gadmm.workers.min(20);
+    }
+    let iterations = if flags.get("iters").is_none() && flags.get("iterations").is_none() {
+        c.iterations.max(8_000)
+    } else {
+        c.iterations
+    };
+    let world = LinregWorld::new(&c, c.seed, c.seed ^ 0x99);
+    println!(
+        "simulating {} workers, chain length {:.0} m, loss {:.3}, target gap {:.1e}",
+        c.gadmm.workers,
+        world.topo.total_length(&world.points),
+        c.sim.loss,
+        c.loss_target,
+    );
+
+    let mut algos = Json::obj();
+    for (name, quant) in [
+        ("GADMM", None),
+        ("Q-GADMM", Some(qgadmm::config::QuantConfig::default())),
+    ] {
+        let r = run_sim_linreg(
+            name,
+            &world,
+            &c,
+            quant,
+            c.sim.loss,
+            iterations,
+            c.loss_target,
+            c.seed,
+        );
+        print_sim_summary(name, &r);
+        algos.set(name, sim_report_json(&r));
+    }
+
+    let mut doc = Json::obj();
+    doc.set("loss", Json::Num(c.sim.loss));
+    doc.set("workers", Json::Num(c.gadmm.workers as f64));
+    doc.set("seed", Json::Num(c.seed as f64));
+    doc.set("target", Json::Num(c.loss_target));
+    doc.set("link_rate_bps", Json::Num(c.sim.link_rate_bps));
+    doc.set("algorithms", algos);
+    let dir = std::path::Path::new(&c.results_dir).join("simulate");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("report.json");
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("time-to-target report written to {}", path.display());
+    Ok(())
+}
+
+fn print_sim_summary(name: &str, r: &SimReport) {
+    println!(
+        "{name:<10} iters={:<6} sim_time={:<10} bits={:<12} wire_bytes={:<12} retrans={:<8} stale={}",
+        r.iterations_run,
+        r.time_to_target_secs
+            .map(|t| format!("{t:.3}s"))
+            .unwrap_or_else(|| format!("(>{:.3}s)", r.sim_secs)),
+        r.comm.bits,
+        r.net.wire_bytes,
+        r.net.retransmissions,
+        r.net.abandoned,
+    );
+}
+
+fn sim_report_json(r: &SimReport) -> qgadmm::util::json::Json {
+    use qgadmm::util::json::Json;
+    let mut obj = Json::obj();
+    obj.set(
+        "time_to_target_secs",
+        r.time_to_target_secs.map(Json::Num).unwrap_or(Json::Null),
+    );
+    obj.set("sim_secs", Json::Num(r.sim_secs));
+    obj.set("iterations", Json::Num(r.iterations_run as f64));
+    obj.set("bits", Json::Num(r.comm.bits as f64));
+    obj.set("transmissions", Json::Num(r.comm.transmissions as f64));
+    obj.set("wire_bytes", Json::Num(r.net.wire_bytes as f64));
+    obj.set("retransmissions", Json::Num(r.net.retransmissions as f64));
+    obj.set("frames_delivered", Json::Num(r.net.delivered as f64));
+    // One frame abandoned at the ARQ cap == one stale-mirror round.
+    obj.set("frames_abandoned", Json::Num(r.net.abandoned as f64));
+    obj.set("restitches", Json::Num(r.restitches as f64));
+    obj.set("curve", r.recorder.thinned(400).to_json());
+    obj
 }
 
 fn info() -> anyhow::Result<()> {

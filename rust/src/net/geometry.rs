@@ -41,6 +41,18 @@ impl Area {
     }
 }
 
+/// `n` workers on a line with uniform `spacing` meters between neighbors —
+/// the synthetic geometry used when a chain topology needs link distances
+/// but no random drop is in play (e.g. the simulator's line worlds).
+pub fn collinear(n: usize, spacing: f64) -> Vec<Point> {
+    (0..n)
+        .map(|i| Point {
+            x: i as f64 * spacing,
+            y: 0.0,
+        })
+        .collect()
+}
+
 /// Index of the worker with minimum sum-distance to all others — the
 /// paper's parameter-server selection rule ("we choose the worker with the
 /// minimum sum distance to all workers as the PS").

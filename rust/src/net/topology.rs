@@ -20,6 +20,17 @@ pub struct Topology {
 
 impl Topology {
     /// Identity chain 0–1–2–…–(n−1), used when no geometry is in play.
+    ///
+    /// ```
+    /// use qgadmm::net::topology::Topology;
+    ///
+    /// let t = Topology::line(4);
+    /// assert_eq!(t.len(), 4);
+    /// assert_eq!(t.worker_at(2), 2);
+    /// assert_eq!(t.neighbor_positions(0), vec![1]);
+    /// assert_eq!(t.neighbor_positions(2), vec![1, 3]);
+    /// assert!(Topology::is_head_position(0) && !Topology::is_head_position(1));
+    /// ```
     pub fn line(n: usize) -> Topology {
         assert!(n >= 2, "a chain needs at least two workers");
         Topology {
@@ -71,8 +82,8 @@ impl Topology {
                     // (i−1, i) and (j, j+1).
                     let before = self.link_cost(points, i.wrapping_sub(1), i)
                         + self.link_cost(points, j, j + 1);
-                    let after = self.link_cost_pair(points, i.wrapping_sub(1), j)
-                        + self.link_cost_pair(points, i, j + 1);
+                    let after = self.link_cost(points, i.wrapping_sub(1), j)
+                        + self.link_cost(points, i, j + 1);
                     if after + 1e-12 < before {
                         self.order[i..=j].reverse();
                         improved = true;
@@ -85,13 +96,9 @@ impl Topology {
         }
     }
 
-    fn link_cost(&self, points: &[Point], a: usize, b: usize) -> f64 {
-        self.link_cost_pair(points, a, b)
-    }
-
     /// Distance between chain positions `a` and `b`, treating out-of-range
     /// positions (the virtual ends) as zero-cost.
-    fn link_cost_pair(&self, points: &[Point], a: usize, b: usize) -> f64 {
+    fn link_cost(&self, points: &[Point], a: usize, b: usize) -> f64 {
         if a >= self.order.len() || b >= self.order.len() {
             return 0.0;
         }

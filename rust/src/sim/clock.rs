@@ -1,0 +1,75 @@
+//! Virtual time.
+//!
+//! Simulated time is an integer count of nanoseconds. Integer time makes
+//! the event order a total order independent of float rounding, which is
+//! what lets two runs with the same seed produce *bit-identical* event
+//! traces — the property the `sim_determinism` suite pins.
+
+/// A point in virtual time (nanoseconds since simulation start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// Convert from seconds, rounding to the nearest nanosecond. Negative
+    /// and non-finite inputs clamp to zero (durations cannot be negative).
+    pub fn from_secs_f64(secs: f64) -> SimTime {
+        if !secs.is_finite() || secs <= 0.0 {
+            return SimTime(0);
+        }
+        SimTime((secs * 1e9).round() as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating addition of a duration in nanoseconds.
+    pub fn plus_nanos(self, nanos: u64) -> SimTime {
+        SimTime(self.0.saturating_add(nanos))
+    }
+
+    /// Saturating addition of a duration in seconds.
+    pub fn plus_secs_f64(self, secs: f64) -> SimTime {
+        self.plus_nanos(SimTime::from_secs_f64(secs).0)
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        if other.0 > self.0 {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        let t = SimTime::from_secs_f64(1.25);
+        assert_eq!(t.as_nanos(), 1_250_000_000);
+        assert!((t.as_secs_f64() - 1.25).abs() < 1e-12);
+        assert_eq!(SimTime::from_secs_f64(0.0), SimTime::ZERO);
+        assert_eq!(SimTime::from_secs_f64(-3.0), SimTime::ZERO);
+        assert_eq!(SimTime::from_secs_f64(f64::NAN), SimTime::ZERO);
+    }
+
+    #[test]
+    fn arithmetic_and_order() {
+        let a = SimTime::from_secs_f64(1e-3);
+        let b = a.plus_secs_f64(2e-3);
+        assert!(b > a);
+        assert_eq!(b.as_nanos(), 3_000_000);
+        assert_eq!(a.max(b), b);
+        assert_eq!(b.max(a), b);
+        assert_eq!(SimTime(u64::MAX).plus_nanos(10), SimTime(u64::MAX));
+    }
+}

@@ -1,0 +1,437 @@
+//! Per-link and per-worker fault models.
+//!
+//! Three pluggable pieces, all driven by explicitly-seeded [`Rng`] streams
+//! so every simulated run is exactly reproducible:
+//!
+//! * [`LatencyModel`] — frame serialization time (`bytes·8 / rate`), a
+//!   fixed per-frame MAC/processing overhead, and distance-based
+//!   propagation delay (via `net::geometry` distances);
+//! * [`LossModel`] — Bernoulli (iid) or Gilbert–Elliott (bursty two-state)
+//!   frame loss, applied per *directed link* with stop-and-wait ARQ: a
+//!   lost frame costs the transmission plus a retransmission timeout, and
+//!   a frame abandoned after `max_attempts` leaves the receiver's mirror
+//!   stale — the decentralized error-propagation case of Sec. III;
+//! * [`ComputeModel`] — per-worker local-solve durations with an
+//!   exponential jitter tail and per-worker straggler scaling.
+//!
+//! [`SimNet`] owns the per-link state (loss-chain state + RNG per directed
+//! link, created lazily from a deterministic per-link seed) and the
+//! aggregate [`NetStats`] ledger.
+
+use super::clock::SimTime;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Frame-loss process for one directed link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossModel {
+    /// Lossless.
+    Perfect,
+    /// Each frame is lost independently with probability `p`.
+    Bernoulli { p: f64 },
+    /// Two-state Markov (Gilbert–Elliott) burst loss: per frame, lose with
+    /// the current state's probability, then transition
+    /// good→bad w.p. `to_bad`, bad→good w.p. `to_good`.
+    GilbertElliott {
+        to_bad: f64,
+        to_good: f64,
+        loss_good: f64,
+        loss_bad: f64,
+    },
+}
+
+impl LossModel {
+    /// Convenience: iid loss at rate `p` (0 ⇒ perfect).
+    pub fn bernoulli(p: f64) -> LossModel {
+        if p <= 0.0 {
+            LossModel::Perfect
+        } else {
+            LossModel::Bernoulli { p: p.min(1.0) }
+        }
+    }
+}
+
+/// One directed link's mutable state: its loss-chain position and RNG.
+#[derive(Clone, Debug)]
+pub struct LinkState {
+    model: LossModel,
+    bad: bool,
+    rng: Rng,
+}
+
+impl LinkState {
+    pub fn new(model: LossModel, rng: Rng) -> LinkState {
+        LinkState {
+            model,
+            bad: false,
+            rng,
+        }
+    }
+
+    /// Sample one frame attempt; `true` means the frame was lost.
+    pub fn attempt_lost(&mut self) -> bool {
+        match self.model {
+            LossModel::Perfect => false,
+            LossModel::Bernoulli { p } => self.rng.uniform() < p,
+            LossModel::GilbertElliott {
+                to_bad,
+                to_good,
+                loss_good,
+                loss_bad,
+            } => {
+                let p = if self.bad { loss_bad } else { loss_good };
+                let lost = self.rng.uniform() < p;
+                let flip = self.rng.uniform();
+                if self.bad {
+                    if flip < to_good {
+                        self.bad = false;
+                    }
+                } else if flip < to_bad {
+                    self.bad = true;
+                }
+                lost
+            }
+        }
+    }
+}
+
+/// Frame timing model shared by every link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyModel {
+    /// Serialization rate in bit/s. `<= 0` or non-finite ⇒ instantaneous
+    /// (the idealized-network limit used by the equivalence tests).
+    pub rate_bps: f64,
+    /// Fixed per-frame overhead (MAC, processing) in seconds.
+    pub per_frame_secs: f64,
+    /// Propagation delay per meter of link distance, in s/m
+    /// (radio: 1/c ≈ 3.336 ns/m).
+    pub prop_secs_per_m: f64,
+}
+
+impl LatencyModel {
+    /// Zero-latency network: frames arrive the instant they are sent.
+    pub fn ideal() -> LatencyModel {
+        LatencyModel {
+            rate_bps: 0.0,
+            per_frame_secs: 0.0,
+            prop_secs_per_m: 0.0,
+        }
+    }
+
+    /// Time to clock `bytes` onto the medium.
+    pub fn tx_secs(&self, bytes: usize) -> f64 {
+        if self.rate_bps > 0.0 && self.rate_bps.is_finite() {
+            bytes as f64 * 8.0 / self.rate_bps
+        } else {
+            0.0
+        }
+    }
+
+    /// One-way delay of a successful frame over `dist_m` meters.
+    pub fn delivery_secs(&self, bytes: usize, dist_m: f64) -> f64 {
+        self.per_frame_secs + self.tx_secs(bytes) + self.prop_secs_per_m * dist_m.max(0.0)
+    }
+}
+
+impl Default for LatencyModel {
+    /// 1 Mb/s links, 1 ms per-frame overhead, radio propagation.
+    fn default() -> Self {
+        LatencyModel {
+            rate_bps: 1e6,
+            per_frame_secs: 1e-3,
+            prop_secs_per_m: 1.0 / 2.998e8,
+        }
+    }
+}
+
+/// Per-worker local-solve duration model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// Mean solve time in seconds (`<= 0` ⇒ instantaneous compute).
+    pub mean_secs: f64,
+    /// Fraction of the mean that is exponential jitter (`0` ⇒
+    /// deterministic, `1` ⇒ fully exponential). Clamped to `[0, 1]`.
+    pub jitter: f64,
+}
+
+impl ComputeModel {
+    pub fn instant() -> ComputeModel {
+        ComputeModel {
+            mean_secs: 0.0,
+            jitter: 0.0,
+        }
+    }
+
+    /// Sample one solve duration; `scale` is the worker's straggler factor
+    /// (1.0 = nominal). Always consumes exactly one uniform so the stream
+    /// stays aligned across configurations.
+    pub fn sample_secs(&self, scale: f64, rng: &mut Rng) -> f64 {
+        let u = rng.uniform();
+        if self.mean_secs <= 0.0 {
+            return 0.0;
+        }
+        let base = self.mean_secs * scale.max(0.0);
+        let j = self.jitter.clamp(0.0, 1.0);
+        // E[sample] = base: (1−j)·base deterministic + j·base·Exp(1).
+        base * (1.0 - j) + base * j * -(1.0 - u).ln()
+    }
+}
+
+/// Aggregate link-layer ledger for one simulated run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetStats {
+    /// Frames delivered to a receiver.
+    pub delivered: u64,
+    /// Extra transmission attempts beyond the first (ARQ cost).
+    pub retransmissions: u64,
+    /// Frames abandoned after the ARQ attempt cap (the receiver's mirror
+    /// goes stale for that round).
+    pub abandoned: u64,
+    /// Total bytes put on the air, counting every attempt.
+    pub wire_bytes: u64,
+}
+
+/// Outcome of one [`SimNet::transmit`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transmission {
+    /// Delivery instant; `None` if the frame was abandoned after the
+    /// attempt cap.
+    pub deliver_at: Option<SimTime>,
+    /// Attempts made (1 = delivered first try).
+    pub attempts: u32,
+}
+
+/// The link layer: per-directed-link loss state plus shared timing.
+pub struct SimNet {
+    latency: LatencyModel,
+    loss: LossModel,
+    max_attempts: u32,
+    arq_timeout_secs: f64,
+    seed: u64,
+    links: BTreeMap<(usize, usize), LinkState>,
+    pub stats: NetStats,
+}
+
+impl SimNet {
+    pub fn new(
+        latency: LatencyModel,
+        loss: LossModel,
+        max_attempts: u32,
+        arq_timeout_secs: f64,
+        seed: u64,
+    ) -> SimNet {
+        SimNet {
+            latency,
+            loss,
+            max_attempts: max_attempts.max(1),
+            arq_timeout_secs: arq_timeout_secs.max(0.0),
+            seed,
+            links: BTreeMap::new(),
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn latency(&self) -> &LatencyModel {
+        &self.latency
+    }
+
+    /// The per-link RNG seed is a pure function of `(net seed, from, to)`,
+    /// so link state never depends on the order links first carry traffic.
+    fn link_state(&mut self, from: usize, to: usize) -> &mut LinkState {
+        let (loss, seed) = (self.loss, self.seed);
+        self.links.entry((from, to)).or_insert_with(|| {
+            let label = ((from as u64) << 32) | (to as u64 & 0xFFFF_FFFF);
+            let s = seed ^ label.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            LinkState::new(loss, Rng::seed_from_u64(s))
+        })
+    }
+
+    /// Send `bytes` from worker `from` to worker `to` over `dist_m` meters
+    /// starting at `now`, with stop-and-wait ARQ. Deterministic given the
+    /// net seed and the history of this directed link.
+    pub fn transmit(
+        &mut self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        dist_m: f64,
+        now: SimTime,
+    ) -> Transmission {
+        let max_attempts = self.max_attempts;
+        let arq_timeout = self.arq_timeout_secs;
+        let success_secs = self.latency.delivery_secs(bytes, dist_m);
+        let attempt_cost = self.latency.per_frame_secs + self.latency.tx_secs(bytes) + arq_timeout;
+        let link = self.link_state(from, to);
+
+        let mut elapsed = 0.0f64;
+        let mut attempts = 0u32;
+        let mut lost_last = true;
+        while attempts < max_attempts {
+            attempts += 1;
+            lost_last = link.attempt_lost();
+            if !lost_last {
+                elapsed += success_secs;
+                break;
+            }
+            elapsed += attempt_cost;
+        }
+
+        self.stats.wire_bytes += bytes as u64 * attempts as u64;
+        self.stats.retransmissions += (attempts - 1) as u64;
+        if lost_last {
+            self.stats.abandoned += 1;
+            Transmission {
+                deliver_at: None,
+                attempts,
+            }
+        } else {
+            self.stats.delivered += 1;
+            Transmission {
+                deliver_at: Some(now.plus_secs_f64(elapsed)),
+                attempts,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(loss: LossModel) -> SimNet {
+        SimNet::new(LatencyModel::default(), loss, 4, 5e-3, 42)
+    }
+
+    #[test]
+    fn perfect_link_delivers_first_try() {
+        let mut n = net(LossModel::Perfect);
+        let t = n.transmit(0, 1, 125, 100.0, SimTime::ZERO);
+        assert_eq!(t.attempts, 1);
+        // 1 ms overhead + 125·8/1e6 s tx + 100 m propagation.
+        let want = 1e-3 + 1e-3 + 100.0 / 2.998e8;
+        let got = t.deliver_at.unwrap().as_secs_f64();
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+        assert_eq!(n.stats.delivered, 1);
+        assert_eq!(n.stats.retransmissions, 0);
+        assert_eq!(n.stats.wire_bytes, 125);
+    }
+
+    #[test]
+    fn certain_loss_abandons_at_cap() {
+        let mut n = net(LossModel::Bernoulli { p: 1.0 });
+        let t = n.transmit(0, 1, 100, 10.0, SimTime::ZERO);
+        assert_eq!(t.attempts, 4);
+        assert!(t.deliver_at.is_none());
+        assert_eq!(n.stats.abandoned, 1);
+        assert_eq!(n.stats.retransmissions, 3);
+        assert_eq!(n.stats.wire_bytes, 400);
+    }
+
+    #[test]
+    fn lossy_link_retransmits_and_charges_time() {
+        let mut a = net(LossModel::Bernoulli { p: 0.5 });
+        let mut total_attempts = 0u64;
+        let mut max_delay = 0.0f64;
+        for i in 0..200 {
+            let t = a.transmit(0, 1, 50, 0.0, SimTime::ZERO);
+            total_attempts += t.attempts as u64;
+            if let Some(d) = t.deliver_at {
+                max_delay = max_delay.max(d.as_secs_f64());
+                if t.attempts > 1 {
+                    // A retransmitted frame arrives later than a clean one.
+                    let clean = a.latency().delivery_secs(50, 0.0);
+                    assert!(d.as_secs_f64() > clean, "attempt {i}");
+                }
+            }
+        }
+        // At p = 0.5 with cap 4 the mean attempt count is well above 1.
+        assert!(total_attempts > 220, "attempts={total_attempts}");
+        assert!(a.stats.retransmissions > 0);
+        assert_eq!(
+            a.stats.delivered + a.stats.abandoned,
+            200,
+            "every frame resolves"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs_and_link_creation_order() {
+        let run = |order: &[(usize, usize)]| {
+            let mut n = net(LossModel::Bernoulli { p: 0.3 });
+            order
+                .iter()
+                .map(|&(f, t)| n.transmit(f, t, 64, 50.0, SimTime::ZERO))
+                .collect::<Vec<_>>()
+        };
+        // Same call sequence twice → identical outcomes.
+        assert_eq!(run(&[(0, 1), (1, 0), (0, 1)]), run(&[(0, 1), (1, 0), (0, 1)]));
+        // A link's stream does not depend on when *other* links appear.
+        let a = run(&[(0, 1), (0, 1), (5, 6)]);
+        let b = run(&[(5, 6), (0, 1), (0, 1)]);
+        assert_eq!(a[0], b[1]);
+        assert_eq!(a[1], b[2]);
+    }
+
+    #[test]
+    fn gilbert_elliott_bursts_more_than_bernoulli() {
+        // Same marginal loss ≈ 0.2, but GE concentrates losses in bursts:
+        // count back-to-back double losses over one link.
+        let doubles = |model: LossModel| {
+            let mut link = LinkState::new(model, Rng::seed_from_u64(7));
+            let mut prev = false;
+            let mut d = 0u32;
+            for _ in 0..20_000 {
+                let lost = link.attempt_lost();
+                if lost && prev {
+                    d += 1;
+                }
+                prev = lost;
+            }
+            d
+        };
+        let iid = doubles(LossModel::Bernoulli { p: 0.2 });
+        let ge = doubles(LossModel::GilbertElliott {
+            to_bad: 0.05,
+            to_good: 0.25,
+            loss_good: 0.033,
+            loss_bad: 1.0,
+        });
+        assert!(
+            ge as f64 > iid as f64 * 1.5,
+            "GE should burst: ge={ge} iid={iid}"
+        );
+    }
+
+    #[test]
+    fn compute_model_scales_and_jitters() {
+        let mut rng = Rng::seed_from_u64(3);
+        let det = ComputeModel {
+            mean_secs: 2e-3,
+            jitter: 0.0,
+        };
+        assert_eq!(det.sample_secs(1.0, &mut rng), 2e-3);
+        assert_eq!(det.sample_secs(4.0, &mut rng), 8e-3);
+        assert_eq!(ComputeModel::instant().sample_secs(1.0, &mut rng), 0.0);
+
+        let jit = ComputeModel {
+            mean_secs: 1e-3,
+            jitter: 0.5,
+        };
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let s = jit.sample_secs(1.0, &mut rng);
+            assert!(s >= 0.5e-3 - 1e-12, "never below the deterministic floor");
+            sum += s;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1e-3).abs() < 5e-5, "mean={mean}");
+    }
+
+    #[test]
+    fn loss_model_bernoulli_constructor_clamps() {
+        assert_eq!(LossModel::bernoulli(0.0), LossModel::Perfect);
+        assert_eq!(LossModel::bernoulli(-1.0), LossModel::Perfect);
+        assert_eq!(LossModel::bernoulli(2.0), LossModel::Bernoulli { p: 1.0 });
+    }
+}

@@ -1,0 +1,32 @@
+//! Discrete-event wireless network simulator.
+//!
+//! The engine (`coordinator::engine`) and the threaded runtime measure
+//! communication in an idealized lock-step world: every broadcast arrives
+//! instantly and losslessly. This subsystem adds the dimension the paper's
+//! *communication-efficiency* claim actually lives in — wall-clock time
+//! under link imperfections:
+//!
+//! * [`clock`] — virtual time ([`SimTime`], integer nanoseconds, totally
+//!   ordered and exactly reproducible across runs);
+//! * [`events`] — a deterministic discrete-event queue (binary heap keyed
+//!   by `(time, sequence)`, so simultaneous events pop in schedule order);
+//! * [`link`] — pluggable per-link models: serialization + distance-based
+//!   propagation latency, Bernoulli or Gilbert–Elliott frame loss with
+//!   stop-and-wait ARQ retransmission, and per-worker compute-time
+//!   (straggler) distributions.
+//!
+//! `coordinator::simulated` drives GADMM/Q-GADMM rounds through these
+//! pieces, moving every model update as real framed bytes via
+//! [`crate::comm::wire`]. With loss 0 and zero latency the simulated run
+//! is bit-for-bit the deterministic engine (enforced by the
+//! `sim_determinism` integration suite); with loss it exposes the
+//! decentralized error propagation of Sec. III that bits-only accounting
+//! cannot show.
+
+pub mod clock;
+pub mod events;
+pub mod link;
+
+pub use clock::SimTime;
+pub use events::EventQueue;
+pub use link::{ComputeModel, LatencyModel, LinkState, LossModel, NetStats, SimNet};

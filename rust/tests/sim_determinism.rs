@@ -1,0 +1,243 @@
+//! The discrete-event simulator's two hard guarantees:
+//!
+//! 1. **Determinism** — the same seed + `SimConfig` yields bit-identical
+//!    event traces and metric curves across runs, including under loss,
+//!    bursts, stragglers, and dropouts.
+//! 2. **Engine equivalence** — with loss 0 and zero latency
+//!    (`SimConfig::ideal()`), the simulated runtime reproduces
+//!    `GadmmEngine`'s per-iteration models bit-for-bit (the
+//!    `threaded_equivalence` pattern, extended to the simulator).
+
+use qgadmm::config::{Dropout, GadmmConfig, QuantConfig, SimConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::coordinator::simulated::SimulatedGadmm;
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::net::geometry::collinear;
+use qgadmm::net::topology::Topology;
+
+fn world(workers: usize) -> (LinRegDataset, Partition) {
+    let spec = LinRegSpec {
+        samples: 1_400,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 71);
+    let partition = Partition::contiguous(data.samples(), workers);
+    (data, partition)
+}
+
+fn build_sim(
+    quant: Option<QuantConfig>,
+    sim_cfg: SimConfig,
+    workers: usize,
+    seed: u64,
+) -> (LinRegDataset, SimulatedGadmm<LinRegProblem>) {
+    let (data, partition) = world(workers);
+    let rho = 1600.0f32;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant,
+    };
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let sim = SimulatedGadmm::new(
+        cfg,
+        sim_cfg,
+        problem,
+        Topology::line(workers),
+        collinear(workers, 40.0),
+        seed,
+    );
+    (data, sim)
+}
+
+/// Same seed + config ⇒ bit-identical traces and curves.
+fn assert_two_runs_identical(sim_cfg: SimConfig, quant: Option<QuantConfig>, iters: u64) {
+    let opts = RunOptions {
+        iterations: iters,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    let run = || {
+        let (_, mut sim) = build_sim(quant, sim_cfg.clone(), 6, 2024);
+        let report = sim.run(&opts, |s| s.global_objective());
+        report
+    };
+    let a = run();
+    let b = run();
+
+    assert_eq!(a.trace, b.trace, "event traces diverged");
+    assert!(!a.trace.is_empty(), "trace recording must be on for this test");
+    assert_eq!(a.iterations_run, b.iterations_run);
+    assert_eq!(a.comm.bits, b.comm.bits);
+    assert_eq!(a.net, b.net);
+    assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits());
+    assert_eq!(a.recorder.points.len(), b.recorder.points.len());
+    for (pa, pb) in a.recorder.points.iter().zip(&b.recorder.points) {
+        assert_eq!(pa.iteration, pb.iteration);
+        assert_eq!(pa.bits, pb.bits);
+        assert_eq!(pa.comm_rounds, pb.comm_rounds);
+        assert_eq!(
+            pa.value.to_bits(),
+            pb.value.to_bits(),
+            "metric diverged at iteration {}",
+            pa.iteration
+        );
+        assert_eq!(
+            pa.compute_secs.to_bits(),
+            pb.compute_secs.to_bits(),
+            "virtual clock diverged at iteration {}",
+            pa.iteration
+        );
+    }
+}
+
+#[test]
+fn deterministic_under_iid_loss() {
+    let mut s = SimConfig::default();
+    s.loss = 0.15;
+    s.record_trace = true;
+    assert_two_runs_identical(s, Some(QuantConfig::default()), 50);
+}
+
+#[test]
+fn deterministic_under_bursts_stragglers_and_dropouts() {
+    let mut s = SimConfig::default();
+    s.loss = 0.05;
+    s.burst = Some(qgadmm::config::BurstParams::default());
+    s.stragglers = 2;
+    s.straggler_factor = 6.0;
+    s.compute_jitter = 0.8;
+    s.dropouts = vec![Dropout {
+        worker: 4,
+        at_iteration: 20,
+    }];
+    s.record_trace = true;
+    assert_two_runs_identical(s, Some(QuantConfig::default()), 60);
+}
+
+/// The `threaded_equivalence` pattern, extended: ideal network ⇒ the
+/// simulator is the deterministic engine, bit for bit.
+fn run_equivalence_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
+    let (data, partition) = world(workers);
+    let rho = 1600.0f32;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant,
+    };
+    let opts = RunOptions {
+        iterations: iters,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+
+    // Deterministic engine.
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, Topology::line(workers), seed);
+    let eng_report = engine.run(&opts, |e| e.global_objective());
+
+    // Simulated runtime over the ideal network.
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut sim = SimulatedGadmm::new(
+        cfg,
+        SimConfig::ideal(),
+        problem,
+        Topology::line(workers),
+        collinear(workers, 40.0),
+        seed,
+    );
+    let sim_report = sim.run(&opts, |s| s.global_objective());
+
+    // Bit-for-bit: per-iteration objectives, final models, views, comm.
+    assert_eq!(
+        eng_report.recorder.points.len(),
+        sim_report.recorder.points.len()
+    );
+    for (a, b) in eng_report
+        .recorder
+        .points
+        .iter()
+        .zip(&sim_report.recorder.points)
+    {
+        assert_eq!(
+            a.value.to_bits(),
+            b.value.to_bits(),
+            "objective diverged at iteration {}",
+            a.iteration
+        );
+        assert_eq!(a.bits, b.bits, "bit accounting diverged at {}", a.iteration);
+        assert_eq!(a.comm_rounds, b.comm_rounds);
+    }
+    for p in 0..workers {
+        assert_eq!(
+            engine.theta_at(p),
+            sim.theta_of(p),
+            "theta diverged at position {p}"
+        );
+        assert_eq!(
+            engine.view_at(p),
+            sim.view_of(p),
+            "view diverged at position {p}"
+        );
+    }
+    assert_eq!(engine.comm().bits, sim.comm().bits);
+    assert_eq!(engine.comm().transmissions, sim.comm().transmissions);
+    // Ideal network: nothing retransmitted, nothing stale, clock at zero.
+    assert_eq!(sim.net_stats().retransmissions, 0);
+    assert_eq!(sim.net_stats().abandoned, 0);
+    assert_eq!(sim.stale_rounds(), 0);
+    assert_eq!(sim.now_secs(), 0.0);
+}
+
+#[test]
+fn ideal_network_quantized_matches_engine() {
+    run_equivalence_pair(Some(QuantConfig::default()), 6, 60, 2024);
+}
+
+#[test]
+fn ideal_network_full_precision_matches_engine() {
+    run_equivalence_pair(None, 5, 60, 7);
+}
+
+#[test]
+fn ideal_network_odd_workers_higher_bits_matches_engine() {
+    run_equivalence_pair(
+        Some(QuantConfig {
+            bits: 4,
+            ..QuantConfig::default()
+        }),
+        7,
+        40,
+        99,
+    );
+}
+
+#[test]
+fn loss_changes_trajectories_but_not_legality() {
+    // Sanity for the fault path: a lossy run must *diverge* from the
+    // lossless one (stale mirrors really happen) while staying finite.
+    let mut lossy_cfg = SimConfig::ideal();
+    lossy_cfg.loss = 0.5;
+    lossy_cfg.max_attempts = 1; // every loss is an abandoned frame
+    let (_, mut ideal) = build_sim(Some(QuantConfig::default()), SimConfig::ideal(), 6, 11);
+    let (_, mut lossy) = build_sim(Some(QuantConfig::default()), lossy_cfg, 6, 11);
+    for _ in 0..30 {
+        assert!(ideal.iterate());
+        assert!(lossy.iterate());
+    }
+    assert!(lossy.stale_rounds() > 0, "p=0.5 cap=1 must drop frames");
+    let mut any_diff = false;
+    for p in 0..6 {
+        if ideal.theta_of(p) != lossy.theta_of(p) {
+            any_diff = true;
+        }
+        assert!(lossy.theta_of(p).iter().all(|x| x.is_finite()));
+    }
+    assert!(any_diff, "loss must perturb the trajectory");
+}

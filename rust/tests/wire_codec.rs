@@ -1,0 +1,126 @@
+//! Wire-format invariants across layers: the bitpack payload codec, the
+//! framed message codec, and the `CommStats` bit accounting must agree —
+//! the serialized bytes never disagree with `Payload::bits()` by more
+//! than the fixed frame overhead.
+
+use qgadmm::comm::{wire, CommStats, Message, Payload};
+use qgadmm::quant::{bitpack, QuantizedMsg};
+use qgadmm::testing::property;
+use qgadmm::util::rng::Rng;
+
+#[test]
+fn bitpack_roundtrip_random_bits_and_levels() {
+    // Random width 1..=16, random length, random in-range levels:
+    // pack ∘ unpack is the identity and the byte length is exactly
+    // ⌈b·d/8⌉.
+    property("bitpack roundtrip (integration)", 300, |rng: &mut Rng| {
+        let bits = 1 + rng.below(16) as u8;
+        let n = rng.below(300);
+        let max = 1u64 << bits;
+        let levels: Vec<u32> = (0..n).map(|_| rng.below(max as usize) as u32).collect();
+        let bytes = bitpack::pack(&levels, bits).unwrap();
+        assert_eq!(bytes.len(), (n * bits as usize).div_ceil(8));
+        assert_eq!(bitpack::unpack(&bytes, bits, n).unwrap(), levels);
+    });
+}
+
+#[test]
+fn quantized_msg_roundtrip_and_size() {
+    property("quantized msg codec", 200, |rng: &mut Rng| {
+        let bits = 1 + rng.below(16) as u8;
+        let d = rng.below(200);
+        let max = 1u64 << bits;
+        let msg = QuantizedMsg {
+            bits,
+            radius: rng.uniform_f32() * 4.0,
+            levels: (0..d).map(|_| rng.below(max as usize) as u32).collect(),
+        };
+        let bytes = msg.encode();
+        assert_eq!(bytes.len(), 5 + (bits as usize * d).div_ceil(8));
+        assert_eq!(QuantizedMsg::decode(&bytes, d).unwrap(), msg);
+    });
+}
+
+fn random_payload(rng: &mut Rng) -> Payload {
+    match rng.below(3) {
+        0 => Payload::Stop,
+        1 => {
+            let d = rng.below(128);
+            Payload::Full((0..d).map(|_| rng.uniform_f32() * 6.0 - 3.0).collect())
+        }
+        _ => {
+            let bits = 1 + rng.below(16) as u8;
+            let d = rng.below(128);
+            let max = 1u64 << bits;
+            Payload::Quantized(QuantizedMsg {
+                bits,
+                radius: rng.uniform_f32(),
+                levels: (0..d).map(|_| rng.below(max as usize) as u32).collect(),
+            })
+        }
+    }
+}
+
+fn dims_of(p: &Payload) -> usize {
+    match p {
+        Payload::Stop => 0,
+        Payload::Full(v) => v.len(),
+        Payload::Quantized(q) => q.levels.len(),
+    }
+}
+
+#[test]
+fn commstats_bits_vs_wire_bytes_consistency() {
+    // Accumulate the paper accounting (CommStats from Payload::bits) and
+    // the real framed byte stream side by side: the wire total exceeds
+    // the accounted bits by at most OVERHEAD_BITS per frame, and the
+    // decoded payloads re-account to exactly the same CommStats.
+    property("commstats vs wire", 50, |rng: &mut Rng| {
+        let frames = 1 + rng.below(40);
+        let mut accounted = CommStats::default();
+        let mut reaccounted = CommStats::default();
+        let mut wire_bits = 0u64;
+        for round in 0..frames {
+            let payload = random_payload(rng);
+            let dims = dims_of(&payload);
+            accounted.record(payload.bits(), 0.0);
+            let frame = wire::encode_frame(&Message {
+                from: rng.below(64),
+                round: round as u64,
+                payload,
+            });
+            wire_bits += 8 * frame.len() as u64;
+            let (decoded, used) = wire::decode_frame(&frame, dims).unwrap();
+            assert_eq!(used, frame.len());
+            reaccounted.record(decoded.payload.bits(), 0.0);
+        }
+        // The codec is lossless for the accounting: decoding then
+        // re-accounting reproduces the sender's ledger bit for bit.
+        assert_eq!(accounted.bits, reaccounted.bits);
+        assert_eq!(accounted.transmissions, reaccounted.transmissions);
+        // And the real bytes are the accounting plus bounded overhead.
+        assert!(wire_bits > accounted.bits);
+        assert!(
+            wire_bits - accounted.bits <= frames as u64 * wire::OVERHEAD_BITS,
+            "wire {wire_bits} vs accounted {} over {frames} frames",
+            accounted.bits
+        );
+    });
+}
+
+#[test]
+fn frame_len_helper_matches_encoder() {
+    property("frame_len matches encode_frame", 100, |rng: &mut Rng| {
+        let payload = random_payload(rng);
+        let frame = wire::encode_frame(&Message {
+            from: 0,
+            round: 0,
+            payload: payload.clone(),
+        });
+        assert_eq!(frame.len(), wire::frame_len(&payload));
+        assert_eq!(
+            frame.len(),
+            wire::HEADER_BYTES + wire::body_len(&payload)
+        );
+    });
+}
