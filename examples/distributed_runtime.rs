@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         rho: 6400.0,
         dual_step: 1.0,
         quant: Some(QuantConfig::default()),
+        threads: 0,
     };
 
     // Split the fleet problem into per-worker solvers and ship each to a

@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             bits: 8, // paper: 8-bit quantizer for the DNN task
             ..QuantConfig::default()
         }),
+        threads: 0,
     };
     let problem = MlpProblem::new(&data, &partition, MlpDims::paper(), 11);
     let init = problem.initial_theta(13);

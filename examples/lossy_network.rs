@@ -36,6 +36,7 @@ fn run_once(
         rho: LINREG_RHO,
         dual_step: 1.0,
         quant,
+        threads: 0,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
     let problem = LinRegProblem::new(&world.data, &partition, gcfg.rho);

@@ -25,6 +25,7 @@ fn main() {
         rho: 6400.0,
         dual_step: 1.0,
         quant: Some(QuantConfig::default()), // None ⇒ full-precision GADMM
+        threads: 0,
     };
     let problem = LinRegProblem::new(&data, &partition, cfg.rho);
     let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 7);

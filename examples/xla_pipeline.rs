@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         rho: 6400.0,
         dual_step: 1.0,
         quant: Some(QuantConfig::default()),
+        threads: 0,
     };
     let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 3);
     let opts = RunOptions {

@@ -48,6 +48,7 @@ fn main() {
             rho: helpers::LINREG_RHO,
             dual_step: 1.0,
             quant: Some(QuantConfig::default()),
+            threads: 0,
         };
         let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);
         let opts = RunOptions {
@@ -149,6 +150,7 @@ fn main() {
                 rho: helpers::DNN_RHO,
                 dual_step: helpers::DNN_ALPHA,
                 quant,
+                threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(4), 9);
             eng.set_initial_theta(&init);
@@ -195,6 +197,7 @@ fn main() {
                 rho: helpers::LINREG_RHO,
                 dual_step: 1.0,
                 quant: Some(QuantConfig::default()),
+                threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(n), 2);
             let opts = RunOptions {
@@ -223,6 +226,7 @@ fn main() {
                 rho,
                 dual_step: 1.0,
                 quant: Some(QuantConfig::default()),
+                threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);
             let opts = RunOptions {

@@ -1,10 +1,26 @@
 //! Hot-path microbenchmarks (hand-rolled harness — no criterion offline).
 //!
 //! Covers every component on the per-iteration path: the stochastic
-//! quantizer, the bit-packing codec, the linreg local solve (native and,
-//! when artifacts are present, XLA), the MLP local step, and one full
-//! engine iteration at paper scale. Run via `cargo bench` or
-//! `cargo bench --bench hotpath`.
+//! quantizer (allocating and allocation-free scratch paths), the
+//! bit-packing codec (allocating and caller-buffer paths), the linreg
+//! local solve (native and, when artifacts are present, XLA), the MLP
+//! local step, one full engine iteration at paper scale, and — the
+//! headline — one full Q-GADMM iteration at n = 16 workers, d = 10,000
+//! run sequentially vs through the parallel phase executor.
+//!
+//! Every result is printed *and* recorded to `BENCH_hotpath.json` (repo
+//! root when run via `cargo bench` from `rust/`, else the working
+//! directory) so the perf trajectory is tracked across PRs:
+//!
+//! ```text
+//! { "bench": "hotpath", "quick": bool,
+//!   "ns_per_iter": { "<bench name>": f64, ... },
+//!   "parallel_iteration": { "workers": 16, "dims": 10000, "threads": T,
+//!     "sequential_ns": f64, "parallel_ns": f64, "speedup": f64 } }
+//! ```
+//!
+//! Run `cargo bench --bench hotpath` (full) or append `-- --quick` for the
+//! CI-sized smoke run (same coverage, shorter measurement windows).
 
 use qgadmm::config::{GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::GadmmEngine;
@@ -13,49 +29,101 @@ use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
 use qgadmm::model::linreg::LinRegProblem;
 use qgadmm::model::mlp::{MlpDims, MlpProblem};
+use qgadmm::model::scale::DiagLinRegProblem;
 use qgadmm::model::{LocalProblem, NeighborCtx};
 use qgadmm::net::topology::Topology;
 use qgadmm::quant::{bitpack, BitPolicy, StochasticQuantizer};
+use qgadmm::util::json::Json;
 use qgadmm::util::rng::Rng;
 use std::time::Instant;
 
-/// Measure `f` for ~`target_secs`, reporting ns/iter and throughput.
-fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> f64 {
-    // Warmup.
-    for _ in 0..3 {
-        f();
-    }
-    let mut iters = 1u64;
-    // Calibrate.
-    loop {
-        let t0 = Instant::now();
-        for _ in 0..iters {
+/// Collected `(name, ns/iter)` results, flushed to BENCH_hotpath.json.
+struct Results {
+    quick: bool,
+    ns: Vec<(String, f64)>,
+}
+
+impl Results {
+    /// Measure `f` for ~`target_secs`, print, record, return seconds/iter.
+    fn bench<F: FnMut()>(&mut self, name: &str, target_secs: f64, mut f: F) -> f64 {
+        let target_secs = if self.quick {
+            (target_secs * 0.1).max(0.02)
+        } else {
+            target_secs
+        };
+        // Warmup.
+        for _ in 0..3 {
             f();
         }
-        let dt = t0.elapsed().as_secs_f64();
-        if dt > 0.05 || iters > 1 << 28 {
-            let per = dt / iters as f64;
-            let need = (target_secs / per.max(1e-12)) as u64;
-            let n = need.clamp(iters, 1 << 30);
+        let mut iters = 1u64;
+        // Calibrate.
+        loop {
             let t0 = Instant::now();
-            for _ in 0..n {
+            for _ in 0..iters {
                 f();
             }
-            let per = t0.elapsed().as_secs_f64() / n as f64;
-            println!(
-                "{name:<48} {:>12.0} ns/iter  ({:>10.2} kops/s, {} iters)",
-                per * 1e9,
-                1e-3 / per,
-                n
-            );
-            return per;
+            let dt = t0.elapsed().as_secs_f64();
+            if dt > 0.05 || iters > 1 << 28 {
+                let per = dt / iters as f64;
+                let need = (target_secs / per.max(1e-12)) as u64;
+                let n = need.clamp(iters, 1 << 30);
+                let t0 = Instant::now();
+                for _ in 0..n {
+                    f();
+                }
+                let per = t0.elapsed().as_secs_f64() / n as f64;
+                println!(
+                    "{name:<48} {:>12.0} ns/iter  ({:>10.2} kops/s, {} iters)",
+                    per * 1e9,
+                    1e-3 / per,
+                    n
+                );
+                self.ns.push((name.to_string(), per * 1e9));
+                return per;
+            }
+            iters *= 2;
         }
-        iters *= 2;
+    }
+
+    fn flush(&self, parallel: Json) {
+        let mut ns = Json::obj();
+        for (name, v) in &self.ns {
+            ns.set(name, Json::Num(*v));
+        }
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("hotpath".to_string()));
+        doc.set("quick", Json::Bool(self.quick));
+        doc.set("ns_per_iter", ns);
+        doc.set("parallel_iteration", parallel);
+        // `cargo bench` runs with cwd = the package root (rust/); the
+        // trajectory file lives at the repository root next to ROADMAP.md.
+        let path = if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_hotpath.json"
+        } else {
+            "BENCH_hotpath.json"
+        };
+        match std::fs::write(path, doc.to_string_pretty()) {
+            Ok(()) => println!("\nresults written to {path}"),
+            Err(e) => {
+                // The JSON *is* the deliverable (per-PR perf trajectory) —
+                // a silent write failure must fail the bench-smoke CI job.
+                eprintln!("\nfailed to write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }
 
 fn main() {
-    println!("== hotpath microbenchmarks ==");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut res = Results {
+        quick,
+        ns: Vec::new(),
+    };
+    println!(
+        "== hotpath microbenchmarks{} ==",
+        if quick { " (quick)" } else { "" }
+    );
     let mut rng = Rng::seed_from_u64(1);
 
     // --- quantizer ---------------------------------------------------------
@@ -63,7 +131,7 @@ fn main() {
         let theta: Vec<f32> = (0..d).map(|_| rng.uniform_f32() - 0.5).collect();
         let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
         let mut qrng = Rng::seed_from_u64(2);
-        let per = bench(&format!("squant_native d={d} b=2"), 0.3, || {
+        let per = res.bench(&format!("squant_alloc d={d} b=2"), 0.3, || {
             let msg = q.quantize(&theta, &mut qrng);
             std::hint::black_box(&msg);
         });
@@ -72,16 +140,27 @@ fn main() {
             format!("  -> throughput d={d}"),
             d as f64 / per / 1e6
         );
+        // The allocation-free engine path: scratch levels + fused view.
+        let mut view = vec![0.0f32; d];
+        res.bench(&format!("squant_into d={d} b=2"), 0.3, || {
+            let out = q.quantize_into(&theta, &mut qrng, &mut view);
+            std::hint::black_box(out);
+        });
     }
 
     // --- bitpack codec ------------------------------------------------------
     for (d, bits) in [(6usize, 2u8), (109_184, 8)] {
         let levels: Vec<u32> = (0..d).map(|_| rng.below(1 << bits) as u32).collect();
-        bench(&format!("bitpack::pack d={d} b={bits}"), 0.2, || {
+        res.bench(&format!("bitpack::pack d={d} b={bits}"), 0.2, || {
             std::hint::black_box(bitpack::pack(&levels, bits).unwrap());
         });
+        let mut buf = vec![0u8; bitpack::packed_len(bits, d)];
+        res.bench(&format!("bitpack::pack_into d={d} b={bits}"), 0.2, || {
+            bitpack::pack_into(&levels, bits, &mut buf).unwrap();
+            std::hint::black_box(&buf);
+        });
         let packed = bitpack::pack(&levels, bits).unwrap();
-        bench(&format!("bitpack::unpack d={d} b={bits}"), 0.2, || {
+        res.bench(&format!("bitpack::unpack d={d} b={bits}"), 0.2, || {
             std::hint::black_box(bitpack::unpack(&packed, bits, d).unwrap());
         });
     }
@@ -107,7 +186,7 @@ fn main() {
         rho: 6400.0,
     };
     let mut out = vec![0.0f32; d];
-    bench("linreg local solve (native, d=6)", 0.3, || {
+    res.bench("linreg local solve (native, d=6)", 0.3, || {
         problem.solve(1, &ctx, &mut out);
         std::hint::black_box(&out);
     });
@@ -116,12 +195,32 @@ fn main() {
         let rt = qgadmm::runtime::Runtime::load(qgadmm::runtime::Runtime::default_dir()).unwrap();
         let mut xp =
             qgadmm::runtime::solver::XlaLinRegProblem::new(&rt, &data, &partition).unwrap();
-        bench("linreg local solve (XLA/PJRT, d=6)", 0.5, || {
+        res.bench("linreg local solve (XLA/PJRT, d=6)", 0.5, || {
             xp.solve(1, &ctx, &mut out);
             std::hint::black_box(&out);
         });
     } else {
         println!("linreg local solve (XLA)                      SKIPPED (no artifacts)");
+    }
+
+    // --- diag-Gram local solve at scale (the d=10k scenario) -----------------
+    let scale_d = 10_000usize;
+    {
+        let mut sp = DiagLinRegProblem::synthesize(scale_d, 16, 5);
+        let lam = vec![0.1f32; scale_d];
+        let th = vec![0.2f32; scale_d];
+        let sctx = NeighborCtx {
+            lambda_left: Some(&lam),
+            lambda_right: Some(&lam),
+            theta_left: Some(&th),
+            theta_right: Some(&th),
+            rho: 4.0,
+        };
+        let mut sout = vec![0.0f32; scale_d];
+        res.bench("diag linreg local solve (d=10000)", 0.2, || {
+            sp.solve(1, &sctx, &mut sout);
+            std::hint::black_box(&sout);
+        });
     }
 
     // --- full engine iteration, paper scale (N=50, d=6) ---------------------
@@ -130,12 +229,57 @@ fn main() {
         rho: 6400.0,
         dual_step: 1.0,
         quant: Some(QuantConfig::default()),
+        threads: 1,
     };
     let problem = LinRegProblem::new(&data, &partition, 6400.0);
     let mut engine = GadmmEngine::new(cfg, problem, Topology::line(50), 5);
-    bench("Q-GADMM engine iteration (N=50, d=6)", 0.5, || {
+    res.bench("Q-GADMM engine iteration (N=50, d=6)", 0.5, || {
         std::hint::black_box(engine.iterate());
     });
+
+    // --- sequential vs parallel iteration (N=16, d=10k) ----------------------
+    // The headline number for the phase executor: all 8 heads (then all 8
+    // tails) solve + quantize concurrently; bit-for-bit the sequential run.
+    let make_engine = |threads: usize| {
+        let cfg = GadmmConfig {
+            workers: 16,
+            rho: 4.0,
+            dual_step: 1.0,
+            quant: Some(QuantConfig::default()),
+            threads,
+        };
+        let problem = DiagLinRegProblem::synthesize(scale_d, 16, 7);
+        GadmmEngine::new(cfg, problem, Topology::line(16), 11)
+    };
+    let mut seq = make_engine(1);
+    let seq_per = res.bench("Q-GADMM iteration seq (N=16, d=10k)", 0.6, || {
+        std::hint::black_box(seq.iterate());
+    });
+    let mut par = make_engine(0);
+    // Ask the engine what the auto policy resolves to (cores clamped to
+    // the 8 head/tail jobs at N=16) — never hand-duplicate that policy.
+    let auto_threads = par.effective_threads();
+    let par_per = res.bench(
+        &format!("Q-GADMM iteration par x{auto_threads} (N=16, d=10k)"),
+        0.6,
+        || {
+            std::hint::black_box(par.iterate());
+        },
+    );
+    let speedup = seq_per / par_per.max(1e-12);
+    println!(
+        "{:<48} {:>12.2} x  ({} threads)",
+        "  -> parallel phase executor speedup", speedup, auto_threads
+    );
+    let mut parallel = Json::obj();
+    parallel.set("problem", Json::Str("diag_linreg".to_string()));
+    parallel.set("workers", Json::Num(16.0));
+    parallel.set("dims", Json::Num(scale_d as f64));
+    parallel.set("quant_bits", Json::Num(2.0));
+    parallel.set("threads", Json::Num(auto_threads as f64));
+    parallel.set("sequential_ns", Json::Num(seq_per * 1e9));
+    parallel.set("parallel_ns", Json::Num(par_per * 1e9));
+    parallel.set("speedup", Json::Num(speedup));
 
     // --- MLP local step (the Q-SGADMM hot spot) ------------------------------
     let img = ImageDataset::synthesize(
@@ -158,7 +302,7 @@ fn main() {
         theta_right: Some(&zeros),
         rho: 20.0,
     };
-    let per = bench("MLP local solve (10 Adam steps, batch 100)", 2.0, || {
+    let per = res.bench("MLP local solve (10 Adam steps, batch 100)", 2.0, || {
         mlp.solve(0, &ctx, &mut theta);
         std::hint::black_box(&theta);
     });
@@ -170,11 +314,63 @@ fn main() {
         flops / per / 1e9
     );
 
+    if !quick {
+        // --- Q-SGADMM iteration seq vs par at the paper's d=109,184 ---------
+        let make_dnn_engine = |threads: usize| {
+            let cfg = GadmmConfig {
+                workers: 4,
+                rho: 20.0,
+                dual_step: 0.01,
+                quant: Some(QuantConfig {
+                    bits: 8,
+                    ..QuantConfig::default()
+                }),
+                threads,
+            };
+            let part = Partition::contiguous(img.train_len(), 4);
+            let prob = MlpProblem::new(&img, &part, MlpDims::paper(), 9);
+            let init = prob.initial_theta(1);
+            let mut eng = GadmmEngine::new(cfg, prob, Topology::line(4), 13);
+            eng.set_initial_theta(&init);
+            eng
+        };
+        let mut dseq = make_dnn_engine(1);
+        let dseq_per = res.bench("Q-SGADMM iteration seq (N=4, d=109k)", 1.0, || {
+            std::hint::black_box(dseq.iterate());
+        });
+        let mut dpar = make_dnn_engine(0);
+        // N=4 ⇒ 2 jobs per phase ⇒ the engine caps itself at 2 threads.
+        let dnn_threads = dpar.effective_threads();
+        let dpar_per = res.bench(
+            &format!("Q-SGADMM iteration par x{dnn_threads} (N=4, d=109k)"),
+            1.0,
+            || {
+                std::hint::black_box(dpar.iterate());
+            },
+        );
+        println!(
+            "{:<48} {:>12.2} x  ({} threads)",
+            "  -> Q-SGADMM parallel speedup",
+            dseq_per / dpar_per.max(1e-12),
+            dnn_threads
+        );
+    }
+
     // --- large-d quantize + pack pipeline (the Q-SGADMM uplink) -------------
     let mut q = StochasticQuantizer::new(dd, BitPolicy::Fixed(8));
     let mut qrng = Rng::seed_from_u64(11);
-    bench("uplink quantize+pack d=109184 b=8", 0.5, || {
+    res.bench("uplink quantize+pack d=109184 b=8", 0.5, || {
         let msg = q.quantize(&theta, &mut qrng);
         std::hint::black_box(msg.encode());
     });
+    // Allocation-free uplink: scratch quantize + caller-buffer encode.
+    let mut view = vec![0.0f32; dd];
+    let mut frame = Vec::new();
+    res.bench("uplink quantize_into+encode_into d=109184 b=8", 0.5, || {
+        let (bits, radius) = q.quantize_into(&theta, &mut qrng, &mut view);
+        bitpack::encode_levels_into(bits, radius, q.last_levels(), &mut frame);
+        std::hint::black_box(&frame);
+    });
+
+    res.flush(parallel);
 }

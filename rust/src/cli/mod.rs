@@ -22,7 +22,24 @@ pub enum CliError {
     MissingCommand,
     #[error("unknown flag syntax {0:?} (flags are --key [value])\n{USAGE}")]
     BadFlag(String),
+    #[error("flag --{0} requires a value (write --{0} <value> or --{0}=<value>)\n{USAGE}")]
+    MissingValue(String),
 }
+
+/// Flags that are boolean switches: bare `--flag` means `--flag true`.
+/// Every other flag takes a value, and a dangling `--key` (end of argv or
+/// followed by another flag) is a [`CliError::MissingValue`] instead of
+/// silently becoming the string `"true"` and failing later — or panicking —
+/// deep inside config parsing.
+const BOOLEAN_FLAGS: &[&str] = &[
+    "quick",
+    "trace",
+    "help",
+    "use-xla",
+    "use_xla",
+    "adaptive-bits",
+    "adaptive_bits",
+];
 
 pub const USAGE: &str = "\
 qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
@@ -31,6 +48,7 @@ USAGE:
   qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|all> [options]
   qgadmm train-linreg  [--workers N --rho R --bits B --iters K --use-xla true]
   qgadmm train-dnn     [--workers N --rho R --bits B --iters K]
+  qgadmm train-scale   [--dims D --workers N --threads T --bits B --iters K]
   qgadmm simulate      [--loss P --workers N --iters K ...sim options]
   qgadmm info          (artifact + platform report)
 
@@ -41,6 +59,9 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --iters K            iteration cap
   --drops N            random drops for the CDF figures
   --seed S             base seed
+  --threads T          engine threads per head/tail phase (0 = auto [default],
+                       1 = sequential; any value is bit-for-bit identical)
+  --dims D             model dimension for train-scale (default 10000)
   --out DIR            results directory (default: results)
   --use-xla BOOL       execute local solves through the PJRT artifacts
   --bandwidth_mhz F    system bandwidth
@@ -79,10 +100,14 @@ pub fn parse(args: &[String]) -> Result<Invocation, CliError> {
             if let Some((k, v)) = key.split_once('=') {
                 flags.set(k, v);
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                let v = it.next().unwrap();
+                let v = it.next().expect("peeked Some");
                 flags.set(key, v);
-            } else {
+            } else if BOOLEAN_FLAGS.contains(&key) {
                 flags.set(key, "true");
+            } else {
+                // A value-taking flag with nothing after it (e.g.
+                // `train-linreg --rho`): fail here with the flag name.
+                return Err(CliError::MissingValue(key.to_string()));
             }
         } else {
             positional.push(a.clone());
@@ -126,5 +151,30 @@ mod tests {
             parse(&v(&["figures", "--"])),
             Err(CliError::BadFlag(_))
         ));
+    }
+
+    #[test]
+    fn dangling_value_flag_errors_with_flag_name() {
+        // Regression: `train-linreg --rho` used to fall through to the
+        // bare-boolean branch, producing rho="true" and a confusing
+        // failure far from the CLI; it must name the offending flag.
+        match parse(&v(&["train-linreg", "--rho"])) {
+            Err(CliError::MissingValue(flag)) => assert_eq!(flag, "rho"),
+            other => panic!("expected MissingValue, got {other:?}"),
+        }
+        // Also when followed by another flag rather than argv end.
+        match parse(&v(&["train-linreg", "--threads", "--workers", "4"])) {
+            Err(CliError::MissingValue(flag)) => assert_eq!(flag, "threads"),
+            other => panic!("expected MissingValue, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bare_boolean_flags_still_parse() {
+        let inv = parse(&v(&["figures", "--quick"])).unwrap();
+        assert_eq!(inv.flags.get("quick"), Some("true"));
+        let inv = parse(&v(&["train-linreg", "--use-xla", "--rho", "2.0"])).unwrap();
+        assert_eq!(inv.flags.get("use-xla"), Some("true"));
+        assert_eq!(inv.flags.get("rho"), Some("2.0"));
     }
 }

@@ -59,6 +59,13 @@ pub struct GadmmConfig {
     /// `Some` ⇒ quantized variant (Q-GADMM / Q-SGADMM); `None` ⇒ full
     /// precision (GADMM / SGADMM).
     pub quant: Option<QuantConfig>,
+    /// Engine threads for the head/tail phase executor: `0` = auto (use
+    /// every core once a phase carries enough work to amortize spawning),
+    /// `1` = strictly sequential, `t > 1` = always run phases on `t`
+    /// scoped threads. Any value is bit-for-bit equivalent — per-position
+    /// RNGs and disjoint phase writes make the schedule irrelevant to the
+    /// result (asserted by `tests/engine_parallel_equivalence.rs`).
+    pub threads: usize,
 }
 
 impl Default for GadmmConfig {
@@ -68,6 +75,7 @@ impl Default for GadmmConfig {
             rho: 24.0,
             dual_step: 1.0,
             quant: Some(QuantConfig::default()),
+            threads: 0,
         }
     }
 }
@@ -305,6 +313,9 @@ pub struct ExperimentConfig {
     pub accuracy_target: f64,
     /// Number of random drops for the CDF figures.
     pub drops: usize,
+    /// Model dimension of the `train-scale` scenario (diagonal-Gram
+    /// linreg, `model::scale`).
+    pub scale_dims: usize,
     /// Base seed.
     pub seed: u64,
     /// Output directory for reports.
@@ -324,6 +335,7 @@ impl Default for ExperimentConfig {
             loss_target: 1e-4,
             accuracy_target: 0.90,
             drops: 20,
+            scale_dims: 10_000,
             seed: 1,
             results_dir: "results".to_string(),
             use_xla: false,
@@ -375,6 +387,20 @@ impl ExperimentConfig {
                 self.accuracy_target = value.parse().map_err(|_| bad("f64"))?
             }
             "drops" => self.drops = value.parse().map_err(|_| bad("usize"))?,
+            "threads" => {
+                let t: usize = value.parse().map_err(|_| bad("usize"))?;
+                if t > 4096 {
+                    return Err(bad("thread count in 0..=4096 (0 = auto)"));
+                }
+                self.gadmm.threads = t;
+            }
+            "dims" | "scale_dims" | "scale-dims" => {
+                let d: usize = value.parse().map_err(|_| bad("usize"))?;
+                if d == 0 {
+                    return Err(bad("positive model dimension"));
+                }
+                self.scale_dims = d;
+            }
             "seed" => self.seed = value.parse().map_err(|_| bad("u64"))?,
             "results_dir" | "results-dir" | "out" => self.results_dir = value.to_string(),
             "use_xla" | "use-xla" => self.use_xla = value.parse().map_err(|_| bad("bool"))?,
@@ -587,6 +613,31 @@ mod tests {
         assert!(KvMap::parse("just words\n").is_err());
         assert!(KvMap::parse(" = novalue\n").is_err());
         assert!(KvMap::parse("# fine\n[ok]\na = 1\n").is_ok());
+    }
+
+    #[test]
+    fn threads_and_scale_dims_keys() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.gadmm.threads, 0, "default is auto");
+        let mut kv = KvMap::new();
+        kv.set("threads", "4");
+        kv.set("dims", "2048");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.threads, 4);
+        assert_eq!(cfg.scale_dims, 2048);
+
+        let mut kv = KvMap::new();
+        kv.set("threads", "9999999");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        let mut kv = KvMap::new();
+        kv.set("dims", "0");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
     }
 
     #[test]

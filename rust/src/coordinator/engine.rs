@@ -16,17 +16,58 @@
 //! Communication is accounted per *broadcast* (one channel use reaches
 //! both neighbors), bit-exactly: `32·d` bits full precision, `b·d + 64`
 //! quantized; energy via the Shannon model when an [`EnergyCtx`] is set.
+//!
+//! **Parallel phase execution** ([`GadmmConfig::threads`]): the algorithm
+//! guarantees intra-phase independence — all heads update simultaneously,
+//! then all tails (Sec. IV) — so each phase can run its positions on
+//! scoped threads when the problem hands out per-worker solvers
+//! ([`LocalProblem::split_workers`]). The schedule is bit-for-bit
+//! irrelevant: RNGs are forked per position at construction, quantizer
+//! state is per position, writes within a phase are disjoint, and bits are
+//! charged on the main thread in position order
+//! (`tests/engine_parallel_equivalence.rs` asserts exact equality).
+//! The hot path allocates nothing per broadcast:
+//! [`StochasticQuantizer::quantize_into`] writes the reconstructed mirror
+//! straight into `view[p]` with scratch-buffer levels.
 
 use super::residuals::{ResidualPoint, ResidualTracker};
 use crate::comm::CommStats;
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
-use crate::model::{LocalProblem, NeighborCtx};
+use crate::model::{LocalProblem, NeighborCtx, WorkerSolver};
 use crate::net::channel::{transmission_energy, ChannelParams};
 use crate::net::topology::Topology;
-use crate::quant::StochasticQuantizer;
+use crate::quant::{self, BitPolicy, StochasticQuantizer};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
+
+/// Below this many coordinates per phase (`positions × dims`) the auto
+/// thread policy stays sequential: scoped-thread spawns cost tens of
+/// microseconds, which dominates small solves (the paper's d = 6 linreg)
+/// and would *slow down* the unit-scale sweeps.
+const AUTO_PARALLEL_MIN_PHASE_COORDS: usize = 32_768;
+
+/// Quantize (or copy, full precision) `theta` into `view` and return the
+/// broadcast payload bits. The *single* implementation shared by the
+/// sequential and parallel schedules — the engine's bit-for-bit
+/// equivalence guarantee depends on both paths running exactly this code.
+fn broadcast_into(
+    quant: Option<&mut StochasticQuantizer>,
+    rng: &mut Rng,
+    theta: &[f32],
+    view: &mut [f32],
+) -> u64 {
+    match quant {
+        Some(q) => {
+            let (bits, _radius) = q.quantize_into(theta, rng, view);
+            quant::payload_bits(bits, theta.len())
+        }
+        None => {
+            view.copy_from_slice(theta);
+            32 * theta.len() as u64
+        }
+    }
+}
 
 /// Wireless-energy accounting context (omit ⇒ bits are counted, energy 0).
 #[derive(Clone, Debug)]
@@ -100,6 +141,10 @@ pub struct GadmmEngine<P: LocalProblem> {
     compute: Stopwatch,
     tracker: ResidualTracker,
     energy: Option<EnergyCtx>,
+    /// Set once `split_workers` returns `None`: the problem cannot run
+    /// phases in parallel, so stop re-asking (and re-allocating the
+    /// positions list) every phase of every iteration.
+    par_unsupported: bool,
 }
 
 impl<P: LocalProblem> GadmmEngine<P> {
@@ -127,6 +172,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
             compute: Stopwatch::new(),
             tracker: ResidualTracker::new(n, d),
             energy: None,
+            par_unsupported: false,
             cfg,
         }
     }
@@ -197,12 +243,53 @@ impl<P: LocalProblem> GadmmEngine<P> {
         (0..self.workers()).map(|p| self.local_objective_at(p)).sum()
     }
 
+    /// Thread count the executor will actually use for the head phase —
+    /// the number benchmarks should report (the tail phase may use one
+    /// fewer thread when the worker count is odd).
+    pub fn effective_threads(&self) -> usize {
+        if self.par_unsupported {
+            return 1;
+        }
+        self.phase_threads((self.topo.len() + 1) / 2)
+    }
+
+    /// Threads a phase of `jobs` positions runs on, under the configured
+    /// policy (see [`GadmmConfig::threads`]).
+    fn phase_threads(&self, jobs: usize) -> usize {
+        let requested = match self.cfg.threads {
+            0 => {
+                if self.problem.dims().saturating_mul(jobs) < AUTO_PARALLEL_MIN_PHASE_COORDS {
+                    1
+                } else {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                }
+            }
+            t => t,
+        };
+        requested.clamp(1, jobs.max(1))
+    }
+
     /// One full Algorithm-1 iteration. Returns the residual snapshot.
+    ///
+    /// Each head/tail phase runs its positions either sequentially or on
+    /// scoped threads ([`GadmmConfig::threads`]); the two schedules are
+    /// bit-for-bit identical because every position owns its RNG and
+    /// quantizer, and all writes within a phase (`θ_p`, `view[p]`) are
+    /// disjoint — same-parity positions never read each other's state.
     pub fn iterate(&mut self) -> ResidualPoint {
         self.tracker.begin_iteration(&self.view);
         // Phase 1: heads (even positions), phase 2: tails (odd positions).
         for phase in 0..2 {
             let n = self.topo.len();
+            let njobs = (n + 1 - phase) / 2;
+            let threads = self.phase_threads(njobs);
+            if threads > 1 && !self.par_unsupported {
+                let positions: Vec<usize> = (phase..n).step_by(2).collect();
+                if self.run_phase_parallel(&positions, threads) {
+                    continue;
+                }
+                self.par_unsupported = true;
+            }
             let mut p = phase;
             while p < n {
                 self.solve_position(p);
@@ -246,21 +333,25 @@ impl<P: LocalProblem> GadmmEngine<P> {
     }
 
     /// Broadcast position `p`'s update to its neighbors: quantize (or copy)
-    /// into `view[p]` and charge one transmission.
+    /// into `view[p]` and charge one transmission. The quantized path goes
+    /// through [`StochasticQuantizer::quantize_into`] — mirror and view are
+    /// written in one fused pass, with no intermediate `QuantizedMsg` and
+    /// no per-broadcast allocation.
     fn broadcast_position(&mut self, p: usize) {
-        let bits = match self.quantizers.as_mut() {
-            Some(qs) => {
-                self.compute.start();
-                let msg = qs[p].quantize(&self.theta[p], &mut self.rngs[p]);
-                self.compute.stop();
-                self.view[p].copy_from_slice(qs[p].theta_hat());
-                msg.payload_bits()
-            }
-            None => {
-                self.view[p].copy_from_slice(&self.theta[p]);
-                32 * self.theta[p].len() as u64
-            }
-        };
+        let quant = self.quantizers.as_mut().map(|qs| &mut qs[p]);
+        let timed = quant.is_some();
+        if timed {
+            self.compute.start();
+        }
+        let bits = broadcast_into(quant, &mut self.rngs[p], &self.theta[p], &mut self.view[p]);
+        if timed {
+            self.compute.stop();
+        }
+        self.record_broadcast(p, bits);
+    }
+
+    /// Charge one broadcast from position `p` (bit + energy accounting).
+    fn record_broadcast(&mut self, p: usize, bits: u64) {
         let energy = match &self.energy {
             Some(e) => transmission_energy(
                 &e.params,
@@ -271,6 +362,114 @@ impl<P: LocalProblem> GadmmEngine<P> {
             None => 0.0,
         };
         self.comm.record(bits, energy);
+    }
+
+    /// Run one head/tail phase on `threads` scoped threads. Returns `false`
+    /// when the problem cannot hand out per-worker solvers
+    /// ([`LocalProblem::split_workers`]), in which case the caller falls
+    /// back to the sequential loop.
+    ///
+    /// Safety of the split, in borrow terms: every phase position `p` takes
+    /// its `θ_p`, `view[p]`, quantizer, and RNG *out* of the engine, so
+    /// threads own disjoint state; the neighbor context only reads
+    /// `view[p±1]` and `λ` — opposite-parity entries no job writes. Bits
+    /// are accounted on the main thread in position order afterwards, so
+    /// `CommStats` accumulation is schedule-independent.
+    fn run_phase_parallel(&mut self, positions: &[usize], threads: usize) -> bool {
+        struct Job<'a> {
+            pos: usize,
+            solver: &'a mut dyn WorkerSolver,
+            theta: Vec<f32>,
+            view: Vec<f32>,
+            quant: Option<StochasticQuantizer>,
+            rng: Rng,
+            bits: u64,
+        }
+
+        let Some(solvers) = self.problem.split_workers() else {
+            return false;
+        };
+        assert_eq!(
+            solvers.len(),
+            self.topo.len(),
+            "split_workers must return one solver per worker"
+        );
+        let mut by_worker: Vec<Option<&mut dyn WorkerSolver>> =
+            solvers.into_iter().map(Some).collect();
+
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(positions.len());
+        for &p in positions {
+            let worker = self.topo.worker_at(p);
+            jobs.push(Job {
+                pos: p,
+                solver: by_worker[worker]
+                    .take()
+                    .expect("two chain positions mapped to one worker"),
+                theta: std::mem::take(&mut self.theta[p]),
+                view: std::mem::take(&mut self.view[p]),
+                quant: self.quantizers.as_mut().map(|qs| {
+                    std::mem::replace(&mut qs[p], StochasticQuantizer::new(0, BitPolicy::Fixed(1)))
+                }),
+                rng: std::mem::replace(&mut self.rngs[p], Rng::seed_from_u64(0)),
+                bits: 0,
+            });
+        }
+
+        let view = &self.view;
+        let lambda = &self.lambda;
+        let n = self.topo.len();
+        let rho = self.cfg.rho;
+        // Parallel phases charge wall-clock of the whole phase to the
+        // compute timer (per-position timing is meaningless across cores).
+        self.compute.start();
+        std::thread::scope(|s| {
+            let chunk = jobs.len().div_ceil(threads);
+            for slice in jobs.chunks_mut(chunk) {
+                s.spawn(move || {
+                    for job in slice.iter_mut() {
+                        let p = job.pos;
+                        let ctx = NeighborCtx {
+                            lambda_left: if p > 0 { Some(lambda[p - 1].as_slice()) } else { None },
+                            lambda_right: if p + 1 < n { Some(lambda[p].as_slice()) } else { None },
+                            theta_left: if p > 0 { Some(view[p - 1].as_slice()) } else { None },
+                            theta_right: if p + 1 < n {
+                                Some(view[p + 1].as_slice())
+                            } else {
+                                None
+                            },
+                            rho,
+                        };
+                        job.solver.solve(&ctx, &mut job.theta);
+                        job.bits = broadcast_into(
+                            job.quant.as_mut(),
+                            &mut job.rng,
+                            &job.theta,
+                            &mut job.view,
+                        );
+                    }
+                });
+            }
+        });
+        self.compute.stop();
+
+        // Restore per-position state first (the jobs still hold the
+        // per-worker solver borrows), then charge broadcasts in position
+        // order so the accounting matches the sequential schedule exactly.
+        let mut charges: Vec<(usize, u64)> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let p = job.pos;
+            self.theta[p] = job.theta;
+            self.view[p] = job.view;
+            if let Some(q) = job.quant {
+                self.quantizers.as_mut().expect("taken from Some")[p] = q;
+            }
+            self.rngs[p] = job.rng;
+            charges.push((p, job.bits));
+        }
+        for (p, bits) in charges {
+            self.record_broadcast(p, bits);
+        }
+        true
     }
 
     /// Run loop: iterate, evaluate `metric` every `eval_every` iterations,
@@ -323,10 +522,11 @@ mod tests {
     use crate::data::partition::Partition;
     use crate::model::linreg::LinRegProblem;
 
-    fn setup(
+    fn setup_threads(
         workers: usize,
         quant: Option<QuantConfig>,
         rho: f32,
+        threads: usize,
     ) -> (LinRegDataset, GadmmEngine<LinRegProblem>) {
         let spec = LinRegSpec {
             samples: 2_000,
@@ -340,9 +540,18 @@ mod tests {
             rho,
             dual_step: 1.0,
             quant,
+            threads,
         };
         let engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 99);
         (data, engine)
+    }
+
+    fn setup(
+        workers: usize,
+        quant: Option<QuantConfig>,
+        rho: f32,
+    ) -> (LinRegDataset, GadmmEngine<LinRegProblem>) {
+        setup_threads(workers, quant, rho, 1)
     }
 
     #[test]
@@ -397,8 +606,13 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let (_, mut a) = setup(6, Some(QuantConfig::default()), 1600.0);
-        let (_, mut b) = setup(6, Some(QuantConfig::default()), 1600.0);
+        // Same seed ⇒ identical trajectories, and the schedule is
+        // irrelevant: a strictly sequential engine and a forced-parallel
+        // one (3 scoped threads even at d = 6) agree bit-for-bit.
+        // tests/engine_parallel_equivalence.rs runs the 50-iteration
+        // variant over every config; this is the fast in-module smoke.
+        let (_, mut a) = setup_threads(6, Some(QuantConfig::default()), 1600.0, 1);
+        let (_, mut b) = setup_threads(6, Some(QuantConfig::default()), 1600.0, 3);
         for _ in 0..20 {
             a.iterate();
             b.iterate();
@@ -407,6 +621,10 @@ mod tests {
             assert_eq!(a.theta_at(p), b.theta_at(p));
             assert_eq!(a.view_at(p), b.view_at(p));
         }
+        for l in 0..5 {
+            assert_eq!(a.lambda_at(l), b.lambda_at(l));
+        }
+        assert_eq!(a.comm().bits, b.comm().bits);
     }
 
     #[test]

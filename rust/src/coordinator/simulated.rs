@@ -701,6 +701,7 @@ mod tests {
             rho,
             dual_step: 1.0,
             quant,
+            threads: 0,
         };
         let engine = SimulatedGadmm::new(
             cfg,

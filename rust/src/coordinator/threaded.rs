@@ -336,6 +336,7 @@ mod tests {
             rho: 1600.0,
             dual_step: 1.0,
             quant: Some(QuantConfig::default()),
+            threads: 0,
         };
         let report = run_threaded(&cfg, boxed, 600, 7, |obj_sum, _| {
             (obj_sum - f_star).abs()
@@ -359,6 +360,7 @@ mod tests {
             rho: 1600.0,
             dual_step: 1.0,
             quant: None,
+            threads: 0,
         };
         let report = run_threaded(&cfg, boxed, 500, 3, |obj_sum, _| {
             (obj_sum - f_star).abs()

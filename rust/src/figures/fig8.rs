@@ -22,6 +22,8 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
     let world = LinregWorld::new(&c, c.seed, c.seed ^ 0x88);
     let mut rep = FigureReport::new("fig8a_linreg_time");
     rep.meta("task", "loss vs local computation time");
+    // Serial on purpose: wall-clock timing must not share cores.
+    c.gadmm.threads = 1;
     let q = run_gadmm_linreg(
         "Q-GADMM-2bits", &world, &c, q2(), LINREG_RHO, iters, Some(c.loss_target), c.seed,
     );
@@ -55,7 +57,10 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
     let world = DnnWorld::new(&c, 10, quick, c.seed ^ 0x89);
     let mut rep = FigureReport::new("fig8b_dnn_time");
     rep.meta("task", "accuracy vs local computation time");
-    // Serial on purpose: wall-clock timing must not share cores.
+    // Serial on purpose: wall-clock timing must not share cores — pin the
+    // engine to one thread (results are bit-identical; only the
+    // compute-time semantics differ under the parallel executor).
+    c.gadmm.threads = 1;
     let q = run_gadmm_dnn(
         "Q-SGADMM-8bits", &world, &c, q8(), DNN_RHO, iters_dnn, eval_every, None, c.seed,
     );

@@ -32,6 +32,7 @@ pub fn run_sim_linreg(
         rho: LINREG_RHO,
         dual_step: 1.0,
         quant,
+        threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
     let problem = LinRegProblem::new(&world.data, &partition, gcfg.rho);

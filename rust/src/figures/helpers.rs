@@ -94,6 +94,7 @@ pub fn run_gadmm_linreg(
         rho,
         dual_step: 1.0,
         quant,
+        threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
     let problem = LinRegProblem::new(&world.data, &partition, rho);
@@ -239,6 +240,7 @@ pub fn run_gadmm_dnn(
         rho,
         dual_step: DNN_ALPHA,
         quant,
+        threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.train_len(), workers);
     let problem = MlpProblem::new(&world.data, &partition, MlpDims::paper(), seed ^ 0xD1A);

@@ -23,6 +23,7 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
         rho: LINREG_RHO,
         dual_step: 1.0,
         quant: q2(),
+        threads: c.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
     let problem = LinRegProblem::new(&world.data, &partition, LINREG_RHO);

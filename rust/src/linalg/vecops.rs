@@ -94,6 +94,19 @@ pub fn sub_f32(out: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// Diagonal shifted solve `out[i] = rhs[i] / (a[i] + shift)` — the eq. (14)
+/// primal update when the local Gram matrix is diagonal (whitened-feature
+/// linreg), with `shift = ρ·deg` the penalty curvature. The O(d) analogue
+/// of the dense Cholesky solve in `model::linreg`.
+#[inline]
+pub fn diag_shift_solve_f32(out: &mut [f32], a: &[f32], rhs: &[f32], shift: f32) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), rhs.len());
+    for i in 0..out.len() {
+        out[i] = rhs[i] / (a[i] + shift);
+    }
+}
+
 /// Widen f32 → f64.
 pub fn to_f64(a: &[f32]) -> Vec<f64> {
     a.iter().map(|&x| x as f64).collect()
@@ -137,6 +150,15 @@ mod tests {
     #[test]
     fn dist_sq() {
         assert_eq!(dist_sq_f32(&[1.0, 2.0], &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn diag_shift_solve_known() {
+        let a = [1.0f32, 3.0, 0.5];
+        let rhs = [2.0f32, 8.0, 3.0];
+        let mut out = [0.0f32; 3];
+        diag_shift_solve_f32(&mut out, &a, &rhs, 1.0);
+        assert_eq!(out, [1.0, 2.0, 2.0]);
     }
 
     #[test]

@@ -144,6 +144,15 @@ impl LocalProblem for LinRegProblem {
     fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
         self.workers[worker].objective(theta)
     }
+
+    fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
+        Some(
+            self.workers
+                .iter_mut()
+                .map(|w| w as &mut dyn WorkerSolver)
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]

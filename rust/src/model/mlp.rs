@@ -6,7 +6,7 @@
 //! tiny instance; [`MlpDims::paper`] is the evaluation configuration.
 
 use super::adam::Adam;
-use super::{LocalProblem, NeighborCtx};
+use super::{LocalProblem, NeighborCtx, WorkerSolver};
 use crate::data::images::{ImageDataset, CLASSES, PIXELS};
 use crate::data::partition::Partition;
 use crate::util::rng::Rng;
@@ -361,20 +361,77 @@ struct Shard {
     y: Vec<u8>,
 }
 
-/// The Q-SGADMM local problem over the image-classification task.
-pub struct MlpProblem {
+/// One worker's complete Q-SGADMM local solver: data shard, minibatch RNG,
+/// Adam moments, and forward/backward scratch — *all* mutable state is
+/// worker-private, so a head/tail phase can run every worker on its own
+/// thread ([`LocalProblem::split_workers`]) with results bit-identical to
+/// the sequential schedule.
+pub struct MlpWorker {
     dims: MlpDims,
-    shards: Vec<Shard>,
-    rho_ignored: f32,
+    shard: Shard,
     batch: usize,
     local_iters: usize,
-    lr: f32,
-    rngs: Vec<Rng>,
+    rng: Rng,
     adam: Adam,
     scratch: MlpScratch,
     grad: Vec<f32>,
     minibatch_x: Vec<f32>,
     minibatch_y: Vec<u8>,
+}
+
+impl MlpWorker {
+    fn sample_minibatch(&mut self) {
+        let n = self.shard.y.len();
+        for s in 0..self.batch {
+            let i = self.rng.below(n);
+            self.minibatch_x[s * self.dims.input..(s + 1) * self.dims.input]
+                .copy_from_slice(&self.shard.x[i * PIXELS..(i + 1) * PIXELS]);
+            self.minibatch_y[s] = self.shard.y[i];
+        }
+    }
+}
+
+impl WorkerSolver for MlpWorker {
+    fn dims(&self) -> usize {
+        self.dims.dims()
+    }
+
+    /// The Q-SGADMM local solve (Sec. V-B): sample one minibatch, then run
+    /// `local_iters` fresh-state Adam steps on
+    /// `CE(minibatch; θ) + penalty(θ; λ, θ̂)`.
+    fn solve(&mut self, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        self.sample_minibatch();
+        self.adam.reset();
+        for _ in 0..self.local_iters {
+            forward(&self.dims, out, &self.minibatch_x, &mut self.scratch);
+            let _ = backward(
+                &self.dims,
+                out,
+                &self.minibatch_x,
+                &self.minibatch_y,
+                &mut self.scratch,
+                &mut self.grad,
+            );
+            add_penalty_grad(&mut self.grad, out, ctx);
+            self.adam.step(out, &self.grad);
+        }
+    }
+
+    /// Mean CE over (a capped slice of) the worker's shard.
+    fn objective(&self, theta: &[f32]) -> f64 {
+        let n = self.shard.y.len().min(512);
+        let mut scratch = MlpScratch::new(&self.dims, n);
+        forward(&self.dims, theta, &self.shard.x[..n * self.dims.input], &mut scratch);
+        ce_loss(&self.dims, &scratch, &self.shard.y[..n]) * self.shard.y.len() as f64
+    }
+}
+
+/// The Q-SGADMM local problem over the image-classification task — the
+/// fleet view: one [`MlpWorker`] per worker plus the shared test set.
+pub struct MlpProblem {
+    dims: MlpDims,
+    workers: Vec<MlpWorker>,
+    batch: usize,
     test_x: Vec<f32>,
     test_y: Vec<u8>,
 }
@@ -415,22 +472,28 @@ impl MlpProblem {
             .collect::<Vec<_>>();
         let batch = batch.min(shards.iter().map(|s| s.y.len()).min().unwrap_or(batch));
         assert!(batch > 0, "each worker needs at least one sample");
-        let rngs = (0..partition.workers())
-            .map(|w| root.fork(w as u64))
+        // RNG fork order matches the historical shared-state layout so the
+        // per-worker refactor changes no minibatch sequence.
+        let workers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, shard)| MlpWorker {
+                dims,
+                shard,
+                batch,
+                local_iters,
+                rng: root.fork(w as u64),
+                adam: Adam::new(dims.dims(), lr),
+                scratch: MlpScratch::new(&dims, batch),
+                grad: vec![0.0; dims.dims()],
+                minibatch_x: vec![0.0; batch * dims.input],
+                minibatch_y: vec![0; batch],
+            })
             .collect();
         MlpProblem {
             dims,
-            shards,
-            rho_ignored: 0.0,
+            workers,
             batch,
-            local_iters,
-            lr,
-            rngs,
-            adam: Adam::new(dims.dims(), lr),
-            scratch: MlpScratch::new(&dims, batch),
-            grad: vec![0.0; dims.dims()],
-            minibatch_x: vec![0.0; batch * dims.input],
-            minibatch_y: vec![0; batch],
             test_x: data.test_x.clone(),
             test_y: data.test_y.clone(),
         }
@@ -470,17 +533,6 @@ impl MlpProblem {
         self.test_accuracy(&avg)
     }
 
-    fn sample_minibatch(&mut self, worker: usize) {
-        let shard = &self.shards[worker];
-        let rng = &mut self.rngs[worker];
-        let n = shard.y.len();
-        for s in 0..self.batch {
-            let i = rng.below(n);
-            self.minibatch_x[s * self.dims.input..(s + 1) * self.dims.input]
-                .copy_from_slice(&shard.x[i * PIXELS..(i + 1) * PIXELS]);
-            self.minibatch_y[s] = shard.y[i];
-        }
-    }
 }
 
 impl LocalProblem for MlpProblem {
@@ -489,39 +541,24 @@ impl LocalProblem for MlpProblem {
     }
 
     fn workers(&self) -> usize {
-        self.shards.len()
+        self.workers.len()
     }
 
-    /// The Q-SGADMM local solve (Sec. V-B): sample one minibatch, then run
-    /// `local_iters` fresh-state Adam steps on
-    /// `CE(minibatch; θ) + penalty(θ; λ, θ̂)`.
     fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
-        self.rho_ignored = ctx.rho; // recorded for debugging dumps
-        self.sample_minibatch(worker);
-        self.adam.reset();
-        for _ in 0..self.local_iters {
-            forward(&self.dims, out, &self.minibatch_x, &mut self.scratch);
-            let _ = backward(
-                &self.dims,
-                out,
-                &self.minibatch_x,
-                &self.minibatch_y,
-                &mut self.scratch,
-                &mut self.grad,
-            );
-            add_penalty_grad(&mut self.grad, out, ctx);
-            self.adam.step(out, &self.grad);
-        }
-        let _ = self.lr;
+        self.workers[worker].solve(ctx, out);
     }
 
-    /// Mean CE over (a capped slice of) the worker's shard.
     fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
-        let shard = &self.shards[worker];
-        let n = shard.y.len().min(512);
-        let mut scratch = MlpScratch::new(&self.dims, n);
-        forward(&self.dims, theta, &shard.x[..n * self.dims.input], &mut scratch);
-        ce_loss(&self.dims, &scratch, &shard.y[..n]) * shard.y.len() as f64
+        self.workers[worker].objective(theta)
+    }
+
+    fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
+        Some(
+            self.workers
+                .iter_mut()
+                .map(|w| w as &mut dyn WorkerSolver)
+                .collect(),
+        )
     }
 }
 

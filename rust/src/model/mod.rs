@@ -18,6 +18,7 @@
 pub mod adam;
 pub mod linreg;
 pub mod mlp;
+pub mod scale;
 
 /// Neighbor context for a local primal update — everything worker `n`
 /// knows about its chain neighbors when solving eq. (14)/(16): the dual
@@ -73,4 +74,19 @@ pub trait LocalProblem {
 
     /// Local objective `f_n(θ)` (used for the global loss metric).
     fn objective(&self, worker: usize, theta: &[f32]) -> f64;
+
+    /// Hand out one disjoint mutable solver handle per worker so the engine
+    /// can run a head/tail phase concurrently (`None` ⇒ the problem cannot
+    /// be split and the engine stays on its sequential path — e.g. the
+    /// XLA-backed problems, which funnel through one PJRT client).
+    ///
+    /// Contract: the returned vector has exactly [`Self::workers`] entries
+    /// and entry `w` must produce bit-for-bit the same update as
+    /// `self.solve(w, ...)` — the parallel engine is bit-identical to the
+    /// sequential one only under that guarantee, which in turn requires all
+    /// per-worker mutable state (RNGs, optimizer moments, scratch) to live
+    /// inside the handles, never shared across workers.
+    fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
+        None
+    }
 }

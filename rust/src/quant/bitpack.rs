@@ -26,14 +26,36 @@ pub enum CodecError {
     LevelOutOfRange { level: u32, bits: u8 },
 }
 
+/// Exact packed-body size in bytes for `count` levels of width `bits`.
+pub fn packed_len(bits: u8, count: usize) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
 /// Pack `levels`, each `bits` wide, LSB-first into a byte stream.
 pub fn pack(levels: &[u32], bits: u8) -> Result<Vec<u8>, CodecError> {
     if bits == 0 || bits > 16 {
         return Err(CodecError::BadBits(bits));
     }
+    let mut out = vec![0u8; packed_len(bits, levels.len())];
+    pack_into(levels, bits, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free variant of [`pack`]: packs into a caller-provided buffer
+/// of exactly [`packed_len`] bytes (its prior contents are overwritten).
+pub fn pack_into(levels: &[u32], bits: u8, out: &mut [u8]) -> Result<(), CodecError> {
+    if bits == 0 || bits > 16 {
+        return Err(CodecError::BadBits(bits));
+    }
+    let need = packed_len(bits, levels.len());
+    if out.len() != need {
+        return Err(CodecError::Truncated {
+            need,
+            have: out.len(),
+        });
+    }
     let max = (1u32 << bits) - 1;
-    let total_bits = levels.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    out.fill(0);
     // Byte-aligned fast path (b = 8 — the paper's DNN resolution): one
     // narrowing store per level, ~6x faster than the generic bit cursor.
     if bits == 8 {
@@ -43,7 +65,7 @@ pub fn pack(levels: &[u32], bits: u8) -> Result<Vec<u8>, CodecError> {
             }
             *o = lv as u8;
         }
-        return Ok(out);
+        return Ok(());
     }
     let mut bitpos = 0usize;
     for &lv in levels {
@@ -63,7 +85,7 @@ pub fn pack(levels: &[u32], bits: u8) -> Result<Vec<u8>, CodecError> {
         }
         bitpos += bits as usize;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Inverse of [`pack`].
@@ -102,12 +124,34 @@ pub fn unpack(bytes: &[u8], bits: u8, count: usize) -> Result<Vec<u32>, CodecErr
 
 /// Serialize a full message (header + packed levels).
 pub fn encode_msg(msg: &QuantizedMsg) -> Vec<u8> {
-    let body = pack(&msg.levels, msg.bits).expect("levels validated at construction");
-    let mut out = Vec::with_capacity(5 + body.len());
-    out.push(msg.bits);
-    out.extend_from_slice(&msg.radius.to_le_bytes());
-    out.extend_from_slice(&body);
+    let mut out = Vec::new();
+    encode_msg_into(msg, &mut out);
     out
+}
+
+/// Serialize a full message into a caller-provided buffer. The buffer is
+/// cleared and refilled; reusing it across broadcasts keeps the wire path
+/// allocation-free once it has grown to the steady-state frame size.
+pub fn encode_msg_into(msg: &QuantizedMsg, out: &mut Vec<u8>) {
+    encode_levels_into(msg.bits, msg.radius, &msg.levels, out);
+}
+
+/// [`encode_msg_into`] over borrowed parts — pairs with
+/// [`crate::quant::StochasticQuantizer::last_levels`] so a sender never has
+/// to materialize an owned [`QuantizedMsg`].
+///
+/// Panics if `bits` is outside `1..=16` or any level needs more than
+/// `bits` bits — quantizer output satisfies both by construction; callers
+/// assembling parts by hand must uphold them.
+pub fn encode_levels_into(bits: u8, radius: f32, levels: &[u32], out: &mut Vec<u8>) {
+    let body_len = packed_len(bits, levels.len());
+    out.clear();
+    out.resize(5 + body_len, 0);
+    out[0] = bits;
+    out[1..5].copy_from_slice(&radius.to_le_bytes());
+    if let Err(e) = pack_into(levels, bits, &mut out[5..]) {
+        panic!("encode_levels_into: unencodable payload: {e}");
+    }
 }
 
 /// Deserialize a full message; `dims` is known to the receiver (fixed model
@@ -208,6 +252,37 @@ mod tests {
             decode_msg(&[0, 0, 0, 0, 0, 0], 1).unwrap_err(),
             CodecError::BadBits(0)
         );
+    }
+
+    #[test]
+    fn pack_into_matches_pack_and_checks_len() {
+        let levels = vec![5u32, 0, 7, 3, 1, 6];
+        let via_alloc = pack(&levels, 3).unwrap();
+        let mut buf = vec![0xFFu8; packed_len(3, levels.len())];
+        pack_into(&levels, 3, &mut buf).unwrap();
+        assert_eq!(buf, via_alloc);
+        let mut short = vec![0u8; 1];
+        assert!(matches!(
+            pack_into(&levels, 3, &mut short).unwrap_err(),
+            CodecError::Truncated { .. }
+        ));
+    }
+
+    #[test]
+    fn encode_msg_into_reuses_buffer() {
+        let msg = QuantizedMsg {
+            bits: 3,
+            radius: 0.5,
+            levels: vec![7, 0, 5, 2, 1],
+        };
+        let mut buf = vec![0xAAu8; 64]; // stale, oversized contents
+        encode_msg_into(&msg, &mut buf);
+        assert_eq!(buf, encode_msg(&msg));
+        assert_eq!(decode_msg(&buf, 5).unwrap(), msg);
+        // Borrowed-parts variant is byte-identical.
+        let mut buf2 = Vec::new();
+        encode_levels_into(msg.bits, msg.radius, &msg.levels, &mut buf2);
+        assert_eq!(buf2, buf);
     }
 
     #[test]

@@ -43,7 +43,7 @@ impl QuantizedMsg {
     /// Exact payload size on the wire in bits: `b·d + b_R + b_b`
     /// (Sec. III-A). `b_R = b_b = 32` following the paper.
     pub fn payload_bits(&self) -> u64 {
-        self.bits as u64 * self.levels.len() as u64 + 32 + 32
+        payload_bits(self.bits, self.levels.len())
     }
 
     /// Serialize to the packed wire format (see [`bitpack`]).
@@ -69,6 +69,14 @@ pub enum BitPolicy {
     Adaptive { min_bits: u8, max_bits: u8 },
 }
 
+/// Exact wire payload of a `bits`-wide, `dims`-dimensional quantized
+/// message: `b·d + b_R + b_b` bits with `b_R = b_b = 32` (Sec. III-A).
+/// Mirrors [`QuantizedMsg::payload_bits`] for the allocation-free path
+/// that never materializes a message.
+pub fn payload_bits(bits: u8, dims: usize) -> u64 {
+    bits as u64 * dims as u64 + 32 + 32
+}
+
 /// Sender-side stochastic quantizer state for one worker.
 ///
 /// Holds `θ̂_n^{k-1}` (the previously quantized model), the previous radius
@@ -81,24 +89,37 @@ pub struct StochasticQuantizer {
     prev_radius: f32,
     prev_bits: u8,
     steps: u64,
+    /// Scratch for the integer levels of the most recent message — reused
+    /// across calls so the per-broadcast hot path allocates nothing.
+    levels: Vec<u32>,
 }
 
 impl StochasticQuantizer {
     /// `dims`-dimensional quantizer with `θ̂^{(0)} = 0` (the paper
     /// initializes all models to zero, so sender and receiver mirrors start
     /// in agreement).
+    ///
+    /// Panics unless the policy satisfies `1 <= min_bits <= max_bits <= 16`
+    /// (for [`BitPolicy::Fixed`], `1 <= b <= 16`): the wire codec and the
+    /// `1u32 << bits` level arithmetic are only defined for widths up to 16,
+    /// so an out-of-range cap must fail at construction, not overflow deep
+    /// inside `quantize`.
     pub fn new(dims: usize, policy: BitPolicy) -> Self {
-        let init_bits = match policy {
-            BitPolicy::Fixed(b) => b,
-            BitPolicy::Adaptive { min_bits, .. } => min_bits,
+        let (min_b, max_b) = match policy {
+            BitPolicy::Fixed(b) => (b, b),
+            BitPolicy::Adaptive { min_bits, max_bits } => (min_bits, max_bits),
         };
-        assert!(init_bits >= 1 && init_bits <= 16, "bits must be in 1..=16");
+        assert!(
+            min_b >= 1 && min_b <= max_b && max_b <= 16,
+            "bit policy must satisfy 1 <= min_bits <= max_bits <= 16, got {min_b}..={max_b}"
+        );
         StochasticQuantizer {
             policy,
             theta_hat: vec![0.0; dims],
             prev_radius: 0.0,
-            prev_bits: init_bits,
+            prev_bits: min_b,
             steps: 0,
+            levels: vec![0; dims],
         }
     }
 
@@ -122,29 +143,26 @@ impl StochasticQuantizer {
     }
 
     /// Bit-width that eq. (11) mandates for radius `r` given the previous
-    /// `(bits, radius)` state.
+    /// `(bits, radius)` state, clamped to the codec's 16-bit ceiling.
+    ///
+    /// Eq. (11) only *lower*-bounds `b_n^k` (any larger width also keeps Δ
+    /// non-increasing, the Theorem-2 condition), so capping at 16 preserves
+    /// the guarantee while keeping the result safe to feed to `1u32 << bits`
+    /// (e.g. in [`Self::last_delta`]) and to the wire codec, whose level
+    /// field is at most 16 bits. Without the clamp a large radius jump could
+    /// return widths up to the saturated `as u8` cast (255).
     pub fn bits_rule(prev_bits: u8, prev_radius: f32, radius: f32) -> u8 {
         if prev_radius <= 0.0 || radius <= 0.0 {
             return prev_bits;
         }
         let levels_prev = (1u64 << prev_bits) as f64 - 1.0;
         let need = (1.0 + levels_prev * (radius as f64 / prev_radius as f64)).log2();
-        need.ceil().max(1.0) as u8
+        need.ceil().clamp(1.0, 16.0) as u8
     }
 
-    /// Quantize `θ_n^k` against the stored `θ̂_n^{k-1}`, updating the stored
-    /// mirror, and return the message to broadcast. Draws one uniform per
-    /// dimension from `rng`, inline in the elementwise loop (one fused pass
-    /// instead of a fill + a quantize pass — the 109k-dim uplink is
-    /// bandwidth-bound; see EXPERIMENTS.md §Perf). The draw order matches
-    /// [`Rng::fill_uniform_f32`], so results are identical to
-    /// [`Self::quantize_with_uniforms`] fed a pre-filled buffer.
-    pub fn quantize(&mut self, theta: &[f32], rng: &mut Rng) -> QuantizedMsg {
-        let d = self.theta_hat.len();
-        assert_eq!(theta.len(), d, "dimension mismatch");
-
-        let radius = vecops::linf_diff_f32(theta, &self.theta_hat);
-        let bits = match self.policy {
+    /// Bit-width for the next message at radius `radius` under the policy.
+    fn next_bits(&self, radius: f32) -> u8 {
+        match self.policy {
             BitPolicy::Fixed(b) => b,
             BitPolicy::Adaptive { min_bits, max_bits } => {
                 if self.steps == 0 {
@@ -154,20 +172,62 @@ impl StochasticQuantizer {
                         .clamp(min_bits, max_bits)
                 }
             }
-        };
+        }
+    }
 
-        let mut levels = vec![0u32; d];
+    /// The shared elementwise core behind [`Self::quantize`] and
+    /// [`Self::quantize_into`]: writes levels into the reusable scratch,
+    /// updates the mirror, and (when `view_out` is given) stores the fresh
+    /// `θ̂` into it in the same fused pass. Draws one uniform per dimension
+    /// from `rng`, inline in the loop (one fused pass instead of a fill + a
+    /// quantize pass — the 109k-dim uplink is bandwidth-bound; see
+    /// EXPERIMENTS.md §Perf). The draw order matches
+    /// [`Rng::fill_uniform_f32`], so results are identical to
+    /// [`Self::quantize_with_uniforms`] fed a pre-filled buffer.
+    fn quantize_core(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view_out: Option<&mut [f32]>,
+    ) -> (u8, f32) {
+        let d = self.theta_hat.len();
+        assert_eq!(theta.len(), d, "dimension mismatch");
+        if let Some(v) = view_out.as_deref() {
+            assert_eq!(v.len(), d, "view dimension mismatch");
+        }
+
+        let radius = vecops::linf_diff_f32(theta, &self.theta_hat);
+        let bits = self.next_bits(radius);
+
         if radius > 0.0 {
             let num_levels = ((1u32 << bits) - 1) as f32;
             let delta = 2.0 * radius / num_levels;
-            for i in 0..d {
-                let c = (theta[i] - self.theta_hat[i] + radius) / delta;
+            #[inline(always)]
+            fn step(theta_i: f32, hat: &mut f32, radius: f32, delta: f32, max: f32, u: f32) -> u32 {
+                let c = (theta_i - *hat + radius) / delta;
                 let floor = c.floor();
                 let p = c - floor;
-                let up = (rng.uniform_f32() < p) as u32;
-                let q = (floor as i64 + up as i64).clamp(0, num_levels as i64) as u32;
-                levels[i] = q;
-                self.theta_hat[i] = self.theta_hat[i] + delta * q as f32 - radius;
+                let up = (u < p) as u32;
+                let q = (floor as i64 + up as i64).clamp(0, max as i64) as u32;
+                *hat = *hat + delta * q as f32 - radius;
+                q
+            }
+            match view_out {
+                Some(view) => {
+                    for i in 0..d {
+                        let u = rng.uniform_f32();
+                        self.levels[i] =
+                            step(theta[i], &mut self.theta_hat[i], radius, delta, num_levels, u);
+                        view[i] = self.theta_hat[i];
+                    }
+                }
+                None => {
+                    for i in 0..d {
+                        let u = rng.uniform_f32();
+                        self.levels[i] =
+                            step(theta[i], &mut self.theta_hat[i], radius, delta, num_levels, u);
+                    }
+                }
             }
         } else {
             // Consume d uniforms anyway to keep the RNG stream aligned
@@ -175,16 +235,49 @@ impl StochasticQuantizer {
             for _ in 0..d {
                 let _ = rng.uniform_f32();
             }
+            self.levels.iter_mut().for_each(|q| *q = 0);
+            if let Some(view) = view_out {
+                view.copy_from_slice(&self.theta_hat);
+            }
         }
 
         self.prev_radius = radius;
         self.prev_bits = bits;
         self.steps += 1;
+        (bits, radius)
+    }
+
+    /// Quantize `θ_n^k` against the stored `θ̂_n^{k-1}`, updating the stored
+    /// mirror, and return the message to broadcast. The levels are built in
+    /// the reusable scratch buffer; only the returned owned message
+    /// allocates. On the engine hot path prefer [`Self::quantize_into`],
+    /// which allocates nothing at all.
+    pub fn quantize(&mut self, theta: &[f32], rng: &mut Rng) -> QuantizedMsg {
+        let (bits, radius) = self.quantize_core(theta, rng, None);
         QuantizedMsg {
             bits,
             radius,
-            levels,
+            levels: self.levels.clone(),
         }
+    }
+
+    /// Allocation-free hot path: quantize `θ` and write the updated mirror
+    /// `θ̂` straight into `view` (the engine's neighbor-visible buffer) in
+    /// the same elementwise pass — no intermediate [`QuantizedMsg`] and no
+    /// levels allocation. Returns `(bits, radius)`; the levels of this
+    /// message are readable via [`Self::last_levels`] until the next
+    /// quantization. Bit-for-bit identical to [`Self::quantize`] fed the
+    /// same RNG state.
+    pub fn quantize_into(&mut self, theta: &[f32], rng: &mut Rng, view: &mut [f32]) -> (u8, f32) {
+        self.quantize_core(theta, rng, Some(view))
+    }
+
+    /// Integer levels of the most recent [`Self::quantize`] /
+    /// [`Self::quantize_into`] call (scratch — overwritten by the next one).
+    /// Not updated by [`Self::quantize_with_uniforms`], which keeps its own
+    /// buffer for the XLA-parity tests.
+    pub fn last_levels(&self) -> &[u32] {
+        &self.levels
     }
 
     /// Deterministic core used by [`Self::quantize`] and by the
@@ -395,20 +488,29 @@ mod tests {
     #[test]
     fn bits_rule_keeps_delta_nonincreasing() {
         // For random (R_prev, R) pairs, the bit-width from eq. (11) must
-        // give Δ_k ≤ Δ_{k-1}.
+        // give Δ_k ≤ Δ_{k-1} — except when the codec's 16-bit cap binds
+        // (b = 16), where the helper returns the finest width the wire
+        // format can carry instead of an unencodable one.
         let mut rng = rt(17);
+        let mut uncapped = 0;
         for _ in 0..1000 {
             let prev_bits = 1 + (rng.below(8) as u8);
             let r_prev = rng.range(1e-4, 10.0) as f32;
             let r = rng.range(1e-4, 10.0) as f32;
             let b = StochasticQuantizer::bits_rule(prev_bits, r_prev, r);
+            assert!((1..=16).contains(&b), "b={b} out of codec range");
+            if b == 16 {
+                continue; // cap may bind here; Δ monotonicity not claimed
+            }
+            uncapped += 1;
             let delta_prev = 2.0 * r_prev / (((1u64 << prev_bits) - 1) as f32);
-            let delta = 2.0 * r / (((1u64 << b.min(32)) - 1) as f32);
+            let delta = 2.0 * r / (((1u64 << b) - 1) as f32);
             assert!(
                 delta <= delta_prev * 1.0001,
                 "b={b} prev_bits={prev_bits} r_prev={r_prev} r={r}"
             );
         }
+        assert!(uncapped > 500, "cap bound too often: {uncapped}/1000 free");
     }
 
     #[test]
@@ -465,6 +567,85 @@ mod tests {
             assert_eq!(ma, mb, "step {step}");
             assert_eq!(qa.theta_hat(), qb.theta_hat());
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= min_bits <= max_bits <= 16")]
+    fn adaptive_policy_with_oversized_cap_panics_at_construction() {
+        // max_bits = 40 would overflow `1u32 << bits` deep inside quantize;
+        // construction must reject it up front.
+        let _ = StochasticQuantizer::new(
+            4,
+            BitPolicy::Adaptive {
+                min_bits: 2,
+                max_bits: 40,
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= min_bits <= max_bits <= 16")]
+    fn inverted_adaptive_bounds_panic_at_construction() {
+        let _ = StochasticQuantizer::new(
+            4,
+            BitPolicy::Adaptive {
+                min_bits: 8,
+                max_bits: 2,
+            },
+        );
+    }
+
+    #[test]
+    fn bits_rule_is_capped_at_sixteen() {
+        // A radius explosion asks eq. (11) for a huge width; the public
+        // helper clamps to the 16-bit codec ceiling so callers can shift
+        // `1u32 << bits` safely.
+        let b = StochasticQuantizer::bits_rule(16, 1e-6, 1e6);
+        assert_eq!(b, 16);
+        // Unaffected in the normal regime.
+        assert_eq!(StochasticQuantizer::bits_rule(2, 1.0, 1.0), 2);
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        // quantize_into (scratch buffer, fused view write) must produce the
+        // same bits/radius/levels and mirror as quantize() message-for-
+        // message from identical RNG state.
+        let d = 257;
+        let mut qa = StochasticQuantizer::new(d, BitPolicy::Fixed(3));
+        let mut qb = StochasticQuantizer::new(d, BitPolicy::Fixed(3));
+        let mut rng_a = rt(31);
+        let mut rng_b = rt(31);
+        let mut theta = vec![0.0f32; d];
+        let mut view = vec![0.0f32; d];
+        for step in 0..20 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.23).sin();
+            }
+            let msg = qa.quantize(&theta, &mut rng_a);
+            let (bits, radius) = qb.quantize_into(&theta, &mut rng_b, &mut view);
+            assert_eq!(msg.bits, bits, "step {step}");
+            assert_eq!(msg.radius, radius, "step {step}");
+            assert_eq!(msg.levels.as_slice(), qb.last_levels(), "step {step}");
+            assert_eq!(qa.theta_hat(), qb.theta_hat(), "step {step}");
+            assert_eq!(view.as_slice(), qb.theta_hat(), "step {step}");
+        }
+    }
+
+    #[test]
+    fn zero_radius_scratch_path_zeroes_levels_and_copies_view() {
+        let d = 5;
+        let mut q = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let mut rng = rt(37);
+        let mut view = vec![9.0f32; d];
+        let theta = vec![0.5f32; d];
+        let _ = q.quantize_into(&theta, &mut rng, &mut view);
+        // Second call with θ == θ̂ has radius 0: levels reset, view mirrors θ̂.
+        let hat = q.theta_hat().to_vec();
+        let (_, radius) = q.quantize_into(&hat, &mut rng, &mut view);
+        assert_eq!(radius, 0.0);
+        assert!(q.last_levels().iter().all(|&l| l == 0));
+        assert_eq!(view, hat);
     }
 
     #[test]

@@ -134,6 +134,7 @@ fn engine_converges_identically_on_both_backends() {
         rho,
         dual_step: 1.0,
         quant: Some(QuantConfig::default()),
+        threads: 0,
     };
     let opts = RunOptions {
         iterations: 1_000,

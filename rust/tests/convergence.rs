@@ -40,6 +40,7 @@ fn engine(
         rho: RHO,
         dual_step: 1.0,
         quant,
+        threads: 0,
     };
     let (_, f_star) = data.optimum();
     (GadmmEngine::new(cfg, problem, topo, seed), f_star)
@@ -59,7 +60,7 @@ fn qgadmm_tracks_gadmm_iteration_for_iteration() {
     let mk = |quant| {
         let problem = LinRegProblem::new(&ds, &partition, rho);
         GadmmEngine::new(
-            GadmmConfig { workers, rho, dual_step: 1.0, quant },
+            GadmmConfig { workers, rho, dual_step: 1.0, quant, threads: 0 },
             problem,
             Topology::line(workers),
             3,

@@ -40,6 +40,7 @@ fn build_sim(
         rho,
         dual_step: 1.0,
         quant,
+        threads: 0,
     };
     let problem = LinRegProblem::new(&data, &partition, rho);
     let sim = SimulatedGadmm::new(
@@ -129,6 +130,7 @@ fn run_equivalence_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, 
         rho,
         dual_step: 1.0,
         quant,
+        threads: 0,
     };
     let opts = RunOptions {
         iterations: iters,

@@ -29,6 +29,7 @@ fn run_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
         rho,
         dual_step: 1.0,
         quant,
+        threads: 0,
     };
 
     // Deterministic engine.
