@@ -16,7 +16,9 @@
 //! { "bench": "hotpath", "quick": bool,
 //!   "ns_per_iter": { "<bench name>": f64, ... },
 //!   "parallel_iteration": { "workers": 16, "dims": 10000, "threads": T,
-//!     "sequential_ns": f64, "parallel_ns": f64, "speedup": f64 } }
+//!     "sequential_ns": f64, "parallel_ns": f64, "speedup": f64 },
+//!   "topology_iteration": { "workers": 16, "dims": 10000,
+//!     "line_ns": f64, "ring_ns": f64, "ring_over_line": f64 } }
 //! ```
 //!
 //! Run `cargo bench --bench hotpath` (full) or append `-- --quick` for the
@@ -30,7 +32,7 @@ use qgadmm::data::partition::Partition;
 use qgadmm::model::linreg::LinRegProblem;
 use qgadmm::model::mlp::{MlpDims, MlpProblem};
 use qgadmm::model::scale::DiagLinRegProblem;
-use qgadmm::model::{LocalProblem, NeighborCtx};
+use qgadmm::model::{LinkBuf, LocalProblem};
 use qgadmm::net::topology::Topology;
 use qgadmm::quant::{bitpack, BitPolicy, StochasticQuantizer};
 use qgadmm::util::json::Json;
@@ -85,7 +87,7 @@ impl Results {
         }
     }
 
-    fn flush(&self, parallel: Json) {
+    fn flush(&self, parallel: Json, topology: Json) {
         let mut ns = Json::obj();
         for (name, v) in &self.ns {
             ns.set(name, Json::Num(*v));
@@ -95,6 +97,7 @@ impl Results {
         doc.set("quick", Json::Bool(self.quick));
         doc.set("ns_per_iter", ns);
         doc.set("parallel_iteration", parallel);
+        doc.set("topology_iteration", topology);
         // `cargo bench` runs with cwd = the package root (rust/); the
         // trajectory file lives at the repository root next to ROADMAP.md.
         let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -178,13 +181,8 @@ fn main() {
     let d = problem.dims();
     let lam = vec![0.1f32; d];
     let th = vec![0.2f32; d];
-    let ctx = NeighborCtx {
-        lambda_left: Some(&lam),
-        lambda_right: Some(&lam),
-        theta_left: Some(&th),
-        theta_right: Some(&th),
-        rho: 6400.0,
-    };
+    let ctx_buf = LinkBuf::chain(Some(&lam), Some(&th), Some(&lam), Some(&th));
+    let ctx = ctx_buf.ctx(6400.0);
     let mut out = vec![0.0f32; d];
     res.bench("linreg local solve (native, d=6)", 0.3, || {
         problem.solve(1, &ctx, &mut out);
@@ -209,13 +207,8 @@ fn main() {
         let mut sp = DiagLinRegProblem::synthesize(scale_d, 16, 5);
         let lam = vec![0.1f32; scale_d];
         let th = vec![0.2f32; scale_d];
-        let sctx = NeighborCtx {
-            lambda_left: Some(&lam),
-            lambda_right: Some(&lam),
-            theta_left: Some(&th),
-            theta_right: Some(&th),
-            rho: 4.0,
-        };
+        let sbuf = LinkBuf::chain(Some(&lam), Some(&th), Some(&lam), Some(&th));
+        let sctx = sbuf.ctx(4.0);
         let mut sout = vec![0.0f32; scale_d];
         res.bench("diag linreg local solve (d=10000)", 0.2, || {
             sp.solve(1, &sctx, &mut sout);
@@ -281,6 +274,38 @@ fn main() {
     parallel.set("parallel_ns", Json::Num(par_per * 1e9));
     parallel.set("speedup", Json::Num(speedup));
 
+    // --- ring vs line iteration (N=16, d=10k, sequential) --------------------
+    // Tracks what the degree-general neighbor context costs on the chain
+    // fast path: a ring adds one edge (every position at degree 2), so its
+    // per-iteration time should match the line's interior-position cost —
+    // any divergence beyond that is LinkBuf/edge-list overhead.
+    let mut ring16 = {
+        let cfg = GadmmConfig {
+            workers: 16,
+            rho: 4.0,
+            dual_step: 1.0,
+            quant: Some(QuantConfig::default()),
+            threads: 1,
+        };
+        let problem = DiagLinRegProblem::synthesize(scale_d, 16, 7);
+        GadmmEngine::new(cfg, problem, Topology::ring(16).expect("16 is even"), 11)
+    };
+    let ring_per = res.bench("Q-GADMM iteration ring (N=16, d=10k)", 0.6, || {
+        std::hint::black_box(ring16.iterate());
+    });
+    println!(
+        "{:<48} {:>12.3} x  (ring/line, seq)",
+        "  -> degree-general context overhead",
+        ring_per / seq_per.max(1e-12)
+    );
+    let mut topology = Json::obj();
+    topology.set("problem", Json::Str("diag_linreg".to_string()));
+    topology.set("workers", Json::Num(16.0));
+    topology.set("dims", Json::Num(scale_d as f64));
+    topology.set("line_ns", Json::Num(seq_per * 1e9));
+    topology.set("ring_ns", Json::Num(ring_per * 1e9));
+    topology.set("ring_over_line", Json::Num(ring_per / seq_per.max(1e-12)));
+
     // --- MLP local step (the Q-SGADMM hot spot) ------------------------------
     let img = ImageDataset::synthesize(
         &ImageSpec {
@@ -295,13 +320,8 @@ fn main() {
     let dd = mlp.dims();
     let mut theta = mlp.initial_theta(1);
     let zeros = vec![0.0f32; dd];
-    let ctx = NeighborCtx {
-        lambda_left: None,
-        lambda_right: Some(&zeros),
-        theta_left: None,
-        theta_right: Some(&zeros),
-        rho: 20.0,
-    };
+    let mlp_buf = LinkBuf::chain(None, None, Some(&zeros), Some(&zeros));
+    let ctx = mlp_buf.ctx(20.0);
     let per = res.bench("MLP local solve (10 Adam steps, batch 100)", 2.0, || {
         mlp.solve(0, &ctx, &mut theta);
         std::hint::black_box(&theta);
@@ -372,5 +392,5 @@ fn main() {
         std::hint::black_box(&frame);
     });
 
-    res.flush(parallel);
+    res.flush(parallel, topology);
 }

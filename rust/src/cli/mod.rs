@@ -45,11 +45,11 @@ pub const USAGE: &str = "\
 qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
 
 USAGE:
-  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|all> [options]
-  qgadmm train-linreg  [--workers N --rho R --bits B --iters K --use-xla true]
-  qgadmm train-dnn     [--workers N --rho R --bits B --iters K]
-  qgadmm train-scale   [--dims D --workers N --threads T --bits B --iters K]
-  qgadmm simulate      [--loss P --workers N --iters K ...sim options]
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|all> [options]
+  qgadmm train-linreg  [--workers N --rho R --bits B --iters K --topology T --use-xla true]
+  qgadmm train-dnn     [--workers N --rho R --bits B --iters K --topology T]
+  qgadmm train-scale   [--dims D --workers N --threads T --bits B --iters K --topology T]
+  qgadmm simulate      [--loss P --workers N --iters K --topology T ...sim options]
   qgadmm info          (artifact + platform report)
 
 COMMON OPTIONS (also accepted from --config <file> as key = value lines):
@@ -62,6 +62,9 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --threads T          engine threads per head/tail phase (0 = auto [default],
                        1 = sequential; any value is bit-for-bit identical)
   --dims D             model dimension for train-scale (default 10000)
+  --topology T         communication graph: line (default), ring (even N),
+                       star, grid2d, random[:p] — any bipartite topology;
+                       the XLA backend supports line/ring only (degree <= 2)
   --out DIR            results directory (default: results)
   --use-xla BOOL       execute local solves through the PJRT artifacts
   --bandwidth_mhz F    system bandwidth

@@ -10,6 +10,7 @@
 //! ordered, as a reliable link layer would provide.
 
 use super::Message;
+use crate::net::topology::Topology;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
@@ -20,8 +21,8 @@ pub enum TransportError {
     Disconnected(usize),
     #[error("timed out waiting for a message after {0:?}")]
     Timeout(Duration),
-    #[error("worker {from} has no link to {to} in this topology")]
-    NotANeighbor { from: usize, to: usize },
+    #[error("worker {from} has no link to worker {to} in this {n}-worker topology")]
+    NotANeighbor { from: usize, to: usize, n: usize },
 }
 
 /// One worker's handle: senders to its reachable peers, plus its own
@@ -43,13 +44,18 @@ impl Endpoint {
     }
 
     /// Send to peer `to`. Sending to a worker outside this endpoint's
-    /// neighbor set is a topology violation and fails loudly.
+    /// neighbor set is a topology violation and fails loudly, naming both
+    /// endpoints and the network size.
     pub fn send(&self, to: usize, msg: Message) -> Result<(), TransportError> {
         let tx = self
             .peers
             .get(to)
             .and_then(|p| p.as_ref())
-            .ok_or(TransportError::NotANeighbor { from: self.id, to })?;
+            .ok_or(TransportError::NotANeighbor {
+                from: self.id,
+                to,
+                n: self.peers.len(),
+            })?;
         tx.send(msg).map_err(|_| TransportError::Disconnected(to))
     }
 
@@ -100,6 +106,17 @@ pub fn in_process_network_with_neighbors(
 pub fn in_process_network(n: usize) -> Vec<Endpoint> {
     let all: Vec<Vec<usize>> = (0..n).map(|_| (0..n).collect()).collect();
     in_process_network_with_neighbors(n, &all)
+}
+
+/// Position-indexed neighbor lists of a [`Topology`] — the wiring diagram
+/// for [`in_process_network_with_neighbors`]. Endpoint `p` may send only
+/// along `topo`'s edges, so the mailbox network is exactly as restrictive
+/// as the communication graph (a star's leaves can reach the hub and
+/// nothing else).
+pub fn topology_neighbors(topo: &Topology) -> Vec<Vec<usize>> {
+    (0..topo.len())
+        .map(|p| topo.neighbor_positions(p).collect())
+        .collect()
 }
 
 /// Neighbor lists for an identity chain: worker `i` links to `i−1`/`i+1`.
@@ -211,8 +228,14 @@ mod tests {
             .unwrap_err();
         assert!(matches!(
             err,
-            TransportError::NotANeighbor { from: 2, to: 0 }
+            TransportError::NotANeighbor { from: 2, to: 0, n: 5 }
         ));
+        // The message names both endpoints and the topology size.
+        let text = err.to_string();
+        assert!(
+            text.contains("worker 2") && text.contains("worker 0") && text.contains("5-worker"),
+            "unhelpful NotANeighbor message: {text}"
+        );
         // Out-of-range target is also a topology error.
         let err = eps[4]
             .send(
@@ -226,8 +249,80 @@ mod tests {
             .unwrap_err();
         assert!(matches!(
             err,
-            TransportError::NotANeighbor { from: 4, to: 99 }
+            TransportError::NotANeighbor { from: 4, to: 99, n: 5 }
         ));
+    }
+
+    #[test]
+    fn star_restricts_leaves_to_the_hub() {
+        let topo = Topology::star(5);
+        let eps = in_process_network_with_neighbors(5, &topology_neighbors(&topo));
+        // The hub (position 0) may send to every leaf.
+        for leaf in 1..5 {
+            assert!(eps[0].is_neighbor(leaf));
+            eps[0]
+                .send(
+                    leaf,
+                    Message {
+                        from: 0,
+                        round: 0,
+                        payload: Payload::Stop,
+                    },
+                )
+                .unwrap();
+        }
+        // Leaves may send to the hub…
+        assert!(eps[2].is_neighbor(0));
+        eps[2]
+            .send(
+                0,
+                Message {
+                    from: 2,
+                    round: 0,
+                    payload: Payload::Stop,
+                },
+            )
+            .unwrap();
+        // …but never to each other.
+        for a in 1..5 {
+            for b in 1..5 {
+                if a == b {
+                    continue;
+                }
+                assert!(!eps[a].is_neighbor(b));
+            }
+        }
+        let err = eps[3]
+            .send(
+                1,
+                Message {
+                    from: 3,
+                    round: 0,
+                    payload: Payload::Stop,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            TransportError::NotANeighbor { from: 3, to: 1, n: 5 }
+        ));
+    }
+
+    #[test]
+    fn ring_wiring_from_topology() {
+        let topo = Topology::ring(6).unwrap();
+        let nb = topology_neighbors(&topo);
+        // Every ring position has exactly its two cycle neighbors.
+        for (p, list) in nb.iter().enumerate() {
+            assert_eq!(list.len(), 2, "position {p}: {list:?}");
+            assert!(list.contains(&((p + 1) % 6)));
+            assert!(list.contains(&((p + 5) % 6)));
+        }
+        let handles: usize = in_process_network_with_neighbors(6, &nb)
+            .iter()
+            .map(|e| e.peers.iter().filter(|p| p.is_some()).count())
+            .sum();
+        assert_eq!(handles, 2 * 6, "a 6-ring has 6 edges = 12 directed links");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   without `serde`. CLI flags override file values (see `cli`).
 
 use crate::net::channel::ChannelParams;
+use crate::net::topology::TopologyKind;
 use crate::quant::BitPolicy;
 use crate::sim::link::{ComputeModel, LatencyModel, LossModel};
 use std::collections::BTreeMap;
@@ -302,6 +303,11 @@ impl SimConfig {
 pub struct ExperimentConfig {
     pub gadmm: GadmmConfig,
     pub net: NetConfig,
+    /// Communication graph for `train-*` and `simulate` (`topology=` key /
+    /// `--topology` flag): `line` (default), `ring`, `star`, `grid2d`, or
+    /// `random[:p]`. Geometry-driven figure runs keep the nearest-neighbor
+    /// chain when this is `Line`.
+    pub topology: TopologyKind,
     /// Discrete-event simulator settings (the `simulate` subcommand and
     /// `figures::fig_sim`).
     pub sim: SimConfig,
@@ -330,6 +336,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             gadmm: GadmmConfig::default(),
             net: NetConfig::default(),
+            topology: TopologyKind::Line,
             sim: SimConfig::default(),
             iterations: 2_000,
             loss_target: 1e-4,
@@ -400,6 +407,9 @@ impl ExperimentConfig {
                     return Err(bad("positive model dimension"));
                 }
                 self.scale_dims = d;
+            }
+            "topology" | "topo" => {
+                self.topology = TopologyKind::parse(value).map_err(|why| bad(&why))?
             }
             "seed" => self.seed = value.parse().map_err(|_| bad("u64"))?,
             "results_dir" | "results-dir" | "out" => self.results_dir = value.to_string(),
@@ -634,6 +644,28 @@ mod tests {
         ));
         let mut kv = KvMap::new();
         kv.set("dims", "0");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn topology_key_parses_and_rejects() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.topology, TopologyKind::Line, "chain is the default");
+        let mut kv = KvMap::new();
+        kv.set("topology", "ring");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Ring);
+
+        let mut kv = KvMap::new();
+        kv.set("topology", "random:0.4");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::RandomBipartite { p: 0.4 });
+
+        let mut kv = KvMap::new();
+        kv.set("topology", "hexagon");
         assert!(matches!(
             cfg.apply_kv(&kv),
             Err(ConfigError::BadValue { .. })

@@ -1,40 +1,47 @@
-//! The GADMM-family engine — Algorithm 1 of the paper.
+//! The GADMM-family engine — Algorithm 1 of the paper, generalized from
+//! the paper's chain to any bipartite [`Topology`].
 //!
 //! One `iterate()` is one iteration `k`:
 //!
-//! 1. **Head phase** — every head worker (even chain position) solves its
-//!    local primal problem (eq. (14)/(15)) against its neighbors'
-//!    *reconstructed* models `θ̂` and broadcasts its update to both
-//!    neighbors — quantized (eqs. (6)–(13)) in Q-GADMM/Q-SGADMM, full
-//!    precision in GADMM/SGADMM.
-//! 2. **Tail phase** — tail workers (odd positions) do the same against
-//!    the heads' *fresh* broadcasts (eq. (16)/(17)).
-//! 3. **Dual update** — every worker updates the duals of its links
-//!    locally: `λ_n ← λ_n + α·ρ·(θ̂_n − θ̂_{n+1})` (eq. (18); α = 1 for the
-//!    convex variants, 0.01 for Q-SGADMM per Sec. V-B).
+//! 1. **Head phase** — every head worker (one color class of the bipartite
+//!    graph; even positions on a chain) solves its local primal problem
+//!    (eq. (14)/(15)) against its neighbors' *reconstructed* models `θ̂`
+//!    and broadcasts its update to all of them — quantized
+//!    (eqs. (6)–(13)) in Q-GADMM/Q-SGADMM, full precision in
+//!    GADMM/SGADMM.
+//! 2. **Tail phase** — tail workers (the other color class) do the same
+//!    against the heads' *fresh* broadcasts (eq. (16)/(17)). Bipartiteness
+//!    is exactly what makes the two-phase schedule sound: every neighbor
+//!    of a tail is a head, so tails always see fresh values.
+//! 3. **Dual update** — one dual per topology edge, updated locally from
+//!    the views both link ends share: `λ_e ← λ_e + α·ρ·(θ̂_u − θ̂_v)` for
+//!    edge `e = (u, v)` (eq. (18); α = 1 for the convex variants, 0.01
+//!    for Q-SGADMM per Sec. V-B).
 //!
 //! Communication is accounted per *broadcast* (one channel use reaches
-//! both neighbors), bit-exactly: `32·d` bits full precision, `b·d + 64`
+//! every neighbor), bit-exactly: `32·d` bits full precision, `b·d + 64`
 //! quantized; energy via the Shannon model when an [`EnergyCtx`] is set.
 //!
 //! **Parallel phase execution** ([`GadmmConfig::threads`]): the algorithm
-//! guarantees intra-phase independence — all heads update simultaneously,
-//! then all tails (Sec. IV) — so each phase can run its positions on
-//! scoped threads when the problem hands out per-worker solvers
-//! ([`LocalProblem::split_workers`]). The schedule is bit-for-bit
-//! irrelevant: RNGs are forked per position at construction, quantizer
-//! state is per position, writes within a phase are disjoint, and bits are
-//! charged on the main thread in position order
+//! guarantees intra-phase independence — same-color positions share no
+//! edge, so all heads update simultaneously, then all tails (Sec. IV) —
+//! and each phase can run its positions on scoped threads when the
+//! problem hands out per-worker solvers ([`LocalProblem::split_workers`]).
+//! The schedule is bit-for-bit irrelevant: RNGs are forked per position at
+//! construction, quantizer state is per position, writes within a phase
+//! are disjoint, and bits are charged on the main thread in position order
 //! (`tests/engine_parallel_equivalence.rs` asserts exact equality).
-//! The hot path allocates nothing per broadcast:
+//! The hot path allocates nothing per broadcast or per solve:
 //! [`StochasticQuantizer::quantize_into`] writes the reconstructed mirror
-//! straight into `view[p]` with scratch-buffer levels.
+//! straight into `view[p]` with scratch-buffer levels, and the neighbor
+//! context is assembled in a stack-inline [`LinkBuf`] (degree ≤ 4 — line,
+//! ring, grid — never touches the heap).
 
 use super::residuals::{ResidualPoint, ResidualTracker};
 use crate::comm::CommStats;
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
-use crate::model::{LocalProblem, NeighborCtx, WorkerSolver};
+use crate::model::{LinkBuf, LocalProblem, NeighborLink, WorkerSolver};
 use crate::net::channel::{transmission_energy, ChannelParams};
 use crate::net::topology::Topology;
 use crate::quant::{self, BitPolicy, StochasticQuantizer};
@@ -76,7 +83,7 @@ pub struct EnergyCtx {
     /// Bandwidth available to one transmitting worker (see
     /// `net::channel::BandwidthPolicy`).
     pub per_worker_bw: f64,
-    /// Broadcast distance per chain position (max over its neighbors).
+    /// Broadcast distance per position (max over its neighbors).
     pub broadcast_dist: Vec<f64>,
 }
 
@@ -126,14 +133,20 @@ pub struct GadmmEngine<P: LocalProblem> {
     cfg: GadmmConfig,
     problem: P,
     topo: Topology,
-    /// Model per chain position (position `p` belongs to worker
+    /// Model per position (position `p` belongs to worker
     /// `topo.worker_at(p)`).
     theta: Vec<Vec<f32>>,
-    /// Dual variable per link `i` (connecting positions `i` and `i+1`).
+    /// Dual variable per topology edge (`lambda[e]` is the dual of
+    /// `topo.edges()[e]`; on a chain, edge `i` links positions `i` and
+    /// `i+1`, matching the paper's λ_i numbering).
     lambda: Vec<Vec<f32>>,
     /// Neighbor-visible model per position: `θ̂` under quantization, an
     /// exact copy under full precision.
     view: Vec<Vec<f32>>,
+    /// Head positions in ascending order (phase 1's schedule).
+    heads: Vec<usize>,
+    /// Tail positions in ascending order (phase 2's schedule).
+    tails: Vec<usize>,
     quantizers: Option<Vec<StochasticQuantizer>>,
     rngs: Vec<Rng>,
     iteration: u64,
@@ -142,8 +155,8 @@ pub struct GadmmEngine<P: LocalProblem> {
     tracker: ResidualTracker,
     energy: Option<EnergyCtx>,
     /// Set once `split_workers` returns `None`: the problem cannot run
-    /// phases in parallel, so stop re-asking (and re-allocating the
-    /// positions list) every phase of every iteration.
+    /// phases in parallel, so stop re-asking every phase of every
+    /// iteration.
     par_unsupported: bool,
 }
 
@@ -159,12 +172,17 @@ impl<P: LocalProblem> GadmmEngine<P> {
         let quantizers = cfg
             .quant
             .map(|q| (0..n).map(|_| StochasticQuantizer::new(d, q.policy())).collect());
+        let heads: Vec<usize> = (0..n).filter(|&p| topo.is_head(p)).collect();
+        let tails: Vec<usize> = (0..n).filter(|&p| !topo.is_head(p)).collect();
+        let edge_count = topo.edge_count();
         GadmmEngine {
             problem,
             topo,
             theta: vec![vec![0.0; d]; n],
-            lambda: vec![vec![0.0; d]; n.saturating_sub(1)],
+            lambda: vec![vec![0.0; d]; edge_count],
             view: vec![vec![0.0; d]; n],
+            heads,
+            tails,
             quantizers,
             rngs,
             iteration: 0,
@@ -177,7 +195,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         }
     }
 
-    /// Wireless accounting (distances per chain position).
+    /// Wireless accounting (distances per position).
     pub fn set_energy_ctx(&mut self, ctx: EnergyCtx) {
         assert_eq!(ctx.broadcast_dist.len(), self.topo.len());
         self.energy = Some(ctx);
@@ -212,6 +230,10 @@ impl<P: LocalProblem> GadmmEngine<P> {
         &mut self.problem
     }
 
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
     pub fn theta_at(&self, pos: usize) -> &[f32] {
         &self.theta[pos]
     }
@@ -220,6 +242,8 @@ impl<P: LocalProblem> GadmmEngine<P> {
         &self.view[pos]
     }
 
+    /// Dual of topology edge `link` (on a chain: the λ between positions
+    /// `link` and `link + 1`).
     pub fn lambda_at(&self, link: usize) -> &[f32] {
         &self.lambda[link]
     }
@@ -232,7 +256,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         self.compute.seconds()
     }
 
-    /// `f_n(θ_n)` for the worker at chain position `pos`.
+    /// `f_n(θ_n)` for the worker at position `pos`.
     pub fn local_objective_at(&self, pos: usize) -> f64 {
         self.problem
             .objective(self.topo.worker_at(pos), &self.theta[pos])
@@ -244,13 +268,13 @@ impl<P: LocalProblem> GadmmEngine<P> {
     }
 
     /// Thread count the executor will actually use for the head phase —
-    /// the number benchmarks should report (the tail phase may use one
-    /// fewer thread when the worker count is odd).
+    /// the number benchmarks should report (the tail phase may use a
+    /// different count when the color classes differ in size).
     pub fn effective_threads(&self) -> usize {
         if self.par_unsupported {
             return 1;
         }
-        self.phase_threads((self.topo.len() + 1) / 2)
+        self.phase_threads(self.heads.len())
     }
 
     /// Threads a phase of `jobs` positions runs on, under the configured
@@ -275,56 +299,70 @@ impl<P: LocalProblem> GadmmEngine<P> {
     /// scoped threads ([`GadmmConfig::threads`]); the two schedules are
     /// bit-for-bit identical because every position owns its RNG and
     /// quantizer, and all writes within a phase (`θ_p`, `view[p]`) are
-    /// disjoint — same-parity positions never read each other's state.
+    /// disjoint — same-color positions never share an edge, so they never
+    /// read each other's state.
     pub fn iterate(&mut self) -> ResidualPoint {
         self.tracker.begin_iteration(&self.view);
-        // Phase 1: heads (even positions), phase 2: tails (odd positions).
+        // Phase 1: heads, phase 2: tails (even/odd positions on a chain).
         for phase in 0..2 {
-            let n = self.topo.len();
-            let njobs = (n + 1 - phase) / 2;
+            let njobs = if phase == 0 { self.heads.len() } else { self.tails.len() };
             let threads = self.phase_threads(njobs);
             if threads > 1 && !self.par_unsupported {
-                let positions: Vec<usize> = (phase..n).step_by(2).collect();
-                if self.run_phase_parallel(&positions, threads) {
+                // Take the schedule out (and put it back) instead of
+                // cloning it — the hot path allocates nothing per phase.
+                let positions = if phase == 0 {
+                    std::mem::take(&mut self.heads)
+                } else {
+                    std::mem::take(&mut self.tails)
+                };
+                let ran = self.run_phase_parallel(&positions, threads);
+                if phase == 0 {
+                    self.heads = positions;
+                } else {
+                    self.tails = positions;
+                }
+                if ran {
                     continue;
                 }
                 self.par_unsupported = true;
             }
-            let mut p = phase;
-            while p < n {
+            let mut i = 0;
+            while i < njobs {
+                let p = if phase == 0 { self.heads[i] } else { self.tails[i] };
                 self.solve_position(p);
                 self.broadcast_position(p);
-                p += 2;
+                i += 1;
             }
         }
-        // Dual updates — performed locally at every worker from the
-        // *views* both link ends share (eq. (18)).
+        // Dual updates — one per edge, performed locally at every worker
+        // from the *views* both link ends share (eq. (18)).
         let step = self.cfg.dual_step * self.cfg.rho;
-        for i in 0..self.lambda.len() {
-            let (a, b) = (&self.view[i], &self.view[i + 1]);
-            let lam = &mut self.lambda[i];
+        for (e, &(u, v)) in self.topo.edges().iter().enumerate() {
+            let (a, b) = (&self.view[u], &self.view[v]);
+            let lam = &mut self.lambda[e];
             for j in 0..lam.len() {
                 lam[j] += step * (a[j] - b[j]);
             }
         }
         self.iteration += 1;
         self.tracker
-            .end_iteration(self.iteration, &self.theta, &self.view, self.cfg.rho)
+            .end_iteration(self.iteration, &self.theta, &self.view, self.cfg.rho, &self.topo)
     }
 
-    /// Solve the local primal problem at chain position `p` (eq. (14)–(17)).
+    /// Solve the local primal problem at position `p` (eq. (14)–(17)).
     fn solve_position(&mut self, p: usize) {
-        let n = self.topo.len();
         let worker = self.topo.worker_at(p);
-        let ctx = NeighborCtx {
-            lambda_left: if p > 0 { Some(self.lambda[p - 1].as_slice()) } else { None },
-            lambda_right: if p + 1 < n { Some(self.lambda[p].as_slice()) } else { None },
-            theta_left: if p > 0 { Some(self.view[p - 1].as_slice()) } else { None },
-            theta_right: if p + 1 < n { Some(self.view[p + 1].as_slice()) } else { None },
-            rho: self.cfg.rho,
-        };
+        let mut buf = LinkBuf::new();
+        for e in self.topo.incident(p) {
+            buf.push(NeighborLink {
+                sign: e.sign,
+                lambda: self.lambda[e.edge].as_slice(),
+                theta: self.view[e.peer].as_slice(),
+            });
+        }
+        let ctx = buf.ctx(self.cfg.rho);
         // The borrow checker cannot see that `theta[p]` is disjoint from
-        // `view[p±1]`/`lambda[..]`; take the buffer out for the call.
+        // `view[..]`/`lambda[..]`; take the buffer out for the call.
         let mut out = std::mem::take(&mut self.theta[p]);
         self.compute.start();
         self.problem.solve(worker, &ctx, &mut out);
@@ -372,7 +410,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
     /// Safety of the split, in borrow terms: every phase position `p` takes
     /// its `θ_p`, `view[p]`, quantizer, and RNG *out* of the engine, so
     /// threads own disjoint state; the neighbor context only reads
-    /// `view[p±1]` and `λ` — opposite-parity entries no job writes. Bits
+    /// `view[peer]` and `λ` — opposite-color entries no job writes. Bits
     /// are accounted on the main thread in position order afterwards, so
     /// `CommStats` accumulation is schedule-independent.
     fn run_phase_parallel(&mut self, positions: &[usize], threads: usize) -> bool {
@@ -404,7 +442,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 pos: p,
                 solver: by_worker[worker]
                     .take()
-                    .expect("two chain positions mapped to one worker"),
+                    .expect("two positions mapped to one worker"),
                 theta: std::mem::take(&mut self.theta[p]),
                 view: std::mem::take(&mut self.view[p]),
                 quant: self.quantizers.as_mut().map(|qs| {
@@ -417,7 +455,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
 
         let view = &self.view;
         let lambda = &self.lambda;
-        let n = self.topo.len();
+        let topo = &self.topo;
         let rho = self.cfg.rho;
         // Parallel phases charge wall-clock of the whole phase to the
         // compute timer (per-position timing is meaningless across cores).
@@ -428,17 +466,15 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 s.spawn(move || {
                     for job in slice.iter_mut() {
                         let p = job.pos;
-                        let ctx = NeighborCtx {
-                            lambda_left: if p > 0 { Some(lambda[p - 1].as_slice()) } else { None },
-                            lambda_right: if p + 1 < n { Some(lambda[p].as_slice()) } else { None },
-                            theta_left: if p > 0 { Some(view[p - 1].as_slice()) } else { None },
-                            theta_right: if p + 1 < n {
-                                Some(view[p + 1].as_slice())
-                            } else {
-                                None
-                            },
-                            rho,
-                        };
+                        let mut buf = LinkBuf::new();
+                        for e in topo.incident(p) {
+                            buf.push(NeighborLink {
+                                sign: e.sign,
+                                lambda: lambda[e.edge].as_slice(),
+                                theta: view[e.peer].as_slice(),
+                            });
+                        }
+                        let ctx = buf.ctx(rho);
                         job.solver.solve(&ctx, &mut job.theta);
                         job.bits = broadcast_into(
                             job.quant.as_mut(),
@@ -522,11 +558,12 @@ mod tests {
     use crate::data::partition::Partition;
     use crate::model::linreg::LinRegProblem;
 
-    fn setup_threads(
+    fn setup_topo(
         workers: usize,
         quant: Option<QuantConfig>,
         rho: f32,
         threads: usize,
+        topo: Topology,
     ) -> (LinRegDataset, GadmmEngine<LinRegProblem>) {
         let spec = LinRegSpec {
             samples: 2_000,
@@ -542,8 +579,17 @@ mod tests {
             quant,
             threads,
         };
-        let engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 99);
+        let engine = GadmmEngine::new(cfg, problem, topo, 99);
         (data, engine)
+    }
+
+    fn setup_threads(
+        workers: usize,
+        quant: Option<QuantConfig>,
+        rho: f32,
+        threads: usize,
+    ) -> (LinRegDataset, GadmmEngine<LinRegProblem>) {
+        setup_topo(workers, quant, rho, threads, Topology::line(workers))
     }
 
     fn setup(
@@ -605,6 +651,43 @@ mod tests {
     }
 
     #[test]
+    fn ring_topology_runs_with_per_edge_duals() {
+        // A ring has n edges (one more λ than the chain) and every
+        // position at degree 2; bit accounting is still one broadcast per
+        // worker per iteration.
+        let (data, mut engine) = setup_topo(
+            6,
+            Some(QuantConfig::default()),
+            1600.0,
+            1,
+            Topology::ring(6).unwrap(),
+        );
+        assert_eq!(engine.topology().edge_count(), 6);
+        let (_, f_star) = data.optimum();
+        let start_gap = (engine.global_objective() - f_star).abs();
+        for _ in 0..600 {
+            engine.iterate();
+        }
+        let d = 6u64;
+        assert_eq!(engine.comm().bits, 600 * 6 * (2 * d + 64));
+        let gap = (engine.global_objective() - f_star).abs();
+        assert!(gap < 1e-2 * start_gap, "ring gap={gap} start={start_gap}");
+    }
+
+    #[test]
+    fn star_topology_converges_with_high_degree_hub() {
+        let (data, mut engine) =
+            setup_topo(5, None, 1600.0, 1, Topology::star(5));
+        let (_, f_star) = data.optimum();
+        let start_gap = (engine.global_objective() - f_star).abs();
+        for _ in 0..1_000 {
+            engine.iterate();
+        }
+        let gap = (engine.global_objective() - f_star).abs();
+        assert!(gap < 1e-2 * start_gap, "star gap={gap} start={start_gap}");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         // Same seed ⇒ identical trajectories, and the schedule is
         // irrelevant: a strictly sequential engine and a forced-parallel
@@ -622,6 +705,28 @@ mod tests {
             assert_eq!(a.view_at(p), b.view_at(p));
         }
         for l in 0..5 {
+            assert_eq!(a.lambda_at(l), b.lambda_at(l));
+        }
+        assert_eq!(a.comm().bits, b.comm().bits);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_on_a_ring() {
+        // The phase executor's bit-for-bit guarantee must survive the
+        // edge-list generalization: same-color positions still share no
+        // edge on any bipartite topology.
+        let topo = || Topology::ring(6).unwrap();
+        let (_, mut a) = setup_topo(6, Some(QuantConfig::default()), 1600.0, 1, topo());
+        let (_, mut b) = setup_topo(6, Some(QuantConfig::default()), 1600.0, 3, topo());
+        for _ in 0..20 {
+            a.iterate();
+            b.iterate();
+        }
+        for p in 0..6 {
+            assert_eq!(a.theta_at(p), b.theta_at(p));
+            assert_eq!(a.view_at(p), b.view_at(p));
+        }
+        for l in 0..6 {
             assert_eq!(a.lambda_at(l), b.lambda_at(l));
         }
         assert_eq!(a.comm().bits, b.comm().bits);

@@ -2,11 +2,12 @@
 //! quantities, recorded per iteration so convergence claims are observable
 //! (and testable) rather than assumed.
 //!
-//! * primal residual `r_{n,n+1}^{k+1} = θ_n^{k+1} − θ_{n+1}^{k+1}` — summed
-//!   squared norm over all links;
+//! * primal residual `r_e^{k+1} = θ_u^{k+1} − θ_v^{k+1}` per topology edge
+//!   `e = (u, v)` — summed squared norm over all links;
 //! * dual residual (eq. (27)): for each head worker,
-//!   `s_n^{k+1} = ρ(θ̂_{n−1}^{k+1} − θ̂_{n−1}^k) + ρ(θ̂_{n+1}^{k+1} − θ̂_{n+1}^k)`
-//!   (single term at the chain ends) — summed squared norm;
+//!   `s_n^{k+1} = ρ Σ_{incident peers} (θ̂_peer^{k+1} − θ̂_peer^k)` —
+//!   summed squared norm (on a chain this is the paper's two-term interior
+//!   / one-term end form);
 //! * quantization error `‖θ_n − θ̂_n‖²` — summed over workers.
 
 use crate::linalg::vecops;
@@ -54,11 +55,12 @@ impl ResidualTracker {
         theta: &[Vec<f32>],
         view: &[Vec<f32>],
         rho: f32,
+        topo: &Topology,
     ) -> ResidualPoint {
         let n = theta.len();
         let mut primal_sq = 0.0f64;
-        for i in 0..n - 1 {
-            primal_sq += vecops::dist_sq_f32(&theta[i], &theta[i + 1]);
+        for &(u, v) in topo.edges() {
+            primal_sq += vecops::dist_sq_f32(&theta[u], &theta[v]);
         }
 
         // View deltas per position.
@@ -67,26 +69,30 @@ impl ResidualTracker {
         }
         let rho = rho as f64;
         let mut dual_sq = 0.0f64;
-        for p in (0..n).step_by(2) {
-            debug_assert!(Topology::is_head_position(p));
-            let mut s_sq = 0.0f64;
-            match (p > 0, p + 1 < n) {
-                (true, true) => {
-                    // ‖ρ(Δ_{p−1} + Δ_{p+1})‖²
-                    let (l, r) = (&self.diff[p - 1], &self.diff[p + 1]);
-                    for j in 0..l.len() {
-                        let v = rho * (l[j] as f64 + r[j] as f64);
-                        s_sq += v * v;
-                    }
-                }
-                (false, true) => {
-                    s_sq = rho * rho * vecops::norm2_sq_f32(&self.diff[p + 1]);
-                }
-                (true, false) => {
-                    s_sq = rho * rho * vecops::norm2_sq_f32(&self.diff[p - 1]);
-                }
-                (false, false) => {}
+        for p in 0..n {
+            if !topo.is_head(p) || topo.degree(p) == 0 {
+                continue;
             }
+            let s_sq = if topo.degree(p) == 1 {
+                // Single-neighbor heads keep the pre-redesign rounding
+                // order exactly: ρ²·Σ Δ² (one final multiply), not
+                // Σ (ρ·Δ)² — the two differ in the last ulps, and chain
+                // trajectories are pinned bit-for-bit.
+                let peer = topo.incident(p)[0].peer;
+                rho * rho * vecops::norm2_sq_f32(&self.diff[peer])
+            } else {
+                let d = self.diff[p].len();
+                let mut s_sq = 0.0f64;
+                for j in 0..d {
+                    let mut sum = 0.0f64;
+                    for e in topo.incident(p) {
+                        sum += self.diff[e.peer][j] as f64;
+                    }
+                    let v = rho * sum;
+                    s_sq += v * v;
+                }
+                s_sq
+            };
             dual_sq += s_sq;
         }
 
@@ -113,7 +119,7 @@ mod tests {
         let mut t = ResidualTracker::new(3, 2);
         let consensus = vec![vec![1.0f32, -1.0]; 3];
         t.begin_iteration(&consensus);
-        let p = t.end_iteration(1, &consensus, &consensus, 2.0);
+        let p = t.end_iteration(1, &consensus, &consensus, 2.0, &Topology::line(3));
         assert_eq!(p.primal_sq, 0.0);
         assert_eq!(p.dual_sq, 0.0);
         assert_eq!(p.quant_err_sq, 0.0);
@@ -124,9 +130,20 @@ mod tests {
         let mut t = ResidualTracker::new(3, 1);
         let theta = vec![vec![0.0f32], vec![1.0], vec![3.0]];
         t.begin_iteration(&theta);
-        let p = t.end_iteration(1, &theta, &theta, 1.0);
+        let p = t.end_iteration(1, &theta, &theta, 1.0, &Topology::line(3));
         // (0−1)² + (1−3)² = 5
         assert!((p.primal_sq - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn primal_residual_counts_every_ring_edge() {
+        // ring(4) has 4 edges, including the closing (3, 0) link.
+        let mut t = ResidualTracker::new(4, 1);
+        let theta = vec![vec![0.0f32], vec![1.0], vec![0.0], vec![1.0]];
+        t.begin_iteration(&theta);
+        let p = t.end_iteration(1, &theta, &theta, 1.0, &Topology::ring(4).unwrap());
+        // Each of the 4 edges differs by 1 ⇒ Σ = 4.
+        assert!((p.primal_sq - 4.0).abs() < 1e-9);
     }
 
     #[test]
@@ -135,10 +152,22 @@ mod tests {
         let view0 = vec![vec![0.0f32], vec![0.0], vec![0.0]];
         let view1 = vec![vec![0.0f32], vec![2.0], vec![0.0]];
         t.begin_iteration(&view0);
-        let p = t.end_iteration(1, &view1, &view1, 3.0);
+        let p = t.end_iteration(1, &view1, &view1, 3.0, &Topology::line(3));
         // Heads at 0 and 2; each sees tail (pos 1) move by 2 ⇒ s = ρ·2 = 6
         // each ⇒ Σ‖s‖² = 72.
         assert!((p.dual_sq - 72.0).abs() < 1e-9, "{p:?}");
+    }
+
+    #[test]
+    fn dual_residual_sums_star_hub_peers() {
+        // star(4): the hub (position 0) is the only head, with 3 leaves;
+        // if every leaf's view moves by 1, s = ρ·3 ⇒ ‖s‖² = 9ρ² = 36.
+        let mut t = ResidualTracker::new(4, 1);
+        let view0 = vec![vec![0.0f32]; 4];
+        let view1 = vec![vec![0.0f32], vec![1.0], vec![1.0], vec![1.0]];
+        t.begin_iteration(&view0);
+        let p = t.end_iteration(1, &view1, &view1, 2.0, &Topology::star(4));
+        assert!((p.dual_sq - 36.0).abs() < 1e-9, "{p:?}");
     }
 
     #[test]
@@ -147,7 +176,7 @@ mod tests {
         let theta = vec![vec![1.0f32, 0.0], vec![0.0, 0.0]];
         let view = vec![vec![0.5f32, 0.0], vec![0.0, 1.0]];
         t.begin_iteration(&view);
-        let p = t.end_iteration(1, &theta, &view, 1.0);
+        let p = t.end_iteration(1, &theta, &view, 1.0, &Topology::line(2));
         assert!((p.quant_err_sq - (0.25 + 1.0)).abs() < 1e-9);
     }
 }

@@ -1,5 +1,6 @@
 //! The simulated runtime: GADMM-family head/tail rounds driven through
-//! the discrete-event network simulator (`sim`).
+//! the discrete-event network simulator (`sim`), on any bipartite
+//! [`Topology`].
 //!
 //! Protocol per iteration `k` — identical math to [`super::engine`] and
 //! [`super::threaded`], but every broadcast is a real framed byte stream
@@ -8,19 +9,21 @@
 //!
 //! 1. **Head phase** — each head's local solve completes after a sampled
 //!    compute time (stragglers run slower); its update is framed and
-//!    transmitted to each chain neighbor with stop-and-wait ARQ. A frame
+//!    transmitted to each neighbor with stop-and-wait ARQ. A frame
 //!    abandoned after the attempt cap leaves that receiver's mirror
 //!    *stale* for the round — the decentralized error-propagation case of
 //!    Sec. III, observable here and invisible to bits-only accounting.
 //! 2. **Tail phase** — tails start solving once their head frames arrive
 //!    (or the phase barrier passes them by with stale mirrors), then
 //!    broadcast the same way.
-//! 3. **Dual update** — local, from each worker's own view and mirrors,
-//!    exactly as in the threaded runtime.
+//! 3. **Dual update** — local, per incident link, from each worker's own
+//!    view and mirrors, exactly as in the threaded runtime.
 //!
 //! **Fault injection:** scheduled worker dropouts remove a worker between
-//! iterations; the chain is re-stitched over the survivors with
-//! [`Topology::nearest_neighbor_chain`], duals reset, and every survivor
+//! iterations; the survivors are re-stitched into a
+//! [`Topology::nearest_neighbor_chain`] over their deployment points
+//! (regardless of the original graph shape — a chain is the
+//! minimum-energy connected repair), duals reset, and every survivor
 //! re-anchors its neighbors with one full-precision resync broadcast
 //! (charged).
 //!
@@ -29,14 +32,14 @@
 //! integer nanoseconds; simultaneous events resolve in schedule order.
 //! Two runs with the same seeds produce bit-identical traces and curves,
 //! and with `SimConfig::ideal()` (no loss, zero latency) the run is
-//! bit-for-bit the deterministic engine. Both properties are pinned by
-//! the `sim_determinism` integration suite.
+//! bit-for-bit the deterministic engine on the same topology. Both
+//! properties are pinned by the `sim_determinism` integration suite.
 
 use super::engine::RunOptions;
 use crate::comm::{wire, CommStats, Message, Payload};
 use crate::config::{Dropout, GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
-use crate::model::{LocalProblem, NeighborCtx};
+use crate::model::{LinkBuf, LocalProblem, NeighborLink};
 use crate::net::geometry::Point;
 use crate::net::topology::Topology;
 use crate::quant::{Mirror, StochasticQuantizer};
@@ -73,7 +76,7 @@ pub enum TraceEvent {
     },
     /// A scheduled worker failure fired.
     Dropout { iteration: u64, worker: usize },
-    /// The chain was re-stitched over the survivors.
+    /// The topology was re-stitched over the survivors.
     Restitch { iteration: u64, survivors: usize },
 }
 
@@ -102,16 +105,21 @@ pub struct SimReport {
     pub restitches: u64,
 }
 
+/// One incident link's complete per-worker state: the neighbor's *worker
+/// id*, the λ sign this end sees, the dual, and the mirror of the
+/// neighbor's broadcast state. Kept in the topology's incident-edge order.
+struct SimLink {
+    peer: usize,
+    sign: f32,
+    lambda: Vec<f32>,
+    mirror: Mirror,
+}
+
 struct WorkerState {
     alive: bool,
     theta: Vec<f32>,
-    lambda_left: Option<Vec<f32>>,
-    lambda_right: Option<Vec<f32>>,
-    mirror_left: Option<Mirror>,
-    mirror_right: Option<Mirror>,
-    /// Current chain-neighbor worker ids.
-    left: Option<usize>,
-    right: Option<usize>,
+    /// Incident links, in the topology's incident-edge order.
+    links: Vec<SimLink>,
     /// What this worker's neighbors believe its model to be.
     own_view: Vec<f32>,
     quantizer: Option<StochasticQuantizer>,
@@ -139,7 +147,10 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     cfg: GadmmConfig,
     sim: SimConfig,
     problem: P,
-    /// Worker ids in current chain order (re-stitched after dropouts).
+    /// Current communication graph; `topo.worker_at(p)` is a *global*
+    /// worker id (after a re-stitch, only survivors appear).
+    topo: Topology,
+    /// Worker ids in current position order (cached from `topo`).
     chain: Vec<usize>,
     points: Vec<Point>,
     workers: Vec<WorkerState>,
@@ -183,13 +194,11 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         }
         let d = problem.dims();
 
-        let chain: Vec<usize> = (0..n).map(|p| topo.worker_at(p)).collect();
-
-        // Engine-identical model streams: fork per chain position.
+        // Engine-identical model streams: fork per position.
         let mut root = Rng::seed_from_u64(seed);
         let mut model_rngs: Vec<Option<Rng>> = (0..n).map(|_| None).collect();
-        for (p, &w) in chain.iter().enumerate() {
-            model_rngs[w] = Some(root.fork(p as u64));
+        for p in 0..n {
+            model_rngs[topo.worker_at(p)] = Some(root.fork(p as u64));
         }
         let mut sim_root = Rng::seed_from_u64(sim.seed ^ 0x51D1_CA7E);
 
@@ -198,15 +207,10 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             workers.push(WorkerState {
                 alive: true,
                 theta: vec![0.0; d],
-                lambda_left: None,
-                lambda_right: None,
-                mirror_left: None,
-                mirror_right: None,
-                left: None,
-                right: None,
+                links: Vec::new(),
                 own_view: vec![0.0; d],
                 quantizer: cfg.quant.map(|q| StochasticQuantizer::new(d, q.policy())),
-                model_rng: rng.expect("chain covers every worker"),
+                model_rng: rng.expect("topology covers every worker"),
                 compute_rng: sim_root.fork(w as u64),
                 compute_scale: sim.compute_scale(w, n),
             });
@@ -227,7 +231,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             cfg,
             sim,
             problem,
-            chain,
+            topo,
+            chain: Vec::new(),
             points,
             workers,
             net,
@@ -242,26 +247,30 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             trace: Vec::new(),
             dims: d,
         };
-        this.relink_chain();
+        this.relink();
         this
     }
 
-    /// Rebuild per-worker link state (neighbors, zeroed duals, zeroed
-    /// mirrors) from the current chain. Mirrors are anchored afterwards by
-    /// the caller where a non-zero anchor is needed.
-    fn relink_chain(&mut self) {
+    /// Rebuild per-worker link state (peers, signs, zeroed duals, zeroed
+    /// mirrors) from the current topology. Mirrors are anchored afterwards
+    /// by the caller where a non-zero anchor is needed.
+    fn relink(&mut self) {
         let d = self.dims;
-        let chain = self.chain.clone();
-        for (p, &w) in chain.iter().enumerate() {
-            let left = (p > 0).then(|| chain[p - 1]);
-            let right = (p + 1 < chain.len()).then(|| chain[p + 1]);
-            let ws = &mut self.workers[w];
-            ws.left = left;
-            ws.right = right;
-            ws.lambda_left = left.map(|_| vec![0.0; d]);
-            ws.lambda_right = right.map(|_| vec![0.0; d]);
-            ws.mirror_left = left.map(|_| Mirror::new(d));
-            ws.mirror_right = right.map(|_| Mirror::new(d));
+        self.chain = (0..self.topo.len()).map(|p| self.topo.worker_at(p)).collect();
+        for p in 0..self.topo.len() {
+            let w = self.topo.worker_at(p);
+            let links: Vec<SimLink> = self
+                .topo
+                .incident(p)
+                .iter()
+                .map(|e| SimLink {
+                    peer: self.topo.worker_at(e.peer),
+                    sign: e.sign,
+                    lambda: vec![0.0; d],
+                    mirror: Mirror::new(d),
+                })
+                .collect();
+            self.workers[w].links = links;
         }
     }
 
@@ -276,11 +285,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             if let Some(q) = ws.quantizer.as_mut() {
                 q.reset_to(theta0);
             }
-            if let Some(m) = ws.mirror_left.as_mut() {
-                m.reset_to(theta0);
-            }
-            if let Some(m) = ws.mirror_right.as_mut() {
-                m.reset_to(theta0);
+            for l in ws.links.iter_mut() {
+                l.mirror.reset_to(theta0);
             }
         }
     }
@@ -307,9 +313,18 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         self.net.stats.abandoned
     }
 
-    /// Worker ids currently in the chain, in chain order.
+    /// Worker ids currently in the topology, in position order.
     pub fn chain(&self) -> &[usize] {
         &self.chain
+    }
+
+    /// The current communication graph. Meaningful while the run can
+    /// continue (≥ 2 live workers); after a terminal dropout — when
+    /// [`Self::iterate`] has returned `false` — a graph of fewer than two
+    /// nodes is unrepresentable, so this retains the last valid topology
+    /// while [`Self::chain`] reflects the true (< 2) survivor set.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     pub fn theta_of(&self, worker: usize) -> &[f32] {
@@ -324,8 +339,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         &self.problem
     }
 
-    /// Sum of local objectives over the *live* chain — `F(θ^k)` of eq. (1)
-    /// restricted to survivors.
+    /// Sum of local objectives over the *live* workers — `F(θ^k)` of
+    /// eq. (1) restricted to survivors.
     pub fn global_objective(&self) -> f64 {
         self.chain
             .iter()
@@ -334,8 +349,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     }
 
     /// Apply dropouts scheduled at or before iteration `iter`; re-stitch
-    /// the chain if any fired. Returns `false` when fewer than two workers
-    /// survive (the run cannot continue).
+    /// the topology if any fired. Returns `false` when fewer than two
+    /// workers survive (the run cannot continue).
     fn apply_scheduled_dropouts(&mut self, iter: u64) -> bool {
         let mut fired = false;
         while let Some(d) = self.pending_dropouts.last().copied() {
@@ -360,7 +375,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         self.chain.len() >= 2
     }
 
-    /// Re-stitch the chain over the survivors (nearest-neighbor heuristic
+    /// Re-stitch the survivors into a chain (nearest-neighbor heuristic
     /// over their deployment points), reset duals, and re-anchor every
     /// mirror with a charged full-precision resync broadcast.
     fn restitch(&mut self, iter: u64) {
@@ -373,18 +388,19 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         }
         let pts: Vec<Point> = survivors.iter().map(|&w| self.points[w]).collect();
         let sub = Topology::nearest_neighbor_chain(&pts);
-        self.chain = (0..sub.len()).map(|p| survivors[sub.worker_at(p)]).collect();
-        self.relink_chain();
+        let order: Vec<usize> = (0..sub.len()).map(|p| survivors[sub.worker_at(p)]).collect();
+        self.topo = Topology::chain_over(order);
+        self.relink();
 
         // Resync: every survivor broadcasts its current model in full
         // precision (assumed reliable — ARQ without cap), so sender
         // quantizers and receiver mirrors re-anchor in exact agreement.
         let d = self.dims;
         let frame_bytes = wire::HEADER_BYTES + 4 * d;
-        let chain = self.chain.clone();
         let mut resync_secs = 0.0f64;
         let mut links = 0u64;
-        for (p, &w) in chain.iter().enumerate() {
+        for p in 0..self.topo.len() {
+            let w = self.topo.worker_at(p);
             let theta = self.workers[w].theta.clone();
             {
                 let ws = &mut self.workers[w];
@@ -394,24 +410,20 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 ws.own_view.copy_from_slice(&theta);
             }
             self.comm.record(32 * d as u64, 0.0);
-            for (nb, mine_is_left_of_nb) in [
-                (p.checked_sub(1).map(|q| chain[q]), false),
-                ((p + 1 < chain.len()).then(|| chain[p + 1]), true),
-            ]
-            .into_iter()
-            .filter_map(|(nb, side)| nb.map(|n| (n, side)))
-            {
+            let deg = self.workers[w].links.len();
+            let mut i = 0;
+            while i < deg {
+                let nb = self.workers[w].links[i].peer;
+                i += 1;
                 links += 1;
                 let dist = self.points[w].distance(&self.points[nb]);
                 resync_secs = resync_secs.max(self.net.latency().delivery_secs(frame_bytes, dist));
-                let ws = &mut self.workers[nb];
-                let mirror = if mine_is_left_of_nb {
-                    ws.mirror_left.as_mut()
-                } else {
-                    ws.mirror_right.as_mut()
-                };
-                mirror
-                    .expect("relinked neighbor must have a mirror for this side")
+                let nbs = &mut self.workers[nb];
+                nbs.links
+                    .iter_mut()
+                    .find(|l| l.peer == w)
+                    .expect("links are symmetric after relink")
+                    .mirror
                     .reset_to(&theta);
             }
         }
@@ -422,7 +434,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         if self.sim.record_trace {
             self.trace.push(TraceEvent::Restitch {
                 iteration: iter,
-                survivors: chain.len(),
+                survivors: self.chain.len(),
             });
         }
     }
@@ -437,18 +449,20 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let iter_start = self.now;
         let mut ready: Vec<SimTime> = vec![iter_start; self.workers.len()];
 
+        // Phase 0: heads, phase 1: tails — positions in ascending order,
+        // exactly the engine's schedule.
         for phase in 0..2 {
-            let chain = self.chain.clone();
-            let mut p = phase;
-            while p < chain.len() {
-                let w = chain[p];
+            for p in 0..self.topo.len() {
+                if self.topo.is_head(p) != (phase == 0) {
+                    continue;
+                }
+                let w = self.topo.worker_at(p);
                 let ct = {
                     let ws = &mut self.workers[w];
                     self.compute.sample_secs(ws.compute_scale, &mut ws.compute_rng)
                 };
                 let at = ready[w].max(iter_start).plus_secs_f64(ct);
                 self.queue.schedule(at, SimEvent::SolveDone { worker: w });
-                p += 2;
             }
             while let Some((t, ev)) = self.queue.pop() {
                 self.now = self.now.max(t);
@@ -464,21 +478,24 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             }
         }
 
-        // Dual updates — local at every worker, threaded-runtime math.
+        // Dual updates — local at every worker, per incident link, in link
+        // order (threaded-runtime math).
         let step = self.cfg.dual_step * self.cfg.rho;
         let d = self.dims;
         for &w in &self.chain {
             let ws = &mut self.workers[w];
-            if let (Some(lam), Some(m)) = (ws.lambda_left.as_mut(), ws.mirror_left.as_ref()) {
-                let nb = m.theta_hat();
-                for i in 0..d {
-                    lam[i] += step * (nb[i] - ws.own_view[i]);
-                }
-            }
-            if let (Some(lam), Some(m)) = (ws.lambda_right.as_mut(), ws.mirror_right.as_ref()) {
-                let nb = m.theta_hat();
-                for i in 0..d {
-                    lam[i] += step * (ws.own_view[i] - nb[i]);
+            let own = &ws.own_view;
+            for l in ws.links.iter_mut() {
+                let nb = l.mirror.theta_hat();
+                let lam = &mut l.lambda;
+                if l.sign > 0.0 {
+                    for j in 0..d {
+                        lam[j] += step * (nb[j] - own[j]);
+                    }
+                } else {
+                    for j in 0..d {
+                        lam[j] += step * (own[j] - nb[j]);
+                    }
                 }
             }
         }
@@ -492,13 +509,15 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     fn handle_solve_done(&mut self, w: usize, iter: u64) {
         {
             let ws = &mut self.workers[w];
-            let ctx = NeighborCtx {
-                lambda_left: ws.lambda_left.as_deref(),
-                lambda_right: ws.lambda_right.as_deref(),
-                theta_left: ws.mirror_left.as_ref().map(|m| m.theta_hat()),
-                theta_right: ws.mirror_right.as_ref().map(|m| m.theta_hat()),
-                rho: self.cfg.rho,
-            };
+            let mut buf = LinkBuf::new();
+            for l in &ws.links {
+                buf.push(NeighborLink {
+                    sign: l.sign,
+                    lambda: l.lambda.as_slice(),
+                    theta: l.mirror.theta_hat(),
+                });
+            }
+            let ctx = buf.ctx(self.cfg.rho);
             self.problem.solve(w, &ctx, &mut ws.theta);
         }
 
@@ -533,11 +552,13 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             round: iter,
             payload,
         });
-        let neighbors = {
-            let ws = &self.workers[w];
-            [ws.left, ws.right]
-        };
-        for nb in neighbors.into_iter().flatten() {
+        // Indexed loop: `self.net.transmit` needs `&mut self`, so the
+        // link list cannot stay borrowed across iterations.
+        let deg = self.workers[w].links.len();
+        let mut i = 0;
+        while i < deg {
+            let nb = self.workers[w].links[i].peer;
+            i += 1;
             let dist = self.points[w].distance(&self.points[nb]);
             let tx = self.net.transmit(w, nb, frame.len(), dist, self.now);
             match tx.deliver_at {
@@ -568,7 +589,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     }
 
     /// Deliver a frame: decode the real bytes and apply to the receiver's
-    /// mirror for the sending side.
+    /// mirror for the link it arrived on.
     #[allow(clippy::too_many_arguments)]
     fn handle_frame(
         &mut self,
@@ -586,19 +607,14 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         if !ws.alive {
             return;
         }
-        let mirror = if ws.left == Some(from) {
-            ws.mirror_left.as_mut()
-        } else if ws.right == Some(from) {
-            ws.mirror_right.as_mut()
-        } else {
-            // Sender is no longer a neighbor (re-stitched mid-flight
-            // frames): drop silently.
-            None
+        // Sender may no longer be a neighbor (re-stitched mid-flight
+        // frames): drop silently.
+        let Some(link) = ws.links.iter_mut().find(|l| l.peer == from) else {
+            return;
         };
-        let Some(m) = mirror else { return };
         match msg.payload {
-            Payload::Quantized(q) => m.apply(&q),
-            Payload::Full(v) => m.reset_to(&v),
+            Payload::Quantized(q) => link.mirror.apply(&q),
+            Payload::Full(v) => link.mirror.reset_to(&v),
             Payload::Stop => {}
         }
         ready[to] = ready[to].max(t);
@@ -688,6 +704,16 @@ mod tests {
         sim: SimConfig,
         seed: u64,
     ) -> (LinRegDataset, SimulatedGadmm<LinRegProblem>) {
+        world_topo(workers, quant, sim, seed, Topology::line(workers))
+    }
+
+    fn world_topo(
+        workers: usize,
+        quant: Option<QuantConfig>,
+        sim: SimConfig,
+        seed: u64,
+        topo: Topology,
+    ) -> (LinRegDataset, SimulatedGadmm<LinRegProblem>) {
         let spec = LinRegSpec {
             samples: 1_200,
             ..LinRegSpec::default()
@@ -707,7 +733,7 @@ mod tests {
             cfg,
             sim,
             problem,
-            Topology::line(workers),
+            topo,
             collinear(workers, 50.0),
             seed,
         );
@@ -732,6 +758,30 @@ mod tests {
         // Paper accounting: 6 broadcasts per iteration.
         assert_eq!(sim.comm().transmissions, 600 * 6);
         assert_eq!(sim.comm().bits, 600 * 6 * (2 * 6 + 64));
+    }
+
+    #[test]
+    fn converges_on_a_ring_over_a_lossy_network() {
+        let mut cfg = SimConfig::ideal();
+        cfg.loss = 0.1;
+        cfg.max_attempts = 10;
+        cfg.arq_timeout_secs = 1e-3;
+        cfg.link_rate_bps = 1e6;
+        let (data, mut sim) = world_topo(
+            6,
+            Some(QuantConfig::default()),
+            cfg,
+            31,
+            Topology::ring(6).unwrap(),
+        );
+        let (_, f_star) = data.optimum();
+        let start_gap = (sim.global_objective() - f_star).abs();
+        for _ in 0..800 {
+            assert!(sim.iterate());
+        }
+        assert!(sim.net_stats().retransmissions > 0, "loss must cost attempts");
+        let gap = (sim.global_objective() - f_star).abs();
+        assert!(gap < 1e-2 * start_gap, "gap={gap} start={start_gap}");
     }
 
     #[test]
@@ -789,11 +839,39 @@ mod tests {
         }
         assert_eq!(sim.chain().len(), 5);
         assert!(!sim.chain().contains(&2));
+        assert!(sim.topology().validate());
         // The surviving sub-problem has a different optimum than the full
         // fleet, so just require the run kept making progress.
         let live_obj: f64 = sim.global_objective();
         assert!(live_obj.is_finite());
         assert!(f_star.is_finite());
+    }
+
+    #[test]
+    fn ring_dropout_restitches_to_a_chain() {
+        // A ring that loses a worker is re-stitched into a chain over the
+        // survivors — the minimum-energy connected repair.
+        let mut cfg = SimConfig::ideal();
+        cfg.dropouts = vec![Dropout {
+            worker: 3,
+            at_iteration: 4,
+        }];
+        let (_, mut sim) = world_topo(
+            6,
+            Some(QuantConfig::default()),
+            cfg,
+            9,
+            Topology::ring(6).unwrap(),
+        );
+        for _ in 0..50 {
+            assert!(sim.iterate());
+        }
+        assert_eq!(sim.chain().len(), 5);
+        assert!(!sim.chain().contains(&3));
+        assert!(sim.topology().validate());
+        assert_eq!(sim.topology().edge_count(), 4);
+        let obj = sim.global_objective();
+        assert!(obj.is_finite());
     }
 
     #[test]
@@ -837,7 +915,7 @@ mod tests {
         let (_, mut sim) = world(4, None, cfg, 8);
         assert!(sim.iterate());
         assert!(sim.iterate());
-        // Iteration 3 applies the dropouts; one survivor cannot chain.
+        // Iteration 3 applies the dropouts; one survivor cannot re-stitch.
         assert!(!sim.iterate());
     }
 }

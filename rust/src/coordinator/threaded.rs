@@ -1,34 +1,49 @@
 //! The distributed runtime: one OS thread per worker, neighbor messages
-//! over `comm::transport` mailboxes.
+//! over `comm::transport` mailboxes, on any bipartite [`Topology`].
 //!
 //! Protocol per iteration `k` (matches Algorithm 1 and the deterministic
 //! engine exactly):
 //!
-//! * **head** (even chain position): solve against the mirrors (tails'
-//!   `θ̂` from iteration `k−1`), broadcast the (quantized) update to both
-//!   neighbors, then block on the tails' iteration-`k` broadcasts;
-//! * **tail** (odd position): block on the heads' iteration-`k`
-//!   broadcasts, solve, broadcast;
-//! * both then update their link duals locally from the shared `θ̂`s
+//! * **head** (one color class; even positions on a chain): solve against
+//!   the mirrors (tails' `θ̂` from iteration `k−1`), broadcast the
+//!   (quantized) update to every neighbor, then block on the tails'
+//!   iteration-`k` broadcasts;
+//! * **tail** (the other class): block on the heads' iteration-`k`
+//!   broadcasts — bipartiteness guarantees *all* of a tail's neighbors
+//!   are heads — then solve, then broadcast;
+//! * both then update their per-link duals locally from the shared `θ̂`s
 //!   (eq. (18)) — no extra communication.
 //!
 //! Every worker also reports `(θ_k, f_n(θ_k), bits)` to the leader on an
 //! out-of-band metrics channel (instrumentation, not charged). Given the
 //! same seed, this runtime is **bit-for-bit equivalent** to
-//! [`super::engine::GadmmEngine`] — enforced by the `threaded_equivalence`
-//! integration test.
+//! [`super::engine::GadmmEngine`] on the same topology — enforced by the
+//! `threaded_equivalence` integration test (chains) and
+//! `topology_generalization` (rings).
 
-use crate::comm::transport::{chain_neighbors, in_process_network_with_neighbors, Endpoint};
+use crate::comm::transport::{
+    in_process_network_with_neighbors, topology_neighbors, Endpoint,
+};
 use crate::comm::{CommStats, Message, Payload};
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
-use crate::model::{NeighborCtx, WorkerSolver};
+use crate::model::{LinkBuf, NeighborLink, WorkerSolver};
+use crate::net::topology::Topology;
 use crate::quant::{Mirror, StochasticQuantizer};
 use crate::util::rng::Rng;
 use std::sync::mpsc::{channel, Sender};
 use std::time::Duration;
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One incident link as shipped to a worker thread: the neighbor's
+/// position and the λ sign this endpoint sees (see
+/// `net::topology::IncidentEdge`).
+#[derive(Clone, Copy, Debug)]
+struct LinkSpec {
+    peer: usize,
+    sign: f32,
+}
 
 /// Per-iteration worker report to the leader.
 struct WorkerReport {
@@ -43,15 +58,32 @@ struct WorkerReport {
 pub struct ThreadedReport {
     pub recorder: Recorder,
     pub comm: CommStats,
-    /// Final model per chain position.
+    /// Final model per topology position.
     pub thetas: Vec<Vec<f32>>,
 }
 
-/// Run `iterations` of (Q-)GADMM over `solvers` (chain position order)
-/// on real threads. `metric` is evaluated by the leader on the collected
-/// `(θ, Σf_n)` each iteration; by convention it receives the sum of local
-/// objectives so loss-gap metrics are cheap to form.
+/// Run `iterations` of (Q-)GADMM over `solvers` (identity chain, solver
+/// `p` at position `p`) on real threads. See [`run_threaded_on`] for
+/// arbitrary bipartite topologies.
 pub fn run_threaded(
+    cfg: &GadmmConfig,
+    solvers: Vec<Box<dyn WorkerSolver>>,
+    iterations: u64,
+    seed: u64,
+    metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
+) -> anyhow::Result<ThreadedReport> {
+    assert!(solvers.len() >= 2, "GADMM needs at least two workers");
+    let topo = Topology::line(solvers.len());
+    run_threaded_on(&topo, cfg, solvers, iterations, seed, metric)
+}
+
+/// Run `iterations` of (Q-)GADMM over `solvers` (position order: solver
+/// `p` drives `topo`'s position `p`) on real threads. `metric` is
+/// evaluated by the leader on the collected `(θ, Σf_n)` each iteration;
+/// by convention it receives the sum of local objectives so loss-gap
+/// metrics are cheap to form.
+pub fn run_threaded_on(
+    topo: &Topology,
     cfg: &GadmmConfig,
     solvers: Vec<Box<dyn WorkerSolver>>,
     iterations: u64,
@@ -60,29 +92,51 @@ pub fn run_threaded(
 ) -> anyhow::Result<ThreadedReport> {
     let n = solvers.len();
     assert_eq!(cfg.workers, n, "config/solver count mismatch");
+    assert_eq!(topo.len(), n, "topology/solver count mismatch");
     assert!(n >= 2);
     let d = solvers[0].dims();
 
-    // The chain topology is known up front, so endpoints only hold
-    // senders to their actual neighbors (O(n) handles, and a misdirected
-    // send would surface as a TransportError instead of a bad delivery).
-    let endpoints = in_process_network_with_neighbors(n, &chain_neighbors(n));
+    // The topology is known up front, so endpoints only hold senders to
+    // their actual neighbors (O(edges) handles, and a misdirected send
+    // surfaces as a TransportError instead of a bad delivery).
+    let endpoints = in_process_network_with_neighbors(n, &topology_neighbors(topo));
     let (report_tx, report_rx) = channel::<WorkerReport>();
 
     // Seed forks must match the deterministic engine exactly.
     let mut root = Rng::seed_from_u64(seed);
     let rngs: Vec<Rng> = (0..n).map(|p| root.fork(p as u64)).collect();
 
+    // Per-position link specs in the topology's incident-edge order (the
+    // same order the engine's NeighborCtx uses — required for bit-exact
+    // equivalence).
+    let specs: Vec<(bool, Vec<LinkSpec>)> = (0..n)
+        .map(|p| {
+            (
+                topo.is_head(p),
+                topo.incident(p)
+                    .iter()
+                    .map(|e| LinkSpec {
+                        peer: e.peer,
+                        sign: e.sign,
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+
     let mut handles = Vec::with_capacity(n);
-    for (pos, (solver, (endpoint, rng))) in solvers
+    for (pos, ((solver, (endpoint, rng)), (is_head, links))) in solvers
         .into_iter()
         .zip(endpoints.into_iter().zip(rngs.into_iter()))
+        .zip(specs.into_iter())
         .enumerate()
     {
         let cfg = cfg.clone();
         let tx = report_tx.clone();
         handles.push(std::thread::spawn(move || {
-            worker_main(pos, n, d, cfg, solver, endpoint, rng, tx, iterations)
+            worker_main(
+                pos, d, cfg, is_head, links, solver, endpoint, rng, tx, iterations,
+            )
         }));
     }
     drop(report_tx);
@@ -145,25 +199,21 @@ pub fn run_threaded(
 #[allow(clippy::too_many_arguments)]
 fn worker_main(
     pos: usize,
-    n: usize,
     d: usize,
     cfg: GadmmConfig,
+    is_head: bool,
+    links: Vec<LinkSpec>,
     mut solver: Box<dyn WorkerSolver>,
     endpoint: Endpoint,
     mut rng: Rng,
     report: Sender<WorkerReport>,
     iterations: u64,
 ) -> anyhow::Result<()> {
-    let is_head = pos % 2 == 0;
-    let left = (pos > 0).then(|| pos - 1);
-    let right = (pos + 1 < n).then(|| pos + 1);
-    let neighbor_count = usize::from(left.is_some()) + usize::from(right.is_some());
-
+    let deg = links.len();
     let mut theta = vec![0.0f32; d];
-    let mut lambda_left = left.map(|_| vec![0.0f32; d]);
-    let mut lambda_right = right.map(|_| vec![0.0f32; d]);
-    let mut mirror_left = left.map(|_| Mirror::new(d));
-    let mut mirror_right = right.map(|_| Mirror::new(d));
+    // One dual + one mirror per incident link, in link order.
+    let mut lambdas: Vec<Vec<f32>> = (0..deg).map(|_| vec![0.0f32; d]).collect();
+    let mut mirrors: Vec<Mirror> = (0..deg).map(|_| Mirror::new(d)).collect();
     let mut quantizer = cfg
         .quant
         .map(|q| StochasticQuantizer::new(d, q.policy()));
@@ -174,41 +224,36 @@ fn worker_main(
     for k in 1..=iterations {
         // Tails receive the heads' fresh broadcasts before solving.
         if !is_head {
-            for _ in 0..neighbor_count {
+            for _ in 0..deg {
                 let msg = endpoint.recv(RECV_TIMEOUT)?;
-                apply_neighbor(
-                    msg,
-                    pos,
-                    left,
-                    right,
-                    mirror_left.as_mut(),
-                    mirror_right.as_mut(),
-                )?;
+                apply_neighbor(msg, pos, &links, &mut mirrors)?;
             }
         }
 
         // Local primal solve (eq. (14)–(17)).
         {
-            let ctx = NeighborCtx {
-                lambda_left: lambda_left.as_deref(),
-                lambda_right: lambda_right.as_deref(),
-                theta_left: mirror_left.as_ref().map(|m| m.theta_hat()),
-                theta_right: mirror_right.as_ref().map(|m| m.theta_hat()),
-                rho: cfg.rho,
-            };
+            let mut buf = LinkBuf::new();
+            for (i, l) in links.iter().enumerate() {
+                buf.push(NeighborLink {
+                    sign: l.sign,
+                    lambda: lambdas[i].as_slice(),
+                    theta: mirrors[i].theta_hat(),
+                });
+            }
+            let ctx = buf.ctx(cfg.rho);
             solver.solve(&ctx, &mut theta);
         }
 
-        // Broadcast the update (one transmission reaches both neighbors).
+        // Broadcast the update (one transmission reaches every neighbor).
         let bits;
         match quantizer.as_mut() {
             Some(q) => {
                 let msg = q.quantize(&theta, &mut rng);
                 bits = msg.payload_bits();
                 own_view.copy_from_slice(q.theta_hat());
-                for nb in [left, right].into_iter().flatten() {
+                for l in &links {
                     endpoint.send(
-                        nb,
+                        l.peer,
                         Message {
                             from: pos,
                             round: k,
@@ -220,9 +265,9 @@ fn worker_main(
             None => {
                 bits = 32 * d as u64;
                 own_view.copy_from_slice(&theta);
-                for nb in [left, right].into_iter().flatten() {
+                for l in &links {
                     endpoint.send(
-                        nb,
+                        l.peer,
                         Message {
                             from: pos,
                             round: k,
@@ -235,31 +280,27 @@ fn worker_main(
 
         // Heads receive the tails' iteration-k broadcasts after sending.
         if is_head {
-            for _ in 0..neighbor_count {
+            for _ in 0..deg {
                 let msg = endpoint.recv(RECV_TIMEOUT)?;
-                apply_neighbor(
-                    msg,
-                    pos,
-                    left,
-                    right,
-                    mirror_left.as_mut(),
-                    mirror_right.as_mut(),
-                )?;
+                apply_neighbor(msg, pos, &links, &mut mirrors)?;
             }
         }
 
-        // Local dual updates (eq. (18)) from the shared θ̂s.
+        // Local dual updates (eq. (18)) from the shared θ̂s: the sign
+        // selects which end of the edge's orientation this worker is
+        // (`+` ⇒ λ += αρ(θ̂_peer − θ̂_own), the chain's left-link case).
         let step = cfg.dual_step * cfg.rho;
-        if let (Some(lam), Some(m)) = (lambda_left.as_mut(), mirror_left.as_ref()) {
-            let nb = m.theta_hat();
-            for i in 0..d {
-                lam[i] += step * (nb[i] - own_view[i]);
-            }
-        }
-        if let (Some(lam), Some(m)) = (lambda_right.as_mut(), mirror_right.as_ref()) {
-            let nb = m.theta_hat();
-            for i in 0..d {
-                lam[i] += step * (own_view[i] - nb[i]);
+        for (i, l) in links.iter().enumerate() {
+            let nb = mirrors[i].theta_hat();
+            let lam = &mut lambdas[i];
+            if l.sign > 0.0 {
+                for j in 0..d {
+                    lam[j] += step * (nb[j] - own_view[j]);
+                }
+            } else {
+                for j in 0..d {
+                    lam[j] += step * (own_view[j] - nb[j]);
+                }
             }
         }
 
@@ -276,27 +317,19 @@ fn worker_main(
     Ok(())
 }
 
-/// Apply a neighbor broadcast to the correct mirror.
+/// Apply a neighbor broadcast to the mirror of the link it arrived on.
 fn apply_neighbor(
     msg: Message,
     pos: usize,
-    left: Option<usize>,
-    right: Option<usize>,
-    mirror_left: Option<&mut Mirror>,
-    mirror_right: Option<&mut Mirror>,
+    links: &[LinkSpec],
+    mirrors: &mut [Mirror],
 ) -> anyhow::Result<()> {
-    let mirror = if Some(msg.from) == left {
-        mirror_left
-    } else if Some(msg.from) == right {
-        mirror_right
-    } else {
+    let Some(i) = links.iter().position(|l| l.peer == msg.from) else {
         anyhow::bail!("worker {pos} got message from non-neighbor {}", msg.from);
-    }
-    .ok_or_else(|| anyhow::anyhow!("no mirror for sender {}", msg.from))?;
-
+    };
     match msg.payload {
-        Payload::Quantized(q) => mirror.apply(&q),
-        Payload::Full(v) => mirror.reset_to(&v),
+        Payload::Quantized(q) => mirrors[i].apply(&q),
+        Payload::Full(v) => mirrors[i].reset_to(&v),
         Payload::Stop => anyhow::bail!("unexpected stop"),
     }
     Ok(())
@@ -369,5 +402,31 @@ mod tests {
         let gap = report.recorder.last_value().unwrap();
         let start = report.recorder.points[0].value;
         assert!(gap < 1e-3 * start, "gap={gap} start={start}");
+    }
+
+    #[test]
+    fn threaded_star_converges_over_restricted_transport() {
+        // The hub (position 0, the only head) exchanges with every leaf;
+        // leaves only with the hub — the mailbox wiring follows the
+        // topology's edge list, so any misdirected send would error.
+        let workers = 5;
+        let (data, boxed) = solvers(workers, 1600.0, 35);
+        let (_, f_star) = data.optimum();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            quant: None,
+            threads: 0,
+        };
+        let topo = Topology::star(workers);
+        let report = run_threaded_on(&topo, &cfg, boxed, 800, 11, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+        let gap = report.recorder.last_value().unwrap();
+        let start = report.recorder.points[0].value;
+        assert!(gap < 1e-2 * start, "gap={gap} start={start}");
+        assert_eq!(report.comm.transmissions, 800 * 5);
     }
 }

@@ -12,15 +12,17 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig_sim;
+pub mod fig_topo;
 pub mod helpers;
 pub mod thm2;
 
 use crate::config::ExperimentConfig;
 
-/// All known figure ids, in paper order (`fig_sim` extends the paper with
-/// the discrete-event simulator's loss-vs-time-to-target panel).
+/// All known figure ids, in paper order (`fig_sim` and `fig_topo` extend
+/// the paper with the discrete-event simulator's loss-vs-time-to-target
+/// panel and the bipartite-topology sweep).
 pub const ALL_FIGS: &[&str] = &[
-    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2", "fig_sim",
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2", "fig_sim", "fig_topo",
 ];
 
 /// Dispatch a figure id (or `all`).
@@ -35,6 +37,7 @@ pub fn run(fig: &str, cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()>
         "fig8" => fig8::run(cfg, quick),
         "thm2" => thm2::run(cfg, quick),
         "fig_sim" => fig_sim::run(cfg, quick),
+        "fig_topo" => fig_topo::run(cfg, quick),
         "all" => {
             for f in ALL_FIGS {
                 run(f, cfg, quick)?;

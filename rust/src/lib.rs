@@ -5,8 +5,9 @@
 //! Bedi, Ben Issaid, Bennis, Aggarwal) as a three-layer Rust + JAX + Pallas
 //! stack:
 //!
-//! * **L3 (this crate)** — the decentralized training coordinator: chain
-//!   topology, head/tail alternating scheduler, stochastic quantization and
+//! * **L3 (this crate)** — the decentralized training coordinator:
+//!   bipartite communication topologies (line, ring, star, grid, random),
+//!   head/tail alternating scheduler, stochastic quantization and
 //!   bit-exact wire format, wireless energy model, parameter-server
 //!   baselines, metrics and the figure-regeneration harness — plus the
 //!   [`sim`] discrete-event network simulator (virtual clock, per-link

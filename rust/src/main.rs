@@ -16,7 +16,7 @@ use qgadmm::data::partition::Partition;
 use qgadmm::figures;
 use qgadmm::model::linreg::LinRegProblem;
 use qgadmm::model::mlp::{MlpDims, MlpProblem};
-use qgadmm::net::topology::Topology;
+use qgadmm::net::topology::TopologyKind;
 use qgadmm::runtime::solver::{XlaLinRegProblem, XlaMlpProblem};
 use qgadmm::runtime::Runtime;
 
@@ -83,7 +83,13 @@ fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
     let data = LinRegDataset::synthesize(&spec, cfg.seed);
     let (_, f_star) = data.optimum();
     let partition = Partition::contiguous(data.samples(), cfg.gadmm.workers);
-    let topo = Topology::line(cfg.gadmm.workers);
+    let topo = cfg.topology.build(cfg.gadmm.workers, cfg.seed)?;
+    println!(
+        "topology: {} ({} workers, {} links)",
+        cfg.topology.name(),
+        topo.len(),
+        topo.edge_count()
+    );
     let mut gcfg = cfg.gadmm.clone();
     if gcfg.rho == 24.0 {
         // The paper's ρ=24 was tuned to California Housing units; the
@@ -97,6 +103,15 @@ fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         stop_above: None,
     };
     let variant = if gcfg.quant.is_some() { "Q-GADMM" } else { "GADMM" };
+    if cfg.use_xla && !topo.chain_compatible() {
+        anyhow::bail!(
+            "--use-xla supports only chain-compatible topologies (line, ring): \
+             the AOT artifacts are compiled for one left + one right neighbor \
+             slot, but the {} topology has a worker with two links on the same \
+             side — drop --use-xla to run on the native backend",
+            cfg.topology.name()
+        );
+    }
     let report = if cfg.use_xla {
         let rt = Runtime::load(Runtime::default_dir())?;
         println!("platform: {} (XLA-backed local solves)", rt.platform());
@@ -162,7 +177,8 @@ fn train_scale(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         if threads == 0 { "auto".to_string() } else { threads.to_string() },
     );
     let t0 = std::time::Instant::now();
-    let mut engine = GadmmEngine::new(gcfg, problem, Topology::line(workers), cfg.seed);
+    let topo = cfg.topology.build(workers, cfg.seed)?;
+    let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
     let report = engine.run(&opts, |eng| {
         let thetas: Vec<Vec<f32>> = (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
         (eng.problem().global_objective(&thetas) - f_star).abs()
@@ -187,7 +203,7 @@ fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
     let spec = ImageSpec::default();
     let data = ImageDataset::synthesize(&spec, cfg.seed);
     let partition = Partition::contiguous(data.train_len(), workers);
-    let topo = Topology::line(workers);
+    let topo = cfg.topology.build(workers, cfg.seed)?;
     let mut gcfg = cfg.gadmm.clone();
     gcfg.workers = workers;
     gcfg.dual_step = qgadmm::figures::helpers::DNN_ALPHA;
@@ -200,6 +216,15 @@ fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         }
     }
     let variant = if gcfg.quant.is_some() { "Q-SGADMM" } else { "SGADMM" };
+    if cfg.use_xla && !topo.chain_compatible() {
+        anyhow::bail!(
+            "--use-xla supports only chain-compatible topologies (line, ring): \
+             the AOT artifacts are compiled for one left + one right neighbor \
+             slot, but the {} topology has a worker with two links on the same \
+             side — drop --use-xla to run on the native backend",
+            cfg.topology.name()
+        );
+    }
     let opts = RunOptions {
         iterations: cfg.iterations.min(500),
         eval_every: 5,
@@ -260,10 +285,17 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
     } else {
         c.iterations
     };
-    let world = LinregWorld::new(&c, c.seed, c.seed ^ 0x99);
+    let mut world = LinregWorld::new(&c, c.seed, c.seed ^ 0x99);
+    // The geometry world defaults to the nearest-neighbor chain; an
+    // explicit --topology swaps in the requested bipartite graph over the
+    // same dropped points (link distances follow the edge list).
+    if c.topology != TopologyKind::Line {
+        world.topo = c.topology.build(c.gadmm.workers, c.seed)?;
+    }
     println!(
-        "simulating {} workers, chain length {:.0} m, loss {:.3}, target gap {:.1e}",
+        "simulating {} workers, {} topology, total link length {:.0} m, loss {:.3}, target gap {:.1e}",
         c.gadmm.workers,
+        c.topology.name(),
         world.topo.total_length(&world.points),
         c.sim.loss,
         c.loss_target,
@@ -290,6 +322,7 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
 
     let mut doc = Json::obj();
     doc.set("loss", Json::Num(c.sim.loss));
+    doc.set("topology", Json::Str(c.topology.name().to_string()));
     doc.set("workers", Json::Num(c.gadmm.workers as f64));
     doc.set("seed", Json::Num(c.seed as f64));
     doc.set("target", Json::Num(c.loss_target));

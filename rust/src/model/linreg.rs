@@ -5,13 +5,15 @@
 //! quadratic:
 //!
 //! ```text
-//!   (A_n + ρ·deg·I) θ  =  b_n + [left](λ_l + ρ θ̂_l) + [right](−λ_r + ρ θ̂_r)
+//!   (A_n + ρ·deg(n)·I) θ  =  b_n + Σ_links (sign·λ + ρ θ̂)
 //! ```
 //!
-//! where `deg ∈ {1, 2}` is the number of chain neighbors. The LHS matrix is
-//! constant across iterations, so each worker factors it once (Cholesky)
-//! and the per-iteration cost is one triangular solve + rhs assembly —
-//! the same structure the L1 `admm_rhs` Pallas kernel + L2 solve use.
+//! where `deg(n)` is the worker's degree in the bipartite communication
+//! graph (1 at chain ends, 2 at chain interiors, up to N−1 at a star hub).
+//! The LHS matrix depends only on the degree, so each worker factors
+//! `A + ρ·deg·I` once per distinct degree it encounters (Cholesky) and the
+//! per-iteration cost is one triangular solve + rhs assembly — the same
+//! structure the L1 `admm_rhs` Pallas kernel + L2 solve use.
 //!
 //! [`LinRegWorker`] is the single-worker solver (shipped to threads by the
 //! distributed runtime); [`LinRegProblem`] is the fleet view the
@@ -22,12 +24,14 @@ use crate::data::linreg::{LinRegDataset, WorkerStats};
 use crate::data::partition::Partition;
 use crate::linalg::Chol;
 
-/// One worker's linreg solver: cached Cholesky factors for both possible
-/// neighbor degrees, plus rhs scratch.
+/// One worker's linreg solver: Cholesky factors of `A + ρ·deg·I` cached
+/// per distinct degree (built on first use), plus rhs scratch.
 pub struct LinRegWorker {
     stats: WorkerStats,
-    /// `[deg=1, deg=2]` factors of `A + ρ·deg·I`.
-    factors: [Chol; 2],
+    /// `factors[deg − 1]` is the factor for degree `deg`, built lazily —
+    /// a worker only ever sees its own degree(s), so a chain worker caches
+    /// one factor and a re-stitched worker at most a handful.
+    factors: Vec<Option<Chol>>,
     rho: f64,
     rhs: Vec<f64>,
 }
@@ -35,13 +39,8 @@ pub struct LinRegWorker {
 impl LinRegWorker {
     pub fn new(stats: WorkerStats, rho: f32) -> LinRegWorker {
         let dims = stats.dims();
-        let make = |deg: f64| {
-            let mut m = stats.a.clone();
-            m.add_diag(rho as f64 * deg);
-            m.cholesky().expect("A + ρ·deg·I is SPD for ρ > 0")
-        };
         LinRegWorker {
-            factors: [make(1.0), make(2.0)],
+            factors: Vec::new(),
             stats,
             rho: rho as f64,
             rhs: vec![0.0; dims],
@@ -50,6 +49,19 @@ impl LinRegWorker {
 
     pub fn stats(&self) -> &WorkerStats {
         &self.stats
+    }
+
+    /// Ensure the Cholesky factor of `A + ρ·deg·I` exists.
+    fn ensure_factor(&mut self, deg: usize) {
+        if self.factors.len() < deg {
+            self.factors.resize_with(deg, || None);
+        }
+        if self.factors[deg - 1].is_none() {
+            let mut m = self.stats.a.clone();
+            m.add_diag(self.rho * deg as f64);
+            self.factors[deg - 1] =
+                Some(m.cholesky().expect("A + ρ·deg·I is SPD for ρ > 0"));
+        }
     }
 }
 
@@ -62,22 +74,25 @@ impl WorkerSolver for LinRegWorker {
         let d = self.dims();
         assert_eq!(out.len(), d);
         let deg = ctx.degree();
-        assert!(deg >= 1, "chain workers always have ≥1 neighbor");
+        assert!(deg >= 1, "GADMM workers always have ≥1 incident link");
         let rho = self.rho;
 
-        // rhs = b + [l](λ_l + ρ θ̂_l) + [r](−λ_r + ρ θ̂_r)
+        // rhs = b + Σ_links (sign·λ + ρ θ̂), accumulated in link order
+        // (left-then-right on a chain — bit-identical to the pre-redesign
+        // two-branch code since multiplying by ±1.0 is exact).
         self.rhs.copy_from_slice(&self.stats.b);
-        if let (Some(lam), Some(th)) = (ctx.lambda_left, ctx.theta_left) {
+        for link in ctx.links {
+            let s = link.sign as f64;
+            let (lam, th) = (link.lambda, link.theta);
             for i in 0..d {
-                self.rhs[i] += lam[i] as f64 + rho * th[i] as f64;
+                self.rhs[i] += s * lam[i] as f64 + rho * th[i] as f64;
             }
         }
-        if let (Some(lam), Some(th)) = (ctx.lambda_right, ctx.theta_right) {
-            for i in 0..d {
-                self.rhs[i] += -(lam[i] as f64) + rho * th[i] as f64;
-            }
-        }
-        self.factors[deg - 1].solve_in_place(&mut self.rhs);
+        self.ensure_factor(deg);
+        self.factors[deg - 1]
+            .as_ref()
+            .expect("just ensured")
+            .solve_in_place(&mut self.rhs);
         for i in 0..d {
             out[i] = self.rhs[i] as f32;
         }
@@ -159,6 +174,7 @@ impl LocalProblem for LinRegProblem {
 mod tests {
     use super::*;
     use crate::data::linreg::LinRegSpec;
+    use crate::model::{LinkBuf, NeighborLink};
 
     fn problem(workers: usize, rho: f32) -> (LinRegDataset, LinRegProblem) {
         let spec = LinRegSpec {
@@ -181,13 +197,8 @@ mod tests {
         let lam_r = vec![-0.2f32; 6];
         let th_l = vec![0.5f32; 6];
         let th_r = vec![-0.1f32; 6];
-        let ctx = NeighborCtx {
-            lambda_left: Some(&lam_l),
-            lambda_right: Some(&lam_r),
-            theta_left: Some(&th_l),
-            theta_right: Some(&th_r),
-            rho: 5.0,
-        };
+        let buf = LinkBuf::chain(Some(&lam_l), Some(&th_l), Some(&lam_r), Some(&th_r));
+        let ctx = buf.ctx(5.0);
         let mut theta = vec![0.0f32; d];
         p.solve(1, &ctx, &mut theta);
 
@@ -224,13 +235,8 @@ mod tests {
         let d = p.dims();
         let lam = vec![0.1f32; 6];
         let th = vec![0.7f32; 6];
-        let ctx = NeighborCtx {
-            lambda_left: None,
-            lambda_right: Some(&lam),
-            theta_left: None,
-            theta_right: Some(&th),
-            rho: 2.0,
-        };
+        let buf = LinkBuf::chain(None, None, Some(&lam), Some(&th));
+        let ctx = buf.ctx(2.0);
         let mut got = vec![0.0f32; d];
         p.solve(0, &ctx, &mut got);
         // Manual: (A + ρI) θ = b − λ + ρ θ̂_r
@@ -246,19 +252,84 @@ mod tests {
         }
     }
 
+    /// Degree 3 (a star-hub-like context): the new degree-general path
+    /// must solve `(A + 3ρI) θ = b + Σ (sign·λ + ρ θ̂)` exactly.
+    #[test]
+    fn degree_three_update_matches_manual() {
+        let (_, mut p) = problem(3, 2.0);
+        let d = p.dims();
+        let lams: Vec<Vec<f32>> = (0..3).map(|k| vec![0.1 * (k as f32 + 1.0); d]).collect();
+        let ths: Vec<Vec<f32>> = (0..3).map(|k| vec![0.5 - 0.3 * k as f32; d]).collect();
+        let signs = [1.0f32, 1.0, -1.0];
+        let mut buf = LinkBuf::new();
+        for k in 0..3 {
+            buf.push(NeighborLink {
+                sign: signs[k],
+                lambda: lams[k].as_slice(),
+                theta: ths[k].as_slice(),
+            });
+        }
+        let ctx = buf.ctx(2.0);
+        let mut got = vec![0.0f32; d];
+        p.solve(1, &ctx, &mut got);
+
+        let stats = p.stats(1).clone();
+        let mut m = stats.a.clone();
+        m.add_diag(3.0 * 2.0);
+        let rhs: Vec<f64> = (0..d)
+            .map(|i| {
+                let mut v = stats.b[i];
+                for k in 0..3 {
+                    v += signs[k] as f64 * lams[k][i] as f64 + 2.0 * ths[k][i] as f64;
+                }
+                v
+            })
+            .collect();
+        let want = m.solve_spd(&rhs).unwrap();
+        for i in 0..d {
+            assert!(
+                (got[i] as f64 - want[i]).abs() < 1e-5,
+                "dim {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    /// Factors are cached per distinct degree: solving at degree 1 then 2
+    /// then 1 again must agree with fresh solvers at each degree.
+    #[test]
+    fn per_degree_factor_cache_is_consistent() {
+        let (_, p) = problem(3, 2.0);
+        let mut cached = p;
+        let (_, fresh) = problem(3, 2.0);
+        let mut fresh = fresh;
+        let d = cached.dims();
+        let lam = vec![0.15f32; 6];
+        let th = vec![-0.4f32; 6];
+
+        let deg1 = LinkBuf::chain(Some(&lam), Some(&th), None, None);
+        let deg2 = LinkBuf::chain(Some(&lam), Some(&th), Some(&lam), Some(&th));
+
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        // Cached path: deg 1, deg 2, deg 1 on the same worker.
+        cached.solve(0, &deg1.ctx(2.0), &mut a);
+        cached.solve(0, &deg2.ctx(2.0), &mut a);
+        cached.solve(0, &deg1.ctx(2.0), &mut a);
+        // Fresh solver straight to deg 1.
+        fresh.solve(0, &deg1.ctx(2.0), &mut b);
+        assert_eq!(a, b);
+    }
+
     #[test]
     fn fleet_and_worker_solvers_agree() {
         let (_, p) = problem(3, 2.0);
         let mut fleet = p;
         let lam = vec![0.1f32; 6];
         let th = vec![0.7f32; 6];
-        let ctx = NeighborCtx {
-            lambda_left: None,
-            lambda_right: Some(&lam),
-            theta_left: None,
-            theta_right: Some(&th),
-            rho: 2.0,
-        };
+        let buf = LinkBuf::chain(None, None, Some(&lam), Some(&th));
+        let ctx = buf.ctx(2.0);
         let mut via_fleet = vec![0.0f32; 6];
         fleet.solve(0, &ctx, &mut via_fleet);
         let mut workers = fleet.into_workers();

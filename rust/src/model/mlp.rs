@@ -309,17 +309,17 @@ pub fn backward(
 }
 
 /// Add the augmented-Lagrangian penalty gradient in place:
-/// `g += −λ_l + λ_r + ρ(θ − θ̂_l) + ρ(θ − θ̂_r)` (terms masked by presence).
+/// `g += Σ_links [−sign·λ + ρ(θ − θ̂)]` — one term per incident link, in
+/// link order (on a chain: left with sign +1 then right with −1, exactly
+/// the pre-redesign two-branch accumulation since ±1 multiplies are
+/// exact).
 pub fn add_penalty_grad(grad: &mut [f32], theta: &[f32], ctx: &NeighborCtx<'_>) {
     let rho = ctx.rho;
-    if let (Some(lam), Some(th)) = (ctx.lambda_left, ctx.theta_left) {
+    for link in ctx.links {
+        let s = link.sign;
+        let (lam, th) = (link.lambda, link.theta);
         for i in 0..grad.len() {
-            grad[i] += -lam[i] + rho * (theta[i] - th[i]);
-        }
-    }
-    if let (Some(lam), Some(th)) = (ctx.lambda_right, ctx.theta_right) {
-        for i in 0..grad.len() {
-            grad[i] += lam[i] + rho * (theta[i] - th[i]);
+            grad[i] += -s * lam[i] + rho * (theta[i] - th[i]);
         }
     }
 }
@@ -630,13 +630,13 @@ mod tests {
         let th_l: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
         let th_r: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
         let rho = 3.0f32;
-        let ctx = NeighborCtx {
-            lambda_left: Some(&lam_l),
-            lambda_right: Some(&lam_r),
-            theta_left: Some(&th_l),
-            theta_right: Some(&th_r),
-            rho,
-        };
+        let buf = crate::model::LinkBuf::chain(
+            Some(&lam_l),
+            Some(&th_l),
+            Some(&lam_r),
+            Some(&th_r),
+        );
+        let ctx = buf.ctx(rho);
         let penalty = |th: &[f32]| -> f64 {
             let mut v = 0.0f64;
             for i in 0..d {
@@ -720,13 +720,9 @@ mod tests {
         let before = prob.objective(0, &theta);
         let d = prob.dims();
         let zeros = vec![0.0f32; d];
-        let ctx = NeighborCtx {
-            lambda_left: None,
-            lambda_right: Some(&zeros),
-            theta_left: None,
-            theta_right: Some(&theta.clone()),
-            rho: 0.0,
-        };
+        let anchor = theta.clone();
+        let buf = crate::model::LinkBuf::chain(None, None, Some(&zeros), Some(&anchor));
+        let ctx = buf.ctx(0.0);
         for _ in 0..5 {
             prob.solve(0, &ctx, &mut theta);
         }
@@ -746,15 +742,9 @@ mod tests {
         let part = Partition::contiguous(data.train_len(), 1);
         let mut prob = MlpProblem::with_hyper(&data, &part, MlpDims::paper(), 100, 10, 0.002, 3);
         let mut theta = prob.initial_theta(2);
-        let ctx = NeighborCtx {
-            lambda_left: None,
-            lambda_right: None,
-            theta_left: None,
-            theta_right: None,
-            rho: 0.0,
-        };
+        let ctx = NeighborCtx { links: &[], rho: 0.0 };
         // NOTE: degree-0 context is only legal for single-worker training
-        // (no chain); the engine never produces it, tests may.
+        // (no links); the engine never produces it, tests may.
         for _ in 0..30 {
             prob.solve(0, &ctx, &mut theta);
         }

@@ -4,8 +4,8 @@
 //!
 //! * [`linreg`] — the convex least-squares worker objective with its
 //!   closed-form ADMM primal update (eqs. (14)–(17) specialize to one SPD
-//!   solve per worker per iteration; the `A + cI` Cholesky factor is cached
-//!   across iterations);
+//!   solve per worker per iteration; one `A + ρ·deg·I` Cholesky factor is
+//!   cached per distinct incident degree);
 //! * [`mlp`] — the paper's 784-128-64-10 bias-free MLP (exactly
 //!   d = 109,184 parameters) with manual forward/backward and the
 //!   Q-SGADMM local update: 10 Adam steps on the augmented Lagrangian of a
@@ -14,33 +14,161 @@
 //! These implementations are structurally identical to
 //! `python/compile/model.py`; the `artifact_parity` integration tests pin
 //! the two backends together.
+//!
+//! ## The neighbor context
+//!
+//! A worker's primal update sees one [`NeighborLink`] per incident edge of
+//! the (bipartite) communication graph: the dual λ on that link, the
+//! neighbor's visible model θ̂, and a `sign ∈ {+1, −1}` encoding which end
+//! of the edge's λ orientation this worker sits on. The augmented local
+//! objective is
+//!
+//! ```text
+//!   f_n(θ) + Σ_links sign·⟨λ, θ̂ − θ⟩ + ρ/2 Σ_links ‖θ − θ̂‖²
+//! ```
+//!
+//! concretely: each link contributes `sign·λ + ρ·θ̂` to the quadratic
+//! solvers' rhs and `−sign·λ + ρ(θ − θ̂)` to the gradient solvers' grad.
+//! On a chain this reduces to the paper's left (+1) / right (−1)
+//! convention, bit-for-bit.
 
 pub mod adam;
 pub mod linreg;
 pub mod mlp;
 pub mod scale;
 
+/// One incident link as seen from the worker solving its primal update.
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborLink<'a> {
+    /// +1.0 when this worker is the second endpoint of the edge's λ
+    /// orientation (λ enters its quadratic rhs positively — the chain's
+    /// "left neighbor" case), −1.0 at the first endpoint ("right").
+    pub sign: f32,
+    /// Dual variable λ on this link.
+    pub lambda: &'a [f32],
+    /// The neighbor's model as this worker sees it (θ̂ under quantization,
+    /// an exact copy under full precision).
+    pub theta: &'a [f32],
+}
+
 /// Neighbor context for a local primal update — everything worker `n`
-/// knows about its chain neighbors when solving eq. (14)/(16): the dual
-/// variables on its (≤2) links and the neighbors' reconstructed models.
+/// knows about its incident links when solving eq. (14)/(16): one
+/// [`NeighborLink`] per edge, plus the disagreement penalty ρ.
+///
+/// Links appear in the topology's incident-edge order (left-then-right on
+/// a chain); solvers must accumulate in that order so chain runs stay
+/// bit-for-bit identical to the pre-redesign left/right implementation.
 #[derive(Clone, Copy, Debug)]
 pub struct NeighborCtx<'a> {
-    /// λ_{n−1} (None for the first worker in the chain).
-    pub lambda_left: Option<&'a [f32]>,
-    /// λ_n (None for the last worker).
-    pub lambda_right: Option<&'a [f32]>,
-    /// Left neighbor's model as this worker sees it (θ̂ or θ).
-    pub theta_left: Option<&'a [f32]>,
-    /// Right neighbor's model as this worker sees it.
-    pub theta_right: Option<&'a [f32]>,
+    pub links: &'a [NeighborLink<'a>],
     /// Disagreement penalty ρ.
     pub rho: f32,
 }
 
 impl<'a> NeighborCtx<'a> {
-    /// Number of attached penalty terms (1 at the chain ends, else 2).
+    pub fn new(links: &'a [NeighborLink<'a>], rho: f32) -> NeighborCtx<'a> {
+        NeighborCtx { links, rho }
+    }
+
+    /// Number of attached penalty terms — the worker's degree in the
+    /// communication graph (1 at chain ends, 2 at chain interiors, up to
+    /// n−1 at a star hub).
     pub fn degree(&self) -> usize {
-        usize::from(self.theta_left.is_some()) + usize::from(self.theta_right.is_some())
+        self.links.len()
+    }
+}
+
+/// Links held inline before [`LinkBuf`] spills to the heap. Covers line,
+/// ring, and 2-D grid degrees, so the per-iteration hot path allocates
+/// nothing; only high-degree nodes (star hubs, dense random graphs)
+/// spill.
+pub const INLINE_LINKS: usize = 4;
+
+/// Stack-first builder for a [`NeighborCtx`]'s link slice.
+///
+/// The engine and runtimes assemble one of these per local solve; for
+/// degree ≤ [`INLINE_LINKS`] it lives entirely on the stack
+/// (allocation-free hot path), beyond that it spills to a `Vec` once.
+pub struct LinkBuf<'a> {
+    inline: [NeighborLink<'a>; INLINE_LINKS],
+    len: usize,
+    spill: Vec<NeighborLink<'a>>,
+}
+
+impl<'a> LinkBuf<'a> {
+    pub fn new() -> LinkBuf<'a> {
+        const EMPTY: NeighborLink<'static> = NeighborLink {
+            sign: 0.0,
+            lambda: &[],
+            theta: &[],
+        };
+        LinkBuf {
+            inline: [EMPTY; INLINE_LINKS],
+            len: 0,
+            spill: Vec::new(),
+        }
+    }
+
+    /// Chain-shaped context: the left neighbor (sign +1) first, then the
+    /// right (sign −1) — the pre-redesign field order. Each side is
+    /// included only when both its λ and θ̂ are present.
+    pub fn chain(
+        lambda_left: Option<&'a [f32]>,
+        theta_left: Option<&'a [f32]>,
+        lambda_right: Option<&'a [f32]>,
+        theta_right: Option<&'a [f32]>,
+    ) -> LinkBuf<'a> {
+        let mut buf = LinkBuf::new();
+        if let (Some(lambda), Some(theta)) = (lambda_left, theta_left) {
+            buf.push(NeighborLink {
+                sign: 1.0,
+                lambda,
+                theta,
+            });
+        }
+        if let (Some(lambda), Some(theta)) = (lambda_right, theta_right) {
+            buf.push(NeighborLink {
+                sign: -1.0,
+                lambda,
+                theta,
+            });
+        }
+        buf
+    }
+
+    pub fn push(&mut self, link: NeighborLink<'a>) {
+        if self.spill.is_empty() && self.len < INLINE_LINKS {
+            self.inline[self.len] = link;
+            self.len += 1;
+        } else {
+            if self.spill.is_empty() {
+                self.spill.reserve(self.len + 1);
+                self.spill.extend_from_slice(&self.inline[..self.len]);
+            }
+            self.spill.push(link);
+        }
+    }
+
+    pub fn links(&self) -> &[NeighborLink<'a>] {
+        if self.spill.is_empty() {
+            &self.inline[..self.len]
+        } else {
+            self.spill.as_slice()
+        }
+    }
+
+    /// Borrow the links as a ready-to-use context.
+    pub fn ctx(&self, rho: f32) -> NeighborCtx<'_> {
+        NeighborCtx {
+            links: self.links(),
+            rho,
+        }
+    }
+}
+
+impl Default for LinkBuf<'_> {
+    fn default() -> Self {
+        LinkBuf::new()
     }
 }
 
@@ -57,7 +185,7 @@ pub trait WorkerSolver: Send {
 }
 
 /// A per-worker local problem the GADMM engine can drive. `worker` indexes
-/// the worker id (data shard), not the chain position.
+/// the worker id (data shard), not the topology position.
 pub trait LocalProblem {
     /// Model dimension d.
     fn dims(&self) -> usize;
@@ -66,10 +194,12 @@ pub trait LocalProblem {
     fn workers(&self) -> usize;
 
     /// The primal update: minimize
-    /// `f_n(θ) + ⟨λ_l, θ̂_l − θ⟩ + ⟨λ_r, θ − θ̂_r⟩ + ρ/2‖θ̂_l − θ‖² + ρ/2‖θ − θ̂_r‖²`
+    /// `f_n(θ) + Σ_links [sign·⟨λ, −θ⟩ + ρ/2‖θ − θ̂‖²]` — i.e. each
+    /// incident link contributes `sign·λ + ρ·θ̂` to the quadratic rhs —
     /// writing the argmin (exact or approximate) into `out`. `out` enters
     /// holding the worker's previous model (warm start for iterative
-    /// solvers).
+    /// solvers). Links must be consumed in the given order (chain runs
+    /// depend on it for bit-exactness).
     fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]);
 
     /// Local objective `f_n(θ)` (used for the global loss metric).
@@ -88,5 +218,51 @@ pub trait LocalProblem {
     /// inside the handles, never shared across workers.
     fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
         None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linkbuf_inline_then_spill() {
+        let lam = vec![1.0f32; 2];
+        let th = vec![2.0f32; 2];
+        let mut buf = LinkBuf::new();
+        for i in 0..(INLINE_LINKS + 3) {
+            buf.push(NeighborLink {
+                sign: if i % 2 == 0 { 1.0 } else { -1.0 },
+                lambda: lam.as_slice(),
+                theta: th.as_slice(),
+            });
+            let links = buf.links();
+            assert_eq!(links.len(), i + 1);
+            assert_eq!(links[i].sign, if i % 2 == 0 { 1.0 } else { -1.0 });
+            // Earlier entries survive the spill.
+            assert_eq!(links[0].sign, 1.0);
+        }
+        assert_eq!(buf.ctx(3.0).degree(), INLINE_LINKS + 3);
+        assert_eq!(buf.ctx(3.0).rho, 3.0);
+    }
+
+    #[test]
+    fn chain_builder_orders_left_then_right() {
+        let lam_l = vec![0.1f32];
+        let lam_r = vec![0.2f32];
+        let th_l = vec![0.3f32];
+        let th_r = vec![0.4f32];
+        let buf = LinkBuf::chain(Some(&lam_l), Some(&th_l), Some(&lam_r), Some(&th_r));
+        let links = buf.links();
+        assert_eq!(links.len(), 2);
+        assert_eq!((links[0].sign, links[0].lambda[0]), (1.0, 0.1));
+        assert_eq!((links[1].sign, links[1].lambda[0]), (-1.0, 0.2));
+
+        let left_only = LinkBuf::chain(Some(&lam_l), Some(&th_l), None, None);
+        assert_eq!(left_only.links().len(), 1);
+        assert_eq!(left_only.ctx(1.0).degree(), 1);
+
+        let empty = LinkBuf::chain(None, None, None, None);
+        assert_eq!(empty.links().len(), 0);
     }
 }

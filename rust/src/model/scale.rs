@@ -10,8 +10,8 @@
 //!
 //! ```text
 //!   f_n(θ) = ½ Σ_i a_{n,i} (θ_i − t_{n,i})²      (a_{n,i} > 0)
-//!   θ_i    = (b_{n,i} + [l](λ_l + ρ θ̂_l)_i + [r](−λ_r + ρ θ̂_r)_i)
-//!            / (a_{n,i} + ρ·deg)                  with b_n = a_n ∘ t_n
+//!   θ_i    = (b_{n,i} + Σ_links (sign·λ + ρ θ̂)_i)
+//!            / (a_{n,i} + ρ·deg(n))               with b_n = a_n ∘ t_n
 //! ```
 //!
 //! The exact global optimum `θ*_i = Σ_n b_{n,i} / Σ_n a_{n,i}` and `F*` are
@@ -62,19 +62,18 @@ impl WorkerSolver for DiagLinRegWorker {
         let d = self.a.len();
         assert_eq!(out.len(), d);
         let deg = ctx.degree();
-        assert!(deg >= 1, "chain workers always have ≥1 neighbor");
+        assert!(deg >= 1, "GADMM workers always have ≥1 incident link");
         let rho = ctx.rho;
 
-        // rhs = b + [l](λ_l + ρ θ̂_l) + [r](−λ_r + ρ θ̂_r)
+        // rhs = b + Σ_links (sign·λ + ρ θ̂), in link order (±1 multiplies
+        // are exact, so chain contexts reproduce the old left/right code
+        // bit-for-bit).
         self.rhs.copy_from_slice(&self.b);
-        if let (Some(lam), Some(th)) = (ctx.lambda_left, ctx.theta_left) {
+        for link in ctx.links {
+            let s = link.sign;
+            let (lam, th) = (link.lambda, link.theta);
             for i in 0..d {
-                self.rhs[i] += lam[i] + rho * th[i];
-            }
-        }
-        if let (Some(lam), Some(th)) = (ctx.lambda_right, ctx.theta_right) {
-            for i in 0..d {
-                self.rhs[i] += -lam[i] + rho * th[i];
+                self.rhs[i] += s * lam[i] + rho * th[i];
             }
         }
         vecops::diag_shift_solve_f32(out, &self.a, &self.rhs, rho * deg as f32);
@@ -220,13 +219,8 @@ mod tests {
         let d = 16;
         let lam = vec![0.2f32; d];
         let th = vec![-0.3f32; d];
-        let ctx = NeighborCtx {
-            lambda_left: Some(&lam),
-            lambda_right: Some(&lam),
-            theta_left: Some(&th),
-            theta_right: Some(&th),
-            rho: 2.0,
-        };
+        let buf = crate::model::LinkBuf::chain(Some(&lam), Some(&th), Some(&lam), Some(&th));
+        let ctx = buf.ctx(2.0);
         let mut out = vec![0.0f32; d];
         p.solve(1, &ctx, &mut out);
         // Optimality condition: a∘θ − b − λ_l + λ_r + ρ(θ−θ̂_l) + ρ(θ−θ̂_r) = 0.

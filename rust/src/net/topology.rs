@@ -1,21 +1,108 @@
-//! Chain topology construction.
+//! Bipartite communication topologies for the GADMM family.
 //!
-//! GADMM/Q-GADMM operate on a connected chain: worker `n` talks to workers
-//! `n−1` and `n+1` only, heads at odd positions, tails at even (1-indexed
-//! as in the paper; 0-indexed here: heads at even indices). For physically
-//! dropped workers we build the chain with the heuristic referenced in
-//! Sec. V-A ("we implement the heuristic described in [23] to find the
-//! neighbors of each worker"): a greedy nearest-neighbor chain, then a
-//! 2-opt pass that removes crossing links — minimizing the link distances
-//! the energy model charges.
+//! GADMM's alternating schedule needs exactly one structural property: the
+//! communication graph must be **bipartite**. Heads and tails are the two
+//! color classes; every link joins a head to a tail, so all heads can
+//! update simultaneously against fresh tail broadcasts and vice versa (the
+//! generalized-group-ADMM argument of Ben Issaid et al.,
+//! arXiv:2009.06459). The paper's line topology is the special case where
+//! the graph is a path and the coloring alternates along it.
+//!
+//! A [`Topology`] is an explicit bipartite graph: a worker order
+//! (position → worker id), a head/tail 2-coloring per position, and an
+//! edge list where **edge index = dual-variable (λ) index**. Constructors
+//! cover the scenario sweep — [`Topology::line`], [`Topology::ring`]
+//! (even cycles only), [`Topology::star`], [`Topology::grid2d`],
+//! [`Topology::random_bipartite`] — plus the geometry-driven
+//! [`Topology::nearest_neighbor_chain`] used for physically dropped
+//! workers (Sec. V-A heuristic).
+//!
+//! ```
+//! use qgadmm::net::topology::{Topology, TopologyKind};
+//!
+//! // A 2×3 grid: heads (H) and tails (T) checkerboard, so every edge
+//! // joins the two groups:
+//! //   H—T—H
+//! //   |  |  |
+//! //   T—H—T
+//! let g = Topology::grid2d(2, 3);
+//! assert!(g.validate());
+//! assert_eq!(g.edge_count(), 7);
+//! assert!(g.is_head(0) && !g.is_head(1));
+//!
+//! // Odd cycles are not bipartite and are rejected with a typed error.
+//! assert!(Topology::ring(5).is_err());
+//!
+//! // CLI/config names parse to a kind that builds the graph.
+//! let kind = TopologyKind::parse("ring").unwrap();
+//! assert_eq!(kind.build(6, 1).unwrap().edge_count(), 6);
+//! ```
 
 use crate::net::geometry::Point;
+use crate::util::rng::Rng;
 
-/// A chain over worker ids: `order[i]` is the worker occupying chain
-/// position `i`. Heads are even positions, tails odd positions.
+/// Why a topology could not be constructed.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TopologyError {
+    #[error("a {kind} topology needs at least {min} workers, got {n}")]
+    TooSmall {
+        kind: &'static str,
+        min: usize,
+        n: usize,
+    },
+    #[error(
+        "ring({n}) is an odd cycle — not bipartite, so the alternating \
+         head/tail schedule cannot 2-color it; use an even worker count"
+    )]
+    OddRing { n: usize },
+    #[error(
+        "edge ({u}, {v}) joins two same-color workers — GADMM's alternating \
+         head/tail schedule requires a bipartite graph"
+    )]
+    SameColorEdge { u: usize, v: usize },
+    #[error(
+        "the graph is disconnected (only {reached} of {n} positions \
+         reachable from position 0) — consensus cannot propagate; raise the \
+         edge probability or reseed"
+    )]
+    Disconnected { reached: usize, n: usize },
+}
+
+/// One incident link as stored in a position's adjacency list: the edge
+/// (= λ) index, the neighbor position, and the λ sign this endpoint sees.
+///
+/// Sign convention: edge `e = (u, v)` orients its dual so the update is
+/// `λ_e ← λ_e + αρ(θ̂_u − θ̂_v)`; the first endpoint `u` carries
+/// `sign = −1.0` (λ enters its primal rhs negatively, eq. (14)'s
+/// `⟨λ, θ − θ̂⟩` side) and the second endpoint `v` carries `sign = +1.0`
+/// (the `⟨λ, θ̂ − θ⟩` side). On a chain this reduces to the paper's
+/// left/right convention exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IncidentEdge {
+    /// Edge index — also the index of the dual variable λ on this link.
+    pub edge: usize,
+    /// The neighbor's position.
+    pub peer: usize,
+    /// +1.0 at the edge's second endpoint, −1.0 at the first.
+    pub sign: f32,
+}
+
+/// An explicit bipartite communication graph over worker positions.
+///
+/// `order[p]` is the worker id occupying position `p` (ids must be
+/// distinct but need not be contiguous — a re-stitched sub-topology keeps
+/// the surviving global ids). Coloring, edges, and adjacency are all in
+/// *position* space.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Topology {
     order: Vec<usize>,
+    head: Vec<bool>,
+    /// Position pairs `(u, v)`; the index in this list is the λ index.
+    edges: Vec<(usize, usize)>,
+    /// Per position: incident edges in ascending edge-index order. On a
+    /// chain this yields the left neighbor first, then the right —
+    /// preserving the pre-redesign accumulation order bit-for-bit.
+    adj: Vec<Vec<IncidentEdge>>,
 }
 
 impl Topology {
@@ -27,20 +114,130 @@ impl Topology {
     /// let t = Topology::line(4);
     /// assert_eq!(t.len(), 4);
     /// assert_eq!(t.worker_at(2), 2);
-    /// assert_eq!(t.neighbor_positions(0), vec![1]);
-    /// assert_eq!(t.neighbor_positions(2), vec![1, 3]);
-    /// assert!(Topology::is_head_position(0) && !Topology::is_head_position(1));
+    /// assert_eq!(t.neighbor_positions(0).collect::<Vec<_>>(), vec![1]);
+    /// assert_eq!(t.neighbor_positions(2).collect::<Vec<_>>(), vec![1, 3]);
+    /// assert!(t.is_head(0) && !t.is_head(1));
+    /// assert_eq!(t.edge_count(), 3);
     /// ```
     pub fn line(n: usize) -> Topology {
         assert!(n >= 2, "a chain needs at least two workers");
-        Topology {
-            order: (0..n).collect(),
+        Topology::chain_over((0..n).collect())
+    }
+
+    /// Chain in the given worker order: position `p` holds `order[p]`,
+    /// heads at even positions, edge `i` links positions `i` and `i+1`
+    /// (so λ indices match the paper's link numbering). Ids must be
+    /// distinct; the fault-injection re-stitch path uses this with the
+    /// surviving global ids.
+    pub fn chain_over(order: Vec<usize>) -> Topology {
+        let n = order.len();
+        assert!(n >= 2, "a chain needs at least two workers");
+        let head = (0..n).map(|p| p % 2 == 0).collect();
+        let edges = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Topology::build(order, head, edges)
+            .expect("a chain is always bipartite and connected")
+    }
+
+    /// Even cycle 0–1–…–(n−1)–0. Odd cycles are not bipartite and are
+    /// rejected with [`TopologyError::OddRing`]; `n < 4` would duplicate
+    /// the single chain link and is rejected as too small.
+    pub fn ring(n: usize) -> Result<Topology, TopologyError> {
+        if n < 4 {
+            return Err(TopologyError::TooSmall {
+                kind: "ring",
+                min: 4,
+                n,
+            });
         }
+        if n % 2 != 0 {
+            return Err(TopologyError::OddRing { n });
+        }
+        let head = (0..n).map(|p| p % 2 == 0).collect();
+        let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        // Closing edge oriented (n−1, 0) so position 0 keeps one link of
+        // each sign (chain slots still map onto the degree-2 artifacts).
+        edges.push((n - 1, 0));
+        Topology::build((0..n).collect(), head, edges)
+    }
+
+    /// Star: position 0 is the hub (a head), positions 1..n are leaves
+    /// (tails). The hub's degree is `n − 1`; leaves have degree 1.
+    pub fn star(n: usize) -> Topology {
+        assert!(n >= 2, "a star needs at least two workers");
+        let head = (0..n).map(|p| p == 0).collect();
+        let edges = (1..n).map(|leaf| (0, leaf)).collect();
+        Topology::build((0..n).collect(), head, edges)
+            .expect("a star is always bipartite and connected")
+    }
+
+    /// `rows × cols` 4-neighbor grid with a checkerboard coloring.
+    /// Position `r·cols + c` sits at cell `(r, c)`; edges go right then
+    /// down per cell, in row-major order.
+    pub fn grid2d(rows: usize, cols: usize) -> Topology {
+        assert!(rows >= 1 && cols >= 1 && rows * cols >= 2, "a grid needs ≥ 2 cells");
+        let n = rows * cols;
+        let head = (0..n).map(|p| (p / cols + p % cols) % 2 == 0).collect();
+        let mut edges = Vec::with_capacity(2 * n);
+        for r in 0..rows {
+            for c in 0..cols {
+                let p = r * cols + c;
+                if c + 1 < cols {
+                    edges.push((p, p + 1));
+                }
+                if r + 1 < rows {
+                    edges.push((p, p + cols));
+                }
+            }
+        }
+        Topology::build((0..n).collect(), head, edges)
+            .expect("a grid is always bipartite and connected")
+    }
+
+    /// The most-square `rows × cols` factorization of `n` (rows ≤ cols).
+    /// Prime `n` degenerates to `1 × n` — a line.
+    pub fn grid2d_auto(n: usize) -> Topology {
+        assert!(n >= 2, "a grid needs at least two workers");
+        let mut rows = (n as f64).sqrt().floor() as usize;
+        rows = rows.max(1);
+        while rows > 1 && n % rows != 0 {
+            rows -= 1;
+        }
+        Topology::grid2d(rows, n / rows)
+    }
+
+    /// Random bipartite graph: heads at even positions, tails at odd (the
+    /// chain's coloring), each head–tail pair linked independently with
+    /// probability `p` (clamped to `[0, 1]`). Edge order is deterministic
+    /// in `seed`. Draws whose graph is disconnected are rejected with
+    /// [`TopologyError::Disconnected`] — reseed or raise `p`.
+    pub fn random_bipartite(n: usize, seed: u64, p: f64) -> Result<Topology, TopologyError> {
+        if n < 2 {
+            return Err(TopologyError::TooSmall {
+                kind: "random_bipartite",
+                min: 2,
+                n,
+            });
+        }
+        let prob = p.clamp(0.0, 1.0);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut edges = Vec::new();
+        for u in (0..n).step_by(2) {
+            for v in (1..n).step_by(2) {
+                if rng.uniform() < prob {
+                    edges.push(if u < v { (u, v) } else { (v, u) });
+                }
+            }
+        }
+        let head = (0..n).map(|q| q % 2 == 0).collect();
+        Topology::build((0..n).collect(), head, edges)
     }
 
     /// Build a chain over dropped workers: greedy nearest-neighbor from the
     /// point with minimal x (deterministic anchor), then 2-opt until no
-    /// improving swap exists (bounded passes).
+    /// improving swap exists (bounded passes). This is the Sec. V-A
+    /// heuristic ("we implement the heuristic described in [23] to find
+    /// the neighbors of each worker") — it minimizes the link distances
+    /// the energy model charges.
     pub fn nearest_neighbor_chain(points: &[Point]) -> Topology {
         let n = points.len();
         assert!(n >= 2);
@@ -65,44 +262,50 @@ impl Topology {
             used[next] = true;
             order.push(next);
         }
-        let mut topo = Topology { order };
-        topo.two_opt(points, 20);
-        topo
+        two_opt(&mut order, points, 20);
+        Topology::chain_over(order)
     }
 
-    /// 2-opt improvement: reverse segments while that shortens total chain
-    /// length. `max_passes` bounds the work (each pass is O(n²)).
-    fn two_opt(&mut self, points: &[Point], max_passes: usize) {
-        let n = self.order.len();
-        for _ in 0..max_passes {
-            let mut improved = false;
-            for i in 0..n - 1 {
-                for j in i + 1..n {
-                    // Reversing order[i..=j] changes only the links
-                    // (i−1, i) and (j, j+1).
-                    let before = self.link_cost(points, i.wrapping_sub(1), i)
-                        + self.link_cost(points, j, j + 1);
-                    let after = self.link_cost(points, i.wrapping_sub(1), j)
-                        + self.link_cost(points, i, j + 1);
-                    if after + 1e-12 < before {
-                        self.order[i..=j].reverse();
-                        improved = true;
-                    }
-                }
-            }
-            if !improved {
-                break;
+    /// Assemble and check a topology: every edge must join the two color
+    /// classes and the graph must be connected. Structural misuse
+    /// (out-of-range endpoints, self-loops) panics — the public
+    /// constructors never produce it.
+    fn build(
+        order: Vec<usize>,
+        head: Vec<bool>,
+        edges: Vec<(usize, usize)>,
+    ) -> Result<Topology, TopologyError> {
+        let n = order.len();
+        assert_eq!(head.len(), n, "need one color per position");
+        for &(u, v) in &edges {
+            assert!(u < n && v < n && u != v, "edge ({u}, {v}) invalid for {n} positions");
+            if head[u] == head[v] {
+                return Err(TopologyError::SameColorEdge { u, v });
             }
         }
-    }
-
-    /// Distance between chain positions `a` and `b`, treating out-of-range
-    /// positions (the virtual ends) as zero-cost.
-    fn link_cost(&self, points: &[Point], a: usize, b: usize) -> f64 {
-        if a >= self.order.len() || b >= self.order.len() {
-            return 0.0;
+        let reached = reachable_from_zero(n, &edges);
+        if reached < n {
+            return Err(TopologyError::Disconnected { reached, n });
         }
-        points[self.order[a]].distance(&points[self.order[b]])
+        let mut adj: Vec<Vec<IncidentEdge>> = vec![Vec::new(); n];
+        for (e, &(u, v)) in edges.iter().enumerate() {
+            adj[u].push(IncidentEdge {
+                edge: e,
+                peer: v,
+                sign: -1.0,
+            });
+            adj[v].push(IncidentEdge {
+                edge: e,
+                peer: u,
+                sign: 1.0,
+            });
+        }
+        Ok(Topology {
+            order,
+            head,
+            edges,
+            adj,
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -113,12 +316,12 @@ impl Topology {
         self.order.is_empty()
     }
 
-    /// Worker id at chain position `pos`.
+    /// Worker id at position `pos`.
     pub fn worker_at(&self, pos: usize) -> usize {
         self.order[pos]
     }
 
-    /// Chain position of worker `id`.
+    /// Position of worker `id`.
     pub fn position_of(&self, id: usize) -> usize {
         self.order
             .iter()
@@ -126,52 +329,235 @@ impl Topology {
             .expect("worker not in topology")
     }
 
-    /// Is chain position `pos` a head? (positions 0, 2, 4, … — the paper's
-    /// workers 1, 3, 5, …).
-    pub fn is_head_position(pos: usize) -> bool {
-        pos % 2 == 0
+    /// Is position `pos` a head? Heads and tails are the two color classes
+    /// of the bipartite graph; on a chain, heads sit at even positions
+    /// (the paper's workers 1, 3, 5, … in 1-indexed terms).
+    pub fn is_head(&self, pos: usize) -> bool {
+        self.head[pos]
     }
 
-    /// Neighbor chain positions of position `pos` (1 or 2 entries).
-    pub fn neighbor_positions(&self, pos: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(2);
-        if pos > 0 {
-            out.push(pos - 1);
-        }
-        if pos + 1 < self.order.len() {
-            out.push(pos + 1);
-        }
-        out
+    /// All edges as position pairs; index `e` is the λ index of that link.
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
     }
 
-    /// Total chain length under a geometry (sum of link distances).
+    /// Number of links (= number of dual variables λ).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Incident links of position `pos`, in ascending edge-index order
+    /// (left-then-right on a chain). Allocation-free: borrows the
+    /// adjacency list built at construction.
+    pub fn incident(&self, pos: usize) -> &[IncidentEdge] {
+        &self.adj[pos]
+    }
+
+    /// Degree of position `pos`.
+    pub fn degree(&self, pos: usize) -> usize {
+        self.adj[pos].len()
+    }
+
+    /// True when every position has at most one incident link per λ sign —
+    /// the shape the chain-compiled XLA artifacts (one `+λ` slot, one
+    /// `−λ` slot) can execute. Lines and even rings qualify; stars, grids
+    /// with interior nodes, and dense random graphs do not.
+    pub fn chain_compatible(&self) -> bool {
+        self.adj.iter().all(|inc| {
+            inc.iter().filter(|e| e.sign > 0.0).count() <= 1
+                && inc.iter().filter(|e| e.sign < 0.0).count() <= 1
+        })
+    }
+
+    /// Neighbor positions of `pos`, in incident-edge order. Allocation-free
+    /// (an iterator over the prebuilt adjacency — no `Vec` per call).
+    pub fn neighbor_positions(&self, pos: usize) -> impl Iterator<Item = usize> + '_ {
+        self.adj[pos].iter().map(|e| e.peer)
+    }
+
+    /// Total link length under a geometry (sum of edge distances).
     pub fn total_length(&self, points: &[Point]) -> f64 {
-        self.order
-            .windows(2)
-            .map(|w| points[w[0]].distance(&points[w[1]]))
+        self.edges
+            .iter()
+            .map(|&(u, v)| points[self.order[u]].distance(&points[self.order[v]]))
             .sum()
     }
 
     /// Max per-worker broadcast distance: for each position, the farthest
-    /// of its (≤2) neighbors — the distance the energy model charges for a
+    /// of its neighbors — the distance the energy model charges for a
     /// broadcast transmission.
     pub fn broadcast_distance(&self, points: &[Point], pos: usize) -> f64 {
         self.neighbor_positions(pos)
-            .into_iter()
             .map(|q| points[self.order[pos]].distance(&points[self.order[q]]))
             .fold(0.0, f64::max)
     }
 
-    /// Validity: the order must be a permutation of 0..n.
+    /// Validity: distinct worker ids, a proper 2-coloring (no edge joins
+    /// two same-color positions), in-range distinct endpoints, no
+    /// duplicate links, and a connected graph.
     pub fn validate(&self) -> bool {
-        let mut seen = vec![false; self.order.len()];
-        for &w in &self.order {
-            if w >= seen.len() || seen[w] {
+        let n = self.order.len();
+        if self.head.len() != n || self.adj.len() != n {
+            return false;
+        }
+        let mut ids = self.order.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != n {
+            return false;
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for &(u, v) in &self.edges {
+            if u >= n || v >= n || u == v {
                 return false;
             }
-            seen[w] = true;
+            if self.head[u] == self.head[v] {
+                return false;
+            }
+            if !seen.insert((u.min(v), u.max(v))) {
+                return false;
+            }
         }
-        true
+        reachable_from_zero(n, &self.edges) == n
+    }
+}
+
+/// Number of positions reachable from position 0 along `edges`.
+fn reachable_from_zero(n: usize, edges: &[(usize, usize)]) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut nbrs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(u, v) in edges {
+        nbrs[u].push(v);
+        nbrs[v].push(u);
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(p) = stack.pop() {
+        for &q in &nbrs[p] {
+            if !seen[q] {
+                seen[q] = true;
+                count += 1;
+                stack.push(q);
+            }
+        }
+    }
+    count
+}
+
+/// 2-opt improvement over a chain order: reverse segments while that
+/// shortens total chain length. `max_passes` bounds the work (each pass is
+/// O(n²)).
+fn two_opt(order: &mut [usize], points: &[Point], max_passes: usize) {
+    let n = order.len();
+    for _ in 0..max_passes {
+        let mut improved = false;
+        for i in 0..n - 1 {
+            for j in i + 1..n {
+                // Reversing order[i..=j] changes only the links
+                // (i−1, i) and (j, j+1).
+                let before = chain_link_cost(order, points, i.wrapping_sub(1), i)
+                    + chain_link_cost(order, points, j, j + 1);
+                let after = chain_link_cost(order, points, i.wrapping_sub(1), j)
+                    + chain_link_cost(order, points, i, j + 1);
+                if after + 1e-12 < before {
+                    order[i..=j].reverse();
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Distance between chain positions `a` and `b` of `order`, treating
+/// out-of-range positions (the virtual ends) as zero-cost.
+fn chain_link_cost(order: &[usize], points: &[Point], a: usize, b: usize) -> f64 {
+    if a >= order.len() || b >= order.len() {
+        return 0.0;
+    }
+    points[order[a]].distance(&points[order[b]])
+}
+
+/// A named topology family, as selected by the `topology=` config key /
+/// `--topology` CLI flag. [`TopologyKind::build`] instantiates it for a
+/// worker count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologyKind {
+    /// The paper's chain (default).
+    Line,
+    /// Even cycle; odd worker counts are rejected (not bipartite).
+    Ring,
+    /// Hub-and-leaves; the hub is the single head.
+    Star,
+    /// Most-square 2-D grid factorization of the worker count.
+    Grid2d,
+    /// Random head/tail bipartite graph with edge probability `p`.
+    RandomBipartite { p: f64 },
+}
+
+impl TopologyKind {
+    /// Parse a CLI/config name: `line` (or `chain`), `ring` (or `cycle`),
+    /// `star`, `grid2d` (or `grid`), `random` (or `random:<p>` /
+    /// `random_bipartite:<p>` for an explicit edge probability; bare
+    /// `random` uses p = 0.5).
+    pub fn parse(text: &str) -> Result<TopologyKind, String> {
+        let t = text.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "line" | "chain" => Ok(TopologyKind::Line),
+            "ring" | "cycle" => Ok(TopologyKind::Ring),
+            "star" => Ok(TopologyKind::Star),
+            "grid" | "grid2d" => Ok(TopologyKind::Grid2d),
+            "random" | "random_bipartite" => Ok(TopologyKind::RandomBipartite { p: 0.5 }),
+            _ => {
+                let ptext = t
+                    .strip_prefix("random:")
+                    .or_else(|| t.strip_prefix("random_bipartite:"))
+                    .ok_or_else(|| {
+                        format!(
+                            "unknown topology {text:?} (expected line, ring, star, \
+                             grid2d, or random[:p])"
+                        )
+                    })?;
+                let p: f64 = ptext
+                    .parse()
+                    .map_err(|_| format!("bad edge probability {ptext:?} in topology {text:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("edge probability {p} outside [0, 1]"));
+                }
+                Ok(TopologyKind::RandomBipartite { p })
+            }
+        }
+    }
+
+    /// Instantiate for `n` workers. `seed` only matters for
+    /// [`TopologyKind::RandomBipartite`].
+    pub fn build(&self, n: usize, seed: u64) -> Result<Topology, TopologyError> {
+        match *self {
+            TopologyKind::Line => Ok(Topology::line(n)),
+            TopologyKind::Ring => Topology::ring(n),
+            TopologyKind::Star => Ok(Topology::star(n)),
+            TopologyKind::Grid2d => Ok(Topology::grid2d_auto(n)),
+            TopologyKind::RandomBipartite { p } => {
+                Topology::random_bipartite(n, seed ^ 0x7090_10B1, p)
+            }
+        }
+    }
+
+    /// Stable name for reports and printouts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Line => "line",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Star => "star",
+            TopologyKind::Grid2d => "grid2d",
+            TopologyKind::RandomBipartite { .. } => "random_bipartite",
+        }
     }
 }
 
@@ -187,24 +573,159 @@ mod tests {
         let t = Topology::line(5);
         assert_eq!(t.len(), 5);
         assert!(t.validate());
-        assert_eq!(t.neighbor_positions(0), vec![1]);
-        assert_eq!(t.neighbor_positions(2), vec![1, 3]);
-        assert_eq!(t.neighbor_positions(4), vec![3]);
-        assert!(Topology::is_head_position(0));
-        assert!(!Topology::is_head_position(1));
+        assert_eq!(t.neighbor_positions(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(t.neighbor_positions(2).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(t.neighbor_positions(4).collect::<Vec<_>>(), vec![3]);
+        assert!(t.is_head(0));
+        assert!(!t.is_head(1));
+        assert_eq!(t.edge_count(), 4);
+        assert_eq!(t.edges()[2], (2, 3));
+    }
+
+    #[test]
+    fn chain_adjacency_orders_left_then_right_with_paper_signs() {
+        // The pre-redesign NeighborCtx accumulated the left link (λ enters
+        // the rhs with +) before the right (−); the adjacency list must
+        // preserve exactly that order and sign convention.
+        let t = Topology::line(4);
+        let inc = t.incident(2);
+        assert_eq!(inc.len(), 2);
+        assert_eq!((inc[0].peer, inc[0].sign, inc[0].edge), (1, 1.0, 1));
+        assert_eq!((inc[1].peer, inc[1].sign, inc[1].edge), (3, -1.0, 2));
+        let end = t.incident(0);
+        assert_eq!((end[0].peer, end[0].sign, end[0].edge), (1, -1.0, 0));
     }
 
     #[test]
     fn heads_and_tails_never_adjacent_within_group() {
-        // Adjacent chain positions always alternate head/tail — the
-        // alternating-update property GADMM requires.
+        // Every edge of every constructor joins the two color classes —
+        // the alternating-update property GADMM requires.
         let t = Topology::line(9);
         for pos in 0..t.len() - 1 {
-            assert_ne!(
-                Topology::is_head_position(pos),
-                Topology::is_head_position(pos + 1)
-            );
+            assert_ne!(t.is_head(pos), t.is_head(pos + 1));
         }
+    }
+
+    #[test]
+    fn every_constructor_yields_a_valid_two_coloring() {
+        property("constructors valid", 25, |rng: &mut Rng| {
+            let n = 4 + 2 * rng.below(20); // even, ≥ 4
+            for t in [
+                Topology::line(n),
+                Topology::ring(n).unwrap(),
+                Topology::star(n),
+                Topology::grid2d_auto(n),
+            ] {
+                assert!(t.validate(), "invalid topology at n={n}");
+                for &(u, v) in t.edges() {
+                    assert_ne!(t.is_head(u), t.is_head(v), "same-color edge at n={n}");
+                }
+            }
+            // Random bipartite: dense draws are connected w.h.p.; any
+            // accepted draw must validate.
+            match Topology::random_bipartite(n, rng.below(1 << 20) as u64, 0.9) {
+                Ok(t) => assert!(t.validate()),
+                Err(TopologyError::Disconnected { .. }) => {}
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        });
+    }
+
+    #[test]
+    fn odd_rings_and_tiny_rings_are_rejected() {
+        assert_eq!(Topology::ring(5).unwrap_err(), TopologyError::OddRing { n: 5 });
+        assert_eq!(Topology::ring(7).unwrap_err(), TopologyError::OddRing { n: 7 });
+        assert!(matches!(
+            Topology::ring(2).unwrap_err(),
+            TopologyError::TooSmall { kind: "ring", .. }
+        ));
+        let r = Topology::ring(6).unwrap();
+        assert!(r.validate());
+        assert_eq!(r.edge_count(), 6);
+        for p in 0..6 {
+            assert_eq!(r.degree(p), 2);
+        }
+    }
+
+    #[test]
+    fn disconnected_random_draws_are_rejected() {
+        // p = 0 draws no edges at all — never connected.
+        assert!(matches!(
+            Topology::random_bipartite(8, 3, 0.0).unwrap_err(),
+            TopologyError::Disconnected { reached: 1, n: 8 }
+        ));
+        // p = 1 is the complete bipartite graph — always connected.
+        let t = Topology::random_bipartite(8, 3, 1.0).unwrap();
+        assert!(t.validate());
+        assert_eq!(t.edge_count(), 4 * 4);
+    }
+
+    #[test]
+    fn star_shape() {
+        let t = Topology::star(6);
+        assert!(t.validate());
+        assert_eq!(t.degree(0), 5);
+        assert!(t.is_head(0));
+        for leaf in 1..6 {
+            assert_eq!(t.degree(leaf), 1);
+            assert!(!t.is_head(leaf));
+            assert_eq!(t.neighbor_positions(leaf).collect::<Vec<_>>(), vec![0]);
+        }
+    }
+
+    #[test]
+    fn grid_auto_factorizations() {
+        // 12 = 3×4: horizontal 3·3 = 9, vertical 2·4 = 8 → 17.
+        let g = Topology::grid2d_auto(12);
+        assert_eq!(g.edge_count(), 17);
+        assert!(g.validate());
+        // Primes degenerate to a line.
+        let p = Topology::grid2d_auto(7);
+        assert_eq!(p.edge_count(), 6);
+        assert!(p.validate());
+    }
+
+    #[test]
+    fn build_rejects_same_color_edges_and_disconnection() {
+        // Two heads joined directly: not bipartite under the coloring.
+        let err = Topology::build(
+            vec![0, 1, 2],
+            vec![true, false, true],
+            vec![(0, 1), (1, 2), (0, 2)],
+        )
+        .unwrap_err();
+        assert_eq!(err, TopologyError::SameColorEdge { u: 0, v: 2 });
+        // A floating position: disconnected.
+        let err = Topology::build(
+            vec![0, 1, 2, 3],
+            vec![true, false, true, false],
+            vec![(0, 1), (1, 2)],
+        )
+        .unwrap_err();
+        assert_eq!(err, TopologyError::Disconnected { reached: 3, n: 4 });
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        assert_eq!(TopologyKind::parse("line").unwrap(), TopologyKind::Line);
+        assert_eq!(TopologyKind::parse("chain").unwrap(), TopologyKind::Line);
+        assert_eq!(TopologyKind::parse("RING").unwrap(), TopologyKind::Ring);
+        assert_eq!(TopologyKind::parse("grid").unwrap(), TopologyKind::Grid2d);
+        assert_eq!(
+            TopologyKind::parse("random:0.25").unwrap(),
+            TopologyKind::RandomBipartite { p: 0.25 }
+        );
+        assert!(TopologyKind::parse("hexagon").is_err());
+        assert!(TopologyKind::parse("random:1.5").is_err());
+        assert!(TopologyKind::parse("random:abc").is_err());
+
+        assert_eq!(TopologyKind::Line.build(6, 1).unwrap().edge_count(), 5);
+        assert!(TopologyKind::Ring.build(7, 1).is_err());
+        assert_eq!(TopologyKind::Star.build(9, 1).unwrap().degree(0), 8);
+        assert!(TopologyKind::RandomBipartite { p: 1.0 }
+            .build(10, 42)
+            .unwrap()
+            .validate());
     }
 
     #[test]
@@ -215,6 +736,7 @@ mod tests {
             let t = Topology::nearest_neighbor_chain(&pts);
             assert_eq!(t.len(), n);
             assert!(t.validate());
+            assert_eq!(t.edge_count(), n - 1);
         });
     }
 
@@ -245,7 +767,7 @@ mod tests {
             used[next] = true;
             order.push(next);
         }
-        let greedy = Topology { order };
+        let greedy = Topology::chain_over(order);
         assert!(improved.total_length(&pts) <= greedy.total_length(&pts) + 1e-9);
     }
 

@@ -30,6 +30,8 @@ pub enum RuntimeError {
     Xla(#[from] xla::Error),
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
+    #[error("unsupported on the XLA backend: {0}")]
+    Unsupported(String),
 }
 
 /// One artifact's manifest entry.

@@ -18,6 +18,45 @@ use crate::model::{LocalProblem, NeighborCtx};
 use crate::util::rng::Rng;
 use std::rc::Rc;
 
+/// A degree-general [`NeighborCtx`] mapped onto the chain-shaped
+/// (left, right) input slots the AOT artifacts are compiled for.
+struct ChainSlots<'a> {
+    lambda_left: Option<&'a [f32]>,
+    theta_left: Option<&'a [f32]>,
+    lambda_right: Option<&'a [f32]>,
+    theta_right: Option<&'a [f32]>,
+}
+
+/// Split a context into chain slots. The artifacts hard-wire one `+λ` and
+/// one `−λ` penalty slot (eqs. (14)–(17) on a chain), so degree ≤ 2 with
+/// at most one link per sign maps exactly; anything else — a star hub, a
+/// dense random-bipartite node — cannot execute through XLA and fails
+/// with a clear [`RuntimeError::Unsupported`] instead of computing
+/// garbage. Chains and even rings always satisfy the constraint.
+fn chain_slots<'a>(artifact: &str, ctx: &NeighborCtx<'a>) -> Result<ChainSlots<'a>, RuntimeError> {
+    let mut left: Option<(&'a [f32], &'a [f32])> = None;
+    let mut right: Option<(&'a [f32], &'a [f32])> = None;
+    for link in ctx.links {
+        let slot = if link.sign > 0.0 { &mut left } else { &mut right };
+        if slot.is_some() {
+            return Err(RuntimeError::Unsupported(format!(
+                "artifact {artifact:?} is compiled for chain neighbor contexts \
+                 (at most one link per λ sign); this worker has degree {} with \
+                 two links on the same side — use the native backend for \
+                 non-chain topologies",
+                ctx.degree()
+            )));
+        }
+        *slot = Some((link.lambda, link.theta));
+    }
+    Ok(ChainSlots {
+        lambda_left: left.map(|(l, _)| l),
+        theta_left: left.map(|(_, t)| t),
+        lambda_right: right.map(|(l, _)| l),
+        theta_right: right.map(|(_, t)| t),
+    })
+}
+
 /// Linear-regression local problem solved through the `linreg_local_d{d}`
 /// artifact.
 pub struct XlaLinRegProblem {
@@ -70,19 +109,20 @@ impl LocalProblem for XlaLinRegProblem {
     }
 
     fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        let slots = chain_slots("linreg_local", ctx).unwrap_or_else(|e| panic!("{e}"));
         let z = &self.zeros;
-        let mask_l = [f32::from(ctx.theta_left.is_some())];
-        let mask_r = [f32::from(ctx.theta_right.is_some())];
+        let mask_l = [f32::from(slots.theta_left.is_some())];
+        let mask_r = [f32::from(slots.theta_right.is_some())];
         let rho = [ctx.rho];
         let outs = self
             .artifact
             .call(&[
                 &self.a_f32[worker],
                 &self.b_f32[worker],
-                ctx.lambda_left.unwrap_or(z),
-                ctx.lambda_right.unwrap_or(z),
-                ctx.theta_left.unwrap_or(z),
-                ctx.theta_right.unwrap_or(z),
+                slots.lambda_left.unwrap_or(z),
+                slots.lambda_right.unwrap_or(z),
+                slots.theta_left.unwrap_or(z),
+                slots.theta_right.unwrap_or(z),
                 &mask_l,
                 &mask_r,
                 &rho,
@@ -185,6 +225,7 @@ impl LocalProblem for XlaMlpProblem {
     }
 
     fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        let slots = chain_slots("mlp_local", ctx).unwrap_or_else(|e| panic!("{e}"));
         // Sample the minibatch natively (data marshalling, not compute).
         let (sx, sy) = &self.shards[worker];
         let rng = &mut self.rngs[worker];
@@ -197,8 +238,8 @@ impl LocalProblem for XlaMlpProblem {
             self.minibatch_y[s * 10 + sy[i] as usize] = 1.0;
         }
         let z = &self.zeros;
-        let mask_l = [f32::from(ctx.theta_left.is_some())];
-        let mask_r = [f32::from(ctx.theta_right.is_some())];
+        let mask_l = [f32::from(slots.theta_left.is_some())];
+        let mask_r = [f32::from(slots.theta_right.is_some())];
         let rho = [ctx.rho];
         let outs = self
             .artifact
@@ -206,10 +247,10 @@ impl LocalProblem for XlaMlpProblem {
                 out,
                 &self.minibatch_x,
                 &self.minibatch_y,
-                ctx.lambda_left.unwrap_or(z),
-                ctx.lambda_right.unwrap_or(z),
-                ctx.theta_left.unwrap_or(z),
-                ctx.theta_right.unwrap_or(z),
+                slots.lambda_left.unwrap_or(z),
+                slots.lambda_right.unwrap_or(z),
+                slots.theta_left.unwrap_or(z),
+                slots.theta_right.unwrap_or(z),
                 &mask_l,
                 &mask_r,
                 &rho,

@@ -9,7 +9,7 @@ use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
 use qgadmm::model::linreg::LinRegProblem;
-use qgadmm::model::{LocalProblem, NeighborCtx};
+use qgadmm::model::{LinkBuf, LocalProblem};
 use qgadmm::net::topology::Topology;
 use qgadmm::quant::{BitPolicy, StochasticQuantizer};
 use qgadmm::runtime::solver::{XlaLinRegProblem, XlaQuantizer};
@@ -91,13 +91,13 @@ fn linreg_artifact_matches_native_solve() {
             (0..d).map(|_| rng.uniform_f32() - 0.5).collect()
         };
         let (lam_l, lam_r, th_l, th_r) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
-        let ctx = NeighborCtx {
-            lambda_left: (w > 0).then_some(lam_l.as_slice()),
-            lambda_right: (w + 1 < workers).then_some(lam_r.as_slice()),
-            theta_left: (w > 0).then_some(th_l.as_slice()),
-            theta_right: (w + 1 < workers).then_some(th_r.as_slice()),
-            rho,
-        };
+        let buf = LinkBuf::chain(
+            (w > 0).then_some(lam_l.as_slice()),
+            (w > 0).then_some(th_l.as_slice()),
+            (w + 1 < workers).then_some(lam_r.as_slice()),
+            (w + 1 < workers).then_some(th_r.as_slice()),
+        );
+        let ctx = buf.ctx(rho);
         let mut out_native = vec![0.0f32; d];
         let mut out_xla = vec![0.0f32; d];
         native.solve(w, &ctx, &mut out_native);

@@ -1,0 +1,357 @@
+//! The neighbor-API generalization's regression harness.
+//!
+//! 1. **Chain pin** — an independent reference implementation of the
+//!    *pre-redesign* chain algorithm (hard-wired left/right neighbor math,
+//!    eqs. (14)–(18), built straight from sufficient statistics) must
+//!    match the degree-general engine bit-for-bit over 50 iterations,
+//!    quantized and full precision. This pins the edge-list/`NeighborCtx`
+//!    migration to the original trajectories.
+//! 2. **Topology convergence** — the `--topology ring/star/grid2d`
+//!    configurations reach the chain's loss-gap levels on the same
+//!    workload (the generalized-GADMM claim of arXiv:2009.06459).
+//! 3. **Cross-runtime equivalence off-chain** — the threaded runtime on a
+//!    ring and the simulated runtime (ideal network) on a star are
+//!    bit-for-bit the engine, extending the chain-only equivalence
+//!    suites to the new graphs.
+
+use qgadmm::config::{GadmmConfig, QuantConfig, SimConfig};
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::coordinator::simulated::SimulatedGadmm;
+use qgadmm::coordinator::threaded::run_threaded_on;
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec, WorkerStats};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::WorkerSolver;
+use qgadmm::net::geometry::collinear;
+use qgadmm::net::topology::{Topology, TopologyKind};
+use qgadmm::quant::{self, BitPolicy, StochasticQuantizer};
+use qgadmm::util::rng::Rng;
+
+fn world(workers: usize, samples: usize) -> (LinRegDataset, Partition) {
+    let spec = LinRegSpec {
+        samples,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 71);
+    let partition = Partition::contiguous(data.samples(), workers);
+    (data, partition)
+}
+
+/// The pre-redesign chain algorithm, implemented from scratch: explicit
+/// left/right neighbors, one λ per chain link, heads at even positions.
+/// Every floating-point expression mirrors the original
+/// `LinRegWorker::solve` / engine dual update exactly.
+struct ChainReference {
+    stats: Vec<WorkerStats>,
+    theta: Vec<Vec<f32>>,
+    view: Vec<Vec<f32>>,
+    lambda: Vec<Vec<f32>>,
+    quantizers: Option<Vec<StochasticQuantizer>>,
+    rngs: Vec<Rng>,
+    rho: f64,
+    bits: u64,
+}
+
+impl ChainReference {
+    fn new(data: &LinRegDataset, partition: &Partition, rho: f32, quant: bool, seed: u64) -> Self {
+        let n = partition.workers();
+        let d = data.features();
+        let stats: Vec<WorkerStats> = (0..n)
+            .map(|w| {
+                let (lo, hi) = partition.bounds(w);
+                data.sufficient_stats(lo, hi)
+            })
+            .collect();
+        let mut root = Rng::seed_from_u64(seed);
+        let rngs = (0..n).map(|p| root.fork(p as u64)).collect();
+        let quantizers = quant.then(|| {
+            (0..n)
+                .map(|_| StochasticQuantizer::new(d, BitPolicy::Fixed(2)))
+                .collect()
+        });
+        ChainReference {
+            stats,
+            theta: vec![vec![0.0; d]; n],
+            view: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; n - 1],
+            quantizers,
+            rngs,
+            rho: rho as f64,
+            bits: 0,
+        }
+    }
+
+    fn solve_position(&mut self, p: usize) {
+        let n = self.theta.len();
+        let d = self.theta[p].len();
+        let rho = self.rho;
+        // rhs = b + [left](λ_{p−1} + ρ·v_{p−1}) + [right](−λ_p + ρ·v_{p+1})
+        let mut rhs = self.stats[p].b.clone();
+        let mut deg = 0usize;
+        if p > 0 {
+            deg += 1;
+            for i in 0..d {
+                rhs[i] += self.lambda[p - 1][i] as f64 + rho * self.view[p - 1][i] as f64;
+            }
+        }
+        if p + 1 < n {
+            deg += 1;
+            for i in 0..d {
+                rhs[i] += -(self.lambda[p][i] as f64) + rho * self.view[p + 1][i] as f64;
+            }
+        }
+        let mut m = self.stats[p].a.clone();
+        m.add_diag(rho * deg as f64);
+        let sol = m.solve_spd(&rhs).expect("A + ρ·deg·I is SPD");
+        for i in 0..d {
+            self.theta[p][i] = sol[i] as f32;
+        }
+    }
+
+    fn broadcast_position(&mut self, p: usize) {
+        let d = self.theta[p].len();
+        match self.quantizers.as_mut() {
+            Some(qs) => {
+                let (bits, _radius) =
+                    qs[p].quantize_into(&self.theta[p], &mut self.rngs[p], &mut self.view[p]);
+                self.bits += quant::payload_bits(bits, d);
+            }
+            None => {
+                self.view[p].copy_from_slice(&self.theta[p]);
+                self.bits += 32 * d as u64;
+            }
+        }
+    }
+
+    fn iterate(&mut self) {
+        let n = self.theta.len();
+        for phase in 0..2 {
+            let mut p = phase;
+            while p < n {
+                self.solve_position(p);
+                self.broadcast_position(p);
+                p += 2;
+            }
+        }
+        // λ_i ← λ_i + α·ρ·(v_i − v_{i+1}), α = 1 (so step = ρ exactly, as
+        // the engine's `dual_step * rho` computes with dual_step = 1.0).
+        let step = self.rho as f32;
+        for i in 0..n - 1 {
+            for j in 0..self.lambda[i].len() {
+                let delta = step * (self.view[i][j] - self.view[i + 1][j]);
+                self.lambda[i][j] += delta;
+            }
+        }
+    }
+}
+
+fn assert_engine_matches_reference(quant: bool, workers: usize, iters: usize, seed: u64) {
+    let (data, partition) = world(workers, 1_400);
+    let rho = 1600.0f32;
+
+    let mut reference = ChainReference::new(&data, &partition, rho, quant, seed);
+    for _ in 0..iters {
+        reference.iterate();
+    }
+
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant: quant.then(QuantConfig::default),
+        threads: 1,
+    };
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), seed);
+    for _ in 0..iters {
+        engine.iterate();
+    }
+
+    for p in 0..workers {
+        assert_eq!(
+            engine.theta_at(p),
+            reference.theta[p].as_slice(),
+            "θ diverged from the pre-redesign trajectory at position {p}"
+        );
+        assert_eq!(
+            engine.view_at(p),
+            reference.view[p].as_slice(),
+            "θ̂ diverged from the pre-redesign trajectory at position {p}"
+        );
+    }
+    for l in 0..workers - 1 {
+        assert_eq!(
+            engine.lambda_at(l),
+            reference.lambda[l].as_slice(),
+            "λ diverged from the pre-redesign trajectory on link {l}"
+        );
+    }
+    assert_eq!(engine.comm().bits, reference.bits, "bit accounting diverged");
+}
+
+#[test]
+fn chain_trajectories_pinned_quantized() {
+    assert_engine_matches_reference(true, 6, 50, 2024);
+}
+
+#[test]
+fn chain_trajectories_pinned_full_precision() {
+    assert_engine_matches_reference(false, 5, 50, 7);
+}
+
+/// The acceptance-criteria integration test: `train-linreg --topology
+/// ring|star|grid2d` (the same `TopologyKind` path the CLI takes) reaches
+/// the chain's loss-gap levels on the shared workload.
+#[test]
+fn nonchain_topologies_reach_the_chain_loss_gap() {
+    let workers = 8;
+    let (data, partition) = world(workers, 1_400);
+    let (_, f_star) = data.optimum();
+    let rho = 1600.0f32;
+
+    let run = |topo: Topology, quant: Option<QuantConfig>, iters: usize| -> f64 {
+        let cfg = GadmmConfig {
+            workers,
+            rho,
+            dual_step: 1.0,
+            quant,
+            threads: 0,
+        };
+        let problem = LinRegProblem::new(&data, &partition, rho);
+        let mut engine = GadmmEngine::new(cfg, problem, topo, 11);
+        let start = (engine.global_objective() - f_star).abs();
+        for _ in 0..iters {
+            engine.iterate();
+        }
+        (engine.global_objective() - f_star).abs() / start.max(1e-12)
+    };
+
+    let chain = run(Topology::line(workers), None, 800);
+    assert!(chain < 1e-3, "chain did not contract: {chain}");
+    for name in ["ring", "star", "grid2d"] {
+        let topo = TopologyKind::parse(name)
+            .unwrap()
+            .build(workers, 11)
+            .unwrap();
+        assert!(topo.validate());
+        let rel = run(topo, None, 800);
+        assert!(
+            rel < 1e-2,
+            "{name} did not reach the chain's loss-gap levels: relative gap {rel} (chain {chain})"
+        );
+    }
+    // Quantized ring: same fixed point, quantization-noise tolerance.
+    let ring = TopologyKind::Ring.build(workers, 11).unwrap();
+    let rel_q = run(ring, Some(QuantConfig::default()), 900);
+    assert!(rel_q < 5e-2, "quantized ring relative gap {rel_q}");
+}
+
+/// The threaded runtime's mailbox wiring follows the topology edge list;
+/// on a ring it must stay bit-for-bit the engine (the
+/// `threaded_equivalence` guarantee, extended off-chain).
+#[test]
+fn threaded_ring_matches_engine_bit_for_bit() {
+    let workers = 6;
+    let (data, partition) = world(workers, 1_200);
+    let rho = 1600.0f32;
+    let iters = 40u64;
+    let seed = 99u64;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant: Some(QuantConfig::default()),
+        threads: 0,
+    };
+    let topo = Topology::ring(workers).unwrap();
+
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, topo.clone(), seed);
+    let opts = RunOptions {
+        iterations: iters,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    let eng_report = engine.run(&opts, |e| e.global_objective());
+
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let solvers: Vec<Box<dyn WorkerSolver>> = problem
+        .into_workers()
+        .into_iter()
+        .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
+        .collect();
+    let thr_report = run_threaded_on(&topo, &cfg, solvers, iters, seed, |obj, _| obj).unwrap();
+
+    for p in 0..workers {
+        assert_eq!(
+            engine.theta_at(p),
+            thr_report.thetas[p].as_slice(),
+            "theta diverged at ring position {p}"
+        );
+    }
+    assert_eq!(eng_report.comm.bits, thr_report.comm.bits);
+    assert_eq!(
+        eng_report.recorder.points.len(),
+        thr_report.recorder.points.len()
+    );
+    for (a, b) in eng_report
+        .recorder
+        .points
+        .iter()
+        .zip(&thr_report.recorder.points)
+    {
+        assert_eq!(a.value, b.value, "objective diverged at iteration {}", a.iteration);
+    }
+}
+
+/// The simulated runtime on an ideal network is the engine, even with a
+/// degree-4 hub (star) — per-link mirrors and duals line up with the
+/// engine's per-edge state.
+#[test]
+fn simulated_star_matches_engine_on_ideal_network() {
+    let workers = 5;
+    let (data, partition) = world(workers, 1_200);
+    let rho = 1600.0f32;
+    let seed = 41u64;
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        quant: Some(QuantConfig::default()),
+        threads: 0,
+    };
+    let topo = Topology::star(workers);
+
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg.clone(), problem, topo.clone(), seed);
+
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut sim = SimulatedGadmm::new(
+        cfg,
+        SimConfig::ideal(),
+        problem,
+        topo,
+        collinear(workers, 40.0),
+        seed,
+    );
+
+    for k in 0..30 {
+        engine.iterate();
+        assert!(sim.iterate());
+        for p in 0..workers {
+            // Identity order: worker id == position.
+            assert_eq!(
+                engine.theta_at(p),
+                sim.theta_of(p),
+                "θ diverged at position {p}, iteration {k}"
+            );
+            assert_eq!(
+                engine.view_at(p),
+                sim.view_of(p),
+                "θ̂ diverged at position {p}, iteration {k}"
+            );
+        }
+        assert_eq!(engine.comm().bits, sim.comm().bits, "bits diverged at {k}");
+    }
+}
