@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example distributed_runtime`
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::threaded::run_threaded;
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         workers,
         rho: 6400.0,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
 

@@ -11,7 +11,7 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::partition::Partition;
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         workers,
         rho: 20.0,       // paper Sec. V-B
         dual_step: 0.01, // α damping for the non-convex dual update
-        quant: Some(QuantConfig {
+        compressor: CompressorConfig::Stochastic(QuantConfig {
             bits: 8, // paper: 8-bit quantizer for the DNN task
             ..QuantConfig::default()
         }),

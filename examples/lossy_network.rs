@@ -35,7 +35,7 @@ fn run_once(
         workers: cfg.gadmm.workers,
         rho: LINREG_RHO,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: 0,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);

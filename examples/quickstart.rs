@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -20,11 +20,14 @@ fn main() {
     let partition = Partition::contiguous(data.samples(), workers);
 
     // 2. Algorithm: Q-GADMM = GADMM + 2-bit stochastic quantization.
+    //    (Other per-link schemes: CompressorConfig::FullPrecision,
+    //    Censored { .. }, TopK { .. } — see the README's "Compression
+    //    schemes" section.)
     let cfg = GadmmConfig {
         workers,
         rho: 6400.0,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()), // None ⇒ full-precision GADMM
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
     let problem = LinRegProblem::new(&data, &partition, cfg.rho);

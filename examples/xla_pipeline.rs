@@ -5,7 +5,7 @@
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example xla_pipeline
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         workers,
         rho: 6400.0,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
     let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 3);

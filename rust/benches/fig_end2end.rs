@@ -7,7 +7,7 @@ use qgadmm::baselines::adiana::{run_adiana_linreg, AdianaOptions};
 use qgadmm::baselines::gd::{run_gd_linreg, GdOptions};
 use qgadmm::baselines::sgd::{run_sgd_images, SgdOptions};
 use qgadmm::baselines::QuantMode;
-use qgadmm::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
@@ -47,7 +47,7 @@ fn main() {
             workers,
             rho: helpers::LINREG_RHO,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads: 0,
         };
         let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);
@@ -149,7 +149,7 @@ fn main() {
                 workers: 4,
                 rho: helpers::DNN_RHO,
                 dual_step: helpers::DNN_ALPHA,
-                quant,
+                compressor: quant.into(),
                 threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(4), 9);
@@ -196,7 +196,7 @@ fn main() {
                 workers: n,
                 rho: helpers::LINREG_RHO,
                 dual_step: 1.0,
-                quant: Some(QuantConfig::default()),
+                compressor: CompressorConfig::Stochastic(QuantConfig::default()),
                 threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(n), 2);
@@ -225,7 +225,7 @@ fn main() {
                 workers,
                 rho,
                 dual_step: 1.0,
-                quant: Some(QuantConfig::default()),
+                compressor: CompressorConfig::Stochastic(QuantConfig::default()),
                 threads: 0,
             };
             let mut eng = GadmmEngine::new(gcfg, problem, Topology::line(workers), 2);

@@ -18,13 +18,15 @@
 //!   "parallel_iteration": { "workers": 16, "dims": 10000, "threads": T,
 //!     "sequential_ns": f64, "parallel_ns": f64, "speedup": f64 },
 //!   "topology_iteration": { "workers": 16, "dims": 10000,
-//!     "line_ns": f64, "ring_ns": f64, "ring_over_line": f64 } }
+//!     "line_ns": f64, "ring_ns": f64, "ring_over_line": f64 },
+//!   "compressor_hotpath": { "dims": 10000,
+//!     "stochastic": f64, "topk": f64, "full": f64 } }
 //! ```
 //!
 //! Run `cargo bench --bench hotpath` (full) or append `-- --quick` for the
 //! CI-sized smoke run (same coverage, shorter measurement windows).
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::GadmmEngine;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
@@ -34,7 +36,7 @@ use qgadmm::model::mlp::{MlpDims, MlpProblem};
 use qgadmm::model::scale::DiagLinRegProblem;
 use qgadmm::model::{LinkBuf, LocalProblem};
 use qgadmm::net::topology::Topology;
-use qgadmm::quant::{bitpack, BitPolicy, StochasticQuantizer};
+use qgadmm::quant::{bitpack, BitPolicy, Compressor, StochasticQuantizer};
 use qgadmm::util::json::Json;
 use qgadmm::util::rng::Rng;
 use std::time::Instant;
@@ -87,7 +89,7 @@ impl Results {
         }
     }
 
-    fn flush(&self, parallel: Json, topology: Json) {
+    fn flush(&self, parallel: Json, topology: Json, compressor: Json) {
         let mut ns = Json::obj();
         for (name, v) in &self.ns {
             ns.set(name, Json::Num(*v));
@@ -98,6 +100,7 @@ impl Results {
         doc.set("ns_per_iter", ns);
         doc.set("parallel_iteration", parallel);
         doc.set("topology_iteration", topology);
+        doc.set("compressor_hotpath", compressor);
         // `cargo bench` runs with cwd = the package root (rust/); the
         // trajectory file lives at the repository root next to ROADMAP.md.
         let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -221,7 +224,7 @@ fn main() {
         workers: 50,
         rho: 6400.0,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 1,
     };
     let problem = LinRegProblem::new(&data, &partition, 6400.0);
@@ -238,7 +241,7 @@ fn main() {
             workers: 16,
             rho: 4.0,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads,
         };
         let problem = DiagLinRegProblem::synthesize(scale_d, 16, 7);
@@ -284,7 +287,7 @@ fn main() {
             workers: 16,
             rho: 4.0,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads: 1,
         };
         let problem = DiagLinRegProblem::synthesize(scale_d, 16, 7);
@@ -341,7 +344,7 @@ fn main() {
                 workers: 4,
                 rho: 20.0,
                 dual_step: 0.01,
-                quant: Some(QuantConfig {
+                compressor: CompressorConfig::Stochastic(QuantConfig {
                     bits: 8,
                     ..QuantConfig::default()
                 }),
@@ -376,6 +379,33 @@ fn main() {
         );
     }
 
+    // --- per-scheme compress_into at d=10k (the pluggable-compressor API) ----
+    // One fused compress per scheme on the same vector: how much each
+    // payload scheme costs per broadcast on the engine hot path.
+    let mut compressor_json = Json::obj();
+    {
+        let cd = 10_000usize;
+        let ctheta: Vec<f32> = (0..cd).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let mut cview = vec![0.0f32; cd];
+        for (label, ccfg) in [
+            (
+                "stochastic b=2",
+                CompressorConfig::Stochastic(QuantConfig::default()),
+            ),
+            ("topk f=0.01", CompressorConfig::TopK { frac: 0.01 }),
+            ("full", CompressorConfig::FullPrecision),
+        ] {
+            let mut comp = ccfg.build(cd);
+            let mut crng = Rng::seed_from_u64(17);
+            let per = res.bench(&format!("compress_into {label} d=10k"), 0.3, || {
+                let out = comp.compress_into(&ctheta, &mut crng, &mut cview);
+                std::hint::black_box(out);
+            });
+            compressor_json.set(ccfg.name(), Json::Num(per * 1e9));
+        }
+        compressor_json.set("dims", Json::Num(cd as f64));
+    }
+
     // --- large-d quantize + pack pipeline (the Q-SGADMM uplink) -------------
     let mut q = StochasticQuantizer::new(dd, BitPolicy::Fixed(8));
     let mut qrng = Rng::seed_from_u64(11);
@@ -392,5 +422,5 @@ fn main() {
         std::hint::black_box(&frame);
     });
 
-    res.flush(parallel, topology);
+    res.flush(parallel, topology, compressor_json);
 }

@@ -45,9 +45,9 @@ pub const USAGE: &str = "\
 qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
 
 USAGE:
-  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|all> [options]
-  qgadmm train-linreg  [--workers N --rho R --bits B --iters K --topology T --use-xla true]
-  qgadmm train-dnn     [--workers N --rho R --bits B --iters K --topology T]
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|all> [options]
+  qgadmm train-linreg  [--workers N --rho R --bits B --compressor S --iters K --topology T --use-xla true]
+  qgadmm train-dnn     [--workers N --rho R --bits B --compressor S --iters K --topology T]
   qgadmm train-scale   [--dims D --workers N --threads T --bits B --iters K --topology T]
   qgadmm simulate      [--loss P --workers N --iters K --topology T ...sim options]
   qgadmm info          (artifact + platform report)
@@ -55,7 +55,12 @@ USAGE:
 COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --workers N          number of workers (linreg default 50, dnn 10)
   --rho R              disagreement penalty
-  --bits B             quantizer resolution (0 = full precision)
+  --bits B             quantizer resolution (0 = full precision; applies to
+                       the stochastic/censored compressors)
+  --compressor S       per-link compression scheme: stochastic (default),
+                       full, censored[:tau0[:decay]], topk[:frac]
+                       (censored/topk require the native backend — they are
+                       rejected with --use-xla)
   --iters K            iteration cap
   --drops N            random drops for the CDF figures
   --seed S             base seed

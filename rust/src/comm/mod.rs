@@ -2,11 +2,18 @@
 //! codec, and the in-process transport used by the threaded decentralized
 //! runtime.
 //!
-//! Payload sizes follow Sec. III-A exactly:
+//! Payload sizes follow Sec. III-A (and the compression-scheme extensions)
+//! exactly:
 //! * full-precision model broadcast (GADMM/SGADMM, and PS up/downlinks):
 //!   `32·d` bits;
 //! * quantized broadcast (Q-GADMM/Q-SGADMM, QGD, QSGD, ADIANA):
-//!   `b·d + b_R + b_b = b·d + 64` bits.
+//!   `b·d + b_R + b_b = b·d + 64` bits;
+//! * sparse (top-k) broadcast: `32 + k·(b_idx + 32)` bits — a count word
+//!   plus one `(index, f32 value)` pair per kept coordinate, with
+//!   `b_idx = 16` for models up to 65,536 dimensions and 32 beyond
+//!   ([`SparseMsg::index_bits`]);
+//! * censored round marker (CQ-GGADMM-style skipped broadcast): 0 bits —
+//!   the receiver reuses its mirror, nothing crosses the air.
 //!
 //! [`wire`] frames whole messages into the byte stream a link layer
 //! carries (used by the `sim` discrete-event simulator); the overhead over
@@ -17,13 +24,55 @@ pub mod wire;
 
 use crate::quant::QuantizedMsg;
 
-/// What a message carries.
+/// Sparse (top-k) payload: the kept coordinates of a model-difference
+/// broadcast, values in full precision. The receiver applies
+/// `θ̂[index] += value` per entry (error feedback lives on the *sender*:
+/// whatever was not sent stays in `θ − θ̂` and competes again next round).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMsg {
+    /// Model dimension `d` (receiver-known; not charged on the wire, but
+    /// it fixes the index width below).
+    pub dims: usize,
+    /// Kept coordinate indices, strictly ascending, each `< dims`.
+    pub indices: Vec<u32>,
+    /// One f32 difference value per kept index.
+    pub values: Vec<f32>,
+}
+
+impl SparseMsg {
+    /// Wire width of one coordinate index for a `dims`-dimensional model:
+    /// 16 bits up to 65,536 dimensions, 32 beyond (byte-aligned so the
+    /// framed body matches the accounting bit-for-bit).
+    pub fn index_bits(dims: usize) -> u64 {
+        if dims <= (1 << 16) {
+            16
+        } else {
+            32
+        }
+    }
+
+    /// Exact payload size on the wire in bits: a 32-bit count plus
+    /// `(index, value)` pairs — `32 + k·(b_idx + 32)`.
+    pub fn payload_bits(&self) -> u64 {
+        32 + self.indices.len() as u64 * (Self::index_bits(self.dims) + 32)
+    }
+}
+
+/// What a message carries. The variant *is* the compression scheme's wire
+/// tag (`wire` frames it verbatim); see `quant::compress` for the sender
+/// side of each scheme.
 #[derive(Clone, Debug)]
 pub enum Payload {
     /// Full-precision f32 vector (32·d bits on the wire).
     Full(Vec<f32>),
     /// Stochastically quantized difference (b·d + 64 bits).
     Quantized(QuantizedMsg),
+    /// Top-k sparsified difference (32 + k·(b_idx + 32) bits).
+    Sparse(SparseMsg),
+    /// Censored round: the sender deliberately skipped this broadcast and
+    /// every receiver reuses its mirror (0 bits — distinct from a *lost*
+    /// frame, which leaves the mirror stale involuntarily).
+    Censored,
     /// Control/termination marker (not charged).
     Stop,
 }
@@ -34,6 +83,8 @@ impl Payload {
         match self {
             Payload::Full(v) => 32 * v.len() as u64,
             Payload::Quantized(q) => q.payload_bits(),
+            Payload::Sparse(s) => s.payload_bits(),
+            Payload::Censored => 0,
             Payload::Stop => 0,
         }
     }
@@ -51,7 +102,8 @@ pub struct Message {
 
 /// Running communication totals for one algorithm run. A *broadcast* to
 /// two neighbors is one transmission (one channel use, one energy charge)
-/// — the radio medium delivers to both.
+/// — the radio medium delivers to both. Censored rounds charge nothing
+/// and are tallied separately.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     /// Number of transmissions (channel uses).
@@ -60,6 +112,8 @@ pub struct CommStats {
     pub bits: u64,
     /// Total transmit energy in joules (Shannon model).
     pub energy_joules: f64,
+    /// Broadcasts skipped by a censoring compressor (no channel use).
+    pub censored: u64,
 }
 
 impl CommStats {
@@ -69,10 +123,16 @@ impl CommStats {
         self.energy_joules += energy_joules;
     }
 
+    /// Tally one deliberately skipped broadcast.
+    pub fn record_censored(&mut self) {
+        self.censored += 1;
+    }
+
     pub fn merge(&mut self, other: &CommStats) {
         self.transmissions += other.transmissions;
         self.bits += other.bits;
         self.energy_joules += other.energy_joules;
+        self.censored += other.censored;
     }
 }
 
@@ -90,6 +150,31 @@ mod tests {
         };
         assert_eq!(Payload::Quantized(q).bits(), 2 * 6 + 64);
         assert_eq!(Payload::Stop.bits(), 0);
+        assert_eq!(Payload::Censored.bits(), 0);
+    }
+
+    #[test]
+    fn sparse_bit_accounting() {
+        let s = SparseMsg {
+            dims: 1024,
+            indices: vec![1, 5, 9],
+            values: vec![0.5, -0.25, 1.0],
+        };
+        // 16-bit indices at d = 1024: 32 + 3·(16 + 32).
+        assert_eq!(Payload::Sparse(s).bits(), 32 + 3 * 48);
+        let wide = SparseMsg {
+            dims: 100_000,
+            indices: vec![70_000],
+            values: vec![2.0],
+        };
+        // 32-bit indices beyond 65,536 dimensions.
+        assert_eq!(wide.payload_bits(), 32 + 64);
+        let empty = SparseMsg {
+            dims: 8,
+            indices: vec![],
+            values: vec![],
+        };
+        assert_eq!(empty.payload_bits(), 32);
     }
 
     #[test]
@@ -97,13 +182,17 @@ mod tests {
         let mut a = CommStats::default();
         a.record(100, 1.5);
         a.record(50, 0.5);
+        a.record_censored();
         assert_eq!(a.transmissions, 2);
         assert_eq!(a.bits, 150);
+        assert_eq!(a.censored, 1);
         assert!((a.energy_joules - 2.0).abs() < 1e-12);
         let mut b = CommStats::default();
         b.record(10, 0.25);
+        b.record_censored();
         a.merge(&b);
         assert_eq!(a.bits, 160);
         assert_eq!(a.transmissions, 3);
+        assert_eq!(a.censored, 2);
     }
 }

@@ -1,39 +1,56 @@
 //! Bit-exact framed wire codec for whole [`Message`]s.
 //!
 //! [`crate::quant::bitpack`] serializes a quantized *payload*; this module
-//! frames any [`Payload`] variant — full precision, quantized, or control —
-//! into the byte stream a real link layer would carry, so the simulator
-//! (`sim`) and any future socket transport move exactly the bytes the
-//! paper's bit accounting claims, plus a fixed, documented frame overhead.
+//! frames any [`Payload`] variant — full precision, quantized, sparse,
+//! censored, or control — into the byte stream a real link layer would
+//! carry, so the simulator (`sim`) and any future socket transport move
+//! exactly the bytes the paper's bit accounting claims, plus a fixed,
+//! documented frame overhead.
 //!
-//! Frame layout (little-endian):
+//! Frame layout (little-endian), wire format version 2:
 //! ```text
 //!   [0]        u8   magic (0xA9)
-//!   [1]        u8   payload tag: 0 = Stop, 1 = Full, 2 = Quantized
-//!   [2..6]     u32  sender chain position / worker id
-//!   [6..14]    u64  round (iteration index)
-//!   [14..18]   u32  body length in bytes
-//!   [18..22]   u32  CRC-32 (IEEE) of the body
-//!   [22..]     body
+//!   [1]        u8   wire format version (0x02)
+//!   [2]        u8   scheme tag: 0 = Stop, 1 = Full, 2 = Quantized,
+//!                   3 = Sparse, 4 = Censored
+//!   [3..7]     u32  sender chain position / worker id
+//!   [7..15]    u64  round (iteration index)
+//!   [15..19]   u32  body length in bytes
+//!   [19..23]   u32  CRC-32 (IEEE) of the body
+//!   [23..]     body
 //! ```
+//! The scheme tag *is* the compression scheme identifier: every
+//! `quant::compress` scheme owns exactly one payload variant, so a decoder
+//! can dispatch per frame without out-of-band negotiation, and a frame
+//! from a different wire format version fails loudly
+//! ([`WireError::BadVersion`]) instead of misparsing.
+//!
 //! Bodies:
-//! * `Stop` — empty;
+//! * `Stop`, `Censored` — empty;
 //! * `Full(v)` — `4·d` bytes of little-endian f32 (exactly `32·d` bits,
 //!   matching [`Payload::bits`]);
 //! * `Quantized(q)` — the [`bitpack`] encoding (`1 + 4 + ⌈b·d/8⌉` bytes;
 //!   [`Payload::bits`] charges `b·d + 64`, i.e. never *less* than the body
-//!   carries).
+//!   carries);
+//! * `Sparse(s)` — `u32` count, then `k` indices (u16 for `d ≤ 65,536`,
+//!   u32 beyond), then `k` f32 values — byte-for-bit the
+//!   `32 + k·(b_idx + 32)` accounting.
 //!
 //! The invariant tested by `frame_size_matches_bit_accounting` (and the
 //! `wire_codec` integration suite): for every payload,
-//! `0 < encoded_len·8 − Payload::bits() ≤ OVERHEAD_BITS`.
+//! `0 < encoded_len·8 − Payload::bits() ≤ OVERHEAD_BITS`, and for every
+//! byte-aligned variant (all but `Quantized`, whose packed levels pad to a
+//! byte boundary) the slack is *exactly* the frame header.
 
-use super::{Message, Payload};
+use super::{Message, Payload, SparseMsg};
 use crate::quant::bitpack::{self, CodecError};
 use crate::quant::QuantizedMsg;
 
 /// Frame header size in bytes.
-pub const HEADER_BYTES: usize = 22;
+pub const HEADER_BYTES: usize = 23;
+
+/// Wire format version carried in every frame header.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Worst-case framing overhead in bits: the header plus the quantized
 /// body's own header/padding slack relative to the paper's `b·d + 64`
@@ -45,6 +62,8 @@ const MAGIC: u8 = 0xA9;
 const TAG_STOP: u8 = 0;
 const TAG_FULL: u8 = 1;
 const TAG_QUANTIZED: u8 = 2;
+const TAG_SPARSE: u8 = 3;
+const TAG_CENSORED: u8 = 4;
 
 /// Wire-level failure modes.
 #[derive(Debug, thiserror::Error)]
@@ -53,7 +72,9 @@ pub enum WireError {
     Truncated { need: usize, have: usize },
     #[error("bad magic byte 0x{0:02x}")]
     BadMagic(u8),
-    #[error("unknown payload tag {0}")]
+    #[error("unsupported wire format version {got} (this codec speaks {want})")]
+    BadVersion { got: u8, want: u8 },
+    #[error("unknown scheme tag {0}")]
     BadTag(u8),
     #[error("checksum mismatch: header says 0x{expected:08x}, body hashes to 0x{got:08x}")]
     ChecksumMismatch { expected: u32, got: u32 },
@@ -63,6 +84,10 @@ pub enum WireError {
         expected: usize,
         got: usize,
     },
+    #[error("sparse body: index {index} out of range for a {dims}-dimensional model")]
+    SparseIndexOutOfRange { index: u32, dims: usize },
+    #[error("sparse body: {count} entries exceed the {dims}-dimensional model")]
+    SparseTooLong { count: usize, dims: usize },
     #[error("quantized body: {0}")]
     Codec(#[from] CodecError),
 }
@@ -95,12 +120,19 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     c ^ 0xFFFF_FFFF
 }
 
+/// Bytes one sparse index occupies on the wire (see
+/// [`SparseMsg::index_bits`]).
+fn sparse_index_bytes(dims: usize) -> usize {
+    (SparseMsg::index_bits(dims) / 8) as usize
+}
+
 /// Exact encoded body length for a payload, without serializing.
 pub fn body_len(payload: &Payload) -> usize {
     match payload {
-        Payload::Stop => 0,
+        Payload::Stop | Payload::Censored => 0,
         Payload::Full(v) => 4 * v.len(),
         Payload::Quantized(q) => 5 + (q.bits as usize * q.levels.len()).div_ceil(8),
+        Payload::Sparse(s) => 4 + s.indices.len() * (sparse_index_bytes(s.dims) + 4),
     }
 }
 
@@ -112,7 +144,7 @@ pub fn frame_len(payload: &Payload) -> usize {
 /// Serialize one message into a framed byte vector.
 pub fn encode_frame(msg: &Message) -> Vec<u8> {
     let body = match &msg.payload {
-        Payload::Stop => Vec::new(),
+        Payload::Stop | Payload::Censored => Vec::new(),
         Payload::Full(v) => {
             let mut b = Vec::with_capacity(4 * v.len());
             for x in v {
@@ -121,14 +153,33 @@ pub fn encode_frame(msg: &Message) -> Vec<u8> {
             b
         }
         Payload::Quantized(q) => bitpack::encode_msg(q),
+        Payload::Sparse(s) => {
+            let iw = sparse_index_bytes(s.dims);
+            let mut b = Vec::with_capacity(4 + s.indices.len() * (iw + 4));
+            b.extend_from_slice(&(s.indices.len() as u32).to_le_bytes());
+            for &i in &s.indices {
+                if iw == 2 {
+                    b.extend_from_slice(&(i as u16).to_le_bytes());
+                } else {
+                    b.extend_from_slice(&i.to_le_bytes());
+                }
+            }
+            for v in &s.values {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            b
+        }
     };
     let tag = match &msg.payload {
         Payload::Stop => TAG_STOP,
         Payload::Full(_) => TAG_FULL,
         Payload::Quantized(_) => TAG_QUANTIZED,
+        Payload::Sparse(_) => TAG_SPARSE,
+        Payload::Censored => TAG_CENSORED,
     };
     let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
     out.push(MAGIC);
+    out.push(WIRE_VERSION);
     out.push(tag);
     out.extend_from_slice(&(msg.from as u32).to_le_bytes());
     out.extend_from_slice(&msg.round.to_le_bytes());
@@ -148,6 +199,58 @@ fn read_u64(bytes: &[u8], at: usize) -> u64 {
     u64::from_le_bytes(b)
 }
 
+fn decode_sparse(body: &[u8], dims: usize) -> Result<SparseMsg, WireError> {
+    if body.len() < 4 {
+        return Err(WireError::BadBodyLength {
+            kind: "sparse",
+            expected: 4,
+            got: body.len(),
+        });
+    }
+    let count = read_u32(body, 0) as usize;
+    if count > dims {
+        return Err(WireError::SparseTooLong { count, dims });
+    }
+    let iw = sparse_index_bytes(dims);
+    let expected = 4 + count * (iw + 4);
+    if body.len() != expected {
+        return Err(WireError::BadBodyLength {
+            kind: "sparse",
+            expected,
+            got: body.len(),
+        });
+    }
+    let mut indices = Vec::with_capacity(count);
+    for j in 0..count {
+        let at = 4 + j * iw;
+        let idx = if iw == 2 {
+            u16::from_le_bytes([body[at], body[at + 1]]) as u32
+        } else {
+            read_u32(body, at)
+        };
+        if idx as usize >= dims {
+            return Err(WireError::SparseIndexOutOfRange { index: idx, dims });
+        }
+        indices.push(idx);
+    }
+    let vals_at = 4 + count * iw;
+    let mut values = Vec::with_capacity(count);
+    for j in 0..count {
+        let at = vals_at + 4 * j;
+        values.push(f32::from_le_bytes([
+            body[at],
+            body[at + 1],
+            body[at + 2],
+            body[at + 3],
+        ]));
+    }
+    Ok(SparseMsg {
+        dims,
+        indices,
+        values,
+    })
+}
+
 /// Parse one frame from the front of `bytes`. `dims` is the model
 /// dimension the receiver expects (fixed per run, so it is not carried on
 /// the wire). Returns the message and the number of bytes consumed, so a
@@ -162,11 +265,17 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
     if bytes[0] != MAGIC {
         return Err(WireError::BadMagic(bytes[0]));
     }
-    let tag = bytes[1];
-    let from = read_u32(bytes, 2) as usize;
-    let round = read_u64(bytes, 6);
-    let len = read_u32(bytes, 14) as usize;
-    let expected_crc = read_u32(bytes, 18);
+    if bytes[1] != WIRE_VERSION {
+        return Err(WireError::BadVersion {
+            got: bytes[1],
+            want: WIRE_VERSION,
+        });
+    }
+    let tag = bytes[2];
+    let from = read_u32(bytes, 3) as usize;
+    let round = read_u64(bytes, 7);
+    let len = read_u32(bytes, 15) as usize;
+    let expected_crc = read_u32(bytes, 19);
     let total = HEADER_BYTES + len;
     if bytes.len() < total {
         return Err(WireError::Truncated {
@@ -183,15 +292,19 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
         });
     }
     let payload = match tag {
-        TAG_STOP => {
+        TAG_STOP | TAG_CENSORED => {
             if len != 0 {
                 return Err(WireError::BadBodyLength {
-                    kind: "stop",
+                    kind: if tag == TAG_STOP { "stop" } else { "censored" },
                     expected: 0,
                     got: len,
                 });
             }
-            Payload::Stop
+            if tag == TAG_STOP {
+                Payload::Stop
+            } else {
+                Payload::Censored
+            }
         }
         TAG_FULL => {
             if len != 4 * dims {
@@ -225,6 +338,7 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
             }
             Payload::Quantized(q)
         }
+        TAG_SPARSE => Payload::Sparse(decode_sparse(body, dims)?),
         other => return Err(WireError::BadTag(other)),
     };
     Ok((
@@ -244,13 +358,13 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn random_payload(rng: &mut Rng) -> Payload {
-        match rng.below(3) {
+        match rng.below(5) {
             0 => Payload::Stop,
             1 => {
                 let d = rng.below(64);
                 Payload::Full((0..d).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect())
             }
-            _ => {
+            2 => {
                 let bits = 1 + rng.below(16) as u8;
                 let d = rng.below(64);
                 let max = 1u64 << bits;
@@ -260,29 +374,52 @@ mod tests {
                     levels: (0..d).map(|_| rng.below(max as usize) as u32).collect(),
                 })
             }
+            3 => {
+                // Occasionally exercise the > 65,536-dim (u32-index) path.
+                let dims = if rng.below(4) == 0 { 100_000 } else { 1 + rng.below(512) };
+                let k = rng.below(dims.min(16) + 1);
+                let mut indices: Vec<u32> = rng
+                    .sample_indices(dims, k)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                indices.sort_unstable();
+                let values = (0..indices.len())
+                    .map(|_| rng.uniform_f32() * 4.0 - 2.0)
+                    .collect();
+                Payload::Sparse(SparseMsg {
+                    dims,
+                    indices,
+                    values,
+                })
+            }
+            _ => Payload::Censored,
         }
     }
 
     fn dims_of(p: &Payload) -> usize {
         match p {
-            Payload::Stop => 0,
+            Payload::Stop | Payload::Censored => 0,
             Payload::Full(v) => v.len(),
             Payload::Quantized(q) => q.levels.len(),
+            Payload::Sparse(s) => s.dims,
         }
     }
 
     fn assert_payload_eq(a: &Payload, b: &Payload) {
         match (a, b) {
             (Payload::Stop, Payload::Stop) => {}
+            (Payload::Censored, Payload::Censored) => {}
             (Payload::Full(x), Payload::Full(y)) => assert_eq!(x, y),
             (Payload::Quantized(x), Payload::Quantized(y)) => assert_eq!(x, y),
+            (Payload::Sparse(x), Payload::Sparse(y)) => assert_eq!(x, y),
             _ => panic!("payload variant changed across the wire"),
         }
     }
 
     #[test]
     fn roundtrip_property_every_variant() {
-        property("wire frame roundtrip", 300, |rng: &mut Rng| {
+        property("wire frame roundtrip", 400, |rng: &mut Rng| {
             let payload = random_payload(rng);
             let dims = dims_of(&payload);
             let msg = Message {
@@ -304,8 +441,9 @@ mod tests {
     fn frame_size_matches_bit_accounting() {
         // encoded_len·8 − Payload::bits() ∈ (0, OVERHEAD_BITS] for every
         // payload — the wire never under-counts the paper's accounting and
-        // never exceeds it by more than the fixed frame overhead.
-        property("wire overhead bound", 300, |rng: &mut Rng| {
+        // never exceeds it by more than the fixed frame overhead. For the
+        // byte-aligned variants the slack is exactly the frame header.
+        property("wire overhead bound", 400, |rng: &mut Rng| {
             let payload = random_payload(rng);
             let wire_bits = 8 * frame_len(&payload) as u64;
             let accounted = payload.bits();
@@ -318,6 +456,13 @@ mod tests {
                 "overhead {} > bound {OVERHEAD_BITS}",
                 wire_bits - accounted
             );
+            if !matches!(payload, Payload::Quantized(_)) {
+                assert_eq!(
+                    wire_bits - accounted,
+                    8 * HEADER_BYTES as u64,
+                    "byte-aligned variant must cost exactly the header"
+                );
+            }
         });
     }
 
@@ -339,6 +484,20 @@ mod tests {
                 }),
             },
             Message {
+                from: 3,
+                round: 2,
+                payload: Payload::Sparse(SparseMsg {
+                    dims: 2,
+                    indices: vec![1],
+                    values: vec![-0.5],
+                }),
+            },
+            Message {
+                from: 4,
+                round: 2,
+                payload: Payload::Censored,
+            },
+            Message {
                 from: 2,
                 round: 2,
                 payload: Payload::Stop,
@@ -350,7 +509,7 @@ mod tests {
         }
         let mut at = 0usize;
         for m in &msgs {
-            let dims = dims_of(&m.payload);
+            let dims = dims_of(&m.payload).max(2);
             let (back, used) = decode_frame(&stream[at..], dims).unwrap();
             assert_eq!(back.from, m.from);
             assert_eq!(back.round, m.round);
@@ -382,9 +541,17 @@ mod tests {
         bad[0] = 0x00;
         assert!(matches!(decode_frame(&bad, 3), Err(WireError::BadMagic(0))));
 
-        // Unknown tag.
+        // Version mismatch (e.g. a v1 frame, which had no version byte).
         let mut bad = good.clone();
-        bad[1] = 7;
+        bad[1] = 1;
+        assert!(matches!(
+            decode_frame(&bad, 3),
+            Err(WireError::BadVersion { got: 1, .. })
+        ));
+
+        // Unknown scheme tag.
+        let mut bad = good.clone();
+        bad[2] = 7;
         assert!(matches!(decode_frame(&bad, 3), Err(WireError::BadTag(7))));
 
         // Truncation (header and body).
@@ -401,6 +568,26 @@ mod tests {
         assert!(matches!(
             decode_frame(&good, 4),
             Err(WireError::BadBodyLength { .. })
+        ));
+    }
+
+    #[test]
+    fn sparse_index_out_of_range_is_detected() {
+        let msg = Message {
+            from: 0,
+            round: 1,
+            payload: Payload::Sparse(SparseMsg {
+                dims: 8,
+                indices: vec![5],
+                values: vec![1.0],
+            }),
+        };
+        let bytes = encode_frame(&msg);
+        // Decoding against a smaller model must reject the index (dims = 4
+        // keeps the u16 index width, so only the range check can fire).
+        assert!(matches!(
+            decode_frame(&bytes, 4),
+            Err(WireError::SparseIndexOutOfRange { index: 5, dims: 4 })
         ));
     }
 

@@ -9,7 +9,8 @@
 
 use crate::net::channel::ChannelParams;
 use crate::net::topology::TopologyKind;
-use crate::quant::BitPolicy;
+use crate::quant::compress::{Censored, CompressorKind, FullPrecision, TopK};
+use crate::quant::{BitPolicy, StochasticQuantizer};
 use crate::sim::link::{ComputeModel, LatencyModel, LossModel};
 use std::collections::BTreeMap;
 
@@ -47,6 +48,245 @@ impl QuantConfig {
     }
 }
 
+/// Per-link compression scheme — the config-layer description a runtime
+/// turns into one `quant::compress::CompressorKind` per worker
+/// ([`CompressorConfig::build`]). `Stochastic(QuantConfig::default())` is
+/// the paper's Q-GADMM; `FullPrecision` is the GADMM baseline (the old
+/// `quant: None`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressorConfig {
+    /// Full-precision 32·d-bit broadcasts (GADMM / SGADMM).
+    FullPrecision,
+    /// Stochastic quantization, eqs. (6)–(13) (Q-GADMM / Q-SGADMM).
+    Stochastic(QuantConfig),
+    /// CQ-GGADMM-style censored stochastic quantization: skip rounds whose
+    /// pending change is at or below `τ₀·decay^k`.
+    Censored {
+        quant: QuantConfig,
+        tau0: f32,
+        decay: f32,
+    },
+    /// Top-k sparsification with error feedback: keep `ceil(frac·d)`
+    /// coordinates per round, values in full precision.
+    TopK { frac: f32 },
+}
+
+/// Default censoring threshold `τ₀` (`censored` with no arguments).
+pub const CENSOR_TAU0: f32 = 0.05;
+/// Default censoring decay per iteration (`censored` with ≤ 1 argument).
+pub const CENSOR_DECAY: f32 = 0.9985;
+/// Default top-k fraction (`topk` with no argument).
+pub const TOPK_FRAC: f32 = 0.02;
+
+/// The scheme list every parse error cites.
+pub const COMPRESSOR_SCHEMES: &str = "stochastic, full, censored[:tau0[:decay]], topk[:frac]";
+
+impl Default for CompressorConfig {
+    fn default() -> Self {
+        CompressorConfig::Stochastic(QuantConfig::default())
+    }
+}
+
+impl From<Option<QuantConfig>> for CompressorConfig {
+    /// The pre-redesign `quant: Option<QuantConfig>` encoding: `Some` ⇒
+    /// stochastic quantization, `None` ⇒ full precision.
+    fn from(quant: Option<QuantConfig>) -> Self {
+        match quant {
+            Some(q) => CompressorConfig::Stochastic(q),
+            None => CompressorConfig::FullPrecision,
+        }
+    }
+}
+
+impl CompressorConfig {
+    /// Parse a `--compressor` / `compressor=` value. Quantizing schemes
+    /// inherit `base` for their bit policy (so `--bits` composes with
+    /// `--compressor` regardless of flag order). Unknown schemes and
+    /// malformed parameters are typed errors naming the valid set — never
+    /// a silent default.
+    pub fn parse(text: &str, base: QuantConfig) -> Result<CompressorConfig, String> {
+        let mut parts = text.split(':');
+        let scheme = parts.next().unwrap_or("").trim();
+        let args: Vec<&str> = parts.map(|s| s.trim()).collect();
+        let no_args = |args: &[&str]| -> Result<(), String> {
+            if args.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("scheme {scheme:?} takes no parameters"))
+            }
+        };
+        match scheme {
+            "stochastic" | "quantized" => {
+                no_args(&args)?;
+                Ok(CompressorConfig::Stochastic(base))
+            }
+            "full" | "full-precision" | "none" => {
+                no_args(&args)?;
+                Ok(CompressorConfig::FullPrecision)
+            }
+            "censored" => {
+                if args.len() > 2 {
+                    return Err(format!(
+                        "censored takes at most tau0 and decay, got {} parameters",
+                        args.len()
+                    ));
+                }
+                let tau0 = match args.first() {
+                    Some(a) => a
+                        .parse::<f32>()
+                        .ok()
+                        .filter(|t| t.is_finite() && *t >= 0.0)
+                        .ok_or_else(|| format!("bad censoring tau0 {a:?} (want f32 >= 0)"))?,
+                    None => CENSOR_TAU0,
+                };
+                let decay = match args.get(1) {
+                    Some(a) => a
+                        .parse::<f32>()
+                        .ok()
+                        .filter(|d| *d > 0.0 && *d <= 1.0)
+                        .ok_or_else(|| {
+                            format!("bad censoring decay {a:?} (want f32 in (0, 1])")
+                        })?,
+                    None => CENSOR_DECAY,
+                };
+                Ok(CompressorConfig::Censored {
+                    quant: base,
+                    tau0,
+                    decay,
+                })
+            }
+            "topk" | "top-k" => {
+                if args.len() > 1 {
+                    return Err(format!(
+                        "topk takes at most one fraction, got {} parameters",
+                        args.len()
+                    ));
+                }
+                let frac = match args.first() {
+                    Some(a) => a
+                        .parse::<f32>()
+                        .ok()
+                        .filter(|f| *f > 0.0 && *f <= 1.0)
+                        .ok_or_else(|| {
+                            format!("bad top-k fraction {a:?} (want f32 in (0, 1])")
+                        })?,
+                    None => TOPK_FRAC,
+                };
+                Ok(CompressorConfig::TopK { frac })
+            }
+            other => Err(format!(
+                "unknown compression scheme {other:?}; valid schemes: {COMPRESSOR_SCHEMES}"
+            )),
+        }
+    }
+
+    /// Scheme name as spelled on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorConfig::FullPrecision => "full",
+            CompressorConfig::Stochastic(_) => "stochastic",
+            CompressorConfig::Censored { .. } => "censored",
+            CompressorConfig::TopK { .. } => "topk",
+        }
+    }
+
+    /// Bit policy of the quantizing schemes (`None` for full / top-k).
+    pub fn quant(&self) -> Option<QuantConfig> {
+        match self {
+            CompressorConfig::Stochastic(q) => Some(*q),
+            CompressorConfig::Censored { quant, .. } => Some(*quant),
+            CompressorConfig::FullPrecision | CompressorConfig::TopK { .. } => None,
+        }
+    }
+
+    /// Apply the historical `bits=` key: `0` ⇒ full precision; `b > 0`
+    /// sets the quantizer width (promoting full precision to stochastic).
+    /// Errors on top-k, whose payload carries no quantizer width.
+    pub fn with_bits(self, bits: u8) -> Result<CompressorConfig, String> {
+        if bits == 0 {
+            return Ok(CompressorConfig::FullPrecision);
+        }
+        match self {
+            CompressorConfig::FullPrecision => Ok(CompressorConfig::Stochastic(QuantConfig {
+                bits,
+                ..QuantConfig::default()
+            })),
+            CompressorConfig::Stochastic(mut q) => {
+                q.bits = bits;
+                Ok(CompressorConfig::Stochastic(q))
+            }
+            CompressorConfig::Censored {
+                mut quant,
+                tau0,
+                decay,
+            } => {
+                quant.bits = bits;
+                Ok(CompressorConfig::Censored { quant, tau0, decay })
+            }
+            CompressorConfig::TopK { .. } => Err(format!(
+                "bits={bits} applies to the quantizing compressors (stochastic, censored), \
+                 not topk"
+            )),
+        }
+    }
+
+    /// Apply the `adaptive_bits=` key to the quantizing schemes (promoting
+    /// full precision to stochastic, matching the pre-redesign behavior).
+    pub fn with_adaptive(self, adaptive: bool) -> Result<CompressorConfig, String> {
+        match self {
+            CompressorConfig::FullPrecision => Ok(CompressorConfig::Stochastic(QuantConfig {
+                adaptive,
+                ..QuantConfig::default()
+            })),
+            CompressorConfig::Stochastic(mut q) => {
+                q.adaptive = adaptive;
+                Ok(CompressorConfig::Stochastic(q))
+            }
+            CompressorConfig::Censored {
+                mut quant,
+                tau0,
+                decay,
+            } => {
+                quant.adaptive = adaptive;
+                Ok(CompressorConfig::Censored { quant, tau0, decay })
+            }
+            CompressorConfig::TopK { .. } => Err(
+                "adaptive_bits applies to the quantizing compressors (stochastic, censored), \
+                 not topk"
+                    .to_string(),
+            ),
+        }
+    }
+
+    /// Can `--use-xla` drive this scheme? The PJRT artifacts are validated
+    /// against the stochastic-quantizer and full-precision pipelines only
+    /// (`artifact_parity`); censored/top-k runs must use the native
+    /// backend.
+    pub fn xla_compatible(&self) -> bool {
+        matches!(
+            self,
+            CompressorConfig::Stochastic(_) | CompressorConfig::FullPrecision
+        )
+    }
+
+    /// Instantiate one sender-side compressor of this scheme for a
+    /// `dims`-dimensional model.
+    pub fn build(&self, dims: usize) -> CompressorKind {
+        match *self {
+            CompressorConfig::FullPrecision => {
+                CompressorKind::FullPrecision(FullPrecision::new(dims))
+            }
+            CompressorConfig::Stochastic(q) => {
+                CompressorKind::Stochastic(StochasticQuantizer::new(dims, q.policy()))
+            }
+            CompressorConfig::Censored { quant, tau0, decay } => CompressorKind::Censored(
+                Censored::new(StochasticQuantizer::new(dims, quant.policy()), tau0, decay),
+            ),
+            CompressorConfig::TopK { frac } => CompressorKind::TopK(TopK::new(dims, frac)),
+        }
+    }
+}
+
 /// GADMM-family engine configuration.
 #[derive(Clone, Debug)]
 pub struct GadmmConfig {
@@ -57,9 +297,10 @@ pub struct GadmmConfig {
     /// Dual damping α: 1.0 for convex Q-GADMM (eq. (18)); 0.01 for
     /// Q-SGADMM (Sec. V-B).
     pub dual_step: f32,
-    /// `Some` ⇒ quantized variant (Q-GADMM / Q-SGADMM); `None` ⇒ full
-    /// precision (GADMM / SGADMM).
-    pub quant: Option<QuantConfig>,
+    /// Per-link compression scheme (`compressor=` key / `--compressor`
+    /// flag). `Stochastic` is Q-GADMM / Q-SGADMM; `FullPrecision` is
+    /// GADMM / SGADMM; see [`CompressorConfig`] for the extended schemes.
+    pub compressor: CompressorConfig,
     /// Engine threads for the head/tail phase executor: `0` = auto (use
     /// every core once a phase carries enough work to amortize spawning),
     /// `1` = strictly sequential, `t > 1` = always run phases on `t`
@@ -75,7 +316,7 @@ impl Default for GadmmConfig {
             workers: 50,
             rho: 24.0,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::default(),
             threads: 0,
         }
     }
@@ -373,18 +614,20 @@ impl ExperimentConfig {
             }
             "bits" => {
                 let bits: u8 = value.parse().map_err(|_| bad("u8"))?;
-                if bits == 0 {
-                    self.gadmm.quant = None; // bits=0 means full precision
-                } else {
-                    let mut q = self.gadmm.quant.unwrap_or_default();
-                    q.bits = bits;
-                    self.gadmm.quant = Some(q);
-                }
+                // bits=0 means full precision; otherwise set the quantizer
+                // width of the current scheme.
+                self.gadmm.compressor =
+                    self.gadmm.compressor.with_bits(bits).map_err(|why| bad(&why))?;
             }
             "adaptive_bits" | "adaptive-bits" => {
-                let mut q = self.gadmm.quant.unwrap_or_default();
-                q.adaptive = value.parse().map_err(|_| bad("bool"))?;
-                self.gadmm.quant = Some(q);
+                let adaptive: bool = value.parse().map_err(|_| bad("bool"))?;
+                self.gadmm.compressor =
+                    self.gadmm.compressor.with_adaptive(adaptive).map_err(|why| bad(&why))?;
+            }
+            "compressor" | "comp" | "scheme" => {
+                let base = self.gadmm.compressor.quant().unwrap_or_default();
+                self.gadmm.compressor =
+                    CompressorConfig::parse(value, base).map_err(|why| bad(&why))?;
             }
             "iterations" | "iters" => {
                 self.iterations = value.parse().map_err(|_| bad("u64"))?
@@ -588,7 +831,7 @@ mod tests {
         cfg.apply_kv(&kv).unwrap();
         assert_eq!(cfg.gadmm.workers, 10);
         assert_eq!(cfg.gadmm.rho, 12.5);
-        assert_eq!(cfg.gadmm.quant.unwrap().bits, 2);
+        assert_eq!(cfg.gadmm.compressor.quant().unwrap().bits, 2);
         assert_eq!(cfg.results_dir, "out/run1");
     }
 
@@ -598,7 +841,214 @@ mod tests {
         let mut kv = KvMap::new();
         kv.set("bits", "0");
         cfg.apply_kv(&kv).unwrap();
-        assert!(cfg.gadmm.quant.is_none());
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::FullPrecision);
+        // And bits=N promotes it back to stochastic.
+        let mut kv = KvMap::new();
+        kv.set("bits", "4");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor.quant().unwrap().bits, 4);
+        assert_eq!(cfg.gadmm.compressor.name(), "stochastic");
+    }
+
+    #[test]
+    fn compressor_key_parses_every_scheme() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("compressor", "full");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::FullPrecision);
+
+        let mut kv = KvMap::new();
+        kv.set("compressor", "stochastic");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(
+            cfg.gadmm.compressor,
+            CompressorConfig::Stochastic(QuantConfig::default())
+        );
+
+        let mut kv = KvMap::new();
+        kv.set("compressor", "censored:0.1:0.99");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(
+            cfg.gadmm.compressor,
+            CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: 0.1,
+                decay: 0.99
+            }
+        );
+
+        let mut kv = KvMap::new();
+        kv.set("compressor", "topk:0.05");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::TopK { frac: 0.05 });
+
+        // Defaults when parameters are omitted.
+        let mut kv = KvMap::new();
+        kv.set("compressor", "censored");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(
+            cfg.gadmm.compressor,
+            CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: CENSOR_TAU0,
+                decay: CENSOR_DECAY
+            }
+        );
+        let mut kv = KvMap::new();
+        kv.set("compressor", "topk");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::TopK { frac: TOPK_FRAC });
+    }
+
+    #[test]
+    fn compressor_bits_compose_regardless_of_order() {
+        // A KvMap applies keys alphabetically (bits before compressor), and
+        // the CLI applies its overrides in a second pass — both orders must
+        // land on the same config.
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("bits", "8");
+        kv.set("compressor", "censored:0.2");
+        cfg.apply_kv(&kv).unwrap();
+        match cfg.gadmm.compressor {
+            CompressorConfig::Censored { quant, tau0, .. } => {
+                assert_eq!(quant.bits, 8);
+                assert_eq!(tau0, 0.2);
+            }
+            other => panic!("expected censored, got {other:?}"),
+        }
+        // Second pass: bits applied after the scheme is already censored.
+        let mut kv = KvMap::new();
+        kv.set("bits", "3");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor.quant().unwrap().bits, 3);
+        assert_eq!(cfg.gadmm.compressor.name(), "censored");
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_typed_error_naming_the_valid_set() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("compressor", "middle-out");
+        let err = cfg.apply_kv(&kv).unwrap_err();
+        match &err {
+            ConfigError::BadValue { key, value, why } => {
+                assert_eq!(key, "compressor");
+                assert_eq!(value, "middle-out");
+                assert!(why.contains("middle-out"), "must name the unknown scheme: {why}");
+                assert!(
+                    why.contains("stochastic") && why.contains("censored") && why.contains("topk"),
+                    "must list the valid schemes: {why}"
+                );
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        // The config is left untouched — no silent default.
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::default());
+    }
+
+    #[test]
+    fn malformed_scheme_parameters_are_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        for bad in [
+            "topk:0",
+            "topk:1.5",
+            "topk:lots",
+            "topk:0.1:2",
+            "censored:-1",
+            "censored:0.1:0",
+            "censored:0.1:1.5",
+            "censored:a:b",
+            "censored:0.1:0.9:7",
+            "full:3",
+            "stochastic:2",
+        ] {
+            let mut kv = KvMap::new();
+            kv.set("compressor", bad);
+            assert!(
+                matches!(cfg.apply_kv(&kv), Err(ConfigError::BadValue { .. })),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn bits_on_topk_is_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("compressor", "topk");
+        cfg.apply_kv(&kv).unwrap();
+        let mut kv = KvMap::new();
+        kv.set("bits", "2");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        let mut kv = KvMap::new();
+        kv.set("adaptive_bits", "true");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        // bits=0 (full precision) is always legal.
+        let mut kv = KvMap::new();
+        kv.set("bits", "0");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::FullPrecision);
+    }
+
+    #[test]
+    fn xla_compatibility_is_scheme_gated() {
+        assert!(CompressorConfig::default().xla_compatible());
+        assert!(CompressorConfig::FullPrecision.xla_compatible());
+        assert!(!CompressorConfig::TopK { frac: 0.1 }.xla_compatible());
+        assert!(!CompressorConfig::Censored {
+            quant: QuantConfig::default(),
+            tau0: 0.1,
+            decay: 0.99
+        }
+        .xla_compatible());
+    }
+
+    #[test]
+    fn compressor_builds_matching_kind() {
+        use crate::quant::Compressor as _;
+        let d = 8;
+        for (cfg, name) in [
+            (CompressorConfig::FullPrecision, "full"),
+            (CompressorConfig::default(), "stochastic"),
+            (
+                CompressorConfig::Censored {
+                    quant: QuantConfig::default(),
+                    tau0: 0.1,
+                    decay: 0.99,
+                },
+                "censored",
+            ),
+            (CompressorConfig::TopK { frac: 0.25 }, "topk"),
+        ] {
+            let kind = cfg.build(d);
+            assert_eq!(kind.name(), name);
+            assert_eq!(kind.dims(), d);
+            assert_eq!(cfg.name(), name);
+        }
+    }
+
+    #[test]
+    fn legacy_quant_option_conversion() {
+        assert_eq!(
+            CompressorConfig::from(None::<QuantConfig>),
+            CompressorConfig::FullPrecision
+        );
+        let q = QuantConfig {
+            bits: 8,
+            ..QuantConfig::default()
+        };
+        assert_eq!(
+            CompressorConfig::from(Some(q)),
+            CompressorConfig::Stochastic(q)
+        );
     }
 
     #[test]

@@ -28,14 +28,17 @@
 //! and each phase can run its positions on scoped threads when the
 //! problem hands out per-worker solvers ([`LocalProblem::split_workers`]).
 //! The schedule is bit-for-bit irrelevant: RNGs are forked per position at
-//! construction, quantizer state is per position, writes within a phase
+//! construction, compressor state is per position, writes within a phase
 //! are disjoint, and bits are charged on the main thread in position order
 //! (`tests/engine_parallel_equivalence.rs` asserts exact equality).
-//! The hot path allocates nothing per broadcast or per solve:
-//! [`StochasticQuantizer::quantize_into`] writes the reconstructed mirror
-//! straight into `view[p]` with scratch-buffer levels, and the neighbor
-//! context is assembled in a stack-inline [`LinkBuf`] (degree ≤ 4 — line,
-//! ring, grid — never touches the heap).
+//! The hot path allocates nothing per broadcast or per solve: every
+//! compression scheme goes through [`Compressor::compress_into`]
+//! (enum-dispatched [`CompressorKind`], scratch buffers, fused mirror →
+//! view write), and the neighbor context is assembled in a stack-inline
+//! [`LinkBuf`] (degree ≤ 4 — line, ring, grid — never touches the heap).
+//! Censoring compressors may skip a round entirely
+//! ([`crate::quant::Transmission::Censored`]): neighbors reuse their
+//! mirrors and no transmission is charged.
 
 use super::residuals::{ResidualPoint, ResidualTracker};
 use crate::comm::CommStats;
@@ -44,7 +47,7 @@ use crate::metrics::recorder::{CurvePoint, Recorder};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink, WorkerSolver};
 use crate::net::channel::{transmission_energy, ChannelParams};
 use crate::net::topology::Topology;
-use crate::quant::{self, BitPolicy, StochasticQuantizer};
+use crate::quant::{CompressOutcome, Compressor, CompressorKind};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -53,28 +56,6 @@ use crate::util::timer::Stopwatch;
 /// microseconds, which dominates small solves (the paper's d = 6 linreg)
 /// and would *slow down* the unit-scale sweeps.
 const AUTO_PARALLEL_MIN_PHASE_COORDS: usize = 32_768;
-
-/// Quantize (or copy, full precision) `theta` into `view` and return the
-/// broadcast payload bits. The *single* implementation shared by the
-/// sequential and parallel schedules — the engine's bit-for-bit
-/// equivalence guarantee depends on both paths running exactly this code.
-fn broadcast_into(
-    quant: Option<&mut StochasticQuantizer>,
-    rng: &mut Rng,
-    theta: &[f32],
-    view: &mut [f32],
-) -> u64 {
-    match quant {
-        Some(q) => {
-            let (bits, _radius) = q.quantize_into(theta, rng, view);
-            quant::payload_bits(bits, theta.len())
-        }
-        None => {
-            view.copy_from_slice(theta);
-            32 * theta.len() as u64
-        }
-    }
-}
 
 /// Wireless-energy accounting context (omit ⇒ bits are counted, energy 0).
 #[derive(Clone, Debug)]
@@ -147,7 +128,10 @@ pub struct GadmmEngine<P: LocalProblem> {
     heads: Vec<usize>,
     /// Tail positions in ascending order (phase 2's schedule).
     tails: Vec<usize>,
-    quantizers: Option<Vec<StochasticQuantizer>>,
+    /// One per-link compressor per position (scheme from
+    /// [`GadmmConfig::compressor`], enum-dispatched so the broadcast hot
+    /// path stays monomorphized and allocation-free).
+    compressors: Vec<CompressorKind>,
     rngs: Vec<Rng>,
     iteration: u64,
     comm: CommStats,
@@ -169,9 +153,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         let d = problem.dims();
         let mut root = Rng::seed_from_u64(seed);
         let rngs = (0..n).map(|p| root.fork(p as u64)).collect();
-        let quantizers = cfg
-            .quant
-            .map(|q| (0..n).map(|_| StochasticQuantizer::new(d, q.policy())).collect());
+        let compressors = (0..n).map(|_| cfg.compressor.build(d)).collect();
         let heads: Vec<usize> = (0..n).filter(|&p| topo.is_head(p)).collect();
         let tails: Vec<usize> = (0..n).filter(|&p| !topo.is_head(p)).collect();
         let edge_count = topo.edge_count();
@@ -183,7 +165,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
             view: vec![vec![0.0; d]; n],
             heads,
             tails,
-            quantizers,
+            compressors,
             rngs,
             iteration: 0,
             comm: CommStats::default(),
@@ -208,9 +190,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         for p in 0..self.topo.len() {
             self.theta[p].copy_from_slice(theta0);
             self.view[p].copy_from_slice(theta0);
-            if let Some(qs) = self.quantizers.as_mut() {
-                qs[p].reset_to(theta0);
-            }
+            self.compressors[p].reset_to(theta0);
         }
     }
 
@@ -370,36 +350,47 @@ impl<P: LocalProblem> GadmmEngine<P> {
         self.theta[p] = out;
     }
 
-    /// Broadcast position `p`'s update to its neighbors: quantize (or copy)
-    /// into `view[p]` and charge one transmission. The quantized path goes
-    /// through [`StochasticQuantizer::quantize_into`] — mirror and view are
-    /// written in one fused pass, with no intermediate `QuantizedMsg` and
-    /// no per-broadcast allocation.
+    /// Broadcast position `p`'s update to its neighbors: compress into
+    /// `view[p]` and charge one transmission (censored rounds charge
+    /// nothing). Every scheme goes through
+    /// [`Compressor::compress_into`] — mirror and view are written in one
+    /// fused pass, with no intermediate payload and no per-broadcast
+    /// allocation.
     fn broadcast_position(&mut self, p: usize) {
-        let quant = self.quantizers.as_mut().map(|qs| &mut qs[p]);
-        let timed = quant.is_some();
+        // Full-precision copies were never charged to the compute timer
+        // (they are not compression work); every other scheme is.
+        let timed = !matches!(self.compressors[p], CompressorKind::FullPrecision(_));
         if timed {
             self.compute.start();
         }
-        let bits = broadcast_into(quant, &mut self.rngs[p], &self.theta[p], &mut self.view[p]);
+        let outcome = self.compressors[p].compress_into(
+            &self.theta[p],
+            &mut self.rngs[p],
+            &mut self.view[p],
+        );
         if timed {
             self.compute.stop();
         }
-        self.record_broadcast(p, bits);
+        self.record_broadcast(p, outcome);
     }
 
-    /// Charge one broadcast from position `p` (bit + energy accounting).
-    fn record_broadcast(&mut self, p: usize, bits: u64) {
+    /// Charge one broadcast from position `p` (bit + energy accounting);
+    /// censored rounds are tallied but never charged.
+    fn record_broadcast(&mut self, p: usize, outcome: CompressOutcome) {
+        if !outcome.sent() {
+            self.comm.record_censored();
+            return;
+        }
         let energy = match &self.energy {
             Some(e) => transmission_energy(
                 &e.params,
                 e.per_worker_bw,
                 e.broadcast_dist[p],
-                bits,
+                outcome.bits,
             ),
             None => 0.0,
         };
-        self.comm.record(bits, energy);
+        self.comm.record(outcome.bits, energy);
     }
 
     /// Run one head/tail phase on `threads` scoped threads. Returns `false`
@@ -419,9 +410,9 @@ impl<P: LocalProblem> GadmmEngine<P> {
             solver: &'a mut dyn WorkerSolver,
             theta: Vec<f32>,
             view: Vec<f32>,
-            quant: Option<StochasticQuantizer>,
+            comp: CompressorKind,
             rng: Rng,
-            bits: u64,
+            outcome: CompressOutcome,
         }
 
         let Some(solvers) = self.problem.split_workers() else {
@@ -445,11 +436,13 @@ impl<P: LocalProblem> GadmmEngine<P> {
                     .expect("two positions mapped to one worker"),
                 theta: std::mem::take(&mut self.theta[p]),
                 view: std::mem::take(&mut self.view[p]),
-                quant: self.quantizers.as_mut().map(|qs| {
-                    std::mem::replace(&mut qs[p], StochasticQuantizer::new(0, BitPolicy::Fixed(1)))
-                }),
+                comp: std::mem::replace(&mut self.compressors[p], CompressorKind::placeholder()),
                 rng: std::mem::replace(&mut self.rngs[p], Rng::seed_from_u64(0)),
-                bits: 0,
+                outcome: CompressOutcome {
+                    bits: 0,
+                    radius: 0.0,
+                    flag: crate::quant::Transmission::Censored,
+                },
             });
         }
 
@@ -476,12 +469,8 @@ impl<P: LocalProblem> GadmmEngine<P> {
                         }
                         let ctx = buf.ctx(rho);
                         job.solver.solve(&ctx, &mut job.theta);
-                        job.bits = broadcast_into(
-                            job.quant.as_mut(),
-                            &mut job.rng,
-                            &job.theta,
-                            &mut job.view,
-                        );
+                        job.outcome =
+                            job.comp.compress_into(&job.theta, &mut job.rng, &mut job.view);
                     }
                 });
             }
@@ -491,19 +480,17 @@ impl<P: LocalProblem> GadmmEngine<P> {
         // Restore per-position state first (the jobs still hold the
         // per-worker solver borrows), then charge broadcasts in position
         // order so the accounting matches the sequential schedule exactly.
-        let mut charges: Vec<(usize, u64)> = Vec::with_capacity(jobs.len());
+        let mut charges: Vec<(usize, CompressOutcome)> = Vec::with_capacity(jobs.len());
         for job in jobs {
             let p = job.pos;
             self.theta[p] = job.theta;
             self.view[p] = job.view;
-            if let Some(q) = job.quant {
-                self.quantizers.as_mut().expect("taken from Some")[p] = q;
-            }
+            self.compressors[p] = job.comp;
             self.rngs[p] = job.rng;
-            charges.push((p, job.bits));
+            charges.push((p, job.outcome));
         }
-        for (p, bits) in charges {
-            self.record_broadcast(p, bits);
+        for (p, outcome) in charges {
+            self.record_broadcast(p, outcome);
         }
         true
     }
@@ -576,7 +563,7 @@ mod tests {
             workers,
             rho,
             dual_step: 1.0,
-            quant,
+            compressor: quant.into(),
             threads,
         };
         let engine = GadmmEngine::new(cfg, problem, topo, 99);
@@ -648,6 +635,67 @@ mod tests {
         assert_eq!(eng_q.comm().bits, 4 * (2 * d + 64));
         assert_eq!(eng_f.comm().bits, 4 * 32 * d);
         assert_eq!(eng_q.comm().transmissions, 4);
+    }
+
+    #[test]
+    fn censored_rounds_charge_nothing() {
+        // A censoring threshold far above any model change with decay 1.0
+        // censors every round: views stay anchored, zero transmissions and
+        // zero bits are charged, and every skip is tallied.
+        let workers = 4;
+        let spec = LinRegSpec {
+            samples: 800,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 21);
+        let partition = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &partition, 1600.0);
+        let d = problem.dims();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: crate::config::CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: 1e30,
+                decay: 1.0,
+            },
+            threads: 1,
+        };
+        let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 7);
+        for _ in 0..3 {
+            engine.iterate();
+        }
+        assert_eq!(engine.comm().transmissions, 0);
+        assert_eq!(engine.comm().bits, 0);
+        assert_eq!(engine.comm().censored, 4 * 3);
+        for p in 0..workers {
+            assert_eq!(engine.view_at(p), vec![0.0f32; d].as_slice());
+        }
+    }
+
+    #[test]
+    fn topk_engine_accounts_sparse_bits() {
+        let workers = 4;
+        let spec = LinRegSpec {
+            samples: 800,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 21);
+        let partition = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &partition, 1600.0);
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: crate::config::CompressorConfig::TopK { frac: 0.5 },
+            threads: 1,
+        };
+        let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 7);
+        engine.iterate();
+        // d = 6 ⇒ k = 3 ⇒ 32 + 3·(16 + 32) bits per broadcast.
+        assert_eq!(engine.comm().bits, 4 * (32 + 3 * 48));
+        assert_eq!(engine.comm().transmissions, 4);
     }
 
     #[test]

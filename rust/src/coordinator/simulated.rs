@@ -19,6 +19,15 @@
 //! 3. **Dual update** — local, per incident link, from each worker's own
 //!    view and mirrors, exactly as in the threaded runtime.
 //!
+//! **Censoring vs loss:** a censoring compressor
+//! ([`crate::quant::compress::Censored`]) may skip a worker's round — then
+//! *no* frames are put on any link, neighbors deliberately reuse their
+//! mirrors (sender and receivers agree), and the skip is tallied in
+//! [`CommStats::censored`] / [`TraceEvent::Censored`]. A frame *lost* at
+//! the ARQ cap is the opposite case: the sender's mirror advanced, the
+//! receiver's did not — that involuntary divergence is what the stale
+//! counters measure, and the two are never conflated.
+//!
 //! **Fault injection:** scheduled worker dropouts remove a worker between
 //! iterations; the survivors are re-stitched into a
 //! [`Topology::nearest_neighbor_chain`] over their deployment points
@@ -36,13 +45,13 @@
 //! properties are pinned by the `sim_determinism` integration suite.
 
 use super::engine::RunOptions;
-use crate::comm::{wire, CommStats, Message, Payload};
+use crate::comm::{wire, CommStats, Message};
 use crate::config::{Dropout, GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink};
 use crate::net::geometry::Point;
 use crate::net::topology::Topology;
-use crate::quant::{Mirror, StochasticQuantizer};
+use crate::quant::{Compressor, CompressorKind, Mirror};
 use crate::sim::{ComputeModel, EventQueue, SimNet, SimTime};
 use crate::sim::link::NetStats;
 use crate::util::rng::Rng;
@@ -73,6 +82,15 @@ pub enum TraceEvent {
         from: usize,
         to: usize,
         attempts: u32,
+    },
+    /// A worker's compressor censored its round: *no* frames were put on
+    /// any link and every neighbor deliberately reuses its mirror —
+    /// distinct from [`TraceEvent::Abandoned`], where the mirror goes
+    /// stale involuntarily against an advanced sender mirror.
+    Censored {
+        t_ns: u64,
+        iteration: u64,
+        worker: usize,
     },
     /// A scheduled worker failure fired.
     Dropout { iteration: u64, worker: usize },
@@ -122,7 +140,7 @@ struct WorkerState {
     links: Vec<SimLink>,
     /// What this worker's neighbors believe its model to be.
     own_view: Vec<f32>,
-    quantizer: Option<StochasticQuantizer>,
+    compressor: CompressorKind,
     /// Model randomness — forked exactly like the engine's per-position
     /// streams so loss-free runs are bit-identical.
     model_rng: Rng,
@@ -209,7 +227,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 theta: vec![0.0; d],
                 links: Vec::new(),
                 own_view: vec![0.0; d],
-                quantizer: cfg.quant.map(|q| StochasticQuantizer::new(d, q.policy())),
+                compressor: cfg.compressor.build(d),
                 model_rng: rng.expect("topology covers every worker"),
                 compute_rng: sim_root.fork(w as u64),
                 compute_scale: sim.compute_scale(w, n),
@@ -282,9 +300,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             let ws = &mut self.workers[w];
             ws.theta.copy_from_slice(theta0);
             ws.own_view.copy_from_slice(theta0);
-            if let Some(q) = ws.quantizer.as_mut() {
-                q.reset_to(theta0);
-            }
+            ws.compressor.reset_to(theta0);
             for l in ws.links.iter_mut() {
                 l.mirror.reset_to(theta0);
             }
@@ -404,9 +420,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             let theta = self.workers[w].theta.clone();
             {
                 let ws = &mut self.workers[w];
-                if let Some(q) = ws.quantizer.as_mut() {
-                    q.reset_to(&theta);
-                }
+                ws.compressor.reset_to(&theta);
                 ws.own_view.copy_from_slice(&theta);
             }
             self.comm.record(32 * d as u64, 0.0);
@@ -521,24 +535,20 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             self.problem.solve(w, &ctx, &mut ws.theta);
         }
 
-        let (payload, bits) = {
+        let (payload, outcome) = {
             let ws = &mut self.workers[w];
-            match ws.quantizer.as_mut() {
-                Some(q) => {
-                    let msg = q.quantize(&ws.theta, &mut ws.model_rng);
-                    ws.own_view.copy_from_slice(q.theta_hat());
-                    let bits = msg.payload_bits();
-                    (Payload::Quantized(msg), bits)
-                }
-                None => {
-                    ws.own_view.copy_from_slice(&ws.theta);
-                    (Payload::Full(ws.theta.clone()), 32 * ws.theta.len() as u64)
-                }
-            }
+            // θ, the rng, and the view are disjoint fields, so the fused
+            // compress borrows them side by side.
+            let WorkerState {
+                compressor,
+                theta,
+                model_rng,
+                own_view,
+                ..
+            } = ws;
+            let outcome = compressor.compress_into(theta, model_rng, own_view);
+            (ws.compressor.last_payload(), outcome)
         };
-        // One broadcast = one transmission (paper accounting), regardless
-        // of how many link-layer attempts the frames below take.
-        self.comm.record(bits, 0.0);
         if self.sim.record_trace {
             self.trace.push(TraceEvent::Solve {
                 t_ns: self.now.as_nanos(),
@@ -546,6 +556,23 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 worker: w,
             });
         }
+        if !outcome.sent() {
+            // Censored round: nothing is put on any link — receivers
+            // deliberately reuse their mirrors (NOT the stale/lost case,
+            // which only the ARQ abandonment path below produces).
+            self.comm.record_censored();
+            if self.sim.record_trace {
+                self.trace.push(TraceEvent::Censored {
+                    t_ns: self.now.as_nanos(),
+                    iteration: iter,
+                    worker: w,
+                });
+            }
+            return;
+        }
+        // One broadcast = one transmission (paper accounting), regardless
+        // of how many link-layer attempts the frames below take.
+        self.comm.record(outcome.bits, 0.0);
 
         let frame = wire::encode_frame(&Message {
             from: w,
@@ -612,11 +639,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let Some(link) = ws.links.iter_mut().find(|l| l.peer == from) else {
             return;
         };
-        match msg.payload {
-            Payload::Quantized(q) => link.mirror.apply(&q),
-            Payload::Full(v) => link.mirror.reset_to(&v),
-            Payload::Stop => {}
-        }
+        link.mirror.apply_payload(&msg.payload);
         ready[to] = ready[to].max(t);
         if self.sim.record_trace {
             self.trace.push(TraceEvent::Delivered {
@@ -726,7 +749,7 @@ mod tests {
             workers,
             rho,
             dual_step: 1.0,
-            quant,
+            compressor: quant.into(),
             threads: 0,
         };
         let engine = SimulatedGadmm::new(
@@ -893,6 +916,60 @@ mod tests {
         let last = report.recorder.points.last().unwrap();
         assert!(last.value <= target);
         assert_eq!(report.recorder.points.len(), report.retransmissions.points.len());
+    }
+
+    #[test]
+    fn censored_rounds_are_not_stale_rounds() {
+        use crate::config::CompressorConfig;
+
+        // Everything censored (τ₀ huge, decay 1) on an ideal network: no
+        // frames at all, so nothing is delivered, nothing retransmitted,
+        // nothing *stale* — the censored tally alone accounts for the
+        // silence, and the run keeps iterating.
+        let workers = 4;
+        let spec = LinRegSpec {
+            samples: 800,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 21);
+        let partition = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &partition, 1600.0);
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: 1e30,
+                decay: 1.0,
+            },
+            threads: 0,
+        };
+        let mut sim_cfg = SimConfig::ideal();
+        sim_cfg.record_trace = true;
+        let mut sim = SimulatedGadmm::new(
+            cfg,
+            sim_cfg,
+            problem,
+            Topology::line(workers),
+            collinear(workers, 50.0),
+            5,
+        );
+        for _ in 0..3 {
+            assert!(sim.iterate());
+        }
+        assert_eq!(sim.comm().transmissions, 0);
+        assert_eq!(sim.comm().bits, 0);
+        assert_eq!(sim.comm().censored, 4 * 3);
+        assert_eq!(sim.net_stats().delivered, 0);
+        assert_eq!(sim.net_stats().wire_bytes, 0);
+        assert_eq!(sim.stale_rounds(), 0, "censored must not count as stale");
+        let censored_events = sim
+            .trace
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Censored { .. }))
+            .count();
+        assert_eq!(censored_events, 12);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
 use crate::model::{LinkBuf, NeighborLink, WorkerSolver};
 use crate::net::topology::Topology;
-use crate::quant::{Mirror, StochasticQuantizer};
+use crate::quant::{Compressor, Mirror};
 use crate::util::rng::Rng;
 use std::sync::mpsc::{channel, Sender};
 use std::time::Duration;
@@ -52,6 +52,8 @@ struct WorkerReport {
     theta: Vec<f32>,
     objective: f64,
     bits: u64,
+    /// `false` when this round's broadcast was censored (no channel use).
+    sent: bool,
 }
 
 /// Outcome of a threaded run.
@@ -166,13 +168,19 @@ pub fn run_threaded_on(
         let batch = pending.remove(&k).expect("just completed");
         let mut objective_sum = 0.0f64;
         let mut bits_this_iter = 0u64;
+        let mut sent_this_iter = 0u64;
         for rep in batch {
             objective_sum += rep.objective;
             bits_this_iter += rep.bits;
+            if rep.sent {
+                sent_this_iter += 1;
+            } else {
+                comm.record_censored();
+            }
             thetas[rep.pos] = rep.theta;
         }
-        comm.record(bits_this_iter, 0.0);
-        comm.transmissions += n as u64 - 1; // record() charged 1; n total
+        comm.bits += bits_this_iter;
+        comm.transmissions += sent_this_iter;
         let value = metric(objective_sum, &thetas);
         recorder.push(CurvePoint {
             iteration: k,
@@ -214,9 +222,7 @@ fn worker_main(
     // One dual + one mirror per incident link, in link order.
     let mut lambdas: Vec<Vec<f32>> = (0..deg).map(|_| vec![0.0f32; d]).collect();
     let mut mirrors: Vec<Mirror> = (0..deg).map(|_| Mirror::new(d)).collect();
-    let mut quantizer = cfg
-        .quant
-        .map(|q| StochasticQuantizer::new(d, q.policy()));
+    let mut compressor = cfg.compressor.build(d);
     // Own view (what neighbors believe about us) — needed for the dual
     // update, which must use θ̂ on *both* ends of each link.
     let mut own_view = vec![0.0f32; d];
@@ -245,37 +251,22 @@ fn worker_main(
         }
 
         // Broadcast the update (one transmission reaches every neighbor).
-        let bits;
-        match quantizer.as_mut() {
-            Some(q) => {
-                let msg = q.quantize(&theta, &mut rng);
-                bits = msg.payload_bits();
-                own_view.copy_from_slice(q.theta_hat());
-                for l in &links {
-                    endpoint.send(
-                        l.peer,
-                        Message {
-                            from: pos,
-                            round: k,
-                            payload: Payload::Quantized(msg.clone()),
-                        },
-                    )?;
-                }
-            }
-            None => {
-                bits = 32 * d as u64;
-                own_view.copy_from_slice(&theta);
-                for l in &links {
-                    endpoint.send(
-                        l.peer,
-                        Message {
-                            from: pos,
-                            round: k,
-                            payload: Payload::Full(theta.clone()),
-                        },
-                    )?;
-                }
-            }
+        // A censored round still sends the 0-bit `Payload::Censored`
+        // marker through the mailboxes: the in-process transport doubles
+        // as the phase barrier, so receivers must be unblocked even when
+        // the mirror is deliberately reused.
+        let outcome = compressor.compress_into(&theta, &mut rng, &mut own_view);
+        let bits = outcome.bits;
+        let payload = compressor.last_payload();
+        for l in &links {
+            endpoint.send(
+                l.peer,
+                Message {
+                    from: pos,
+                    round: k,
+                    payload: payload.clone(),
+                },
+            )?;
         }
 
         // Heads receive the tails' iteration-k broadcasts after sending.
@@ -311,13 +302,15 @@ fn worker_main(
                 theta: theta.clone(),
                 objective: solver.objective(&theta),
                 bits,
+                sent: outcome.sent(),
             })
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
     }
     Ok(())
 }
 
-/// Apply a neighbor broadcast to the mirror of the link it arrived on.
+/// Apply a neighbor broadcast to the mirror of the link it arrived on
+/// (`Censored` markers deliberately leave the mirror untouched).
 fn apply_neighbor(
     msg: Message,
     pos: usize,
@@ -328,9 +321,8 @@ fn apply_neighbor(
         anyhow::bail!("worker {pos} got message from non-neighbor {}", msg.from);
     };
     match msg.payload {
-        Payload::Quantized(q) => mirrors[i].apply(&q),
-        Payload::Full(v) => mirrors[i].reset_to(&v),
         Payload::Stop => anyhow::bail!("unexpected stop"),
+        other => mirrors[i].apply_payload(&other),
     }
     Ok(())
 }
@@ -338,7 +330,7 @@ fn apply_neighbor(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::QuantConfig;
+    use crate::config::{CompressorConfig, QuantConfig};
     use crate::data::linreg::{LinRegDataset, LinRegSpec};
     use crate::data::partition::Partition;
     use crate::model::linreg::LinRegProblem;
@@ -368,7 +360,7 @@ mod tests {
             workers,
             rho: 1600.0,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads: 0,
         };
         let report = run_threaded(&cfg, boxed, 600, 7, |obj_sum, _| {
@@ -392,7 +384,7 @@ mod tests {
             workers,
             rho: 1600.0,
             dual_step: 1.0,
-            quant: None,
+            compressor: CompressorConfig::FullPrecision,
             threads: 0,
         };
         let report = run_threaded(&cfg, boxed, 500, 3, |obj_sum, _| {
@@ -416,7 +408,7 @@ mod tests {
             workers,
             rho: 1600.0,
             dual_step: 1.0,
-            quant: None,
+            compressor: CompressorConfig::FullPrecision,
             threads: 0,
         };
         let topo = Topology::star(workers);

@@ -6,7 +6,7 @@
 //! accounting (fig2/fig3) cannot make.
 
 use super::helpers::{LinregWorld, LINREG_RHO};
-use crate::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
 use crate::coordinator::engine::RunOptions;
 use crate::coordinator::simulated::{SimReport, SimulatedGadmm};
 use crate::data::partition::Partition;
@@ -21,7 +21,7 @@ pub fn run_sim_linreg(
     name: &str,
     world: &LinregWorld,
     cfg: &ExperimentConfig,
-    quant: Option<QuantConfig>,
+    compressor: CompressorConfig,
     loss: f64,
     iterations: u64,
     target: f64,
@@ -31,7 +31,7 @@ pub fn run_sim_linreg(
         workers: cfg.gadmm.workers,
         rho: LINREG_RHO,
         dual_step: 1.0,
-        quant,
+        compressor,
         threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
@@ -79,16 +79,16 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
     rep.meta("target", c.loss_target);
     rep.meta("link_rate_bps", c.sim.link_rate_bps);
     for &loss in losses {
-        for (algo, quant) in [
-            ("Q-GADMM", Some(QuantConfig::default())),
-            ("GADMM", None),
+        for (algo, compressor) in [
+            ("Q-GADMM", CompressorConfig::Stochastic(QuantConfig::default())),
+            ("GADMM", CompressorConfig::FullPrecision),
         ] {
             let name = format!("{algo} loss={loss:.2}");
             let r = run_sim_linreg(
                 &name,
                 &world,
                 &c,
-                quant,
+                compressor,
                 loss,
                 iters,
                 c.loss_target,

@@ -13,7 +13,7 @@
 //! measurable, which the chain-only harness structurally could not.
 
 use super::helpers::{LinregWorld, LINREG_RHO};
-use crate::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
 use crate::coordinator::engine::RunOptions;
 use crate::coordinator::simulated::SimulatedGadmm;
 use crate::data::partition::Partition;
@@ -67,7 +67,7 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
             workers: n,
             rho: LINREG_RHO,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads: c.gadmm.threads,
         };
         let partition = Partition::contiguous(world.data.samples(), n);

@@ -93,7 +93,7 @@ pub fn run_gadmm_linreg(
         workers: cfg.gadmm.workers,
         rho,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);
@@ -239,7 +239,7 @@ pub fn run_gadmm_dnn(
         workers,
         rho,
         dual_step: DNN_ALPHA,
-        quant,
+        compressor: quant.into(),
         threads: cfg.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.train_len(), workers);

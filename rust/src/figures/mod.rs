@@ -11,6 +11,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_comp;
 pub mod fig_sim;
 pub mod fig_topo;
 pub mod helpers;
@@ -18,11 +19,13 @@ pub mod thm2;
 
 use crate::config::ExperimentConfig;
 
-/// All known figure ids, in paper order (`fig_sim` and `fig_topo` extend
-/// the paper with the discrete-event simulator's loss-vs-time-to-target
-/// panel and the bipartite-topology sweep).
+/// All known figure ids, in paper order (`fig_sim`, `fig_topo`, and
+/// `fig_comp` extend the paper with the discrete-event simulator's
+/// loss-vs-time-to-target panel, the bipartite-topology sweep, and the
+/// compression-scheme bits-to-target sweep).
 pub const ALL_FIGS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2", "fig_sim", "fig_topo",
+    "fig_comp",
 ];
 
 /// Dispatch a figure id (or `all`).
@@ -38,6 +41,7 @@ pub fn run(fig: &str, cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()>
         "thm2" => thm2::run(cfg, quick),
         "fig_sim" => fig_sim::run(cfg, quick),
         "fig_topo" => fig_topo::run(cfg, quick),
+        "fig_comp" => fig_comp::run(cfg, quick),
         "all" => {
             for f in ALL_FIGS {
                 run(f, cfg, quick)?;

@@ -22,7 +22,7 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
         workers: c.gadmm.workers,
         rho: LINREG_RHO,
         dual_step: 1.0,
-        quant: q2(),
+        compressor: q2().into(),
         threads: c.gadmm.threads,
     };
     let partition = Partition::contiguous(world.data.samples(), gcfg.workers);

@@ -7,8 +7,10 @@
 //!
 //! * **L3 (this crate)** — the decentralized training coordinator:
 //!   bipartite communication topologies (line, ring, star, grid, random),
-//!   head/tail alternating scheduler, stochastic quantization and
-//!   bit-exact wire format, wireless energy model, parameter-server
+//!   head/tail alternating scheduler, pluggable per-link compression
+//!   ([`quant::compress`]: stochastic quantization, censoring, top-k
+//!   sparsification, full precision) with a bit-exact tagged wire format,
+//!   wireless energy model, parameter-server
 //!   baselines, metrics and the figure-regeneration harness — plus the
 //!   [`sim`] discrete-event network simulator (virtual clock, per-link
 //!   latency/loss models with ARQ, straggler distributions, worker-dropout
@@ -42,10 +44,10 @@ pub mod util;
 
 /// Convenience re-exports for the public API surface used by examples.
 pub mod prelude {
-    pub use crate::config::{ExperimentConfig, GadmmConfig, QuantConfig};
+    pub use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
     pub use crate::data::partition::Partition;
     pub use crate::metrics::recorder::Recorder;
     pub use crate::net::topology::Topology;
-    pub use crate::quant::StochasticQuantizer;
+    pub use crate::quant::{Compressor, CompressorKind, StochasticQuantizer};
     pub use crate::util::rng::Rng;
 }

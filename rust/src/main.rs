@@ -7,7 +7,7 @@
 //! (artifact/platform report). See `qgadmm --help`.
 
 use qgadmm::cli::{self, USAGE};
-use qgadmm::config::{ExperimentConfig, KvMap};
+use qgadmm::config::{CompressorConfig, ExperimentConfig, KvMap};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::coordinator::simulated::SimReport;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
@@ -76,6 +76,33 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// Algorithm name for a compression scheme within a family ("GADMM" or
+/// "SGADMM"): stochastic ⇒ Q-, censored ⇒ CQ-, top-k ⇒ TopK-.
+fn variant_name(comp: &CompressorConfig, family: &str) -> String {
+    match comp {
+        CompressorConfig::FullPrecision => family.to_string(),
+        CompressorConfig::Stochastic(_) => format!("Q-{family}"),
+        CompressorConfig::Censored { .. } => format!("CQ-{family}"),
+        CompressorConfig::TopK { .. } => format!("TopK-{family}"),
+    }
+}
+
+/// `--use-xla` supports the artifact-validated schemes only (stochastic /
+/// full precision); reject the rest up front with a clear message instead
+/// of failing deep inside a run.
+fn check_xla_compressor(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    if cfg.use_xla && !cfg.gadmm.compressor.xla_compatible() {
+        anyhow::bail!(
+            "--use-xla supports only the stochastic and full-precision compressors \
+             (the PJRT artifacts are validated against those pipelines), but the \
+             configured scheme is {:?} — drop --use-xla or use --compressor \
+             stochastic|full",
+            cfg.gadmm.compressor.name()
+        );
+    }
+    Ok(())
+}
+
 /// Single linreg run printing the loss curve; `--use-xla true` routes the
 /// local solves through the PJRT artifact.
 fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
@@ -102,7 +129,8 @@ fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         stop_below: Some(cfg.loss_target),
         stop_above: None,
     };
-    let variant = if gcfg.quant.is_some() { "Q-GADMM" } else { "GADMM" };
+    let variant = variant_name(&gcfg.compressor, "GADMM");
+    check_xla_compressor(cfg)?;
     if cfg.use_xla && !topo.chain_compatible() {
         anyhow::bail!(
             "--use-xla supports only chain-compatible topologies (line, ring): \
@@ -123,7 +151,7 @@ fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
         engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
     };
-    print_curve(variant, &report.recorder, 15);
+    print_curve(&variant, &report.recorder, 15);
     println!(
         "{} finished: {} iterations, final gap {:.3e}, {} bits, compute {:.3}s",
         variant,
@@ -167,7 +195,7 @@ fn train_scale(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         stop_below: Some(cfg.loss_target),
         stop_above: None,
     };
-    let variant = if gcfg.quant.is_some() { "Q-GADMM" } else { "GADMM" };
+    let variant = variant_name(&gcfg.compressor, "GADMM");
     // Print the effective hyperparameters: like train-linreg/train-dnn, the
     // un-overridden defaults (ρ=24, workers=50) are re-defaulted for this
     // scenario, and the substitution must be visible in the output.
@@ -184,7 +212,7 @@ fn train_scale(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         (eng.problem().global_objective(&thetas) - f_star).abs()
     });
     let wall = t0.elapsed().as_secs_f64();
-    print_curve(variant, &report.recorder, 15);
+    print_curve(&variant, &report.recorder, 15);
     println!(
         "{} finished: {} iterations in {:.3}s wall ({:.1} iters/s), final gap {:.3e}, {} bits",
         variant,
@@ -210,12 +238,17 @@ fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
     if gcfg.rho == 24.0 {
         gcfg.rho = qgadmm::figures::helpers::DNN_RHO;
     }
-    if let Some(q) = gcfg.quant.as_mut() {
+    // Re-default the quantizer width for the DNN task (paper: 8 bits)
+    // unless the user overrode it; applies to every quantizing scheme.
+    if let CompressorConfig::Stochastic(q) | CompressorConfig::Censored { quant: q, .. } =
+        &mut gcfg.compressor
+    {
         if q.bits == 2 {
             q.bits = qgadmm::figures::helpers::DNN_BITS;
         }
     }
-    let variant = if gcfg.quant.is_some() { "Q-SGADMM" } else { "SGADMM" };
+    let variant = variant_name(&gcfg.compressor, "SGADMM");
+    check_xla_compressor(cfg)?;
     if cfg.use_xla && !topo.chain_compatible() {
         anyhow::bail!(
             "--use-xla supports only chain-compatible topologies (line, ring): \
@@ -254,7 +287,7 @@ fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
             eng.problem().average_model_accuracy(&thetas)
         })
     };
-    print_curve(variant, &report.recorder, 20);
+    print_curve(&variant, &report.recorder, 20);
     println!(
         "{} finished: {} iterations, accuracy {:.4}, {} bits",
         variant,
@@ -302,15 +335,30 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
     );
 
     let mut algos = Json::obj();
-    for (name, quant) in [
-        ("GADMM", None),
-        ("Q-GADMM", Some(qgadmm::config::QuantConfig::default())),
-    ] {
+    let mut entries = vec![
+        ("GADMM".to_string(), CompressorConfig::FullPrecision),
+        (
+            "Q-GADMM".to_string(),
+            CompressorConfig::Stochastic(qgadmm::config::QuantConfig::default()),
+        ),
+    ];
+    // A non-default --compressor joins the two baselines as a third entry
+    // (e.g. `simulate --compressor censored` compares censored against
+    // both stochastic and full precision on the same network). Dedupe by
+    // *name*: a re-parameterized baseline scheme (say `--bits 4`) would
+    // collide with the baseline's report key and silently overwrite its
+    // curve, so the baselines keep their defaults and only genuinely new
+    // schemes are added.
+    let extra_name = variant_name(&c.gadmm.compressor, "GADMM");
+    if !entries.iter().any(|(n, _)| *n == extra_name) {
+        entries.push((extra_name, c.gadmm.compressor));
+    }
+    for (name, compressor) in &entries {
         let r = run_sim_linreg(
             name,
             &world,
             &c,
-            quant,
+            *compressor,
             c.sim.loss,
             iterations,
             c.loss_target,
@@ -338,7 +386,7 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
 
 fn print_sim_summary(name: &str, r: &SimReport) {
     println!(
-        "{name:<10} iters={:<6} sim_time={:<10} bits={:<12} wire_bytes={:<12} retrans={:<8} stale={}",
+        "{name:<12} iters={:<6} sim_time={:<10} bits={:<12} wire_bytes={:<12} retrans={:<8} stale={:<6} censored={}",
         r.iterations_run,
         r.time_to_target_secs
             .map(|t| format!("{t:.3}s"))
@@ -347,6 +395,7 @@ fn print_sim_summary(name: &str, r: &SimReport) {
         r.net.wire_bytes,
         r.net.retransmissions,
         r.net.abandoned,
+        r.comm.censored,
     );
 }
 
@@ -366,6 +415,9 @@ fn sim_report_json(r: &SimReport) -> qgadmm::util::json::Json {
     obj.set("frames_delivered", Json::Num(r.net.delivered as f64));
     // One frame abandoned at the ARQ cap == one stale-mirror round.
     obj.set("frames_abandoned", Json::Num(r.net.abandoned as f64));
+    // Deliberate skips by a censoring compressor (mirror reuse, 0 bits) —
+    // never conflated with the involuntary abandoned/stale count above.
+    obj.set("censored_rounds", Json::Num(r.comm.censored as f64));
     obj.set("restitches", Json::Num(r.restitches as f64));
     obj.set("curve", r.recorder.thinned(400).to_json());
     obj

@@ -121,6 +121,58 @@ impl DiagLinRegProblem {
         }
     }
 
+    /// Synthesize the *conflict* workload used by the compression-scheme
+    /// sweep (`figures::fig_comp`): the first `conflict` coordinates carry
+    /// worker-specific targets under a stiff curvature
+    /// (`a = 400` — consensus on them is a slow dual-ascent fight), while
+    /// the remaining coordinates share one target across all workers under
+    /// a moderate curvature (`a = 40` — they converge in a handful of
+    /// exchanges and then stop changing). The steady-state "active set" is
+    /// therefore the `conflict` coordinates: exactly the structure where
+    /// sparsifying and censoring compressors can beat dense quantization
+    /// on bits-to-target, measurably rather than anecdotally.
+    pub fn synthesize_conflict(
+        dims: usize,
+        workers: usize,
+        conflict: usize,
+        seed: u64,
+    ) -> DiagLinRegProblem {
+        assert!(dims > 0 && workers >= 2);
+        assert!(
+            conflict <= dims,
+            "conflict coordinates ({conflict}) must fit in the model ({dims})"
+        );
+        const A_AGREED: f32 = 40.0;
+        const A_CONFLICT: f32 = 400.0;
+        let mut root = Rng::seed_from_u64(seed);
+        // Shared targets for the agreed coordinates, drawn once.
+        let mut shared_rng = root.fork(u64::MAX);
+        let shared: Vec<f32> = (0..dims).map(|_| shared_rng.normal() as f32).collect();
+        let fleet = (0..workers)
+            .map(|w| {
+                let mut rng = root.fork(w as u64);
+                let a: Vec<f32> = (0..dims)
+                    .map(|i| if i < conflict { A_CONFLICT } else { A_AGREED })
+                    .collect();
+                let t: Vec<f32> = (0..dims)
+                    .map(|i| {
+                        let own = rng.normal() as f32;
+                        if i < conflict {
+                            own // per-worker: disagree
+                        } else {
+                            shared[i] // shared: agree exactly
+                        }
+                    })
+                    .collect();
+                DiagLinRegWorker::new(a, t)
+            })
+            .collect();
+        DiagLinRegProblem {
+            workers: fleet,
+            dims,
+        }
+    }
+
     /// Exact consensus optimum: `θ*_i = Σ_n b_{n,i} / Σ_n a_{n,i}` and the
     /// optimal objective `F* = Σ_n f_n(θ*)`.
     pub fn optimum(&self) -> (Vec<f32>, f64) {
@@ -236,6 +288,30 @@ mod tests {
     }
 
     #[test]
+    fn conflict_workload_structure() {
+        let (d, n, conflict) = (32, 4, 5);
+        let p = DiagLinRegProblem::synthesize_conflict(d, n, conflict, 3);
+        let (theta, f_star) = p.optimum();
+        // Agreed coordinates: identical (a, t) across workers, so θ* is
+        // the shared target and they contribute nothing to F*.
+        for i in conflict..d {
+            let t0 = p.workers[0].b[i] / p.workers[0].a[i];
+            for w in &p.workers {
+                assert_eq!(w.b[i], p.workers[0].b[i], "coordinate {i} must agree");
+            }
+            assert!((theta[i] - t0).abs() < 1e-5);
+        }
+        // Conflict coordinates genuinely disagree, so consensus costs.
+        assert!(f_star > 0.0, "conflict coordinates must cost at F*");
+        let i = 0usize;
+        let targets: Vec<f32> = p.workers.iter().map(|w| w.b[i] / w.a[i]).collect();
+        assert!(
+            targets.iter().any(|&t| (t - targets[0]).abs() > 1e-3),
+            "conflict targets must differ across workers: {targets:?}"
+        );
+    }
+
+    #[test]
     fn gadmm_reaches_consensus_optimum_at_moderate_scale() {
         // Every worker's model must contract toward the closed-form θ*:
         // from ‖0 − θ*‖² at start to a small fraction of it. (Distance to
@@ -253,7 +329,7 @@ mod tests {
                 workers,
                 rho: 4.0,
                 dual_step: 1.0,
-                quant,
+                compressor: quant.into(),
                 threads: 0,
             };
             let problem = DiagLinRegProblem::synthesize(d, workers, 9);

@@ -1,0 +1,680 @@
+//! The pluggable per-link compression API.
+//!
+//! Q-GADMM's communication efficiency comes from what each worker puts on
+//! a link per round. This module generalizes that choice from the one
+//! hard-wired stochastic quantizer to a family of schemes behind one
+//! stateful [`Compressor`] trait, so every runtime (deterministic engine,
+//! threaded, discrete-event sim) drives any scheme through the same
+//! allocation-free hot path:
+//!
+//! * [`StochasticQuantizer`] — the paper's eqs. (6)–(13), bit-for-bit the
+//!   pre-trait behavior;
+//! * [`FullPrecision`] — the GADMM/SGADMM baseline (32·d-bit broadcasts);
+//! * [`Censored`] — CQ-GGADMM-style censoring (Ben Issaid et al., 2020):
+//!   skip the round entirely while the pending change is below a decaying
+//!   threshold;
+//! * [`TopK`] — top-k sparsification with error feedback (values in full
+//!   precision, `32 + k·(b_idx + 32)` bits per broadcast).
+//!
+//! # The mirror / error-feedback contract
+//!
+//! Every compressor owns a **mirror** `θ̂` — the exact vector every
+//! receiver of this link reconstructs. The contract all implementations
+//! and all runtimes rely on:
+//!
+//! 1. [`Compressor::compress_into`] compresses `θ` *against* the mirror,
+//!    advances the mirror to whatever the receivers will now believe, and
+//!    writes the fresh mirror into `view` — sender and receivers stay in
+//!    bit-agreement forever, with no side channel.
+//! 2. Whatever a scheme does **not** transmit stays in `θ − θ̂` and
+//!    competes again next round. This *is* error feedback: the stochastic
+//!    quantizer's rounding error, a censored round's whole update, and a
+//!    top-k round's dropped coordinates are all carried forward by the
+//!    same mechanism, not by scheme-specific residual buffers.
+//! 3. A [`Transmission::Censored`] outcome means the mirror did **not**
+//!    move: receivers reuse their mirror and nothing may be charged.
+//!    Runtimes distinguish this *deliberate* reuse from a *lost* frame
+//!    (which leaves the receiver stale against the sender's advanced
+//!    mirror — the error-propagation case, not the censoring case).
+//! 4. [`Compressor::last_payload`] serializes the most recent outcome as
+//!    the scheme's [`Payload`] variant — the payload tag is the wire-level
+//!    scheme tag (`comm::wire` carries it in every frame header), so each
+//!    scheme owns its wire representation end to end.
+//!
+//! The trait is object-safe but the runtimes deliberately do **not** box
+//! it: [`CompressorKind`] enum-dispatches the four schemes so the per
+//! broadcast hot path stays monomorphized and allocation-free (the same
+//! scratch-buffer discipline `StochasticQuantizer::quantize_into`
+//! established).
+
+use super::{payload_bits, StochasticQuantizer};
+use crate::comm::{Payload, SparseMsg};
+use crate::linalg::vecops;
+use crate::util::rng::Rng;
+
+/// Did the round put anything on the air?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transmission {
+    /// A broadcast was produced; charge [`CompressOutcome::bits`].
+    Sent,
+    /// The round was deliberately skipped (mirror unchanged, 0 bits).
+    Censored,
+}
+
+/// Outcome of one [`Compressor::compress_into`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressOutcome {
+    /// Paper-accounting payload bits of this broadcast (0 when censored).
+    pub bits: u64,
+    /// Scheme-specific magnitude of the pending change: the quantization
+    /// radius `R = ‖θ − θ̂‖_∞` for the quantizing schemes, the largest
+    /// kept |difference| for top-k, 0 for full precision.
+    pub radius: f32,
+    /// Sent or censored.
+    pub flag: Transmission,
+}
+
+impl CompressOutcome {
+    pub fn sent(&self) -> bool {
+        self.flag == Transmission::Sent
+    }
+}
+
+/// A stateful per-link payload compressor — the sender half of one
+/// worker's broadcast channel. See the module docs for the mirror /
+/// error-feedback contract every implementation must uphold.
+pub trait Compressor: Send {
+    /// Model dimension `d`.
+    fn dims(&self) -> usize;
+
+    /// The mirror `θ̂` — what every receiver currently believes this
+    /// worker's model to be.
+    fn theta_hat(&self) -> &[f32];
+
+    /// Re-anchor the mirror to a known shared vector (seed-shared init,
+    /// or a full-precision resync after a fault) without communication.
+    /// Decaying-threshold state (censoring schedules) is *not* rewound:
+    /// the schedule indexes algorithm time, which a resync does not reset.
+    fn reset_to(&mut self, theta: &[f32]);
+
+    /// Compress `θ` against the mirror, advance the mirror, and write the
+    /// fresh mirror into `view` (the runtime's neighbor-visible buffer) in
+    /// the same pass. Must not allocate on the steady-state path. `rng`
+    /// feeds stochastic rounding; deterministic schemes must leave it
+    /// untouched so seeded runs stay scheme-comparable.
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome;
+
+    /// The wire payload of the most recent [`Self::compress_into`] call
+    /// (allocates — the byte-stream runtimes frame it; the in-memory
+    /// engine never calls this). Meaningless before the first compress.
+    fn last_payload(&self) -> Payload;
+}
+
+/// The GADMM baseline: broadcast `θ` itself at full precision. The mirror
+/// is an exact copy, `32·d` bits per round.
+#[derive(Clone, Debug)]
+pub struct FullPrecision {
+    theta_hat: Vec<f32>,
+}
+
+impl FullPrecision {
+    pub fn new(dims: usize) -> FullPrecision {
+        FullPrecision {
+            theta_hat: vec![0.0; dims],
+        }
+    }
+}
+
+impl Compressor for FullPrecision {
+    fn dims(&self) -> usize {
+        self.theta_hat.len()
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        &self.theta_hat
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        self.theta_hat.copy_from_slice(theta);
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        _rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        self.theta_hat.copy_from_slice(theta);
+        view.copy_from_slice(theta);
+        CompressOutcome {
+            bits: 32 * theta.len() as u64,
+            radius: 0.0,
+            flag: Transmission::Sent,
+        }
+    }
+
+    fn last_payload(&self) -> Payload {
+        Payload::Full(self.theta_hat.clone())
+    }
+}
+
+impl Compressor for StochasticQuantizer {
+    fn dims(&self) -> usize {
+        StochasticQuantizer::dims(self)
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        StochasticQuantizer::theta_hat(self)
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        StochasticQuantizer::reset_to(self, theta);
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        let (bits, radius) = self.quantize_into(theta, rng, view);
+        CompressOutcome {
+            bits: payload_bits(bits, theta.len()),
+            radius,
+            flag: Transmission::Sent,
+        }
+    }
+
+    fn last_payload(&self) -> Payload {
+        Payload::Quantized(self.last_msg())
+    }
+}
+
+/// CQ-GGADMM-style censoring wrapper: when the pending change
+/// `‖θ − θ̂‖_∞` is at or below a geometrically decaying threshold
+/// `τ_k = τ₀·decay^k`, the whole round is skipped — the mirror stays put,
+/// receivers reuse theirs, and nothing is charged. Otherwise the wrapped
+/// compressor transmits as usual. The threshold decays per *call* (one
+/// call per worker per iteration), so censoring vanishes asymptotically
+/// and the wrapped scheme's convergence takes over; while views are
+/// frozen the per-link duals keep integrating the frozen disagreement,
+/// which grows the pending change until it clears the threshold — the
+/// mechanism that keeps censored runs from stalling short of consensus.
+#[derive(Clone, Debug)]
+pub struct Censored<C> {
+    inner: C,
+    tau0: f32,
+    decay: f32,
+    /// Calls so far (the `k` of `τ_k`).
+    calls: u64,
+    /// Whether the most recent call transmitted.
+    last_sent: bool,
+}
+
+impl<C: Compressor> Censored<C> {
+    /// Panics unless `tau0 >= 0` and `0 < decay <= 1`.
+    pub fn new(inner: C, tau0: f32, decay: f32) -> Censored<C> {
+        assert!(
+            tau0 >= 0.0 && tau0.is_finite(),
+            "censoring threshold tau0 must be finite and non-negative, got {tau0}"
+        );
+        assert!(
+            decay > 0.0 && decay <= 1.0,
+            "censoring decay must be in (0, 1], got {decay}"
+        );
+        Censored {
+            inner,
+            tau0,
+            decay,
+            calls: 0,
+            last_sent: true,
+        }
+    }
+
+    /// The current threshold `τ_k` (before this call's decay step).
+    pub fn threshold(&self) -> f64 {
+        let k = self.calls.min(1 << 24) as i32;
+        self.tau0 as f64 * (self.decay as f64).powi(k)
+    }
+
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+}
+
+impl<C: Compressor> Compressor for Censored<C> {
+    fn dims(&self) -> usize {
+        self.inner.dims()
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        self.inner.theta_hat()
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        // Threshold state intentionally survives (see trait docs).
+        self.inner.reset_to(theta);
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        let pending = vecops::linf_diff_f32(theta, self.inner.theta_hat());
+        let tau = self.threshold();
+        self.calls += 1;
+        if (pending as f64) <= tau {
+            // Censored: mirror and rng untouched, receivers reuse theirs.
+            view.copy_from_slice(self.inner.theta_hat());
+            self.last_sent = false;
+            return CompressOutcome {
+                bits: 0,
+                radius: pending,
+                flag: Transmission::Censored,
+            };
+        }
+        self.last_sent = true;
+        self.inner.compress_into(theta, rng, view)
+    }
+
+    fn last_payload(&self) -> Payload {
+        if self.last_sent {
+            self.inner.last_payload()
+        } else {
+            Payload::Censored
+        }
+    }
+}
+
+/// Top-k sparsification with error feedback: send the `k` largest entries
+/// of `θ − θ̂` (ties broken by the lower index) as exact f32 values; the
+/// mirror advances only on those coordinates, so everything dropped —
+/// including nothing at all when the difference is zero — stays in
+/// `θ − θ̂` for the next round. `32 + k·(b_idx + 32)` bits per broadcast
+/// ([`SparseMsg::payload_bits`]); fully deterministic (no rng draw).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    theta_hat: Vec<f32>,
+    k: usize,
+    /// Selection scratch (coordinate ids, reordered in place each round).
+    order: Vec<u32>,
+    /// Kept indices of the most recent round, ascending.
+    sel_idx: Vec<u32>,
+    /// Kept values of the most recent round, aligned with `sel_idx`.
+    sel_val: Vec<f32>,
+}
+
+impl TopK {
+    /// Keep `ceil(frac·dims)` coordinates per round (at least 1). Panics
+    /// unless `0 < frac <= 1`.
+    pub fn new(dims: usize, frac: f32) -> TopK {
+        assert!(
+            frac > 0.0 && frac <= 1.0,
+            "top-k fraction must be in (0, 1], got {frac}"
+        );
+        let k = ((frac as f64 * dims as f64).ceil() as usize).clamp(1, dims.max(1));
+        TopK {
+            theta_hat: vec![0.0; dims],
+            k,
+            order: (0..dims as u32).collect(),
+            sel_idx: Vec::with_capacity(k),
+            sel_val: Vec::with_capacity(k),
+        }
+    }
+
+    /// Coordinates kept per round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Compressor for TopK {
+    fn dims(&self) -> usize {
+        self.theta_hat.len()
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        &self.theta_hat
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        self.theta_hat.copy_from_slice(theta);
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        _rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        let d = self.theta_hat.len();
+        assert_eq!(theta.len(), d, "dimension mismatch");
+        assert_eq!(view.len(), d, "view dimension mismatch");
+
+        // Partition the coordinate ids so the k largest |θ_i − θ̂_i| come
+        // first. The comparator is a total order (magnitude descending,
+        // index ascending on ties), so the selected *set* is deterministic
+        // regardless of select_nth's internal order.
+        let hat = &self.theta_hat;
+        if self.k < d {
+            self.order.select_nth_unstable_by(self.k - 1, |&i, &j| {
+                let a = (theta[i as usize] - hat[i as usize]).abs();
+                let b = (theta[j as usize] - hat[j as usize]).abs();
+                b.total_cmp(&a).then(i.cmp(&j))
+            });
+        }
+        self.sel_idx.clear();
+        self.sel_idx.extend_from_slice(&self.order[..self.k]);
+        self.sel_idx.sort_unstable();
+
+        self.sel_val.clear();
+        let mut radius = 0.0f32;
+        for &i in &self.sel_idx {
+            let i = i as usize;
+            let v = theta[i] - self.theta_hat[i];
+            // Receiver applies θ̂[i] += v — do the identical addition here
+            // so both ends stay in bit-agreement (error feedback: the
+            // f32-addition residue, like every unsent coordinate, remains
+            // in θ − θ̂).
+            self.theta_hat[i] += v;
+            self.sel_val.push(v);
+            radius = radius.max(v.abs());
+        }
+        view.copy_from_slice(&self.theta_hat);
+
+        CompressOutcome {
+            bits: 32 + self.k as u64 * (SparseMsg::index_bits(d) + 32),
+            radius,
+            flag: Transmission::Sent,
+        }
+    }
+
+    fn last_payload(&self) -> Payload {
+        Payload::Sparse(SparseMsg {
+            dims: self.theta_hat.len(),
+            indices: self.sel_idx.clone(),
+            values: self.sel_val.clone(),
+        })
+    }
+}
+
+/// Enum dispatch over the shipped schemes, so runtime structs hold a
+/// concrete type (monomorphized hot path, no `Box<dyn Compressor>`).
+/// Constructed from the config layer's `CompressorConfig::build`.
+#[derive(Clone, Debug)]
+pub enum CompressorKind {
+    Stochastic(StochasticQuantizer),
+    FullPrecision(FullPrecision),
+    Censored(Censored<StochasticQuantizer>),
+    TopK(TopK),
+}
+
+impl CompressorKind {
+    /// A zero-sized placeholder (used by `std::mem::replace` when a
+    /// runtime temporarily moves a compressor into a worker job).
+    pub fn placeholder() -> CompressorKind {
+        CompressorKind::FullPrecision(FullPrecision::new(0))
+    }
+
+    /// Scheme name as spelled on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::Stochastic(_) => "stochastic",
+            CompressorKind::FullPrecision(_) => "full",
+            CompressorKind::Censored(_) => "censored",
+            CompressorKind::TopK(_) => "topk",
+        }
+    }
+}
+
+impl Compressor for CompressorKind {
+    fn dims(&self) -> usize {
+        match self {
+            CompressorKind::Stochastic(c) => Compressor::dims(c),
+            CompressorKind::FullPrecision(c) => c.dims(),
+            CompressorKind::Censored(c) => c.dims(),
+            CompressorKind::TopK(c) => c.dims(),
+        }
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        match self {
+            CompressorKind::Stochastic(c) => Compressor::theta_hat(c),
+            CompressorKind::FullPrecision(c) => c.theta_hat(),
+            CompressorKind::Censored(c) => c.theta_hat(),
+            CompressorKind::TopK(c) => c.theta_hat(),
+        }
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        match self {
+            CompressorKind::Stochastic(c) => Compressor::reset_to(c, theta),
+            CompressorKind::FullPrecision(c) => c.reset_to(theta),
+            CompressorKind::Censored(c) => c.reset_to(theta),
+            CompressorKind::TopK(c) => c.reset_to(theta),
+        }
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        match self {
+            CompressorKind::Stochastic(c) => c.compress_into(theta, rng, view),
+            CompressorKind::FullPrecision(c) => c.compress_into(theta, rng, view),
+            CompressorKind::Censored(c) => c.compress_into(theta, rng, view),
+            CompressorKind::TopK(c) => c.compress_into(theta, rng, view),
+        }
+    }
+
+    fn last_payload(&self) -> Payload {
+        match self {
+            CompressorKind::Stochastic(c) => Compressor::last_payload(c),
+            CompressorKind::FullPrecision(c) => c.last_payload(),
+            CompressorKind::Censored(c) => c.last_payload(),
+            CompressorKind::TopK(c) => c.last_payload(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BitPolicy, Mirror};
+
+    fn rt(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn stochastic_via_trait_matches_quantize_into() {
+        // The trait adapter must be a pure pass-through: same bits, same
+        // radius, same mirror, same view, same rng consumption.
+        let d = 129;
+        let mut raw = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let mut via: CompressorKind =
+            CompressorKind::Stochastic(StochasticQuantizer::new(d, BitPolicy::Fixed(2)));
+        let mut rng_a = rt(5);
+        let mut rng_b = rt(5);
+        let mut va = vec![0.0f32; d];
+        let mut vb = vec![0.0f32; d];
+        let mut theta = vec![0.0f32; d];
+        for step in 0..25 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.19).sin();
+            }
+            let (bits, radius) = raw.quantize_into(&theta, &mut rng_a, &mut va);
+            let out = via.compress_into(&theta, &mut rng_b, &mut vb);
+            assert_eq!(out.bits, payload_bits(bits, d), "step {step}");
+            assert_eq!(out.radius, radius, "step {step}");
+            assert_eq!(out.flag, Transmission::Sent);
+            assert_eq!(va, vb, "view diverged at step {step}");
+            assert_eq!(
+                StochasticQuantizer::theta_hat(&raw),
+                Compressor::theta_hat(&via),
+                "mirror diverged at step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_precision_is_an_exact_copy() {
+        let d = 7;
+        let mut c = FullPrecision::new(d);
+        let mut rng = rt(1);
+        let before = rng.next_u64();
+        let mut rng = rt(1);
+        let theta: Vec<f32> = (0..d).map(|i| i as f32 - 2.5).collect();
+        let mut view = vec![9.0f32; d];
+        let out = c.compress_into(&theta, &mut rng, &mut view);
+        assert_eq!(out.bits, 32 * d as u64);
+        assert!(out.sent());
+        assert_eq!(view, theta);
+        assert_eq!(c.theta_hat(), theta.as_slice());
+        // Deterministic schemes must not consume randomness.
+        assert_eq!(rng.next_u64(), before);
+        match c.last_payload() {
+            Payload::Full(v) => assert_eq!(v, theta),
+            other => panic!("expected Full payload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn censored_skips_below_threshold_and_sends_above() {
+        let d = 4;
+        let inner = StochasticQuantizer::new(d, BitPolicy::Fixed(2));
+        let mut c = Censored::new(inner, 0.5, 1.0);
+        let mut rng = rt(9);
+        let mut view = vec![0.0f32; d];
+
+        // Change below τ = 0.5: censored, mirror stays at zero.
+        let out = c.compress_into(&[0.1, -0.2, 0.0, 0.3], &mut rng, &mut view);
+        assert_eq!(out.flag, Transmission::Censored);
+        assert_eq!(out.bits, 0);
+        assert_eq!(view, vec![0.0; d]);
+        assert!(matches!(c.last_payload(), Payload::Censored));
+
+        // Change above τ: delegates to the quantizer.
+        let out = c.compress_into(&[2.0, -1.0, 0.0, 0.5], &mut rng, &mut view);
+        assert_eq!(out.flag, Transmission::Sent);
+        assert_eq!(out.bits, payload_bits(2, d));
+        assert_eq!(view.as_slice(), Compressor::theta_hat(&c));
+        assert!(matches!(c.last_payload(), Payload::Quantized(_)));
+    }
+
+    #[test]
+    fn censored_threshold_decays_per_call() {
+        let inner = FullPrecision::new(2);
+        let mut c = Censored::new(inner, 1.0, 0.5);
+        assert!((c.threshold() - 1.0).abs() < 1e-12);
+        let mut rng = rt(3);
+        let mut view = vec![0.0f32; 2];
+        let _ = c.compress_into(&[0.0, 0.0], &mut rng, &mut view); // censored
+        assert!((c.threshold() - 0.5).abs() < 1e-12);
+        let _ = c.compress_into(&[0.0, 0.0], &mut rng, &mut view);
+        assert!((c.threshold() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "decay must be in (0, 1]")]
+    fn censored_rejects_bad_decay() {
+        let _ = Censored::new(FullPrecision::new(1), 0.1, 1.5);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_carries_the_rest() {
+        let d = 6;
+        let mut c = TopK::new(d, 0.34); // k = ceil(0.34·6) = 3
+        assert_eq!(c.k(), 3);
+        let mut rng = rt(2);
+        let mut view = vec![0.0f32; d];
+        let theta = [5.0f32, -0.1, 3.0, 0.2, -4.0, 0.05];
+        let out = c.compress_into(&theta, &mut rng, &mut view);
+        assert!(out.sent());
+        assert_eq!(out.bits, 32 + 3 * (16 + 32));
+        assert_eq!(out.radius, 5.0);
+        // Largest three magnitudes: coords 0, 2, 4 — sent exactly.
+        assert_eq!(view, vec![5.0, 0.0, 3.0, 0.0, -4.0, 0.0]);
+        match c.last_payload() {
+            Payload::Sparse(s) => {
+                assert_eq!(s.indices, vec![0, 2, 4]);
+                assert_eq!(s.values, vec![5.0, 3.0, -4.0]);
+                assert_eq!(s.dims, d);
+            }
+            other => panic!("expected Sparse payload, got {other:?}"),
+        }
+        // Error feedback: the dropped coordinates surface next round.
+        let out = c.compress_into(&theta, &mut rng, &mut view);
+        match c.last_payload() {
+            Payload::Sparse(s) => assert_eq!(s.indices, vec![1, 3, 5]),
+            other => panic!("expected Sparse payload, got {other:?}"),
+        }
+        assert_eq!(view, theta.to_vec());
+        assert_eq!(out.radius, 0.2);
+    }
+
+    #[test]
+    fn topk_mirror_matches_receiver_mirror() {
+        // Sender mirror and a receiver Mirror fed the sparse payloads must
+        // agree bit-for-bit across rounds (the trait contract).
+        let d = 40;
+        let mut c = TopK::new(d, 0.1);
+        let mut m = Mirror::new(d);
+        let mut rng = rt(7);
+        let mut view = vec![0.0f32; d];
+        let mut theta = vec![0.0f32; d];
+        for step in 0..30 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.7).cos() * (1.0 + i as f32 * 0.1);
+            }
+            let _ = c.compress_into(&theta, &mut rng, &mut view);
+            m.apply_payload(&c.last_payload());
+            assert_eq!(m.theta_hat(), c.theta_hat(), "diverged at step {step}");
+            assert_eq!(view.as_slice(), c.theta_hat());
+        }
+    }
+
+    #[test]
+    fn topk_ties_break_deterministically_by_index() {
+        let d = 4;
+        let mut c = TopK::new(d, 0.5); // k = 2
+        let mut rng = rt(11);
+        let mut view = vec![0.0f32; d];
+        // All magnitudes equal: the two lowest indices win.
+        let _ = c.compress_into(&[1.0, -1.0, 1.0, -1.0], &mut rng, &mut view);
+        match c.last_payload() {
+            Payload::Sparse(s) => assert_eq!(s.indices, vec![0, 1]),
+            other => panic!("expected Sparse payload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "top-k fraction")]
+    fn topk_rejects_zero_fraction() {
+        let _ = TopK::new(8, 0.0);
+    }
+
+    #[test]
+    fn kind_names_and_placeholder() {
+        assert_eq!(CompressorKind::placeholder().name(), "full");
+        assert_eq!(CompressorKind::TopK(TopK::new(4, 0.5)).name(), "topk");
+        assert_eq!(
+            CompressorKind::Censored(Censored::new(
+                StochasticQuantizer::new(2, BitPolicy::Fixed(2)),
+                0.1,
+                0.99
+            ))
+            .name(),
+            "censored"
+        );
+    }
+}

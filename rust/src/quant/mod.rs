@@ -18,13 +18,24 @@
 //! the packed levels plus the f32 radius and the bit-width. [`bitpack`]
 //! implements the bit-exact codec.
 //!
+//! The quantizer is one scheme of the pluggable per-link compression API —
+//! see [`compress`] for the [`Compressor`] trait (mirror / error-feedback
+//! contract), the censoring and top-k schemes, and the enum-dispatched
+//! [`CompressorKind`] the runtimes hold.
+//!
 //! All arithmetic is f32 and expression-identical to the Pallas kernel
 //! (`python/compile/kernels/squant.py`); fed the same uniforms, the two
 //! backends produce identical integer levels (verified by the
 //! `artifact_parity` integration test).
 
 pub mod bitpack;
+pub mod compress;
 
+pub use compress::{
+    Censored, CompressOutcome, Compressor, CompressorKind, FullPrecision, TopK, Transmission,
+};
+
+use crate::comm::{Payload, SparseMsg};
 use crate::linalg::vecops;
 use crate::util::rng::Rng;
 
@@ -280,6 +291,18 @@ impl StochasticQuantizer {
         &self.levels
     }
 
+    /// Owned message for the most recent [`Self::quantize`] /
+    /// [`Self::quantize_into`] call (allocates — byte-stream runtimes frame
+    /// it via [`compress::Compressor::last_payload`]). Meaningless before
+    /// the first quantization.
+    pub fn last_msg(&self) -> QuantizedMsg {
+        QuantizedMsg {
+            bits: self.prev_bits,
+            radius: self.prev_radius,
+            levels: self.levels.clone(),
+        }
+    }
+
     /// Deterministic core used by [`Self::quantize`] and by the
     /// XLA-parity tests (which feed the same uniforms to the Pallas
     /// kernel). `uniforms[i] ∈ [0, 1)` decides the stochastic rounding of
@@ -378,6 +401,29 @@ impl Mirror {
         let delta = 2.0 * msg.radius / num_levels;
         for (t, &q) in self.theta_hat.iter_mut().zip(&msg.levels) {
             *t = *t + delta * q as f32 - msg.radius;
+        }
+    }
+
+    /// Apply one received sparse (top-k) message: `θ̂[i] += v` per kept
+    /// coordinate — the exact addition the sender performed on its mirror,
+    /// so both ends stay in bit-agreement.
+    pub fn apply_sparse(&mut self, msg: &SparseMsg) {
+        assert_eq!(msg.dims, self.theta_hat.len());
+        assert_eq!(msg.indices.len(), msg.values.len());
+        for (&i, &v) in msg.indices.iter().zip(&msg.values) {
+            self.theta_hat[i as usize] += v;
+        }
+    }
+
+    /// Apply any broadcast payload to this mirror — the receiver half of
+    /// the [`compress::Compressor`] contract. `Censored` and `Stop` leave
+    /// the mirror untouched (a censored round *means* "reuse your mirror").
+    pub fn apply_payload(&mut self, payload: &Payload) {
+        match payload {
+            Payload::Quantized(q) => self.apply(q),
+            Payload::Full(v) => self.reset_to(v),
+            Payload::Sparse(s) => self.apply_sparse(s),
+            Payload::Censored | Payload::Stop => {}
         }
     }
 }

@@ -133,7 +133,7 @@ fn engine_converges_identically_on_both_backends() {
         workers,
         rho,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: qgadmm::config::CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
     let opts = RunOptions {

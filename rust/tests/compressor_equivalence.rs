@@ -1,0 +1,213 @@
+//! The `Compressor`-trait redesign's regression harness.
+//!
+//! An independent reference implementation of the *pre-redesign* broadcast
+//! path — raw `StochasticQuantizer::quantize_into` calls (or plain copies,
+//! full precision) with hand-rolled `payload_bits` accounting, no
+//! `Compressor` trait anywhere — runs the same head/tail schedule as the
+//! engine over the same `Topology`, and must match the trait-driven engine
+//! **bit for bit** over 50 iterations:
+//!
+//! * `compressor = stochastic` vs the raw quantizer path, on the chain and
+//!   on a ring (quantized), pinning that enum dispatch + the trait adapter
+//!   changed nothing;
+//! * `compressor = full` vs the legacy full-precision baseline trajectory
+//!   (view copies, `32·d` bits).
+
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::GadmmEngine;
+use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
+use qgadmm::data::partition::Partition;
+use qgadmm::model::linreg::LinRegProblem;
+use qgadmm::model::{LinkBuf, LocalProblem, NeighborLink};
+use qgadmm::net::topology::Topology;
+use qgadmm::quant::{self, BitPolicy, StochasticQuantizer};
+use qgadmm::util::rng::Rng;
+
+fn world(workers: usize) -> (LinRegDataset, Partition) {
+    let spec = LinRegSpec {
+        samples: 1_400,
+        ..LinRegSpec::default()
+    };
+    let data = LinRegDataset::synthesize(&spec, 71);
+    let partition = Partition::contiguous(data.samples(), workers);
+    (data, partition)
+}
+
+/// The pre-redesign broadcast path, written directly against
+/// `StochasticQuantizer` (no `Compressor` in sight), over any bipartite
+/// topology. Solves go through the same `LinRegProblem` the engine uses —
+/// only the *broadcast* layer differs, which is exactly what the pin
+/// isolates.
+struct RawReference {
+    problem: LinRegProblem,
+    topo: Topology,
+    theta: Vec<Vec<f32>>,
+    view: Vec<Vec<f32>>,
+    lambda: Vec<Vec<f32>>,
+    quantizers: Option<Vec<StochasticQuantizer>>,
+    rngs: Vec<Rng>,
+    rho: f32,
+    bits: u64,
+    transmissions: u64,
+}
+
+impl RawReference {
+    fn new(
+        data: &LinRegDataset,
+        partition: &Partition,
+        topo: Topology,
+        rho: f32,
+        quant: bool,
+        seed: u64,
+    ) -> RawReference {
+        let n = topo.len();
+        let problem = LinRegProblem::new(data, partition, rho);
+        let d = problem.dims();
+        let mut root = Rng::seed_from_u64(seed);
+        let rngs = (0..n).map(|p| root.fork(p as u64)).collect();
+        let quantizers = quant.then(|| {
+            (0..n)
+                .map(|_| StochasticQuantizer::new(d, BitPolicy::Fixed(2)))
+                .collect()
+        });
+        let edge_count = topo.edge_count();
+        RawReference {
+            problem,
+            theta: vec![vec![0.0; d]; n],
+            view: vec![vec![0.0; d]; n],
+            lambda: vec![vec![0.0; d]; edge_count],
+            quantizers,
+            rngs,
+            rho,
+            bits: 0,
+            transmissions: 0,
+            topo,
+        }
+    }
+
+    fn step_position(&mut self, p: usize) {
+        let worker = self.topo.worker_at(p);
+        let d = self.theta[p].len();
+        let mut buf = LinkBuf::new();
+        for e in self.topo.incident(p) {
+            buf.push(NeighborLink {
+                sign: e.sign,
+                lambda: self.lambda[e.edge].as_slice(),
+                theta: self.view[e.peer].as_slice(),
+            });
+        }
+        let ctx = buf.ctx(self.rho);
+        let mut out = std::mem::take(&mut self.theta[p]);
+        self.problem.solve(worker, &ctx, &mut out);
+        self.theta[p] = out;
+
+        // The pre-redesign broadcast: quantize_into straight into the
+        // view, or copy for the full-precision baseline.
+        match self.quantizers.as_mut() {
+            Some(qs) => {
+                let (bits, _radius) =
+                    qs[p].quantize_into(&self.theta[p], &mut self.rngs[p], &mut self.view[p]);
+                self.bits += quant::payload_bits(bits, d);
+            }
+            None => {
+                self.view[p].copy_from_slice(&self.theta[p]);
+                self.bits += 32 * d as u64;
+            }
+        }
+        self.transmissions += 1;
+    }
+
+    fn iterate(&mut self) {
+        for phase in 0..2 {
+            for p in 0..self.topo.len() {
+                if self.topo.is_head(p) == (phase == 0) {
+                    self.step_position(p);
+                }
+            }
+        }
+        let step = self.rho; // dual_step = 1.0
+        for (e, &(u, v)) in self.topo.edges().iter().enumerate() {
+            for j in 0..self.lambda[e].len() {
+                let delta = step * (self.view[u][j] - self.view[v][j]);
+                self.lambda[e][j] += delta;
+            }
+        }
+    }
+}
+
+fn assert_trait_matches_raw(topo: Topology, quant: bool, iters: usize, seed: u64) {
+    let workers = topo.len();
+    let (data, partition) = world(workers);
+    let rho = 1600.0f32;
+
+    let mut reference =
+        RawReference::new(&data, &partition, topo.clone(), rho, quant, seed);
+    for _ in 0..iters {
+        reference.iterate();
+    }
+
+    let compressor = if quant {
+        CompressorConfig::Stochastic(QuantConfig::default())
+    } else {
+        CompressorConfig::FullPrecision
+    };
+    let cfg = GadmmConfig {
+        workers,
+        rho,
+        dual_step: 1.0,
+        compressor,
+        threads: 1,
+    };
+    let problem = LinRegProblem::new(&data, &partition, rho);
+    let mut engine = GadmmEngine::new(cfg, problem, topo.clone(), seed);
+    for _ in 0..iters {
+        engine.iterate();
+    }
+
+    for p in 0..workers {
+        assert_eq!(
+            engine.theta_at(p),
+            reference.theta[p].as_slice(),
+            "θ diverged from the raw-quantizer path at position {p}"
+        );
+        assert_eq!(
+            engine.view_at(p),
+            reference.view[p].as_slice(),
+            "θ̂ diverged from the raw-quantizer path at position {p}"
+        );
+    }
+    for l in 0..topo.edge_count() {
+        assert_eq!(
+            engine.lambda_at(l),
+            reference.lambda[l].as_slice(),
+            "λ diverged from the raw-quantizer path on link {l}"
+        );
+    }
+    assert_eq!(engine.comm().bits, reference.bits, "bit accounting diverged");
+    assert_eq!(
+        engine.comm().transmissions,
+        reference.transmissions,
+        "transmission accounting diverged"
+    );
+    assert_eq!(engine.comm().censored, 0, "stochastic/full never censor");
+}
+
+#[test]
+fn stochastic_via_trait_pins_chain_trajectory() {
+    assert_trait_matches_raw(Topology::line(6), true, 50, 2024);
+}
+
+#[test]
+fn stochastic_via_trait_pins_ring_trajectory() {
+    assert_trait_matches_raw(Topology::ring(6).unwrap(), true, 50, 31);
+}
+
+#[test]
+fn full_precision_via_trait_pins_chain_trajectory() {
+    assert_trait_matches_raw(Topology::line(5), false, 50, 7);
+}
+
+#[test]
+fn full_precision_via_trait_pins_ring_trajectory() {
+    assert_trait_matches_raw(Topology::ring(4).unwrap(), false, 50, 13);
+}

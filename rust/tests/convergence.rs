@@ -39,7 +39,7 @@ fn engine(
         workers,
         rho: RHO,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: 0,
     };
     let (_, f_star) = data.optimum();
@@ -60,7 +60,7 @@ fn qgadmm_tracks_gadmm_iteration_for_iteration() {
     let mk = |quant| {
         let problem = LinRegProblem::new(&ds, &partition, rho);
         GadmmEngine::new(
-            GadmmConfig { workers, rho, dual_step: 1.0, quant, threads: 0 },
+            GadmmConfig { workers, rho, dual_step: 1.0, compressor: quant.into(), threads: 0 },
             problem,
             Topology::line(workers),
             3,

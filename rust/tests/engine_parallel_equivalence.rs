@@ -12,7 +12,7 @@
 //! full-precision linreg configs, the d = 2048 diagonal-Gram scale
 //! problem, and a reduced-width MLP (Q-SGADMM).
 
-use qgadmm::config::{GadmmConfig, QuantConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
 use qgadmm::coordinator::engine::GadmmEngine;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
@@ -52,11 +52,16 @@ fn assert_equal_runs<P: LocalProblem, Q: LocalProblem>(
         par.comm().transmissions,
         "{label}: transmissions"
     );
+    assert_eq!(
+        seq.comm().censored,
+        par.comm().censored,
+        "{label}: censored tally"
+    );
 }
 
-fn linreg_engine(
+fn linreg_engine_with(
     workers: usize,
-    quant: Option<QuantConfig>,
+    compressor: CompressorConfig,
     threads: usize,
 ) -> GadmmEngine<LinRegProblem> {
     let spec = LinRegSpec {
@@ -70,10 +75,18 @@ fn linreg_engine(
         workers,
         rho: 1600.0,
         dual_step: 1.0,
-        quant,
+        compressor,
         threads,
     };
     GadmmEngine::new(cfg, problem, Topology::line(workers), 99)
+}
+
+fn linreg_engine(
+    workers: usize,
+    quant: Option<QuantConfig>,
+    threads: usize,
+) -> GadmmEngine<LinRegProblem> {
+    linreg_engine_with(workers, quant.into(), threads)
 }
 
 #[test]
@@ -106,13 +119,36 @@ fn adaptive_bits_parallel_matches_sequential() {
 }
 
 #[test]
+fn censored_parallel_matches_sequential() {
+    // Censoring keeps per-position threshold state (call count) inside
+    // the compressor; the executor must move it through jobs intact and
+    // charge censored rounds identically in both schedules.
+    let comp = CompressorConfig::Censored {
+        quant: QuantConfig::default(),
+        tau0: 0.05,
+        decay: 0.995,
+    };
+    let seq = linreg_engine_with(6, comp, 1);
+    let par = linreg_engine_with(6, comp, 4);
+    assert_equal_runs(seq, par, 50, "censored Q-GADMM");
+}
+
+#[test]
+fn topk_parallel_matches_sequential() {
+    let comp = CompressorConfig::TopK { frac: 0.4 };
+    let seq = linreg_engine_with(6, comp, 1);
+    let par = linreg_engine_with(6, comp, 4);
+    assert_equal_runs(seq, par, 50, "top-k GADMM");
+}
+
+#[test]
 fn scale_problem_parallel_matches_sequential() {
     let make = |threads: usize| {
         let cfg = GadmmConfig {
             workers: 16,
             rho: 4.0,
             dual_step: 1.0,
-            quant: Some(QuantConfig::default()),
+            compressor: CompressorConfig::default(),
             threads,
         };
         let problem = DiagLinRegProblem::synthesize(2_048, 16, 5);
@@ -145,7 +181,7 @@ fn mlp_parallel_matches_sequential() {
             workers: 4,
             rho: 20.0,
             dual_step: 0.01,
-            quant: Some(QuantConfig {
+            compressor: CompressorConfig::Stochastic(QuantConfig {
                 bits: 8,
                 ..QuantConfig::default()
             }),

@@ -39,7 +39,7 @@ fn build_sim(
         workers,
         rho,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: 0,
     };
     let problem = LinRegProblem::new(&data, &partition, rho);
@@ -129,7 +129,7 @@ fn run_equivalence_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, 
         workers,
         rho,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: 0,
     };
     let opts = RunOptions {

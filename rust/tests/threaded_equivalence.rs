@@ -28,7 +28,7 @@ fn run_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
         workers,
         rho,
         dual_step: 1.0,
-        quant,
+        compressor: quant.into(),
         threads: 0,
     };
 

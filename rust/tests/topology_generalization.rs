@@ -14,7 +14,7 @@
 //!    bit-for-bit the engine, extending the chain-only equivalence
 //!    suites to the new graphs.
 
-use qgadmm::config::{GadmmConfig, QuantConfig, SimConfig};
+use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig, SimConfig};
 use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
 use qgadmm::coordinator::simulated::SimulatedGadmm;
 use qgadmm::coordinator::threaded::run_threaded_on;
@@ -158,7 +158,7 @@ fn assert_engine_matches_reference(quant: bool, workers: usize, iters: usize, se
         workers,
         rho,
         dual_step: 1.0,
-        quant: quant.then(QuantConfig::default),
+        compressor: quant.then(QuantConfig::default).into(),
         threads: 1,
     };
     let problem = LinRegProblem::new(&data, &partition, rho);
@@ -214,7 +214,7 @@ fn nonchain_topologies_reach_the_chain_loss_gap() {
             workers,
             rho,
             dual_step: 1.0,
-            quant,
+            compressor: quant.into(),
             threads: 0,
         };
         let problem = LinRegProblem::new(&data, &partition, rho);
@@ -260,7 +260,7 @@ fn threaded_ring_matches_engine_bit_for_bit() {
         workers,
         rho,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
     let topo = Topology::ring(workers).unwrap();
@@ -318,7 +318,7 @@ fn simulated_star_matches_engine_on_ideal_network() {
         workers,
         rho,
         dual_step: 1.0,
-        quant: Some(QuantConfig::default()),
+        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
         threads: 0,
     };
     let topo = Topology::star(workers);

@@ -3,7 +3,7 @@
 //! the serialized bytes never disagree with `Payload::bits()` by more
 //! than the fixed frame overhead.
 
-use qgadmm::comm::{wire, CommStats, Message, Payload};
+use qgadmm::comm::{wire, CommStats, Message, Payload, SparseMsg};
 use qgadmm::quant::{bitpack, QuantizedMsg};
 use qgadmm::testing::property;
 use qgadmm::util::rng::Rng;
@@ -41,13 +41,36 @@ fn quantized_msg_roundtrip_and_size() {
     });
 }
 
+fn random_sparse(rng: &mut Rng) -> SparseMsg {
+    // Occasionally exercise the wide-model (u32-index) path.
+    let dims = if rng.below(5) == 0 { 70_000 } else { 1 + rng.below(1_024) };
+    let k = rng.below(dims.min(24) + 1);
+    let mut picked: Vec<u32> = rng
+        .sample_indices(dims, k)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    picked.sort_unstable();
+    picked.dedup();
+    let values = (0..picked.len())
+        .map(|_| rng.uniform_f32() * 4.0 - 2.0)
+        .collect();
+    SparseMsg {
+        dims,
+        indices: picked,
+        values,
+    }
+}
+
 fn random_payload(rng: &mut Rng) -> Payload {
-    match rng.below(3) {
+    match rng.below(5) {
         0 => Payload::Stop,
         1 => {
             let d = rng.below(128);
             Payload::Full((0..d).map(|_| rng.uniform_f32() * 6.0 - 3.0).collect())
         }
+        2 => Payload::Sparse(random_sparse(rng)),
+        3 => Payload::Censored,
         _ => {
             let bits = 1 + rng.below(16) as u8;
             let d = rng.below(128);
@@ -63,10 +86,68 @@ fn random_payload(rng: &mut Rng) -> Payload {
 
 fn dims_of(p: &Payload) -> usize {
     match p {
-        Payload::Stop => 0,
+        Payload::Stop | Payload::Censored => 0,
         Payload::Full(v) => v.len(),
         Payload::Quantized(q) => q.levels.len(),
+        Payload::Sparse(s) => s.dims,
     }
+}
+
+#[test]
+fn frame_length_matches_payload_bits_plus_header_every_variant() {
+    // The accounting drift guard: for every payload variant — including
+    // the sparse one — the framed length × 8 equals `Payload::bits()`
+    // plus the documented header overhead. Byte-aligned variants (Stop,
+    // Censored, Full, Sparse) match *exactly*; the quantized body packs
+    // levels to a byte boundary and charges two full 32-bit words for its
+    // 5-byte header, so its slack is its documented padding bound.
+    property("frame bits = payload bits + overhead", 500, |rng: &mut Rng| {
+        let payload = random_payload(rng);
+        let frame_bits = 8 * wire::frame_len(&payload) as u64;
+        let header_bits = 8 * wire::HEADER_BYTES as u64;
+        match &payload {
+            Payload::Quantized(q) => {
+                // body = 5 bytes + ⌈b·d/8⌉; accounted = b·d + 64.
+                let body_bits = 8 * (5 + (q.bits as usize * q.levels.len()).div_ceil(8)) as u64;
+                assert_eq!(frame_bits, header_bits + body_bits);
+                let slack = frame_bits - payload.bits();
+                assert!(slack > 0 && slack <= wire::OVERHEAD_BITS);
+            }
+            _ => {
+                assert_eq!(
+                    frame_bits,
+                    payload.bits() + header_bits,
+                    "byte-aligned variant must cost exactly bits() + header"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sparse_payload_roundtrips_bit_exactly() {
+    property("sparse payload codec", 300, |rng: &mut Rng| {
+        let sparse = random_sparse(rng);
+        let dims = sparse.dims;
+        let msg = Message {
+            from: rng.below(100),
+            round: rng.below(10_000) as u64,
+            payload: Payload::Sparse(sparse.clone()),
+        };
+        let bytes = wire::encode_frame(&msg);
+        let (back, used) = wire::decode_frame(&bytes, dims).unwrap();
+        assert_eq!(used, bytes.len());
+        match back.payload {
+            Payload::Sparse(s) => {
+                assert_eq!(s, sparse);
+                // f32 values survive bit-exactly (to_bits comparison).
+                for (a, b) in s.values.iter().zip(&sparse.values) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("variant changed across the wire: {other:?}"),
+        }
+    });
 }
 
 #[test]
