@@ -6,6 +6,7 @@
 //! Run: `cargo run --release --example distributed_runtime`
 
 use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
+use qgadmm::coordinator::engine::RunOptions;
 use qgadmm::coordinator::threaded::run_threaded;
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -34,7 +35,16 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     println!("spawning {workers} worker threads (chain topology, 2-bit quantized links)...");
-    let report = run_threaded(&cfg, solvers, 2_000, 21, |objective_sum, _thetas| {
+    // RunOptions are honored uniformly across runtimes — including early
+    // stopping: the leader latches the fleet the moment the loss gap
+    // crosses the target, even though workers pipeline ahead.
+    let opts = RunOptions {
+        iterations: 2_000,
+        eval_every: 1,
+        stop_below: Some(1e-4),
+        stop_above: None,
+    };
+    let report = run_threaded(&cfg, solvers, &opts, 21, |objective_sum, _thetas| {
         (objective_sum - f_star).abs()
     })?;
 
@@ -45,8 +55,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nfinal gap {:.3e} after {} quantized broadcasts ({} bits total)",
+        "\nfinal gap {:.3e} after {} iterations / {} quantized broadcasts ({} bits total)",
         report.recorder.last_value().unwrap(),
+        report.iterations_run,
         report.comm.transmissions,
         report.comm.bits
     );

@@ -13,14 +13,19 @@
 //!    with the nearest-neighbor heuristic and training continues on the
 //!    survivors.
 //!
+//! Every run returns the unified `RunSummary`; the simulator's extras
+//! (link-layer ledger, virtual clock, time-to-target) ride in its
+//! `SimExt`.
+//!
 //! Run: `cargo run --release --example lossy_network`
+//! (set QGADMM_QUICK=1 for a CI-sized sweep)
 
-use qgadmm::config::{BurstParams, Dropout, ExperimentConfig, QuantConfig, SimConfig};
+use qgadmm::config::{BurstParams, Dropout, ExperimentConfig, GadmmConfig, QuantConfig, SimConfig};
 use qgadmm::coordinator::engine::RunOptions;
 use qgadmm::coordinator::simulated::SimulatedGadmm;
-use qgadmm::config::GadmmConfig;
 use qgadmm::data::partition::Partition;
 use qgadmm::figures::helpers::{LinregWorld, LINREG_RHO};
+use qgadmm::metrics::report::RunSummary;
 use qgadmm::model::linreg::LinRegProblem;
 
 fn run_once(
@@ -30,7 +35,7 @@ fn run_once(
     sim_cfg: SimConfig,
     iterations: u64,
     target: f64,
-) -> qgadmm::coordinator::simulated::SimReport {
+) -> RunSummary {
     let gcfg = GadmmConfig {
         workers: cfg.gadmm.workers,
         rho: LINREG_RHO,
@@ -63,10 +68,11 @@ fn fmt_t(t: Option<f64>) -> String {
 }
 
 fn main() {
+    let quick = std::env::var("QGADMM_QUICK").is_ok();
     let mut cfg = ExperimentConfig::default();
-    cfg.gadmm.workers = 12;
+    cfg.gadmm.workers = if quick { 8 } else { 12 };
     let target = 1e-4;
-    let iters = 8_000;
+    let iters = if quick { 2_000 } else { 8_000 };
     let world = LinregWorld::new(&cfg, cfg.seed, cfg.seed ^ 0x4C);
     println!(
         "deployed {} workers; chain length {:.0} m; target loss gap {target:.0e}\n",
@@ -76,8 +82,12 @@ fn main() {
 
     // ---- 1. loss sweep ---------------------------------------------------
     println!("== iid frame loss sweep (time to target) ==");
-    println!("{:>6} {:>12} {:>12} {:>12} {:>12}", "loss", "GADMM", "Q-GADMM", "retrans(G)", "retrans(Q)");
-    for loss in [0.0, 0.05, 0.1, 0.2] {
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}",
+        "loss", "GADMM", "Q-GADMM", "retrans(G)", "retrans(Q)"
+    );
+    let losses: &[f64] = if quick { &[0.0, 0.1] } else { &[0.0, 0.05, 0.1, 0.2] };
+    for &loss in losses {
         let mut s = SimConfig::default();
         s.loss = loss;
         let g = run_once(&world, &cfg, None, s.clone(), iters, target);
@@ -91,10 +101,10 @@ fn main() {
         );
         println!(
             "{loss:>6.2} {:>12} {:>12} {:>12} {:>12}",
-            fmt_t(g.time_to_target_secs),
-            fmt_t(q.time_to_target_secs),
-            g.net.retransmissions,
-            q.net.retransmissions,
+            fmt_t(g.sim_ext().time_to_target_secs),
+            fmt_t(q.sim_ext().time_to_target_secs),
+            g.sim_ext().net.retransmissions,
+            q.sim_ext().net.retransmissions,
         );
     }
 
@@ -113,9 +123,9 @@ fn main() {
     );
     println!(
         "Q-GADMM bursty: time-to-target {}  retrans {}  stale rounds {}",
-        fmt_t(q.time_to_target_secs),
-        q.net.retransmissions,
-        q.net.abandoned,
+        fmt_t(q.sim_ext().time_to_target_secs),
+        q.sim_ext().net.retransmissions,
+        q.sim_ext().net.abandoned,
     );
 
     // ---- 3. worker dropout -----------------------------------------------
@@ -128,7 +138,7 @@ fn main() {
             at_iteration: 400,
         },
         Dropout {
-            worker: 8,
+            worker: cfg.gadmm.workers - 2,
             at_iteration: 900,
         },
     ];
@@ -140,12 +150,14 @@ fn main() {
         iters,
         target,
     );
+    // One printing/serialization path with the CLI (RunSummary methods).
+    q.print_summary("Q-GADMM+drop");
     println!(
         "Q-GADMM with 2 dropouts: ran {} iterations, {} restitches, final gap {:.3e}, time-to-target {}",
         q.iterations_run,
-        q.restitches,
+        q.sim_ext().restitches,
         q.recorder.last_value().unwrap_or(f64::NAN),
-        fmt_t(q.time_to_target_secs),
+        fmt_t(q.sim_ext().time_to_target_secs),
     );
     println!(
         "(the survivor chain optimizes the survivors' objective; the original \

@@ -1,57 +1,45 @@
-//! Quickstart: decentralized linear regression with Q-GADMM in ~40 lines.
+//! Quickstart: decentralized linear regression with Q-GADMM through the
+//! unified Session API in ~20 lines.
 //!
-//! Ten workers on a chain, 2-bit stochastic quantization, loss-gap curve
-//! printed as it converges to the centralized optimum.
+//! One `Session` picks the four orthogonal axes — problem, compressor,
+//! topology, driver — and every driver returns the same `RunSummary`.
+//! Swap `DriverKind::Engine` for `Threaded` (one OS thread per worker)
+//! or `Sim` (discrete-event network simulator) and nothing else changes.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! (set QGADMM_QUICK=1 for the CI-sized dataset)
 
-use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
-use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
-use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
-use qgadmm::data::partition::Partition;
-use qgadmm::model::linreg::LinRegProblem;
-use qgadmm::net::topology::Topology;
+use qgadmm::prelude::*;
 
-fn main() {
-    // 1. Data: a 20k×6 regression set, uniformly sharded over 10 workers.
-    let data = LinRegDataset::synthesize(&LinRegSpec::default(), 42);
-    let (_, f_star) = data.optimum(); // centralized optimum for the metric
-    let workers = 10;
-    let partition = Partition::contiguous(data.samples(), workers);
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QGADMM_QUICK").is_ok();
 
-    // 2. Algorithm: Q-GADMM = GADMM + 2-bit stochastic quantization.
-    //    (Other per-link schemes: CompressorConfig::FullPrecision,
-    //    Censored { .. }, TopK { .. } — see the README's "Compression
-    //    schemes" section.)
-    let cfg = GadmmConfig {
-        workers,
-        rho: 6400.0,
-        dual_step: 1.0,
-        compressor: CompressorConfig::Stochastic(QuantConfig::default()),
-        threads: 0,
-    };
-    let problem = LinRegProblem::new(&data, &partition, cfg.rho);
-    let mut engine = GadmmEngine::new(cfg, problem, Topology::line(workers), 7);
+    // Q-GADMM = GADMM + 2-bit stochastic quantization (the default
+    // compressor). Ten workers on a chain, loss-gap metric with early
+    // stop at the 1e-4 target.
+    let summary = Session::new(ProblemKind::LinReg)
+        .workers(10)
+        .driver(DriverKind::Engine)
+        .rho(6400.0)
+        .iterations(if quick { 400 } else { 5_000 })
+        .quick(quick)
+        .seed(7)
+        .run()?;
 
-    // 3. Train until the decentralized objective matches F* to 1e-4.
-    let opts = RunOptions {
-        iterations: 5_000,
-        eval_every: 1,
-        stop_below: Some(1e-4),
-        stop_above: None,
-    };
-    let report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
-
-    for p in report.recorder.thinned(12).points {
+    for p in summary.recorder.thinned(12).points {
         println!(
             "iter {:>5}  |F - F*| = {:>12.5e}   bits sent = {}",
             p.iteration, p.value, p.bits
         );
     }
     println!(
-        "\nconverged in {} iterations — every broadcast was {} bits instead of {} (32-bit)",
-        report.iterations_run,
-        2 * data.features() + 64,
-        32 * data.features(),
+        "\n{} driver finished: {} iterations, final gap {:.3e}, {} bits \
+         ({} broadcasts, every one quantized to 2 bits/coordinate + 64)",
+        summary.driver,
+        summary.iterations_run,
+        summary.final_value(),
+        summary.comm.bits,
+        summary.comm.transmissions,
     );
+    Ok(())
 }

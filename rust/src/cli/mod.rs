@@ -45,15 +45,24 @@ pub const USAGE: &str = "\
 qgadmm — Q-GADMM: quantized group ADMM for decentralized ML (paper reproduction)
 
 USAGE:
+  qgadmm run           [--problem P --driver D --workers N --rho R --bits B
+                        --compressor S --iters K --topology T ...]
+                       one Session: problem x compressor x topology x driver
   qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|all> [options]
-  qgadmm train-linreg  [--workers N --rho R --bits B --compressor S --iters K --topology T --use-xla true]
-  qgadmm train-dnn     [--workers N --rho R --bits B --compressor S --iters K --topology T]
-  qgadmm train-scale   [--dims D --workers N --threads T --bits B --iters K --topology T]
-  qgadmm simulate      [--loss P --workers N --iters K --topology T ...sim options]
+  qgadmm train-linreg  alias of `run --problem linreg`  (supports --use-xla true)
+  qgadmm train-dnn     alias of `run --problem mlp`
+  qgadmm train-scale   alias of `run --problem diag-linreg`  (--dims D)
+  qgadmm simulate      GADMM vs Q-GADMM vs --compressor through the network
+                       simulator [--loss P --workers N ...sim options]
   qgadmm info          (artifact + platform report)
 
 COMMON OPTIONS (also accepted from --config <file> as key = value lines):
-  --workers N          number of workers (linreg default 50, dnn 10)
+  --problem P          local problem: linreg (default), diag-linreg, mlp, logreg
+  --driver D           runtime: engine (default), threaded, sim
+  --eval_every K       metric evaluation cadence (>= 1; default per problem:
+                       linreg/logreg 1, mlp 5, diag-linreg 10)
+  --workers N          number of workers (linreg default 50, dnn/logreg 10,
+                       diag-linreg 16)
   --rho R              disagreement penalty
   --bits B             quantizer resolution (0 = full precision; applies to
                        the stochastic/censored compressors)

@@ -11,6 +11,7 @@ use crate::net::channel::ChannelParams;
 use crate::net::topology::TopologyKind;
 use crate::quant::compress::{Censored, CompressorKind, FullPrecision, TopK};
 use crate::quant::{BitPolicy, StochasticQuantizer};
+use crate::runtime::session::{DriverKind, ProblemKind};
 use crate::sim::link::{ComputeModel, LatencyModel, LossModel};
 use std::collections::BTreeMap;
 
@@ -544,6 +545,17 @@ impl SimConfig {
 pub struct ExperimentConfig {
     pub gadmm: GadmmConfig,
     pub net: NetConfig,
+    /// Which local problem the Session trains (`problem=` key /
+    /// `--problem` flag): `linreg` (default), `diag-linreg`, `mlp`,
+    /// `logreg`.
+    pub problem: ProblemKind,
+    /// Which runtime drives the run (`driver=` key / `--driver` flag):
+    /// `engine` (default), `threaded`, `sim`.
+    pub driver: DriverKind,
+    /// Metric evaluation cadence override (`eval_every=` key). `None`
+    /// resolves to the problem's default (1 for linreg/logreg, 5 for the
+    /// DNN, 10 for the scale task).
+    pub eval_every: Option<u64>,
     /// Communication graph for `train-*` and `simulate` (`topology=` key /
     /// `--topology` flag): `line` (default), `ring`, `star`, `grid2d`, or
     /// `random[:p]`. Geometry-driven figure runs keep the nearest-neighbor
@@ -577,6 +589,9 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             gadmm: GadmmConfig::default(),
             net: NetConfig::default(),
+            problem: ProblemKind::LinReg,
+            driver: DriverKind::Engine,
+            eval_every: None,
             topology: TopologyKind::Line,
             sim: SimConfig::default(),
             iterations: 2_000,
@@ -631,6 +646,19 @@ impl ExperimentConfig {
             }
             "iterations" | "iters" => {
                 self.iterations = value.parse().map_err(|_| bad("u64"))?
+            }
+            "problem" | "task" => {
+                self.problem = ProblemKind::parse(value).map_err(|why| bad(&why))?
+            }
+            "driver" | "runtime" => {
+                self.driver = DriverKind::parse(value).map_err(|why| bad(&why))?
+            }
+            "eval_every" | "eval-every" => {
+                let k: u64 = value.parse().map_err(|_| bad("u64"))?;
+                if k == 0 {
+                    return Err(bad("eval cadence >= 1"));
+                }
+                self.eval_every = Some(k);
             }
             "loss_target" | "loss-target" => self.loss_target = value.parse().map_err(|_| bad("f64"))?,
             "accuracy_target" | "accuracy-target" => {
@@ -1098,6 +1126,37 @@ mod tests {
             cfg.apply_kv(&kv),
             Err(ConfigError::BadValue { .. })
         ));
+    }
+
+    #[test]
+    fn problem_driver_and_eval_keys() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.problem, ProblemKind::LinReg);
+        assert_eq!(cfg.driver, DriverKind::Engine);
+        assert_eq!(cfg.eval_every, None);
+
+        let mut kv = KvMap::new();
+        kv.set("problem", "logreg");
+        kv.set("driver", "sim");
+        kv.set("eval_every", "5");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.problem, ProblemKind::LogReg);
+        assert_eq!(cfg.driver, DriverKind::Sim);
+        assert_eq!(cfg.eval_every, Some(5));
+
+        for (key, bad_value) in [
+            ("problem", "svm"),
+            ("driver", "gpu"),
+            ("eval_every", "0"),
+            ("eval_every", "often"),
+        ] {
+            let mut kv = KvMap::new();
+            kv.set(key, bad_value);
+            assert!(
+                matches!(cfg.apply_kv(&kv), Err(ConfigError::BadValue { .. })),
+                "{key}={bad_value} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -44,6 +44,8 @@ use super::residuals::{ResidualPoint, ResidualTracker};
 use crate::comm::CommStats;
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::RunSummary;
+use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink, WorkerSolver};
 use crate::net::channel::{transmission_energy, ChannelParams};
 use crate::net::topology::Topology;
@@ -68,17 +70,53 @@ pub struct EnergyCtx {
     pub broadcast_dist: Vec<f64>,
 }
 
-/// Options for a run loop.
+/// Options for a run loop — honored uniformly by all three runtimes
+/// (engine, threaded, simulated; see `runtime::session`).
 #[derive(Clone, Debug)]
 pub struct RunOptions {
     pub iterations: u64,
     /// Evaluate the figure-of-merit every `eval_every` iterations
     /// (evaluation is free in the model — it is not communication).
+    /// Must be ≥ 1 ([`RunOptions::validate`]); run loops defensively treat
+    /// 0 as 1 rather than dividing by it.
     pub eval_every: u64,
     /// Early-stop once the metric drops below this (loss-style runs).
     pub stop_below: Option<f64>,
     /// Early-stop once the metric rises above this (accuracy-style runs).
     pub stop_above: Option<f64>,
+}
+
+/// A [`RunOptions`] field combination no run loop can honor — the typed
+/// error the Session constructor surfaces instead of a panic deep inside
+/// an engine (`eval_every: 0` used to divide by zero at the eval check).
+#[derive(Debug, thiserror::Error)]
+#[error("invalid run options: {0}")]
+pub struct InvalidRunOptions(pub String);
+
+impl RunOptions {
+    /// Validate the options in one place. Every Session run calls this up
+    /// front; direct engine users get the same check for free via
+    /// [`RunOptions::normalized_eval_every`]'s clamping.
+    pub fn validate(&self) -> Result<(), InvalidRunOptions> {
+        if self.eval_every == 0 {
+            return Err(InvalidRunOptions(
+                "eval_every must be >= 1 (got 0); use 1 to evaluate every iteration"
+                    .to_string(),
+            ));
+        }
+        if self.stop_below.map(|t| t.is_nan()).unwrap_or(false) {
+            return Err(InvalidRunOptions("stop_below must not be NaN".to_string()));
+        }
+        if self.stop_above.map(|t| t.is_nan()).unwrap_or(false) {
+            return Err(InvalidRunOptions("stop_above must not be NaN".to_string()));
+        }
+        Ok(())
+    }
+
+    /// The eval cadence a run loop may safely modulo by (`0` clamps to 1).
+    pub fn normalized_eval_every(&self) -> u64 {
+        self.eval_every.max(1)
+    }
 }
 
 impl Default for RunOptions {
@@ -89,21 +127,6 @@ impl Default for RunOptions {
             stop_below: None,
             stop_above: None,
         }
-    }
-}
-
-/// Result of a run: metric curve, total communication, residual history.
-#[derive(Clone, Debug)]
-pub struct RunReport {
-    pub recorder: Recorder,
-    pub comm: CommStats,
-    pub residuals: Vec<ResidualPoint>,
-    pub iterations_run: u64,
-}
-
-impl RunReport {
-    pub fn final_loss_gap(&self) -> f64 {
-        self.recorder.last_value().unwrap_or(f64::NAN)
     }
 }
 
@@ -142,6 +165,11 @@ pub struct GadmmEngine<P: LocalProblem> {
     /// phases in parallel, so stop re-asking every phase of every
     /// iteration.
     par_unsupported: bool,
+    /// Collect per-broadcast [`BroadcastEvent`]s for an attached observer
+    /// (off by default so the hot path stays allocation-free).
+    watch_broadcasts: bool,
+    /// Event buffer drained to the observer after each iteration.
+    events: Vec<BroadcastEvent>,
 }
 
 impl<P: LocalProblem> GadmmEngine<P> {
@@ -173,6 +201,8 @@ impl<P: LocalProblem> GadmmEngine<P> {
             tracker: ResidualTracker::new(n, d),
             energy: None,
             par_unsupported: false,
+            watch_broadcasts: false,
+            events: Vec::new(),
             cfg,
         }
     }
@@ -377,6 +407,16 @@ impl<P: LocalProblem> GadmmEngine<P> {
     /// Charge one broadcast from position `p` (bit + energy accounting);
     /// censored rounds are tallied but never charged.
     fn record_broadcast(&mut self, p: usize, outcome: CompressOutcome) {
+        if self.watch_broadcasts {
+            self.events.push(BroadcastEvent {
+                // Broadcasts happen inside `iterate`, before the counter
+                // advances — they belong to the iteration being computed.
+                iteration: self.iteration + 1,
+                worker: self.topo.worker_at(p),
+                bits: if outcome.sent() { outcome.bits } else { 0 },
+                censored: !outcome.sent(),
+            });
+        }
         if !outcome.sent() {
             self.comm.record_censored();
             return;
@@ -497,10 +537,28 @@ impl<P: LocalProblem> GadmmEngine<P> {
 
     /// Run loop: iterate, evaluate `metric` every `eval_every` iterations,
     /// record the curve, honor early stopping.
-    pub fn run<F>(&mut self, opts: &RunOptions, mut metric: F) -> RunReport
+    pub fn run<F>(&mut self, opts: &RunOptions, metric: F) -> RunSummary
     where
         F: FnMut(&Self) -> f64,
     {
+        self.run_observed(opts, metric, &mut NoopObserver)
+    }
+
+    /// [`Self::run`] with a streaming [`Observer`]: `on_eval` fires at
+    /// every recorded point, `on_broadcast` (when the observer opts in)
+    /// at every broadcast, in position order per iteration.
+    pub fn run_observed<F>(
+        &mut self,
+        opts: &RunOptions,
+        mut metric: F,
+        observer: &mut dyn Observer,
+    ) -> RunSummary
+    where
+        F: FnMut(&Self) -> f64,
+    {
+        let eval_every = opts.normalized_eval_every();
+        self.watch_broadcasts = observer.wants_broadcasts();
+        self.events.clear();
         let mut recorder = Recorder::new("gadmm-run");
         let mut residuals = Vec::new();
         let mut iterations_run = 0;
@@ -508,9 +566,17 @@ impl<P: LocalProblem> GadmmEngine<P> {
             let res = self.iterate();
             iterations_run += 1;
             residuals.push(res);
-            if self.iteration % opts.eval_every == 0 {
+            if self.watch_broadcasts {
+                let events = std::mem::take(&mut self.events);
+                for ev in &events {
+                    observer.on_broadcast(ev);
+                }
+                self.events = events;
+                self.events.clear();
+            }
+            if self.iteration % eval_every == 0 {
                 let value = metric(self);
-                recorder.push(CurvePoint {
+                let point = CurvePoint {
                     iteration: self.iteration,
                     // Paper counting (Sec. V-A): each worker's broadcast is
                     // one communication round ⇒ N rounds per iteration
@@ -520,7 +586,9 @@ impl<P: LocalProblem> GadmmEngine<P> {
                     energy_joules: self.comm.energy_joules,
                     compute_secs: self.compute.seconds() / self.workers() as f64,
                     value,
-                });
+                };
+                recorder.push(point);
+                observer.on_eval(&point);
                 if opts.stop_below.map(|t| value <= t).unwrap_or(false)
                     || opts.stop_above.map(|t| value >= t).unwrap_or(false)
                 {
@@ -528,11 +596,15 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 }
             }
         }
-        RunReport {
+        self.watch_broadcasts = false;
+        RunSummary {
+            driver: "engine",
             recorder,
             comm: self.comm.clone(),
             residuals,
             iterations_run,
+            thetas: self.theta.clone(),
+            sim: None,
         }
     }
 }
@@ -816,5 +888,75 @@ mod tests {
         let report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
         assert!(report.iterations_run < 10_000);
         assert!(report.final_loss_gap() <= 1e-3);
+    }
+
+    #[test]
+    fn eval_every_zero_is_a_typed_error_not_a_panic() {
+        // Regression: eval_every 0 used to divide by zero at the eval
+        // check. Validation is centralized on RunOptions; the run loop
+        // itself defensively clamps to 1.
+        let opts = RunOptions {
+            eval_every: 0,
+            ..RunOptions::default()
+        };
+        let err = opts.validate().unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "{err}");
+        assert_eq!(opts.normalized_eval_every(), 1);
+
+        let (_, mut engine) = setup(4, None, 1600.0);
+        let opts = RunOptions {
+            iterations: 5,
+            eval_every: 0,
+            stop_below: None,
+            stop_above: None,
+        };
+        let report = engine.run(&opts, |eng| eng.global_objective());
+        assert_eq!(report.iterations_run, 5);
+        assert_eq!(report.recorder.points.len(), 5, "clamped to every iteration");
+    }
+
+    #[test]
+    fn observer_streams_evals_and_broadcasts() {
+        use crate::metrics::{BroadcastEvent, Observer};
+
+        #[derive(Default)]
+        struct Spy {
+            evals: Vec<f64>,
+            broadcasts: Vec<BroadcastEvent>,
+        }
+        impl Observer for Spy {
+            fn on_eval(&mut self, point: &crate::metrics::recorder::CurvePoint) {
+                self.evals.push(point.value);
+            }
+            fn on_broadcast(&mut self, event: &BroadcastEvent) {
+                self.broadcasts.push(*event);
+            }
+            fn wants_broadcasts(&self) -> bool {
+                true
+            }
+        }
+
+        let workers = 4;
+        let (_, mut engine) = setup(workers, Some(QuantConfig::default()), 1600.0);
+        let opts = RunOptions {
+            iterations: 3,
+            eval_every: 2,
+            stop_below: None,
+            stop_above: None,
+        };
+        let mut spy = Spy::default();
+        let report = engine.run_observed(&opts, |eng| eng.global_objective(), &mut spy);
+        // eval_every = 2 over 3 iterations ⇒ one recorded point (k = 2).
+        assert_eq!(spy.evals.len(), 1);
+        assert_eq!(report.recorder.points.len(), 1);
+        assert_eq!(report.recorder.points[0].value, spy.evals[0]);
+        // One broadcast per worker per iteration, tagged by iteration.
+        assert_eq!(spy.broadcasts.len(), workers * 3);
+        assert_eq!(spy.broadcasts[0].iteration, 1);
+        assert_eq!(spy.broadcasts.last().unwrap().iteration, 3);
+        let bits: u64 = spy.broadcasts.iter().map(|b| b.bits).sum();
+        assert_eq!(bits, report.comm.bits);
+        // Final models ride on the summary (one per position).
+        assert_eq!(report.thetas.len(), workers);
     }
 }

@@ -23,8 +23,12 @@ pub mod residuals;
 pub mod simulated;
 pub mod threaded;
 
-pub use engine::{EnergyCtx, GadmmEngine, RunOptions, RunReport};
-pub use simulated::{SimReport, SimulatedGadmm};
+pub use engine::{EnergyCtx, GadmmEngine, InvalidRunOptions, RunOptions};
+pub use simulated::SimulatedGadmm;
+
+// The unified result type all three runtimes return (the old
+// `RunReport` / `ThreadedReport` / `SimReport` trio, collapsed).
+pub use crate::metrics::report::{RunSummary, SimExt};
 
 use crate::config::GadmmConfig;
 use crate::data::images::ImageDataset;
@@ -37,13 +41,15 @@ use crate::net::topology::Topology;
 /// Convenience driver: run a GADMM-family algorithm on a linear-regression
 /// dataset over an identity chain (no geometry ⇒ no energy accounting) and
 /// return the loss-gap curve. Used by tests and the quickstart example;
-/// the figure harness drives [`GadmmEngine`] directly with geometry.
+/// the figure harness drives [`GadmmEngine`] directly with geometry, and
+/// `runtime::session::Session` is the uniform front door over all three
+/// runtimes.
 pub fn run_linreg(
     cfg: &GadmmConfig,
     data: &LinRegDataset,
     iterations: u64,
     seed: u64,
-) -> anyhow::Result<RunReport> {
+) -> anyhow::Result<RunSummary> {
     let partition = Partition::contiguous(data.samples(), cfg.workers);
     let problem = LinRegProblem::new(data, &partition, cfg.rho);
     let topo = Topology::line(cfg.workers);
@@ -71,7 +77,7 @@ pub fn run_mlp(
     iterations: u64,
     eval_every: u64,
     seed: u64,
-) -> anyhow::Result<RunReport> {
+) -> anyhow::Result<RunSummary> {
     let partition = Partition::contiguous(data.train_len(), cfg.workers);
     let problem = MlpProblem::new(data, &partition, MlpDims::paper(), seed ^ 0xD1A);
     let init = problem.initial_theta(seed ^ 0x1517);

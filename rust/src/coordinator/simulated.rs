@@ -48,6 +48,8 @@ use super::engine::RunOptions;
 use crate::comm::{wire, CommStats, Message};
 use crate::config::{Dropout, GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::{RunSummary, SimExt};
+use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink};
 use crate::net::geometry::Point;
 use crate::net::topology::Topology;
@@ -96,31 +98,6 @@ pub enum TraceEvent {
     Dropout { iteration: u64, worker: usize },
     /// The topology was re-stitched over the survivors.
     Restitch { iteration: u64, survivors: usize },
-}
-
-/// Outcome of a simulated run.
-#[derive(Clone, Debug)]
-pub struct SimReport {
-    /// Metric curve; `compute_secs` carries the *virtual wall-clock*
-    /// seconds at each point (that is the simulator's x-axis).
-    pub recorder: Recorder,
-    /// Cumulative ARQ retransmissions, same x-axes.
-    pub retransmissions: Recorder,
-    /// Cumulative stale-mirror rounds, same x-axes.
-    pub stale: Recorder,
-    /// Paper-accounting communication totals (one broadcast = one
-    /// transmission of `Payload::bits()` bits, as in the engine).
-    pub comm: CommStats,
-    /// Link-layer ledger (wire bytes count every ARQ attempt).
-    pub net: NetStats,
-    pub trace: Vec<TraceEvent>,
-    pub iterations_run: u64,
-    /// Virtual time at the end of the run.
-    pub sim_secs: f64,
-    /// Virtual time at which the metric first crossed the run's stop
-    /// threshold, if it did.
-    pub time_to_target_secs: Option<f64>,
-    pub restitches: u64,
 }
 
 /// One incident link's complete per-worker state: the neighbor's *worker
@@ -184,6 +161,11 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     pending_dropouts: Vec<Dropout>,
     trace: Vec<TraceEvent>,
     dims: usize,
+    /// Collect per-broadcast [`BroadcastEvent`]s for an attached observer
+    /// (off unless `run_observed` is driving an opted-in observer).
+    watch_broadcasts: bool,
+    /// Event buffer drained to the observer after each iteration.
+    events: Vec<BroadcastEvent>,
 }
 
 impl<P: LocalProblem> SimulatedGadmm<P> {
@@ -264,6 +246,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             pending_dropouts,
             trace: Vec::new(),
             dims: d,
+            watch_broadcasts: false,
+            events: Vec::new(),
         };
         this.relink();
         this
@@ -556,6 +540,14 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 worker: w,
             });
         }
+        if self.watch_broadcasts {
+            self.events.push(BroadcastEvent {
+                iteration: iter,
+                worker: w,
+                bits: if outcome.sent() { outcome.bits } else { 0 },
+                censored: !outcome.sent(),
+            });
+        }
         if !outcome.sent() {
             // Censored round: nothing is put on any link — receivers
             // deliberately reuse their mirrors (NOT the stale/lost case,
@@ -653,11 +645,30 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     }
 
     /// Run loop mirroring `GadmmEngine::run`, with the virtual clock as
-    /// the extra recorded axis.
-    pub fn run<F>(&mut self, opts: &RunOptions, mut metric: F) -> SimReport
+    /// the extra recorded axis. Returns the unified [`RunSummary`] with
+    /// its [`SimExt`] populated.
+    pub fn run<F>(&mut self, opts: &RunOptions, metric: F) -> RunSummary
     where
         F: FnMut(&Self) -> f64,
     {
+        self.run_observed(opts, metric, &mut NoopObserver)
+    }
+
+    /// [`Self::run`] with a streaming [`Observer`]: `on_eval` fires at
+    /// every recorded point, `on_broadcast` (for opted-in observers) at
+    /// every broadcast in virtual-time order.
+    pub fn run_observed<F>(
+        &mut self,
+        opts: &RunOptions,
+        mut metric: F,
+        observer: &mut dyn Observer,
+    ) -> RunSummary
+    where
+        F: FnMut(&Self) -> f64,
+    {
+        let eval_every = opts.normalized_eval_every();
+        self.watch_broadcasts = observer.wants_broadcasts();
+        self.events.clear();
         let mut recorder = Recorder::new("sim-run");
         let mut retransmissions = Recorder::new("sim-retransmissions");
         let mut stale = Recorder::new("sim-stale-rounds");
@@ -668,7 +679,15 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 break;
             }
             iterations_run += 1;
-            if self.iteration % opts.eval_every == 0 {
+            if self.watch_broadcasts {
+                let events = std::mem::take(&mut self.events);
+                for ev in &events {
+                    observer.on_broadcast(ev);
+                }
+                self.events = events;
+                self.events.clear();
+            }
+            if self.iteration % eval_every == 0 {
                 let value = metric(self);
                 let point = CurvePoint {
                     iteration: self.iteration,
@@ -679,6 +698,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                     value,
                 };
                 recorder.push(point);
+                observer.on_eval(&point);
                 retransmissions.push(CurvePoint {
                     value: self.net.stats.retransmissions as f64,
                     ..point
@@ -697,17 +717,28 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 }
             }
         }
-        SimReport {
+        self.watch_broadcasts = false;
+        let thetas = self
+            .chain
+            .iter()
+            .map(|&w| self.workers[w].theta.clone())
+            .collect();
+        RunSummary {
+            driver: "sim",
             recorder,
-            retransmissions,
-            stale,
             comm: self.comm.clone(),
-            net: self.net.stats.clone(),
-            trace: std::mem::take(&mut self.trace),
+            residuals: Vec::new(),
             iterations_run,
-            sim_secs: self.now.as_secs_f64(),
-            time_to_target_secs,
-            restitches: self.restitches,
+            thetas,
+            sim: Some(SimExt {
+                retransmissions,
+                stale,
+                net: self.net.stats.clone(),
+                trace: std::mem::take(&mut self.trace),
+                sim_secs: self.now.as_secs_f64(),
+                time_to_target_secs,
+                restitches: self.restitches,
+            }),
         }
     }
 }
@@ -910,12 +941,14 @@ mod tests {
             stop_above: None,
         };
         let report = sim.run(&opts, |s| (s.global_objective() - f_star).abs());
-        assert!(report.time_to_target_secs.is_some());
-        assert!(report.sim_secs > 0.0);
+        let ext = report.sim_ext();
+        assert!(ext.time_to_target_secs.is_some());
+        assert!(ext.sim_secs > 0.0);
         assert!(report.iterations_run < 6_000);
         let last = report.recorder.points.last().unwrap();
         assert!(last.value <= target);
-        assert_eq!(report.recorder.points.len(), report.retransmissions.points.len());
+        assert_eq!(report.recorder.points.len(), ext.retransmissions.points.len());
+        assert_eq!(report.driver, "sim");
     }
 
     #[test]

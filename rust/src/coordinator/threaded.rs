@@ -18,20 +18,36 @@
 //! out-of-band metrics channel (instrumentation, not charged). Given the
 //! same seed, this runtime is **bit-for-bit equivalent** to
 //! [`super::engine::GadmmEngine`] on the same topology — enforced by the
-//! `threaded_equivalence` integration test (chains) and
-//! `topology_generalization` (rings).
+//! `threaded_equivalence` integration test (chains), `topology_generalization`
+//! (rings), and `session_equivalence` (through the Session API).
+//!
+//! [`RunOptions`] is honored uniformly with the other runtimes, including
+//! **early stopping**: when the leader's metric crosses `stop_below` /
+//! `stop_above` at iteration `k`, it publishes `k` through a shared stop
+//! latch. Workers check the latch before starting an iteration; a worker
+//! that halts sends a 0-bit [`Payload::Stop`] marker to its neighbors so
+//! nobody stays blocked mid-phase (receiving `Stop` halts the receiver
+//! too, cascading shutdown across the graph). Workers may have pipelined
+//! past `k` when the latch lands — the leader simply stops consuming
+//! their reports, so the returned curve, communication totals, and final
+//! models are exactly those of iteration `k`.
 
 use crate::comm::transport::{
     in_process_network_with_neighbors, topology_neighbors, Endpoint,
 };
 use crate::comm::{CommStats, Message, Payload};
 use crate::config::GadmmConfig;
+use crate::coordinator::engine::RunOptions;
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::report::RunSummary;
+use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, NeighborLink, WorkerSolver};
 use crate::net::topology::Topology;
 use crate::quant::{Compressor, Mirror};
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(60);
@@ -49,60 +65,89 @@ struct LinkSpec {
 struct WorkerReport {
     pos: usize,
     iteration: u64,
-    theta: Vec<f32>,
+    /// The worker's model — shipped only on iterations the leader reads
+    /// it (eval iterations and the final one); `None` otherwise, sparing
+    /// the per-iteration clone + channel traffic at large d.
+    theta: Option<Vec<f32>>,
+    /// `f_n(θ_k)` — only computed on eval iterations (0.0 otherwise).
     objective: f64,
     bits: u64,
     /// `false` when this round's broadcast was censored (no channel use).
     sent: bool,
 }
 
-/// Outcome of a threaded run.
-pub struct ThreadedReport {
-    pub recorder: Recorder,
-    pub comm: CommStats,
-    /// Final model per topology position.
-    pub thetas: Vec<Vec<f32>>,
-}
-
-/// Run `iterations` of (Q-)GADMM over `solvers` (identity chain, solver
-/// `p` at position `p`) on real threads. See [`run_threaded_on`] for
-/// arbitrary bipartite topologies.
+/// Run (Q-)GADMM over `solvers` (identity chain, solver `p` at position
+/// `p`) on real threads. See [`run_threaded_on`] for arbitrary bipartite
+/// topologies, shared initialization, and observers.
 pub fn run_threaded(
     cfg: &GadmmConfig,
     solvers: Vec<Box<dyn WorkerSolver>>,
-    iterations: u64,
+    opts: &RunOptions,
     seed: u64,
     metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
-) -> anyhow::Result<ThreadedReport> {
+) -> anyhow::Result<RunSummary> {
     assert!(solvers.len() >= 2, "GADMM needs at least two workers");
     let topo = Topology::line(solvers.len());
-    run_threaded_on(&topo, cfg, solvers, iterations, seed, metric)
+    run_threaded_on(
+        &topo,
+        cfg,
+        solvers,
+        opts,
+        seed,
+        None,
+        true,
+        metric,
+        &mut NoopObserver,
+    )
 }
 
-/// Run `iterations` of (Q-)GADMM over `solvers` (position order: solver
-/// `p` drives `topo`'s position `p`) on real threads. `metric` is
-/// evaluated by the leader on the collected `(θ, Σf_n)` each iteration;
-/// by convention it receives the sum of local objectives so loss-gap
-/// metrics are cheap to form.
+/// Run (Q-)GADMM over `solvers` (position order: solver `p` drives
+/// `topo`'s position `p`) on real threads, honoring every [`RunOptions`]
+/// field (iteration cap, eval cadence, early stopping).
+///
+/// `initial_theta` anchors every worker, its view, its compressor, and
+/// all mirrors to one shared vector before iteration 1 (the threaded
+/// equivalent of `GadmmEngine::set_initial_theta`).
+///
+/// `metric` is evaluated by the leader every `eval_every` iterations on
+/// `(Σ_p f_p(θ_p), thetas)` — the objective sum is accumulated in
+/// ascending position order so it is bit-identical to the deterministic
+/// engine's metric closures, and `thetas` is position-indexed. Pass
+/// `needs_objective: false` when the metric only reads `thetas`
+/// (accuracy-style problems) and workers skip the per-eval `f_n(θ)`
+/// pass entirely (the sum arrives as 0.0).
+#[allow(clippy::too_many_arguments)]
 pub fn run_threaded_on(
     topo: &Topology,
     cfg: &GadmmConfig,
     solvers: Vec<Box<dyn WorkerSolver>>,
-    iterations: u64,
+    opts: &RunOptions,
     seed: u64,
+    initial_theta: Option<&[f32]>,
+    needs_objective: bool,
     mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
-) -> anyhow::Result<ThreadedReport> {
+    observer: &mut dyn Observer,
+) -> anyhow::Result<RunSummary> {
     let n = solvers.len();
     assert_eq!(cfg.workers, n, "config/solver count mismatch");
     assert_eq!(topo.len(), n, "topology/solver count mismatch");
     assert!(n >= 2);
     let d = solvers[0].dims();
+    if let Some(init) = initial_theta {
+        assert_eq!(init.len(), d, "initial theta dimension mismatch");
+    }
+    let eval_every = opts.normalized_eval_every();
 
     // The topology is known up front, so endpoints only hold senders to
     // their actual neighbors (O(edges) handles, and a misdirected send
     // surfaces as a TransportError instead of a bad delivery).
     let endpoints = in_process_network_with_neighbors(n, &topology_neighbors(topo));
     let (report_tx, report_rx) = channel::<WorkerReport>();
+
+    // Early-stop latch: the leader publishes the iteration at which the
+    // metric crossed its threshold; workers refuse to *start* any later
+    // iteration (see the module docs for the unblocking cascade).
+    let stop_at = Arc::new(AtomicU64::new(u64::MAX));
 
     // Seed forks must match the deterministic engine exactly.
     let mut root = Rng::seed_from_u64(seed);
@@ -133,26 +178,42 @@ pub fn run_threaded_on(
         .zip(specs.into_iter())
         .enumerate()
     {
-        let cfg = cfg.clone();
-        let tx = report_tx.clone();
-        handles.push(std::thread::spawn(move || {
-            worker_main(
-                pos, d, cfg, is_head, links, solver, endpoint, rng, tx, iterations,
-            )
-        }));
+        let ctx = WorkerCtx {
+            pos,
+            dims: d,
+            cfg: cfg.clone(),
+            is_head,
+            links,
+            endpoint,
+            rng,
+            report: report_tx.clone(),
+            iterations: opts.iterations,
+            eval_every,
+            needs_objective,
+            stop_at: Arc::clone(&stop_at),
+            initial_theta: initial_theta.map(|t| t.to_vec()),
+        };
+        handles.push(std::thread::spawn(move || worker_main(ctx, solver)));
     }
     drop(report_tx);
 
     // Leader: aggregate per-iteration reports into the metric curve.
     // Workers pipeline (a head can be one iteration ahead of a distant
     // tail), so reports arrive interleaved across iterations — buffer
-    // until an iteration is complete, then process in order.
+    // until an iteration is complete, then process in position order.
     let mut recorder = Recorder::new("threaded-run");
     let mut comm = CommStats::default();
     let mut thetas = vec![vec![0.0f32; d]; n];
+    if let Some(init) = initial_theta {
+        for t in thetas.iter_mut() {
+            t.copy_from_slice(init);
+        }
+    }
+    let watch = observer.wants_broadcasts();
     let mut pending: std::collections::BTreeMap<u64, Vec<WorkerReport>> =
         std::collections::BTreeMap::new();
-    for k in 1..=iterations {
+    let mut iterations_run = 0u64;
+    'iters: for k in 1..=opts.iterations {
         while pending.get(&k).map(|v| v.len()).unwrap_or(0) < n {
             let rep = report_rx
                 .recv_timeout(RECV_TIMEOUT)
@@ -166,88 +227,181 @@ pub fn run_threaded_on(
             pending.entry(rep.iteration).or_default().push(rep);
         }
         let batch = pending.remove(&k).expect("just completed");
-        let mut objective_sum = 0.0f64;
-        let mut bits_this_iter = 0u64;
-        let mut sent_this_iter = 0u64;
+        // Reports arrive in nondeterministic thread order; slot them by
+        // position so the objective sum (float addition is order-
+        // sensitive) is accumulated exactly like the engine's
+        // position-order metric closures.
+        let mut slots: Vec<Option<WorkerReport>> = (0..n).map(|_| None).collect();
         for rep in batch {
+            let p = rep.pos;
+            assert!(slots[p].is_none(), "duplicate report from position {p}");
+            slots[p] = Some(rep);
+        }
+        let reps: Vec<WorkerReport> = slots
+            .into_iter()
+            .map(|s| s.expect("leader counted n reports for this iteration"))
+            .collect();
+        let mut objective_sum = 0.0f64;
+        for rep in &reps {
             objective_sum += rep.objective;
-            bits_this_iter += rep.bits;
+            comm.bits += rep.bits; // 0 for censored rounds
             if rep.sent {
-                sent_this_iter += 1;
+                comm.transmissions += 1;
             } else {
                 comm.record_censored();
             }
-            thetas[rep.pos] = rep.theta;
         }
-        comm.bits += bits_this_iter;
-        comm.transmissions += sent_this_iter;
-        let value = metric(objective_sum, &thetas);
-        recorder.push(CurvePoint {
-            iteration: k,
-            comm_rounds: k * n as u64,
-            bits: comm.bits,
-            energy_joules: 0.0,
-            compute_secs: 0.0,
-            value,
-        });
+        if watch {
+            // Emit events in the engine's broadcast order — heads
+            // ascending, then tails ascending — so an order-sensitive
+            // observer sees one sequence per iteration regardless of the
+            // driver (the Observer contract).
+            for phase in 0..2 {
+                for rep in &reps {
+                    if topo.is_head(rep.pos) != (phase == 0) {
+                        continue;
+                    }
+                    observer.on_broadcast(&BroadcastEvent {
+                        iteration: k,
+                        worker: topo.worker_at(rep.pos),
+                        bits: rep.bits,
+                        censored: !rep.sent,
+                    });
+                }
+            }
+        }
+        for rep in reps {
+            if let Some(theta) = rep.theta {
+                thetas[rep.pos] = theta;
+            }
+        }
+        iterations_run = k;
+        if k % eval_every == 0 {
+            let value = metric(objective_sum, &thetas);
+            let point = CurvePoint {
+                iteration: k,
+                comm_rounds: k * n as u64,
+                bits: comm.bits,
+                energy_joules: 0.0,
+                compute_secs: 0.0,
+                value,
+            };
+            recorder.push(point);
+            observer.on_eval(&point);
+            if opts.stop_below.map(|t| value <= t).unwrap_or(false)
+                || opts.stop_above.map(|t| value >= t).unwrap_or(false)
+            {
+                // Publish the stop iteration; workers past it halt at
+                // their next iteration boundary and cascade Stop markers
+                // to unblock anyone mid-phase. Their extra reports are
+                // simply never consumed.
+                stop_at.store(k, Ordering::Release);
+                break 'iters;
+            }
+        }
     }
 
     for h in handles {
         h.join()
             .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
     }
-    Ok(ThreadedReport {
+    Ok(RunSummary {
+        driver: "threaded",
         recorder,
         comm,
+        residuals: Vec::new(),
+        iterations_run,
         thetas,
+        sim: None,
     })
 }
 
-/// The worker thread body.
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
+/// Everything a worker thread owns besides its solver.
+struct WorkerCtx {
     pos: usize,
-    d: usize,
+    dims: usize,
     cfg: GadmmConfig,
     is_head: bool,
     links: Vec<LinkSpec>,
-    mut solver: Box<dyn WorkerSolver>,
     endpoint: Endpoint,
-    mut rng: Rng,
+    rng: Rng,
     report: Sender<WorkerReport>,
     iterations: u64,
-) -> anyhow::Result<()> {
-    let deg = links.len();
+    eval_every: u64,
+    /// Whether the leader's metric reads the objective sum (loss-style
+    /// metrics); accuracy-style metrics skip the per-eval `f_n(θ)` pass.
+    needs_objective: bool,
+    stop_at: Arc<AtomicU64>,
+    initial_theta: Option<Vec<f32>>,
+}
+
+/// Outcome of draining one expected phase message.
+enum Recv {
+    /// A neighbor broadcast was applied to its mirror.
+    Applied,
+    /// A `Stop` marker arrived: a neighbor halted, so this worker must
+    /// halt too (and cascade its own markers).
+    Stopped,
+}
+
+/// The worker thread body.
+fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow::Result<()> {
+    let d = ctx.dims;
+    let deg = ctx.links.len();
     let mut theta = vec![0.0f32; d];
     // One dual + one mirror per incident link, in link order.
     let mut lambdas: Vec<Vec<f32>> = (0..deg).map(|_| vec![0.0f32; d]).collect();
     let mut mirrors: Vec<Mirror> = (0..deg).map(|_| Mirror::new(d)).collect();
-    let mut compressor = cfg.compressor.build(d);
+    let mut compressor = ctx.cfg.compressor.build(d);
     // Own view (what neighbors believe about us) — needed for the dual
     // update, which must use θ̂ on *both* ends of each link.
     let mut own_view = vec![0.0f32; d];
+    if let Some(init) = &ctx.initial_theta {
+        // Seed-shared init, mirroring GadmmEngine::set_initial_theta:
+        // model, view, compressor anchor, and every mirror agree without
+        // any communication.
+        theta.copy_from_slice(init);
+        own_view.copy_from_slice(init);
+        compressor.reset_to(init);
+        for m in mirrors.iter_mut() {
+            m.reset_to(init);
+        }
+    }
 
-    for k in 1..=iterations {
+    let mut halted = false;
+    'iterations: for k in 1..=ctx.iterations {
+        // Early-stop latch: never *start* an iteration past the leader's
+        // published stop point.
+        if k > ctx.stop_at.load(Ordering::Acquire) {
+            halted = true;
+            break 'iterations;
+        }
+
         // Tails receive the heads' fresh broadcasts before solving.
-        if !is_head {
+        if !ctx.is_head {
             for _ in 0..deg {
-                let msg = endpoint.recv(RECV_TIMEOUT)?;
-                apply_neighbor(msg, pos, &links, &mut mirrors)?;
+                match recv_neighbor(&ctx.endpoint, ctx.pos, &ctx.links, &mut mirrors)? {
+                    Recv::Applied => {}
+                    Recv::Stopped => {
+                        halted = true;
+                        break 'iterations;
+                    }
+                }
             }
         }
 
         // Local primal solve (eq. (14)–(17)).
         {
             let mut buf = LinkBuf::new();
-            for (i, l) in links.iter().enumerate() {
+            for (i, l) in ctx.links.iter().enumerate() {
                 buf.push(NeighborLink {
                     sign: l.sign,
                     lambda: lambdas[i].as_slice(),
                     theta: mirrors[i].theta_hat(),
                 });
             }
-            let ctx = buf.ctx(cfg.rho);
-            solver.solve(&ctx, &mut theta);
+            let nctx = buf.ctx(ctx.cfg.rho);
+            solver.solve(&nctx, &mut theta);
         }
 
         // Broadcast the update (one transmission reaches every neighbor).
@@ -255,33 +409,56 @@ fn worker_main(
         // marker through the mailboxes: the in-process transport doubles
         // as the phase barrier, so receivers must be unblocked even when
         // the mirror is deliberately reused.
-        let outcome = compressor.compress_into(&theta, &mut rng, &mut own_view);
+        let outcome = compressor.compress_into(&theta, &mut ctx.rng, &mut own_view);
         let bits = outcome.bits;
         let payload = compressor.last_payload();
-        for l in &links {
-            endpoint.send(
-                l.peer,
-                Message {
-                    from: pos,
-                    round: k,
-                    payload: payload.clone(),
-                },
-            )?;
+        let mut lost_neighbor = false;
+        for l in &ctx.links {
+            if ctx
+                .endpoint
+                .send(
+                    l.peer,
+                    Message {
+                        from: ctx.pos,
+                        round: k,
+                        payload: payload.clone(),
+                    },
+                )
+                .is_err()
+            {
+                lost_neighbor = true;
+                break;
+            }
+        }
+        if lost_neighbor {
+            // A neighbor's inbox is gone. During an early-stop shutdown
+            // that is the expected race (this worker pipelined past the
+            // latch before it was published); mid-run it is a real fault.
+            if ctx.stop_at.load(Ordering::Acquire) == u64::MAX {
+                anyhow::bail!("worker {} lost a neighbor mid-run", ctx.pos);
+            }
+            halted = true;
+            break 'iterations;
         }
 
         // Heads receive the tails' iteration-k broadcasts after sending.
-        if is_head {
+        if ctx.is_head {
             for _ in 0..deg {
-                let msg = endpoint.recv(RECV_TIMEOUT)?;
-                apply_neighbor(msg, pos, &links, &mut mirrors)?;
+                match recv_neighbor(&ctx.endpoint, ctx.pos, &ctx.links, &mut mirrors)? {
+                    Recv::Applied => {}
+                    Recv::Stopped => {
+                        halted = true;
+                        break 'iterations;
+                    }
+                }
             }
         }
 
         // Local dual updates (eq. (18)) from the shared θ̂s: the sign
         // selects which end of the edge's orientation this worker is
         // (`+` ⇒ λ += αρ(θ̂_peer − θ̂_own), the chain's left-link case).
-        let step = cfg.dual_step * cfg.rho;
-        for (i, l) in links.iter().enumerate() {
+        let step = ctx.cfg.dual_step * ctx.cfg.rho;
+        for (i, l) in ctx.links.iter().enumerate() {
             let nb = mirrors[i].theta_hat();
             let lam = &mut lambdas[i];
             if l.sign > 0.0 {
@@ -295,36 +472,69 @@ fn worker_main(
             }
         }
 
-        report
+        // Leader-side instrumentation is paid for only when read: the
+        // objective on eval iterations of loss-style metrics, the model
+        // clone on eval iterations (metric input) and the final one
+        // (the summary's thetas — early stops land on eval iterations).
+        let is_eval = k % ctx.eval_every == 0;
+        let objective = if ctx.needs_objective && is_eval {
+            solver.objective(&theta)
+        } else {
+            0.0
+        };
+        let theta_out = if is_eval || k == ctx.iterations {
+            Some(theta.clone())
+        } else {
+            None
+        };
+        ctx.report
             .send(WorkerReport {
-                pos,
+                pos: ctx.pos,
                 iteration: k,
-                theta: theta.clone(),
-                objective: solver.objective(&theta),
+                theta: theta_out,
+                objective,
                 bits,
                 sent: outcome.sent(),
             })
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
     }
+
+    if halted {
+        // Unblock neighbors still waiting on this worker's frames. A
+        // neighbor may already be gone (its inbox dropped) — that is the
+        // expected end state of the cascade, not an error.
+        for l in &ctx.links {
+            let _ = ctx.endpoint.send(
+                l.peer,
+                Message {
+                    from: ctx.pos,
+                    round: u64::MAX,
+                    payload: Payload::Stop,
+                },
+            );
+        }
+    }
     Ok(())
 }
 
-/// Apply a neighbor broadcast to the mirror of the link it arrived on
-/// (`Censored` markers deliberately leave the mirror untouched).
-fn apply_neighbor(
-    msg: Message,
+/// Receive one phase message and apply it to the mirror of the link it
+/// arrived on (`Censored` markers deliberately leave the mirror
+/// untouched; `Stop` markers halt the receiver).
+fn recv_neighbor(
+    endpoint: &Endpoint,
     pos: usize,
     links: &[LinkSpec],
     mirrors: &mut [Mirror],
-) -> anyhow::Result<()> {
+) -> anyhow::Result<Recv> {
+    let msg = endpoint.recv(RECV_TIMEOUT)?;
+    if matches!(msg.payload, Payload::Stop) {
+        return Ok(Recv::Stopped);
+    }
     let Some(i) = links.iter().position(|l| l.peer == msg.from) else {
         anyhow::bail!("worker {pos} got message from non-neighbor {}", msg.from);
     };
-    match msg.payload {
-        Payload::Stop => anyhow::bail!("unexpected stop"),
-        other => mirrors[i].apply_payload(&other),
-    }
-    Ok(())
+    mirrors[i].apply_payload(&msg.payload);
+    Ok(Recv::Applied)
 }
 
 #[cfg(test)]
@@ -351,6 +561,15 @@ mod tests {
         (data, boxed)
     }
 
+    fn opts(iterations: u64) -> RunOptions {
+        RunOptions {
+            iterations,
+            eval_every: 1,
+            stop_below: None,
+            stop_above: None,
+        }
+    }
+
     #[test]
     fn threaded_qgadmm_converges() {
         let workers = 6;
@@ -363,7 +582,7 @@ mod tests {
             compressor: CompressorConfig::Stochastic(QuantConfig::default()),
             threads: 0,
         };
-        let report = run_threaded(&cfg, boxed, 600, 7, |obj_sum, _| {
+        let report = run_threaded(&cfg, boxed, &opts(600), 7, |obj_sum, _| {
             (obj_sum - f_star).abs()
         })
         .unwrap();
@@ -373,6 +592,7 @@ mod tests {
         // 6 broadcasts/iter × 600 iters, quantized payloads.
         assert_eq!(report.comm.bits, 600 * 6 * (2 * 6 + 64));
         assert_eq!(report.comm.transmissions, 600 * 6);
+        assert_eq!(report.iterations_run, 600);
     }
 
     #[test]
@@ -387,7 +607,7 @@ mod tests {
             compressor: CompressorConfig::FullPrecision,
             threads: 0,
         };
-        let report = run_threaded(&cfg, boxed, 500, 3, |obj_sum, _| {
+        let report = run_threaded(&cfg, boxed, &opts(500), 3, |obj_sum, _| {
             (obj_sum - f_star).abs()
         })
         .unwrap();
@@ -412,13 +632,128 @@ mod tests {
             threads: 0,
         };
         let topo = Topology::star(workers);
-        let report = run_threaded_on(&topo, &cfg, boxed, 800, 11, |obj_sum, _| {
-            (obj_sum - f_star).abs()
-        })
+        let report = run_threaded_on(
+            &topo,
+            &cfg,
+            boxed,
+            &opts(800),
+            11,
+            None,
+            true,
+            |obj_sum, _| (obj_sum - f_star).abs(),
+            &mut NoopObserver,
+        )
         .unwrap();
         let gap = report.recorder.last_value().unwrap();
         let start = report.recorder.points[0].value;
         assert!(gap < 1e-2 * start, "gap={gap} start={start}");
         assert_eq!(report.comm.transmissions, 800 * 5);
+    }
+
+    #[test]
+    fn threaded_early_stops_and_shuts_down_cleanly() {
+        // The pre-Session runtime took a bare iteration count; RunOptions
+        // early stopping must now halt the fleet mid-run without leaving
+        // any worker blocked (a deadlock would trip the 60 s transport
+        // timeout and fail the run).
+        let workers = 6;
+        let (data, boxed) = solvers(workers, 1600.0, 31);
+        let (_, f_star) = data.optimum();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::FullPrecision,
+            threads: 0,
+        };
+        let opts = RunOptions {
+            iterations: 10_000,
+            eval_every: 1,
+            stop_below: Some(1e-3),
+            stop_above: None,
+        };
+        let report = run_threaded(&cfg, boxed, &opts, 7, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+        assert!(
+            report.iterations_run < 10_000,
+            "must stop early, ran {}",
+            report.iterations_run
+        );
+        assert!(report.final_value() <= 1e-3);
+        // Accounting stops at the stop iteration even though workers may
+        // have pipelined further.
+        let d = 6u64;
+        assert_eq!(report.comm.bits, report.iterations_run * 6 * 32 * d);
+        assert_eq!(
+            report.recorder.points.last().unwrap().iteration,
+            report.iterations_run
+        );
+    }
+
+    #[test]
+    fn threaded_honors_eval_every() {
+        let workers = 4;
+        let (data, boxed) = solvers(workers, 1600.0, 33);
+        let (_, f_star) = data.optimum();
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::FullPrecision,
+            threads: 0,
+        };
+        let opts = RunOptions {
+            iterations: 50,
+            eval_every: 10,
+            stop_below: None,
+            stop_above: None,
+        };
+        let report = run_threaded(&cfg, boxed, &opts, 3, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+        assert_eq!(report.recorder.points.len(), 5);
+        for (i, p) in report.recorder.points.iter().enumerate() {
+            assert_eq!(p.iteration, 10 * (i as u64 + 1));
+        }
+        assert_eq!(report.iterations_run, 50);
+    }
+
+    #[test]
+    fn threaded_initial_theta_anchors_the_fleet() {
+        // With a huge shared init, iteration 1's objective must reflect
+        // that anchor (not the zero vector), exactly like the engine's
+        // set_initial_theta.
+        let workers = 4;
+        let (data, boxed) = solvers(workers, 1600.0, 33);
+        let (_, f_star) = data.optimum();
+        let d = boxed[0].dims();
+        let init = vec![10.0f32; d];
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
+            threads: 0,
+        };
+        let topo = Topology::line(workers);
+        let report = run_threaded_on(
+            &topo,
+            &cfg,
+            boxed,
+            &opts(200),
+            5,
+            Some(&init),
+            true,
+            |obj_sum, _| (obj_sum - f_star).abs(),
+            &mut NoopObserver,
+        )
+        .unwrap();
+        // Still converges from the remote anchor.
+        let gap = report.recorder.last_value().unwrap();
+        let start = report.recorder.points[0].value;
+        assert!(gap < 1e-2 * start, "gap={gap} start={start}");
     }
 }

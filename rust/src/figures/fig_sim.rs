@@ -8,14 +8,15 @@
 use super::helpers::{LinregWorld, LINREG_RHO};
 use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
 use crate::coordinator::engine::RunOptions;
-use crate::coordinator::simulated::{SimReport, SimulatedGadmm};
+use crate::coordinator::simulated::SimulatedGadmm;
 use crate::data::partition::Partition;
-use crate::metrics::report::FigureReport;
+use crate::metrics::report::{FigureReport, RunSummary};
 use crate::model::linreg::LinRegProblem;
 use std::path::Path;
 
-/// One simulated linreg run at a given loss rate; returns the full
-/// [`SimReport`] (curve x-axis: `compute_secs` = virtual seconds).
+/// One simulated linreg run at a given loss rate; returns the unified
+/// [`RunSummary`] with its `SimExt` populated (curve x-axis:
+/// `compute_secs` = virtual seconds).
 #[allow(clippy::too_many_arguments)]
 pub fn run_sim_linreg(
     name: &str,
@@ -26,7 +27,7 @@ pub fn run_sim_linreg(
     iterations: u64,
     target: f64,
     seed: u64,
-) -> SimReport {
+) -> RunSummary {
     let gcfg = GadmmConfig {
         workers: cfg.gadmm.workers,
         rho: LINREG_RHO,
@@ -96,13 +97,14 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
             );
             rep.meta(
                 &format!("time_to_target[{name}]"),
-                r.time_to_target_secs
+                r.sim_ext()
+                    .time_to_target_secs
                     .map(|t| format!("{t:.4}"))
                     .unwrap_or_else(|| "-".into()),
             );
             rep.meta(
                 &format!("retransmissions[{name}]"),
-                r.net.retransmissions,
+                r.sim_ext().net.retransmissions,
             );
             rep.add(r.recorder.thinned(1_000));
         }

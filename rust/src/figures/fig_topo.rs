@@ -97,13 +97,14 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
 
         rep.meta(
             &format!("time_to_target[{}]", kind.name()),
-            r.time_to_target_secs
+            r.sim_ext()
+                .time_to_target_secs
                 .map(|t| format!("{t:.4}"))
                 .unwrap_or_else(|| "-".into()),
         );
         rep.meta(
             &format!("bits_to_target[{}]", kind.name()),
-            if r.time_to_target_secs.is_some() {
+            if r.sim_ext().time_to_target_secs.is_some() {
                 spent.to_string()
             } else {
                 "-".into()

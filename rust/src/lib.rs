@@ -6,6 +6,9 @@
 //! stack:
 //!
 //! * **L3 (this crate)** — the decentralized training coordinator:
+//!   a unified Session run layer ([`runtime::session`]: one builder, one
+//!   `Driver` trait over the engine / threaded / simulated runtimes, one
+//!   `RunSummary` report, an open `ProblemKind` registry),
 //!   bipartite communication topologies (line, ring, star, grid, random),
 //!   head/tail alternating scheduler, pluggable per-link compression
 //!   ([`quant::compress`]: stochastic quantization, censoring, top-k
@@ -44,10 +47,14 @@ pub mod util;
 
 /// Convenience re-exports for the public API surface used by examples.
 pub mod prelude {
-    pub use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig};
+    pub use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig, SimConfig};
+    pub use crate::coordinator::engine::RunOptions;
     pub use crate::data::partition::Partition;
     pub use crate::metrics::recorder::Recorder;
-    pub use crate::net::topology::Topology;
+    pub use crate::metrics::report::{RunSummary, SimExt};
+    pub use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
+    pub use crate::net::topology::{Topology, TopologyKind};
     pub use crate::quant::{Compressor, CompressorKind, StochasticQuantizer};
+    pub use crate::runtime::session::{Driver, DriverKind, ProblemKind, Session};
     pub use crate::util::rng::Rng;
 }

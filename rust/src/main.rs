@@ -1,24 +1,27 @@
 //! `qgadmm` — leader entrypoint + CLI.
 //!
-//! Subcommands: `figures` (regenerate any paper figure), `train-linreg`
-//! and `train-dnn` (single runs, optionally through the PJRT artifacts),
-//! `simulate` (GADMM vs Q-GADMM through the discrete-event network
-//! simulator, with a time-to-target JSON report), `info`
-//! (artifact/platform report). See `qgadmm --help`.
+//! The canonical training entrypoint is the `run` subcommand: one Session
+//! (problem × compressor × topology × driver) resolved from the shared
+//! config pipeline. `train-linreg`, `train-dnn`, and `train-scale` remain
+//! as back-compat aliases that pin the problem axis; `simulate` keeps its
+//! multi-scheme comparison (GADMM vs Q-GADMM vs the configured scheme)
+//! through the discrete-event simulator. `figures` regenerates any paper
+//! figure and `info` reports the artifact/platform state. See
+//! `qgadmm --help`.
 
 use qgadmm::cli::{self, USAGE};
 use qgadmm::config::{CompressorConfig, ExperimentConfig, KvMap};
-use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
-use qgadmm::coordinator::simulated::SimReport;
+use qgadmm::coordinator::engine::GadmmEngine;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
 use qgadmm::figures;
-use qgadmm::model::linreg::LinRegProblem;
-use qgadmm::model::mlp::{MlpDims, MlpProblem};
+use qgadmm::metrics::report::RunSummary;
 use qgadmm::net::topology::TopologyKind;
+use qgadmm::runtime::session::{DriverKind, ProblemKind, Session};
 use qgadmm::runtime::solver::{XlaLinRegProblem, XlaMlpProblem};
 use qgadmm::runtime::Runtime;
+use qgadmm::util::json::Json;
 
 /// Flags handled by main itself (not ExperimentConfig keys).
 const META_FLAGS: &[&str] = &["fig", "quick", "config", "help"];
@@ -53,17 +56,26 @@ fn main() -> anyhow::Result<()> {
             let quick = inv.flags.get("quick").map(|v| v == "true").unwrap_or(false);
             figures::run(fig, &cfg, quick)
         }
-        "train-linreg" => {
+        "run" => {
             let cfg = build_config(&inv.flags)?;
-            train_linreg(&cfg)
+            run_session(cfg)
+        }
+        // Back-compat aliases: the old train-* subcommands pin the
+        // problem axis and flow through the same Session path.
+        "train-linreg" => {
+            let mut cfg = build_config(&inv.flags)?;
+            cfg.problem = ProblemKind::LinReg;
+            run_session(cfg)
         }
         "train-dnn" => {
-            let cfg = build_config(&inv.flags)?;
-            train_dnn(&cfg)
+            let mut cfg = build_config(&inv.flags)?;
+            cfg.problem = ProblemKind::Mlp;
+            run_session(cfg)
         }
         "train-scale" => {
-            let cfg = build_config(&inv.flags)?;
-            train_scale(&cfg)
+            let mut cfg = build_config(&inv.flags)?;
+            cfg.problem = ProblemKind::DiagLinReg;
+            run_session(cfg)
         }
         "simulate" => {
             let cfg = build_config(&inv.flags)?;
@@ -87,11 +99,54 @@ fn variant_name(comp: &CompressorConfig, family: &str) -> String {
     }
 }
 
+/// The algorithm family a problem belongs to (stochastic local solves ⇒
+/// the S-prefixed names).
+fn family(problem: ProblemKind) -> &'static str {
+    match problem {
+        ProblemKind::Mlp => "SGADMM",
+        _ => "GADMM",
+    }
+}
+
+/// One Session run: resolve, execute on the configured driver (or the
+/// XLA engine branch under `--use-xla`), print the curve + summary, and
+/// write `results/run/report.json` through the shared `RunSummary`
+/// serialization path.
+fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
+    let variant = variant_name(&cfg.gadmm.compressor, family(cfg.problem));
+    let results_dir = cfg.results_dir.clone();
+    let wall = std::time::Instant::now();
+    let summary = if cfg.use_xla {
+        run_xla(&cfg)?
+    } else {
+        let session = Session::from_config(&cfg);
+        println!("{}", session.describe());
+        session.run()?
+    };
+    let wall = wall.elapsed().as_secs_f64();
+    summary.print_curve(&variant, 15);
+    summary.print_summary(&variant);
+    println!(
+        "{} finished: {} iterations in {:.3}s wall, final {:.3e}, {} bits",
+        variant,
+        summary.iterations_run,
+        wall,
+        summary.final_value(),
+        summary.comm.bits,
+    );
+    let dir = std::path::Path::new(&results_dir).join("run");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("report.json");
+    std::fs::write(&path, summary.to_json().to_string_pretty())?;
+    println!("run report written to {}", path.display());
+    Ok(())
+}
+
 /// `--use-xla` supports the artifact-validated schemes only (stochastic /
 /// full precision); reject the rest up front with a clear message instead
 /// of failing deep inside a run.
 fn check_xla_compressor(cfg: &ExperimentConfig) -> anyhow::Result<()> {
-    if cfg.use_xla && !cfg.gadmm.compressor.xla_compatible() {
+    if !cfg.gadmm.compressor.xla_compatible() {
         anyhow::bail!(
             "--use-xla supports only the stochastic and full-precision compressors \
              (the PJRT artifacts are validated against those pipelines), but the \
@@ -103,208 +158,93 @@ fn check_xla_compressor(cfg: &ExperimentConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Single linreg run printing the loss curve; `--use-xla true` routes the
-/// local solves through the PJRT artifact.
-fn train_linreg(cfg: &ExperimentConfig) -> anyhow::Result<()> {
-    let spec = LinRegSpec::default();
-    let data = LinRegDataset::synthesize(&spec, cfg.seed);
-    let (_, f_star) = data.optimum();
-    let partition = Partition::contiguous(data.samples(), cfg.gadmm.workers);
-    let topo = cfg.topology.build(cfg.gadmm.workers, cfg.seed)?;
-    println!(
-        "topology: {} ({} workers, {} links)",
-        cfg.topology.name(),
-        topo.len(),
-        topo.edge_count()
-    );
-    let mut gcfg = cfg.gadmm.clone();
-    if gcfg.rho == 24.0 {
-        // The paper's ρ=24 was tuned to California Housing units; the
-        // synthetic default needs the fig7-tuned value.
-        gcfg.rho = qgadmm::figures::helpers::LINREG_RHO;
-    }
-    let opts = RunOptions {
-        iterations: cfg.iterations,
-        eval_every: 1,
-        stop_below: Some(cfg.loss_target),
-        stop_above: None,
-    };
-    let variant = variant_name(&gcfg.compressor, "GADMM");
-    check_xla_compressor(cfg)?;
-    if cfg.use_xla && !topo.chain_compatible() {
+/// `--use-xla` supports chain-compatible graphs only; the check must run
+/// on the topology the run will actually use (after per-problem worker
+/// re-defaulting).
+fn check_xla_topology(
+    topo: &qgadmm::net::topology::Topology,
+    kind: TopologyKind,
+) -> anyhow::Result<()> {
+    if !topo.chain_compatible() {
         anyhow::bail!(
             "--use-xla supports only chain-compatible topologies (line, ring): \
              the AOT artifacts are compiled for one left + one right neighbor \
              slot, but the {} topology has a worker with two links on the same \
              side — drop --use-xla to run on the native backend",
-            cfg.topology.name()
+            kind.name()
         );
     }
-    let report = if cfg.use_xla {
-        let rt = Runtime::load(Runtime::default_dir())?;
-        println!("platform: {} (XLA-backed local solves)", rt.platform());
-        let problem = XlaLinRegProblem::new(&rt, &data, &partition)?;
-        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
-        engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
-    } else {
-        let problem = LinRegProblem::new(&data, &partition, gcfg.rho);
-        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
-        engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
-    };
-    print_curve(&variant, &report.recorder, 15);
-    println!(
-        "{} finished: {} iterations, final gap {:.3e}, {} bits, compute {:.3}s",
-        variant,
-        report.iterations_run,
-        report.final_loss_gap(),
-        report.comm.bits,
-        report
-            .recorder
-            .points
-            .last()
-            .map(|p| p.compute_secs)
-            .unwrap_or(0.0)
-    );
     Ok(())
 }
 
-/// The d = 10k scale scenario: diagonal-Gram linreg (`model::scale`) with
-/// the parallel phase executor. Defaults to 16 workers and the configured
-/// `--dims` (10,000); `--threads 0` (auto) uses every core, `--threads 1`
-/// forces the sequential engine — both produce bit-identical results.
-fn train_scale(cfg: &ExperimentConfig) -> anyhow::Result<()> {
-    use qgadmm::model::scale::DiagLinRegProblem;
-
-    // Like train-dnn: the linreg default of 50 workers is re-defaulted for
-    // this scenario; an explicit --workers always wins.
-    let workers = if cfg.gadmm.workers == 50 { 16 } else { cfg.gadmm.workers };
-    let d = cfg.scale_dims;
-    let problem = DiagLinRegProblem::synthesize(d, workers, cfg.seed);
-    let (_, f_star) = problem.optimum();
-    let mut gcfg = cfg.gadmm.clone();
-    gcfg.workers = workers;
-    if gcfg.rho == 24.0 {
-        // The paper's linreg ρ was tuned for d = 6 Gram spectra; the
-        // whitened scale problem has curvatures in [0.5, 8].
-        gcfg.rho = 4.0;
+/// The XLA-backed path: local solves through the PJRT artifacts. The
+/// artifacts funnel through one client, so this path is engine-only and
+/// supports the artifact-compiled problems (linreg, mlp). Hyperparameters
+/// and run options come from the same `Session` resolution as the native
+/// drivers, so both backends train identical settings from identical
+/// flags; every compatibility check runs before the (expensive, possibly
+/// absent) artifact load so the typed errors always surface.
+fn run_xla(cfg: &ExperimentConfig) -> anyhow::Result<RunSummary> {
+    if cfg.driver != DriverKind::Engine {
+        anyhow::bail!(
+            "--use-xla runs on the deterministic engine only (the PJRT client is \
+             single-threaded); drop --driver {} or drop --use-xla",
+            cfg.driver.name()
+        );
     }
-    let threads = gcfg.threads;
-    let opts = RunOptions {
-        iterations: cfg.iterations,
-        eval_every: 10,
-        stop_below: Some(cfg.loss_target),
-        stop_above: None,
-    };
-    let variant = variant_name(&gcfg.compressor, "GADMM");
-    // Print the effective hyperparameters: like train-linreg/train-dnn, the
-    // un-overridden defaults (ρ=24, workers=50) are re-defaulted for this
-    // scenario, and the substitution must be visible in the output.
-    println!(
-        "scale scenario: {workers} workers, d = {d}, rho = {}, threads = {} ({variant})",
-        gcfg.rho,
-        if threads == 0 { "auto".to_string() } else { threads.to_string() },
-    );
-    let t0 = std::time::Instant::now();
-    let topo = cfg.topology.build(workers, cfg.seed)?;
-    let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
-    let report = engine.run(&opts, |eng| {
-        let thetas: Vec<Vec<f32>> = (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
-        (eng.problem().global_objective(&thetas) - f_star).abs()
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    print_curve(&variant, &report.recorder, 15);
-    println!(
-        "{} finished: {} iterations in {:.3}s wall ({:.1} iters/s), final gap {:.3e}, {} bits",
-        variant,
-        report.iterations_run,
-        wall,
-        report.iterations_run as f64 / wall.max(1e-9),
-        report.final_loss_gap(),
-        report.comm.bits,
-    );
-    Ok(())
-}
-
-/// Single DNN run (Q-SGADMM / SGADMM) printing the accuracy curve.
-fn train_dnn(cfg: &ExperimentConfig) -> anyhow::Result<()> {
-    let workers = if cfg.gadmm.workers == 50 { 10 } else { cfg.gadmm.workers };
-    let spec = ImageSpec::default();
-    let data = ImageDataset::synthesize(&spec, cfg.seed);
-    let partition = Partition::contiguous(data.train_len(), workers);
-    let topo = cfg.topology.build(workers, cfg.seed)?;
-    let mut gcfg = cfg.gadmm.clone();
-    gcfg.workers = workers;
-    gcfg.dual_step = qgadmm::figures::helpers::DNN_ALPHA;
-    if gcfg.rho == 24.0 {
-        gcfg.rho = qgadmm::figures::helpers::DNN_RHO;
+    check_xla_compressor(cfg)?;
+    if !matches!(cfg.problem, ProblemKind::LinReg | ProblemKind::Mlp) {
+        anyhow::bail!(
+            "--use-xla supports the artifact-compiled problems (linreg, mlp), \
+             not {:?} — drop --use-xla to run {} on the native backend",
+            cfg.problem.name(),
+            cfg.problem.name(),
+        );
     }
-    // Re-default the quantizer width for the DNN task (paper: 8 bits)
-    // unless the user overrode it; applies to every quantizing scheme.
-    if let CompressorConfig::Stochastic(q) | CompressorConfig::Censored { quant: q, .. } =
-        &mut gcfg.compressor
-    {
-        if q.bits == 2 {
-            q.bits = qgadmm::figures::helpers::DNN_BITS;
+    // One source of the per-problem re-defaulting rules: the Session.
+    let session = Session::from_config(cfg);
+    println!("{} (use_xla=true)", session.describe());
+    let gcfg = session.resolved_gadmm();
+    let opts = session.resolved_options();
+    opts.validate()?;
+    let topo = cfg.topology.build(gcfg.workers, cfg.seed)?;
+    check_xla_topology(&topo, cfg.topology)?;
+
+    let rt = Runtime::load(Runtime::default_dir())?;
+    println!("platform: {} (XLA-backed local solves)", rt.platform());
+    Ok(match cfg.problem {
+        ProblemKind::LinReg => {
+            let data = LinRegDataset::synthesize(&LinRegSpec::default(), cfg.seed);
+            let (_, f_star) = data.optimum();
+            let partition = Partition::contiguous(data.samples(), gcfg.workers);
+            let problem = XlaLinRegProblem::new(&rt, &data, &partition)?;
+            let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+            engine.run(&opts, |eng| (eng.global_objective() - f_star).abs())
         }
-    }
-    let variant = variant_name(&gcfg.compressor, "SGADMM");
-    check_xla_compressor(cfg)?;
-    if cfg.use_xla && !topo.chain_compatible() {
-        anyhow::bail!(
-            "--use-xla supports only chain-compatible topologies (line, ring): \
-             the AOT artifacts are compiled for one left + one right neighbor \
-             slot, but the {} topology has a worker with two links on the same \
-             side — drop --use-xla to run on the native backend",
-            cfg.topology.name()
-        );
-    }
-    let opts = RunOptions {
-        iterations: cfg.iterations.min(500),
-        eval_every: 5,
-        stop_below: None,
-        stop_above: Some(cfg.accuracy_target),
-    };
-    let report = if cfg.use_xla {
-        let rt = Runtime::load(Runtime::default_dir())?;
-        println!("platform: {} (XLA-backed local solves)", rt.platform());
-        let problem = XlaMlpProblem::new(&rt, &data, &partition, cfg.seed ^ 0xD1A)?;
-        let init = problem.initial_theta(cfg.seed ^ 0x1517);
-        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
-        engine.set_initial_theta(&init);
-        engine.run(&opts, |eng| {
-            let thetas: Vec<Vec<f32>> =
-                (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
-            eng.problem().average_model_accuracy(&thetas)
-        })
-    } else {
-        let problem = MlpProblem::new(&data, &partition, MlpDims::paper(), cfg.seed ^ 0xD1A);
-        let init = problem.initial_theta(cfg.seed ^ 0x1517);
-        let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
-        engine.set_initial_theta(&init);
-        engine.run(&opts, |eng| {
-            let thetas: Vec<Vec<f32>> =
-                (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
-            eng.problem().average_model_accuracy(&thetas)
-        })
-    };
-    print_curve(&variant, &report.recorder, 20);
-    println!(
-        "{} finished: {} iterations, accuracy {:.4}, {} bits",
-        variant,
-        report.iterations_run,
-        report.recorder.last_value().unwrap_or(f64::NAN),
-        report.comm.bits,
-    );
-    Ok(())
+        ProblemKind::Mlp => {
+            let data = ImageDataset::synthesize(&ImageSpec::default(), cfg.seed);
+            let partition = Partition::contiguous(data.train_len(), gcfg.workers);
+            let problem = XlaMlpProblem::new(&rt, &data, &partition, cfg.seed ^ 0xD1A)?;
+            let init = problem.initial_theta(cfg.seed ^ 0x1517);
+            let mut engine = GadmmEngine::new(gcfg, problem, topo, cfg.seed);
+            engine.set_initial_theta(&init);
+            engine.run(&opts, |eng| {
+                let thetas: Vec<Vec<f32>> =
+                    (0..eng.workers()).map(|p| eng.theta_at(p).to_vec()).collect();
+                eng.problem().average_model_accuracy(&thetas)
+            })
+        }
+        _ => unreachable!("problem kind checked above"),
+    })
 }
 
-/// GADMM vs Q-GADMM through the discrete-event network simulator at the
-/// configured loss rate; writes `results/simulate/report.json` with
-/// time-to-target, retransmission, and stale-round numbers per algorithm.
+/// GADMM vs Q-GADMM (plus the configured scheme) through the
+/// discrete-event network simulator at the configured loss rate; writes
+/// `results/simulate/report.json` with time-to-target, retransmission,
+/// and stale-round numbers per algorithm.
 fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
     use qgadmm::figures::fig_sim::run_sim_linreg;
     use qgadmm::figures::helpers::LinregWorld;
-    use qgadmm::util::json::Json;
 
     let mut c = cfg.clone();
     // The default experiment scale is tuned for the engine sweeps; the
@@ -354,7 +294,7 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
         entries.push((extra_name, c.gadmm.compressor));
     }
     for (name, compressor) in &entries {
-        let r = run_sim_linreg(
+        let r: RunSummary = run_sim_linreg(
             name,
             &world,
             &c,
@@ -364,8 +304,8 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
             c.loss_target,
             c.seed,
         );
-        print_sim_summary(name, &r);
-        algos.set(name, sim_report_json(&r));
+        r.print_summary(name);
+        algos.set(name, r.to_json());
     }
 
     let mut doc = Json::obj();
@@ -382,45 +322,6 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
     std::fs::write(&path, doc.to_string_pretty())?;
     println!("time-to-target report written to {}", path.display());
     Ok(())
-}
-
-fn print_sim_summary(name: &str, r: &SimReport) {
-    println!(
-        "{name:<12} iters={:<6} sim_time={:<10} bits={:<12} wire_bytes={:<12} retrans={:<8} stale={:<6} censored={}",
-        r.iterations_run,
-        r.time_to_target_secs
-            .map(|t| format!("{t:.3}s"))
-            .unwrap_or_else(|| format!("(>{:.3}s)", r.sim_secs)),
-        r.comm.bits,
-        r.net.wire_bytes,
-        r.net.retransmissions,
-        r.net.abandoned,
-        r.comm.censored,
-    );
-}
-
-fn sim_report_json(r: &SimReport) -> qgadmm::util::json::Json {
-    use qgadmm::util::json::Json;
-    let mut obj = Json::obj();
-    obj.set(
-        "time_to_target_secs",
-        r.time_to_target_secs.map(Json::Num).unwrap_or(Json::Null),
-    );
-    obj.set("sim_secs", Json::Num(r.sim_secs));
-    obj.set("iterations", Json::Num(r.iterations_run as f64));
-    obj.set("bits", Json::Num(r.comm.bits as f64));
-    obj.set("transmissions", Json::Num(r.comm.transmissions as f64));
-    obj.set("wire_bytes", Json::Num(r.net.wire_bytes as f64));
-    obj.set("retransmissions", Json::Num(r.net.retransmissions as f64));
-    obj.set("frames_delivered", Json::Num(r.net.delivered as f64));
-    // One frame abandoned at the ARQ cap == one stale-mirror round.
-    obj.set("frames_abandoned", Json::Num(r.net.abandoned as f64));
-    // Deliberate skips by a censoring compressor (mirror reuse, 0 bits) —
-    // never conflated with the involuntary abandoned/stale count above.
-    obj.set("censored_rounds", Json::Num(r.comm.censored as f64));
-    obj.set("restitches", Json::Num(r.restitches as f64));
-    obj.set("curve", r.recorder.thinned(400).to_json());
-    obj
 }
 
 fn info() -> anyhow::Result<()> {
@@ -443,19 +344,4 @@ fn info() -> anyhow::Result<()> {
         );
     }
     Ok(())
-}
-
-fn print_curve(name: &str, rec: &qgadmm::metrics::recorder::Recorder, rows: usize) {
-    println!("== {name} ==");
-    println!(
-        "{:>8} {:>10} {:>14} {:>14} {:>12}",
-        "iter", "rounds", "bits", "value", "compute_s"
-    );
-    let thin = rec.thinned(rows.max(2));
-    for p in &thin.points {
-        println!(
-            "{:>8} {:>10} {:>14} {:>14.6e} {:>12.4}",
-            p.iteration, p.comm_rounds, p.bits, p.value, p.compute_secs
-        );
-    }
 }

@@ -1,6 +1,82 @@
 //! Metrics: convergence curves indexed by the paper's three x-axes
 //! (communication rounds, transmitted bits, consumed energy) plus local
 //! computation time (Fig. 8), with CSV/JSON reporting.
+//!
+//! [`report::RunSummary`] is the single result type every runtime returns
+//! (engine, threaded, simulated — see `runtime::session`), and [`Observer`]
+//! is the streaming hook a run can drive while it progresses.
 
 pub mod recorder;
 pub mod report;
+
+use self::recorder::CurvePoint;
+
+/// One broadcast as observed on the run's hot path: who transmitted, at
+/// which iteration, and what it cost (censored rounds carry 0 bits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BroadcastEvent {
+    /// Iteration `k` (1-based) the broadcast belongs to.
+    pub iteration: u64,
+    /// Worker id of the sender.
+    pub worker: usize,
+    /// Bits charged for the broadcast (paper accounting).
+    pub bits: u64,
+    /// `true` when a censoring compressor skipped the round (0 bits, no
+    /// channel use — the tally still reaches the observer).
+    pub censored: bool,
+}
+
+/// Streaming hook into a run — the Session-API replacement for the ad-hoc
+/// metric closures: `on_eval` fires at every recorded curve point,
+/// `on_broadcast` at every broadcast, in broadcast order per iteration —
+/// heads ascending, then tails ascending, identically on the engine and
+/// threaded drivers (the simulated driver emits virtual-time order, which
+/// coincides with that on an ideal network).
+///
+/// Broadcast events cost a small per-broadcast buffer push on the hot
+/// path, so they are only collected when [`Observer::wants_broadcasts`]
+/// returns `true`; override it alongside `on_broadcast`.
+pub trait Observer {
+    /// A curve point was recorded (every `eval_every` iterations).
+    fn on_eval(&mut self, _point: &CurvePoint) {}
+
+    /// One broadcast happened (only delivered when
+    /// [`Observer::wants_broadcasts`] is overridden to `true`).
+    fn on_broadcast(&mut self, _event: &BroadcastEvent) {}
+
+    /// Opt into per-broadcast events. Defaults to `false` so observers
+    /// that only watch the metric curve keep the hot path allocation-free.
+    fn wants_broadcasts(&self) -> bool {
+        false
+    }
+}
+
+/// The do-nothing observer every plain `run` call uses.
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_observer_ignores_everything() {
+        let mut obs = NoopObserver;
+        assert!(!obs.wants_broadcasts());
+        obs.on_broadcast(&BroadcastEvent {
+            iteration: 1,
+            worker: 0,
+            bits: 10,
+            censored: false,
+        });
+        obs.on_eval(&CurvePoint {
+            iteration: 1,
+            comm_rounds: 1,
+            bits: 10,
+            energy_joules: 0.0,
+            compute_secs: 0.0,
+            value: 1.0,
+        });
+    }
+}

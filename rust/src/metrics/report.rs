@@ -1,10 +1,169 @@
-//! Figure/series reporting: writes `results/<figure>/…` files and prints
-//! the same rows/series the paper's plots show.
+//! Figure/series reporting — plus [`RunSummary`], the one result type
+//! every runtime returns.
+//!
+//! * [`RunSummary`] unifies the three pre-Session report types
+//!   (`RunReport` from the engine, `ThreadedReport` from the threaded
+//!   runtime, `SimReport` from the simulator): metric curve, communication
+//!   totals, residual history, iterations run, final per-position models,
+//!   and — for simulated runs — a [`SimExt`] with the link-layer ledger,
+//!   event trace, virtual clock, and re-stitch count.
+//! * [`FigureReport`] writes `results/<figure>/…` files and prints the
+//!   same rows/series the paper's plots show.
 
 use super::recorder::Recorder;
+use crate::comm::CommStats;
+use crate::coordinator::residuals::ResidualPoint;
+use crate::coordinator::simulated::TraceEvent;
+use crate::sim::link::NetStats;
 use crate::util::json::Json;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+
+/// Simulator-only extras of a [`RunSummary`] — everything the
+/// discrete-event runtime knows that bits-only accounting cannot.
+#[derive(Clone, Debug, Default)]
+pub struct SimExt {
+    /// Cumulative ARQ retransmissions, same x-axes as the main curve.
+    pub retransmissions: Recorder,
+    /// Cumulative stale-mirror rounds, same x-axes.
+    pub stale: Recorder,
+    /// Link-layer ledger (wire bytes count every ARQ attempt).
+    pub net: NetStats,
+    /// Event trace (only populated with `SimConfig::record_trace`).
+    pub trace: Vec<TraceEvent>,
+    /// Virtual time at the end of the run.
+    pub sim_secs: f64,
+    /// Virtual time at which the metric first crossed the run's stop
+    /// threshold, if it did.
+    pub time_to_target_secs: Option<f64>,
+    /// Topology re-stitches after worker dropouts.
+    pub restitches: u64,
+}
+
+/// Result of a run through any of the three runtimes — what
+/// `GadmmEngine::run`, `run_threaded*`, and `SimulatedGadmm::run` all
+/// return, and what the `runtime::session` Driver trait promises.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Which runtime produced it: `"engine"`, `"threaded"`, or `"sim"`.
+    pub driver: &'static str,
+    /// Metric curve. For simulated runs `compute_secs` carries the
+    /// *virtual wall-clock* seconds at each point.
+    pub recorder: Recorder,
+    /// Paper-accounting communication totals (one broadcast = one
+    /// transmission of `Payload::bits()` bits).
+    pub comm: CommStats,
+    /// Residual history (engine runs only; empty for threaded/sim).
+    pub residuals: Vec<ResidualPoint>,
+    pub iterations_run: u64,
+    /// Final model per topology position (after a simulated dropout, per
+    /// surviving position).
+    pub thetas: Vec<Vec<f32>>,
+    /// Present iff the run went through the discrete-event simulator.
+    pub sim: Option<SimExt>,
+}
+
+impl RunSummary {
+    /// Final recorded metric value (`NaN` when nothing was recorded).
+    pub fn final_value(&self) -> f64 {
+        self.recorder.last_value().unwrap_or(f64::NAN)
+    }
+
+    /// Alias of [`Self::final_value`] under the historical engine name.
+    pub fn final_loss_gap(&self) -> f64 {
+        self.final_value()
+    }
+
+    /// The simulator extras; panics on non-simulated runs (callers that
+    /// may hold either kind should match on [`Self::sim`] instead).
+    pub fn sim_ext(&self) -> &SimExt {
+        self.sim
+            .as_ref()
+            .expect("not a simulated run: RunSummary.sim is None")
+    }
+
+    /// One-line human summary. Simulated runs print the link-layer columns
+    /// (the old `simulate` subcommand format); engine/threaded runs print
+    /// the bits-only columns.
+    pub fn print_summary(&self, name: &str) {
+        match &self.sim {
+            Some(ext) => println!(
+                "{name:<12} iters={:<6} sim_time={:<10} bits={:<12} wire_bytes={:<12} retrans={:<8} stale={:<6} censored={}",
+                self.iterations_run,
+                ext.time_to_target_secs
+                    .map(|t| format!("{t:.3}s"))
+                    .unwrap_or_else(|| format!("(>{:.3}s)", ext.sim_secs)),
+                self.comm.bits,
+                ext.net.wire_bytes,
+                ext.net.retransmissions,
+                ext.net.abandoned,
+                self.comm.censored,
+            ),
+            None => println!(
+                "{name:<12} iters={:<6} final={:<12.3e} bits={:<12} transmissions={:<8} censored={}",
+                self.iterations_run,
+                self.final_value(),
+                self.comm.bits,
+                self.comm.transmissions,
+                self.comm.censored,
+            ),
+        }
+    }
+
+    /// Print the (thinned) metric curve as the CLI table.
+    pub fn print_curve(&self, name: &str, rows: usize) {
+        println!("== {name} ==");
+        println!(
+            "{:>8} {:>10} {:>14} {:>14} {:>12}",
+            "iter", "rounds", "bits", "value", "compute_s"
+        );
+        for p in &self.recorder.thinned(rows.max(2)).points {
+            println!(
+                "{:>8} {:>10} {:>14} {:>14.6e} {:>12.4}",
+                p.iteration, p.comm_rounds, p.bits, p.value, p.compute_secs
+            );
+        }
+    }
+
+    /// JSON document for `results/*/report.json` — the one serialization
+    /// path the CLI and the examples share. Simulated runs keep the exact
+    /// key set the `simulate` subcommand has always written; engine and
+    /// threaded runs carry the common subset.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("driver", Json::Str(self.driver.to_string()));
+        obj.set("iterations", Json::Num(self.iterations_run as f64));
+        obj.set(
+            "final_value",
+            self.recorder.last_value().map(Json::Num).unwrap_or(Json::Null),
+        );
+        obj.set("bits", Json::Num(self.comm.bits as f64));
+        obj.set("transmissions", Json::Num(self.comm.transmissions as f64));
+        obj.set("energy_joules", Json::Num(self.comm.energy_joules));
+        // Deliberate skips by a censoring compressor (mirror reuse, 0
+        // bits) — never conflated with the involuntary abandoned/stale
+        // count below.
+        obj.set("censored_rounds", Json::Num(self.comm.censored as f64));
+        if let Some(ext) = &self.sim {
+            obj.set(
+                "time_to_target_secs",
+                ext.time_to_target_secs.map(Json::Num).unwrap_or(Json::Null),
+            );
+            obj.set("sim_secs", Json::Num(ext.sim_secs));
+            obj.set("wire_bytes", Json::Num(ext.net.wire_bytes as f64));
+            obj.set(
+                "retransmissions",
+                Json::Num(ext.net.retransmissions as f64),
+            );
+            obj.set("frames_delivered", Json::Num(ext.net.delivered as f64));
+            // One frame abandoned at the ARQ cap == one stale-mirror round.
+            obj.set("frames_abandoned", Json::Num(ext.net.abandoned as f64));
+            obj.set("restitches", Json::Num(ext.restitches as f64));
+        }
+        obj.set("curve", self.recorder.thinned(400).to_json());
+        obj
+    }
+}
 
 /// A collection of curves belonging to one figure panel.
 #[derive(Clone, Debug, Default)]
@@ -153,5 +312,67 @@ mod tests {
     #[test]
     fn sanitize_names() {
         assert_eq!(sanitize("Q-GADMM (2 bits)"), "Q-GADMM__2_bits_");
+    }
+
+    fn summary(sim: Option<SimExt>) -> RunSummary {
+        let mut comm = CommStats::default();
+        comm.record(300, 0.0);
+        RunSummary {
+            driver: if sim.is_some() { "sim" } else { "engine" },
+            recorder: curve("run", &[1.0, 0.1, 0.001]),
+            comm,
+            residuals: Vec::new(),
+            iterations_run: 3,
+            thetas: vec![vec![0.0; 2]; 4],
+            sim,
+        }
+    }
+
+    #[test]
+    fn run_summary_json_has_common_keys() {
+        let s = summary(None);
+        let j = s.to_json();
+        assert_eq!(j.get("driver").unwrap().as_str(), Some("engine"));
+        assert_eq!(j.get("bits").unwrap().as_f64(), Some(300.0));
+        assert!(j.get("curve").is_some());
+        assert!(j.get("sim_secs").is_none(), "no sim keys on engine runs");
+        assert_eq!(s.final_value(), 0.001);
+        assert_eq!(s.final_loss_gap(), 0.001);
+    }
+
+    #[test]
+    fn run_summary_json_keeps_sim_keys() {
+        let ext = SimExt {
+            sim_secs: 1.5,
+            time_to_target_secs: Some(0.75),
+            net: NetStats {
+                wire_bytes: 1_000,
+                retransmissions: 7,
+                ..NetStats::default()
+            },
+            restitches: 1,
+            ..SimExt::default()
+        };
+        let s = summary(Some(ext));
+        let j = s.to_json();
+        // The exact key set the simulate subcommand has always written.
+        for key in [
+            "time_to_target_secs",
+            "sim_secs",
+            "iterations",
+            "bits",
+            "transmissions",
+            "wire_bytes",
+            "retransmissions",
+            "frames_delivered",
+            "frames_abandoned",
+            "censored_rounds",
+            "restitches",
+            "curve",
+        ] {
+            assert!(j.get(key).is_some(), "missing sim report key {key}");
+        }
+        assert_eq!(j.get("time_to_target_secs").unwrap().as_f64(), Some(0.75));
+        assert_eq!(s.sim_ext().restitches, 1);
     }
 }

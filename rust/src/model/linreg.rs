@@ -127,6 +127,14 @@ impl LinRegProblem {
         self.workers
     }
 
+    /// [`Self::into_workers`] through `&mut self`: hand the solvers to
+    /// the threaded runtime while the (now worker-less) fleet view stays
+    /// behind as a metric evaluator. After this, `solve`/`objective`
+    /// panic — only Session-level metric plumbing should retain the husk.
+    pub fn take_workers(&mut self) -> Vec<LinRegWorker> {
+        std::mem::take(&mut self.workers)
+    }
+
     pub fn stats(&self, worker: usize) -> &WorkerStats {
         self.workers[worker].stats()
     }

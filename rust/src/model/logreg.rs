@@ -1,0 +1,451 @@
+//! Binary logistic regression — the Session registry's proof of openness.
+//!
+//! A convex classification task between the paper's two workloads: unlike
+//! linreg the local problem has no closed form, and unlike the MLP the
+//! local solver is deterministic (no minibatch RNG), so all three runtimes
+//! (engine / threaded / sim) remain bit-for-bit comparable through the
+//! Session API with zero seed plumbing.
+//!
+//! Worker `n` holds a shard of a synthetic binary task (labels from a
+//! hidden hyperplane with a small flip noise, so the optimum is finite)
+//! and solves its GADMM primal update
+//!
+//! ```text
+//!   min_θ  f_n(θ) + Σ_links [−sign·⟨λ, θ⟩ + ρ/2 ‖θ − θ̂‖²],
+//!   f_n(θ) = Σ_i softplus(x_iᵀθ) − y_i·x_iᵀθ
+//! ```
+//!
+//! with a fixed number of damped-free **Newton steps** (the augmented
+//! objective is ρ-strongly convex, so Newton from the warm-started
+//! previous model is effectively exact): `H = XᵀWX + ρ·deg·I` with
+//! `W = diag(σ(m)(1 − σ(m)))`, factored by dense Cholesky per step
+//! (d is small — the default task is d = 20).
+//!
+//! The figure of merit is test accuracy of the worker-averaged model
+//! (accuracy-style metric: runs early-stop on `stop_above`).
+
+use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use crate::data::partition::Partition;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Synthetic binary-classification task description.
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegSpec {
+    /// Training samples (sharded contiguously over the workers).
+    pub samples: usize,
+    /// Held-out test samples (the accuracy metric's set).
+    pub test: usize,
+    /// Feature dimension d.
+    pub features: usize,
+    /// Label flip probability (keeps the task non-separable, the optimum
+    /// finite, and the Bayes accuracy ≈ 1 − flip).
+    pub flip: f64,
+    /// Newton steps per local solve.
+    pub newton_steps: usize,
+}
+
+impl Default for LogRegSpec {
+    fn default() -> Self {
+        LogRegSpec {
+            samples: 4_000,
+            test: 1_000,
+            features: 20,
+            flip: 0.02,
+            newton_steps: 4,
+        }
+    }
+}
+
+/// One worker's logistic-regression solver (deterministic Newton).
+pub struct LogRegWorker {
+    /// Row-major shard, `m × d`.
+    x: Vec<f64>,
+    /// Labels in {0, 1}.
+    y: Vec<f64>,
+    d: usize,
+    newton_steps: usize,
+    /// Scratch: margins `Xθ` (m), gradient (d), Newton rhs (d).
+    margins: Vec<f64>,
+    grad: Vec<f64>,
+}
+
+/// Numerically stable σ(m).
+fn sigmoid(m: f64) -> f64 {
+    if m >= 0.0 {
+        1.0 / (1.0 + (-m).exp())
+    } else {
+        let e = m.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable `softplus(m) = ln(1 + eᵐ)`.
+fn softplus(m: f64) -> f64 {
+    m.max(0.0) + (-m.abs()).exp().ln_1p()
+}
+
+impl LogRegWorker {
+    fn new(x: Vec<f64>, y: Vec<f64>, d: usize, newton_steps: usize) -> LogRegWorker {
+        assert_eq!(x.len(), y.len() * d);
+        assert!(newton_steps >= 1);
+        let m = y.len();
+        LogRegWorker {
+            x,
+            y,
+            d,
+            newton_steps,
+            margins: vec![0.0; m],
+            grad: vec![0.0; d],
+        }
+    }
+
+    fn samples(&self) -> usize {
+        self.y.len()
+    }
+}
+
+impl WorkerSolver for LogRegWorker {
+    fn dims(&self) -> usize {
+        self.d
+    }
+
+    fn solve(&mut self, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        let d = self.d;
+        let m = self.samples();
+        assert_eq!(out.len(), d);
+        let deg = ctx.degree();
+        assert!(deg >= 1, "GADMM workers always have ≥1 incident link");
+        let rho = ctx.rho as f64;
+
+        // Warm start from the previous model (f64 working copy).
+        let mut theta: Vec<f64> = out.iter().map(|&v| v as f64).collect();
+        for _ in 0..self.newton_steps {
+            // Margins m_i = x_iᵀθ.
+            for i in 0..m {
+                let row = &self.x[i * d..(i + 1) * d];
+                let mut acc = 0.0;
+                for j in 0..d {
+                    acc += row[j] * theta[j];
+                }
+                self.margins[i] = acc;
+            }
+            // Gradient: Xᵀ(σ(m) − y) + Σ_links [−sign·λ + ρ(θ − θ̂)],
+            // penalty terms accumulated in link order (the engine-wide
+            // bit-exactness convention; ±1 multiplies are exact).
+            self.grad.iter_mut().for_each(|g| *g = 0.0);
+            for i in 0..m {
+                let r = sigmoid(self.margins[i]) - self.y[i];
+                let row = &self.x[i * d..(i + 1) * d];
+                for j in 0..d {
+                    self.grad[j] += r * row[j];
+                }
+            }
+            for link in ctx.links {
+                let s = link.sign as f64;
+                for j in 0..d {
+                    self.grad[j] +=
+                        -s * link.lambda[j] as f64 + rho * (theta[j] - link.theta[j] as f64);
+                }
+            }
+            // Hessian: XᵀWX + ρ·deg·I (SPD — W ≥ 0 and ρ·deg > 0).
+            let mut hess = Mat::zeros(d, d);
+            {
+                let data = hess.data_mut();
+                for i in 0..m {
+                    let s = sigmoid(self.margins[i]);
+                    let w = s * (1.0 - s);
+                    let row = &self.x[i * d..(i + 1) * d];
+                    for a in 0..d {
+                        let wa = w * row[a];
+                        for b in 0..d {
+                            data[a * d + b] += wa * row[b];
+                        }
+                    }
+                }
+            }
+            hess.add_diag(rho * deg as f64);
+            let step = hess
+                .solve_spd(&self.grad)
+                .expect("XᵀWX + ρ·deg·I is SPD for ρ > 0");
+            for j in 0..d {
+                theta[j] -= step[j];
+            }
+        }
+        for j in 0..d {
+            out[j] = theta[j] as f32;
+        }
+    }
+
+    fn objective(&self, theta: &[f32]) -> f64 {
+        let d = self.d;
+        assert_eq!(theta.len(), d);
+        let mut total = 0.0f64;
+        for i in 0..self.samples() {
+            let row = &self.x[i * d..(i + 1) * d];
+            let mut margin = 0.0f64;
+            for j in 0..d {
+                margin += row[j] * theta[j] as f64;
+            }
+            total += softplus(margin) - self.y[i] * margin;
+        }
+        total
+    }
+}
+
+/// Fleet view over the logistic-regression workers plus the shared
+/// held-out test set the accuracy metric evaluates on.
+pub struct LogRegProblem {
+    workers: Vec<LogRegWorker>,
+    dims: usize,
+    test_x: Vec<f64>,
+    test_y: Vec<f64>,
+}
+
+impl LogRegProblem {
+    /// Synthesize a task from a hidden unit hyperplane: `x ~ N(0, I)`,
+    /// `y = 1[xᵀw* > 0]` flipped with probability `spec.flip`, sharded
+    /// contiguously over `workers`.
+    pub fn synthesize(spec: &LogRegSpec, workers: usize, seed: u64) -> LogRegProblem {
+        assert!(workers >= 2, "GADMM needs at least two workers");
+        assert!(spec.samples >= workers, "need at least one sample per worker");
+        assert!(spec.features >= 1 && spec.test >= 1);
+        let d = spec.features;
+        let mut rng = Rng::seed_from_u64(seed ^ 0x10C4E6);
+
+        // Hidden unit-norm hyperplane.
+        let mut w_star: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm = w_star.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        w_star.iter_mut().for_each(|v| *v /= norm);
+
+        let total = spec.samples + spec.test;
+        let mut xs = vec![0.0f64; total * d];
+        let mut ys = vec![0.0f64; total];
+        for i in 0..total {
+            let row = &mut xs[i * d..(i + 1) * d];
+            let mut z = 0.0f64;
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = rng.normal();
+                z += *v * w_star[j];
+            }
+            let mut label = if z > 0.0 { 1.0 } else { 0.0 };
+            if rng.uniform() < spec.flip {
+                label = 1.0 - label;
+            }
+            ys[i] = label;
+        }
+        let (train_x, test_x) = xs.split_at(spec.samples * d);
+        let (train_y, test_y) = ys.split_at(spec.samples);
+
+        let partition = Partition::contiguous(spec.samples, workers);
+        let fleet = (0..workers)
+            .map(|w| {
+                let (lo, hi) = partition.bounds(w);
+                LogRegWorker::new(
+                    train_x[lo * d..hi * d].to_vec(),
+                    train_y[lo..hi].to_vec(),
+                    d,
+                    spec.newton_steps,
+                )
+            })
+            .collect();
+        LogRegProblem {
+            workers: fleet,
+            dims: d,
+            test_x: test_x.to_vec(),
+            test_y: test_y.to_vec(),
+        }
+    }
+
+    /// Held-out accuracy of one flat model (`xᵀθ > 0` predicts class 1).
+    pub fn test_accuracy(&self, theta: &[f32]) -> f64 {
+        let d = self.dims;
+        assert_eq!(theta.len(), d);
+        let n = self.test_y.len();
+        let mut correct = 0usize;
+        for i in 0..n {
+            let row = &self.test_x[i * d..(i + 1) * d];
+            let mut margin = 0.0f64;
+            for j in 0..d {
+                margin += row[j] * theta[j] as f64;
+            }
+            let pred = if margin > 0.0 { 1.0 } else { 0.0 };
+            correct += usize::from(pred == self.test_y[i]);
+        }
+        correct as f64 / n as f64
+    }
+
+    /// Held-out accuracy of the worker-averaged model — the decentralized
+    /// figure of merit (consensus average, like the DNN task).
+    pub fn average_model_accuracy(&self, thetas: &[Vec<f32>]) -> f64 {
+        assert!(!thetas.is_empty());
+        let d = self.dims;
+        let mut avg = vec![0.0f32; d];
+        for t in thetas {
+            for j in 0..d {
+                avg[j] += t[j];
+            }
+        }
+        let n = thetas.len() as f32;
+        avg.iter_mut().for_each(|v| *v /= n);
+        self.test_accuracy(&avg)
+    }
+
+    /// Decentralized objective `F = Σ_n f_n(θ_n)` at per-worker models.
+    pub fn global_objective(&self, thetas: &[Vec<f32>]) -> f64 {
+        assert_eq!(thetas.len(), self.workers.len());
+        thetas
+            .iter()
+            .enumerate()
+            .map(|(w, t)| self.workers[w].objective(t))
+            .sum()
+    }
+
+    /// Hand the per-worker solvers to the threaded runtime; the emptied
+    /// fleet view stays behind as the accuracy evaluator.
+    pub fn take_workers(&mut self) -> Vec<LogRegWorker> {
+        std::mem::take(&mut self.workers)
+    }
+}
+
+impl LocalProblem for LogRegProblem {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn solve(&mut self, worker: usize, ctx: &NeighborCtx<'_>, out: &mut [f32]) {
+        self.workers[worker].solve(ctx, out);
+    }
+
+    fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
+        self.workers[worker].objective(theta)
+    }
+
+    fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
+        Some(
+            self.workers
+                .iter_mut()
+                .map(|w| w as &mut dyn WorkerSolver)
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressorConfig, GadmmConfig};
+    use crate::coordinator::engine::GadmmEngine;
+    use crate::model::LinkBuf;
+    use crate::net::topology::Topology;
+
+    fn small_spec() -> LogRegSpec {
+        LogRegSpec {
+            samples: 600,
+            test: 300,
+            features: 8,
+            ..LogRegSpec::default()
+        }
+    }
+
+    #[test]
+    fn solve_reaches_stationarity_of_the_augmented_objective() {
+        let mut p = LogRegProblem::synthesize(&small_spec(), 4, 7);
+        let d = p.dims();
+        let lam = vec![0.05f32; d];
+        let th = vec![0.2f32; d];
+        let rho = 5.0f32;
+        let buf = LinkBuf::chain(Some(&lam), Some(&th), Some(&lam), Some(&th));
+        let ctx = buf.ctx(rho);
+        let mut out = vec![0.0f32; d];
+        p.solve(1, &ctx, &mut out);
+
+        // ∇[f + penalty](θ*) ≈ 0: logistic grad + Σ(−s·λ + ρ(θ−θ̂)).
+        let w = &p.workers[1];
+        let mut grad = vec![0.0f64; d];
+        for i in 0..w.samples() {
+            let row = &w.x[i * d..(i + 1) * d];
+            let mut margin = 0.0f64;
+            for j in 0..d {
+                margin += row[j] * out[j] as f64;
+            }
+            let r = sigmoid(margin) - w.y[i];
+            for j in 0..d {
+                grad[j] += r * row[j];
+            }
+        }
+        for j in 0..d {
+            // Left link sign +1, right link sign −1: the λ terms cancel
+            // and both ρ pulls remain.
+            grad[j] += -(lam[j] as f64) + rho as f64 * (out[j] as f64 - th[j] as f64);
+            grad[j] += lam[j] as f64 + rho as f64 * (out[j] as f64 - th[j] as f64);
+        }
+        let gnorm = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        assert!(gnorm < 1e-4, "stationarity violated: ‖g‖ = {gnorm}");
+    }
+
+    #[test]
+    fn solver_is_deterministic() {
+        let run = || {
+            let spec = small_spec();
+            let problem = LogRegProblem::synthesize(&spec, 4, 3);
+            let cfg = GadmmConfig {
+                workers: 4,
+                rho: 50.0,
+                dual_step: 1.0,
+                compressor: CompressorConfig::FullPrecision,
+                threads: 1,
+            };
+            let mut engine = GadmmEngine::new(cfg, problem, Topology::line(4), 9);
+            for _ in 0..10 {
+                engine.iterate();
+            }
+            (0..4).map(|p| engine.theta_at(p).to_vec()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn gadmm_trains_logreg_past_90_percent_accuracy() {
+        let spec = small_spec();
+        let problem = LogRegProblem::synthesize(&spec, 4, 3);
+        let cfg = GadmmConfig {
+            workers: 4,
+            rho: 50.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::FullPrecision,
+            threads: 0,
+        };
+        let mut engine = GadmmEngine::new(cfg, problem, Topology::line(4), 9);
+        for _ in 0..30 {
+            engine.iterate();
+        }
+        let thetas: Vec<Vec<f32>> = (0..4).map(|p| engine.theta_at(p).to_vec()).collect();
+        let acc = engine.problem().average_model_accuracy(&thetas);
+        assert!(acc > 0.9, "averaged-model accuracy {acc}");
+    }
+
+    #[test]
+    fn fleet_and_taken_workers_agree() {
+        let mut fleet = LogRegProblem::synthesize(&small_spec(), 4, 11);
+        let d = fleet.dims();
+        let lam = vec![0.1f32; d];
+        let th = vec![-0.3f32; d];
+        let buf = LinkBuf::chain(None, None, Some(&lam), Some(&th));
+        let ctx = buf.ctx(2.0);
+        let mut via_fleet = vec![0.0f32; d];
+        fleet.solve(0, &ctx, &mut via_fleet);
+
+        let mut fresh = LogRegProblem::synthesize(&small_spec(), 4, 11);
+        let mut workers = fresh.take_workers();
+        let mut via_worker = vec![0.0f32; d];
+        workers[0].solve(&ctx, &mut via_worker);
+        assert_eq!(via_fleet, via_worker);
+        // The husk still evaluates accuracy.
+        assert!(fresh.test_accuracy(&via_worker).is_finite());
+    }
+}

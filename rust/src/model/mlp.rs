@@ -517,6 +517,14 @@ impl MlpProblem {
         accuracy(&self.dims, theta, &self.test_x, &self.test_y)
     }
 
+    /// Hand the per-worker solvers (shards, minibatch RNGs, Adam moments)
+    /// to the threaded runtime; the emptied fleet view stays behind as a
+    /// metric evaluator — [`Self::average_model_accuracy`] and
+    /// [`Self::test_accuracy`] keep working, `solve`/`objective` panic.
+    pub fn take_workers(&mut self) -> Vec<MlpWorker> {
+        std::mem::take(&mut self.workers)
+    }
+
     /// Test accuracy of the worker-averaged model — the figure-of-merit
     /// tracked in Fig. 4/5 (decentralized methods report their consensus
     /// average).

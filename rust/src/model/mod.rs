@@ -34,6 +34,7 @@
 
 pub mod adam;
 pub mod linreg;
+pub mod logreg;
 pub mod mlp;
 pub mod scale;
 

@@ -198,6 +198,13 @@ impl DiagLinRegProblem {
         (theta, f_star)
     }
 
+    /// Hand the per-worker solvers to the threaded runtime; the emptied
+    /// fleet view stays behind as a metric evaluator (its `solve` and
+    /// `objective` panic afterwards).
+    pub fn take_workers(&mut self) -> Vec<DiagLinRegWorker> {
+        std::mem::take(&mut self.workers)
+    }
+
     /// Decentralized objective `F = Σ_n f_n(θ_n)` at per-worker models.
     pub fn global_objective(&self, thetas: &[Vec<f32>]) -> f64 {
         assert_eq!(thetas.len(), self.workers.len());

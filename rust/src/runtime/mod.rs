@@ -6,6 +6,7 @@
 //! interface. Artifact shapes are validated against the manifest at load
 //! time and call sites are shape-checked on every invocation.
 
+pub mod session;
 pub mod solver;
 
 use crate::util::json::Json;

@@ -156,7 +156,7 @@ fn assert_threaded_matches_engine(compressor: CompressorConfig, iters: u64, seed
         .into_iter()
         .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
         .collect();
-    let thr_report = run_threaded(&cfg, solvers, iters, seed, |obj, _| obj).unwrap();
+    let thr_report = run_threaded(&cfg, solvers, &opts, seed, |obj, _| obj).unwrap();
 
     for p in 0..workers {
         assert_eq!(

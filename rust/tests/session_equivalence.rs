@@ -1,0 +1,278 @@
+//! Cross-runtime equivalence **through the Session API**: one
+//! parameterized test asserting engine vs threaded vs sim bit-equality
+//! per compression scheme × topology, built entirely from `Session`
+//! builders (no hand-assembled problems, solvers, or metric closures —
+//! that copy-pasted setup lives on in `threaded_equivalence.rs` /
+//! `sim_determinism.rs` only as the historical pins).
+//!
+//! Every combination runs the same quick linreg task on all three
+//! drivers and must agree bit-for-bit on the metric curve, the
+//! communication totals, and the final models. A second test pins the
+//! new uniform early-stopping behavior (the threaded runtime used to
+//! take a bare iteration count), and a third runs the `logreg` registry
+//! entry across all three drivers.
+
+use qgadmm::config::{CompressorConfig, QuantConfig, SimConfig};
+use qgadmm::coordinator::engine::RunOptions;
+use qgadmm::metrics::report::RunSummary;
+use qgadmm::net::topology::TopologyKind;
+use qgadmm::runtime::session::{DriverKind, ProblemKind, Session};
+
+const WORKERS: usize = 6;
+const SEED: u64 = 2024;
+
+fn schemes() -> Vec<(&'static str, CompressorConfig)> {
+    vec![
+        ("stochastic", CompressorConfig::Stochastic(QuantConfig::default())),
+        ("full", CompressorConfig::FullPrecision),
+        (
+            // A constant threshold the early (large) updates clear and the
+            // late ones do not — exercises both the sent and the censored
+            // path within one run.
+            "censored",
+            CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: 0.01,
+                decay: 1.0,
+            },
+        ),
+        ("topk", CompressorConfig::TopK { frac: 0.5 }),
+    ]
+}
+
+fn session(
+    problem: ProblemKind,
+    driver: DriverKind,
+    topology: TopologyKind,
+    compressor: CompressorConfig,
+    opts: RunOptions,
+) -> Session {
+    let mut s = Session::new(problem)
+        .quick(true)
+        .workers(WORKERS)
+        .seed(SEED)
+        .driver(driver)
+        .topology(topology)
+        .compressor(compressor)
+        .options(opts);
+    if driver == DriverKind::Sim {
+        // The ideal-network limit is the regime in which the simulator is
+        // the engine bit-for-bit (the sim_determinism guarantee).
+        s = s.sim_config(SimConfig::ideal());
+    }
+    s
+}
+
+fn assert_bit_equal(name: &str, a: &RunSummary, b: &RunSummary) {
+    assert_eq!(
+        a.recorder.points.len(),
+        b.recorder.points.len(),
+        "{name}: curve lengths diverged ({} vs {})",
+        a.driver,
+        b.driver
+    );
+    for (pa, pb) in a.recorder.points.iter().zip(&b.recorder.points) {
+        assert_eq!(pa.iteration, pb.iteration, "{name}: iteration axis diverged");
+        assert_eq!(
+            pa.value.to_bits(),
+            pb.value.to_bits(),
+            "{name}: metric diverged at iteration {} ({} vs {})",
+            pa.iteration,
+            a.driver,
+            b.driver
+        );
+        assert_eq!(pa.bits, pb.bits, "{name}: bit curve diverged at {}", pa.iteration);
+        assert_eq!(pa.comm_rounds, pb.comm_rounds, "{name}: round counting diverged");
+    }
+    assert_eq!(a.iterations_run, b.iterations_run, "{name}: run lengths diverged");
+    assert_eq!(a.comm.bits, b.comm.bits, "{name}: total bits diverged");
+    assert_eq!(
+        a.comm.transmissions, b.comm.transmissions,
+        "{name}: transmission tallies diverged"
+    );
+    assert_eq!(a.comm.censored, b.comm.censored, "{name}: censored tallies diverged");
+    assert_eq!(a.thetas.len(), b.thetas.len(), "{name}: fleet sizes diverged");
+    for (p, (ta, tb)) in a.thetas.iter().zip(&b.thetas).enumerate() {
+        assert_eq!(
+            ta, tb,
+            "{name}: final theta diverged at position {p} ({} vs {})",
+            a.driver, b.driver
+        );
+    }
+}
+
+/// The tentpole guarantee: scheme × topology, all three drivers, one
+/// Session API, bit-for-bit identical runs.
+#[test]
+fn engine_threaded_and_sim_agree_per_scheme_and_topology() {
+    let opts = RunOptions {
+        iterations: 40,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    for topology in [TopologyKind::Line, TopologyKind::Ring, TopologyKind::Star] {
+        for (scheme, compressor) in schemes() {
+            let name = format!("{scheme} on {}", topology.name());
+            let run = |driver| {
+                session(ProblemKind::LinReg, driver, topology, compressor, opts.clone())
+                    .run()
+                    .unwrap_or_else(|e| panic!("{name}: {driver:?} failed: {e}"))
+            };
+            let engine = run(DriverKind::Engine);
+            let threaded = run(DriverKind::Threaded);
+            let sim = run(DriverKind::Sim);
+            assert_eq!(engine.driver, "engine");
+            assert_eq!(threaded.driver, "threaded");
+            assert_eq!(sim.driver, "sim");
+            assert_bit_equal(&name, &engine, &threaded);
+            assert_bit_equal(&name, &engine, &sim);
+        }
+    }
+}
+
+/// RunOptions are honored uniformly: the same early-stop threshold makes
+/// every driver halt at the same iteration with the same final state.
+#[test]
+fn early_stopping_is_uniform_across_drivers() {
+    let probe_opts = RunOptions {
+        iterations: 40,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    let probe = session(
+        ProblemKind::LinReg,
+        DriverKind::Engine,
+        TopologyKind::Line,
+        CompressorConfig::Stochastic(QuantConfig::default()),
+        probe_opts,
+    )
+    .run()
+    .unwrap();
+    // A threshold the run crosses mid-flight (strictly between the
+    // values at iterations 15 and 40).
+    let target = probe.recorder.points[15].value;
+    assert!(
+        probe.final_value() < target,
+        "probe run must keep descending past iteration 15"
+    );
+
+    let opts = RunOptions {
+        iterations: 40,
+        eval_every: 1,
+        stop_below: Some(target),
+        stop_above: None,
+    };
+    let run = |driver| {
+        session(
+            ProblemKind::LinReg,
+            driver,
+            TopologyKind::Line,
+            CompressorConfig::Stochastic(QuantConfig::default()),
+            opts.clone(),
+        )
+        .run()
+        .unwrap()
+    };
+    let engine = run(DriverKind::Engine);
+    let threaded = run(DriverKind::Threaded);
+    let sim = run(DriverKind::Sim);
+    assert!(
+        engine.iterations_run < 40,
+        "threshold must trigger an early stop (ran {})",
+        engine.iterations_run
+    );
+    assert_bit_equal("early stop", &engine, &threaded);
+    assert_bit_equal("early stop", &engine, &sim);
+}
+
+/// The Observer contract is driver-uniform too: the same Session on the
+/// engine and the threaded runtime streams the identical broadcast-event
+/// sequence (heads ascending then tails ascending, per iteration) and
+/// the identical eval cadence.
+#[test]
+fn observer_event_streams_are_identical_across_engine_and_threaded() {
+    use qgadmm::metrics::{BroadcastEvent, Observer};
+
+    #[derive(Default)]
+    struct Spy {
+        events: Vec<BroadcastEvent>,
+        evals: Vec<u64>,
+    }
+    impl Observer for Spy {
+        fn on_eval(&mut self, point: &qgadmm::metrics::recorder::CurvePoint) {
+            self.evals.push(point.iteration);
+        }
+        fn on_broadcast(&mut self, event: &BroadcastEvent) {
+            self.events.push(*event);
+        }
+        fn wants_broadcasts(&self) -> bool {
+            true
+        }
+    }
+
+    let opts = RunOptions {
+        iterations: 10,
+        eval_every: 2,
+        stop_below: None,
+        stop_above: None,
+    };
+    let run = |driver| {
+        let mut spy = Spy::default();
+        session(
+            ProblemKind::LinReg,
+            driver,
+            TopologyKind::Line,
+            CompressorConfig::Stochastic(QuantConfig::default()),
+            opts.clone(),
+        )
+        .run_observed(&mut spy)
+        .unwrap();
+        spy
+    };
+    let engine = run(DriverKind::Engine);
+    let threaded = run(DriverKind::Threaded);
+    assert!(!engine.events.is_empty());
+    assert_eq!(
+        engine.events, threaded.events,
+        "broadcast event streams must be driver-identical"
+    );
+    assert_eq!(engine.evals, threaded.evals);
+    assert_eq!(engine.evals, vec![2, 4, 6, 8, 10]);
+}
+
+/// The open-registry proof rides the same guarantee: `logreg` runs
+/// bit-for-bit identically on all three drivers (its Newton solves are
+/// deterministic, so even the accuracy curve matches exactly).
+#[test]
+fn logreg_agrees_across_drivers() {
+    let opts = RunOptions {
+        iterations: 15,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+    };
+    let run = |driver| {
+        session(
+            ProblemKind::LogReg,
+            driver,
+            TopologyKind::Line,
+            CompressorConfig::FullPrecision,
+            opts.clone(),
+        )
+        .workers(4)
+        .run()
+        .unwrap()
+    };
+    let engine = run(DriverKind::Engine);
+    let threaded = run(DriverKind::Threaded);
+    let sim = run(DriverKind::Sim);
+    assert_bit_equal("logreg", &engine, &threaded);
+    assert_bit_equal("logreg", &engine, &sim);
+    assert!(
+        engine.final_value() > 0.85,
+        "logreg accuracy {} suspiciously low",
+        engine.final_value()
+    );
+}

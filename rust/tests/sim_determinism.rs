@@ -70,12 +70,13 @@ fn assert_two_runs_identical(sim_cfg: SimConfig, quant: Option<QuantConfig>, ite
     let a = run();
     let b = run();
 
-    assert_eq!(a.trace, b.trace, "event traces diverged");
-    assert!(!a.trace.is_empty(), "trace recording must be on for this test");
+    let (ea, eb) = (a.sim_ext(), b.sim_ext());
+    assert_eq!(ea.trace, eb.trace, "event traces diverged");
+    assert!(!ea.trace.is_empty(), "trace recording must be on for this test");
     assert_eq!(a.iterations_run, b.iterations_run);
     assert_eq!(a.comm.bits, b.comm.bits);
-    assert_eq!(a.net, b.net);
-    assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits());
+    assert_eq!(ea.net, eb.net);
+    assert_eq!(ea.sim_secs.to_bits(), eb.sim_secs.to_bits());
     assert_eq!(a.recorder.points.len(), b.recorder.points.len());
     for (pa, pb) in a.recorder.points.iter().zip(&b.recorder.points) {
         assert_eq!(pa.iteration, pb.iteration);

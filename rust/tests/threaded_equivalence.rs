@@ -50,7 +50,7 @@ fn run_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
         .into_iter()
         .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
         .collect();
-    let thr_report = run_threaded(&cfg, solvers, iters, seed, |obj, _| obj).unwrap();
+    let thr_report = run_threaded(&cfg, solvers, &opts, seed, |obj, _| obj).unwrap();
 
     // Bit-for-bit: final models identical, every recorded objective equal,
     // same bits on the air.

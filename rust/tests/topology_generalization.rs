@@ -281,7 +281,18 @@ fn threaded_ring_matches_engine_bit_for_bit() {
         .into_iter()
         .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
         .collect();
-    let thr_report = run_threaded_on(&topo, &cfg, solvers, iters, seed, |obj, _| obj).unwrap();
+    let thr_report = run_threaded_on(
+        &topo,
+        &cfg,
+        solvers,
+        &opts,
+        seed,
+        None,
+        true,
+        |obj, _| obj,
+        &mut qgadmm::metrics::NoopObserver,
+    )
+    .unwrap();
 
     for p in 0..workers {
         assert_eq!(
