@@ -7,12 +7,24 @@
 //! or `Sim` (discrete-event network simulator) and nothing else changes.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (set QGADMM_QUICK=1 for the CI-sized dataset)
+//! (set QGADMM_QUICK=1 for the CI-sized dataset; set QGADMM_TRACE and/or
+//! QGADMM_CHROME_TRACE to a path to export the structured telemetry
+//! stream — the Chrome file loads in chrome://tracing or Perfetto)
 
 use qgadmm::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("QGADMM_QUICK").is_ok();
+
+    // Optional structured tracing: iteration/phase spans and per-link
+    // compress outcomes, exported after the run.
+    let mut telemetry = TelemetryOptions::off();
+    if let Ok(path) = std::env::var("QGADMM_TRACE") {
+        telemetry = telemetry.with_jsonl(path);
+    }
+    if let Ok(path) = std::env::var("QGADMM_CHROME_TRACE") {
+        telemetry = telemetry.with_chrome(path);
+    }
 
     // Q-GADMM = GADMM + 2-bit stochastic quantization (the default
     // compressor). Ten workers on a chain, loss-gap metric with early
@@ -24,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         .iterations(if quick { 400 } else { 5_000 })
         .quick(quick)
         .seed(7)
+        .telemetry(telemetry.clone())
         .run()?;
 
     for p in summary.recorder.thinned(12).points {
@@ -41,5 +54,11 @@ fn main() -> anyhow::Result<()> {
         summary.comm.bits,
         summary.comm.transmissions,
     );
+    if let Some(path) = &telemetry.jsonl {
+        println!("telemetry trace written to {}", path.display());
+    }
+    if let Some(path) = &telemetry.chrome {
+        println!("chrome trace written to {} (open in chrome://tracing)", path.display());
+    }
     Ok(())
 }

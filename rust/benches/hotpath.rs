@@ -25,9 +25,19 @@
 //!
 //! Run `cargo bench --bench hotpath` (full) or append `-- --quick` for the
 //! CI-sized smoke run (same coverage, shorter measurement windows).
+//!
+//! **Perf gate:** `-- --gate <baseline.json>` loads a committed
+//! `BENCH_hotpath.json` *before* benchmarking and, after writing the new
+//! trajectory, fails the process if any `ns_per_iter` entry shared with
+//! the baseline regressed by more than 15%. Keys on only one side are
+//! reported but never gate (benches are added and renamed across PRs),
+//! so a fresh/empty baseline passes vacuously and CI refreshes the
+//! committed file from the run it just gated.
 
 use qgadmm::config::{CompressorConfig, GadmmConfig, QuantConfig};
-use qgadmm::coordinator::engine::GadmmEngine;
+use qgadmm::coordinator::engine::{GadmmEngine, RunOptions};
+use qgadmm::metrics::{NoopObserver, Observer};
+use qgadmm::telemetry::Record;
 use qgadmm::data::images::{ImageDataset, ImageSpec};
 use qgadmm::data::linreg::{LinRegDataset, LinRegSpec};
 use qgadmm::data::partition::Partition;
@@ -89,7 +99,7 @@ impl Results {
         }
     }
 
-    fn flush(&self, parallel: Json, topology: Json, compressor: Json) {
+    fn flush(&self, parallel: Json, topology: Json, compressor: Json, telemetry: Json) {
         let mut ns = Json::obj();
         for (name, v) in &self.ns {
             ns.set(name, Json::Num(*v));
@@ -101,6 +111,7 @@ impl Results {
         doc.set("parallel_iteration", parallel);
         doc.set("topology_iteration", topology);
         doc.set("compressor_hotpath", compressor);
+        doc.set("telemetry_overhead", telemetry);
         // `cargo bench` runs with cwd = the package root (rust/); the
         // trajectory file lives at the repository root next to ROADMAP.md.
         let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -120,8 +131,71 @@ impl Results {
     }
 }
 
+/// Maximum tolerated slowdown per shared `ns_per_iter` key before the
+/// gate fails: 15% — wide enough for shared-runner noise on the quick
+/// windows, tight enough to catch a real hot-path regression.
+const GATE_TOLERANCE: f64 = 0.15;
+
+/// Compare this run against a committed baseline document. Returns the
+/// names that regressed beyond [`GATE_TOLERANCE`].
+fn gate_regressions(baseline: &Json, current: &[(String, f64)]) -> Vec<String> {
+    let mut regressions = Vec::new();
+    let mut shared = 0usize;
+    for (name, now_ns) in current {
+        let base_ns = baseline
+            .get("ns_per_iter")
+            .and_then(|ns| ns.get(name))
+            .and_then(|v| v.as_f64());
+        let Some(base_ns) = base_ns else {
+            println!("gate: {name:?} not in baseline (new bench, not gated)");
+            continue;
+        };
+        shared += 1;
+        let ratio = now_ns / base_ns.max(1e-12);
+        if ratio > 1.0 + GATE_TOLERANCE {
+            regressions.push(format!(
+                "{name}: {base_ns:.0} ns -> {now_ns:.0} ns ({:+.1}%)",
+                (ratio - 1.0) * 100.0
+            ));
+        }
+    }
+    if shared == 0 {
+        println!(
+            "gate: no shared ns_per_iter keys with the baseline — vacuous pass \
+             (the trajectory starts from this run)"
+        );
+    } else {
+        println!(
+            "gate: {shared} shared keys checked at {:.0}% tolerance, {} regressed",
+            GATE_TOLERANCE * 100.0,
+            regressions.len()
+        );
+    }
+    regressions
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    // Load the gate baseline BEFORE benchmarking: a missing or malformed
+    // baseline must fail fast, not after minutes of measurement.
+    let baseline = args
+        .iter()
+        .position(|a| a == "--gate")
+        .map(|i| {
+            let path = args.get(i + 1).unwrap_or_else(|| {
+                eprintln!("--gate requires a baseline path");
+                std::process::exit(1);
+            });
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("--gate {path}: cannot read baseline: {e}");
+                std::process::exit(1);
+            });
+            Json::parse(&text).unwrap_or_else(|e| {
+                eprintln!("--gate {path}: baseline is not valid JSON: {e:?}");
+                std::process::exit(1);
+            })
+        });
     let mut res = Results {
         quick,
         ns: Vec::new(),
@@ -422,5 +496,58 @@ fn main() {
         std::hint::black_box(&frame);
     });
 
-    res.flush(parallel, topology, compressor_json);
+    // --- telemetry overhead (sink off vs on, same engine iteration) ----------
+    // The zero-cost-when-disabled claim, measured: one observed iteration
+    // with the default NoopObserver (sink stays Off — a single branch per
+    // would-be record) vs an observer that opts into the full structured
+    // stream. Both sides pay the same RunSummary assembly, so the delta
+    // is the sink itself.
+    struct DrainTelemetry;
+    impl Observer for DrainTelemetry {
+        fn on_record(&mut self, record: &Record) {
+            std::hint::black_box(record);
+        }
+        fn wants_telemetry(&self) -> bool {
+            true
+        }
+    }
+    let tel_opts = RunOptions {
+        iterations: 1,
+        eval_every: 1_000_000,
+        stop_below: None,
+        stop_above: None,
+    };
+    let metric = |_: &GadmmEngine<LinRegProblem>| 0.0f64;
+    let off_per = res.bench("observed iteration telemetry off (N=50, d=6)", 0.4, || {
+        let s = engine.run_observed(&tel_opts, metric, &mut NoopObserver);
+        std::hint::black_box(s.iterations_run);
+    });
+    let mut drain = DrainTelemetry;
+    let on_per = res.bench("observed iteration telemetry on (N=50, d=6)", 0.4, || {
+        let s = engine.run_observed(&tel_opts, metric, &mut drain);
+        std::hint::black_box(s.iterations_run);
+    });
+    println!(
+        "{:<48} {:>12.3} x  (enabled/disabled)",
+        "  -> telemetry sink overhead",
+        on_per / off_per.max(1e-12)
+    );
+    let mut telemetry_json = Json::obj();
+    telemetry_json.set("off_ns", Json::Num(off_per * 1e9));
+    telemetry_json.set("on_ns", Json::Num(on_per * 1e9));
+    telemetry_json.set("on_over_off", Json::Num(on_per / off_per.max(1e-12)));
+
+    res.flush(parallel, topology, compressor_json, telemetry_json);
+
+    if let Some(baseline) = baseline {
+        let regressions = gate_regressions(&baseline, &res.ns);
+        if !regressions.is_empty() {
+            eprintln!("\nPERF GATE FAILED (> {:.0}% slower):", GATE_TOLERANCE * 100.0);
+            for r in &regressions {
+                eprintln!("  {r}");
+            }
+            std::process::exit(1);
+        }
+        println!("perf gate passed");
+    }
 }

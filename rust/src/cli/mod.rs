@@ -83,6 +83,12 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --use-xla BOOL       execute local solves through the PJRT artifacts
   --bandwidth_mhz F    system bandwidth
   --quick BOOL         reduced-scale figure runs (CI-sized)
+  --trace PATH         write the structured telemetry stream (iteration and
+                       phase spans, compress outcomes, transport events) as
+                       JSON Lines to PATH; a boolean value keeps the legacy
+                       meaning (record the simulator event trace)
+  --chrome_trace PATH  write a Chrome trace-event JSON file to PATH
+                       (open in chrome://tracing or ui.perfetto.dev)
 
 SIMULATOR OPTIONS (the discrete-event network model; `simulate`, fig_sim):
   --loss P             frame loss probability in [0, 1]
@@ -99,7 +105,8 @@ SIMULATOR OPTIONS (the discrete-event network model; `simulate`, fig_sim):
   --arq_timeout_ms F   retransmission timeout (default 2 ms)
   --dropouts LIST      fault schedule, e.g. \"3@50,7@120\" (worker@iteration)
   --sim_seed S         simulator-side randomness seed
-  --trace BOOL         record the full event trace
+  --trace BOOL         record the full event trace (see also --trace PATH
+                       under COMMON OPTIONS)
 ";
 
 /// Parse `argv[1..]`.
@@ -184,6 +191,16 @@ mod tests {
             Err(CliError::MissingValue(flag)) => assert_eq!(flag, "threads"),
             other => panic!("expected MissingValue, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn trace_takes_a_bare_bool_or_a_path() {
+        let inv = parse(&v(&["run", "--trace"])).unwrap();
+        assert_eq!(inv.flags.get("trace"), Some("true"));
+        let inv = parse(&v(&["run", "--trace", "out.jsonl"])).unwrap();
+        assert_eq!(inv.flags.get("trace"), Some("out.jsonl"));
+        let inv = parse(&v(&["run", "--chrome_trace", "out.json"])).unwrap();
+        assert_eq!(inv.flags.get("chrome_trace"), Some("out.json"));
     }
 
     #[test]

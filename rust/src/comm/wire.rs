@@ -41,6 +41,11 @@
 //! `0 < encoded_len·8 − Payload::bits() ≤ OVERHEAD_BITS`, and for every
 //! byte-aligned variant (all but `Quantized`, whose packed levels pad to a
 //! byte boundary) the slack is *exactly* the frame header.
+//!
+//! In the simulator, each framed message's lifecycle surfaces as
+//! `telemetry::Event::{FrameDelivered, FrameAbandoned}` transport events
+//! (virtual-clock stamped, per sender and round), so a trace shows where
+//! the wire bytes accounted here actually landed — or died in ARQ.
 
 use super::{Message, Payload, SparseMsg};
 use crate::quant::bitpack::{self, CodecError};

@@ -582,6 +582,14 @@ pub struct ExperimentConfig {
     /// Execute local solves through the PJRT artifacts instead of the
     /// native backend (requires `make artifacts`).
     pub use_xla: bool,
+    /// Write the structured telemetry stream as JSON Lines to this path
+    /// (`trace = <path>` key / `--trace <path>` flag). `None` disables
+    /// the exporter.
+    pub trace_jsonl: Option<String>,
+    /// Write a Chrome trace-event JSON file to this path
+    /// (`chrome_trace = <path>` key / `--chrome_trace <path>` flag) —
+    /// loadable in `chrome://tracing` or Perfetto.
+    pub chrome_trace: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -602,6 +610,8 @@ impl Default for ExperimentConfig {
             seed: 1,
             results_dir: "results".to_string(),
             use_xla: false,
+            trace_jsonl: None,
+            chrome_trace: None,
         }
     }
 }
@@ -759,7 +769,18 @@ impl ExperimentConfig {
                 self.sim.dropouts =
                     SimConfig::parse_dropouts(value).map_err(|why| bad(&why))?
             }
-            "trace" => self.sim.record_trace = value.parse().map_err(|_| bad("bool"))?,
+            // `trace` is overloaded for compatibility: a boolean keeps its
+            // original meaning (record the simulator's TraceEvent list);
+            // any other value is a JSONL telemetry output path, so the
+            // bare `--trace` flag (→ "true") and `--trace out.jsonl` both
+            // parse.
+            "trace" => match value.parse::<bool>() {
+                Ok(b) => self.sim.record_trace = b,
+                Err(_) => self.trace_jsonl = Some(value.to_string()),
+            },
+            "chrome_trace" | "chrome-trace" => {
+                self.chrome_trace = Some(value.to_string())
+            }
             _ => {
                 return Err(ConfigError::UnknownKey {
                     key: key.to_string(),
@@ -1190,6 +1211,25 @@ mod tests {
         cfg.apply_kv(&kv).unwrap();
         assert_eq!(cfg.net.channel.total_bandwidth_hz, 40e6);
         assert_eq!(cfg.net.channel.slot_secs, 0.1);
+    }
+
+    #[test]
+    fn trace_key_is_bool_or_jsonl_path() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("trace", "true");
+        cfg.apply_kv(&kv).unwrap();
+        assert!(cfg.sim.record_trace);
+        assert_eq!(cfg.trace_jsonl, None);
+
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("trace", "run.jsonl");
+        kv.set("chrome_trace", "run.chrome.json");
+        cfg.apply_kv(&kv).unwrap();
+        assert!(!cfg.sim.record_trace);
+        assert_eq!(cfg.trace_jsonl.as_deref(), Some("run.jsonl"));
+        assert_eq!(cfg.chrome_trace.as_deref(), Some("run.chrome.json"));
     }
 
     #[test]

@@ -44,12 +44,14 @@ use super::residuals::{ResidualPoint, ResidualTracker};
 use crate::comm::CommStats;
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::registry::RunMetrics;
 use crate::metrics::report::RunSummary;
 use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink, WorkerSolver};
 use crate::net::channel::{transmission_energy, ChannelParams};
 use crate::net::topology::Topology;
 use crate::quant::{CompressOutcome, Compressor, CompressorKind};
+use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -170,6 +172,14 @@ pub struct GadmmEngine<P: LocalProblem> {
     watch_broadcasts: bool,
     /// Event buffer drained to the observer after each iteration.
     events: Vec<BroadcastEvent>,
+    /// Structured trace sink (`Off` unless the observer wants telemetry;
+    /// `Off` emissions are a single branch with no timestamping).
+    telemetry: TelemetrySink,
+    /// Wall-clock origin for trace timestamps; inactive (never reads the
+    /// OS clock) when the sink is off.
+    clock: WallClock,
+    /// Per-run counters/histograms; disabled (branch-only) with the sink.
+    metrics: RunMetrics,
 }
 
 impl<P: LocalProblem> GadmmEngine<P> {
@@ -203,6 +213,9 @@ impl<P: LocalProblem> GadmmEngine<P> {
             par_unsupported: false,
             watch_broadcasts: false,
             events: Vec::new(),
+            telemetry: TelemetrySink::off(),
+            clock: WallClock::inactive(),
+            metrics: RunMetrics::disabled(),
             cfg,
         }
     }
@@ -313,10 +326,30 @@ impl<P: LocalProblem> GadmmEngine<P> {
     /// read each other's state.
     pub fn iterate(&mut self) -> ResidualPoint {
         self.tracker.begin_iteration(&self.view);
+        // The iteration being computed (the counter advances at the end).
+        let k = self.iteration + 1;
+        let tele = self.telemetry.enabled();
+        if tele {
+            let t = self.clock.now_ns();
+            self.telemetry.record(t, Event::IterStart { iteration: k });
+        }
         // Phase 1: heads, phase 2: tails (even/odd positions on a chain).
         for phase in 0..2 {
+            let phase_tag = if phase == 0 { Phase::Head } else { Phase::Tail };
+            let mut phase_t0 = 0u64;
+            if tele {
+                phase_t0 = self.clock.now_ns();
+                self.telemetry.record(
+                    phase_t0,
+                    Event::PhaseStart {
+                        iteration: k,
+                        phase: phase_tag,
+                    },
+                );
+            }
             let njobs = if phase == 0 { self.heads.len() } else { self.tails.len() };
             let threads = self.phase_threads(njobs);
+            let mut ran_parallel = false;
             if threads > 1 && !self.par_unsupported {
                 // Take the schedule out (and put it back) instead of
                 // cloning it — the hot path allocates nothing per phase.
@@ -325,27 +358,51 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 } else {
                     std::mem::take(&mut self.tails)
                 };
-                let ran = self.run_phase_parallel(&positions, threads);
+                ran_parallel = self.run_phase_parallel(&positions, threads);
                 if phase == 0 {
                     self.heads = positions;
                 } else {
                     self.tails = positions;
                 }
-                if ran {
-                    continue;
+                if !ran_parallel {
+                    self.par_unsupported = true;
                 }
-                self.par_unsupported = true;
             }
-            let mut i = 0;
-            while i < njobs {
-                let p = if phase == 0 { self.heads[i] } else { self.tails[i] };
-                self.solve_position(p);
-                self.broadcast_position(p);
-                i += 1;
+            if !ran_parallel {
+                let mut i = 0;
+                while i < njobs {
+                    let p = if phase == 0 { self.heads[i] } else { self.tails[i] };
+                    self.solve_position(p);
+                    self.broadcast_position(p);
+                    i += 1;
+                }
+            }
+            if tele {
+                let t = self.clock.now_ns();
+                self.telemetry.record(
+                    t,
+                    Event::PhaseEnd {
+                        iteration: k,
+                        phase: phase_tag,
+                    },
+                );
+                self.metrics
+                    .on_phase(phase_tag.index(), t.saturating_sub(phase_t0));
             }
         }
         // Dual updates — one per edge, performed locally at every worker
         // from the *views* both link ends share (eq. (18)).
+        let mut dual_t0 = 0u64;
+        if tele {
+            dual_t0 = self.clock.now_ns();
+            self.telemetry.record(
+                dual_t0,
+                Event::PhaseStart {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+        }
         let step = self.cfg.dual_step * self.cfg.rho;
         for (e, &(u, v)) in self.topo.edges().iter().enumerate() {
             let (a, b) = (&self.view[u], &self.view[v]);
@@ -353,6 +410,19 @@ impl<P: LocalProblem> GadmmEngine<P> {
             for j in 0..lam.len() {
                 lam[j] += step * (a[j] - b[j]);
             }
+        }
+        if tele {
+            let t = self.clock.now_ns();
+            self.telemetry.record(
+                t,
+                Event::PhaseEnd {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+            self.metrics
+                .on_phase(Phase::Dual.index(), t.saturating_sub(dual_t0));
+            self.telemetry.record(t, Event::IterEnd { iteration: k });
         }
         self.iteration += 1;
         self.tracker
@@ -416,6 +486,21 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 bits: if outcome.sent() { outcome.bits } else { 0 },
                 censored: !outcome.sent(),
             });
+        }
+        if self.telemetry.enabled() {
+            let bits = if outcome.sent() { outcome.bits } else { 0 };
+            let t = self.clock.now_ns();
+            self.telemetry.record(
+                t,
+                Event::Compress {
+                    iteration: self.iteration + 1,
+                    worker: self.topo.worker_at(p),
+                    bits,
+                    radius: outcome.radius,
+                    censored: !outcome.sent(),
+                },
+            );
+            self.metrics.on_broadcast(bits, outcome.radius, outcome.sent());
         }
         if !outcome.sent() {
             self.comm.record_censored();
@@ -559,6 +644,11 @@ impl<P: LocalProblem> GadmmEngine<P> {
         let eval_every = opts.normalized_eval_every();
         self.watch_broadcasts = observer.wants_broadcasts();
         self.events.clear();
+        self.telemetry = TelemetrySink::for_observer(observer);
+        if self.telemetry.enabled() {
+            self.clock = WallClock::start();
+            self.metrics = RunMetrics::active();
+        }
         let mut recorder = Recorder::new("gadmm-run");
         let mut residuals = Vec::new();
         let mut iterations_run = 0;
@@ -574,6 +664,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 self.events = events;
                 self.events.clear();
             }
+            let mut stop = false;
             if self.iteration % eval_every == 0 {
                 let value = metric(self);
                 let point = CurvePoint {
@@ -589,14 +680,38 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 };
                 recorder.push(point);
                 observer.on_eval(&point);
-                if opts.stop_below.map(|t| value <= t).unwrap_or(false)
-                    || opts.stop_above.map(|t| value >= t).unwrap_or(false)
-                {
-                    break;
+                stop = opts.stop_below.map(|t| value <= t).unwrap_or(false)
+                    || opts.stop_above.map(|t| value >= t).unwrap_or(false);
+                if self.telemetry.enabled() {
+                    let t = self.clock.now_ns();
+                    self.telemetry.record(
+                        t,
+                        Event::Eval {
+                            iteration: self.iteration,
+                            value,
+                        },
+                    );
+                    if stop {
+                        self.telemetry.record(
+                            t,
+                            Event::EarlyStop {
+                                iteration: self.iteration,
+                                value,
+                            },
+                        );
+                    }
                 }
+            }
+            self.telemetry.flush_to(observer);
+            if stop {
+                break;
             }
         }
         self.watch_broadcasts = false;
+        let metrics = self.metrics.snapshot();
+        self.telemetry = TelemetrySink::off();
+        self.clock = WallClock::inactive();
+        self.metrics = RunMetrics::disabled();
         RunSummary {
             driver: "engine",
             recorder,
@@ -605,6 +720,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
             iterations_run,
             thetas: self.theta.clone(),
             sim: None,
+            metrics,
         }
     }
 }
@@ -958,5 +1074,84 @@ mod tests {
         assert_eq!(bits, report.comm.bits);
         // Final models ride on the summary (one per position).
         assert_eq!(report.thetas.len(), workers);
+    }
+
+    #[cfg(feature = "telemetry")]
+    #[test]
+    fn telemetry_stream_follows_canonical_sequence() {
+        use crate::telemetry::Record;
+
+        #[derive(Default)]
+        struct Tracer {
+            records: Vec<Record>,
+        }
+        impl Observer for Tracer {
+            fn on_record(&mut self, record: &Record) {
+                self.records.push(record.clone());
+            }
+            fn wants_telemetry(&self) -> bool {
+                true
+            }
+        }
+
+        let workers = 4;
+        let (_, mut engine) = setup(workers, Some(QuantConfig::default()), 1600.0);
+        let opts = RunOptions {
+            iterations: 2,
+            eval_every: 2,
+            stop_below: None,
+            stop_above: None,
+        };
+        let mut tracer = Tracer::default();
+        let report = engine.run_observed(&opts, |eng| eng.global_objective(), &mut tracer);
+        // Per iteration: IterStart, (PhaseStart + 2 Compress + PhaseEnd) ×
+        // head/tail, PhaseStart/PhaseEnd Dual, IterEnd = 12 records; plus
+        // one Eval at k = 2.
+        assert_eq!(tracer.records.len(), 2 * 12 + 1);
+        let names: Vec<&str> = tracer.records[..12].iter().map(|r| r.event.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "iter_start",
+                "phase_start",
+                "compress",
+                "compress",
+                "phase_end",
+                "phase_start",
+                "compress",
+                "compress",
+                "phase_end",
+                "phase_start",
+                "phase_end",
+                "iter_end",
+            ]
+        );
+        // Heads (even positions) compress before tails, ascending.
+        let workers_seen: Vec<usize> = tracer
+            .records
+            .iter()
+            .filter_map(|r| match r.event {
+                Event::Compress { worker, .. } => Some(worker),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(workers_seen[..4], [0, 2, 1, 3]);
+        // Timestamps never go backwards within the stream.
+        for pair in tracer.records.windows(2) {
+            assert!(pair[0].t_ns <= pair[1].t_ns);
+        }
+        // The metrics snapshot rode along on the summary.
+        assert_eq!(report.metrics.counter("broadcasts"), Some(workers as u64 * 2));
+        assert_eq!(
+            report.metrics.histogram("broadcast_bits").map(|h| h.count),
+            Some(workers as u64 * 2)
+        );
+        assert_eq!(
+            report.metrics.histogram("phase_head_ns").map(|h| h.count),
+            Some(2)
+        );
+        // A follow-up plain run stays silent and snapshots empty.
+        let report2 = engine.run(&opts, |eng| eng.global_objective());
+        assert!(report2.metrics.is_empty());
     }
 }

@@ -48,13 +48,16 @@ use super::engine::RunOptions;
 use crate::comm::{wire, CommStats, Message};
 use crate::config::{Dropout, GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::registry::RunMetrics;
 use crate::metrics::report::{RunSummary, SimExt};
 use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink};
 use crate::net::geometry::Point;
 use crate::net::topology::Topology;
+use crate::quant::compress::CompressOutcome;
 use crate::quant::{Compressor, CompressorKind, Mirror};
 use crate::sim::{ComputeModel, EventQueue, SimNet, SimTime};
+use crate::telemetry::{Event, Phase, TelemetrySink};
 use crate::sim::link::NetStats;
 use crate::util::rng::Rng;
 
@@ -166,6 +169,12 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     watch_broadcasts: bool,
     /// Event buffer drained to the observer after each iteration.
     events: Vec<BroadcastEvent>,
+    /// Structured telemetry sink, stamped with the *virtual* clock
+    /// (`now.as_nanos()`); `Off` unless `run_observed` is driving an
+    /// observer that opted in via `wants_telemetry`.
+    telemetry: TelemetrySink,
+    /// Standard metric set; enabled together with the telemetry sink.
+    metrics: RunMetrics,
 }
 
 impl<P: LocalProblem> SimulatedGadmm<P> {
@@ -248,6 +257,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             dims: d,
             watch_broadcasts: false,
             events: Vec::new(),
+            telemetry: TelemetrySink::off(),
+            metrics: RunMetrics::disabled(),
         };
         this.relink();
         this
@@ -367,6 +378,16 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                         worker: d.worker,
                     });
                 }
+                if self.telemetry.enabled() {
+                    let t = self.now.as_nanos();
+                    self.telemetry.record(
+                        t,
+                        Event::Dropout {
+                            iteration: iter,
+                            worker: d.worker,
+                        },
+                    );
+                }
             }
         }
         if fired {
@@ -435,6 +456,16 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 survivors: self.chain.len(),
             });
         }
+        if self.telemetry.enabled() {
+            let t = self.now.as_nanos();
+            self.telemetry.record(
+                t,
+                Event::Restitch {
+                    iteration: iter,
+                    survivors: self.chain.len(),
+                },
+            );
+        }
     }
 
     /// One full simulated iteration. Returns `false` if the run cannot
@@ -446,10 +477,26 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         }
         let iter_start = self.now;
         let mut ready: Vec<SimTime> = vec![iter_start; self.workers.len()];
+        let tele = self.telemetry.enabled();
+        if tele {
+            self.telemetry
+                .record(iter_start.as_nanos(), Event::IterStart { iteration: iter });
+        }
 
         // Phase 0: heads, phase 1: tails — positions in ascending order,
         // exactly the engine's schedule.
         for phase in 0..2 {
+            let phase_tag = if phase == 0 { Phase::Head } else { Phase::Tail };
+            let phase_t0 = self.now.as_nanos();
+            if tele {
+                self.telemetry.record(
+                    phase_t0,
+                    Event::PhaseStart {
+                        iteration: iter,
+                        phase: phase_tag,
+                    },
+                );
+            }
             for p in 0..self.topo.len() {
                 if self.topo.is_head(p) != (phase == 0) {
                     continue;
@@ -461,6 +508,10 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 };
                 let at = ready[w].max(iter_start).plus_secs_f64(ct);
                 self.queue.schedule(at, SimEvent::SolveDone { worker: w });
+            }
+            if tele {
+                // Depth right after scheduling = this phase's solve fan-out.
+                self.metrics.on_queue_depth(self.queue.len());
             }
             while let Some((t, ev)) = self.queue.pop() {
                 self.now = self.now.max(t);
@@ -474,10 +525,32 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                     } => self.handle_frame(from, to, &bytes, attempts, iter, t, &mut ready),
                 }
             }
+            if tele {
+                let t = self.now.as_nanos();
+                self.telemetry.record(
+                    t,
+                    Event::PhaseEnd {
+                        iteration: iter,
+                        phase: phase_tag,
+                    },
+                );
+                self.metrics
+                    .on_phase(phase_tag.index(), t.saturating_sub(phase_t0));
+            }
         }
 
         // Dual updates — local at every worker, per incident link, in link
-        // order (threaded-runtime math).
+        // order (threaded-runtime math). Instantaneous on the virtual
+        // clock, so the dual span is zero-width.
+        if tele {
+            self.telemetry.record(
+                self.now.as_nanos(),
+                Event::PhaseStart {
+                    iteration: iter,
+                    phase: Phase::Dual,
+                },
+            );
+        }
         let step = self.cfg.dual_step * self.cfg.rho;
         let d = self.dims;
         for &w in &self.chain {
@@ -498,9 +571,52 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             }
         }
 
+        if tele {
+            let t = self.now.as_nanos();
+            self.telemetry.record(
+                t,
+                Event::PhaseEnd {
+                    iteration: iter,
+                    phase: Phase::Dual,
+                },
+            );
+            self.metrics.on_phase(Phase::Dual.index(), 0);
+            self.telemetry.record(t, Event::IterEnd { iteration: iter });
+        }
         self.rounds += self.chain.len() as u64;
         self.iteration = iter;
         true
+    }
+
+    /// The one place a compress outcome fans out to observers: the
+    /// [`BroadcastEvent`] buffer is touched *only* behind
+    /// `watch_broadcasts` (so observers with `wants_broadcasts == false`
+    /// cost no construction at all), and the telemetry sink/metrics only
+    /// behind their own enablement. Keeping both gates here means no call
+    /// site can forget one.
+    fn note_broadcast(&mut self, iter: u64, w: usize, outcome: &CompressOutcome) {
+        let bits = if outcome.sent() { outcome.bits } else { 0 };
+        if self.watch_broadcasts {
+            self.events.push(BroadcastEvent {
+                iteration: iter,
+                worker: w,
+                bits,
+                censored: !outcome.sent(),
+            });
+        }
+        if self.telemetry.enabled() {
+            self.telemetry.record(
+                self.now.as_nanos(),
+                Event::Compress {
+                    iteration: iter,
+                    worker: w,
+                    bits,
+                    radius: outcome.radius,
+                    censored: !outcome.sent(),
+                },
+            );
+            self.metrics.on_broadcast(bits, outcome.radius, outcome.sent());
+        }
     }
 
     /// Local solve + broadcast for worker `w`.
@@ -540,14 +656,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 worker: w,
             });
         }
-        if self.watch_broadcasts {
-            self.events.push(BroadcastEvent {
-                iteration: iter,
-                worker: w,
-                bits: if outcome.sent() { outcome.bits } else { 0 },
-                censored: !outcome.sent(),
-            });
-        }
+        self.note_broadcast(iter, w, &outcome);
         if !outcome.sent() {
             // Censored round: nothing is put on any link — receivers
             // deliberately reuse their mirrors (NOT the stale/lost case,
@@ -602,6 +711,17 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                             attempts: tx.attempts,
                         });
                     }
+                    if self.telemetry.enabled() {
+                        self.telemetry.record(
+                            self.now.as_nanos(),
+                            Event::FrameAbandoned {
+                                iteration: iter,
+                                from: w,
+                                to: nb,
+                                attempts: tx.attempts,
+                            },
+                        );
+                    }
                 }
             }
         }
@@ -642,6 +762,17 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 attempts,
             });
         }
+        if self.telemetry.enabled() {
+            self.telemetry.record(
+                t.as_nanos(),
+                Event::FrameDelivered {
+                    iteration: iter,
+                    from,
+                    to,
+                    attempts,
+                },
+            );
+        }
     }
 
     /// Run loop mirroring `GadmmEngine::run`, with the virtual clock as
@@ -669,6 +800,10 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let eval_every = opts.normalized_eval_every();
         self.watch_broadcasts = observer.wants_broadcasts();
         self.events.clear();
+        self.telemetry = TelemetrySink::for_observer(observer);
+        if self.telemetry.enabled() {
+            self.metrics = RunMetrics::active();
+        }
         let mut recorder = Recorder::new("sim-run");
         let mut retransmissions = Recorder::new("sim-retransmissions");
         let mut stale = Recorder::new("sim-stale-rounds");
@@ -687,6 +822,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 self.events = events;
                 self.events.clear();
             }
+            let mut stop = false;
             if self.iteration % eval_every == 0 {
                 let value = metric(self);
                 let point = CurvePoint {
@@ -709,15 +845,45 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 });
                 let crossed = opts.stop_below.map(|t| value <= t).unwrap_or(false)
                     || opts.stop_above.map(|t| value >= t).unwrap_or(false);
+                if self.telemetry.enabled() {
+                    let t = self.now.as_nanos();
+                    self.telemetry.record(
+                        t,
+                        Event::Eval {
+                            iteration: self.iteration,
+                            value,
+                        },
+                    );
+                    if crossed {
+                        self.telemetry.record(
+                            t,
+                            Event::EarlyStop {
+                                iteration: self.iteration,
+                                value,
+                            },
+                        );
+                    }
+                }
                 if crossed {
                     if time_to_target_secs.is_none() {
                         time_to_target_secs = Some(self.now.as_secs_f64());
                     }
-                    break;
+                    stop = true;
                 }
             }
+            self.telemetry.flush_to(observer);
+            if stop {
+                break;
+            }
         }
+        // A terminal dropout exits `iterate` mid-flight; drain whatever
+        // the partial iteration recorded (flush clears, so this is a
+        // no-op on the early-stop path above).
+        self.telemetry.flush_to(observer);
         self.watch_broadcasts = false;
+        let metrics = self.metrics.snapshot();
+        self.telemetry = TelemetrySink::off();
+        self.metrics = RunMetrics::disabled();
         let thetas = self
             .chain
             .iter()
@@ -730,6 +896,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             residuals: Vec::new(),
             iterations_run,
             thetas,
+            metrics,
             sim: Some(SimExt {
                 retransmissions,
                 stale,

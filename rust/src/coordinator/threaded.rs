@@ -39,11 +39,13 @@ use crate::comm::{CommStats, Message, Payload};
 use crate::config::GadmmConfig;
 use crate::coordinator::engine::RunOptions;
 use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::registry::RunMetrics;
 use crate::metrics::report::RunSummary;
 use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, NeighborLink, WorkerSolver};
 use crate::net::topology::Topology;
 use crate::quant::{Compressor, Mirror};
+use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -72,6 +74,9 @@ struct WorkerReport {
     /// `f_n(θ_k)` — only computed on eval iterations (0.0 otherwise).
     objective: f64,
     bits: u64,
+    /// Quantizer range ‖θ−θ̂‖∞ of this round's compress outcome — the
+    /// leader feeds it to the telemetry stream and metrics registry.
+    radius: f32,
     /// `false` when this round's broadcast was censored (no channel use).
     sent: bool,
 }
@@ -210,6 +215,22 @@ pub fn run_threaded_on(
         }
     }
     let watch = observer.wants_broadcasts();
+    // Telemetry is synthesized leader-side from the worker reports, in
+    // the canonical cross-driver order. Timestamps are leader wall-clock
+    // at synthesis time: ordering is the contract here, not durations
+    // (worker phases overlap in real time), so phase-time histograms stay
+    // unfed on this driver.
+    let mut telemetry = TelemetrySink::for_observer(observer);
+    let clock = if telemetry.enabled() {
+        WallClock::start()
+    } else {
+        WallClock::inactive()
+    };
+    let mut metrics = if telemetry.enabled() {
+        RunMetrics::active()
+    } else {
+        RunMetrics::disabled()
+    };
     let mut pending: std::collections::BTreeMap<u64, Vec<WorkerReport>> =
         std::collections::BTreeMap::new();
     let mut iterations_run = 0u64;
@@ -270,6 +291,58 @@ pub fn run_threaded_on(
                 }
             }
         }
+        if telemetry.enabled() {
+            let t = clock.now_ns();
+            telemetry.record(t, Event::IterStart { iteration: k });
+            for phase in 0..2 {
+                let tag = if phase == 0 { Phase::Head } else { Phase::Tail };
+                telemetry.record(
+                    t,
+                    Event::PhaseStart {
+                        iteration: k,
+                        phase: tag,
+                    },
+                );
+                for rep in &reps {
+                    if topo.is_head(rep.pos) != (phase == 0) {
+                        continue;
+                    }
+                    telemetry.record(
+                        t,
+                        Event::Compress {
+                            iteration: k,
+                            worker: topo.worker_at(rep.pos),
+                            bits: rep.bits,
+                            radius: rep.radius,
+                            censored: !rep.sent,
+                        },
+                    );
+                    metrics.on_broadcast(rep.bits, rep.radius, rep.sent);
+                }
+                telemetry.record(
+                    t,
+                    Event::PhaseEnd {
+                        iteration: k,
+                        phase: tag,
+                    },
+                );
+            }
+            telemetry.record(
+                t,
+                Event::PhaseStart {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+            telemetry.record(
+                t,
+                Event::PhaseEnd {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+            telemetry.record(t, Event::IterEnd { iteration: k });
+        }
         for rep in reps {
             if let Some(theta) = rep.theta {
                 thetas[rep.pos] = theta;
@@ -288,17 +361,26 @@ pub fn run_threaded_on(
             };
             recorder.push(point);
             observer.on_eval(&point);
-            if opts.stop_below.map(|t| value <= t).unwrap_or(false)
-                || opts.stop_above.map(|t| value >= t).unwrap_or(false)
-            {
+            let stop = opts.stop_below.map(|t| value <= t).unwrap_or(false)
+                || opts.stop_above.map(|t| value >= t).unwrap_or(false);
+            if telemetry.enabled() {
+                let t = clock.now_ns();
+                telemetry.record(t, Event::Eval { iteration: k, value });
+                if stop {
+                    telemetry.record(t, Event::EarlyStop { iteration: k, value });
+                }
+            }
+            if stop {
                 // Publish the stop iteration; workers past it halt at
                 // their next iteration boundary and cascade Stop markers
                 // to unblock anyone mid-phase. Their extra reports are
                 // simply never consumed.
                 stop_at.store(k, Ordering::Release);
+                telemetry.flush_to(observer);
                 break 'iters;
             }
         }
+        telemetry.flush_to(observer);
     }
 
     for h in handles {
@@ -313,6 +395,7 @@ pub fn run_threaded_on(
         iterations_run,
         thetas,
         sim: None,
+        metrics: metrics.snapshot(),
     })
 }
 
@@ -494,6 +577,7 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
                 theta: theta_out,
                 objective,
                 bits,
+                radius: outcome.radius,
                 sent: outcome.sent(),
             })
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;

@@ -42,6 +42,7 @@ pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 
@@ -51,8 +52,10 @@ pub mod prelude {
     pub use crate::coordinator::engine::RunOptions;
     pub use crate::data::partition::Partition;
     pub use crate::metrics::recorder::Recorder;
+    pub use crate::metrics::registry::{MetricsRegistry, MetricsSnapshot, RunMetrics};
     pub use crate::metrics::report::{RunSummary, SimExt};
     pub use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
+    pub use crate::telemetry::{Event as TraceEvent, Phase, Record, TelemetryOptions};
     pub use crate::net::topology::{Topology, TopologyKind};
     pub use crate::quant::{Compressor, CompressorKind, StochasticQuantizer};
     pub use crate::runtime::session::{Driver, DriverKind, ProblemKind, Session};

@@ -116,7 +116,15 @@ fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
     let variant = variant_name(&cfg.gadmm.compressor, family(cfg.problem));
     let results_dir = cfg.results_dir.clone();
     let wall = std::time::Instant::now();
+    let trace_jsonl = cfg.trace_jsonl.clone();
+    let chrome_trace = cfg.chrome_trace.clone();
     let summary = if cfg.use_xla {
+        if trace_jsonl.is_some() || chrome_trace.is_some() {
+            anyhow::bail!(
+                "--trace/--chrome_trace need a Session driver; the XLA branch \
+                 does not stream telemetry — drop --use-xla"
+            );
+        }
         run_xla(&cfg)?
     } else {
         let session = Session::from_config(&cfg);
@@ -124,6 +132,12 @@ fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
         session.run()?
     };
     let wall = wall.elapsed().as_secs_f64();
+    if let Some(path) = &trace_jsonl {
+        println!("telemetry trace (JSONL) written to {path}");
+    }
+    if let Some(path) = &chrome_trace {
+        println!("chrome trace written to {path} (open in chrome://tracing)");
+    }
     summary.print_curve(&variant, 15);
     summary.print_summary(&variant);
     println!(

@@ -7,9 +7,11 @@
 //! is the streaming hook a run can drive while it progresses.
 
 pub mod recorder;
+pub mod registry;
 pub mod report;
 
 use self::recorder::CurvePoint;
+use crate::telemetry::Record;
 
 /// One broadcast as observed on the run's hot path: who transmitted, at
 /// which iteration, and what it cost (censored rounds carry 0 bits).
@@ -49,6 +51,19 @@ pub trait Observer {
     fn wants_broadcasts(&self) -> bool {
         false
     }
+
+    /// One structured telemetry record (iteration/phase spans, compress
+    /// outcomes, transport events — see [`crate::telemetry`]). Delivered
+    /// in trace order, once per iteration batch, and only when
+    /// [`Observer::wants_telemetry`] is overridden to `true`.
+    fn on_record(&mut self, _record: &Record) {}
+
+    /// Opt into the structured telemetry stream. Defaults to `false`, in
+    /// which case every driver keeps an `Off` sink: no timestamps are
+    /// taken, nothing allocates, metrics stay disabled.
+    fn wants_telemetry(&self) -> bool {
+        false
+    }
 }
 
 /// The do-nothing observer every plain `run` call uses.
@@ -64,6 +79,11 @@ mod tests {
     fn noop_observer_ignores_everything() {
         let mut obs = NoopObserver;
         assert!(!obs.wants_broadcasts());
+        assert!(!obs.wants_telemetry());
+        obs.on_record(&Record {
+            t_ns: 0,
+            event: crate::telemetry::Event::IterStart { iteration: 1 },
+        });
         obs.on_broadcast(&BroadcastEvent {
             iteration: 1,
             worker: 0,

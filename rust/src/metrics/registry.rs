@@ -1,0 +1,462 @@
+//! Run-scoped metrics: named counters and fixed-bucket histograms.
+//!
+//! The registry is the aggregate companion to the event stream in
+//! [`crate::telemetry`]: where the trace answers "what happened, in what
+//! order", the registry answers "how much, how often, how spread out".
+//! Drivers register a standard metric set ([`RunMetrics`]) when an
+//! observer opts into telemetry, feed it on the hot path through
+//! enabled-gated helpers (a disabled registry costs one branch per call),
+//! and snapshot it into [`RunSummary`](super::report::RunSummary) at the
+//! end of the run, where it serializes under the report's `"metrics"` key.
+//!
+//! Histograms use fixed bucket bounds chosen per metric (log-spaced), so
+//! snapshots from different runs are directly comparable and merging
+//! never rebuckets.
+
+use crate::util::json::Json;
+
+/// Handle to a registered counter (index into the registry).
+#[derive(Clone, Copy, Debug)]
+pub struct CounterId(usize);
+
+/// Handle to a registered histogram (index into the registry).
+#[derive(Clone, Copy, Debug)]
+pub struct HistogramId(usize);
+
+#[derive(Clone, Debug)]
+struct Counter {
+    name: &'static str,
+    unit: &'static str,
+    value: u64,
+}
+
+#[derive(Clone, Debug)]
+struct Histogram {
+    name: &'static str,
+    unit: &'static str,
+    /// Upper bounds (inclusive) of each bucket; one overflow bucket rides
+    /// past the last bound.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` entries, the last counting overflow.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    fn observe(&mut self, x: f64) {
+        let slot = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[slot] += 1;
+        self.sum += x;
+        self.count += 1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+}
+
+/// A registry of named counters and fixed-bucket histograms.
+///
+/// `disabled()` registries accept the same calls but do nothing, so hot
+/// paths carry a single branch instead of `#[cfg]` forests.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    counters: Vec<Counter>,
+    histograms: Vec<Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An active registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: true,
+            counters: Vec::new(),
+            histograms: Vec::new(),
+        }
+    }
+
+    /// A no-op registry: registrations still hand out ids (so callers
+    /// keep one code path) but nothing is recorded or snapshotted.
+    pub fn disabled() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Register a counter. `unit` is a display hint ("1", "bits", "ns").
+    pub fn counter(&mut self, name: &'static str, unit: &'static str) -> CounterId {
+        let id = CounterId(self.counters.len());
+        self.counters.push(Counter {
+            name,
+            unit,
+            value: 0,
+        });
+        id
+    }
+
+    /// Register a histogram over the given inclusive upper bucket bounds
+    /// (ascending); values past the last bound land in an overflow bucket.
+    pub fn histogram(
+        &mut self,
+        name: &'static str,
+        unit: &'static str,
+        bounds: Vec<f64>,
+    ) -> HistogramId {
+        let id = HistogramId(self.histograms.len());
+        let slots = bounds.len() + 1;
+        self.histograms.push(Histogram {
+            name,
+            unit,
+            bounds,
+            counts: vec![0; slots],
+            sum: 0.0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        });
+        id
+    }
+
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, delta: u64) {
+        if self.enabled {
+            self.counters[id.0].value += delta;
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, id: HistogramId, x: f64) {
+        if self.enabled {
+            self.histograms[id.0].observe(x);
+        }
+    }
+
+    /// Freeze the current state. A disabled registry snapshots empty.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        if !self.enabled {
+            return MetricsSnapshot::default();
+        }
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|c| CounterSnapshot {
+                    name: c.name.to_string(),
+                    unit: c.unit.to_string(),
+                    value: c.value,
+                })
+                .collect(),
+            histograms: self
+                .histograms
+                .iter()
+                .map(|h| HistogramSnapshot {
+                    name: h.name.to_string(),
+                    unit: h.unit.to_string(),
+                    bounds: h.bounds.clone(),
+                    counts: h.counts.clone(),
+                    sum: h.sum,
+                    count: h.count,
+                    min: if h.count > 0 { h.min } else { 0.0 },
+                    max: if h.count > 0 { h.max } else { 0.0 },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Frozen counter state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSnapshot {
+    pub name: String,
+    pub unit: String,
+    pub value: u64,
+}
+
+/// Frozen histogram state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub name: String,
+    pub unit: String,
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// The metrics snapshot carried by `RunSummary.metrics`. Empty (and
+/// omitted from JSON reports) when the run collected no metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<CounterSnapshot>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Look up a counter value by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|c| c.name == name).map(|c| c.value)
+    }
+
+    /// Look up a histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for c in &self.counters {
+            let mut obj = Json::obj();
+            obj.set("value", Json::Num(c.value as f64));
+            obj.set("unit", Json::Str(c.unit.clone()));
+            counters.set(&c.name, obj);
+        }
+        let mut histograms = Json::obj();
+        for h in &self.histograms {
+            let mut obj = Json::obj();
+            obj.set("unit", Json::Str(h.unit.clone()));
+            obj.set("bounds", Json::from_f64s(&h.bounds));
+            obj.set(
+                "counts",
+                Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+            obj.set("count", Json::Num(h.count as f64));
+            obj.set("sum", Json::Num(h.sum));
+            obj.set("mean", Json::Num(h.mean()));
+            obj.set("min", Json::Num(h.min));
+            obj.set("max", Json::Num(h.max));
+            histograms.set(&h.name, obj);
+        }
+        let mut doc = Json::obj();
+        doc.set("counters", counters);
+        doc.set("histograms", histograms);
+        doc
+    }
+}
+
+/// Log-spaced bounds: `lo, lo*step, ...` with `n` entries.
+fn log_bounds(lo: f64, step: f64, n: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut b = lo;
+    for _ in 0..n {
+        out.push(b);
+        b *= step;
+    }
+    out
+}
+
+/// The standard per-run metric set every driver feeds.
+///
+/// | name | kind | unit | meaning |
+/// |---|---|---|---|
+/// | `broadcasts` | counter | 1 | compress outcomes observed (sent + censored) |
+/// | `censored_rounds` | counter | 1 | broadcasts suppressed by censoring |
+/// | `broadcast_bits` | histogram | bits | payload bits per sent broadcast |
+/// | `quant_radius` | histogram | 1 | ‖θ−θ̂‖∞ per compress outcome |
+/// | `phase_head_ns` | histogram | ns | head phase wall time per iteration |
+/// | `phase_tail_ns` | histogram | ns | tail phase wall time per iteration |
+/// | `phase_dual_ns` | histogram | ns | dual phase wall time per iteration |
+/// | `sim_queue_depth` | histogram | events | sim event-queue depth per phase |
+///
+/// Phase times are wall-clock ns in the engine and virtual ns in the sim;
+/// the threaded driver does not observe them (worker phases overlap, so
+/// no single leader-side duration is meaningful). `sim_queue_depth` is
+/// sim-only.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub registry: MetricsRegistry,
+    pub broadcasts: CounterId,
+    pub censored_rounds: CounterId,
+    pub broadcast_bits: HistogramId,
+    pub quant_radius: HistogramId,
+    /// Indexed by `Phase::index()`: head, tail, dual.
+    pub phase_ns: [HistogramId; 3],
+    pub sim_queue_depth: HistogramId,
+}
+
+impl RunMetrics {
+    fn with_registry(mut registry: MetricsRegistry) -> RunMetrics {
+        let broadcasts = registry.counter("broadcasts", "1");
+        let censored_rounds = registry.counter("censored_rounds", "1");
+        // 64 bits .. ~64 Mbit, ×4 per bucket.
+        let broadcast_bits = registry.histogram("broadcast_bits", "bits", log_bounds(64.0, 4.0, 11));
+        // 1e-8 .. 1e3 in decades.
+        let quant_radius = registry.histogram("quant_radius", "1", log_bounds(1e-8, 10.0, 12));
+        // 1 µs .. ~100 s in decades.
+        let phase_bounds = log_bounds(1e3, 10.0, 9);
+        let phase_ns = [
+            registry.histogram("phase_head_ns", "ns", phase_bounds.clone()),
+            registry.histogram("phase_tail_ns", "ns", phase_bounds.clone()),
+            registry.histogram("phase_dual_ns", "ns", phase_bounds),
+        ];
+        // 1 .. 1024 queued events, ×2 per bucket.
+        let sim_queue_depth =
+            registry.histogram("sim_queue_depth", "events", log_bounds(1.0, 2.0, 11));
+        RunMetrics {
+            registry,
+            broadcasts,
+            censored_rounds,
+            broadcast_bits,
+            quant_radius,
+            phase_ns,
+            sim_queue_depth,
+        }
+    }
+
+    /// The standard set, actively recording.
+    pub fn active() -> RunMetrics {
+        RunMetrics::with_registry(MetricsRegistry::new())
+    }
+
+    /// The standard set as no-ops (one branch per call on the hot path).
+    pub fn disabled() -> RunMetrics {
+        RunMetrics::with_registry(MetricsRegistry::disabled())
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.registry.enabled()
+    }
+
+    /// Record one compress outcome: `bits` as sent over the wire (0 when
+    /// censored), `radius` = ‖θ−θ̂‖∞, `sent` = not censored.
+    #[inline]
+    pub fn on_broadcast(&mut self, bits: u64, radius: f32, sent: bool) {
+        if !self.registry.enabled {
+            return;
+        }
+        self.registry.inc(self.broadcasts, 1);
+        self.registry.observe(self.quant_radius, radius as f64);
+        if sent {
+            self.registry.observe(self.broadcast_bits, bits as f64);
+        } else {
+            self.registry.inc(self.censored_rounds, 1);
+        }
+    }
+
+    /// Record one phase's wall (or virtual) time.
+    #[inline]
+    pub fn on_phase(&mut self, phase_index: usize, ns: u64) {
+        self.registry.observe(self.phase_ns[phase_index], ns as f64);
+    }
+
+    /// Record the sim event-queue depth after scheduling a phase.
+    #[inline]
+    pub fn on_queue_depth(&mut self, depth: usize) {
+        self.registry.observe(self.sim_queue_depth, depth as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
+    }
+}
+
+impl Default for RunMetrics {
+    fn default() -> RunMetrics {
+        RunMetrics::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms_accumulate() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("hits", "1");
+        let h = reg.histogram("size", "bytes", vec![1.0, 10.0, 100.0]);
+        reg.inc(c, 2);
+        reg.inc(c, 3);
+        reg.observe(h, 0.5);
+        reg.observe(h, 10.0); // inclusive upper bound -> second bucket
+        reg.observe(h, 1e6); // overflow bucket
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("hits"), Some(5));
+        let hs = snap.histogram("size").unwrap();
+        assert_eq!(hs.counts, vec![1, 1, 0, 1]);
+        assert_eq!(hs.count, 3);
+        assert_eq!(hs.min, 0.5);
+        assert_eq!(hs.max, 1e6);
+        assert!((hs.mean() - (0.5 + 10.0 + 1e6) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disabled_registry_snapshots_empty() {
+        let mut reg = MetricsRegistry::disabled();
+        let c = reg.counter("hits", "1");
+        reg.inc(c, 7);
+        assert!(reg.snapshot().is_empty());
+        assert!(!reg.enabled());
+    }
+
+    #[test]
+    fn run_metrics_broadcast_accounting() {
+        let mut m = RunMetrics::active();
+        m.on_broadcast(76, 0.5, true);
+        m.on_broadcast(0, 0.1, false);
+        m.on_broadcast(76, 0.3, true);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("broadcasts"), Some(3));
+        assert_eq!(snap.counter("censored_rounds"), Some(1));
+        assert_eq!(snap.histogram("broadcast_bits").unwrap().count, 2);
+        assert_eq!(snap.histogram("quant_radius").unwrap().count, 3);
+    }
+
+    #[test]
+    fn disabled_run_metrics_are_silent() {
+        let mut m = RunMetrics::disabled();
+        m.on_broadcast(76, 0.5, true);
+        m.on_phase(0, 1_000);
+        m.on_queue_depth(4);
+        assert!(m.snapshot().is_empty());
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let mut m = RunMetrics::active();
+        m.on_broadcast(76, 0.5, true);
+        let json = m.snapshot().to_json();
+        let bits = json
+            .get("histograms")
+            .and_then(|h| h.get("broadcast_bits"))
+            .expect("broadcast_bits serialized");
+        assert_eq!(bits.get("count").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(bits.get("unit").and_then(|j| j.as_str()), Some("bits"));
+        let counters = json.get("counters").expect("counters object");
+        assert_eq!(
+            counters
+                .get("broadcasts")
+                .and_then(|c| c.get("value"))
+                .and_then(|j| j.as_f64()),
+            Some(1.0)
+        );
+    }
+}

@@ -11,6 +11,7 @@
 //!   same rows/series the paper's plots show.
 
 use super::recorder::Recorder;
+use super::registry::MetricsSnapshot;
 use crate::comm::CommStats;
 use crate::coordinator::residuals::ResidualPoint;
 use crate::coordinator::simulated::TraceEvent;
@@ -61,6 +62,9 @@ pub struct RunSummary {
     pub thetas: Vec<Vec<f32>>,
     /// Present iff the run went through the discrete-event simulator.
     pub sim: Option<SimExt>,
+    /// Registry snapshot (counters + histograms). Empty unless the run's
+    /// observer opted into telemetry (`Observer::wants_telemetry`).
+    pub metrics: MetricsSnapshot,
 }
 
 impl RunSummary {
@@ -159,6 +163,9 @@ impl RunSummary {
             // One frame abandoned at the ARQ cap == one stale-mirror round.
             obj.set("frames_abandoned", Json::Num(ext.net.abandoned as f64));
             obj.set("restitches", Json::Num(ext.restitches as f64));
+        }
+        if !self.metrics.is_empty() {
+            obj.set("metrics", self.metrics.to_json());
         }
         obj.set("curve", self.recorder.thinned(400).to_json());
         obj
@@ -325,7 +332,21 @@ mod tests {
             iterations_run: 3,
             thetas: vec![vec![0.0; 2]; 4],
             sim,
+            metrics: MetricsSnapshot::default(),
         }
+    }
+
+    #[test]
+    fn run_summary_json_carries_metrics_when_collected() {
+        let mut s = summary(None);
+        assert!(s.to_json().get("metrics").is_none(), "empty snapshot omitted");
+        let mut m = crate::metrics::registry::RunMetrics::active();
+        m.on_broadcast(300, 0.5, true);
+        s.metrics = m.snapshot();
+        let j = s.to_json();
+        let metrics = j.get("metrics").expect("metrics key present");
+        assert!(metrics.get("counters").is_some());
+        assert!(metrics.get("histograms").is_some());
     }
 
     #[test]

@@ -62,6 +62,11 @@ pub enum Transmission {
 }
 
 /// Outcome of one [`Compressor::compress_into`] call.
+///
+/// Besides bit accounting, this is exactly what every driver forwards to
+/// observers as a `telemetry::Event::Compress` record (bits, radius,
+/// censored flag) and feeds the `broadcast_bits` / `quant_radius` /
+/// `censored_rounds` metrics — one struct, one fan-out point per driver.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CompressOutcome {
     /// Paper-accounting payload bits of this broadcast (0 when censored).

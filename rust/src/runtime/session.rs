@@ -34,6 +34,8 @@
 //! [`TopologyKind::build`] produces), the three drivers are bit-for-bit
 //! equivalent through this API — pinned by `tests/session_equivalence.rs`.
 
+use anyhow::Context as _;
+
 use crate::config::{ExperimentConfig, GadmmConfig, SimConfig};
 use crate::coordinator::engine::{GadmmEngine, InvalidRunOptions, RunOptions};
 use crate::coordinator::simulated::SimulatedGadmm;
@@ -42,8 +44,11 @@ use crate::data::images::{ImageDataset, ImageSpec};
 use crate::data::linreg::{LinRegDataset, LinRegSpec};
 use crate::data::partition::Partition;
 use crate::figures::helpers::{DNN_ALPHA, DNN_BITS, DNN_RHO, LINREG_RHO};
+use crate::metrics::recorder::CurvePoint;
 use crate::metrics::report::RunSummary;
-use crate::metrics::{NoopObserver, Observer};
+use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
+use crate::telemetry::export::{write_chrome_trace, write_jsonl};
+use crate::telemetry::{Record, TelemetryOptions};
 use crate::model::linreg::LinRegProblem;
 use crate::model::logreg::{LogRegProblem, LogRegSpec};
 use crate::model::mlp::{MlpDims, MlpProblem};
@@ -525,6 +530,40 @@ pub struct Session {
     cfg: ExperimentConfig,
     quick: bool,
     opts_override: Option<RunOptions>,
+    telemetry: TelemetryOptions,
+}
+
+/// The session's trace collector: forwards every [`Observer`] callback to
+/// the user's observer while gathering the structured telemetry stream
+/// for the exporters configured via [`Session::telemetry`]. Its
+/// `wants_telemetry` is unconditionally `true` — it exists to collect —
+/// while broadcast interest passes through to the inner observer.
+struct TelemetryTee<'a> {
+    inner: &'a mut dyn Observer,
+    records: Vec<Record>,
+}
+
+impl Observer for TelemetryTee<'_> {
+    fn on_eval(&mut self, point: &CurvePoint) {
+        self.inner.on_eval(point);
+    }
+
+    fn on_broadcast(&mut self, event: &BroadcastEvent) {
+        self.inner.on_broadcast(event);
+    }
+
+    fn wants_broadcasts(&self) -> bool {
+        self.inner.wants_broadcasts()
+    }
+
+    fn on_record(&mut self, record: &Record) {
+        self.records.push(record.clone());
+        self.inner.on_record(record);
+    }
+
+    fn wants_telemetry(&self) -> bool {
+        true
+    }
 }
 
 /// A session resolved against its problem's defaults — the exact
@@ -555,10 +594,18 @@ impl Session {
     /// workers, 2 bits) resolve to each task's tuned values while
     /// explicit settings always win.
     pub fn from_config(cfg: &ExperimentConfig) -> Session {
+        let mut telemetry = TelemetryOptions::off();
+        if let Some(path) = &cfg.trace_jsonl {
+            telemetry = telemetry.with_jsonl(path);
+        }
+        if let Some(path) = &cfg.chrome_trace {
+            telemetry = telemetry.with_chrome(path);
+        }
         Session {
             cfg: cfg.clone(),
             quick: false,
             opts_override: None,
+            telemetry,
         }
     }
 
@@ -643,6 +690,17 @@ impl Session {
     /// cadence, both stop thresholds) instead of the problem's defaults.
     pub fn options(mut self, opts: RunOptions) -> Session {
         self.opts_override = Some(opts);
+        self
+    }
+
+    /// Attach structured-trace exporters to the run: the driver streams
+    /// telemetry records through a collecting tee observer and the
+    /// session writes the configured outputs (JSONL and/or Chrome
+    /// trace-event JSON — load the latter in `chrome://tracing` or
+    /// Perfetto) after the run completes. With the `telemetry` cargo
+    /// feature disabled the exporters still write, but carry no records.
+    pub fn telemetry(mut self, opts: TelemetryOptions) -> Session {
+        self.telemetry = opts;
         self
     }
 
@@ -894,11 +952,31 @@ impl Session {
         self.run_observed(&mut NoopObserver)
     }
 
-    /// [`Session::run`] with a streaming [`Observer`].
+    /// [`Session::run`] with a streaming [`Observer`]. When telemetry
+    /// exporters are configured, the observer is wrapped in a collecting
+    /// tee and the trace files are written after the run.
     pub fn run_observed(self, observer: &mut dyn Observer) -> anyhow::Result<RunSummary> {
         let opts = self.resolve().opts;
+        let telemetry = self.telemetry.clone();
         let mut driver = self.into_driver()?;
-        driver.run(&opts, observer)
+        if !telemetry.enabled() {
+            return driver.run(&opts, observer);
+        }
+        let mut tee = TelemetryTee {
+            inner: observer,
+            records: Vec::new(),
+        };
+        let summary = driver.run(&opts, &mut tee)?;
+        let records = tee.records;
+        if let Some(path) = &telemetry.jsonl {
+            write_jsonl(path, &records)
+                .with_context(|| format!("writing JSONL trace to {}", path.display()))?;
+        }
+        if let Some(path) = &telemetry.chrome {
+            write_chrome_trace(path, &records)
+                .with_context(|| format!("writing Chrome trace to {}", path.display()))?;
+        }
+        Ok(summary)
     }
 }
 
@@ -1038,6 +1116,35 @@ mod tests {
         driver.run(&opts, &mut NoopObserver).unwrap();
         let err = driver.run(&opts, &mut NoopObserver).unwrap_err();
         assert!(err.to_string().contains("only run once"), "{err}");
+    }
+
+    #[cfg(feature = "telemetry")]
+    #[test]
+    fn session_writes_trace_exports_and_metrics() {
+        let dir = std::env::temp_dir();
+        let jsonl = dir.join("qgadmm_session_trace_test.jsonl");
+        let chrome = dir.join("qgadmm_session_trace_test.chrome.json");
+        let summary = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .seed(3)
+            .options(RunOptions {
+                iterations: 3,
+                eval_every: 1,
+                stop_below: None,
+                stop_above: None,
+            })
+            .telemetry(TelemetryOptions::jsonl(&jsonl).with_chrome(&chrome))
+            .run()
+            .unwrap();
+        assert_eq!(summary.metrics.counter("broadcasts"), Some(4 * 3));
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        // 12 span/compress records per iteration plus one eval each.
+        assert_eq!(text.lines().count(), 3 * 13);
+        let chrome_text = std::fs::read_to_string(&chrome).unwrap();
+        assert!(chrome_text.contains("traceEvents"), "{chrome_text}");
+        let _ = std::fs::remove_file(&jsonl);
+        let _ = std::fs::remove_file(&chrome);
     }
 
     #[test]

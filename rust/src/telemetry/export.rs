@@ -1,0 +1,219 @@
+//! Trace exporters: JSONL stream and Chrome trace-event JSON.
+//!
+//! * **JSONL** — one flat, compact JSON object per [`Record`] per line
+//!   (`{"event":"compress","iteration":3,"worker":2,"bits":76,...,"t_ns":412}`),
+//!   friendly to `jq`, `grep`, and incremental loaders.
+//! * **Chrome trace-event JSON** — a `{"traceEvents": [...]}` document in
+//!   the `chrome://tracing` / Perfetto format: iteration and phase spans
+//!   become `B`/`E` duration events on thread 0, point events (compress
+//!   outcomes, frames, evals) become `i` instants — compress instants on
+//!   `tid = worker + 1` so each worker gets its own row. Timestamps are
+//!   converted from integer ns to the format's microseconds.
+//!
+//! Both are reachable through [`TelemetryOptions`] on the Session builder
+//! (`.telemetry(...)`), the `trace=` / `chrome_trace=` config keys, and
+//! the `--trace <path>` / `--chrome_trace <path>` CLI flags.
+
+use super::{Event, Record};
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Where (and whether) to export a run's telemetry stream.
+///
+/// Passing either path to `Session::telemetry` turns the collector on;
+/// a default (both `None`) leaves telemetry disabled.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryOptions {
+    /// Write the JSONL trace stream here after the run.
+    pub jsonl: Option<PathBuf>,
+    /// Write a Chrome trace-event JSON document here after the run.
+    pub chrome: Option<PathBuf>,
+}
+
+impl TelemetryOptions {
+    /// Export nothing (telemetry stays off).
+    pub fn off() -> TelemetryOptions {
+        TelemetryOptions::default()
+    }
+
+    /// JSONL trace stream to `path`.
+    pub fn jsonl<P: Into<PathBuf>>(path: P) -> TelemetryOptions {
+        TelemetryOptions {
+            jsonl: Some(path.into()),
+            chrome: None,
+        }
+    }
+
+    /// Chrome trace-event JSON to `path`.
+    pub fn chrome<P: Into<PathBuf>>(path: P) -> TelemetryOptions {
+        TelemetryOptions {
+            jsonl: None,
+            chrome: Some(path.into()),
+        }
+    }
+
+    /// Also write the JSONL stream to `path`.
+    pub fn with_jsonl<P: Into<PathBuf>>(mut self, path: P) -> TelemetryOptions {
+        self.jsonl = Some(path.into());
+        self
+    }
+
+    /// Also write the Chrome trace to `path`.
+    pub fn with_chrome<P: Into<PathBuf>>(mut self, path: P) -> TelemetryOptions {
+        self.chrome = Some(path.into());
+        self
+    }
+
+    /// True when any exporter is configured.
+    pub fn enabled(&self) -> bool {
+        self.jsonl.is_some() || self.chrome.is_some()
+    }
+}
+
+/// Write one compact JSON object per record per line.
+pub fn write_jsonl(path: &Path, records: &[Record]) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(file);
+    for rec in records {
+        out.write_all(rec.to_json().to_string_compact().as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    out.flush()
+}
+
+/// Write a `{"traceEvents": [...]}` document loadable by
+/// `chrome://tracing` and Perfetto.
+pub fn write_chrome_trace(path: &Path, records: &[Record]) -> std::io::Result<()> {
+    let doc = chrome_trace_json(records);
+    std::fs::write(path, doc.to_string_compact())
+}
+
+/// Build the Chrome trace-event document (exposed for tests).
+pub fn chrome_trace_json(records: &[Record]) -> Json {
+    let mut events = Vec::with_capacity(records.len());
+    for rec in records {
+        events.push(chrome_event(rec));
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events));
+    doc.set("displayTimeUnit", Json::Str("ns".to_string()));
+    doc
+}
+
+fn chrome_event(rec: &Record) -> Json {
+    let mut ev = Json::obj();
+    ev.set("pid", Json::Num(0.0));
+    // Trace-event timestamps are microseconds (fractional ok).
+    ev.set("ts", Json::Num(rec.t_ns as f64 / 1_000.0));
+    let (name, ph, tid): (&str, &str, usize) = match &rec.event {
+        Event::IterStart { .. } => ("iteration", "B", 0),
+        Event::IterEnd { .. } => ("iteration", "E", 0),
+        Event::PhaseStart { phase, .. } => (phase.name(), "B", 0),
+        Event::PhaseEnd { phase, .. } => (phase.name(), "E", 0),
+        Event::Compress { worker, .. } => ("compress", "i", worker + 1),
+        Event::FrameDelivered { from, .. } => ("frame_delivered", "i", from + 1),
+        Event::FrameAbandoned { from, .. } => ("frame_abandoned", "i", from + 1),
+        Event::Dropout { worker, .. } => ("dropout", "i", worker + 1),
+        Event::Restitch { .. } => ("restitch", "i", 0),
+        Event::Eval { .. } => ("eval", "i", 0),
+        Event::EarlyStop { .. } => ("early_stop", "i", 0),
+    };
+    ev.set("name", Json::Str(name.to_string()));
+    ev.set("ph", Json::Str(ph.to_string()));
+    ev.set("tid", Json::Num(tid as f64));
+    if ph == "i" {
+        // Instant scope: thread.
+        ev.set("s", Json::Str("t".to_string()));
+    }
+    ev.set("args", rec.event.fields_json());
+    ev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Phase;
+
+    fn sample() -> Vec<Record> {
+        vec![
+            Record {
+                t_ns: 0,
+                event: Event::IterStart { iteration: 1 },
+            },
+            Record {
+                t_ns: 10,
+                event: Event::PhaseStart {
+                    iteration: 1,
+                    phase: Phase::Head,
+                },
+            },
+            Record {
+                t_ns: 20,
+                event: Event::Compress {
+                    iteration: 1,
+                    worker: 0,
+                    bits: 76,
+                    radius: 0.5,
+                    censored: false,
+                },
+            },
+            Record {
+                t_ns: 30,
+                event: Event::PhaseEnd {
+                    iteration: 1,
+                    phase: Phase::Head,
+                },
+            },
+            Record {
+                t_ns: 40,
+                event: Event::IterEnd { iteration: 1 },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let recs = sample();
+        let mut text = String::new();
+        for rec in &recs {
+            text.push_str(&rec.to_json().to_string_compact());
+            text.push('\n');
+        }
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), recs.len());
+        for (line, rec) in lines.iter().zip(&recs) {
+            let parsed = Json::parse(line).expect("each JSONL line is valid JSON");
+            assert_eq!(
+                parsed.get("event").and_then(|j| j.as_str()),
+                Some(rec.event.name())
+            );
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_balanced_spans_and_instants() {
+        let doc = chrome_trace_json(&sample());
+        let events = doc
+            .get("traceEvents")
+            .and_then(|j| j.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 5);
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("ph").and_then(|j| j.as_str()).unwrap())
+            .collect();
+        assert_eq!(phases, ["B", "B", "i", "E", "E"]);
+        // B/E pairs balance per name.
+        let opens = phases.iter().filter(|p| **p == "B").count();
+        let closes = phases.iter().filter(|p| **p == "E").count();
+        assert_eq!(opens, closes);
+        // Compress instants ride the worker's own row.
+        assert_eq!(events[2].get("tid").and_then(|j| j.as_f64()), Some(1.0));
+        // Timestamps are microseconds.
+        assert_eq!(events[4].get("ts").and_then(|j| j.as_f64()), Some(0.04));
+        // The whole document round-trips through the parser.
+        let back = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(back, doc);
+    }
+}

@@ -1,0 +1,458 @@
+//! Structured telemetry: typed trace events, spans, and sinks.
+//!
+//! Every driver (engine, threaded, sim) emits the same *canonical
+//! per-iteration event sequence* through the [`Observer`] seam when the
+//! observer opts in via [`Observer::wants_telemetry`]:
+//!
+//! ```text
+//! IterStart k
+//!   PhaseStart k Head
+//!     Compress k worker=h0 .. Compress k worker=hN   (heads, ascending)
+//!   PhaseEnd   k Head
+//!   PhaseStart k Tail
+//!     Compress k worker=t0 .. Compress k worker=tN   (tails, ascending)
+//!   PhaseEnd   k Tail
+//!   PhaseStart k Dual
+//!   PhaseEnd   k Dual
+//! IterEnd k
+//! [Eval k]  [EarlyStop k]
+//! ```
+//!
+//! On an ideal network with the same seed, that sequence (timestamps
+//! stripped, transport events filtered out) is **bit-identical** across
+//! all three drivers — pinned by the `telemetry_trace` golden test. The
+//! sim interleaves additional *transport* events ([`Event::is_transport`])
+//! — frame deliveries/abandons (attempts > 1 ⇒ ARQ retransmits), dropouts
+//! and re-stitches — which carry virtual-time stamps.
+//!
+//! Timestamps are integer nanoseconds: wall-clock since run start for the
+//! engine and threaded drivers (threaded stamps at leader synthesis time,
+//! so ordering — not duration — is its contract), virtual [`SimTime`]
+//! nanoseconds for the sim.
+//!
+//! Cost when disabled: the sink is an enum; the `Off` variant makes every
+//! emission a single predictable branch, with no timestamping and no
+//! allocation on the hot path. Building with `--no-default-features`
+//! (dropping the `telemetry` feature) pins the sink to `Off` at its one
+//! construction choke point, compiling the subsystem out entirely.
+//!
+//! [`Observer`]: crate::metrics::Observer
+//! [`Observer::wants_telemetry`]: crate::metrics::Observer::wants_telemetry
+//! [`SimTime`]: crate::sim::clock::SimTime
+
+pub mod export;
+
+use crate::metrics::Observer;
+use crate::util::json::Json;
+use std::time::Instant;
+
+pub use export::TelemetryOptions;
+
+/// A per-iteration span segment. `Head` and `Tail` cover the solve +
+/// broadcast of that worker group; `Dual` covers the per-edge dual ascent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Head,
+    Tail,
+    Dual,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Head => "head",
+            Phase::Tail => "tail",
+            Phase::Dual => "dual",
+        }
+    }
+
+    /// Stable index for per-phase metric slots: head 0, tail 1, dual 2.
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Head => 0,
+            Phase::Tail => 1,
+            Phase::Dual => 2,
+        }
+    }
+}
+
+/// A typed trace event. `iteration` is 1-based everywhere, matching
+/// [`BroadcastEvent`](crate::metrics::BroadcastEvent).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Iteration span opens.
+    IterStart { iteration: u64 },
+    /// Iteration span closes (after the dual phase, before any eval).
+    IterEnd { iteration: u64 },
+    /// Phase child span opens.
+    PhaseStart { iteration: u64, phase: Phase },
+    /// Phase child span closes.
+    PhaseEnd { iteration: u64, phase: Phase },
+    /// One worker's compress outcome for its broadcast this iteration.
+    /// `bits` is 0 and `censored` is true for a censored (skipped) round;
+    /// `radius` is the quantizer's ‖θ−θ̂‖∞ either way.
+    Compress {
+        iteration: u64,
+        worker: usize,
+        bits: u64,
+        radius: f32,
+        censored: bool,
+    },
+    /// Sim transport: a wire frame reached its peer after `attempts`
+    /// transmissions (attempts > 1 ⇒ ARQ retransmits happened).
+    FrameDelivered {
+        iteration: u64,
+        from: usize,
+        to: usize,
+        attempts: u32,
+    },
+    /// Sim transport: ARQ gave up on a frame after `attempts` tries.
+    FrameAbandoned {
+        iteration: u64,
+        from: usize,
+        to: usize,
+        attempts: u32,
+    },
+    /// Sim transport: a worker dropped out before this iteration.
+    Dropout { iteration: u64, worker: usize },
+    /// Sim transport: survivors re-stitched into a new chain.
+    Restitch { iteration: u64, survivors: usize },
+    /// An evaluation point was recorded.
+    Eval { iteration: u64, value: f64 },
+    /// The early-stop threshold was crossed; the run halts after this.
+    /// In the threaded driver this is the event that triggers the stop
+    /// latch and the `Payload::Stop` cascade through the workers.
+    EarlyStop { iteration: u64, value: f64 },
+}
+
+impl Event {
+    /// Stable name used by both exporters and the README metric table.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::IterStart { .. } => "iter_start",
+            Event::IterEnd { .. } => "iter_end",
+            Event::PhaseStart { .. } => "phase_start",
+            Event::PhaseEnd { .. } => "phase_end",
+            Event::Compress { .. } => "compress",
+            Event::FrameDelivered { .. } => "frame_delivered",
+            Event::FrameAbandoned { .. } => "frame_abandoned",
+            Event::Dropout { .. } => "dropout",
+            Event::Restitch { .. } => "restitch",
+            Event::Eval { .. } => "eval",
+            Event::EarlyStop { .. } => "early_stop",
+        }
+    }
+
+    /// Transport-layer events only the sim can produce (frames, ARQ,
+    /// dropouts, re-stitches). The golden cross-driver trace compares the
+    /// *algorithmic* subsequence — everything that is not transport.
+    pub fn is_transport(&self) -> bool {
+        matches!(
+            self,
+            Event::FrameDelivered { .. }
+                | Event::FrameAbandoned { .. }
+                | Event::Dropout { .. }
+                | Event::Restitch { .. }
+        )
+    }
+
+    /// The iteration this event belongs to.
+    pub fn iteration(&self) -> u64 {
+        match self {
+            Event::IterStart { iteration }
+            | Event::IterEnd { iteration }
+            | Event::PhaseStart { iteration, .. }
+            | Event::PhaseEnd { iteration, .. }
+            | Event::Compress { iteration, .. }
+            | Event::FrameDelivered { iteration, .. }
+            | Event::FrameAbandoned { iteration, .. }
+            | Event::Dropout { iteration, .. }
+            | Event::Restitch { iteration, .. }
+            | Event::Eval { iteration, .. }
+            | Event::EarlyStop { iteration, .. } => *iteration,
+        }
+    }
+
+    /// Event-specific fields as a JSON object (no `event`/`t_ns` keys).
+    pub fn fields_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("iteration", Json::Num(self.iteration() as f64));
+        match self {
+            Event::IterStart { .. } | Event::IterEnd { .. } => {}
+            Event::PhaseStart { phase, .. } | Event::PhaseEnd { phase, .. } => {
+                obj.set("phase", Json::Str(phase.name().to_string()));
+            }
+            Event::Compress {
+                worker,
+                bits,
+                radius,
+                censored,
+                ..
+            } => {
+                obj.set("worker", Json::Num(*worker as f64));
+                obj.set("bits", Json::Num(*bits as f64));
+                obj.set("radius", Json::Num(*radius as f64));
+                obj.set("censored", Json::Bool(*censored));
+            }
+            Event::FrameDelivered {
+                from, to, attempts, ..
+            }
+            | Event::FrameAbandoned {
+                from, to, attempts, ..
+            } => {
+                obj.set("from", Json::Num(*from as f64));
+                obj.set("to", Json::Num(*to as f64));
+                obj.set("attempts", Json::Num(*attempts as f64));
+            }
+            Event::Dropout { worker, .. } => {
+                obj.set("worker", Json::Num(*worker as f64));
+            }
+            Event::Restitch { survivors, .. } => {
+                obj.set("survivors", Json::Num(*survivors as f64));
+            }
+            Event::Eval { value, .. } | Event::EarlyStop { value, .. } => {
+                obj.set("value", Json::Num(*value));
+            }
+        }
+        obj
+    }
+}
+
+/// A timestamped trace record: what happened, and when (integer ns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub t_ns: u64,
+    pub event: Event,
+}
+
+impl Record {
+    /// One flat JSON object: `{"t_ns": ..., "event": "...", ...fields}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = self.event.fields_json();
+        obj.set("t_ns", Json::Num(self.t_ns as f64));
+        obj.set("event", Json::Str(self.event.name().to_string()));
+        obj
+    }
+}
+
+/// Enum-dispatched event sink held by each driver.
+///
+/// `Off` makes [`TelemetrySink::record`] a single branch — no timestamp
+/// is taken and nothing allocates (callers gate their `now_ns()` reads on
+/// [`TelemetrySink::enabled`]). `Buffer` accumulates records that the
+/// driver drains to [`Observer::on_record`] once per iteration, reusing
+/// the buffer's allocation across iterations.
+#[derive(Debug, Default)]
+pub enum TelemetrySink {
+    #[default]
+    Off,
+    Buffer(Vec<Record>),
+}
+
+impl TelemetrySink {
+    /// A disabled sink: every emission is a no-op.
+    pub fn off() -> TelemetrySink {
+        TelemetrySink::Off
+    }
+
+    /// An enabled buffering sink — unless the crate was built without the
+    /// `telemetry` feature, in which case this is the single choke point
+    /// where the whole subsystem statically collapses to `Off`.
+    pub fn buffer() -> TelemetrySink {
+        #[cfg(feature = "telemetry")]
+        {
+            TelemetrySink::Buffer(Vec::new())
+        }
+        #[cfg(not(feature = "telemetry"))]
+        {
+            TelemetrySink::Off
+        }
+    }
+
+    /// Build a sink matching what `observer` asked for.
+    pub fn for_observer(observer: &dyn Observer) -> TelemetrySink {
+        if observer.wants_telemetry() {
+            TelemetrySink::buffer()
+        } else {
+            TelemetrySink::off()
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        matches!(self, TelemetrySink::Buffer(_))
+    }
+
+    /// Append a record (no-op when off).
+    #[inline]
+    pub fn record(&mut self, t_ns: u64, event: Event) {
+        if let TelemetrySink::Buffer(buf) = self {
+            buf.push(Record { t_ns, event });
+        }
+    }
+
+    /// Stream buffered records to `observer` and clear the buffer,
+    /// keeping its allocation for the next iteration.
+    pub fn flush_to(&mut self, observer: &mut dyn Observer) {
+        if let TelemetrySink::Buffer(buf) = self {
+            for rec in buf.iter() {
+                observer.on_record(rec);
+            }
+            buf.clear();
+        }
+    }
+}
+
+/// Wall-clock nanosecond source for the engine and threaded drivers.
+///
+/// `inactive()` carries no `Instant` and always reads 0 — drivers only
+/// call [`WallClock::now_ns`] when their sink is enabled, so a disabled
+/// run never touches the OS clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClock {
+    origin: Option<Instant>,
+}
+
+impl WallClock {
+    pub fn inactive() -> WallClock {
+        WallClock { origin: None }
+    }
+
+    pub fn start() -> WallClock {
+        WallClock {
+            origin: Some(Instant::now()),
+        }
+    }
+
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        match self.origin {
+            Some(origin) => origin.elapsed().as_nanos() as u64,
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_sink_records_nothing() {
+        let mut sink = TelemetrySink::off();
+        sink.record(1, Event::IterStart { iteration: 1 });
+        assert!(!sink.enabled());
+        let mut seen = 0usize;
+        struct Count<'a>(&'a mut usize);
+        impl Observer for Count<'_> {
+            fn on_record(&mut self, _r: &Record) {
+                *self.0 += 1;
+            }
+        }
+        sink.flush_to(&mut Count(&mut seen));
+        assert_eq!(seen, 0);
+    }
+
+    #[cfg(feature = "telemetry")]
+    #[test]
+    fn buffer_sink_flushes_in_order_and_reuses() {
+        let mut sink = TelemetrySink::buffer();
+        assert!(sink.enabled());
+        sink.record(5, Event::IterStart { iteration: 1 });
+        sink.record(
+            9,
+            Event::PhaseStart {
+                iteration: 1,
+                phase: Phase::Head,
+            },
+        );
+        let mut seen: Vec<Record> = Vec::new();
+        struct Collect<'a>(&'a mut Vec<Record>);
+        impl Observer for Collect<'_> {
+            fn on_record(&mut self, r: &Record) {
+                self.0.push(r.clone());
+            }
+        }
+        sink.flush_to(&mut Collect(&mut seen));
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].t_ns, 5);
+        assert_eq!(
+            seen[1].event,
+            Event::PhaseStart {
+                iteration: 1,
+                phase: Phase::Head
+            }
+        );
+        // Flushed: the next flush delivers nothing.
+        sink.flush_to(&mut Collect(&mut seen));
+        assert_eq!(seen.len(), 2);
+    }
+
+    #[cfg(not(feature = "telemetry"))]
+    #[test]
+    fn buffer_sink_is_off_without_the_feature() {
+        assert!(!TelemetrySink::buffer().enabled());
+    }
+
+    #[test]
+    fn transport_classifier_covers_sim_only_events() {
+        assert!(Event::FrameDelivered {
+            iteration: 1,
+            from: 0,
+            to: 1,
+            attempts: 2
+        }
+        .is_transport());
+        assert!(Event::Dropout {
+            iteration: 1,
+            worker: 3
+        }
+        .is_transport());
+        assert!(Event::Restitch {
+            iteration: 1,
+            survivors: 4
+        }
+        .is_transport());
+        assert!(!Event::Compress {
+            iteration: 1,
+            worker: 0,
+            bits: 64,
+            radius: 0.5,
+            censored: false
+        }
+        .is_transport());
+        assert!(!Event::EarlyStop {
+            iteration: 1,
+            value: 0.0
+        }
+        .is_transport());
+    }
+
+    #[test]
+    fn record_json_is_flat_and_named() {
+        let rec = Record {
+            t_ns: 42,
+            event: Event::Compress {
+                iteration: 3,
+                worker: 2,
+                bits: 76,
+                radius: 0.25,
+                censored: false,
+            },
+        };
+        let json = rec.to_json();
+        assert_eq!(json.get("event").and_then(|j| j.as_str()), Some("compress"));
+        assert_eq!(json.get("t_ns").and_then(|j| j.as_f64()), Some(42.0));
+        assert_eq!(json.get("worker").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(json.get("bits").and_then(|j| j.as_f64()), Some(76.0));
+        assert_eq!(
+            json.get("censored").and_then(|j| j.as_bool()),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn wall_clock_inactive_reads_zero() {
+        assert_eq!(WallClock::inactive().now_ns(), 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Observer event-stream contracts under the non-default compression
+//! schemes, across all three drivers:
+//!
+//! * censored rounds must *appear* in the broadcast stream (as
+//!   `censored: true, bits: 0` events), not vanish — downstream
+//!   bits-vs-accuracy accounting depends on seeing every round;
+//! * top-k rounds carry their sparsified bit cost in the same canonical
+//!   order (heads ascending, then tails ascending);
+//! * an observer with `wants_broadcasts() == false` must never receive —
+//!   or pay for — a broadcast event on any driver.
+
+use qgadmm::coordinator::engine::RunOptions;
+use qgadmm::prelude::*;
+
+const WORKERS: usize = 6;
+const ITERS: u64 = 4;
+
+#[derive(Default)]
+struct BroadcastLog {
+    events: Vec<BroadcastEvent>,
+}
+
+impl Observer for BroadcastLog {
+    fn on_broadcast(&mut self, event: &BroadcastEvent) {
+        self.events.push(*event);
+    }
+
+    fn wants_broadcasts(&self) -> bool {
+        true
+    }
+}
+
+/// An observer that did not opt into broadcasts and treats receiving one
+/// as a contract violation.
+struct RefusesBroadcasts;
+
+impl Observer for RefusesBroadcasts {
+    fn on_broadcast(&mut self, event: &BroadcastEvent) {
+        panic!(
+            "observer with wants_broadcasts == false received {event:?}; \
+             the driver must not construct broadcast events for it"
+        );
+    }
+}
+
+fn run_with(
+    kind: DriverKind,
+    comp: CompressorConfig,
+    observer: &mut dyn Observer,
+) -> RunSummary {
+    Session::new(ProblemKind::LinReg)
+        .quick(true)
+        .workers(WORKERS)
+        .driver(kind)
+        .compressor(comp)
+        .seed(4)
+        .sim_config(SimConfig::ideal())
+        .options(RunOptions {
+            iterations: ITERS,
+            eval_every: ITERS,
+            stop_below: None,
+            stop_above: None,
+        })
+        .run_observed(observer)
+        .unwrap_or_else(|e| panic!("{} failed: {e}", kind.name()))
+}
+
+/// Line topology over identity-ordered workers: heads are the even
+/// positions, so the canonical per-iteration broadcast order is
+/// 0, 2, 4, then 1, 3, 5.
+fn assert_canonical_order(kind: DriverKind, events: &[BroadcastEvent]) {
+    assert_eq!(
+        events.len(),
+        WORKERS * ITERS as usize,
+        "{}: one event per worker per iteration",
+        kind.name()
+    );
+    for (i, chunk) in events.chunks(WORKERS).enumerate() {
+        let k = (i + 1) as u64;
+        assert!(
+            chunk.iter().all(|e| e.iteration == k),
+            "{}: iteration {k} events interleaved",
+            kind.name()
+        );
+        let order: Vec<usize> = chunk.iter().map(|e| e.worker).collect();
+        assert_eq!(
+            order,
+            [0, 2, 4, 1, 3, 5],
+            "{}: heads-then-tails order broken at iteration {k}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn censored_rounds_surface_as_events_on_every_driver() {
+    // τ₀ huge with no decay: every round is censored on every worker.
+    let comp = CompressorConfig::Censored {
+        quant: QuantConfig::default(),
+        tau0: 1e30,
+        decay: 1.0,
+    };
+    let mut streams = Vec::new();
+    for kind in [DriverKind::Engine, DriverKind::Threaded, DriverKind::Sim] {
+        let mut obs = BroadcastLog::default();
+        let summary = run_with(kind, comp.clone(), &mut obs);
+        assert_eq!(summary.comm.censored, WORKERS as u64 * ITERS);
+        assert_eq!(summary.comm.bits, 0);
+        assert_canonical_order(kind, &obs.events);
+        assert!(
+            obs.events.iter().all(|e| e.censored && e.bits == 0),
+            "{}: censored events must carry censored=true, bits=0",
+            kind.name()
+        );
+        streams.push(obs.events);
+    }
+    assert_eq!(streams[0], streams[1], "engine vs threaded censored streams");
+    assert_eq!(streams[0], streams[2], "engine vs sim censored streams");
+}
+
+#[test]
+fn topk_rounds_stream_in_canonical_order_on_every_driver() {
+    let comp = CompressorConfig::TopK { frac: 0.5 };
+    let mut streams = Vec::new();
+    for kind in [DriverKind::Engine, DriverKind::Threaded, DriverKind::Sim] {
+        let mut obs = BroadcastLog::default();
+        let summary = run_with(kind, comp.clone(), &mut obs);
+        assert_canonical_order(kind, &obs.events);
+        assert!(
+            obs.events.iter().all(|e| !e.censored && e.bits > 0),
+            "{}: top-k rounds always transmit",
+            kind.name()
+        );
+        let per_event_bits = obs.events[0].bits;
+        assert!(
+            obs.events.iter().all(|e| e.bits == per_event_bits),
+            "{}: top-k bit cost is shape-determined, so constant",
+            kind.name()
+        );
+        assert_eq!(
+            summary.comm.bits,
+            per_event_bits * WORKERS as u64 * ITERS,
+            "{}: summary bits must equal the streamed events' sum",
+            kind.name()
+        );
+        streams.push(obs.events);
+    }
+    assert_eq!(streams[0], streams[1], "engine vs threaded top-k streams");
+    assert_eq!(streams[0], streams[2], "engine vs sim top-k streams");
+}
+
+#[test]
+fn uninterested_observers_never_receive_broadcasts() {
+    // Regression for the simulated driver in particular: BroadcastEvent
+    // construction must be skipped entirely when the observer opted out,
+    // not constructed-then-dropped. The panicking observer proves no
+    // event reaches `on_broadcast` on any driver.
+    for kind in [DriverKind::Engine, DriverKind::Threaded, DriverKind::Sim] {
+        let summary = run_with(
+            kind,
+            CompressorConfig::Stochastic(QuantConfig::default()),
+            &mut RefusesBroadcasts,
+        );
+        assert_eq!(summary.iterations_run, ITERS, "{}", kind.name());
+    }
+}

@@ -1,0 +1,138 @@
+//! Cross-driver trace determinism — the telemetry analogue of
+//! `session_equivalence`: on an ideal network with a shared seed, the
+//! engine, threaded, and simulated drivers must emit the *same ordered
+//! event sequence* (timestamps stripped, transport events excluded —
+//! frame deliveries and dropouts exist only where a network does).
+//!
+//! This is the golden-trace pin: any reordering of the canonical
+//! per-iteration sequence (IterStart, head phase with its compresses,
+//! tail phase, dual phase, IterEnd, then evals) on any driver is a
+//! breaking change to the Observer contract.
+#![cfg(feature = "telemetry")]
+
+use qgadmm::coordinator::engine::RunOptions;
+use qgadmm::prelude::*;
+
+struct Collector {
+    records: Vec<Record>,
+}
+
+impl Observer for Collector {
+    fn on_record(&mut self, record: &Record) {
+        self.records.push(record.clone());
+    }
+
+    fn wants_telemetry(&self) -> bool {
+        true
+    }
+}
+
+/// Run a quick linreg session on `kind` and return the non-transport
+/// event sequence (timestamps dropped).
+fn golden_run(kind: DriverKind, opts: RunOptions) -> Vec<TraceEvent> {
+    let mut obs = Collector {
+        records: Vec::new(),
+    };
+    let summary = Session::new(ProblemKind::LinReg)
+        .quick(true)
+        .workers(6)
+        .driver(kind)
+        .seed(11)
+        .sim_config(SimConfig::ideal())
+        .options(opts)
+        .run_observed(&mut obs)
+        .unwrap_or_else(|e| panic!("{} failed: {e}", kind.name()));
+    assert!(
+        !summary.metrics.is_empty(),
+        "{}: a telemetry run must snapshot metrics",
+        kind.name()
+    );
+    // Timestamps are driver-specific (wall clock vs virtual clock) and
+    // nondecreasing; the *order* is the cross-driver contract.
+    let mut last = 0u64;
+    for rec in &obs.records {
+        assert!(rec.t_ns >= last, "{}: timestamps regressed", kind.name());
+        last = rec.t_ns;
+    }
+    obs.records
+        .into_iter()
+        .map(|r| r.event)
+        .filter(|e| !e.is_transport())
+        .collect()
+}
+
+#[test]
+fn drivers_emit_one_golden_trace_on_an_ideal_network() {
+    let opts = RunOptions {
+        iterations: 5,
+        eval_every: 2,
+        stop_below: None,
+        stop_above: None,
+    };
+    let engine = golden_run(DriverKind::Engine, opts.clone());
+    let threaded = golden_run(DriverKind::Threaded, opts.clone());
+    let sim = golden_run(DriverKind::Sim, opts);
+
+    // 6 workers: IterStart + 3 phase spans (6 records) + 6 compresses +
+    // IterEnd = 14 per iteration; evals at k = 2 and 4.
+    assert_eq!(engine.len(), 5 * 14 + 2);
+    assert_eq!(engine, threaded, "engine vs threaded traces diverge");
+    assert_eq!(engine, sim, "engine vs sim traces diverge");
+
+    // Spot-check the canonical shape of iteration 1: heads (positions
+    // 0, 2, 4) compress inside the head phase, tails inside the tail
+    // phase, dual phase is span-only.
+    let names: Vec<&str> = engine[..14].iter().map(|e| e.name()).collect();
+    assert_eq!(
+        names,
+        [
+            "iter_start",
+            "phase_start",
+            "compress",
+            "compress",
+            "compress",
+            "phase_end",
+            "phase_start",
+            "compress",
+            "compress",
+            "compress",
+            "phase_end",
+            "phase_start",
+            "phase_end",
+            "iter_end",
+        ]
+    );
+    let workers: Vec<usize> = engine[..14]
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Compress { worker, .. } => Some(*worker),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(workers, [0, 2, 4, 1, 3, 5]);
+}
+
+#[test]
+fn early_stop_cascade_traces_identically() {
+    // A loss-gap threshold crossed at the first eval: every driver must
+    // end its trace with Eval followed by EarlyStop at the same
+    // iteration.
+    let opts = RunOptions {
+        iterations: 50,
+        eval_every: 2,
+        stop_below: Some(f64::MAX),
+        stop_above: None,
+    };
+    let engine = golden_run(DriverKind::Engine, opts.clone());
+    let threaded = golden_run(DriverKind::Threaded, opts.clone());
+    let sim = golden_run(DriverKind::Sim, opts);
+
+    assert_eq!(engine, threaded, "engine vs threaded early-stop traces diverge");
+    assert_eq!(engine, sim, "engine vs sim early-stop traces diverge");
+    // Two full iterations, then the eval that crosses and the stop.
+    assert_eq!(engine.len(), 2 * 14 + 2);
+    assert_eq!(engine[engine.len() - 2].name(), "eval");
+    let last = engine.last().unwrap();
+    assert_eq!(last.name(), "early_stop");
+    assert_eq!(last.iteration(), 2);
+}
