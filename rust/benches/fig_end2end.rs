@@ -56,6 +56,7 @@ fn main() {
             eval_every: 1,
             stop_below: Some(target),
             stop_above: None,
+            ..RunOptions::default()
         };
         let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
         format!(
@@ -159,6 +160,7 @@ fn main() {
                 eval_every: 5,
                 stop_below: None,
                 stop_above: None,
+                ..RunOptions::default()
             };
             let rep = eng.run(&opts, |e| {
                 let thetas: Vec<Vec<f32>> =
@@ -205,6 +207,7 @@ fn main() {
                 eval_every: 1,
                 stop_below: Some(target),
                 stop_above: None,
+                ..RunOptions::default()
             };
             let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
             out.push_str(&format!(
@@ -234,6 +237,7 @@ fn main() {
                 eval_every: 1,
                 stop_below: Some(target),
                 stop_above: None,
+                ..RunOptions::default()
             };
             let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
             out.push_str(&format!("rho={rho}:iters={} ", rep.iterations_run));

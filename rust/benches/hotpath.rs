@@ -20,7 +20,7 @@
 //!   "topology_iteration": { "workers": 16, "dims": 10000,
 //!     "line_ns": f64, "ring_ns": f64, "ring_over_line": f64 },
 //!   "compressor_hotpath": { "dims": 10000,
-//!     "stochastic": f64, "topk": f64, "full": f64 } }
+//!     "stochastic": f64, "topk": f64, "full": f64, "layers": f64 } }
 //! ```
 //!
 //! Run `cargo bench --bench hotpath` (full) or append `-- --quick` for the
@@ -44,7 +44,7 @@ use qgadmm::data::partition::Partition;
 use qgadmm::model::linreg::LinRegProblem;
 use qgadmm::model::mlp::{MlpDims, MlpProblem};
 use qgadmm::model::scale::DiagLinRegProblem;
-use qgadmm::model::{LinkBuf, LocalProblem};
+use qgadmm::model::{BlockLayout, LinkBuf, LocalProblem};
 use qgadmm::net::topology::Topology;
 use qgadmm::quant::{bitpack, BitPolicy, Compressor, StochasticQuantizer};
 use qgadmm::util::json::Json;
@@ -477,6 +477,24 @@ fn main() {
             });
             compressor_json.set(ccfg.name(), Json::Num(per * 1e9));
         }
+        // The layer-wise composition on the same 10k vector, split into
+        // three blocks of MLP-like proportion (wide input, mid, narrow
+        // head): per-block mirrors + sub-payload assembly on top of the
+        // flat schemes above.
+        let layout = BlockLayout::new(vec![("w1", 8_000), ("w2", 1_500), ("w3", 500)]);
+        let lcfg = CompressorConfig::parse(
+            "layers:w1=stochastic@4,w2=stochastic@8,w3=full",
+            QuantConfig::default(),
+        )
+        .expect("bench layered spec parses");
+        lcfg.validate_blocks(&layout).expect("spec fits the layout");
+        let mut lcomp = lcfg.build_for(&layout);
+        let mut lrng = Rng::seed_from_u64(17);
+        let per = res.bench("compress_into layers 3 blocks d=10k", 0.3, || {
+            let out = lcomp.compress_into(&ctheta, &mut lrng, &mut cview);
+            std::hint::black_box(out);
+        });
+        compressor_json.set(lcfg.name(), Json::Num(per * 1e9));
         compressor_json.set("dims", Json::Num(cd as f64));
     }
 
@@ -516,6 +534,7 @@ fn main() {
         eval_every: 1_000_000,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let metric = |_: &GadmmEngine<LinRegProblem>| 0.0f64;
     let off_per = res.bench("observed iteration telemetry off (N=50, d=6)", 0.4, || {

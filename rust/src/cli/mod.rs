@@ -48,7 +48,7 @@ USAGE:
   qgadmm run           [--problem P --driver D --workers N --rho R --bits B
                         --compressor S --iters K --topology T ...]
                        one Session: problem x compressor x topology x driver
-  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|all> [options]
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|fig_layerwise|all> [options]
   qgadmm train-linreg  alias of `run --problem linreg`  (supports --use-xla true)
   qgadmm train-dnn     alias of `run --problem mlp`
   qgadmm train-scale   alias of `run --problem diag-linreg`  (--dims D)
@@ -67,9 +67,18 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --bits B             quantizer resolution (0 = full precision; applies to
                        the stochastic/censored compressors)
   --compressor S       per-link compression scheme: stochastic (default),
-                       full, censored[:tau0[:decay]], topk[:frac]
-                       (censored/topk require the native backend — they are
-                       rejected with --use-xla)
+                       full, censored[:tau0[:decay]], topk[:frac];
+                       uniform[:scheme] applies one flat scheme everywhere,
+                       layers:<block>=<scheme>[@bits][:params],... composes
+                       one scheme per named parameter block (MLP blocks:
+                       w1, w2, w3; other problems: all) — e.g.
+                       layers:w1=stochastic@4,w2=stochastic@8,w3=full
+                       (censored/topk/layers require the native backend —
+                       they are rejected with --use-xla)
+  --rho_policy P       how rho evolves: fixed (default) or
+                       residual-balance[:mu[:tau_incr[:tau_decr]]] —
+                       Boyd-style residual balancing, identical on every
+                       driver
   --iters K            iteration cap
   --drops N            random drops for the CDF figures
   --seed S             base seed

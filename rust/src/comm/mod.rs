@@ -58,6 +58,19 @@ impl SparseMsg {
     }
 }
 
+/// One block of a multi-block ([`Payload::Blocks`]) broadcast: the block's
+/// dimension plus its own scheme-tagged sub-payload. `dims` makes every
+/// sub-payload length-recoverable on the receiver even when the scheme
+/// itself carries no dimension (a per-block `Censored` marker).
+#[derive(Clone, Debug)]
+pub struct BlockMsg {
+    /// Length of this block in the flat parameter vector.
+    pub dims: usize,
+    /// The block's own payload. Must be a flat variant — nested
+    /// `Blocks`/`Stop` never appear inside a block.
+    pub payload: Payload,
+}
+
 /// What a message carries. The variant *is* the compression scheme's wire
 /// tag (`wire` frames it verbatim); see `quant::compress` for the sender
 /// side of each scheme.
@@ -73,6 +86,10 @@ pub enum Payload {
     /// every receiver reuses its mirror (0 bits — distinct from a *lost*
     /// frame, which leaves the mirror stale involuntarily).
     Censored,
+    /// Layer-wise broadcast: one sub-payload per parameter block, in
+    /// `model::BlockLayout` order. Accounted as the sum of its blocks —
+    /// a censored block charges nothing.
+    Blocks(Vec<BlockMsg>),
     /// Control/termination marker (not charged).
     Stop,
 }
@@ -85,6 +102,7 @@ impl Payload {
             Payload::Quantized(q) => q.payload_bits(),
             Payload::Sparse(s) => s.payload_bits(),
             Payload::Censored => 0,
+            Payload::Blocks(blocks) => blocks.iter().map(|b| b.payload.bits()).sum(),
             Payload::Stop => 0,
         }
     }
@@ -151,6 +169,30 @@ mod tests {
         assert_eq!(Payload::Quantized(q).bits(), 2 * 6 + 64);
         assert_eq!(Payload::Stop.bits(), 0);
         assert_eq!(Payload::Censored.bits(), 0);
+    }
+
+    #[test]
+    fn blocks_bits_sum_over_sub_payloads() {
+        let q = QuantizedMsg {
+            bits: 4,
+            radius: 0.5,
+            levels: vec![0; 10],
+        };
+        let p = Payload::Blocks(vec![
+            BlockMsg {
+                dims: 10,
+                payload: Payload::Quantized(q),
+            },
+            BlockMsg {
+                dims: 3,
+                payload: Payload::Full(vec![0.0; 3]),
+            },
+            BlockMsg {
+                dims: 7,
+                payload: Payload::Censored,
+            },
+        ]);
+        assert_eq!(p.bits(), (4 * 10 + 64) + 32 * 3 + 0);
     }
 
     #[test]

@@ -7,18 +7,21 @@
 //! exactly the bytes the paper's bit accounting claims, plus a fixed,
 //! documented frame overhead.
 //!
-//! Frame layout (little-endian), wire format version 2:
+//! Frame layout (little-endian), wire format version 3:
 //! ```text
 //!   [0]        u8   magic (0xA9)
-//!   [1]        u8   wire format version (0x02)
+//!   [1]        u8   wire format version (0x03)
 //!   [2]        u8   scheme tag: 0 = Stop, 1 = Full, 2 = Quantized,
-//!                   3 = Sparse, 4 = Censored
+//!                   3 = Sparse, 4 = Censored, 5 = Blocks
 //!   [3..7]     u32  sender chain position / worker id
 //!   [7..15]    u64  round (iteration index)
 //!   [15..19]   u32  body length in bytes
 //!   [19..23]   u32  CRC-32 (IEEE) of the body
 //!   [23..]     body
 //! ```
+//! Version 3 is version 2 plus the multi-block frame (tag 5) carrying one
+//! scheme-tagged sub-body per parameter block; v2 frames (every flat
+//! variant) are byte-identical apart from the version byte.
 //! The scheme tag *is* the compression scheme identifier: every
 //! `quant::compress` scheme owns exactly one payload variant, so a decoder
 //! can dispatch per frame without out-of-band negotiation, and a frame
@@ -34,34 +37,64 @@
 //!   carries);
 //! * `Sparse(s)` — `u32` count, then `k` indices (u16 for `d ≤ 65,536`,
 //!   u32 beyond), then `k` f32 values — byte-for-bit the
-//!   `32 + k·(b_idx + 32)` accounting.
+//!   `32 + k·(b_idx + 32)` accounting;
+//! * `Blocks(blocks)` — `u16` block count, then per block `u8` scheme tag,
+//!   `u32` block dims, `u32` sub-body length, sub-body (the block's own
+//!   flat encoding; `Blocks`/`Stop` never nest). The block dims are
+//!   carried explicitly because a per-block `Censored` marker has no body
+//!   to infer them from, and they must sum to the receiver's model
+//!   dimension ([`WireError::BlocksDims`]).
 //!
 //! The invariant tested by `frame_size_matches_bit_accounting` (and the
 //! `wire_codec` integration suite): for every payload,
-//! `0 < encoded_len·8 − Payload::bits() ≤ OVERHEAD_BITS`, and for every
-//! byte-aligned variant (all but `Quantized`, whose packed levels pad to a
-//! byte boundary) the slack is *exactly* the frame header.
+//! `0 < encoded_len·8 − Payload::bits() ≤ overhead_bound(payload)`, where
+//! the bound is [`OVERHEAD_BITS`] for flat variants and
+//! `OVERHEAD_BITS + BLOCK_COUNT_BITS + n·BLOCK_OVERHEAD_BITS` for an
+//! n-block frame; for every byte-aligned flat variant (all but
+//! `Quantized`, whose packed levels pad to a byte boundary) the slack is
+//! *exactly* the frame header.
 //!
 //! In the simulator, each framed message's lifecycle surfaces as
 //! `telemetry::Event::{FrameDelivered, FrameAbandoned}` transport events
 //! (virtual-clock stamped, per sender and round), so a trace shows where
 //! the wire bytes accounted here actually landed — or died in ARQ.
 
-use super::{Message, Payload, SparseMsg};
+use super::{BlockMsg, Message, Payload, SparseMsg};
 use crate::quant::bitpack::{self, CodecError};
 use crate::quant::QuantizedMsg;
 
 /// Frame header size in bytes.
 pub const HEADER_BYTES: usize = 23;
 
-/// Wire format version carried in every frame header.
-pub const WIRE_VERSION: u8 = 2;
+/// Wire format version carried in every frame header. v3 = v2 + the
+/// multi-block frame ([`Payload::Blocks`], tag 5).
+pub const WIRE_VERSION: u8 = 3;
 
-/// Worst-case framing overhead in bits: the header plus the quantized
-/// body's own header/padding slack relative to the paper's `b·d + 64`
-/// accounting. Every frame satisfies
-/// `encoded_len·8 − payload.bits() ∈ (0, OVERHEAD_BITS]`.
+/// Worst-case framing overhead in bits for a *flat* frame: the header
+/// plus the quantized body's own header/padding slack relative to the
+/// paper's `b·d + 64` accounting. Every flat frame satisfies
+/// `encoded_len·8 − payload.bits() ∈ (0, OVERHEAD_BITS]`; multi-block
+/// frames add [`BLOCK_COUNT_BITS`] plus [`BLOCK_OVERHEAD_BITS`] per block
+/// (see [`overhead_bound`]).
 pub const OVERHEAD_BITS: u64 = (HEADER_BYTES as u64) * 8;
+
+/// Bits of the `u16` block-count word leading a multi-block body.
+pub const BLOCK_COUNT_BITS: u64 = 16;
+
+/// Per-block framing bits inside a multi-block body: `u8` scheme tag +
+/// `u32` block dims + `u32` sub-body length.
+pub const BLOCK_OVERHEAD_BITS: u64 = 8 * 9;
+
+/// The frame-overhead bound for a payload:
+/// `encoded_len·8 − payload.bits() ∈ (0, overhead_bound(payload)]`.
+pub fn overhead_bound(payload: &Payload) -> u64 {
+    match payload {
+        Payload::Blocks(blocks) => {
+            OVERHEAD_BITS + BLOCK_COUNT_BITS + blocks.len() as u64 * BLOCK_OVERHEAD_BITS
+        }
+        _ => OVERHEAD_BITS,
+    }
+}
 
 const MAGIC: u8 = 0xA9;
 const TAG_STOP: u8 = 0;
@@ -69,6 +102,7 @@ const TAG_FULL: u8 = 1;
 const TAG_QUANTIZED: u8 = 2;
 const TAG_SPARSE: u8 = 3;
 const TAG_CENSORED: u8 = 4;
+const TAG_BLOCKS: u8 = 5;
 
 /// Wire-level failure modes.
 #[derive(Debug, thiserror::Error)]
@@ -93,6 +127,10 @@ pub enum WireError {
     SparseIndexOutOfRange { index: u32, dims: usize },
     #[error("sparse body: {count} entries exceed the {dims}-dimensional model")]
     SparseTooLong { count: usize, dims: usize },
+    #[error("multi-block body: block dims sum to {got}, receiver expects {expected}")]
+    BlocksDims { expected: usize, got: usize },
+    #[error("multi-block body: nested or control sub-frame (tag {0})")]
+    BadBlockTag(u8),
     #[error("quantized body: {0}")]
     Codec(#[from] CodecError),
 }
@@ -138,6 +176,9 @@ pub fn body_len(payload: &Payload) -> usize {
         Payload::Full(v) => 4 * v.len(),
         Payload::Quantized(q) => 5 + (q.bits as usize * q.levels.len()).div_ceil(8),
         Payload::Sparse(s) => 4 + s.indices.len() * (sparse_index_bytes(s.dims) + 4),
+        Payload::Blocks(blocks) => {
+            2 + blocks.iter().map(|b| 9 + body_len(&b.payload)).sum::<usize>()
+        }
     }
 }
 
@@ -146,9 +187,22 @@ pub fn frame_len(payload: &Payload) -> usize {
     HEADER_BYTES + body_len(payload)
 }
 
-/// Serialize one message into a framed byte vector.
-pub fn encode_frame(msg: &Message) -> Vec<u8> {
-    let body = match &msg.payload {
+/// The scheme tag framed for a payload variant.
+fn tag_of(payload: &Payload) -> u8 {
+    match payload {
+        Payload::Stop => TAG_STOP,
+        Payload::Full(_) => TAG_FULL,
+        Payload::Quantized(_) => TAG_QUANTIZED,
+        Payload::Sparse(_) => TAG_SPARSE,
+        Payload::Censored => TAG_CENSORED,
+        Payload::Blocks(_) => TAG_BLOCKS,
+    }
+}
+
+/// Serialize one payload body (recursing one level for `Blocks`; nesting
+/// beyond that is a sender-side programming error and panics).
+fn encode_body(payload: &Payload) -> Vec<u8> {
+    match payload {
         Payload::Stop | Payload::Censored => Vec::new(),
         Payload::Full(v) => {
             let mut b = Vec::with_capacity(4 * v.len());
@@ -174,14 +228,29 @@ pub fn encode_frame(msg: &Message) -> Vec<u8> {
             }
             b
         }
-    };
-    let tag = match &msg.payload {
-        Payload::Stop => TAG_STOP,
-        Payload::Full(_) => TAG_FULL,
-        Payload::Quantized(_) => TAG_QUANTIZED,
-        Payload::Sparse(_) => TAG_SPARSE,
-        Payload::Censored => TAG_CENSORED,
-    };
+        Payload::Blocks(blocks) => {
+            let mut b = Vec::with_capacity(body_len(payload));
+            b.extend_from_slice(&(blocks.len() as u16).to_le_bytes());
+            for blk in blocks {
+                assert!(
+                    !matches!(blk.payload, Payload::Blocks(_) | Payload::Stop),
+                    "multi-block frames cannot nest or carry control markers"
+                );
+                let sub = encode_body(&blk.payload);
+                b.push(tag_of(&blk.payload));
+                b.extend_from_slice(&(blk.dims as u32).to_le_bytes());
+                b.extend_from_slice(&(sub.len() as u32).to_le_bytes());
+                b.extend_from_slice(&sub);
+            }
+            b
+        }
+    }
+}
+
+/// Serialize one message into a framed byte vector.
+pub fn encode_frame(msg: &Message) -> Vec<u8> {
+    let body = encode_body(&msg.payload);
+    let tag = tag_of(&msg.payload);
     let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
     out.push(MAGIC);
     out.push(WIRE_VERSION);
@@ -297,6 +366,24 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
         });
     }
     let payload = match tag {
+        TAG_BLOCKS => decode_blocks(body, dims)?,
+        other => decode_flat_body(other, body, dims)?,
+    };
+    Ok((
+        Message {
+            from,
+            round,
+            payload,
+        },
+        total,
+    ))
+}
+
+/// Decode a flat (non-`Blocks`) body for `tag` against a `dims`-sized
+/// model span. Shared by top-level frames and per-block sub-bodies.
+fn decode_flat_body(tag: u8, body: &[u8], dims: usize) -> Result<Payload, WireError> {
+    let len = body.len();
+    match tag {
         TAG_STOP | TAG_CENSORED => {
             if len != 0 {
                 return Err(WireError::BadBodyLength {
@@ -306,9 +393,9 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
                 });
             }
             if tag == TAG_STOP {
-                Payload::Stop
+                Ok(Payload::Stop)
             } else {
-                Payload::Censored
+                Ok(Payload::Censored)
             }
         }
         TAG_FULL => {
@@ -329,7 +416,7 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
                     body[at + 3],
                 ]));
             }
-            Payload::Full(v)
+            Ok(Payload::Full(v))
         }
         TAG_QUANTIZED => {
             let q = QuantizedMsg::decode(body, dims)?;
@@ -341,19 +428,73 @@ pub fn decode_frame(bytes: &[u8], dims: usize) -> Result<(Message, usize), WireE
                     got: len,
                 });
             }
-            Payload::Quantized(q)
+            Ok(Payload::Quantized(q))
         }
-        TAG_SPARSE => Payload::Sparse(decode_sparse(body, dims)?),
-        other => return Err(WireError::BadTag(other)),
-    };
-    Ok((
-        Message {
-            from,
-            round,
+        TAG_SPARSE => Ok(Payload::Sparse(decode_sparse(body, dims)?)),
+        other => Err(WireError::BadTag(other)),
+    }
+}
+
+/// Decode a multi-block body: `u16` count, then per block `u8` tag,
+/// `u32` block dims, `u32` sub-body length, sub-body. Block dims must sum
+/// to the receiver's model dimension; `Blocks`/`Stop` sub-tags are
+/// rejected (no nesting, no control markers inside a broadcast).
+fn decode_blocks(body: &[u8], dims: usize) -> Result<Payload, WireError> {
+    if body.len() < 2 {
+        return Err(WireError::BadBodyLength {
+            kind: "blocks",
+            expected: 2,
+            got: body.len(),
+        });
+    }
+    let count = u16::from_le_bytes([body[0], body[1]]) as usize;
+    let mut blocks = Vec::with_capacity(count);
+    let mut at = 2usize;
+    let mut covered = 0usize;
+    for _ in 0..count {
+        if body.len() < at + 9 {
+            return Err(WireError::BadBodyLength {
+                kind: "blocks",
+                expected: at + 9,
+                got: body.len(),
+            });
+        }
+        let tag = body[at];
+        let block_dims = read_u32(body, at + 1) as usize;
+        let sub_len = read_u32(body, at + 5) as usize;
+        at += 9;
+        if body.len() < at + sub_len {
+            return Err(WireError::BadBodyLength {
+                kind: "blocks",
+                expected: at + sub_len,
+                got: body.len(),
+            });
+        }
+        if tag == TAG_BLOCKS || tag == TAG_STOP {
+            return Err(WireError::BadBlockTag(tag));
+        }
+        let payload = decode_flat_body(tag, &body[at..at + sub_len], block_dims)?;
+        at += sub_len;
+        covered += block_dims;
+        blocks.push(BlockMsg {
+            dims: block_dims,
             payload,
-        },
-        total,
-    ))
+        });
+    }
+    if at != body.len() {
+        return Err(WireError::BadBodyLength {
+            kind: "blocks",
+            expected: at,
+            got: body.len(),
+        });
+    }
+    if covered != dims {
+        return Err(WireError::BlocksDims {
+            expected: dims,
+            got: covered,
+        });
+    }
+    Ok(Payload::Blocks(blocks))
 }
 
 #[cfg(test)]
@@ -362,7 +503,60 @@ mod tests {
     use crate::testing::property;
     use crate::util::rng::Rng;
 
+    /// A random flat sub-payload spanning exactly `dims` coordinates, for
+    /// multi-block frames.
+    fn random_flat_block(rng: &mut Rng, dims: usize) -> Payload {
+        match rng.below(4) {
+            0 => Payload::Full((0..dims).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect()),
+            1 => {
+                let bits = 1 + rng.below(16) as u8;
+                let max = 1u64 << bits;
+                Payload::Quantized(QuantizedMsg {
+                    bits,
+                    radius: rng.uniform_f32() * 10.0,
+                    levels: (0..dims).map(|_| rng.below(max as usize) as u32).collect(),
+                })
+            }
+            2 => {
+                let k = rng.below(dims.min(8) + 1);
+                let mut indices: Vec<u32> = rng
+                    .sample_indices(dims, k)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                indices.sort_unstable();
+                let values = (0..indices.len())
+                    .map(|_| rng.uniform_f32() * 4.0 - 2.0)
+                    .collect();
+                Payload::Sparse(SparseMsg {
+                    dims,
+                    indices,
+                    values,
+                })
+            }
+            _ => Payload::Censored,
+        }
+    }
+
+    fn random_blocks_payload(rng: &mut Rng) -> Payload {
+        let n = 1 + rng.below(4);
+        Payload::Blocks(
+            (0..n)
+                .map(|_| {
+                    let dims = 1 + rng.below(48);
+                    BlockMsg {
+                        dims,
+                        payload: random_flat_block(rng, dims),
+                    }
+                })
+                .collect(),
+        )
+    }
+
     fn random_payload(rng: &mut Rng) -> Payload {
+        if rng.below(4) == 0 {
+            return random_blocks_payload(rng);
+        }
         match rng.below(5) {
             0 => Payload::Stop,
             1 => {
@@ -408,6 +602,7 @@ mod tests {
             Payload::Full(v) => v.len(),
             Payload::Quantized(q) => q.levels.len(),
             Payload::Sparse(s) => s.dims,
+            Payload::Blocks(blocks) => blocks.iter().map(|b| b.dims).sum(),
         }
     }
 
@@ -418,6 +613,13 @@ mod tests {
             (Payload::Full(x), Payload::Full(y)) => assert_eq!(x, y),
             (Payload::Quantized(x), Payload::Quantized(y)) => assert_eq!(x, y),
             (Payload::Sparse(x), Payload::Sparse(y)) => assert_eq!(x, y),
+            (Payload::Blocks(x), Payload::Blocks(y)) => {
+                assert_eq!(x.len(), y.len(), "block count changed across the wire");
+                for (bx, by) in x.iter().zip(y) {
+                    assert_eq!(bx.dims, by.dims);
+                    assert_payload_eq(&bx.payload, &by.payload);
+                }
+            }
             _ => panic!("payload variant changed across the wire"),
         }
     }
@@ -452,16 +654,17 @@ mod tests {
             let payload = random_payload(rng);
             let wire_bits = 8 * frame_len(&payload) as u64;
             let accounted = payload.bits();
+            let bound = overhead_bound(&payload);
             assert!(
                 wire_bits > accounted,
                 "frame smaller than accounting: {wire_bits} <= {accounted}"
             );
             assert!(
-                wire_bits - accounted <= OVERHEAD_BITS,
-                "overhead {} > bound {OVERHEAD_BITS}",
+                wire_bits - accounted <= bound,
+                "overhead {} > bound {bound}",
                 wire_bits - accounted
             );
-            if !matches!(payload, Payload::Quantized(_)) {
+            if !matches!(payload, Payload::Quantized(_) | Payload::Blocks(_)) {
                 assert_eq!(
                     wire_bits - accounted,
                     8 * HEADER_BYTES as u64,
@@ -469,6 +672,87 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn blocks_frame_roundtrips_and_sums_bits() {
+        // A representative layer-wise broadcast: quantized w1, censored
+        // w2, sparse w3 — the exact shape a partially-censored
+        // BlockCompressor round produces.
+        let payload = Payload::Blocks(vec![
+            BlockMsg {
+                dims: 10,
+                payload: Payload::Quantized(QuantizedMsg {
+                    bits: 3,
+                    radius: 0.75,
+                    levels: vec![1, 0, 7, 2, 5, 3, 3, 0, 6, 4],
+                }),
+            },
+            BlockMsg {
+                dims: 4,
+                payload: Payload::Censored,
+            },
+            BlockMsg {
+                dims: 6,
+                payload: Payload::Sparse(SparseMsg {
+                    dims: 6,
+                    indices: vec![0, 5],
+                    values: vec![1.5, -0.5],
+                }),
+            },
+        ]);
+        // Payload::bits() is the sum of the per-block accounting.
+        assert_eq!(payload.bits(), (3 * 10 + 64) + 0 + (32 + 2 * (16 + 32)));
+        let msg = Message {
+            from: 7,
+            round: 42,
+            payload,
+        };
+        let bytes = encode_frame(&msg);
+        assert_eq!(bytes.len(), frame_len(&msg.payload));
+        assert_eq!(bytes[1], WIRE_VERSION);
+        assert_eq!(bytes[2], 5, "blocks scheme tag");
+        let (back, consumed) = decode_frame(&bytes, 20).unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_payload_eq(&back.payload, &msg.payload);
+
+        // Decoding against the wrong model dimension is rejected.
+        assert!(matches!(
+            decode_frame(&bytes, 21),
+            Err(WireError::BlocksDims {
+                expected: 21,
+                got: 20
+            })
+        ));
+    }
+
+    #[test]
+    fn blocks_frame_rejects_nested_and_control_sub_tags() {
+        let payload = Payload::Blocks(vec![BlockMsg {
+            dims: 2,
+            payload: Payload::Full(vec![1.0, 2.0]),
+        }]);
+        let msg = Message {
+            from: 0,
+            round: 0,
+            payload,
+        };
+        let mut bytes = encode_frame(&msg);
+        // The first sub-tag sits right after the u16 block count.
+        let sub_tag_at = HEADER_BYTES + 2;
+        assert_eq!(bytes[sub_tag_at], 1, "full sub-tag");
+        for bad_tag in [0u8, 5] {
+            bytes[sub_tag_at] = bad_tag;
+            let body = bytes[HEADER_BYTES..].to_vec();
+            bytes[19..23].copy_from_slice(&crc32(&body).to_le_bytes());
+            assert!(
+                matches!(
+                    decode_frame(&bytes, 2),
+                    Err(WireError::BadBlockTag(t)) if t == bad_tag
+                ),
+                "sub-tag {bad_tag} must be rejected"
+            );
+        }
     }
 
     #[test]

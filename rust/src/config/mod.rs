@@ -7,9 +7,11 @@
 //!   comments with `#`, bare sections ignored) so runs are scriptable
 //!   without `serde`. CLI flags override file values (see `cli`).
 
+use crate::coordinator::residuals::RhoPolicy;
+use crate::model::BlockLayout;
 use crate::net::channel::ChannelParams;
 use crate::net::topology::TopologyKind;
-use crate::quant::compress::{Censored, CompressorKind, FullPrecision, TopK};
+use crate::quant::compress::{BlockCompressor, Censored, CompressorKind, FullPrecision, TopK};
 use crate::quant::{BitPolicy, StochasticQuantizer};
 use crate::runtime::session::{DriverKind, ProblemKind};
 use crate::sim::link::{ComputeModel, LatencyModel, LossModel};
@@ -51,10 +53,12 @@ impl QuantConfig {
 
 /// Per-link compression scheme — the config-layer description a runtime
 /// turns into one `quant::compress::CompressorKind` per worker
-/// ([`CompressorConfig::build`]). `Stochastic(QuantConfig::default())` is
-/// the paper's Q-GADMM; `FullPrecision` is the GADMM baseline (the old
-/// `quant: None`).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// ([`CompressorConfig::build`], or [`CompressorConfig::build_for`] when
+/// the problem's [`BlockLayout`] matters). `Stochastic(QuantConfig::
+/// default())` is the paper's Q-GADMM; `FullPrecision` is the GADMM
+/// baseline (the old `quant: None`); `Blocks` composes one flat scheme per
+/// parameter block (`--compressor "layers:w1=stochastic@4,w2=full"`).
+#[derive(Clone, Debug, PartialEq)]
 pub enum CompressorConfig {
     /// Full-precision 32·d-bit broadcasts (GADMM / SGADMM).
     FullPrecision,
@@ -70,6 +74,11 @@ pub enum CompressorConfig {
     /// Top-k sparsification with error feedback: keep `ceil(frac·d)`
     /// coordinates per round, values in full precision.
     TopK { frac: f32 },
+    /// Layer-wise composition: one *flat* scheme per named parameter block
+    /// of the problem's [`BlockLayout`], in spec order. Must name every
+    /// block exactly once ([`CompressorConfig::validate_blocks`]); built
+    /// against a concrete layout via [`CompressorConfig::build_for`].
+    Blocks(Vec<(String, CompressorConfig)>),
 }
 
 /// Default censoring threshold `τ₀` (`censored` with no arguments).
@@ -80,7 +89,8 @@ pub const CENSOR_DECAY: f32 = 0.9985;
 pub const TOPK_FRAC: f32 = 0.02;
 
 /// The scheme list every parse error cites.
-pub const COMPRESSOR_SCHEMES: &str = "stochastic, full, censored[:tau0[:decay]], topk[:frac]";
+pub const COMPRESSOR_SCHEMES: &str = "stochastic, full, censored[:tau0[:decay]], topk[:frac], \
+     uniform[:scheme], layers:<block>=<scheme>[@bits][:params],...";
 
 impl Default for CompressorConfig {
     fn default() -> Self {
@@ -105,7 +115,108 @@ impl CompressorConfig {
     /// `--compressor` regardless of flag order). Unknown schemes and
     /// malformed parameters are typed errors naming the valid set — never
     /// a silent default.
+    ///
+    /// Two spec families:
+    /// * flat: `stochastic`, `full`, `censored[:tau0[:decay]]`,
+    ///   `topk[:frac]`, plus the `uniform[:scheme]` alias that applies one
+    ///   flat scheme to the whole parameter vector (today's behavior,
+    ///   bit-for-bit — `uniform` alone is the default stochastic scheme);
+    /// * layer-wise: `layers:<block>=<scheme>[@bits][:params],...` — one
+    ///   flat scheme per named parameter block, e.g.
+    ///   `layers:w1=stochastic@4,w2=topk:0.1,w3=full`. `@bits` overrides
+    ///   the inherited quantizer width for that block only.
     pub fn parse(text: &str, base: QuantConfig) -> Result<CompressorConfig, String> {
+        let trimmed = text.trim();
+        if let Some(items) = trimmed.strip_prefix("layers:") {
+            return Self::parse_layers(items, base);
+        }
+        if trimmed == "layers" {
+            return Err(
+                "layers needs a per-block spec: layers:<block>=<scheme>[@bits][:params],..."
+                    .to_string(),
+            );
+        }
+        if trimmed == "uniform" {
+            return Ok(CompressorConfig::Stochastic(base));
+        }
+        if let Some(spec) = trimmed.strip_prefix("uniform:") {
+            return Self::parse_flat(spec, base);
+        }
+        Self::parse_flat(trimmed, base)
+    }
+
+    /// Parse one `layers:` item list (the part after the prefix).
+    fn parse_layers(items: &str, base: QuantConfig) -> Result<CompressorConfig, String> {
+        let mut blocks: Vec<(String, CompressorConfig)> = Vec::new();
+        for item in items.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (name, spec) = item.split_once('=').ok_or_else(|| {
+                format!("bad layer spec {item:?} (want <block>=<scheme>[@bits][:params])")
+            })?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("bad layer spec {item:?}: empty block name"));
+            }
+            if blocks.iter().any(|(n, _)| n == name) {
+                return Err(format!("block {name:?} listed twice in layer spec"));
+            }
+            // Peel an optional `@bits` width off the scheme token before
+            // the flat parser sees the spec.
+            let spec = spec.trim();
+            let (scheme_tok, params) = match spec.split_once(':') {
+                Some((s, p)) => (s.trim(), Some(p)),
+                None => (spec, None),
+            };
+            let (scheme, explicit_bits) = match scheme_tok.split_once('@') {
+                Some((s, b)) => {
+                    let bits = b
+                        .trim()
+                        .parse::<u8>()
+                        .ok()
+                        .filter(|b| *b >= 1)
+                        .ok_or_else(|| {
+                            format!("bad bit width {b:?} in layer spec {item:?} (want u8 >= 1)")
+                        })?;
+                    (s.trim(), Some(bits))
+                }
+                None => (scheme_tok, None),
+            };
+            if scheme == "layers" || scheme == "uniform" {
+                return Err(format!("layer spec {item:?}: layer specs cannot nest"));
+            }
+            let item_base = match explicit_bits {
+                Some(bits) => QuantConfig { bits, ..base },
+                None => base,
+            };
+            let flat_spec = match params {
+                Some(p) => format!("{scheme}:{p}"),
+                None => scheme.to_string(),
+            };
+            let sub = Self::parse_flat(&flat_spec, item_base)
+                .map_err(|e| format!("layer {name:?}: {e}"))?;
+            if explicit_bits.is_some() && sub.quant().is_none() {
+                return Err(format!(
+                    "layer {name:?}: a bit width applies to the quantizing schemes \
+                     (stochastic, censored), not {}",
+                    sub.name()
+                ));
+            }
+            blocks.push((name.to_string(), sub));
+        }
+        if blocks.is_empty() {
+            return Err(
+                "layers spec lists no blocks; want layers:<block>=<scheme>[@bits][:params],..."
+                    .to_string(),
+            );
+        }
+        Ok(CompressorConfig::Blocks(blocks))
+    }
+
+    /// Parse one flat (single-scheme) spec.
+    fn parse_flat(text: &str, base: QuantConfig) -> Result<CompressorConfig, String> {
         let mut parts = text.split(':');
         let scheme = parts.next().unwrap_or("").trim();
         let args: Vec<&str> = parts.map(|s| s.trim()).collect();
@@ -188,15 +299,19 @@ impl CompressorConfig {
             CompressorConfig::Stochastic(_) => "stochastic",
             CompressorConfig::Censored { .. } => "censored",
             CompressorConfig::TopK { .. } => "topk",
+            CompressorConfig::Blocks(_) => "layers",
         }
     }
 
-    /// Bit policy of the quantizing schemes (`None` for full / top-k).
+    /// Bit policy of the quantizing schemes (`None` for full / top-k, and
+    /// for the layer-wise composition, whose widths live per block).
     pub fn quant(&self) -> Option<QuantConfig> {
         match self {
             CompressorConfig::Stochastic(q) => Some(*q),
             CompressorConfig::Censored { quant, .. } => Some(*quant),
-            CompressorConfig::FullPrecision | CompressorConfig::TopK { .. } => None,
+            CompressorConfig::FullPrecision
+            | CompressorConfig::TopK { .. }
+            | CompressorConfig::Blocks(_) => None,
         }
     }
 
@@ -204,6 +319,12 @@ impl CompressorConfig {
     /// sets the quantizer width (promoting full precision to stochastic).
     /// Errors on top-k, whose payload carries no quantizer width.
     pub fn with_bits(self, bits: u8) -> Result<CompressorConfig, String> {
+        if let CompressorConfig::Blocks(_) = &self {
+            return Err(format!(
+                "bits={bits} does not apply to a layer-wise compressor; set per-block \
+                 widths in the layers spec (e.g. layers:w1=stochastic@4)"
+            ));
+        }
         if bits == 0 {
             return Ok(CompressorConfig::FullPrecision);
         }
@@ -228,6 +349,7 @@ impl CompressorConfig {
                 "bits={bits} applies to the quantizing compressors (stochastic, censored), \
                  not topk"
             )),
+            CompressorConfig::Blocks(_) => unreachable!("rejected above"),
         }
     }
 
@@ -256,13 +378,18 @@ impl CompressorConfig {
                  not topk"
                     .to_string(),
             ),
+            CompressorConfig::Blocks(_) => Err(
+                "adaptive_bits does not apply to a layer-wise compressor; pick per-block \
+                 widths in the layers spec"
+                    .to_string(),
+            ),
         }
     }
 
     /// Can `--use-xla` drive this scheme? The PJRT artifacts are validated
     /// against the stochastic-quantizer and full-precision pipelines only
-    /// (`artifact_parity`); censored/top-k runs must use the native
-    /// backend.
+    /// (`artifact_parity`); censored/top-k/layer-wise runs must use the
+    /// native backend.
     pub fn xla_compatible(&self) -> bool {
         matches!(
             self,
@@ -271,9 +398,11 @@ impl CompressorConfig {
     }
 
     /// Instantiate one sender-side compressor of this scheme for a
-    /// `dims`-dimensional model.
+    /// `dims`-dimensional model. Panics on the layer-wise composition,
+    /// which needs a concrete [`BlockLayout`] — use
+    /// [`CompressorConfig::build_for`] there.
     pub fn build(&self, dims: usize) -> CompressorKind {
-        match *self {
+        match self {
             CompressorConfig::FullPrecision => {
                 CompressorKind::FullPrecision(FullPrecision::new(dims))
             }
@@ -281,10 +410,75 @@ impl CompressorConfig {
                 CompressorKind::Stochastic(StochasticQuantizer::new(dims, q.policy()))
             }
             CompressorConfig::Censored { quant, tau0, decay } => CompressorKind::Censored(
-                Censored::new(StochasticQuantizer::new(dims, quant.policy()), tau0, decay),
+                Censored::new(StochasticQuantizer::new(dims, quant.policy()), *tau0, *decay),
             ),
-            CompressorConfig::TopK { frac } => CompressorKind::TopK(TopK::new(dims, frac)),
+            CompressorConfig::TopK { frac } => CompressorKind::TopK(TopK::new(dims, *frac)),
+            CompressorConfig::Blocks(_) => panic!(
+                "a layer-wise compressor needs the problem's BlockLayout; \
+                 call CompressorConfig::build_for"
+            ),
         }
+    }
+
+    /// Instantiate one sender-side compressor against the problem's
+    /// [`BlockLayout`]. Flat schemes ignore the block structure and
+    /// compress the whole `layout.dims()`-dimensional vector exactly as
+    /// [`CompressorConfig::build`]; the layer-wise composition builds one
+    /// inner compressor per block, in layout order. The spec must already
+    /// satisfy [`CompressorConfig::validate_blocks`] — an unknown or
+    /// missing block here is a caller bug and panics.
+    pub fn build_for(&self, layout: &BlockLayout) -> CompressorKind {
+        match self {
+            CompressorConfig::Blocks(specs) => {
+                let blocks = layout
+                    .blocks()
+                    .iter()
+                    .map(|b| {
+                        let (_, sub) = specs
+                            .iter()
+                            .find(|(n, _)| n == &b.name)
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "layer spec is missing block {:?}; \
+                                     call validate_blocks before build_for",
+                                    b.name
+                                )
+                            });
+                        (b.name.clone(), b.len, sub.build(b.len))
+                    })
+                    .collect();
+                CompressorKind::Blocks(Box::new(BlockCompressor::new(blocks)))
+            }
+            flat => flat.build(layout.dims()),
+        }
+    }
+
+    /// Check a layer-wise spec against the problem's [`BlockLayout`]: every
+    /// named block must exist, and every layout block must be named. Flat
+    /// schemes always validate. The error names the offending block *and*
+    /// the valid set, so a typo'd `--compressor layers:...` is actionable.
+    pub fn validate_blocks(&self, layout: &BlockLayout) -> Result<(), String> {
+        let CompressorConfig::Blocks(specs) = self else {
+            return Ok(());
+        };
+        for (name, _) in specs {
+            if layout.get(name).is_none() {
+                return Err(format!(
+                    "layer spec names unknown block {name:?}; this problem's blocks: {}",
+                    layout.names()
+                ));
+            }
+        }
+        for b in layout.blocks() {
+            if !specs.iter().any(|(n, _)| n == &b.name) {
+                return Err(format!(
+                    "layer spec is missing block {:?}; this problem's blocks: {}",
+                    b.name,
+                    layout.names()
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -564,6 +758,12 @@ pub struct ExperimentConfig {
     /// Discrete-event simulator settings (the `simulate` subcommand and
     /// `figures::fig_sim`).
     pub sim: SimConfig,
+    /// How ρ evolves across iterations (`rho_policy=` key / `--rho_policy`
+    /// flag): `fixed` (default, the paper's setting) or
+    /// `residual-balance[:mu[:tau_incr[:tau_decr]]]` (Boyd §3.4.1
+    /// balancing computed from the per-iteration residual snapshot; every
+    /// driver applies the same deterministic rule).
+    pub rho_policy: RhoPolicy,
     /// Max iterations per run.
     pub iterations: u64,
     /// Loss-gap target (linreg figures).
@@ -602,6 +802,7 @@ impl Default for ExperimentConfig {
             eval_every: None,
             topology: TopologyKind::Line,
             sim: SimConfig::default(),
+            rho_policy: RhoPolicy::Fixed,
             iterations: 2_000,
             loss_target: 1e-4,
             accuracy_target: 0.90,
@@ -642,17 +843,24 @@ impl ExperimentConfig {
                 // bits=0 means full precision; otherwise set the quantizer
                 // width of the current scheme.
                 self.gadmm.compressor =
-                    self.gadmm.compressor.with_bits(bits).map_err(|why| bad(&why))?;
+                    self.gadmm.compressor.clone().with_bits(bits).map_err(|why| bad(&why))?;
             }
             "adaptive_bits" | "adaptive-bits" => {
                 let adaptive: bool = value.parse().map_err(|_| bad("bool"))?;
-                self.gadmm.compressor =
-                    self.gadmm.compressor.with_adaptive(adaptive).map_err(|why| bad(&why))?;
+                self.gadmm.compressor = self
+                    .gadmm
+                    .compressor
+                    .clone()
+                    .with_adaptive(adaptive)
+                    .map_err(|why| bad(&why))?;
             }
             "compressor" | "comp" | "scheme" => {
                 let base = self.gadmm.compressor.quant().unwrap_or_default();
                 self.gadmm.compressor =
                     CompressorConfig::parse(value, base).map_err(|why| bad(&why))?;
+            }
+            "rho_policy" | "rho-policy" => {
+                self.rho_policy = RhoPolicy::parse(value).map_err(|why| bad(&why))?
             }
             "iterations" | "iters" => {
                 self.iterations = value.parse().map_err(|_| bad("u64"))?
@@ -960,10 +1168,10 @@ mod tests {
         kv.set("bits", "8");
         kv.set("compressor", "censored:0.2");
         cfg.apply_kv(&kv).unwrap();
-        match cfg.gadmm.compressor {
+        match &cfg.gadmm.compressor {
             CompressorConfig::Censored { quant, tau0, .. } => {
                 assert_eq!(quant.bits, 8);
-                assert_eq!(tau0, 0.2);
+                assert_eq!(*tau0, 0.2);
             }
             other => panic!("expected censored, got {other:?}"),
         }
@@ -1082,6 +1290,185 @@ mod tests {
             assert_eq!(kind.dims(), d);
             assert_eq!(cfg.name(), name);
         }
+    }
+
+    #[test]
+    fn layers_spec_parses_per_block() {
+        let base = QuantConfig::default();
+        let cfg = CompressorConfig::parse("layers:w1=stochastic@4, w2=topk:0.1, w3=full", base)
+            .unwrap();
+        assert_eq!(cfg.name(), "layers");
+        assert_eq!(cfg.quant(), None);
+        assert!(!cfg.xla_compatible());
+        let CompressorConfig::Blocks(specs) = &cfg else {
+            panic!("expected layers, got {cfg:?}");
+        };
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].0, "w1");
+        assert_eq!(
+            specs[0].1,
+            CompressorConfig::Stochastic(QuantConfig { bits: 4, ..base })
+        );
+        assert_eq!(specs[1].0, "w2");
+        assert_eq!(specs[1].1, CompressorConfig::TopK { frac: 0.1 });
+        assert_eq!(specs[2].0, "w3");
+        assert_eq!(specs[2].1, CompressorConfig::FullPrecision);
+        // Blocks without @bits inherit the base width (so --bits composes).
+        let wide = QuantConfig {
+            bits: 8,
+            ..QuantConfig::default()
+        };
+        let cfg = CompressorConfig::parse("layers:w1=stochastic", wide).unwrap();
+        let CompressorConfig::Blocks(specs) = &cfg else {
+            panic!("expected layers");
+        };
+        assert_eq!(specs[0].1, CompressorConfig::Stochastic(wide));
+    }
+
+    #[test]
+    fn uniform_is_the_flat_default() {
+        let base = QuantConfig {
+            bits: 8,
+            ..QuantConfig::default()
+        };
+        // `uniform` alone is the default stochastic scheme over the whole
+        // vector — the exact pre-layers config, bit-for-bit.
+        assert_eq!(
+            CompressorConfig::parse("uniform", base).unwrap(),
+            CompressorConfig::Stochastic(base)
+        );
+        // `uniform:<scheme>` is the flat parse of <scheme>.
+        assert_eq!(
+            CompressorConfig::parse("uniform:censored:0.1", base).unwrap(),
+            CompressorConfig::parse("censored:0.1", base).unwrap()
+        );
+        assert_eq!(
+            CompressorConfig::parse("uniform:full", base).unwrap(),
+            CompressorConfig::FullPrecision
+        );
+    }
+
+    #[test]
+    fn malformed_layer_specs_are_rejected() {
+        let base = QuantConfig::default();
+        for bad in [
+            "layers",
+            "layers:",
+            "layers: , ,",
+            "layers:w1",
+            "layers:=full",
+            "layers:w1=stochastic,w1=full",
+            "layers:w1=layers",
+            "layers:w1=uniform",
+            "layers:w1=full@4",
+            "layers:w1=topk@2:0.1",
+            "layers:w1=stochastic@0",
+            "layers:w1=stochastic@lots",
+            "layers:w1=middle-out",
+            "layers:w1=topk:2",
+        ] {
+            assert!(
+                CompressorConfig::parse(bad, base).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // And via the kv layer the error is typed, config untouched.
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("compressor", "layers:w1=stochastic,w1=full");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        assert_eq!(cfg.gadmm.compressor, CompressorConfig::default());
+    }
+
+    #[test]
+    fn bits_keys_are_rejected_on_layers() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = KvMap::new();
+        kv.set("compressor", "layers:all=stochastic@4");
+        cfg.apply_kv(&kv).unwrap();
+        let mut kv = KvMap::new();
+        kv.set("bits", "2");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        let mut kv = KvMap::new();
+        kv.set("adaptive_bits", "true");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+        // The layers config survives the rejected overrides.
+        assert_eq!(cfg.gadmm.compressor.name(), "layers");
+    }
+
+    #[test]
+    fn validate_blocks_checks_names_and_coverage() {
+        let layout = BlockLayout::new(vec![("w1", 4), ("w2", 2)]);
+        let base = QuantConfig::default();
+        let ok = CompressorConfig::parse("layers:w1=stochastic,w2=full", base).unwrap();
+        ok.validate_blocks(&layout).unwrap();
+
+        let unknown = CompressorConfig::parse("layers:w1=stochastic,wz=full", base).unwrap();
+        let err = unknown.validate_blocks(&layout).unwrap_err();
+        assert!(err.contains("\"wz\""), "must name the unknown block: {err}");
+        assert!(err.contains("w1, w2"), "must list the valid blocks: {err}");
+
+        let missing = CompressorConfig::parse("layers:w1=stochastic", base).unwrap();
+        let err = missing.validate_blocks(&layout).unwrap_err();
+        assert!(err.contains("\"w2\""), "must name the missing block: {err}");
+
+        // Flat schemes validate against any layout.
+        CompressorConfig::FullPrecision.validate_blocks(&layout).unwrap();
+        CompressorConfig::default().validate_blocks(&layout).unwrap();
+    }
+
+    #[test]
+    fn build_for_composes_per_block_compressors() {
+        use crate::quant::Compressor as _;
+        let layout = BlockLayout::new(vec![("w1", 4), ("w2", 2)]);
+        let base = QuantConfig::default();
+        let cfg = CompressorConfig::parse("layers:w1=stochastic@4,w2=full", base).unwrap();
+        let kind = cfg.build_for(&layout);
+        assert_eq!(kind.name(), "layers");
+        assert_eq!(kind.dims(), 6);
+        let blocks = kind.as_blocks().expect("layers kind").blocks();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].name(), "w1");
+        assert_eq!((blocks[0].offset(), blocks[0].len()), (0, 4));
+        assert_eq!(blocks[1].name(), "w2");
+        assert_eq!((blocks[1].offset(), blocks[1].len()), (4, 2));
+        // Flat configs ignore the block structure entirely.
+        let flat = CompressorConfig::default().build_for(&layout);
+        assert_eq!(flat.name(), "stochastic");
+        assert_eq!(flat.dims(), 6);
+    }
+
+    #[test]
+    fn rho_policy_key_parses_and_rejects() {
+        use crate::coordinator::residuals::RhoPolicy;
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.rho_policy, RhoPolicy::Fixed, "fixed is the default");
+        let mut kv = KvMap::new();
+        kv.set("rho_policy", "residual-balance:5");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(
+            cfg.rho_policy,
+            RhoPolicy::ResidualBalance {
+                mu: 5.0,
+                tau_incr: 2.0,
+                tau_decr: 2.0
+            }
+        );
+        let mut kv = KvMap::new();
+        kv.set("rho_policy", "annealed");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
     }
 
     #[test]

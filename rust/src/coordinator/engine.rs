@@ -40,7 +40,7 @@
 //! ([`crate::quant::Transmission::Censored`]): neighbors reuse their
 //! mirrors and no transmission is charged.
 
-use super::residuals::{ResidualPoint, ResidualTracker};
+use super::residuals::{ResidualPoint, ResidualTracker, RhoPolicy};
 use crate::comm::CommStats;
 use crate::config::GadmmConfig;
 use crate::metrics::recorder::{CurvePoint, Recorder};
@@ -86,6 +86,13 @@ pub struct RunOptions {
     pub stop_below: Option<f64>,
     /// Early-stop once the metric rises above this (accuracy-style runs).
     pub stop_above: Option<f64>,
+    /// How ρ evolves across iterations ([`RhoPolicy`]): `Fixed` keeps the
+    /// configured ρ (bit-for-bit the historical trajectories);
+    /// `ResidualBalance` applies Boyd-style balancing from each
+    /// iteration's residual snapshot. Honored identically by all three
+    /// drivers — the decision is a deterministic function of the shared
+    /// residual state, so no extra communication round is needed.
+    pub rho_policy: RhoPolicy,
 }
 
 /// A [`RunOptions`] field combination no run loop can honor — the typed
@@ -128,6 +135,7 @@ impl Default for RunOptions {
             eval_every: 1,
             stop_below: None,
             stop_above: None,
+            rho_policy: RhoPolicy::Fixed,
         }
     }
 }
@@ -158,6 +166,13 @@ pub struct GadmmEngine<P: LocalProblem> {
     /// path stays monomorphized and allocation-free).
     compressors: Vec<CompressorKind>,
     rngs: Vec<Rng>,
+    /// ρ in force for the *current* iteration. Starts at
+    /// [`GadmmConfig::rho`]; moves only under a non-`Fixed`
+    /// [`RhoPolicy`], after each iteration's residual snapshot.
+    rho: f32,
+    /// Policy applied to `rho` after every iteration (`Fixed` unless a
+    /// run's [`RunOptions::rho_policy`] says otherwise).
+    rho_policy: RhoPolicy,
     iteration: u64,
     comm: CommStats,
     compute: Stopwatch,
@@ -189,9 +204,15 @@ impl<P: LocalProblem> GadmmEngine<P> {
         assert_eq!(problem.workers(), n, "problem size must match worker count");
         assert!(n >= 2, "GADMM needs at least two workers");
         let d = problem.dims();
+        let layout = problem.block_layout();
+        assert_eq!(
+            layout.dims(),
+            d,
+            "block layout must tile the problem's parameter vector"
+        );
         let mut root = Rng::seed_from_u64(seed);
         let rngs = (0..n).map(|p| root.fork(p as u64)).collect();
-        let compressors = (0..n).map(|_| cfg.compressor.build(d)).collect();
+        let compressors = (0..n).map(|_| cfg.compressor.build_for(&layout)).collect();
         let heads: Vec<usize> = (0..n).filter(|&p| topo.is_head(p)).collect();
         let tails: Vec<usize> = (0..n).filter(|&p| !topo.is_head(p)).collect();
         let edge_count = topo.edge_count();
@@ -205,6 +226,8 @@ impl<P: LocalProblem> GadmmEngine<P> {
             tails,
             compressors,
             rngs,
+            rho: cfg.rho,
+            rho_policy: RhoPolicy::Fixed,
             iteration: 0,
             comm: CommStats::default(),
             compute: Stopwatch::new(),
@@ -243,6 +266,19 @@ impl<P: LocalProblem> GadmmEngine<P> {
 
     pub fn iteration(&self) -> u64 {
         self.iteration
+    }
+
+    /// ρ in force for the next iteration (equals [`GadmmConfig::rho`]
+    /// until a non-`Fixed` policy moves it).
+    pub fn rho(&self) -> f32 {
+        self.rho
+    }
+
+    /// Set the ρ adaptation policy for subsequent iterations. Run loops
+    /// install [`RunOptions::rho_policy`] through this; direct `iterate()`
+    /// users default to `Fixed`.
+    pub fn set_rho_policy(&mut self, policy: RhoPolicy) {
+        self.rho_policy = policy;
     }
 
     pub fn problem(&self) -> &P {
@@ -403,7 +439,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 },
             );
         }
-        let step = self.cfg.dual_step * self.cfg.rho;
+        let step = self.cfg.dual_step * self.rho;
         for (e, &(u, v)) in self.topo.edges().iter().enumerate() {
             let (a, b) = (&self.view[u], &self.view[v]);
             let lam = &mut self.lambda[e];
@@ -425,8 +461,13 @@ impl<P: LocalProblem> GadmmEngine<P> {
             self.telemetry.record(t, Event::IterEnd { iteration: k });
         }
         self.iteration += 1;
-        self.tracker
-            .end_iteration(self.iteration, &self.theta, &self.view, self.cfg.rho, &self.topo)
+        let point = self
+            .tracker
+            .end_iteration(self.iteration, &self.theta, &self.view, self.rho, &self.topo);
+        // ρ for iteration k+1 is a deterministic function of iteration k's
+        // residuals — same rule, same inputs in every driver.
+        self.rho = self.rho_policy.next_rho(self.rho, &point);
+        point
     }
 
     /// Solve the local primal problem at position `p` (eq. (14)–(17)).
@@ -440,7 +481,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 theta: self.view[e.peer].as_slice(),
             });
         }
-        let ctx = buf.ctx(self.cfg.rho);
+        let ctx = buf.ctx(self.rho);
         // The borrow checker cannot see that `theta[p]` is disjoint from
         // `view[..]`/`lambda[..]`; take the buffer out for the call.
         let mut out = std::mem::take(&mut self.theta[p]);
@@ -501,6 +542,27 @@ impl<P: LocalProblem> GadmmEngine<P> {
                 },
             );
             self.metrics.on_broadcast(bits, outcome.radius, outcome.sent());
+            // Layer-wise schemes additionally break the broadcast down per
+            // block, in layout order, right after the flat record. Flat
+            // schemes emit nothing here so their traces are unchanged.
+            if let Some(bc) = self.compressors[p].as_blocks() {
+                let worker = self.topo.worker_at(p);
+                for (slot, out) in bc.blocks().iter().zip(bc.last_outcomes()) {
+                    let bbits = if out.sent() { out.bits } else { 0 };
+                    self.telemetry.record(
+                        t,
+                        Event::CompressBlock {
+                            iteration: self.iteration + 1,
+                            worker,
+                            block: slot.name().to_string(),
+                            bits: bbits,
+                            radius: out.radius,
+                            censored: !out.sent(),
+                        },
+                    );
+                    self.metrics.on_broadcast_block(bbits, out.sent());
+                }
+            }
         }
         if !outcome.sent() {
             self.comm.record_censored();
@@ -574,7 +636,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         let view = &self.view;
         let lambda = &self.lambda;
         let topo = &self.topo;
-        let rho = self.cfg.rho;
+        let rho = self.rho;
         // Parallel phases charge wall-clock of the whole phase to the
         // compute timer (per-position timing is meaningless across cores).
         self.compute.start();
@@ -642,6 +704,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         F: FnMut(&Self) -> f64,
     {
         let eval_every = opts.normalized_eval_every();
+        self.rho_policy = opts.rho_policy;
         self.watch_broadcasts = observer.wants_broadcasts();
         self.events.clear();
         self.telemetry = TelemetrySink::for_observer(observer);
@@ -863,6 +926,83 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_rho_moves_and_stays_deterministic() {
+        // Fixed policy: ρ never moves (bit-for-bit the historical runs).
+        let (_, mut fixed) = setup(4, Some(QuantConfig::default()), 1600.0);
+        let opts = RunOptions {
+            iterations: 20,
+            ..RunOptions::default()
+        };
+        let base = fixed.run(&opts, |eng| eng.global_objective());
+        assert_eq!(fixed.rho(), 1600.0);
+
+        // μ = 1 balancing reacts to any residual imbalance, so a single
+        // iteration moves ρ (up or down by τ = 2).
+        let balance = RhoPolicy::ResidualBalance {
+            mu: 1.0,
+            tau_incr: 2.0,
+            tau_decr: 2.0,
+        };
+        let (_, mut probe) = setup(4, Some(QuantConfig::default()), 1600.0);
+        probe.set_rho_policy(balance);
+        probe.iterate();
+        assert_ne!(probe.rho(), 1600.0, "μ = 1 balancing must move ρ");
+
+        // The adapted trajectory differs from fixed-ρ yet is bit-for-bit
+        // reproducible across identically seeded engines.
+        let opts = RunOptions {
+            iterations: 20,
+            rho_policy: balance,
+            ..RunOptions::default()
+        };
+        let (_, mut a) = setup(4, Some(QuantConfig::default()), 1600.0);
+        let (_, mut b) = setup(4, Some(QuantConfig::default()), 1600.0);
+        let ra = a.run(&opts, |eng| eng.global_objective());
+        let rb = b.run(&opts, |eng| eng.global_objective());
+        assert_eq!(a.rho(), b.rho());
+        assert_eq!(ra.thetas, rb.thetas);
+        assert_ne!(ra.thetas, base.thetas, "adaptive ρ changes the trajectory");
+    }
+
+    #[test]
+    fn layered_compressor_runs_and_accounts_block_bits() {
+        // linreg is single-block ("all"), so a layer spec over that one
+        // block must reproduce the flat scheme bit-for-bit.
+        let workers = 4;
+        let spec = LinRegSpec {
+            samples: 800,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 21);
+        let partition = Partition::contiguous(data.samples(), workers);
+        let make = |compressor| {
+            let problem = LinRegProblem::new(&data, &partition, 1600.0);
+            let cfg = GadmmConfig {
+                workers,
+                rho: 1600.0,
+                dual_step: 1.0,
+                compressor,
+                threads: 1,
+            };
+            GadmmEngine::new(cfg, problem, Topology::line(workers), 7)
+        };
+        let mut layered = make(
+            crate::config::CompressorConfig::parse("layers:all=stochastic@2", QuantConfig::default())
+                .unwrap(),
+        );
+        let mut flat = make(crate::config::CompressorConfig::Stochastic(QuantConfig::default()));
+        for _ in 0..5 {
+            layered.iterate();
+            flat.iterate();
+        }
+        assert_eq!(layered.comm().bits, flat.comm().bits);
+        for p in 0..workers {
+            assert_eq!(layered.theta_at(p), flat.theta_at(p));
+            assert_eq!(layered.view_at(p), flat.view_at(p));
+        }
+    }
+
+    #[test]
     fn topk_engine_accounts_sparse_bits() {
         let workers = 4;
         let spec = LinRegSpec {
@@ -999,7 +1139,7 @@ mod tests {
             iterations: 10_000,
             eval_every: 1,
             stop_below: Some(1e-3),
-            stop_above: None,
+            ..RunOptions::default()
         };
         let report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
         assert!(report.iterations_run < 10_000);
@@ -1023,8 +1163,7 @@ mod tests {
         let opts = RunOptions {
             iterations: 5,
             eval_every: 0,
-            stop_below: None,
-            stop_above: None,
+            ..RunOptions::default()
         };
         let report = engine.run(&opts, |eng| eng.global_objective());
         assert_eq!(report.iterations_run, 5);
@@ -1057,8 +1196,7 @@ mod tests {
         let opts = RunOptions {
             iterations: 3,
             eval_every: 2,
-            stop_below: None,
-            stop_above: None,
+            ..RunOptions::default()
         };
         let mut spy = Spy::default();
         let report = engine.run_observed(&opts, |eng| eng.global_objective(), &mut spy);
@@ -1099,8 +1237,7 @@ mod tests {
         let opts = RunOptions {
             iterations: 2,
             eval_every: 2,
-            stop_below: None,
-            stop_above: None,
+            ..RunOptions::default()
         };
         let mut tracer = Tracer::default();
         let report = engine.run_observed(&opts, |eng| eng.global_objective(), &mut tracer);

@@ -24,6 +24,7 @@ pub mod simulated;
 pub mod threaded;
 
 pub use engine::{EnergyCtx, GadmmEngine, InvalidRunOptions, RunOptions};
+pub use residuals::RhoPolicy;
 pub use simulated::SimulatedGadmm;
 
 // The unified result type all three runtimes return (the old

@@ -13,6 +13,136 @@
 use crate::linalg::vecops;
 use crate::net::topology::Topology;
 
+/// Default residual-balancing threshold `μ` (Boyd et al. §3.4.1).
+pub const RHO_BALANCE_MU: f64 = 10.0;
+/// Default ρ growth factor when the primal residual dominates.
+pub const RHO_BALANCE_TAU_INCR: f64 = 2.0;
+/// Default ρ shrink factor when the dual residual dominates.
+pub const RHO_BALANCE_TAU_DECR: f64 = 2.0;
+
+/// How the penalty ρ evolves across iterations. Every driver applies the
+/// policy to the same end-of-iteration [`ResidualPoint`], after the dual
+/// update, so the decision is deterministic and broadcast-free — workers
+/// never need a ρ negotiation round, and engine/threaded/sim runs stay
+/// bit-for-bit equivalent (`tests/layerwise.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RhoPolicy {
+    /// Keep the configured ρ for the whole run (the paper's setting).
+    Fixed,
+    /// Residual balancing (Boyd et al., *Distributed Optimization...*,
+    /// §3.4.1): after iteration `k`, with `r = √primal_sq` and
+    /// `s = √dual_sq`, set `ρ ← ρ·tau_incr` if `r > mu·s`, or
+    /// `ρ ← ρ/tau_decr` if `s > mu·r`; otherwise leave ρ alone.
+    ResidualBalance {
+        mu: f64,
+        tau_incr: f64,
+        tau_decr: f64,
+    },
+}
+
+impl Default for RhoPolicy {
+    fn default() -> Self {
+        RhoPolicy::Fixed
+    }
+}
+
+impl RhoPolicy {
+    /// Residual balancing with the textbook defaults
+    /// (μ = 10, τ_incr = τ_decr = 2).
+    pub fn residual_balance() -> RhoPolicy {
+        RhoPolicy::ResidualBalance {
+            mu: RHO_BALANCE_MU,
+            tau_incr: RHO_BALANCE_TAU_INCR,
+            tau_decr: RHO_BALANCE_TAU_DECR,
+        }
+    }
+
+    /// Parse a `--rho_policy` / `rho_policy=` value: `fixed` (default) or
+    /// `residual-balance[:mu[:tau_incr[:tau_decr]]]`.
+    pub fn parse(text: &str) -> Result<RhoPolicy, String> {
+        let mut parts = text.split(':');
+        let kind = parts.next().unwrap_or("").trim();
+        let args: Vec<&str> = parts.map(|s| s.trim()).collect();
+        match kind {
+            "fixed" => {
+                if args.is_empty() {
+                    Ok(RhoPolicy::Fixed)
+                } else {
+                    Err("fixed takes no parameters".to_string())
+                }
+            }
+            "residual-balance" | "residual_balance" | "balance" => {
+                if args.len() > 3 {
+                    return Err(format!(
+                        "residual-balance takes at most mu, tau_incr, tau_decr; \
+                         got {} parameters",
+                        args.len()
+                    ));
+                }
+                let mu = match args.first() {
+                    Some(a) => a
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|m| m.is_finite() && *m >= 1.0)
+                        .ok_or_else(|| format!("bad balancing mu {a:?} (want f64 >= 1)"))?,
+                    None => RHO_BALANCE_MU,
+                };
+                let factor = |a: Option<&&str>, which: &str, default: f64| match a {
+                    Some(a) => a
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|t| t.is_finite() && *t >= 1.0)
+                        .ok_or_else(|| format!("bad balancing {which} {a:?} (want f64 >= 1)")),
+                    None => Ok(default),
+                };
+                let tau_incr = factor(args.get(1), "tau_incr", RHO_BALANCE_TAU_INCR)?;
+                let tau_decr = factor(args.get(2), "tau_decr", RHO_BALANCE_TAU_DECR)?;
+                Ok(RhoPolicy::ResidualBalance {
+                    mu,
+                    tau_incr,
+                    tau_decr,
+                })
+            }
+            other => Err(format!(
+                "unknown rho policy {other:?}; valid policies: fixed, \
+                 residual-balance[:mu[:tau_incr[:tau_decr]]]"
+            )),
+        }
+    }
+
+    /// Policy name as spelled on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RhoPolicy::Fixed => "fixed",
+            RhoPolicy::ResidualBalance { .. } => "residual-balance",
+        }
+    }
+
+    /// ρ for the *next* iteration given this iteration's residual
+    /// snapshot. `Fixed` always returns `rho` unchanged, so fixed-policy
+    /// runs are bit-for-bit the pre-policy trajectories.
+    pub fn next_rho(&self, rho: f32, point: &ResidualPoint) -> f32 {
+        match *self {
+            RhoPolicy::Fixed => rho,
+            RhoPolicy::ResidualBalance {
+                mu,
+                tau_incr,
+                tau_decr,
+            } => {
+                let r = point.primal_sq.sqrt();
+                let s = point.dual_sq.sqrt();
+                if r > mu * s {
+                    (rho as f64 * tau_incr) as f32
+                } else if s > mu * r {
+                    (rho as f64 / tau_decr) as f32
+                } else {
+                    rho
+                }
+            }
+        }
+    }
+}
+
 /// One iteration's residual snapshot.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ResidualPoint {
@@ -43,6 +173,13 @@ impl ResidualTracker {
     /// Snapshot the views at the start of iteration `k+1` (they are the
     /// `θ̂^k` the dual residual references).
     pub fn begin_iteration(&mut self, view: &[Vec<f32>]) {
+        let refs: Vec<&[f32]> = view.iter().map(|v| v.as_slice()).collect();
+        self.begin_iteration_refs(&refs);
+    }
+
+    /// [`Self::begin_iteration`] over borrowed position slices — for
+    /// callers (the sim driver) whose fleet state is not a `Vec<Vec<f32>>`.
+    pub fn begin_iteration_refs(&mut self, view: &[&[f32]]) {
         for (prev, v) in self.prev_view.iter_mut().zip(view) {
             prev.copy_from_slice(v);
         }
@@ -54,6 +191,23 @@ impl ResidualTracker {
         iteration: u64,
         theta: &[Vec<f32>],
         view: &[Vec<f32>],
+        rho: f32,
+        topo: &Topology,
+    ) -> ResidualPoint {
+        let theta_refs: Vec<&[f32]> = theta.iter().map(|t| t.as_slice()).collect();
+        let view_refs: Vec<&[f32]> = view.iter().map(|v| v.as_slice()).collect();
+        self.end_iteration_refs(iteration, &theta_refs, &view_refs, rho, topo)
+    }
+
+    /// [`Self::end_iteration`] over borrowed position slices. Same f64
+    /// arithmetic in the same order, so residual points (and any
+    /// [`RhoPolicy`] decisions derived from them) are bit-identical
+    /// across drivers regardless of which entry point they use.
+    pub fn end_iteration_refs(
+        &mut self,
+        iteration: u64,
+        theta: &[&[f32]],
+        view: &[&[f32]],
         rho: f32,
         topo: &Topology,
     ) -> ResidualPoint {
@@ -168,6 +322,61 @@ mod tests {
         t.begin_iteration(&view0);
         let p = t.end_iteration(1, &view1, &view1, 2.0, &Topology::star(4));
         assert!((p.dual_sq - 36.0).abs() < 1e-9, "{p:?}");
+    }
+
+    fn point(primal_sq: f64, dual_sq: f64) -> ResidualPoint {
+        ResidualPoint {
+            iteration: 1,
+            primal_sq,
+            dual_sq,
+            quant_err_sq: 0.0,
+        }
+    }
+
+    #[test]
+    fn fixed_policy_never_moves_rho() {
+        let p = RhoPolicy::Fixed;
+        assert_eq!(p.next_rho(24.0, &point(1e9, 0.0)), 24.0);
+        assert_eq!(p.next_rho(24.0, &point(0.0, 1e9)), 24.0);
+    }
+
+    #[test]
+    fn residual_balance_follows_the_boyd_rule() {
+        let p = RhoPolicy::residual_balance();
+        // r = 100, s = 1 ⇒ r > 10·s ⇒ grow.
+        assert_eq!(p.next_rho(8.0, &point(1e4, 1.0)), 16.0);
+        // s = 100, r = 1 ⇒ s > 10·r ⇒ shrink.
+        assert_eq!(p.next_rho(8.0, &point(1.0, 1e4)), 4.0);
+        // Balanced (r = s) ⇒ unchanged; and both-zero is unchanged too.
+        assert_eq!(p.next_rho(8.0, &point(4.0, 4.0)), 8.0);
+        assert_eq!(p.next_rho(8.0, &point(0.0, 0.0)), 8.0);
+    }
+
+    #[test]
+    fn rho_policy_parses_and_rejects() {
+        assert_eq!(RhoPolicy::parse("fixed").unwrap(), RhoPolicy::Fixed);
+        assert_eq!(
+            RhoPolicy::parse("residual-balance").unwrap(),
+            RhoPolicy::residual_balance()
+        );
+        assert_eq!(
+            RhoPolicy::parse("residual-balance:5:3:1.5").unwrap(),
+            RhoPolicy::ResidualBalance {
+                mu: 5.0,
+                tau_incr: 3.0,
+                tau_decr: 1.5
+            }
+        );
+        for bad in [
+            "annealed",
+            "fixed:2",
+            "residual-balance:0.5",
+            "residual-balance:10:0",
+            "residual-balance:10:2:nope",
+            "residual-balance:10:2:2:7",
+        ] {
+            assert!(RhoPolicy::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

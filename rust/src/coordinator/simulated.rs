@@ -45,6 +45,7 @@
 //! properties are pinned by the `sim_determinism` integration suite.
 
 use super::engine::RunOptions;
+use super::residuals::{ResidualPoint, ResidualTracker, RhoPolicy};
 use crate::comm::{wire, CommStats, Message};
 use crate::config::{Dropout, GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
@@ -175,6 +176,16 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     telemetry: TelemetrySink,
     /// Standard metric set; enabled together with the telemetry sink.
     metrics: RunMetrics,
+    /// ρ in force for the current iteration — [`GadmmConfig::rho`] until a
+    /// non-`Fixed` [`RhoPolicy`] moves it.
+    rho: f32,
+    rho_policy: RhoPolicy,
+    /// Residual tracker, allocated lazily on adaptive-ρ runs; dropped (and
+    /// the residual baseline restarted) when a re-stitch resizes the fleet.
+    tracker: Option<ResidualTracker>,
+    /// Residual points collected on adaptive-ρ runs (drained into the
+    /// summary); empty under `Fixed`, like the pre-adaptive behavior.
+    residuals: Vec<ResidualPoint>,
 }
 
 impl<P: LocalProblem> SimulatedGadmm<P> {
@@ -202,6 +213,12 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             );
         }
         let d = problem.dims();
+        let layout = problem.block_layout();
+        assert_eq!(
+            layout.dims(),
+            d,
+            "block layout must tile the problem's parameter vector"
+        );
 
         // Engine-identical model streams: fork per position.
         let mut root = Rng::seed_from_u64(seed);
@@ -218,7 +235,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 theta: vec![0.0; d],
                 links: Vec::new(),
                 own_view: vec![0.0; d],
-                compressor: cfg.compressor.build(d),
+                compressor: cfg.compressor.build_for(&layout),
                 model_rng: rng.expect("topology covers every worker"),
                 compute_rng: sim_root.fork(w as u64),
                 compute_scale: sim.compute_scale(w, n),
@@ -236,6 +253,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let mut pending_dropouts = sim.dropouts.clone();
         pending_dropouts.sort_by(|a, b| b.at_iteration.cmp(&a.at_iteration));
 
+        let rho0 = cfg.rho;
         let mut this = SimulatedGadmm {
             cfg,
             sim,
@@ -259,6 +277,10 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             events: Vec::new(),
             telemetry: TelemetrySink::off(),
             metrics: RunMetrics::disabled(),
+            rho: rho0,
+            rho_policy: RhoPolicy::Fixed,
+            tracker: None,
+            residuals: Vec::new(),
         };
         this.relink();
         this
@@ -304,6 +326,17 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
 
     pub fn iteration(&self) -> u64 {
         self.iteration
+    }
+
+    /// ρ in force for the next iteration.
+    pub fn rho(&self) -> f32 {
+        self.rho
+    }
+
+    /// Set the ρ adaptation policy for subsequent iterations (run loops
+    /// install [`RunOptions::rho_policy`] through this).
+    pub fn set_rho_policy(&mut self, policy: RhoPolicy) {
+        self.rho_policy = policy;
     }
 
     pub fn now_secs(&self) -> f64 {
@@ -450,6 +483,9 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         self.net.stats.wire_bytes += links * frame_bytes as u64;
         self.now = self.now.plus_secs_f64(resync_secs);
         self.restitches += 1;
+        // The fleet changed shape: restart the adaptive-ρ residual
+        // baseline (the tracker is re-allocated at the next iteration).
+        self.tracker = None;
         if self.sim.record_trace {
             self.trace.push(TraceEvent::Restitch {
                 iteration: iter,
@@ -477,6 +513,20 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         }
         let iter_start = self.now;
         let mut ready: Vec<SimTime> = vec![iter_start; self.workers.len()];
+        // Adaptive ρ: snapshot θ̂^{k−1} in position order, exactly like the
+        // engine's tracker (under `Fixed` no tracker exists and nothing
+        // here runs).
+        if !matches!(self.rho_policy, RhoPolicy::Fixed) && self.tracker.is_none() {
+            self.tracker = Some(ResidualTracker::new(self.topo.len(), self.dims));
+        }
+        if let Some(tracker) = self.tracker.as_mut() {
+            let views: Vec<&[f32]> = self
+                .chain
+                .iter()
+                .map(|&w| self.workers[w].own_view.as_slice())
+                .collect();
+            tracker.begin_iteration_refs(&views);
+        }
         let tele = self.telemetry.enabled();
         if tele {
             self.telemetry
@@ -551,7 +601,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 },
             );
         }
-        let step = self.cfg.dual_step * self.cfg.rho;
+        let step = self.cfg.dual_step * self.rho;
         let d = self.dims;
         for &w in &self.chain {
             let ws = &mut self.workers[w];
@@ -583,6 +633,23 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             self.metrics.on_phase(Phase::Dual.index(), 0);
             self.telemetry.record(t, Event::IterEnd { iteration: iter });
         }
+        // Adaptive ρ: same residual computation, order, and f64 math as
+        // the engine, so ρ sequences are bit-identical across drivers.
+        if let Some(tracker) = self.tracker.as_mut() {
+            let thetas: Vec<&[f32]> = self
+                .chain
+                .iter()
+                .map(|&w| self.workers[w].theta.as_slice())
+                .collect();
+            let views: Vec<&[f32]> = self
+                .chain
+                .iter()
+                .map(|&w| self.workers[w].own_view.as_slice())
+                .collect();
+            let point = tracker.end_iteration_refs(iter, &thetas, &views, self.rho, &self.topo);
+            self.rho = self.rho_policy.next_rho(self.rho, &point);
+            self.residuals.push(point);
+        }
         self.rounds += self.chain.len() as u64;
         self.iteration = iter;
         true
@@ -605,8 +672,9 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             });
         }
         if self.telemetry.enabled() {
+            let t = self.now.as_nanos();
             self.telemetry.record(
-                self.now.as_nanos(),
+                t,
                 Event::Compress {
                     iteration: iter,
                     worker: w,
@@ -616,6 +684,26 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 },
             );
             self.metrics.on_broadcast(bits, outcome.radius, outcome.sent());
+            // Per-block records follow the flat one in layout order —
+            // identical stream shape to the engine and threaded drivers
+            // (flat schemes emit nothing here).
+            if let Some(bc) = self.workers[w].compressor.as_blocks() {
+                for (slot, out) in bc.blocks().iter().zip(bc.last_outcomes()) {
+                    let bbits = if out.sent() { out.bits } else { 0 };
+                    self.telemetry.record(
+                        t,
+                        Event::CompressBlock {
+                            iteration: iter,
+                            worker: w,
+                            block: slot.name().to_string(),
+                            bits: bbits,
+                            radius: out.radius,
+                            censored: !out.sent(),
+                        },
+                    );
+                    self.metrics.on_broadcast_block(bbits, out.sent());
+                }
+            }
         }
     }
 
@@ -631,7 +719,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                     theta: l.mirror.theta_hat(),
                 });
             }
-            let ctx = buf.ctx(self.cfg.rho);
+            let ctx = buf.ctx(self.rho);
             self.problem.solve(w, &ctx, &mut ws.theta);
         }
 
@@ -798,6 +886,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         F: FnMut(&Self) -> f64,
     {
         let eval_every = opts.normalized_eval_every();
+        self.rho_policy = opts.rho_policy;
+        self.residuals.clear();
         self.watch_broadcasts = observer.wants_broadcasts();
         self.events.clear();
         self.telemetry = TelemetrySink::for_observer(observer);
@@ -893,7 +983,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             driver: "sim",
             recorder,
             comm: self.comm.clone(),
-            residuals: Vec::new(),
+            // Populated on adaptive-ρ runs; empty under `Fixed`.
+            residuals: std::mem::take(&mut self.residuals),
             iterations_run,
             thetas,
             metrics,
@@ -1105,7 +1196,7 @@ mod tests {
             iterations: 6_000,
             eval_every: 1,
             stop_below: Some(target),
-            stop_above: None,
+            ..RunOptions::default()
         };
         let report = sim.run(&opts, |s| (s.global_objective() - f_star).abs());
         let ext = report.sim_ext();
@@ -1170,6 +1261,60 @@ mod tests {
             .filter(|e| matches!(e, TraceEvent::Censored { .. }))
             .count();
         assert_eq!(censored_events, 12);
+    }
+
+    #[test]
+    fn ideal_adaptive_rho_matches_engine_bit_for_bit() {
+        use crate::coordinator::engine::GadmmEngine;
+        use crate::coordinator::residuals::RhoPolicy;
+
+        let workers = 6;
+        let spec = LinRegSpec {
+            samples: 1_200,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 21);
+        let partition = Partition::contiguous(data.samples(), workers);
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: crate::config::CompressorConfig::Stochastic(QuantConfig::default()),
+            threads: 1,
+        };
+        let opts = RunOptions {
+            iterations: 40,
+            eval_every: 1,
+            rho_policy: RhoPolicy::residual_balance(),
+            ..RunOptions::default()
+        };
+
+        let mut engine = GadmmEngine::new(
+            cfg.clone(),
+            LinRegProblem::new(&data, &partition, 1600.0),
+            Topology::line(workers),
+            99,
+        );
+        let eng = engine.run(&opts, |e| e.global_objective());
+
+        let mut sim = SimulatedGadmm::new(
+            cfg,
+            SimConfig::ideal(),
+            LinRegProblem::new(&data, &partition, 1600.0),
+            Topology::line(workers),
+            collinear(workers, 50.0),
+            99,
+        );
+        let s = sim.run(&opts, |s| s.global_objective());
+
+        assert_eq!(engine.rho(), sim.rho(), "ρ sequences diverged");
+        assert_eq!(eng.thetas, s.thetas);
+        assert_eq!(eng.comm.bits, s.comm.bits);
+        assert_eq!(eng.residuals.len(), s.residuals.len());
+        for (a, b) in eng.residuals.iter().zip(&s.residuals) {
+            assert_eq!(a.primal_sq.to_bits(), b.primal_sq.to_bits());
+            assert_eq!(a.dual_sq.to_bits(), b.dual_sq.to_bits());
+        }
     }
 
     #[test]

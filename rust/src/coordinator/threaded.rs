@@ -38,6 +38,7 @@ use crate::comm::transport::{
 use crate::comm::{CommStats, Message, Payload};
 use crate::config::GadmmConfig;
 use crate::coordinator::engine::RunOptions;
+use crate::coordinator::residuals::{ResidualTracker, RhoPolicy};
 use crate::metrics::recorder::{CurvePoint, Recorder};
 use crate::metrics::registry::RunMetrics;
 use crate::metrics::report::RunSummary;
@@ -49,10 +50,57 @@ use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Leader→worker ρ channel for adaptive-ρ runs ([`RhoPolicy`] ≠ `Fixed`).
+///
+/// ρ for iteration `k+1` is a function of iteration `k`'s residuals, which
+/// only the leader can assemble — so under an adaptive policy the fleet
+/// runs in lockstep: no worker starts iteration `k+1` until the leader has
+/// digested every iteration-`k` report and published the next ρ here.
+/// Under `Fixed` no latch exists and workers pipeline freely, exactly as
+/// before.
+struct RhoLatch {
+    /// `(completed iteration, ρ for the next one)`.
+    state: Mutex<(u64, f32)>,
+    cv: Condvar,
+}
+
+impl RhoLatch {
+    fn new(rho0: f32) -> RhoLatch {
+        RhoLatch {
+            state: Mutex::new((0, rho0)),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish ρ for iteration `completed + 1`.
+    fn publish(&self, completed: u64, rho_next: f32) {
+        let mut s = self.state.lock().expect("rho latch poisoned");
+        *s = (completed, rho_next);
+        self.cv.notify_all();
+    }
+
+    /// Block until ρ for iteration `k` is known (the leader has completed
+    /// `k − 1`), then return it.
+    fn rho_for(&self, k: u64) -> anyhow::Result<f32> {
+        let mut s = self.state.lock().expect("rho latch poisoned");
+        while s.0 < k - 1 {
+            let (next, timeout) = self
+                .cv
+                .wait_timeout(s, RECV_TIMEOUT)
+                .expect("rho latch poisoned");
+            s = next;
+            if timeout.timed_out() && s.0 < k - 1 {
+                anyhow::bail!("rho latch starved waiting for iteration {k}");
+            }
+        }
+        Ok(s.1)
+    }
+}
 
 /// One incident link as shipped to a worker thread: the neighbor's
 /// position and the λ sign this endpoint sees (see
@@ -79,6 +127,13 @@ struct WorkerReport {
     radius: f32,
     /// `false` when this round's broadcast was censored (no channel use).
     sent: bool,
+    /// Per-block `(bits, radius, sent)` of this round, in layout order —
+    /// empty for flat (non-`layers:`) schemes. Feeds the leader-side
+    /// `compress_block` telemetry and the per-block bits histogram.
+    blocks: Vec<(u64, f32, bool)>,
+    /// The worker's own post-broadcast view θ̂ — shipped only on adaptive-ρ
+    /// runs, where the leader reconstructs the fleet residuals.
+    view: Option<Vec<f32>>,
 }
 
 /// Run (Q-)GADMM over `solvers` (identity chain, solver `p` at position
@@ -142,6 +197,14 @@ pub fn run_threaded_on(
         assert_eq!(init.len(), d, "initial theta dimension mismatch");
     }
     let eval_every = opts.normalized_eval_every();
+    // Block names for the leader-side per-block telemetry (layout order;
+    // only `layers:` schemes ship per-block outcomes to zip against).
+    let block_names: Vec<String> = solvers[0]
+        .block_layout()
+        .blocks()
+        .iter()
+        .map(|b| b.name.clone())
+        .collect();
 
     // The topology is known up front, so endpoints only hold senders to
     // their actual neighbors (O(edges) handles, and a misdirected send
@@ -153,6 +216,18 @@ pub fn run_threaded_on(
     // metric crossed its threshold; workers refuse to *start* any later
     // iteration (see the module docs for the unblocking cascade).
     let stop_at = Arc::new(AtomicU64::new(u64::MAX));
+
+    // Adaptive ρ runs the fleet in lockstep through a RhoLatch (see its
+    // docs); `Fixed` keeps the latch absent and the pipelined fast path.
+    let rho_latch = match opts.rho_policy {
+        RhoPolicy::Fixed => None,
+        _ => Some(Arc::new(RhoLatch::new(cfg.rho))),
+    };
+    let mut rho = cfg.rho;
+    let mut tracker = rho_latch
+        .as_ref()
+        .map(|_| ResidualTracker::new(n, d));
+    let mut residuals = Vec::new();
 
     // Seed forks must match the deterministic engine exactly.
     let mut root = Rng::seed_from_u64(seed);
@@ -196,6 +271,7 @@ pub fn run_threaded_on(
             eval_every,
             needs_objective,
             stop_at: Arc::clone(&stop_at),
+            rho_latch: rho_latch.clone(),
             initial_theta: initial_theta.map(|t| t.to_vec()),
         };
         handles.push(std::thread::spawn(move || worker_main(ctx, solver)));
@@ -209,9 +285,15 @@ pub fn run_threaded_on(
     let mut recorder = Recorder::new("threaded-run");
     let mut comm = CommStats::default();
     let mut thetas = vec![vec![0.0f32; d]; n];
+    // Fleet views, reconstructed leader-side on adaptive-ρ runs only (the
+    // residual quantities are view-dependent).
+    let mut views = vec![vec![0.0f32; d]; n];
     if let Some(init) = initial_theta {
         for t in thetas.iter_mut() {
             t.copy_from_slice(init);
+        }
+        for v in views.iter_mut() {
+            v.copy_from_slice(init);
         }
     }
     let watch = observer.wants_broadcasts();
@@ -318,6 +400,25 @@ pub fn run_threaded_on(
                         },
                     );
                     metrics.on_broadcast(rep.bits, rep.radius, rep.sent);
+                    // Per-block records follow the flat one in layout
+                    // order, matching the engine's stream exactly (empty
+                    // for flat schemes).
+                    for (name, &(bbits, bradius, bsent)) in
+                        block_names.iter().zip(&rep.blocks)
+                    {
+                        telemetry.record(
+                            t,
+                            Event::CompressBlock {
+                                iteration: k,
+                                worker: topo.worker_at(rep.pos),
+                                block: name.clone(),
+                                bits: bbits,
+                                radius: bradius,
+                                censored: !bsent,
+                            },
+                        );
+                        metrics.on_broadcast_block(bbits, bsent);
+                    }
                 }
                 telemetry.record(
                     t,
@@ -343,10 +444,27 @@ pub fn run_threaded_on(
             );
             telemetry.record(t, Event::IterEnd { iteration: k });
         }
+        // Snapshot θ̂^{k−1} before folding in this iteration's views (the
+        // dual residual is the view *delta*, exactly as in the engine).
+        if let Some(tracker) = tracker.as_mut() {
+            tracker.begin_iteration(&views);
+        }
         for rep in reps {
             if let Some(theta) = rep.theta {
                 thetas[rep.pos] = theta;
             }
+            if let Some(view) = rep.view {
+                views[rep.pos] = view;
+            }
+        }
+        if let (Some(tracker), Some(latch)) = (tracker.as_mut(), rho_latch.as_ref()) {
+            // Same residual computation, same order, same f64 math as the
+            // deterministic engine — so the published ρ sequence is
+            // bit-identical across drivers.
+            let point = tracker.end_iteration(k, &thetas, &views, rho, topo);
+            rho = opts.rho_policy.next_rho(rho, &point);
+            residuals.push(point);
+            latch.publish(k, rho);
         }
         iterations_run = k;
         if k % eval_every == 0 {
@@ -391,7 +509,9 @@ pub fn run_threaded_on(
         driver: "threaded",
         recorder,
         comm,
-        residuals: Vec::new(),
+        // Populated on adaptive-ρ runs (where the leader reconstructs the
+        // fleet residuals anyway); empty on pipelined `Fixed` runs.
+        residuals,
         iterations_run,
         thetas,
         sim: None,
@@ -415,6 +535,9 @@ struct WorkerCtx {
     /// metrics); accuracy-style metrics skip the per-eval `f_n(θ)` pass.
     needs_objective: bool,
     stop_at: Arc<AtomicU64>,
+    /// Present on adaptive-ρ runs: blocks the worker at each iteration
+    /// boundary until the leader publishes that iteration's ρ.
+    rho_latch: Option<Arc<RhoLatch>>,
     initial_theta: Option<Vec<f32>>,
 }
 
@@ -435,7 +558,11 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
     // One dual + one mirror per incident link, in link order.
     let mut lambdas: Vec<Vec<f32>> = (0..deg).map(|_| vec![0.0f32; d]).collect();
     let mut mirrors: Vec<Mirror> = (0..deg).map(|_| Mirror::new(d)).collect();
-    let mut compressor = ctx.cfg.compressor.build(d);
+    let mut compressor = ctx.cfg.compressor.build_for(&solver.block_layout());
+    // ρ in force for the current iteration; moved by the leader through
+    // the latch on adaptive-ρ runs, constant otherwise.
+    let mut rho = ctx.cfg.rho;
+    let lockstep = ctx.rho_latch.is_some();
     // Own view (what neighbors believe about us) — needed for the dual
     // update, which must use θ̂ on *both* ends of each link.
     let mut own_view = vec![0.0f32; d];
@@ -458,6 +585,12 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
         if k > ctx.stop_at.load(Ordering::Acquire) {
             halted = true;
             break 'iterations;
+        }
+
+        // Adaptive ρ: wait for the leader's ρ_k (published once it has
+        // digested every iteration-(k−1) report).
+        if let Some(latch) = &ctx.rho_latch {
+            rho = latch.rho_for(k)?;
         }
 
         // Tails receive the heads' fresh broadcasts before solving.
@@ -483,7 +616,7 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
                     theta: mirrors[i].theta_hat(),
                 });
             }
-            let nctx = buf.ctx(ctx.cfg.rho);
+            let nctx = buf.ctx(rho);
             solver.solve(&nctx, &mut theta);
         }
 
@@ -540,7 +673,7 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
         // Local dual updates (eq. (18)) from the shared θ̂s: the sign
         // selects which end of the edge's orientation this worker is
         // (`+` ⇒ λ += αρ(θ̂_peer − θ̂_own), the chain's left-link case).
-        let step = ctx.cfg.dual_step * ctx.cfg.rho;
+        let step = ctx.cfg.dual_step * rho;
         for (i, l) in ctx.links.iter().enumerate() {
             let nb = mirrors[i].theta_hat();
             let lam = &mut lambdas[i];
@@ -565,11 +698,23 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
         } else {
             0.0
         };
-        let theta_out = if is_eval || k == ctx.iterations {
+        let theta_out = if is_eval || k == ctx.iterations || lockstep {
             Some(theta.clone())
         } else {
             None
         };
+        // Adaptive ρ: the leader rebuilds fleet residuals, which read the
+        // views too (instrumentation traffic, never charged as bits).
+        let view_out = if lockstep { Some(own_view.clone()) } else { None };
+        let blocks = compressor
+            .as_blocks()
+            .map(|bc| {
+                bc.last_outcomes()
+                    .iter()
+                    .map(|o| (if o.sent() { o.bits } else { 0 }, o.radius, o.sent()))
+                    .collect()
+            })
+            .unwrap_or_default();
         ctx.report
             .send(WorkerReport {
                 pos: ctx.pos,
@@ -579,6 +724,8 @@ fn worker_main(mut ctx: WorkerCtx, mut solver: Box<dyn WorkerSolver>) -> anyhow:
                 bits,
                 radius: outcome.radius,
                 sent: outcome.sent(),
+                blocks,
+                view: view_out,
             })
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
     }
@@ -649,8 +796,7 @@ mod tests {
         RunOptions {
             iterations,
             eval_every: 1,
-            stop_below: None,
-            stop_above: None,
+            ..RunOptions::default()
         }
     }
 
@@ -754,7 +900,7 @@ mod tests {
             iterations: 10_000,
             eval_every: 1,
             stop_below: Some(1e-3),
-            stop_above: None,
+            ..RunOptions::default()
         };
         let report = run_threaded(&cfg, boxed, &opts, 7, |obj_sum, _| {
             (obj_sum - f_star).abs()
@@ -791,8 +937,7 @@ mod tests {
         let opts = RunOptions {
             iterations: 50,
             eval_every: 10,
-            stop_below: None,
-            stop_above: None,
+            ..RunOptions::default()
         };
         let report = run_threaded(&cfg, boxed, &opts, 3, |obj_sum, _| {
             (obj_sum - f_star).abs()
@@ -803,6 +948,58 @@ mod tests {
             assert_eq!(p.iteration, 10 * (i as u64 + 1));
         }
         assert_eq!(report.iterations_run, 50);
+    }
+
+    #[test]
+    fn threaded_adaptive_rho_matches_engine_bit_for_bit() {
+        // Under ResidualBalance the fleet runs lockstep and the leader's ρ
+        // sequence must reproduce the deterministic engine's exactly.
+        use crate::coordinator::engine::GadmmEngine;
+
+        let workers = 4;
+        let spec = LinRegSpec {
+            samples: 1_200,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, 31);
+        let part = Partition::contiguous(data.samples(), workers);
+        let cfg = GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
+            threads: 0,
+        };
+        let opts = RunOptions {
+            iterations: 40,
+            eval_every: 1,
+            rho_policy: crate::coordinator::residuals::RhoPolicy::residual_balance(),
+            ..RunOptions::default()
+        };
+
+        let problem = LinRegProblem::new(&data, &part, 1600.0);
+        let mut engine = GadmmEngine::new(
+            GadmmConfig { threads: 1, ..cfg.clone() },
+            problem,
+            Topology::line(workers),
+            7,
+        );
+        let eng = engine.run(&opts, |e| e.global_objective());
+
+        let boxed: Vec<Box<dyn WorkerSolver>> = LinRegProblem::new(&data, &part, 1600.0)
+            .into_workers()
+            .into_iter()
+            .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
+            .collect();
+        let thr = run_threaded(&cfg, boxed, &opts, 7, |obj, _| obj).unwrap();
+
+        assert_eq!(eng.thetas, thr.thetas, "adaptive-ρ trajectories diverged");
+        assert_eq!(eng.comm.bits, thr.comm.bits);
+        assert_eq!(eng.residuals.len(), thr.residuals.len());
+        for (a, b) in eng.residuals.iter().zip(&thr.residuals) {
+            assert_eq!(a.primal_sq.to_bits(), b.primal_sq.to_bits());
+            assert_eq!(a.dual_sq.to_bits(), b.dual_sq.to_bits());
+        }
     }
 
     #[test]

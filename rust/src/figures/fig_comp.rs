@@ -141,6 +141,7 @@ pub fn run_scheme(
         eval_every: 1,
         stop_below: Some(target),
         stop_above: None,
+        ..RunOptions::default()
     };
     let report = engine.run(&opts, |eng| {
         let thetas: Vec<Vec<f32>> = (0..eng.workers())
@@ -181,7 +182,7 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
     for kind in kinds {
         for (name, compressor) in comp_schemes() {
             let topo = kind.build(w.workers, cfg.seed)?;
-            let mut r = run_scheme(&w, topo, compressor, cfg.seed);
+            let mut r = run_scheme(&w, topo, compressor.clone(), cfg.seed);
             let tag = format!("{name}@{}", kind.name());
             rep.meta(
                 &format!("bits_to_target[{tag}]"),

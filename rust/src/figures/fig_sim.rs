@@ -52,6 +52,7 @@ pub fn run_sim_linreg(
         eval_every: 1,
         stop_below: Some(target),
         stop_above: None,
+        ..RunOptions::default()
     };
     let f_star = world.f_star;
     let mut report = sim.run(&opts, |s| (s.global_objective() - f_star).abs());

@@ -85,6 +85,7 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
             eval_every: 1,
             stop_below: Some(c.loss_target),
             stop_above: None,
+            ..RunOptions::default()
         };
         let f_star = world.f_star;
         let mut r = sim.run(&opts, |s| (s.global_objective() - f_star).abs());

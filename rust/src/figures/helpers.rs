@@ -106,6 +106,7 @@ pub fn run_gadmm_linreg(
         eval_every: 1,
         stop_below,
         stop_above: None,
+        ..RunOptions::default()
     };
     let mut report = engine.run(&opts, |eng| (eng.global_objective() - f_star).abs());
     report.recorder.name = name.to_string();
@@ -253,6 +254,7 @@ pub fn run_gadmm_dnn(
         eval_every,
         stop_below: None,
         stop_above,
+        ..RunOptions::default()
     };
     let mut report = engine.run(&opts, |eng| {
         let thetas: Vec<Vec<f32>> = (0..eng.workers())

@@ -12,6 +12,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig_comp;
+pub mod fig_layerwise;
 pub mod fig_sim;
 pub mod fig_topo;
 pub mod helpers;
@@ -19,13 +20,14 @@ pub mod thm2;
 
 use crate::config::ExperimentConfig;
 
-/// All known figure ids, in paper order (`fig_sim`, `fig_topo`, and
-/// `fig_comp` extend the paper with the discrete-event simulator's
-/// loss-vs-time-to-target panel, the bipartite-topology sweep, and the
-/// compression-scheme bits-to-target sweep).
+/// All known figure ids, in paper order (`fig_sim`, `fig_topo`,
+/// `fig_comp`, and `fig_layerwise` extend the paper with the
+/// discrete-event simulator's loss-vs-time-to-target panel, the
+/// bipartite-topology sweep, the compression-scheme bits-to-target
+/// sweep, and the layer-wise vs uniform MLP comparison).
 pub const ALL_FIGS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2", "fig_sim", "fig_topo",
-    "fig_comp",
+    "fig_comp", "fig_layerwise",
 ];
 
 /// Dispatch a figure id (or `all`).
@@ -42,6 +44,7 @@ pub fn run(fig: &str, cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()>
         "fig_sim" => fig_sim::run(cfg, quick),
         "fig_topo" => fig_topo::run(cfg, quick),
         "fig_comp" => fig_comp::run(cfg, quick),
+        "fig_layerwise" => fig_layerwise::run(cfg, quick),
         "all" => {
             for f in ALL_FIGS {
                 run(f, cfg, quick)?;

@@ -96,6 +96,7 @@ fn variant_name(comp: &CompressorConfig, family: &str) -> String {
         CompressorConfig::Stochastic(_) => format!("Q-{family}"),
         CompressorConfig::Censored { .. } => format!("CQ-{family}"),
         CompressorConfig::TopK { .. } => format!("TopK-{family}"),
+        CompressorConfig::Blocks(_) => format!("Layered-{family}"),
     }
 }
 
@@ -160,6 +161,17 @@ fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
 /// full precision); reject the rest up front with a clear message instead
 /// of failing deep inside a run.
 fn check_xla_compressor(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    if matches!(cfg.gadmm.compressor, CompressorConfig::Blocks(_)) {
+        // Per-block compression needs the native compressor composition;
+        // the AOT quantizer artifact is compiled for one whole-vector
+        // pass. Refuse before touching any artifact.
+        return Err(qgadmm::runtime::RuntimeError::Unsupported(format!(
+            "per-block compressor {:?} — the PJRT quantizer artifact is \
+             whole-vector only; drop --use-xla or use a flat scheme",
+            cfg.gadmm.compressor.name()
+        ))
+        .into());
+    }
     if !cfg.gadmm.compressor.xla_compatible() {
         anyhow::bail!(
             "--use-xla supports only the stochastic and full-precision compressors \
@@ -305,14 +317,14 @@ fn simulate(cfg: &ExperimentConfig, flags: &KvMap) -> anyhow::Result<()> {
     // schemes are added.
     let extra_name = variant_name(&c.gadmm.compressor, "GADMM");
     if !entries.iter().any(|(n, _)| *n == extra_name) {
-        entries.push((extra_name, c.gadmm.compressor));
+        entries.push((extra_name, c.gadmm.compressor.clone()));
     }
     for (name, compressor) in &entries {
         let r: RunSummary = run_sim_linreg(
             name,
             &world,
             &c,
-            *compressor,
+            compressor.clone(),
             c.sim.loss,
             iterations,
             c.loss_target,

@@ -279,6 +279,7 @@ fn log_bounds(lo: f64, step: f64, n: usize) -> Vec<f64> {
 /// | `broadcasts` | counter | 1 | compress outcomes observed (sent + censored) |
 /// | `censored_rounds` | counter | 1 | broadcasts suppressed by censoring |
 /// | `broadcast_bits` | histogram | bits | payload bits per sent broadcast |
+/// | `broadcast_bits_per_block` | histogram | bits | payload bits per sent *block* of a layer-wise broadcast |
 /// | `quant_radius` | histogram | 1 | ‖θ−θ̂‖∞ per compress outcome |
 /// | `phase_head_ns` | histogram | ns | head phase wall time per iteration |
 /// | `phase_tail_ns` | histogram | ns | tail phase wall time per iteration |
@@ -295,6 +296,9 @@ pub struct RunMetrics {
     pub broadcasts: CounterId,
     pub censored_rounds: CounterId,
     pub broadcast_bits: HistogramId,
+    /// Per-block payload bits of layer-wise (`Payload::Blocks`) broadcasts;
+    /// flat schemes never feed it, so it stays empty (count 0) for them.
+    pub broadcast_bits_per_block: HistogramId,
     pub quant_radius: HistogramId,
     /// Indexed by `Phase::index()`: head, tail, dual.
     pub phase_ns: [HistogramId; 3],
@@ -307,6 +311,8 @@ impl RunMetrics {
         let censored_rounds = registry.counter("censored_rounds", "1");
         // 64 bits .. ~64 Mbit, ×4 per bucket.
         let broadcast_bits = registry.histogram("broadcast_bits", "bits", log_bounds(64.0, 4.0, 11));
+        let broadcast_bits_per_block =
+            registry.histogram("broadcast_bits_per_block", "bits", log_bounds(64.0, 4.0, 11));
         // 1e-8 .. 1e3 in decades.
         let quant_radius = registry.histogram("quant_radius", "1", log_bounds(1e-8, 10.0, 12));
         // 1 µs .. ~100 s in decades.
@@ -324,6 +330,7 @@ impl RunMetrics {
             broadcasts,
             censored_rounds,
             broadcast_bits,
+            broadcast_bits_per_block,
             quant_radius,
             phase_ns,
             sim_queue_depth,
@@ -358,6 +365,17 @@ impl RunMetrics {
             self.registry.observe(self.broadcast_bits, bits as f64);
         } else {
             self.registry.inc(self.censored_rounds, 1);
+        }
+    }
+
+    /// Record one block's share of a layer-wise broadcast. Censored
+    /// blocks ship nothing and are not observed (a run-level censor is
+    /// already counted by [`RunMetrics::on_broadcast`]).
+    #[inline]
+    pub fn on_broadcast_block(&mut self, bits: u64, sent: bool) {
+        if self.registry.enabled && sent {
+            self.registry
+                .observe(self.broadcast_bits_per_block, bits as f64);
         }
     }
 
@@ -428,6 +446,24 @@ mod tests {
         assert_eq!(snap.counter("censored_rounds"), Some(1));
         assert_eq!(snap.histogram("broadcast_bits").unwrap().count, 2);
         assert_eq!(snap.histogram("quant_radius").unwrap().count, 3);
+    }
+
+    #[test]
+    fn per_block_bits_histogram_only_counts_sent_blocks() {
+        let mut m = RunMetrics::active();
+        m.on_broadcast_block(4 * 100 + 64, true);
+        m.on_broadcast_block(32 * 10, true);
+        m.on_broadcast_block(0, false);
+        let snap = m.snapshot();
+        let h = snap.histogram("broadcast_bits_per_block").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, (4.0 * 100.0 + 64.0) + 32.0 * 10.0);
+        // Flat runs never feed it: it snapshots registered but empty.
+        let flat = RunMetrics::active().snapshot();
+        assert_eq!(
+            flat.histogram("broadcast_bits_per_block").map(|h| h.count),
+            Some(0)
+        );
     }
 
     #[test]

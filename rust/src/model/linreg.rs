@@ -19,7 +19,7 @@
 //! distributed runtime); [`LinRegProblem`] is the fleet view the
 //! deterministic engine drives.
 
-use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use super::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::data::linreg::{LinRegDataset, WorkerStats};
 use crate::data::partition::Partition;
 use crate::linalg::Chol;
@@ -51,6 +51,19 @@ impl LinRegWorker {
         &self.stats
     }
 
+    /// Adopt the ρ the coordinator is currently running (adaptive-ρ
+    /// policies move it between iterations). A change invalidates every
+    /// cached factor; under `RhoPolicy::Fixed` ρ never moves, so this is a
+    /// single compare on the hot path and the cache behaves exactly as
+    /// before.
+    fn adopt_rho(&mut self, rho: f32) {
+        let rho = rho as f64;
+        if rho != self.rho {
+            self.rho = rho;
+            self.factors.clear();
+        }
+    }
+
     /// Ensure the Cholesky factor of `A + ρ·deg·I` exists.
     fn ensure_factor(&mut self, deg: usize) {
         if self.factors.len() < deg {
@@ -75,6 +88,7 @@ impl WorkerSolver for LinRegWorker {
         assert_eq!(out.len(), d);
         let deg = ctx.degree();
         assert!(deg >= 1, "GADMM workers always have ≥1 incident link");
+        self.adopt_rho(ctx.rho);
         let rho = self.rho;
 
         // rhs = b + Σ_links (sign·λ + ρ θ̂), accumulated in link order
@@ -152,6 +166,12 @@ impl LinRegProblem {
 }
 
 impl LocalProblem for LinRegProblem {
+    /// Single-block: the single consensus block `all` — the linear model has no
+    /// layer structure.
+    fn block_layout(&self) -> BlockLayout {
+        BlockLayout::single(self.dims())
+    }
+
     fn dims(&self) -> usize {
         self.workers[0].dims()
     }
@@ -327,6 +347,25 @@ mod tests {
         cached.solve(0, &deg1.ctx(2.0), &mut a);
         // Fresh solver straight to deg 1.
         fresh.solve(0, &deg1.ctx(2.0), &mut b);
+        assert_eq!(a, b);
+    }
+
+    /// Adaptive-ρ support: a solver whose factor cache was warmed at one ρ
+    /// must honor a different `ctx.rho` exactly (the change invalidates
+    /// the cache rather than silently reusing the old factors).
+    #[test]
+    fn solver_adopts_ctx_rho() {
+        let (_, mut stale) = problem(3, 2.0);
+        let (_, mut fresh) = problem(3, 7.0);
+        let d = stale.dims();
+        let lam = vec![0.1f32; 6];
+        let th = vec![0.7f32; 6];
+        let buf = LinkBuf::chain(None, None, Some(&lam), Some(&th));
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        stale.solve(0, &buf.ctx(2.0), &mut a);
+        stale.solve(0, &buf.ctx(7.0), &mut a);
+        fresh.solve(0, &buf.ctx(7.0), &mut b);
         assert_eq!(a, b);
     }
 

@@ -24,7 +24,7 @@
 //! The figure of merit is test accuracy of the worker-averaged model
 //! (accuracy-style metric: runs early-stop on `stop_above`).
 
-use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use super::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::data::partition::Partition;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
@@ -309,6 +309,11 @@ impl LogRegProblem {
 }
 
 impl LocalProblem for LogRegProblem {
+    /// Single-block: the single consensus block `all` — one flat weight vector.
+    fn block_layout(&self) -> BlockLayout {
+        BlockLayout::single(self.dims())
+    }
+
     fn dims(&self) -> usize {
         self.dims
     }

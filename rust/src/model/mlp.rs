@@ -6,7 +6,7 @@
 //! tiny instance; [`MlpDims::paper`] is the evaluation configuration.
 
 use super::adam::Adam;
-use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use super::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::data::images::{ImageDataset, CLASSES, PIXELS};
 use crate::data::partition::Partition;
 use crate::util::rng::Rng;
@@ -43,6 +43,17 @@ impl MlpDims {
         let w1 = self.input * self.hidden1;
         let w2 = w1 + self.hidden1 * self.hidden2;
         (w1, w2, self.dims())
+    }
+
+    /// The per-layer block structure: `w1`/`w2`/`w3` spanning the three
+    /// weight matrices in flat-vector order (the paper net: 100,352 +
+    /// 8,192 + 640 parameters).
+    pub fn block_layout(&self) -> BlockLayout {
+        BlockLayout::new(vec![
+            ("w1", self.input * self.hidden1),
+            ("w2", self.hidden1 * self.hidden2),
+            ("w3", self.hidden2 * self.classes),
+        ])
     }
 
     /// He-normal initialization, shared across workers (all workers start
@@ -424,6 +435,10 @@ impl WorkerSolver for MlpWorker {
         forward(&self.dims, theta, &self.shard.x[..n * self.dims.input], &mut scratch);
         ce_loss(&self.dims, &scratch, &self.shard.y[..n]) * self.shard.y.len() as f64
     }
+
+    fn block_layout(&self) -> crate::model::BlockLayout {
+        self.dims.block_layout()
+    }
 }
 
 /// The Q-SGADMM local problem over the image-classification task — the
@@ -568,6 +583,12 @@ impl LocalProblem for MlpProblem {
                 .collect(),
         )
     }
+
+    /// The three weight matrices as named blocks (`w1`/`w2`/`w3`), matching
+    /// [`MlpDims::offsets`] — the bias-free net has no bias blocks.
+    fn block_layout(&self) -> BlockLayout {
+        self.dims.block_layout()
+    }
 }
 
 #[cfg(test)]
@@ -580,6 +601,28 @@ mod tests {
             hidden1: 4,
             hidden2: 3,
             classes: 3,
+        }
+    }
+
+    #[test]
+    fn block_layout_matches_offsets() {
+        for dims in [tiny_dims(), MlpDims::paper()] {
+            let layout = dims.block_layout();
+            let (o1, o2, o3) = dims.offsets();
+            assert_eq!(layout.dims(), dims.dims());
+            let b: Vec<(String, usize, usize)> = layout
+                .blocks()
+                .iter()
+                .map(|b| (b.name.clone(), b.offset, b.len))
+                .collect();
+            assert_eq!(
+                b,
+                vec![
+                    ("w1".to_string(), 0, o1),
+                    ("w2".to_string(), o1, o2 - o1),
+                    ("w3".to_string(), o2, o3 - o2),
+                ]
+            );
         }
     }
 

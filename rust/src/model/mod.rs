@@ -38,6 +38,77 @@ pub mod logreg;
 pub mod mlp;
 pub mod scale;
 
+/// One named contiguous span of the flat parameter vector.
+///
+/// Blocks partition `[0, dims)` in order: `offset` of block `k+1` equals
+/// `offset + len` of block `k`. The MLP maps its weight matrices to blocks
+/// (`w1`/`w2`/`w3`); the convex problems are single-block (`all`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The named block structure of a problem's parameter vector — the seam
+/// that lets compression be configured per layer (`--compressor
+/// "layers:w1=stochastic@8,..."`) instead of uniformly over one flat
+/// `Vec<f32>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    blocks: Vec<Block>,
+}
+
+impl BlockLayout {
+    /// A layout from `(name, len)` pairs laid out contiguously from 0.
+    ///
+    /// Panics on empty input, an empty block, or a duplicate name — layouts
+    /// are authored by `LocalProblem` implementations, so violations are
+    /// programming errors, not user input.
+    pub fn new<S: Into<String>>(blocks: Vec<(S, usize)>) -> BlockLayout {
+        assert!(!blocks.is_empty(), "BlockLayout needs at least one block");
+        let mut out = Vec::with_capacity(blocks.len());
+        let mut offset = 0usize;
+        for (name, len) in blocks {
+            let name = name.into();
+            assert!(len > 0, "block {name:?} is empty");
+            assert!(
+                !out.iter().any(|b: &Block| b.name == name),
+                "duplicate block name {name:?}"
+            );
+            out.push(Block { name, offset, len });
+            offset += len;
+        }
+        BlockLayout { blocks: out }
+    }
+
+    /// The trivial single-block layout every problem gets by default: one
+    /// block named `all` covering the whole vector.
+    pub fn single(dims: usize) -> BlockLayout {
+        BlockLayout::new(vec![("all", dims)])
+    }
+
+    /// Total dimension covered (sum of block lengths).
+    pub fn dims(&self) -> usize {
+        self.blocks.iter().map(|b| b.len).sum()
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Block> {
+        self.blocks.iter().find(|b| b.name == name)
+    }
+
+    /// Comma-joined block names, for error messages
+    /// (`valid blocks: w1, w2, w3`).
+    pub fn names(&self) -> String {
+        let names: Vec<&str> = self.blocks.iter().map(|b| b.name.as_str()).collect();
+        names.join(", ")
+    }
+}
+
 /// One incident link as seen from the worker solving its primal update.
 #[derive(Clone, Copy, Debug)]
 pub struct NeighborLink<'a> {
@@ -183,6 +254,12 @@ pub trait WorkerSolver: Send {
     fn solve(&mut self, ctx: &NeighborCtx<'_>, out: &mut [f32]);
     /// Local objective `f_n(θ)`.
     fn objective(&self, theta: &[f32]) -> f64;
+    /// The worker's view of [`LocalProblem::block_layout`] — the threaded
+    /// runtime builds per-worker layer-wise compressors from this.
+    /// Contract: `block_layout().dims() == self.dims()`.
+    fn block_layout(&self) -> BlockLayout {
+        BlockLayout::single(self.dims())
+    }
 }
 
 /// A per-worker local problem the GADMM engine can drive. `worker` indexes
@@ -206,6 +283,15 @@ pub trait LocalProblem {
     /// Local objective `f_n(θ)` (used for the global loss metric).
     fn objective(&self, worker: usize, theta: &[f32]) -> f64;
 
+    /// The named block structure of the parameter vector, used to resolve
+    /// per-block compressor specs. Defaults to one block (`all`) covering
+    /// the whole vector; layered models (the MLP) override it.
+    ///
+    /// Contract: `block_layout().dims() == self.dims()`.
+    fn block_layout(&self) -> BlockLayout {
+        BlockLayout::single(self.dims())
+    }
+
     /// Hand out one disjoint mutable solver handle per worker so the engine
     /// can run a head/tail phase concurrently (`None` ⇒ the problem cannot
     /// be split and the engine stays on its sequential path — e.g. the
@@ -225,6 +311,26 @@ pub trait LocalProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn block_layout_offsets_and_lookup() {
+        let layout = BlockLayout::new(vec![("w1", 12), ("w2", 8), ("w3", 3)]);
+        assert_eq!(layout.dims(), 23);
+        assert_eq!(layout.blocks().len(), 3);
+        assert_eq!(layout.get("w2").map(|b| (b.offset, b.len)), Some((12, 8)));
+        assert_eq!(layout.get("nope"), None);
+        assert_eq!(layout.names(), "w1, w2, w3");
+
+        let single = BlockLayout::single(10);
+        assert_eq!(single.dims(), 10);
+        assert_eq!(single.get("all").map(|b| (b.offset, b.len)), Some((0, 10)));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate block name")]
+    fn block_layout_rejects_duplicate_names() {
+        let _ = BlockLayout::new(vec![("w", 4), ("w", 4)]);
+    }
 
     #[test]
     fn linkbuf_inline_then_spill() {

@@ -24,7 +24,7 @@
 //! fleet implements [`LocalProblem::split_workers`] and the parallel phase
 //! executor in `coordinator::engine` scales the solve across cores.
 
-use super::{LocalProblem, NeighborCtx, WorkerSolver};
+use super::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::linalg::vecops;
 use crate::util::rng::Rng;
 
@@ -217,6 +217,11 @@ impl DiagLinRegProblem {
 }
 
 impl LocalProblem for DiagLinRegProblem {
+    /// Single-block: the single consensus block `all` — one flat diagonal model.
+    fn block_layout(&self) -> BlockLayout {
+        BlockLayout::single(self.dims())
+    }
+
     fn dims(&self) -> usize {
         self.dims
     }

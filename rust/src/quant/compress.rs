@@ -14,7 +14,11 @@
 //!   skip the round entirely while the pending change is below a decaying
 //!   threshold;
 //! * [`TopK`] — top-k sparsification with error feedback (values in full
-//!   precision, `32 + k·(b_idx + 32)` bits per broadcast).
+//!   precision, `32 + k·(b_idx + 32)` bits per broadcast);
+//! * [`BlockCompressor`] — the layer-wise composition: one inner scheme
+//!   per parameter block of the model's `BlockLayout` (L-FGADMM-style
+//!   per-layer bit-widths), each block with its own mirror and error
+//!   feedback, framed as one multi-block broadcast.
 //!
 //! # The mirror / error-feedback contract
 //!
@@ -42,7 +46,7 @@
 //!    scheme owns its wire representation end to end.
 //!
 //! The trait is object-safe but the runtimes deliberately do **not** box
-//! it: [`CompressorKind`] enum-dispatches the four schemes so the per
+//! it: [`CompressorKind`] enum-dispatches the shipped schemes so the per
 //! broadcast hot path stays monomorphized and allocation-free (the same
 //! scratch-buffer discipline `StochasticQuantizer::quantize_into`
 //! established).
@@ -410,6 +414,175 @@ impl Compressor for TopK {
     }
 }
 
+/// One block of a [`BlockCompressor`]: a named contiguous span of the flat
+/// model driven by its own inner scheme (its own mirror, its own error
+/// feedback, its own bit accounting).
+#[derive(Clone, Debug)]
+pub struct BlockSlot {
+    name: String,
+    offset: usize,
+    len: usize,
+    comp: CompressorKind,
+}
+
+impl BlockSlot {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Layer-wise composition: one inner compressor per parameter block, in
+/// `model::BlockLayout` order. Blocks are compressed in layout order (so
+/// stochastic blocks consume the rng deterministically), each against its
+/// own per-block mirror; the composite maintains the concatenated mirror
+/// to honor the [`Compressor::theta_hat`] contract. A round is `Censored`
+/// only when *every* block censored (then no frame crosses the air);
+/// otherwise the frame carries one sub-payload per block, censored blocks
+/// as 0-bit `Payload::Censored` markers.
+#[derive(Clone, Debug)]
+pub struct BlockCompressor {
+    slots: Vec<BlockSlot>,
+    theta_hat: Vec<f32>,
+    /// Per-block outcome of the most recent round (telemetry/metrics).
+    last: Vec<CompressOutcome>,
+}
+
+impl BlockCompressor {
+    /// Compose from `(name, len, inner)` triples laid out contiguously
+    /// from offset 0 (the config layer derives these from the problem's
+    /// `BlockLayout`). Panics on an empty composition, an empty block, or
+    /// a nested `Blocks` inner — violations are config-layer bugs, not
+    /// user input (user input is validated into typed errors upstream).
+    pub fn new(blocks: Vec<(String, usize, CompressorKind)>) -> BlockCompressor {
+        assert!(!blocks.is_empty(), "block compressor needs at least one block");
+        let mut slots = Vec::with_capacity(blocks.len());
+        let mut offset = 0usize;
+        for (name, len, comp) in blocks {
+            assert!(len > 0, "block {name:?} is empty");
+            assert!(
+                !matches!(comp, CompressorKind::Blocks(_)),
+                "block compressors cannot nest"
+            );
+            assert_eq!(comp.dims(), len, "block {name:?}: inner dims mismatch");
+            slots.push(BlockSlot {
+                name,
+                offset,
+                len,
+                comp,
+            });
+            offset += len;
+        }
+        let last = vec![
+            CompressOutcome {
+                bits: 0,
+                radius: 0.0,
+                flag: Transmission::Censored,
+            };
+            slots.len()
+        ];
+        BlockCompressor {
+            slots,
+            theta_hat: vec![0.0; offset],
+            last,
+        }
+    }
+
+    pub fn blocks(&self) -> &[BlockSlot] {
+        &self.slots
+    }
+
+    /// Per-block outcomes of the most recent [`Compressor::compress_into`]
+    /// call, in layout order (drives the per-block `Compress` telemetry
+    /// events and the `broadcast_bits_per_block` metric).
+    pub fn last_outcomes(&self) -> &[CompressOutcome] {
+        &self.last
+    }
+}
+
+impl Compressor for BlockCompressor {
+    fn dims(&self) -> usize {
+        self.theta_hat.len()
+    }
+
+    fn theta_hat(&self) -> &[f32] {
+        &self.theta_hat
+    }
+
+    fn reset_to(&mut self, theta: &[f32]) {
+        assert_eq!(theta.len(), self.theta_hat.len(), "dimension mismatch");
+        for s in &mut self.slots {
+            s.comp.reset_to(&theta[s.offset..s.offset + s.len]);
+        }
+        self.theta_hat.copy_from_slice(theta);
+    }
+
+    fn compress_into(
+        &mut self,
+        theta: &[f32],
+        rng: &mut Rng,
+        view: &mut [f32],
+    ) -> CompressOutcome {
+        let d = self.theta_hat.len();
+        assert_eq!(theta.len(), d, "dimension mismatch");
+        assert_eq!(view.len(), d, "view dimension mismatch");
+        let mut bits = 0u64;
+        let mut radius = 0.0f32;
+        let mut any_sent = false;
+        for (s, last) in self.slots.iter_mut().zip(&mut self.last) {
+            let span = s.offset..s.offset + s.len;
+            let out = s
+                .comp
+                .compress_into(&theta[span.clone()], rng, &mut view[span.clone()]);
+            self.theta_hat[span].copy_from_slice(s.comp.theta_hat());
+            if out.sent() {
+                bits += out.bits;
+                any_sent = true;
+            }
+            radius = radius.max(out.radius);
+            *last = out;
+        }
+        CompressOutcome {
+            bits,
+            radius,
+            flag: if any_sent {
+                Transmission::Sent
+            } else {
+                Transmission::Censored
+            },
+        }
+    }
+
+    fn last_payload(&self) -> Payload {
+        Payload::Blocks(
+            self.slots
+                .iter()
+                .zip(&self.last)
+                .map(|(s, out)| crate::comm::BlockMsg {
+                    dims: s.len,
+                    payload: if out.sent() {
+                        s.comp.last_payload()
+                    } else {
+                        Payload::Censored
+                    },
+                })
+                .collect(),
+        )
+    }
+}
+
 /// Enum dispatch over the shipped schemes, so runtime structs hold a
 /// concrete type (monomorphized hot path, no `Box<dyn Compressor>`).
 /// Constructed from the config layer's `CompressorConfig::build`.
@@ -419,6 +592,7 @@ pub enum CompressorKind {
     FullPrecision(FullPrecision),
     Censored(Censored<StochasticQuantizer>),
     TopK(TopK),
+    Blocks(Box<BlockCompressor>),
 }
 
 impl CompressorKind {
@@ -435,6 +609,17 @@ impl CompressorKind {
             CompressorKind::FullPrecision(_) => "full",
             CompressorKind::Censored(_) => "censored",
             CompressorKind::TopK(_) => "topk",
+            CompressorKind::Blocks(_) => "layers",
+        }
+    }
+
+    /// The per-block composition, when this is a layer-wise compressor
+    /// (`None` for the flat schemes). Drivers use it to fan out per-block
+    /// telemetry without touching the flat hot path.
+    pub fn as_blocks(&self) -> Option<&BlockCompressor> {
+        match self {
+            CompressorKind::Blocks(b) => Some(b),
+            _ => None,
         }
     }
 }
@@ -446,6 +631,7 @@ impl Compressor for CompressorKind {
             CompressorKind::FullPrecision(c) => c.dims(),
             CompressorKind::Censored(c) => c.dims(),
             CompressorKind::TopK(c) => c.dims(),
+            CompressorKind::Blocks(c) => c.dims(),
         }
     }
 
@@ -455,6 +641,7 @@ impl Compressor for CompressorKind {
             CompressorKind::FullPrecision(c) => c.theta_hat(),
             CompressorKind::Censored(c) => c.theta_hat(),
             CompressorKind::TopK(c) => c.theta_hat(),
+            CompressorKind::Blocks(c) => c.theta_hat(),
         }
     }
 
@@ -464,6 +651,7 @@ impl Compressor for CompressorKind {
             CompressorKind::FullPrecision(c) => c.reset_to(theta),
             CompressorKind::Censored(c) => c.reset_to(theta),
             CompressorKind::TopK(c) => c.reset_to(theta),
+            CompressorKind::Blocks(c) => c.reset_to(theta),
         }
     }
 
@@ -478,6 +666,7 @@ impl Compressor for CompressorKind {
             CompressorKind::FullPrecision(c) => c.compress_into(theta, rng, view),
             CompressorKind::Censored(c) => c.compress_into(theta, rng, view),
             CompressorKind::TopK(c) => c.compress_into(theta, rng, view),
+            CompressorKind::Blocks(c) => c.compress_into(theta, rng, view),
         }
     }
 
@@ -487,6 +676,7 @@ impl Compressor for CompressorKind {
             CompressorKind::FullPrecision(c) => c.last_payload(),
             CompressorKind::Censored(c) => c.last_payload(),
             CompressorKind::TopK(c) => c.last_payload(),
+            CompressorKind::Blocks(c) => c.last_payload(),
         }
     }
 }
@@ -668,6 +858,157 @@ mod tests {
         let _ = TopK::new(8, 0.0);
     }
 
+    fn three_block_kind() -> CompressorKind {
+        // 10 quantized + 4 full + 6 top-k coordinates (d = 20).
+        CompressorKind::Blocks(Box::new(BlockCompressor::new(vec![
+            (
+                "w1".to_string(),
+                10,
+                CompressorKind::Stochastic(StochasticQuantizer::new(10, BitPolicy::Fixed(4))),
+            ),
+            (
+                "w2".to_string(),
+                4,
+                CompressorKind::FullPrecision(FullPrecision::new(4)),
+            ),
+            ("w3".to_string(), 6, CompressorKind::TopK(TopK::new(6, 0.5))),
+        ])))
+    }
+
+    #[test]
+    fn block_compressor_sums_bits_and_keeps_mirror_consistent() {
+        let d = 20;
+        let mut c = three_block_kind();
+        let mut m = Mirror::new(d);
+        let mut rng = rt(13);
+        let mut view = vec![0.0f32; d];
+        let mut theta = vec![0.0f32; d];
+        for step in 0..20 {
+            for (i, t) in theta.iter_mut().enumerate() {
+                *t = ((step * d + i) as f32 * 0.37).sin() * (1.0 + i as f32 * 0.05);
+            }
+            let out = c.compress_into(&theta, &mut rng, &mut view);
+            assert!(out.sent());
+            // b·d + 64 for the quantized block, 32·d for full, sparse for top-k.
+            assert_eq!(
+                out.bits,
+                payload_bits(4, 10) + 32 * 4 + (32 + 3 * (16 + 32)),
+                "step {step}"
+            );
+            let payload = c.last_payload();
+            assert_eq!(payload.bits(), out.bits, "step {step}");
+            // Receiver mirror fed the multi-block payload stays in
+            // bit-agreement with the sender mirror and the view.
+            m.apply_payload(&payload);
+            assert_eq!(m.theta_hat(), c.theta_hat(), "step {step}");
+            assert_eq!(view.as_slice(), c.theta_hat(), "step {step}");
+            // The full-precision block is exact.
+            assert_eq!(&view[10..14], &theta[10..14], "step {step}");
+        }
+        let blocks = c.as_blocks().expect("layer-wise kind");
+        assert_eq!(blocks.last_outcomes().len(), 3);
+        assert_eq!(blocks.blocks()[1].name(), "w2");
+        assert_eq!(blocks.blocks()[2].offset(), 14);
+    }
+
+    #[test]
+    fn block_compressor_matches_per_block_references() {
+        // A layer-wise composition must be exactly its inner schemes run
+        // per block, sharing one rng stream in layout order.
+        let mut c = BlockCompressor::new(vec![
+            (
+                "a".to_string(),
+                8,
+                CompressorKind::Stochastic(StochasticQuantizer::new(8, BitPolicy::Fixed(2))),
+            ),
+            (
+                "b".to_string(),
+                5,
+                CompressorKind::Stochastic(StochasticQuantizer::new(5, BitPolicy::Fixed(6))),
+            ),
+        ]);
+        let mut ra = StochasticQuantizer::new(8, BitPolicy::Fixed(2));
+        let mut rb = StochasticQuantizer::new(5, BitPolicy::Fixed(6));
+        let mut rng = rt(21);
+        let mut rng_ref = rt(21);
+        let mut view = vec![0.0f32; 13];
+        let mut va = vec![0.0f32; 8];
+        let mut vb = vec![0.0f32; 5];
+        for step in 0..15 {
+            let theta: Vec<f32> = (0..13).map(|i| ((step * 13 + i) as f32 * 0.29).cos()).collect();
+            let _ = c.compress_into(&theta, &mut rng, &mut view);
+            let _ = ra.quantize_into(&theta[..8], &mut rng_ref, &mut va);
+            let _ = rb.quantize_into(&theta[8..], &mut rng_ref, &mut vb);
+            assert_eq!(&view[..8], va.as_slice(), "step {step}");
+            assert_eq!(&view[8..], vb.as_slice(), "step {step}");
+        }
+    }
+
+    #[test]
+    fn block_compressor_censors_only_when_all_blocks_censor() {
+        let mk = || {
+            BlockCompressor::new(vec![
+                (
+                    "a".to_string(),
+                    2,
+                    CompressorKind::Censored(Censored::new(
+                        StochasticQuantizer::new(2, BitPolicy::Fixed(2)),
+                        0.5,
+                        1.0,
+                    )),
+                ),
+                (
+                    "b".to_string(),
+                    2,
+                    CompressorKind::Censored(Censored::new(
+                        StochasticQuantizer::new(2, BitPolicy::Fixed(2)),
+                        0.5,
+                        1.0,
+                    )),
+                ),
+            ])
+        };
+        let mut rng = rt(3);
+        let mut view = vec![0.0f32; 4];
+
+        // Both blocks below threshold: the whole round is censored.
+        let mut c = mk();
+        let out = c.compress_into(&[0.1, -0.1, 0.2, 0.0], &mut rng, &mut view);
+        assert_eq!(out.flag, Transmission::Censored);
+        assert_eq!(out.bits, 0);
+        assert!(matches!(c.last_payload(), Payload::Blocks(ref b)
+            if b.iter().all(|m| matches!(m.payload, Payload::Censored))));
+
+        // One block above threshold: sent, with the quiet block a 0-bit
+        // censored marker inside the multi-block payload.
+        let mut c = mk();
+        let out = c.compress_into(&[0.1, -0.1, 2.0, 0.0], &mut rng, &mut view);
+        assert_eq!(out.flag, Transmission::Sent);
+        assert_eq!(out.bits, payload_bits(2, 2));
+        match c.last_payload() {
+            Payload::Blocks(b) => {
+                assert!(matches!(b[0].payload, Payload::Censored));
+                assert!(matches!(b[1].payload, Payload::Quantized(_)));
+            }
+            other => panic!("expected Blocks payload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot nest")]
+    fn block_compressor_rejects_nesting() {
+        let inner = BlockCompressor::new(vec![(
+            "a".to_string(),
+            1,
+            CompressorKind::FullPrecision(FullPrecision::new(1)),
+        )]);
+        let _ = BlockCompressor::new(vec![(
+            "outer".to_string(),
+            1,
+            CompressorKind::Blocks(Box::new(inner)),
+        )]);
+    }
+
     #[test]
     fn kind_names_and_placeholder() {
         assert_eq!(CompressorKind::placeholder().name(), "full");
@@ -681,5 +1022,6 @@ mod tests {
             .name(),
             "censored"
         );
+        assert_eq!(three_block_kind().name(), "layers");
     }
 }

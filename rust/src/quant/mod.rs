@@ -393,38 +393,67 @@ impl Mirror {
 
     /// Apply one received message: `θ̂ ← θ̂ + Δ q − R·1` (eq. (13)).
     pub fn apply(&mut self, msg: &QuantizedMsg) {
-        assert_eq!(msg.levels.len(), self.theta_hat.len());
-        if msg.radius <= 0.0 {
-            return;
-        }
-        let num_levels = ((1u32 << msg.bits) - 1) as f32;
-        let delta = 2.0 * msg.radius / num_levels;
-        for (t, &q) in self.theta_hat.iter_mut().zip(&msg.levels) {
-            *t = *t + delta * q as f32 - msg.radius;
-        }
+        apply_quantized_slice(&mut self.theta_hat, msg);
     }
 
     /// Apply one received sparse (top-k) message: `θ̂[i] += v` per kept
     /// coordinate — the exact addition the sender performed on its mirror,
     /// so both ends stay in bit-agreement.
     pub fn apply_sparse(&mut self, msg: &SparseMsg) {
-        assert_eq!(msg.dims, self.theta_hat.len());
-        assert_eq!(msg.indices.len(), msg.values.len());
-        for (&i, &v) in msg.indices.iter().zip(&msg.values) {
-            self.theta_hat[i as usize] += v;
-        }
+        apply_sparse_slice(&mut self.theta_hat, msg);
     }
 
     /// Apply any broadcast payload to this mirror — the receiver half of
     /// the [`compress::Compressor`] contract. `Censored` and `Stop` leave
     /// the mirror untouched (a censored round *means* "reuse your mirror").
+    /// A `Blocks` payload applies each sub-payload to its block's span in
+    /// `model::BlockLayout` order.
     pub fn apply_payload(&mut self, payload: &Payload) {
-        match payload {
-            Payload::Quantized(q) => self.apply(q),
-            Payload::Full(v) => self.reset_to(v),
-            Payload::Sparse(s) => self.apply_sparse(s),
-            Payload::Censored | Payload::Stop => {}
+        apply_payload_slice(&mut self.theta_hat, payload);
+    }
+}
+
+/// Eq. (13) on an arbitrary span: `θ̂ ← θ̂ + Δ q − R·1`. The slice may be
+/// one block of a larger mirror.
+pub fn apply_quantized_slice(theta_hat: &mut [f32], msg: &QuantizedMsg) {
+    assert_eq!(msg.levels.len(), theta_hat.len());
+    if msg.radius <= 0.0 {
+        return;
+    }
+    let num_levels = ((1u32 << msg.bits) - 1) as f32;
+    let delta = 2.0 * msg.radius / num_levels;
+    for (t, &q) in theta_hat.iter_mut().zip(&msg.levels) {
+        *t = *t + delta * q as f32 - msg.radius;
+    }
+}
+
+/// Sparse (top-k) application on an arbitrary span — indices are relative
+/// to the span (block-local for `Payload::Blocks` members).
+pub fn apply_sparse_slice(theta_hat: &mut [f32], msg: &SparseMsg) {
+    assert_eq!(msg.dims, theta_hat.len());
+    assert_eq!(msg.indices.len(), msg.values.len());
+    for (&i, &v) in msg.indices.iter().zip(&msg.values) {
+        theta_hat[i as usize] += v;
+    }
+}
+
+/// Apply any payload to a mirror span (see [`Mirror::apply_payload`]).
+/// Panics if a `Blocks` payload's block dims do not tile the span — block
+/// structure is negotiated out-of-band via the problem's `BlockLayout`.
+pub fn apply_payload_slice(theta_hat: &mut [f32], payload: &Payload) {
+    match payload {
+        Payload::Quantized(q) => apply_quantized_slice(theta_hat, q),
+        Payload::Full(v) => theta_hat.copy_from_slice(v),
+        Payload::Sparse(s) => apply_sparse_slice(theta_hat, s),
+        Payload::Blocks(blocks) => {
+            let mut offset = 0usize;
+            for b in blocks {
+                apply_payload_slice(&mut theta_hat[offset..offset + b.dims], &b.payload);
+                offset += b.dims;
+            }
+            assert_eq!(offset, theta_hat.len(), "block dims must tile the model");
         }
+        Payload::Censored | Payload::Stop => {}
     }
 }
 

@@ -53,7 +53,8 @@ use crate::model::linreg::LinRegProblem;
 use crate::model::logreg::{LogRegProblem, LogRegSpec};
 use crate::model::mlp::{MlpDims, MlpProblem};
 use crate::model::scale::DiagLinRegProblem;
-use crate::model::{LocalProblem, NeighborCtx, WorkerSolver};
+use crate::coordinator::residuals::RhoPolicy;
+use crate::model::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::net::geometry::collinear;
 use crate::net::topology::{Topology, TopologyKind};
 
@@ -196,6 +197,10 @@ impl LocalProblem for Box<dyn SessionProblem> {
         (**self).objective(worker, theta)
     }
 
+    fn block_layout(&self) -> BlockLayout {
+        (**self).block_layout()
+    }
+
     fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
         (**self).split_workers()
     }
@@ -222,6 +227,9 @@ macro_rules! forward_local_problem {
             }
             fn objective(&self, worker: usize, theta: &[f32]) -> f64 {
                 self.problem.objective(worker, theta)
+            }
+            fn block_layout(&self) -> BlockLayout {
+                self.problem.block_layout()
             }
             fn split_workers(&mut self) -> Option<Vec<&mut dyn WorkerSolver>> {
                 self.problem.split_workers()
@@ -639,6 +647,13 @@ impl Session {
         self
     }
 
+    /// How ρ evolves across iterations (fixed, or residual-balance
+    /// adaptive); honored identically by all three drivers.
+    pub fn rho_policy(mut self, policy: RhoPolicy) -> Session {
+        self.cfg.rho_policy = policy;
+        self
+    }
+
     pub fn threads(mut self, threads: usize) -> Session {
         self.cfg.gadmm.threads = threads;
         self
@@ -818,6 +833,7 @@ impl Session {
             eval_every: cfg.eval_every.unwrap_or(eval_default),
             stop_below,
             stop_above,
+            rho_policy: cfg.rho_policy,
         });
         Resolved {
             problem: cfg.problem,
@@ -907,6 +923,15 @@ impl Session {
             r.gadmm.workers,
             "registry problem size must match the session's worker count"
         );
+        // Per-block compressor specs must match the problem's actual
+        // block structure — a typo'd or missing block name is a typed
+        // config error here, before any driver is built.
+        r.gadmm
+            .compressor
+            .validate_blocks(&problem.block_layout())
+            .map_err(|why| {
+                anyhow::anyhow!("compressor does not fit problem {}: {why}", r.problem.name())
+            })?;
         Ok(match r.driver {
             DriverKind::Engine => Box::new(EngineDriver::new(
                 r.gadmm.clone(),
@@ -1051,8 +1076,7 @@ mod tests {
             .options(RunOptions {
                 iterations: 10,
                 eval_every: 0,
-                stop_below: None,
-                stop_above: None,
+                ..RunOptions::default()
             })
             .run()
             .unwrap_err();
@@ -1131,8 +1155,7 @@ mod tests {
             .options(RunOptions {
                 iterations: 3,
                 eval_every: 1,
-                stop_below: None,
-                stop_above: None,
+                ..RunOptions::default()
             })
             .telemetry(TelemetryOptions::jsonl(&jsonl).with_chrome(&chrome))
             .run()
@@ -1145,6 +1168,85 @@ mod tests {
         assert!(chrome_text.contains("traceEvents"), "{chrome_text}");
         let _ = std::fs::remove_file(&jsonl);
         let _ = std::fs::remove_file(&chrome);
+    }
+
+    #[test]
+    fn per_block_spec_with_unknown_block_is_a_typed_error() {
+        let comp = CompressorConfig::parse(
+            "layers:w1=stochastic@4,bogus=full",
+            crate::config::QuantConfig::default(),
+        )
+        .unwrap();
+        let err = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .compressor(comp)
+            .run()
+            .unwrap_err()
+            .to_string();
+        // The error must name the problem, the offending block, and the
+        // valid block names.
+        assert!(err.contains("linreg"), "{err}");
+        assert!(err.contains("w1") || err.contains("bogus"), "{err}");
+        assert!(err.contains("all"), "{err}");
+    }
+
+    #[test]
+    fn single_block_layers_spec_matches_flat_run_through_the_session() {
+        let flat = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .iterations(30)
+            .seed(9)
+            .run()
+            .unwrap();
+        // `layers:all=stochastic@2` goes through the genuine per-block
+        // composition (Blocks compressor, v3 frames) yet must reproduce
+        // the flat stochastic default bit-for-bit.
+        let comp =
+            CompressorConfig::parse("layers:all=stochastic@2", crate::config::QuantConfig::default())
+                .unwrap();
+        let layered = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .compressor(comp)
+            .iterations(30)
+            .seed(9)
+            .run()
+            .unwrap();
+        assert_eq!(flat.comm.bits, layered.comm.bits);
+        assert_eq!(flat.thetas, layered.thetas);
+        assert_eq!(flat.final_value().to_bits(), layered.final_value().to_bits());
+    }
+
+    #[test]
+    fn rho_policy_threads_from_config_into_run_options() {
+        let opts = Session::new(ProblemKind::LinReg)
+            .rho_policy(RhoPolicy::residual_balance())
+            .resolved_options();
+        assert_eq!(opts.rho_policy, RhoPolicy::residual_balance());
+        // Adaptive ρ yields a different (still convergent) trajectory.
+        let fixed = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .iterations(30)
+            .seed(11)
+            .run()
+            .unwrap();
+        let adaptive = Session::new(ProblemKind::LinReg)
+            .quick(true)
+            .workers(4)
+            .iterations(30)
+            .seed(11)
+            .rho_policy(RhoPolicy::residual_balance())
+            .run()
+            .unwrap();
+        assert!(adaptive.final_value().is_finite());
+        assert!(
+            !adaptive.residuals.is_empty(),
+            "adaptive runs must report residual points"
+        );
+        let _ = fixed;
     }
 
     #[test]

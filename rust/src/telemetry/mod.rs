@@ -98,6 +98,21 @@ pub enum Event {
         radius: f32,
         censored: bool,
     },
+    /// One parameter block's share of a layer-wise ([`Payload::Blocks`])
+    /// broadcast — emitted after the worker's flat [`Event::Compress`]
+    /// record, one per block in layout order, by every driver. Flat
+    /// schemes never emit it, so single-block trace pins are unaffected.
+    ///
+    /// [`Payload::Blocks`]: crate::comm::Payload::Blocks
+    CompressBlock {
+        iteration: u64,
+        worker: usize,
+        /// Block name from the problem's `BlockLayout` (e.g. `"w1"`).
+        block: String,
+        bits: u64,
+        radius: f32,
+        censored: bool,
+    },
     /// Sim transport: a wire frame reached its peer after `attempts`
     /// transmissions (attempts > 1 ⇒ ARQ retransmits happened).
     FrameDelivered {
@@ -134,6 +149,7 @@ impl Event {
             Event::PhaseStart { .. } => "phase_start",
             Event::PhaseEnd { .. } => "phase_end",
             Event::Compress { .. } => "compress",
+            Event::CompressBlock { .. } => "compress_block",
             Event::FrameDelivered { .. } => "frame_delivered",
             Event::FrameAbandoned { .. } => "frame_abandoned",
             Event::Dropout { .. } => "dropout",
@@ -164,6 +180,7 @@ impl Event {
             | Event::PhaseStart { iteration, .. }
             | Event::PhaseEnd { iteration, .. }
             | Event::Compress { iteration, .. }
+            | Event::CompressBlock { iteration, .. }
             | Event::FrameDelivered { iteration, .. }
             | Event::FrameAbandoned { iteration, .. }
             | Event::Dropout { iteration, .. }
@@ -190,6 +207,20 @@ impl Event {
                 ..
             } => {
                 obj.set("worker", Json::Num(*worker as f64));
+                obj.set("bits", Json::Num(*bits as f64));
+                obj.set("radius", Json::Num(*radius as f64));
+                obj.set("censored", Json::Bool(*censored));
+            }
+            Event::CompressBlock {
+                worker,
+                block,
+                bits,
+                radius,
+                censored,
+                ..
+            } => {
+                obj.set("worker", Json::Num(*worker as f64));
+                obj.set("block", Json::Str(block.clone()));
                 obj.set("bits", Json::Num(*bits as f64));
                 obj.set("radius", Json::Num(*radius as f64));
                 obj.set("censored", Json::Bool(*censored));

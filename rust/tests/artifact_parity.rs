@@ -141,6 +141,7 @@ fn engine_converges_identically_on_both_backends() {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
 
     let native_gap = {

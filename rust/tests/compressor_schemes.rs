@@ -144,6 +144,7 @@ fn assert_threaded_matches_engine(compressor: CompressorConfig, iters: u64, seed
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
 
     let problem = LinRegProblem::new(&data, &partition, rho);

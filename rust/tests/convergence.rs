@@ -108,6 +108,7 @@ fn qgadmm_beats_gadmm_on_bits_by_payload_ratio() {
             eval_every: 1,
             stop_below: Some(target),
             stop_above: None,
+            ..RunOptions::default()
         };
         let rep = eng.run(&opts, |e| (e.global_objective() - f_star).abs());
         rep.recorder.bits_to(target).expect("reached")

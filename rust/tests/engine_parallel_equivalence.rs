@@ -128,7 +128,7 @@ fn censored_parallel_matches_sequential() {
         tau0: 0.05,
         decay: 0.995,
     };
-    let seq = linreg_engine_with(6, comp, 1);
+    let seq = linreg_engine_with(6, comp.clone(), 1);
     let par = linreg_engine_with(6, comp, 4);
     assert_equal_runs(seq, par, 50, "censored Q-GADMM");
 }
@@ -136,7 +136,7 @@ fn censored_parallel_matches_sequential() {
 #[test]
 fn topk_parallel_matches_sequential() {
     let comp = CompressorConfig::TopK { frac: 0.4 };
-    let seq = linreg_engine_with(6, comp, 1);
+    let seq = linreg_engine_with(6, comp.clone(), 1);
     let par = linreg_engine_with(6, comp, 4);
     assert_equal_runs(seq, par, 50, "top-k GADMM");
 }

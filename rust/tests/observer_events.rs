@@ -60,6 +60,7 @@ fn run_with(
             eval_every: ITERS,
             stop_below: None,
             stop_above: None,
+            ..RunOptions::default()
         })
         .run_observed(observer)
         .unwrap_or_else(|e| panic!("{} failed: {e}", kind.name()))

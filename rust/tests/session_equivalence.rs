@@ -110,12 +110,13 @@ fn engine_threaded_and_sim_agree_per_scheme_and_topology() {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     for topology in [TopologyKind::Line, TopologyKind::Ring, TopologyKind::Star] {
         for (scheme, compressor) in schemes() {
             let name = format!("{scheme} on {}", topology.name());
             let run = |driver| {
-                session(ProblemKind::LinReg, driver, topology, compressor, opts.clone())
+                session(ProblemKind::LinReg, driver, topology, compressor.clone(), opts.clone())
                     .run()
                     .unwrap_or_else(|e| panic!("{name}: {driver:?} failed: {e}"))
             };
@@ -140,6 +141,7 @@ fn early_stopping_is_uniform_across_drivers() {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let probe = session(
         ProblemKind::LinReg,
@@ -163,6 +165,7 @@ fn early_stopping_is_uniform_across_drivers() {
         eval_every: 1,
         stop_below: Some(target),
         stop_above: None,
+        ..RunOptions::default()
     };
     let run = |driver| {
         session(
@@ -217,6 +220,7 @@ fn observer_event_streams_are_identical_across_engine_and_threaded() {
         eval_every: 2,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let run = |driver| {
         let mut spy = Spy::default();
@@ -252,6 +256,7 @@ fn logreg_agrees_across_drivers() {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let run = |driver| {
         session(

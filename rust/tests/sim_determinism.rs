@@ -61,6 +61,7 @@ fn assert_two_runs_identical(sim_cfg: SimConfig, quant: Option<QuantConfig>, ite
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let run = || {
         let (_, mut sim) = build_sim(quant, sim_cfg.clone(), 6, 2024);
@@ -138,6 +139,7 @@ fn run_equivalence_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, 
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
 
     // Deterministic engine.

@@ -68,6 +68,7 @@ fn drivers_emit_one_golden_trace_on_an_ideal_network() {
         eval_every: 2,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let engine = golden_run(DriverKind::Engine, opts.clone());
     let threaded = golden_run(DriverKind::Threaded, opts.clone());
@@ -122,6 +123,7 @@ fn early_stop_cascade_traces_identically() {
         eval_every: 2,
         stop_below: Some(f64::MAX),
         stop_above: None,
+        ..RunOptions::default()
     };
     let engine = golden_run(DriverKind::Engine, opts.clone());
     let threaded = golden_run(DriverKind::Threaded, opts.clone());

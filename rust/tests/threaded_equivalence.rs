@@ -40,6 +40,7 @@ fn run_pair(quant: Option<QuantConfig>, workers: usize, iters: u64, seed: u64) {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let eng_report = engine.run(&opts, |e| e.global_objective());
 

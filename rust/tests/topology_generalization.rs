@@ -272,6 +272,7 @@ fn threaded_ring_matches_engine_bit_for_bit() {
         eval_every: 1,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let eng_report = engine.run(&opts, |e| e.global_objective());
 
