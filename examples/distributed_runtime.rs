@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 1,
         stop_below: Some(1e-4),
         stop_above: None,
+        ..RunOptions::default()
     };
     let report = run_threaded(&cfg, solvers, &opts, 21, |objective_sum, _thetas| {
         (objective_sum - f_star).abs()

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 5,
         stop_below: None,
         stop_above: None,
+        ..RunOptions::default()
     };
     let report = engine.run(&opts, |eng| {
         let thetas: Vec<Vec<f32>> = (0..eng.workers())

@@ -58,6 +58,7 @@ fn run_once(
         eval_every: 1,
         stop_below: Some(target),
         stop_above: None,
+        ..RunOptions::default()
     };
     let f_star = world.f_star;
     sim.run(&opts, |s| (s.global_objective() - f_star).abs())

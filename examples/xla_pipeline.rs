@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 1,
         stop_below: Some(1e-3),
         stop_above: None,
+        ..RunOptions::default()
     };
     let t0 = std::time::Instant::now();
     let report = engine.run(&opts, |e| (e.global_objective() - f_star).abs());

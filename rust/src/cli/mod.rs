@@ -58,7 +58,7 @@ USAGE:
 
 COMMON OPTIONS (also accepted from --config <file> as key = value lines):
   --problem P          local problem: linreg (default), diag-linreg, mlp, logreg
-  --driver D           runtime: engine (default), threaded, sim
+  --driver D           runtime: engine (default), threaded, sim, tcp
   --eval_every K       metric evaluation cadence (>= 1; default per problem:
                        linreg/logreg 1, mlp 5, diag-linreg 10)
   --workers N          number of workers (linreg default 50, dnn/logreg 10,
@@ -116,6 +116,18 @@ SIMULATOR OPTIONS (the discrete-event network model; `simulate`, fig_sim):
   --sim_seed S         simulator-side randomness seed
   --trace BOOL         record the full event trace (see also --trace PATH
                        under COMMON OPTIONS)
+
+TCP OPTIONS (`--driver tcp`; real sockets over the versioned wire format):
+  --listen ADDR        multi-process mode: this process hosts the worker
+                       whose slot in --peers equals ADDR; omit for the
+                       default single-process loopback cluster
+  --peers LIST         all worker addresses in position order, e.g.
+                       \"127.0.0.1:9000,127.0.0.1:9001\" (requires --listen)
+  --tcp_timeout_ms N   socket receive/connect deadline (default 60000)
+  --tcp_faults MODE    fault handling: announced (default; scheduled
+                       dropouts, bit-identical to the simulator) or
+                       detected (peers discover crashes via broken
+                       sockets and re-stitch at a negotiated boundary)
 ";
 
 /// Parse `argv[1..]`.

@@ -3,9 +3,9 @@
 //! [`crate::quant::bitpack`] serializes a quantized *payload*; this module
 //! frames any [`Payload`] variant — full precision, quantized, sparse,
 //! censored, or control — into the byte stream a real link layer would
-//! carry, so the simulator (`sim`) and any future socket transport move
-//! exactly the bytes the paper's bit accounting claims, plus a fixed,
-//! documented frame overhead.
+//! carry, so the simulator (`sim`) and the real-socket transport
+//! (`net::tcp`, via [`FrameReader`]) move exactly the bytes the paper's
+//! bit accounting claims, plus a fixed, documented frame overhead.
 //!
 //! Frame layout (little-endian), wire format version 3:
 //! ```text
@@ -497,6 +497,56 @@ fn decode_blocks(body: &[u8], dims: usize) -> Result<Payload, WireError> {
     Ok(Payload::Blocks(blocks))
 }
 
+/// Incremental frame assembly over a byte stream that delivers arbitrary
+/// chunks (a TCP socket): [`FrameReader::push`] appends whatever the
+/// transport produced, and [`FrameReader::next_frame`] yields complete
+/// messages as frame boundaries are reached.
+///
+/// [`WireError::Truncated`] is the accumulation signal — `decode_frame`
+/// reports exactly how many bytes a complete frame needs, so a partial
+/// read is "not yet", never an error. Every *other* [`WireError`] is
+/// sticky corruption: once framing is lost on a byte stream there is no
+/// resynchronization point, so the caller must drop the connection (the
+/// TCP driver does).
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Append a chunk of bytes read from the transport.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Decode the next complete frame, if the buffer holds one. `dims` is
+    /// the receiver's model dimension, as in [`decode_frame`]. Returns
+    /// `Ok(None)` when more bytes are needed; any `Err` poisons the
+    /// stream.
+    pub fn next_frame(&mut self, dims: usize) -> Result<Option<Message>, WireError> {
+        if self.buf.is_empty() {
+            return Ok(None);
+        }
+        match decode_frame(&self.buf, dims) {
+            Ok((msg, used)) => {
+                self.buf.drain(..used);
+                Ok(Some(msg))
+            }
+            Err(WireError::Truncated { .. }) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -885,5 +935,98 @@ mod tests {
         // Standard check value for "123456789" under CRC-32/IEEE.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_reader_reassembles_byte_at_a_time() {
+        let msg = Message {
+            from: 2,
+            round: 7,
+            payload: Payload::Full(vec![1.0, -2.0, 3.5]),
+        };
+        let bytes = encode_frame(&msg);
+        let mut reader = FrameReader::new();
+        for (i, b) in bytes.iter().enumerate() {
+            reader.push(&[*b]);
+            let got = reader.next_frame(3).unwrap();
+            if i + 1 < bytes.len() {
+                assert!(got.is_none(), "frame completed early at byte {i}");
+            } else {
+                let back = got.expect("last byte completes the frame");
+                assert_eq!(back.from, 2);
+                assert_eq!(back.round, 7);
+                assert_payload_eq(&back.payload, &msg.payload);
+            }
+        }
+        assert_eq!(reader.buffered(), 0);
+        assert!(reader.next_frame(3).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_reader_splits_multi_frame_chunks_at_every_boundary() {
+        // Three back-to-back frames pushed as two chunks, split at every
+        // possible offset: the reader must always yield exactly the three
+        // messages in order, regardless of how the transport chunked them.
+        let msgs = [
+            Message {
+                from: 0,
+                round: 1,
+                payload: Payload::Quantized(QuantizedMsg {
+                    bits: 3,
+                    radius: 1.0,
+                    levels: vec![0, 7, 3],
+                }),
+            },
+            Message {
+                from: 1,
+                round: 1,
+                payload: Payload::Censored,
+            },
+            Message {
+                from: 2,
+                round: 2,
+                payload: Payload::Full(vec![0.5, -0.5, 9.0]),
+            },
+        ];
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode_frame(m));
+        }
+        for split in 0..=stream.len() {
+            let mut reader = FrameReader::new();
+            reader.push(&stream[..split]);
+            let mut got = Vec::new();
+            while let Some(m) = reader.next_frame(3).unwrap() {
+                got.push(m);
+            }
+            reader.push(&stream[split..]);
+            while let Some(m) = reader.next_frame(3).unwrap() {
+                got.push(m);
+            }
+            assert_eq!(got.len(), msgs.len(), "split at {split}");
+            for (g, m) in got.iter().zip(&msgs) {
+                assert_eq!(g.from, m.from);
+                assert_eq!(g.round, m.round);
+                assert_payload_eq(&g.payload, &m.payload);
+            }
+            assert_eq!(reader.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn frame_reader_surfaces_corruption_as_a_typed_error() {
+        let msg = Message {
+            from: 1,
+            round: 3,
+            payload: Payload::Full(vec![2.0]),
+        };
+        let mut bytes = encode_frame(&msg);
+        *bytes.last_mut().unwrap() ^= 0x01;
+        let mut reader = FrameReader::new();
+        reader.push(&bytes);
+        assert!(matches!(
+            reader.next_frame(1),
+            Err(WireError::ChecksumMismatch { .. })
+        ));
     }
 }

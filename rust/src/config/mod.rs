@@ -554,6 +554,92 @@ impl Default for NetConfig {
     }
 }
 
+/// How the real-socket TCP driver (`net::tcp`) handles worker crashes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TcpFaultMode {
+    /// Scheduled dropouts known to every worker up front — the simulator's
+    /// fault model, reproduced bit-for-bit: every survivor applies the
+    /// schedule at the same iteration boundary, so recovery needs no
+    /// detection round-trips.
+    #[default]
+    Announced,
+    /// Crash detection from socket EOF: the victim simply dies and the
+    /// survivors converge on a common re-stitch iteration through shared
+    /// cluster state. Recovers and converges, but the extra stale rounds
+    /// mean it is not bit-pinned to the simulator.
+    Detected,
+}
+
+impl TcpFaultMode {
+    /// Parse a `tcp_faults=` value. The error names the invalid value and
+    /// the valid set.
+    pub fn parse(text: &str) -> Result<TcpFaultMode, String> {
+        match text.trim() {
+            "announced" | "scheduled" => Ok(TcpFaultMode::Announced),
+            "detected" | "crash" => Ok(TcpFaultMode::Detected),
+            other => Err(format!(
+                "unknown tcp fault mode {other:?}; valid modes: announced, detected"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TcpFaultMode::Announced => "announced",
+            TcpFaultMode::Detected => "detected",
+        }
+    }
+}
+
+/// Real-socket TCP driver configuration (`net::tcp`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TcpConfig {
+    /// Multi-process mode: this process's listen address (`listen=` key /
+    /// `--listen` flag). `None` (the default) runs every worker in one
+    /// process over loopback listeners on ephemeral ports.
+    pub listen: Option<String>,
+    /// Multi-process mode: every worker's address in position order
+    /// (`peers=` key / `--peers` flag, comma-separated). Must include the
+    /// `listen` address, which selects the hosted position.
+    pub peers: Vec<String>,
+    /// Dial/receive deadline in milliseconds (`tcp_timeout_ms=` key).
+    pub timeout_ms: u64,
+    /// How worker crashes are handled (`tcp_faults=` key).
+    pub fault_mode: TcpFaultMode,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            listen: None,
+            peers: Vec::new(),
+            timeout_ms: 60_000,
+            fault_mode: TcpFaultMode::Announced,
+        }
+    }
+}
+
+impl TcpConfig {
+    /// Parse a comma/semicolon-separated `peers=` list, validating each
+    /// entry as a socket address.
+    pub fn parse_peers(text: &str) -> Result<Vec<String>, String> {
+        let mut out = Vec::new();
+        for part in text.split([',', ';']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            part.parse::<std::net::SocketAddr>()
+                .map_err(|_| format!("bad peer address {part:?} (want ip:port)"))?;
+            out.push(part.to_string());
+        }
+        if out.is_empty() {
+            return Err("peers list is empty; want ip:port,ip:port,...".to_string());
+        }
+        Ok(out)
+    }
+}
+
 /// One scheduled worker failure for the fault-injection scenarios.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Dropout {
@@ -758,6 +844,8 @@ pub struct ExperimentConfig {
     /// Discrete-event simulator settings (the `simulate` subcommand and
     /// `figures::fig_sim`).
     pub sim: SimConfig,
+    /// Real-socket TCP driver settings (`--driver tcp`).
+    pub tcp: TcpConfig,
     /// How ρ evolves across iterations (`rho_policy=` key / `--rho_policy`
     /// flag): `fixed` (default, the paper's setting) or
     /// `residual-balance[:mu[:tau_incr[:tau_decr]]]` (Boyd §3.4.1
@@ -802,6 +890,7 @@ impl Default for ExperimentConfig {
             eval_every: None,
             topology: TopologyKind::Line,
             sim: SimConfig::default(),
+            tcp: TcpConfig::default(),
             rho_policy: RhoPolicy::Fixed,
             iterations: 2_000,
             loss_target: 1e-4,
@@ -973,6 +1062,25 @@ impl ExperimentConfig {
                     value.parse::<f64>().map_err(|_| bad("f64"))? * 1e-3
             }
             "sim_seed" | "sim-seed" => self.sim.seed = value.parse().map_err(|_| bad("u64"))?,
+            "listen" => {
+                value
+                    .parse::<std::net::SocketAddr>()
+                    .map_err(|_| bad("listen socket address (ip:port)"))?;
+                self.tcp.listen = Some(value.to_string());
+            }
+            "peers" => {
+                self.tcp.peers = TcpConfig::parse_peers(value).map_err(|why| bad(&why))?
+            }
+            "tcp_timeout_ms" | "tcp-timeout-ms" => {
+                let ms: u64 = value.parse().map_err(|_| bad("u64"))?;
+                if ms == 0 {
+                    return Err(bad("timeout >= 1 ms"));
+                }
+                self.tcp.timeout_ms = ms;
+            }
+            "tcp_faults" | "tcp-faults" => {
+                self.tcp.fault_mode = TcpFaultMode::parse(value).map_err(|why| bad(&why))?
+            }
             "dropouts" | "drop" => {
                 self.sim.dropouts =
                     SimConfig::parse_dropouts(value).map_err(|why| bad(&why))?
@@ -1403,6 +1511,49 @@ mod tests {
         ));
         // The layers config survives the rejected overrides.
         assert_eq!(cfg.gadmm.compressor.name(), "layers");
+    }
+
+    #[test]
+    fn tcp_keys_parse_and_reject() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.tcp, TcpConfig::default());
+        assert_eq!(cfg.tcp.timeout_ms, 60_000);
+
+        let mut kv = KvMap::new();
+        kv.set("listen", "127.0.0.1:7001");
+        kv.set("peers", "127.0.0.1:7000, 127.0.0.1:7001; 127.0.0.1:7002");
+        kv.set("tcp_timeout_ms", "5000");
+        kv.set("tcp_faults", "detected");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(cfg.tcp.listen.as_deref(), Some("127.0.0.1:7001"));
+        assert_eq!(
+            cfg.tcp.peers,
+            vec!["127.0.0.1:7000", "127.0.0.1:7001", "127.0.0.1:7002"]
+        );
+        assert_eq!(cfg.tcp.timeout_ms, 5000);
+        assert_eq!(cfg.tcp.fault_mode, TcpFaultMode::Detected);
+
+        // Every malformed value is a typed BadValue, never a silent default.
+        for (key, value) in [
+            ("listen", "not-an-address"),
+            ("listen", "127.0.0.1"),
+            ("peers", "127.0.0.1:7000,nope"),
+            ("peers", " , "),
+            ("tcp_timeout_ms", "0"),
+            ("tcp_timeout_ms", "soon"),
+            ("tcp_faults", "psychic"),
+        ] {
+            let mut kv = KvMap::new();
+            kv.set(key, value);
+            let err = cfg.apply_kv(&kv).unwrap_err();
+            assert!(
+                matches!(err, ConfigError::BadValue { .. }),
+                "{key}={value} must be a BadValue, got {err:?}"
+            );
+        }
+        // And the fault-mode error names the value and the valid set.
+        let err = TcpFaultMode::parse("psychic").unwrap_err();
+        assert!(err.contains("psychic") && err.contains("announced") && err.contains("detected"));
     }
 
     #[test]

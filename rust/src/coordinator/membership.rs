@@ -1,0 +1,223 @@
+//! Shared membership / re-stitch protocol state — the one join/leave/crash
+//! state machine every driver consults when the fleet changes shape.
+//!
+//! The policy was born in `coordinator::simulated` (scheduled worker
+//! dropouts, Sec. V fault injection) and is promoted here so the real
+//! socket driver (`net::tcp`) recovers through *exactly* the same path:
+//!
+//! 1. a worker leaves (scheduled dropout, or a detected crash on a real
+//!    transport);
+//! 2. the survivors are re-stitched into a
+//!    [`Topology::nearest_neighbor_chain`] over their deployment points —
+//!    regardless of the original graph shape, a chain is the
+//!    minimum-energy connected repair;
+//! 3. duals reset, and every survivor re-anchors its neighbors with one
+//!    charged full-precision resync broadcast ([`resync_bits`] each).
+//!
+//! [`Membership`] tracks who is alive and produces the deterministic
+//! re-stitch plan; [`DropoutSchedule`] drains a scheduled fault list in
+//! iteration order. Both are pure state machines (no I/O, no clock), so
+//! the simulator applies a plan on its virtual clock and the TCP driver
+//! applies the *same* plan over real sockets — which is what makes
+//! tcp-with-scheduled-dropouts bit-for-bit the sim on an ideal network.
+
+use crate::config::Dropout;
+use crate::net::geometry::Point;
+use crate::net::topology::Topology;
+
+/// Bits one full-precision resync broadcast charges for a
+/// `dims`-dimensional model (one `Payload::Full` per survivor).
+pub fn resync_bits(dims: usize) -> u64 {
+    32 * dims as u64
+}
+
+/// Who is alive, and where they are deployed. Worker ids are *global*
+/// (stable across re-stitches); positions belong to whatever [`Topology`]
+/// the current plan produced.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    alive: Vec<bool>,
+    points: Vec<Point>,
+}
+
+impl Membership {
+    /// A fully-alive fleet deployed at `points` (one per worker id).
+    pub fn new(points: Vec<Point>) -> Membership {
+        Membership {
+            alive: vec![true; points.len()],
+            points,
+        }
+    }
+
+    /// Total fleet size (alive or not).
+    pub fn len(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive.is_empty()
+    }
+
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.alive.get(worker).copied().unwrap_or(false)
+    }
+
+    /// Live worker ids, ascending.
+    pub fn live(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&w| self.alive[w]).collect()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Mark `worker` dead. Returns `true` if it was alive (the caller
+    /// should re-stitch), `false` for unknown ids or repeat deaths (a
+    /// crash may be detected by several peers — only the first counts).
+    pub fn mark_dead(&mut self, worker: usize) -> bool {
+        if worker < self.alive.len() && self.alive[worker] {
+            self.alive[worker] = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The deterministic re-stitch plan over the survivors: a
+    /// nearest-neighbor chain over their deployment points, carrying
+    /// global worker ids. `None` when fewer than two workers survive —
+    /// the run cannot continue.
+    ///
+    /// Every party with the same membership view computes the identical
+    /// plan, so no coordination traffic is needed beyond agreeing on who
+    /// died.
+    pub fn restitch_plan(&self) -> Option<Topology> {
+        let survivors = self.live();
+        if survivors.len() < 2 {
+            return None;
+        }
+        let pts: Vec<Point> = survivors.iter().map(|&w| self.points[w]).collect();
+        let sub = Topology::nearest_neighbor_chain(&pts);
+        let order: Vec<usize> = (0..sub.len()).map(|p| survivors[sub.worker_at(p)]).collect();
+        Some(Topology::chain_over(order))
+    }
+}
+
+/// A scheduled fault list, drained in iteration order: the sim's
+/// `pending_dropouts` logic, shared with the TCP driver's announced fault
+/// mode.
+#[derive(Clone, Debug, Default)]
+pub struct DropoutSchedule {
+    /// Sorted descending by `at_iteration`; drained from the back.
+    pending: Vec<Dropout>,
+}
+
+impl DropoutSchedule {
+    pub fn new(dropouts: &[Dropout]) -> DropoutSchedule {
+        let mut pending = dropouts.to_vec();
+        pending.sort_by(|a, b| b.at_iteration.cmp(&a.at_iteration));
+        DropoutSchedule { pending }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain every dropout scheduled at or before `iter`, in schedule
+    /// order.
+    pub fn due(&mut self, iter: u64) -> Vec<Dropout> {
+        let mut fired = Vec::new();
+        while let Some(d) = self.pending.last().copied() {
+            if d.at_iteration > iter {
+                break;
+            }
+            self.pending.pop();
+            fired.push(d);
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::geometry::collinear;
+
+    #[test]
+    fn live_set_and_death_bookkeeping() {
+        let mut m = Membership::new(collinear(4, 50.0));
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.live(), vec![0, 1, 2, 3]);
+        assert!(m.mark_dead(2));
+        assert!(!m.mark_dead(2), "repeat deaths are idempotent");
+        assert!(!m.mark_dead(99), "unknown ids are ignored");
+        assert!(!m.is_alive(2));
+        assert_eq!(m.live(), vec![0, 1, 3]);
+        assert_eq!(m.live_count(), 3);
+    }
+
+    #[test]
+    fn restitch_plan_is_a_chain_over_survivors() {
+        let mut m = Membership::new(collinear(6, 50.0));
+        m.mark_dead(2);
+        let topo = m.restitch_plan().expect("5 survivors can re-stitch");
+        assert_eq!(topo.len(), 5);
+        assert!(topo.validate());
+        assert_eq!(topo.edge_count(), 4, "a chain over 5 survivors");
+        let ids: Vec<usize> = (0..topo.len()).map(|p| topo.worker_at(p)).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 3, 4, 5], "plan carries global worker ids");
+        // Collinear points: nearest-neighbor chaining preserves the line.
+        assert_eq!(ids, vec![0, 1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn restitch_plan_needs_two_survivors() {
+        let mut m = Membership::new(collinear(3, 50.0));
+        m.mark_dead(0);
+        assert!(m.restitch_plan().is_some());
+        m.mark_dead(2);
+        assert!(m.restitch_plan().is_none(), "one survivor cannot re-stitch");
+    }
+
+    #[test]
+    fn identical_views_produce_identical_plans() {
+        // The decentralized agreement property: two parties with the same
+        // membership view compute the same plan with no coordination.
+        let mut a = Membership::new(collinear(8, 25.0));
+        let mut b = a.clone();
+        for w in [6, 1] {
+            a.mark_dead(w);
+            b.mark_dead(w);
+        }
+        let pa = a.restitch_plan().unwrap();
+        let pb = b.restitch_plan().unwrap();
+        let ids = |t: &Topology| (0..t.len()).map(|p| t.worker_at(p)).collect::<Vec<_>>();
+        assert_eq!(ids(&pa), ids(&pb));
+    }
+
+    #[test]
+    fn schedule_drains_in_iteration_order() {
+        let mut s = DropoutSchedule::new(&[
+            Dropout { worker: 3, at_iteration: 10 },
+            Dropout { worker: 1, at_iteration: 4 },
+            Dropout { worker: 2, at_iteration: 4 },
+        ]);
+        assert!(s.due(3).is_empty());
+        let fired = s.due(5);
+        assert_eq!(fired.len(), 2);
+        assert_eq!(
+            fired.iter().map(|d| d.worker).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert!(!s.is_empty());
+        assert_eq!(s.due(10)[0].worker, 3);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn resync_charge_is_full_precision() {
+        assert_eq!(resync_bits(10), 320);
+    }
+}

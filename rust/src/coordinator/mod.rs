@@ -15,10 +15,15 @@
 //!   worker-dropout fault injection with chain re-stitching; bit-for-bit
 //!   the deterministic engine in the ideal-network limit (enforced by the
 //!   `sim_determinism` integration test).
+//! * [`membership`] — the shared join/leave/crash state machine: who is
+//!   alive, and the deterministic re-stitch plan over the survivors. Born
+//!   in the simulator's fault injection, now also the recovery path of the
+//!   real-socket `net::tcp` driver.
 //! * [`residuals`] — primal/dual residual and quantization-error tracking
 //!   (the Theorem 1/2 quantities).
 
 pub mod engine;
+pub mod membership;
 pub mod residuals;
 pub mod simulated;
 pub mod threaded;

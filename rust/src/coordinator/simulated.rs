@@ -34,7 +34,9 @@
 //! (regardless of the original graph shape — a chain is the
 //! minimum-energy connected repair), duals reset, and every survivor
 //! re-anchors its neighbors with one full-precision resync broadcast
-//! (charged).
+//! (charged). The membership bookkeeping and re-stitch plan live in the
+//! shared [`super::membership`] layer, so the real-socket TCP driver
+//! recovers through exactly this path.
 //!
 //! **Determinism:** all randomness — model (quantizer), link loss, and
 //! compute jitter — comes from explicitly seeded streams; virtual time is
@@ -45,9 +47,10 @@
 //! properties are pinned by the `sim_determinism` integration suite.
 
 use super::engine::RunOptions;
+use super::membership::{resync_bits, DropoutSchedule, Membership};
 use super::residuals::{ResidualPoint, ResidualTracker, RhoPolicy};
 use crate::comm::{wire, CommStats, Message};
-use crate::config::{Dropout, GadmmConfig, SimConfig};
+use crate::config::{GadmmConfig, SimConfig};
 use crate::metrics::recorder::{CurvePoint, Recorder};
 use crate::metrics::registry::RunMetrics;
 use crate::metrics::report::{RunSummary, SimExt};
@@ -115,7 +118,6 @@ struct SimLink {
 }
 
 struct WorkerState {
-    alive: bool,
     theta: Vec<f32>,
     /// Incident links, in the topology's incident-edge order.
     links: Vec<SimLink>,
@@ -161,8 +163,10 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     rounds: u64,
     comm: CommStats,
     restitches: u64,
-    /// Sorted descending by `at_iteration`; drained from the back.
-    pending_dropouts: Vec<Dropout>,
+    /// Who is alive (shared join/leave/crash state machine).
+    membership: Membership,
+    /// Scheduled faults, drained in iteration order.
+    schedule: DropoutSchedule,
     trace: Vec<TraceEvent>,
     dims: usize,
     /// Collect per-broadcast [`BroadcastEvent`]s for an attached observer
@@ -231,7 +235,6 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let mut workers = Vec::with_capacity(n);
         for (w, rng) in model_rngs.into_iter().enumerate() {
             workers.push(WorkerState {
-                alive: true,
                 theta: vec![0.0; d],
                 links: Vec::new(),
                 own_view: vec![0.0; d],
@@ -250,8 +253,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             sim.seed ^ 0x00AE_11FF,
         );
         let compute = sim.compute_model();
-        let mut pending_dropouts = sim.dropouts.clone();
-        pending_dropouts.sort_by(|a, b| b.at_iteration.cmp(&a.at_iteration));
+        let membership = Membership::new(points.clone());
+        let schedule = DropoutSchedule::new(&sim.dropouts);
 
         let rho0 = cfg.rho;
         let mut this = SimulatedGadmm {
@@ -270,7 +273,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             rounds: 0,
             comm: CommStats::default(),
             restitches: 0,
-            pending_dropouts,
+            membership,
+            schedule,
             trace: Vec::new(),
             dims: d,
             watch_broadcasts: false,
@@ -397,13 +401,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     /// workers survive (the run cannot continue).
     fn apply_scheduled_dropouts(&mut self, iter: u64) -> bool {
         let mut fired = false;
-        while let Some(d) = self.pending_dropouts.last().copied() {
-            if d.at_iteration > iter {
-                break;
-            }
-            self.pending_dropouts.pop();
-            if d.worker < self.workers.len() && self.workers[d.worker].alive {
-                self.workers[d.worker].alive = false;
+        for d in self.schedule.due(iter) {
+            if self.membership.mark_dead(d.worker) {
                 fired = true;
                 if self.sim.record_trace {
                     self.trace.push(TraceEvent::Dropout {
@@ -433,17 +432,11 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     /// over their deployment points), reset duals, and re-anchor every
     /// mirror with a charged full-precision resync broadcast.
     fn restitch(&mut self, iter: u64) {
-        let survivors: Vec<usize> = (0..self.workers.len())
-            .filter(|&w| self.workers[w].alive)
-            .collect();
-        if survivors.len() < 2 {
-            self.chain = survivors;
+        let Some(plan) = self.membership.restitch_plan() else {
+            self.chain = self.membership.live();
             return;
-        }
-        let pts: Vec<Point> = survivors.iter().map(|&w| self.points[w]).collect();
-        let sub = Topology::nearest_neighbor_chain(&pts);
-        let order: Vec<usize> = (0..sub.len()).map(|p| survivors[sub.worker_at(p)]).collect();
-        self.topo = Topology::chain_over(order);
+        };
+        self.topo = plan;
         self.relink();
 
         // Resync: every survivor broadcasts its current model in full
@@ -461,7 +454,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 ws.compressor.reset_to(&theta);
                 ws.own_view.copy_from_slice(&theta);
             }
-            self.comm.record(32 * d as u64, 0.0);
+            self.comm.record(resync_bits(d), 0.0);
             let deg = self.workers[w].links.len();
             let mut i = 0;
             while i < deg {
@@ -830,10 +823,10 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     ) {
         let (msg, _) = wire::decode_frame(bytes, self.dims)
             .expect("frames generated by encode_frame must decode");
-        let ws = &mut self.workers[to];
-        if !ws.alive {
+        if !self.membership.is_alive(to) {
             return;
         }
+        let ws = &mut self.workers[to];
         // Sender may no longer be a neighbor (re-stitched mid-flight
         // frames): drop silently.
         let Some(link) = ws.links.iter_mut().find(|l| l.peer == from) else {
@@ -885,6 +878,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     where
         F: FnMut(&Self) -> f64,
     {
+        let wall = std::time::Instant::now();
         let eval_every = opts.normalized_eval_every();
         self.rho_policy = opts.rho_policy;
         self.residuals.clear();
@@ -981,6 +975,9 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             .collect();
         RunSummary {
             driver: "sim",
+            // Host time spent *simulating*; the virtual clock is
+            // `SimExt::sim_secs` below.
+            wall_secs: wall.elapsed().as_secs_f64(),
             recorder,
             comm: self.comm.clone(),
             // Populated on adaptive-ρ runs; empty under `Fixed`.
@@ -1004,7 +1001,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::QuantConfig;
+    use crate::config::{Dropout, QuantConfig};
     use crate::data::linreg::{LinRegDataset, LinRegSpec};
     use crate::data::partition::Partition;
     use crate::model::linreg::LinRegProblem;

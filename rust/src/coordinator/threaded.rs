@@ -62,15 +62,16 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 /// runs in lockstep: no worker starts iteration `k+1` until the leader has
 /// digested every iteration-`k` report and published the next ρ here.
 /// Under `Fixed` no latch exists and workers pipeline freely, exactly as
-/// before.
-struct RhoLatch {
+/// before. Shared with the real-socket `net::tcp` driver, whose
+/// single-process harness runs the same leader/worker lockstep.
+pub(crate) struct RhoLatch {
     /// `(completed iteration, ρ for the next one)`.
     state: Mutex<(u64, f32)>,
     cv: Condvar,
 }
 
 impl RhoLatch {
-    fn new(rho0: f32) -> RhoLatch {
+    pub(crate) fn new(rho0: f32) -> RhoLatch {
         RhoLatch {
             state: Mutex::new((0, rho0)),
             cv: Condvar::new(),
@@ -78,7 +79,7 @@ impl RhoLatch {
     }
 
     /// Publish ρ for iteration `completed + 1`.
-    fn publish(&self, completed: u64, rho_next: f32) {
+    pub(crate) fn publish(&self, completed: u64, rho_next: f32) {
         let mut s = self.state.lock().expect("rho latch poisoned");
         *s = (completed, rho_next);
         self.cv.notify_all();
@@ -86,7 +87,7 @@ impl RhoLatch {
 
     /// Block until ρ for iteration `k` is known (the leader has completed
     /// `k − 1`), then return it.
-    fn rho_for(&self, k: u64) -> anyhow::Result<f32> {
+    pub(crate) fn rho_for(&self, k: u64) -> anyhow::Result<f32> {
         let mut s = self.state.lock().expect("rho latch poisoned");
         while s.0 < k - 1 {
             let (next, timeout) = self
@@ -188,6 +189,7 @@ pub fn run_threaded_on(
     mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
     observer: &mut dyn Observer,
 ) -> anyhow::Result<RunSummary> {
+    let wall = std::time::Instant::now();
     let n = solvers.len();
     assert_eq!(cfg.workers, n, "config/solver count mismatch");
     assert_eq!(topo.len(), n, "topology/solver count mismatch");
@@ -507,6 +509,7 @@ pub fn run_threaded_on(
     }
     Ok(RunSummary {
         driver: "threaded",
+        wall_secs: wall.elapsed().as_secs_f64(),
         recorder,
         comm,
         // Populated on adaptive-ρ runs (where the leader reconstructs the

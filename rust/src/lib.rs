@@ -48,7 +48,10 @@ pub mod util;
 
 /// Convenience re-exports for the public API surface used by examples.
 pub mod prelude {
-    pub use crate::config::{CompressorConfig, ExperimentConfig, GadmmConfig, QuantConfig, SimConfig};
+    pub use crate::config::{
+        CompressorConfig, Dropout, ExperimentConfig, GadmmConfig, QuantConfig, SimConfig,
+        TcpConfig, TcpFaultMode,
+    };
     pub use crate::coordinator::engine::RunOptions;
     pub use crate::data::partition::Partition;
     pub use crate::metrics::recorder::Recorder;

@@ -46,8 +46,14 @@ pub struct SimExt {
 /// return, and what the `runtime::session` Driver trait promises.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
-    /// Which runtime produced it: `"engine"`, `"threaded"`, or `"sim"`.
+    /// Which runtime produced it: `"engine"`, `"threaded"`, `"sim"`, or
+    /// `"tcp"`.
     pub driver: &'static str,
+    /// Real wall-clock seconds the run took, measured by the driver. For
+    /// simulated runs this is the *host* time spent simulating — the
+    /// virtual clock lives in [`SimExt::sim_secs`] — so sim virtual-time
+    /// and real-socket wall-time artifacts are never conflated.
+    pub wall_secs: f64,
     /// Metric curve. For simulated runs `compute_secs` carries the
     /// *virtual wall-clock* seconds at each point.
     pub recorder: Recorder,
@@ -136,6 +142,7 @@ impl RunSummary {
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
         obj.set("driver", Json::Str(self.driver.to_string()));
+        obj.set("wall_secs", Json::Num(self.wall_secs));
         obj.set("iterations", Json::Num(self.iterations_run as f64));
         obj.set(
             "final_value",
@@ -326,6 +333,7 @@ mod tests {
         comm.record(300, 0.0);
         RunSummary {
             driver: if sim.is_some() { "sim" } else { "engine" },
+            wall_secs: 0.25,
             recorder: curve("run", &[1.0, 0.1, 0.001]),
             comm,
             residuals: Vec::new(),
@@ -354,6 +362,7 @@ mod tests {
         let s = summary(None);
         let j = s.to_json();
         assert_eq!(j.get("driver").unwrap().as_str(), Some("engine"));
+        assert_eq!(j.get("wall_secs").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("bits").unwrap().as_f64(), Some(300.0));
         assert!(j.get("curve").is_some());
         assert!(j.get("sim_secs").is_none(), "no sim keys on engine runs");

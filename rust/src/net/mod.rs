@@ -15,4 +15,5 @@
 
 pub mod channel;
 pub mod geometry;
+pub mod tcp;
 pub mod topology;

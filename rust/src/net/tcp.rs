@@ -1,0 +1,1825 @@
+//! Real-socket runtime: (Q-)GADMM over TCP with crash recovery through
+//! the shared [`coordinator::membership`] protocol layer.
+//!
+//! Workers exchange the same versioned [`comm::wire`] frames the sim
+//! serializes, over a full mesh of loopback (or remote) TCP connections
+//! brought up before iteration 1. Per-connection reader threads feed an
+//! incremental [`FrameReader`] and push decoded messages into each
+//! worker's inbox; the worker holds back out-of-phase frames (resyncs,
+//! pipelined rounds) in a pending queue so phase receives stay ordered.
+//!
+//! Two fault modes ([`TcpFaultMode`]):
+//!
+//! * **Announced** — every worker knows the dropout schedule up front
+//!   (the simulator's fault model). At the victim's iteration boundary it
+//!   closes its sockets and exits; every survivor applies the identical
+//!   [`Membership::restitch_plan`] at the same boundary, re-anchors its
+//!   new neighbors with one full-precision resync broadcast, and
+//!   continues. On an ideal loopback this is **bit-for-bit** the
+//!   simulator's dropout path for the same seed.
+//! * **Detected** — only the victim knows its crash time; survivors
+//!   observe the EOF, agree on a re-stitch iteration through a shared
+//!   cluster state machine, and recover through the same membership
+//!   plan. Convergent, but not bit-pinned to the sim (detection times
+//!   are physical).
+//!
+//! The single-process harness (`--driver tcp`) spawns one OS thread per
+//! worker bound to real ephemeral ports and runs the same leader
+//! aggregation as the threaded driver — same telemetry synthesis, same
+//! accounting — so ideal-loopback runs are bit-identical to `sim`,
+//! `threaded`, and `engine` for the same seed. The multi-process path
+//! (`--listen`/`--peers`) runs exactly one worker per process with no
+//! leader (see [`run_tcp_on`] docs).
+
+use crate::comm::wire::{self, FrameReader};
+use crate::comm::{CommStats, Message, Payload};
+use crate::config::{Dropout, GadmmConfig, TcpConfig, TcpFaultMode};
+use crate::coordinator::engine::RunOptions;
+use crate::coordinator::membership::{resync_bits, DropoutSchedule, Membership};
+use crate::coordinator::residuals::{ResidualTracker, RhoPolicy};
+use crate::coordinator::threaded::RhoLatch;
+use crate::metrics::recorder::{CurvePoint, Recorder};
+use crate::metrics::registry::RunMetrics;
+use crate::metrics::report::RunSummary;
+use crate::metrics::{BroadcastEvent, Observer};
+use crate::model::{LinkBuf, NeighborLink, WorkerSolver};
+use crate::net::geometry::Point;
+use crate::net::topology::Topology;
+use crate::quant::compress::CompressorKind;
+use crate::quant::{Compressor, Mirror};
+use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Round tag of a re-stitch resync frame (`Payload::Full` re-anchor).
+/// `u64::MAX` stays the stop marker, matching the threaded driver.
+const RESYNC_ROUND: u64 = u64::MAX - 1;
+const STOP_ROUND: u64 = u64::MAX;
+/// Leader poll cadence while waiting on reports (short so the detected
+/// fault mode re-checks the cluster's dead set promptly).
+const LEADER_POLL: Duration = Duration::from_millis(25);
+
+/// What a connection reader pushes into its worker's inbox.
+enum NetEvent {
+    /// A decoded wire frame from the peer this reader owns.
+    Frame(Message),
+    /// The peer's connection closed (EOF, socket error, or a corrupt
+    /// stream) — the crash-detection signal.
+    PeerDown(usize),
+}
+
+/// Per-connection reader: drain the socket through an incremental
+/// [`FrameReader`], forward decoded frames, and report the close.
+fn reader_loop(mut stream: TcpStream, peer: usize, dims: usize, tx: Sender<NetEvent>) {
+    let mut frames = FrameReader::new();
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => {
+                let _ = tx.send(NetEvent::PeerDown(peer));
+                return;
+            }
+            Ok(k) => {
+                frames.push(&buf[..k]);
+                loop {
+                    match frames.next_frame(dims) {
+                        Ok(Some(msg)) => {
+                            if tx.send(NetEvent::Frame(msg)).is_err() {
+                                return; // worker gone; stop reading
+                            }
+                        }
+                        Ok(None) => break, // need more bytes
+                        Err(_) => {
+                            // A corrupt stream is indistinguishable from a
+                            // failing peer: surface it as a disconnect.
+                            let _ = tx.send(NetEvent::PeerDown(peer));
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One worker's network endpoint: write halves to every peer (global
+/// worker id index) plus the inbox its readers feed.
+struct Mesh {
+    streams: Vec<Option<TcpStream>>,
+    inbox: Receiver<NetEvent>,
+}
+
+/// Establish this worker's slice of the full mesh: dial every higher
+/// index (a bound listener's backlog accepts before the owner calls
+/// `accept`, so ordering is deadlock-free), then accept every lower one.
+/// The 4-byte little-endian hello identifies the dialer.
+fn connect_mesh(
+    me: usize,
+    listener: TcpListener,
+    addrs: &[SocketAddr],
+    deadline: Instant,
+) -> anyhow::Result<Vec<(usize, TcpStream)>> {
+    let n = addrs.len();
+    let mut out = Vec::with_capacity(n.saturating_sub(1));
+    for (peer, addr) in addrs.iter().enumerate().skip(me + 1) {
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        anyhow::bail!("worker {me} could not dial worker {peer} at {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.write_all(&(me as u32).to_le_bytes())?;
+        out.push((peer, stream));
+    }
+    listener.set_nonblocking(true)?;
+    let mut accepted = 0;
+    while accepted < me {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                let mut hello = [0u8; 4];
+                stream.read_exact(&mut hello)?;
+                let peer = u32::from_le_bytes(hello) as usize;
+                anyhow::ensure!(
+                    peer < me && out.iter().all(|(p, _)| *p != peer),
+                    "worker {me} got an unexpected hello from {peer}"
+                );
+                out.push((peer, stream));
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!(
+                        "worker {me} timed out accepting mesh connections ({accepted}/{me})"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(out)
+}
+
+/// Wrap raw streams into a [`Mesh`]: spawn one reader per connection and
+/// slot the write halves by peer id.
+fn into_mesh(n: usize, dims: usize, streams: Vec<(usize, TcpStream)>) -> anyhow::Result<Mesh> {
+    let (tx, inbox) = channel();
+    let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for (peer, stream) in streams {
+        let reader = stream.try_clone()?;
+        let tx = tx.clone();
+        std::thread::spawn(move || reader_loop(reader, peer, dims, tx));
+        slots[peer] = Some(stream);
+    }
+    Ok(Mesh {
+        streams: slots,
+        inbox,
+    })
+}
+
+/// Bring up the whole fleet's mesh in one process: `n` loopback
+/// listeners on ephemeral ports, all pairs connected before any worker
+/// thread starts.
+fn local_mesh(n: usize, dims: usize, timeout: Duration) -> anyhow::Result<Vec<Mesh>> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<SocketAddr> = listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()?;
+    let deadline = Instant::now() + timeout;
+    let mut joins = Vec::with_capacity(n);
+    for (me, listener) in listeners.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        joins.push(std::thread::spawn(move || {
+            connect_mesh(me, listener, &addrs, deadline)
+        }));
+    }
+    let mut meshes = Vec::with_capacity(n);
+    for join in joins {
+        let streams = join
+            .join()
+            .map_err(|_| anyhow::anyhow!("mesh setup thread panicked"))??;
+        meshes.push(into_mesh(n, dims, streams)?);
+    }
+    Ok(meshes)
+}
+
+/// Outcome of one inbox drain.
+enum Got {
+    Frame(Message),
+    /// A `Payload::Stop` marker — a neighbor halted; cascade.
+    Stop,
+    Down(usize),
+}
+
+/// Receive the next event, serving held-back frames first. Frames not
+/// matching `want` are queued (resyncs arriving early, pipelined rounds)
+/// so no frame is ever dropped or reordered within its connection.
+fn recv_where(
+    inbox: &Receiver<NetEvent>,
+    pending: &mut VecDeque<Message>,
+    timeout: Duration,
+    mut want: impl FnMut(&Message) -> bool,
+) -> anyhow::Result<Got> {
+    if let Some(i) = pending.iter().position(|m| want(m)) {
+        return Ok(Got::Frame(pending.remove(i).expect("position just found")));
+    }
+    let deadline = Instant::now() + timeout;
+    loop {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        match inbox.recv_timeout(remain) {
+            Ok(NetEvent::Frame(m)) => {
+                if matches!(m.payload, Payload::Stop) {
+                    return Ok(Got::Stop);
+                }
+                if want(&m) {
+                    return Ok(Got::Frame(m));
+                }
+                pending.push_back(m);
+            }
+            Ok(NetEvent::PeerDown(p)) => return Ok(Got::Down(p)),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("tcp worker starved waiting for a neighbor frame")
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("tcp worker lost all connection readers")
+            }
+        }
+    }
+}
+
+/// A pending detected-mode recovery: every survivor executes the same
+/// dead-set snapshot at the same iteration boundary.
+#[derive(Clone)]
+struct RestitchPlan {
+    /// Iteration at whose start survivors re-stitch — strictly greater
+    /// than any live worker's started iteration at plan creation, so no
+    /// one has passed the boundary yet.
+    at: u64,
+    generation: u64,
+    dead: Vec<bool>,
+    /// Set once any survivor has executed the plan; a further death while
+    /// it is in flight aborts the run (cascading recovery is out of
+    /// scope).
+    launched: bool,
+}
+
+struct ClusterState {
+    /// Latest iteration each worker has begun.
+    started: Vec<u64>,
+    dead: Vec<bool>,
+    /// Which survivor first observed each death (telemetry).
+    detected_by: Vec<usize>,
+    plan: Option<RestitchPlan>,
+    aborted: bool,
+}
+
+/// Shared crash-agreement state for [`TcpFaultMode::Detected`]: deaths
+/// are observed as socket EOFs by whichever peer notices first; the
+/// re-stitch boundary is the smallest iteration no live worker has
+/// started yet, so every survivor reaches it in its normal loop.
+struct Cluster {
+    state: Mutex<ClusterState>,
+}
+
+/// What a worker learns at its iteration boundary.
+enum Boundary {
+    Run,
+    Restitch { generation: u64, dead: Vec<bool> },
+    Aborted,
+}
+
+impl Cluster {
+    fn new(n: usize) -> Cluster {
+        Cluster {
+            state: Mutex::new(ClusterState {
+                started: vec![0; n],
+                dead: vec![false; n],
+                detected_by: vec![0; n],
+                plan: None,
+                aborted: false,
+            }),
+        }
+    }
+
+    /// Register that `me` is starting iteration `k`; returns the pending
+    /// plan if its boundary is due and `me` has not executed it yet.
+    fn begin_iteration(&self, me: usize, k: u64, my_generation: u64) -> Boundary {
+        let mut s = self.state.lock().expect("cluster state poisoned");
+        if s.aborted {
+            return Boundary::Aborted;
+        }
+        s.started[me] = k;
+        if let Some(p) = &mut s.plan {
+            if p.at <= k && p.generation > my_generation {
+                p.launched = true;
+                return Boundary::Restitch {
+                    generation: p.generation,
+                    dead: p.dead.clone(),
+                };
+            }
+        }
+        Boundary::Run
+    }
+
+    /// Record a death observed by `by`. Creates or extends the recovery
+    /// plan; a death while a plan is mid-execution aborts the run.
+    fn mark_dead(&self, victim: usize, by: usize) {
+        let mut s = self.state.lock().expect("cluster state poisoned");
+        if victim >= s.dead.len() || s.dead[victim] {
+            return;
+        }
+        s.dead[victim] = true;
+        s.detected_by[victim] = by;
+        let live_started = || {
+            s.started
+                .iter()
+                .enumerate()
+                .filter(|&(w, _)| !s.dead[w])
+                .map(|(_, &k)| k)
+        };
+        let max_started = live_started().max().unwrap_or(0);
+        let min_started = live_started().min().unwrap_or(0);
+        let dead = s.dead.clone();
+        enum Action {
+            Fresh(u64),
+            Extend,
+            Abort,
+        }
+        let action = match &s.plan {
+            None => Action::Fresh(1),
+            Some(p) if !p.launched => Action::Extend,
+            // The previous plan is fully retired once every live worker
+            // has moved past its boundary; a new death then starts a new
+            // generation.
+            Some(p) if min_started > p.at => Action::Fresh(p.generation + 1),
+            Some(_) => Action::Abort,
+        };
+        match action {
+            Action::Fresh(generation) => {
+                s.plan = Some(RestitchPlan {
+                    at: max_started + 1,
+                    generation,
+                    dead,
+                    launched: false,
+                });
+            }
+            Action::Extend => {
+                let p = s.plan.as_mut().expect("extend requires a plan");
+                p.at = p.at.max(max_started + 1);
+                p.dead = dead;
+            }
+            Action::Abort => s.aborted = true,
+        }
+    }
+
+    fn aborted(&self) -> bool {
+        self.state.lock().expect("cluster state poisoned").aborted
+    }
+
+    fn dead_snapshot(&self) -> Vec<bool> {
+        self.state
+            .lock()
+            .expect("cluster state poisoned")
+            .dead
+            .clone()
+    }
+
+    fn detected_by(&self, worker: usize) -> usize {
+        self.state.lock().expect("cluster state poisoned").detected_by[worker]
+    }
+
+    /// The leader's view of a due plan: returns `(generation, dead)` when
+    /// a plan with boundary at or before `k` exists that the leader has
+    /// not folded into its accounting yet.
+    fn plan_due(&self, k: u64, after_generation: u64) -> Option<(u64, Vec<bool>)> {
+        let s = self.state.lock().expect("cluster state poisoned");
+        match &s.plan {
+            Some(p) if p.at <= k && p.generation > after_generation => {
+                Some((p.generation, p.dead.clone()))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One incident link of the current topology, worker-side: the peer's
+/// *global* id, the λ sign, and this end's dual + mirror state.
+struct LinkState {
+    peer: usize,
+    sign: f32,
+    lambda: Vec<f32>,
+    mirror: Mirror,
+}
+
+/// Build the link states for `me` under `topo` (fresh duals and mirrors
+/// — exactly the post-re-stitch state the sim produces).
+fn links_for(topo: &Topology, me: usize, dims: usize) -> (bool, Vec<LinkState>) {
+    let pos = (0..topo.len())
+        .find(|&p| topo.worker_at(p) == me)
+        .expect("worker appears in its own topology");
+    let links = topo
+        .incident(pos)
+        .iter()
+        .map(|e| LinkState {
+            peer: topo.worker_at(e.peer),
+            sign: e.sign,
+            lambda: vec![0.0; dims],
+            mirror: Mirror::new(dims),
+        })
+        .collect();
+    (topo.is_head(pos), links)
+}
+
+/// Per-iteration worker report to the leader — the threaded driver's
+/// report keyed by *global* worker id (positions move on a re-stitch).
+struct TcpReport {
+    worker: usize,
+    iteration: u64,
+    theta: Option<Vec<f32>>,
+    objective: f64,
+    bits: u64,
+    radius: f32,
+    sent: bool,
+    blocks: Vec<(u64, f32, bool)>,
+    view: Option<Vec<f32>>,
+}
+
+/// How a worker leaves its iteration loop.
+enum Flow {
+    Continue,
+    /// Early-stop cascade: send `Stop` markers on the way out.
+    Halt,
+    /// Fewer than two survivors — the run cannot continue; exit quietly
+    /// (everyone else reaches the same conclusion independently).
+    Exhausted,
+}
+
+/// Everything a TCP worker owns besides its solver and model state.
+struct Worker {
+    me: usize,
+    dims: usize,
+    cfg: GadmmConfig,
+    fault: TcpFaultMode,
+    topo: Topology,
+    membership: Membership,
+    schedule: DropoutSchedule,
+    /// Workers with *some* scheduled dropout — their EOF is never an
+    /// error in announced mode, even if observed before the boundary.
+    scheduled: Vec<bool>,
+    is_head: bool,
+    links: Vec<LinkState>,
+    streams: Vec<Option<TcpStream>>,
+    inbox: Receiver<NetEvent>,
+    pending: VecDeque<Message>,
+    /// Peers whose sockets are gone (detected-mode bookkeeping).
+    down: Vec<bool>,
+    rng: Rng,
+    timeout: Duration,
+    report: Option<Sender<TcpReport>>,
+    iterations: u64,
+    eval_every: u64,
+    needs_objective: bool,
+    stop_at: Arc<AtomicU64>,
+    rho_latch: Option<Arc<RhoLatch>>,
+    cluster: Option<Arc<Cluster>>,
+    my_generation: u64,
+    initial_theta: Option<Vec<f32>>,
+}
+
+/// What a finished worker hands back (consumed by the multi-process
+/// path, where there is no leader to aggregate).
+struct WorkerExit {
+    iterations: u64,
+    theta: Vec<f32>,
+    comm: CommStats,
+}
+
+impl Worker {
+    fn stopping(&self) -> bool {
+        self.stop_at.load(Ordering::Acquire) != u64::MAX
+    }
+
+    fn write_frame(&mut self, peer: usize, msg: &Message) -> std::io::Result<()> {
+        match self.streams[peer].as_mut() {
+            Some(stream) => stream.write_all(&wire::encode_frame(msg)),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "no stream to peer",
+            )),
+        }
+    }
+
+    /// Shut every socket down (both halves, so peers see EOF and our own
+    /// readers unblock) — the one way a worker leaves the mesh.
+    fn close_all(&mut self) {
+        for stream in self.streams.iter().flatten() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Handle a peer's connection closing. Benign when the peer is a
+    /// scheduled victim, already dead, or the fleet is stopping; in
+    /// detected mode it *is* the crash signal.
+    fn peer_down(&mut self, peer: usize) -> anyhow::Result<()> {
+        match self.fault {
+            TcpFaultMode::Announced => {
+                if self.scheduled.get(peer).copied().unwrap_or(false)
+                    || !self.membership.is_alive(peer)
+                    || self.stopping()
+                {
+                    Ok(())
+                } else {
+                    anyhow::bail!("worker {} lost peer {peer} unexpectedly", self.me)
+                }
+            }
+            TcpFaultMode::Detected => {
+                if !self.down[peer] {
+                    self.down[peer] = true;
+                    if let Some(cluster) = &self.cluster {
+                        cluster.mark_dead(peer, self.me);
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Drain one phase: one broadcast from every live link peer, applied
+    /// to that link's mirror. Returns `true` on a stop cascade.
+    fn recv_phase(&mut self, k: u64) -> anyhow::Result<bool> {
+        let peers: Vec<usize> = self.links.iter().map(|l| l.peer).collect();
+        for (i, &peer) in peers.iter().enumerate() {
+            if self.down[peer] {
+                continue; // detected mode: stale mirror stands in
+            }
+            loop {
+                let got = recv_where(&self.inbox, &mut self.pending, self.timeout, |m| {
+                    m.from == peer && m.round == k
+                })?;
+                match got {
+                    Got::Frame(m) => {
+                        self.links[i].mirror.apply_payload(&m.payload);
+                        break;
+                    }
+                    Got::Stop => return Ok(true),
+                    Got::Down(q) => {
+                        self.peer_down(q)?;
+                        if self.down[peer] {
+                            break; // the peer we were waiting on died
+                        }
+                    }
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// Broadcast this round's payload to every live link peer.
+    fn send_links(&mut self, k: u64, payload: &Payload) -> anyhow::Result<Flow> {
+        let peers: Vec<usize> = self.links.iter().map(|l| l.peer).collect();
+        for &peer in &peers {
+            if self.down[peer] {
+                continue;
+            }
+            let msg = Message {
+                from: self.me,
+                round: k,
+                payload: payload.clone(),
+            };
+            if self.write_frame(peer, &msg).is_err() {
+                match self.fault {
+                    TcpFaultMode::Announced => {
+                        if self.scheduled.get(peer).copied().unwrap_or(false)
+                            || !self.membership.is_alive(peer)
+                        {
+                            continue; // victim raced ahead of our boundary
+                        }
+                        if self.stopping() {
+                            return Ok(Flow::Halt);
+                        }
+                        anyhow::bail!("worker {} lost neighbor {peer} mid-run", self.me);
+                    }
+                    TcpFaultMode::Detected => {
+                        self.down[peer] = true;
+                        if let Some(cluster) = &self.cluster {
+                            cluster.mark_dead(peer, self.me);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Flow::Continue)
+    }
+
+    /// Re-stitch over the current membership: adopt the shared plan,
+    /// reset duals/mirrors/compressor, and exchange one full-precision
+    /// resync broadcast with each new neighbor over the standing mesh.
+    fn restitch(
+        &mut self,
+        theta: &[f32],
+        compressor: &mut CompressorKind,
+        own_view: &mut [f32],
+    ) -> anyhow::Result<Flow> {
+        let Some(plan) = self.membership.restitch_plan() else {
+            return Ok(Flow::Exhausted);
+        };
+        self.topo = plan;
+        let (is_head, links) = links_for(&self.topo, self.me, self.dims);
+        self.is_head = is_head;
+        self.links = links;
+        compressor.reset_to(theta);
+        own_view.copy_from_slice(theta);
+        let resync = Message {
+            from: self.me,
+            round: RESYNC_ROUND,
+            payload: Payload::Full(theta.to_vec()),
+        };
+        let peers: Vec<usize> = self.links.iter().map(|l| l.peer).collect();
+        for &peer in &peers {
+            if self.write_frame(peer, &resync).is_err() {
+                if self.stopping() {
+                    return Ok(Flow::Halt);
+                }
+                anyhow::bail!(
+                    "worker {} lost surviving neighbor {peer} during re-stitch",
+                    self.me
+                );
+            }
+        }
+        for (i, &peer) in peers.iter().enumerate() {
+            loop {
+                let got = recv_where(&self.inbox, &mut self.pending, self.timeout, |m| {
+                    m.from == peer && m.round == RESYNC_ROUND
+                })?;
+                match got {
+                    Got::Frame(m) => {
+                        // `Payload::Full` application is an exact copy —
+                        // the receiving mirror lands on the sender's θ.
+                        self.links[i].mirror.apply_payload(&m.payload);
+                        break;
+                    }
+                    Got::Stop => return Ok(Flow::Halt),
+                    Got::Down(q) => {
+                        if q == peer {
+                            anyhow::bail!("worker {q} died during re-stitch recovery");
+                        }
+                        self.peer_down(q)?;
+                    }
+                }
+            }
+        }
+        Ok(Flow::Continue)
+    }
+
+    /// Best-effort `Stop` markers to the current links (early-stop
+    /// cascade; a peer already gone is the expected end state).
+    fn send_stop(&mut self) {
+        let peers: Vec<usize> = self.links.iter().map(|l| l.peer).collect();
+        for &peer in &peers {
+            let msg = Message {
+                from: self.me,
+                round: STOP_ROUND,
+                payload: Payload::Stop,
+            };
+            let _ = self.write_frame(peer, &msg);
+        }
+    }
+}
+
+/// The TCP worker body — the threaded driver's `worker_main` with wire
+/// frames for transport and the membership layer at every iteration
+/// boundary.
+fn worker_main(mut w: Worker, mut solver: Box<dyn WorkerSolver>) -> anyhow::Result<WorkerExit> {
+    let d = w.dims;
+    let mut theta = vec![0.0f32; d];
+    let mut compressor = w.cfg.compressor.build_for(&solver.block_layout());
+    let mut rho = w.cfg.rho;
+    let lockstep = w.rho_latch.is_some();
+    let mut own_view = vec![0.0f32; d];
+    let mut comm = CommStats::default();
+    if let Some(init) = w.initial_theta.take() {
+        theta.copy_from_slice(&init);
+        own_view.copy_from_slice(&init);
+        compressor.reset_to(&init);
+        for link in w.links.iter_mut() {
+            link.mirror.reset_to(&init);
+        }
+    }
+
+    let mut halted = false;
+    let mut completed = 0u64;
+    'iterations: for k in 1..=w.iterations {
+        if k > w.stop_at.load(Ordering::Acquire) {
+            halted = true;
+            break 'iterations;
+        }
+
+        // Membership boundary: scheduled victims leave, survivors adopt
+        // the shared re-stitch plan — before any phase of iteration k.
+        match w.fault {
+            TcpFaultMode::Announced => {
+                let due = w.schedule.due(k);
+                if !due.is_empty() {
+                    if due.iter().any(|dr| dr.worker == w.me) {
+                        w.close_all();
+                        return Ok(WorkerExit {
+                            iterations: completed,
+                            theta,
+                            comm,
+                        });
+                    }
+                    for dr in &due {
+                        w.membership.mark_dead(dr.worker);
+                    }
+                    match w.restitch(&theta, &mut compressor, &mut own_view)? {
+                        Flow::Continue => {}
+                        Flow::Halt => {
+                            halted = true;
+                            break 'iterations;
+                        }
+                        Flow::Exhausted => break 'iterations,
+                    }
+                }
+            }
+            TcpFaultMode::Detected => {
+                // Only the victim consults the schedule; everyone else
+                // learns from the sockets.
+                if w.schedule.due(k).iter().any(|dr| dr.worker == w.me) {
+                    w.close_all();
+                    return Ok(WorkerExit {
+                        iterations: completed,
+                        theta,
+                        comm,
+                    });
+                }
+                if let Some(cluster) = w.cluster.clone() {
+                    match cluster.begin_iteration(w.me, k, w.my_generation) {
+                        Boundary::Run => {}
+                        Boundary::Restitch { generation, dead } => {
+                            w.my_generation = generation;
+                            for (q, &is_dead) in dead.iter().enumerate() {
+                                if is_dead {
+                                    w.down[q] = true;
+                                    w.membership.mark_dead(q);
+                                }
+                            }
+                            match w.restitch(&theta, &mut compressor, &mut own_view)? {
+                                Flow::Continue => {}
+                                Flow::Halt => {
+                                    halted = true;
+                                    break 'iterations;
+                                }
+                                Flow::Exhausted => break 'iterations,
+                            }
+                        }
+                        Boundary::Aborted => {
+                            anyhow::bail!("cascading crash during recovery is unsupported")
+                        }
+                    }
+                }
+            }
+        }
+
+        if let Some(latch) = &w.rho_latch {
+            rho = latch.rho_for(k)?;
+        }
+
+        // Tails receive the heads' fresh broadcasts before solving.
+        if !w.is_head && w.recv_phase(k)? {
+            halted = true;
+            break 'iterations;
+        }
+
+        // Local primal solve (eq. (14)–(17)).
+        {
+            let mut buf = LinkBuf::new();
+            for link in &w.links {
+                buf.push(NeighborLink {
+                    sign: link.sign,
+                    lambda: link.lambda.as_slice(),
+                    theta: link.mirror.theta_hat(),
+                });
+            }
+            let nctx = buf.ctx(rho);
+            solver.solve(&nctx, &mut theta);
+        }
+
+        // Broadcast the update. Censored rounds still send the 0-bit
+        // marker frame — the transport doubles as the phase barrier.
+        let outcome = compressor.compress_into(&theta, &mut w.rng, &mut own_view);
+        let bits = outcome.bits;
+        let payload = compressor.last_payload();
+        if outcome.sent() {
+            comm.record(bits, 0.0);
+        } else {
+            comm.record_censored();
+        }
+        match w.send_links(k, &payload)? {
+            Flow::Continue => {}
+            Flow::Halt | Flow::Exhausted => {
+                halted = true;
+                break 'iterations;
+            }
+        }
+
+        // Heads receive the tails' iteration-k broadcasts after sending.
+        if w.is_head && w.recv_phase(k)? {
+            halted = true;
+            break 'iterations;
+        }
+
+        // Local dual updates (eq. (18)) from the shared θ̂s.
+        let step = w.cfg.dual_step * rho;
+        for link in w.links.iter_mut() {
+            let nb = link.mirror.theta_hat();
+            if link.sign > 0.0 {
+                for j in 0..d {
+                    link.lambda[j] += step * (nb[j] - own_view[j]);
+                }
+            } else {
+                for j in 0..d {
+                    link.lambda[j] += step * (own_view[j] - nb[j]);
+                }
+            }
+        }
+
+        completed = k;
+
+        if let Some(tx) = &w.report {
+            let is_eval = k % w.eval_every == 0;
+            let objective = if w.needs_objective && is_eval {
+                solver.objective(&theta)
+            } else {
+                0.0
+            };
+            let theta_out = if is_eval || k == w.iterations || lockstep {
+                Some(theta.clone())
+            } else {
+                None
+            };
+            let view_out = if lockstep { Some(own_view.clone()) } else { None };
+            let blocks = compressor
+                .as_blocks()
+                .map(|bc| {
+                    bc.last_outcomes()
+                        .iter()
+                        .map(|o| (if o.sent() { o.bits } else { 0 }, o.radius, o.sent()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            tx.send(TcpReport {
+                worker: w.me,
+                iteration: k,
+                theta: theta_out,
+                objective,
+                bits,
+                radius: outcome.radius,
+                sent: outcome.sent(),
+                blocks,
+                view: view_out,
+            })
+            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+        }
+    }
+
+    if halted {
+        w.send_stop();
+    }
+    w.close_all();
+    Ok(WorkerExit {
+        iterations: completed,
+        theta,
+        comm,
+    })
+}
+
+/// Run (Q-)GADMM over real TCP sockets, honoring every [`RunOptions`]
+/// field exactly like the other drivers.
+///
+/// With `tcp.listen == None` (the default) the whole fleet runs in this
+/// process: one worker thread per solver, a full loopback mesh on
+/// ephemeral ports, and the threaded driver's leader aggregation — so an
+/// ideal-loopback run is bit-for-bit the sim/threaded/engine run for the
+/// same seed, and `dropouts` recover through the shared
+/// [`coordinator::membership`] plan.
+///
+/// With `tcp.listen == Some(addr)` this process hosts exactly one worker
+/// (the position of `addr` in `tcp.peers`); every process synthesizes
+/// the same problem from the same seed and drives its own solver. There
+/// is no leader: evals, early stopping, adaptive ρ, and fault injection
+/// are unavailable, and the returned summary carries only this worker's
+/// own transmission accounting and final model.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tcp_on(
+    topo: &Topology,
+    cfg: &GadmmConfig,
+    tcp: &TcpConfig,
+    dropouts: &[Dropout],
+    points: Vec<Point>,
+    solvers: Vec<Box<dyn WorkerSolver>>,
+    opts: &RunOptions,
+    seed: u64,
+    initial_theta: Option<&[f32]>,
+    needs_objective: bool,
+    metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
+    observer: &mut dyn Observer,
+) -> anyhow::Result<RunSummary> {
+    let n = solvers.len();
+    assert_eq!(cfg.workers, n, "config/solver count mismatch");
+    assert_eq!(topo.len(), n, "topology/solver count mismatch");
+    assert_eq!(points.len(), n, "deployment points/solver count mismatch");
+    assert!(n >= 2, "GADMM needs at least two workers");
+    if !dropouts.is_empty() {
+        anyhow::ensure!(
+            matches!(opts.rho_policy, RhoPolicy::Fixed),
+            "adaptive rho and fault injection are mutually exclusive on the tcp driver"
+        );
+        for dr in dropouts {
+            anyhow::ensure!(
+                dr.worker < n,
+                "dropout names worker {} but the fleet has {n}",
+                dr.worker
+            );
+        }
+    }
+    if tcp.listen.is_some() {
+        return run_multiprocess(
+            topo,
+            cfg,
+            tcp,
+            dropouts,
+            points,
+            solvers,
+            opts,
+            seed,
+            initial_theta,
+        );
+    }
+    anyhow::ensure!(
+        tcp.peers.is_empty(),
+        "peers= requires listen= (multi-process mode)"
+    );
+    run_single_process(
+        topo,
+        cfg,
+        tcp,
+        dropouts,
+        points,
+        solvers,
+        opts,
+        seed,
+        initial_theta,
+        needs_objective,
+        metric,
+        observer,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_single_process(
+    topo: &Topology,
+    cfg: &GadmmConfig,
+    tcp: &TcpConfig,
+    dropouts: &[Dropout],
+    points: Vec<Point>,
+    solvers: Vec<Box<dyn WorkerSolver>>,
+    opts: &RunOptions,
+    seed: u64,
+    initial_theta: Option<&[f32]>,
+    needs_objective: bool,
+    mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
+    observer: &mut dyn Observer,
+) -> anyhow::Result<RunSummary> {
+    let wall = Instant::now();
+    let n = solvers.len();
+    let d = solvers[0].dims();
+    if let Some(init) = initial_theta {
+        assert_eq!(init.len(), d, "initial theta dimension mismatch");
+    }
+    let eval_every = opts.normalized_eval_every();
+    let timeout = Duration::from_millis(tcp.timeout_ms.max(1));
+    let block_names: Vec<String> = solvers[0]
+        .block_layout()
+        .blocks()
+        .iter()
+        .map(|b| b.name.clone())
+        .collect();
+
+    let meshes = local_mesh(n, d, timeout)?;
+    let (report_tx, report_rx) = channel::<TcpReport>();
+    let stop_at = Arc::new(AtomicU64::new(u64::MAX));
+    let rho_latch = match opts.rho_policy {
+        RhoPolicy::Fixed => None,
+        _ => Some(Arc::new(RhoLatch::new(cfg.rho))),
+    };
+    let cluster = match tcp.fault_mode {
+        TcpFaultMode::Detected => Some(Arc::new(Cluster::new(n))),
+        TcpFaultMode::Announced => None,
+    };
+    let mut rho = cfg.rho;
+    let mut tracker = rho_latch.as_ref().map(|_| ResidualTracker::new(n, d));
+    let mut residuals = Vec::new();
+
+    // Seed forks must match the deterministic engine exactly (identity
+    // chain: worker id == position, enforced by the session layer).
+    let mut root = Rng::seed_from_u64(seed);
+    let rngs: Vec<Rng> = (0..n).map(|p| root.fork(p as u64)).collect();
+    let mut scheduled = vec![false; n];
+    for dr in dropouts {
+        scheduled[dr.worker] = true;
+    }
+
+    let mut handles = Vec::with_capacity(n);
+    for (me, (solver, (mesh, rng))) in solvers
+        .into_iter()
+        .zip(meshes.into_iter().zip(rngs.into_iter()))
+        .enumerate()
+    {
+        let (is_head, links) = links_for(topo, me, d);
+        let worker = Worker {
+            me,
+            dims: d,
+            cfg: cfg.clone(),
+            fault: tcp.fault_mode,
+            topo: topo.clone(),
+            membership: Membership::new(points.clone()),
+            schedule: DropoutSchedule::new(dropouts),
+            scheduled: scheduled.clone(),
+            is_head,
+            links,
+            streams: mesh.streams,
+            inbox: mesh.inbox,
+            pending: VecDeque::new(),
+            down: vec![false; n],
+            rng,
+            timeout,
+            report: Some(report_tx.clone()),
+            iterations: opts.iterations,
+            eval_every,
+            needs_objective,
+            stop_at: Arc::clone(&stop_at),
+            rho_latch: rho_latch.clone(),
+            cluster: cluster.clone(),
+            my_generation: 0,
+            initial_theta: initial_theta.map(|t| t.to_vec()),
+        };
+        handles.push(std::thread::spawn(move || worker_main(worker, solver)));
+    }
+    drop(report_tx);
+
+    // Leader: the threaded driver's aggregation, plus the membership
+    // boundary (dropout/re-stitch accounting) ahead of each iteration.
+    let mut recorder = Recorder::new("tcp-run");
+    let mut comm = CommStats::default();
+    let mut thetas = vec![vec![0.0f32; d]; n];
+    let mut views = vec![vec![0.0f32; d]; n];
+    if let Some(init) = initial_theta {
+        for t in thetas.iter_mut() {
+            t.copy_from_slice(init);
+        }
+        for v in views.iter_mut() {
+            v.copy_from_slice(init);
+        }
+    }
+    let watch = observer.wants_broadcasts();
+    let mut telemetry = TelemetrySink::for_observer(observer);
+    let clock = if telemetry.enabled() {
+        WallClock::start()
+    } else {
+        WallClock::inactive()
+    };
+    let mut metrics = if telemetry.enabled() {
+        RunMetrics::active()
+    } else {
+        RunMetrics::disabled()
+    };
+    if telemetry.enabled() {
+        // The full mesh is up before iteration 1 — one event per pair.
+        let t = clock.now_ns();
+        for i in 0..n {
+            for j in i + 1..n {
+                telemetry.record(
+                    t,
+                    Event::Connected {
+                        iteration: 0,
+                        worker: i,
+                        peer: j,
+                    },
+                );
+            }
+        }
+    }
+
+    let mut topo = topo.clone();
+    let mut membership = Membership::new(points);
+    let mut schedule = DropoutSchedule::new(dropouts);
+    let mut leader_generation = 0u64;
+    let mut rounds = 0u64;
+    let mut pending: BTreeMap<u64, Vec<TcpReport>> = BTreeMap::new();
+    let mut iterations_run = 0u64;
+    'iters: for k in 1..=opts.iterations {
+        // Membership boundary — mirrors the sim's apply_scheduled_dropouts
+        // (announced) or folds in the cluster's agreed plan (detected).
+        match tcp.fault_mode {
+            TcpFaultMode::Announced => {
+                let due = schedule.due(k);
+                if !due.is_empty() {
+                    for dr in &due {
+                        if membership.mark_dead(dr.worker) && telemetry.enabled() {
+                            telemetry.record(
+                                clock.now_ns(),
+                                Event::Dropout {
+                                    iteration: k,
+                                    worker: dr.worker,
+                                },
+                            );
+                        }
+                    }
+                    match membership.restitch_plan() {
+                        Some(plan) => {
+                            topo = plan;
+                            leader_restitch_accounting(
+                                &topo,
+                                d,
+                                k,
+                                &mut comm,
+                                &mut telemetry,
+                                &clock,
+                            );
+                        }
+                        None => {
+                            // Fewer than two survivors: the run ends
+                            // before iteration k, exactly like the sim.
+                            telemetry.flush_to(observer);
+                            break 'iters;
+                        }
+                    }
+                }
+            }
+            TcpFaultMode::Detected => {
+                let cl = cluster.as_ref().expect("detected mode has a cluster");
+                if cl.aborted() {
+                    anyhow::bail!("cascading crash during recovery is unsupported");
+                }
+                if let Some((generation, dead)) = cl.plan_due(k, leader_generation) {
+                    leader_generation = generation;
+                    for (wkr, &is_dead) in dead.iter().enumerate() {
+                        if is_dead && membership.is_alive(wkr) {
+                            if telemetry.enabled() {
+                                telemetry.record(
+                                    clock.now_ns(),
+                                    Event::Disconnected {
+                                        iteration: k,
+                                        worker: cl.detected_by(wkr),
+                                        peer: wkr,
+                                    },
+                                );
+                            }
+                            membership.mark_dead(wkr);
+                        }
+                    }
+                    match membership.restitch_plan() {
+                        Some(plan) => {
+                            topo = plan;
+                            leader_restitch_accounting(
+                                &topo,
+                                d,
+                                k,
+                                &mut comm,
+                                &mut telemetry,
+                                &clock,
+                            );
+                        }
+                        None => {
+                            telemetry.flush_to(observer);
+                            break 'iters;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Collect this iteration's reports. The expected set shrinks when
+        // the cluster learns of deaths (detected mode); a dead worker
+        // that reported k before dying still counts.
+        let deadline = Instant::now() + timeout;
+        loop {
+            let reported = pending.get(&k);
+            let have = reported.map(|v| v.len()).unwrap_or(0);
+            let expect = match &cluster {
+                None => topo.len(),
+                Some(cl) => {
+                    let dead = cl.dead_snapshot();
+                    (0..topo.len())
+                        .filter(|&p| {
+                            let wkr = topo.worker_at(p);
+                            !dead[wkr]
+                                || reported
+                                    .map(|v| v.iter().any(|r| r.worker == wkr))
+                                    .unwrap_or(false)
+                        })
+                        .count()
+                }
+            };
+            if have >= expect {
+                break;
+            }
+            match report_rx.recv_timeout(LEADER_POLL) {
+                Ok(rep) => {
+                    if rep.iteration < k {
+                        // A worker that died right after reporting: the
+                        // leader closed that iteration on the shrunken
+                        // expected set before draining this report. The
+                        // round is already accounted — drop the echo.
+                        continue;
+                    }
+                    pending.entry(rep.iteration).or_default().push(rep);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(cl) = &cluster {
+                        if cl.aborted() {
+                            anyhow::bail!("cascading crash during recovery is unsupported");
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "leader starved at iteration {k}"
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("leader lost every worker at iteration {k}")
+                }
+            }
+        }
+        let batch = pending.remove(&k).unwrap_or_default();
+        // Slot by current-topology position so the objective sum (float
+        // addition is order-sensitive) accumulates in position order,
+        // exactly like the engine's and sim's metric paths.
+        let mut pos_of: Vec<Option<usize>> = vec![None; n];
+        for p in 0..topo.len() {
+            pos_of[topo.worker_at(p)] = Some(p);
+        }
+        let mut slots: Vec<Option<TcpReport>> = (0..topo.len()).map(|_| None).collect();
+        for rep in batch {
+            let Some(p) = pos_of[rep.worker] else {
+                continue; // ghost report from a worker no longer chained
+            };
+            assert!(slots[p].is_none(), "duplicate report from worker {}", rep.worker);
+            slots[p] = Some(rep);
+        }
+        let mut objective_sum = 0.0f64;
+        for rep in slots.iter().flatten() {
+            objective_sum += rep.objective;
+            comm.bits += rep.bits; // 0 for censored rounds
+            if rep.sent {
+                comm.transmissions += 1;
+            } else {
+                comm.record_censored();
+            }
+        }
+        if watch {
+            for phase in 0..2 {
+                for (p, slot) in slots.iter().enumerate() {
+                    let Some(rep) = slot else { continue };
+                    if topo.is_head(p) != (phase == 0) {
+                        continue;
+                    }
+                    observer.on_broadcast(&BroadcastEvent {
+                        iteration: k,
+                        worker: topo.worker_at(p),
+                        bits: rep.bits,
+                        censored: !rep.sent,
+                    });
+                }
+            }
+        }
+        if telemetry.enabled() {
+            let t = clock.now_ns();
+            telemetry.record(t, Event::IterStart { iteration: k });
+            for phase in 0..2 {
+                let tag = if phase == 0 { Phase::Head } else { Phase::Tail };
+                telemetry.record(
+                    t,
+                    Event::PhaseStart {
+                        iteration: k,
+                        phase: tag,
+                    },
+                );
+                for (p, slot) in slots.iter().enumerate() {
+                    let Some(rep) = slot else { continue };
+                    if topo.is_head(p) != (phase == 0) {
+                        continue;
+                    }
+                    telemetry.record(
+                        t,
+                        Event::Compress {
+                            iteration: k,
+                            worker: topo.worker_at(p),
+                            bits: rep.bits,
+                            radius: rep.radius,
+                            censored: !rep.sent,
+                        },
+                    );
+                    metrics.on_broadcast(rep.bits, rep.radius, rep.sent);
+                    for (name, &(bbits, bradius, bsent)) in
+                        block_names.iter().zip(&rep.blocks)
+                    {
+                        telemetry.record(
+                            t,
+                            Event::CompressBlock {
+                                iteration: k,
+                                worker: topo.worker_at(p),
+                                block: name.clone(),
+                                bits: bbits,
+                                radius: bradius,
+                                censored: !bsent,
+                            },
+                        );
+                        metrics.on_broadcast_block(bbits, bsent);
+                    }
+                }
+                telemetry.record(
+                    t,
+                    Event::PhaseEnd {
+                        iteration: k,
+                        phase: tag,
+                    },
+                );
+            }
+            telemetry.record(
+                t,
+                Event::PhaseStart {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+            telemetry.record(
+                t,
+                Event::PhaseEnd {
+                    iteration: k,
+                    phase: Phase::Dual,
+                },
+            );
+            telemetry.record(t, Event::IterEnd { iteration: k });
+        }
+        if let Some(tracker) = tracker.as_mut() {
+            tracker.begin_iteration(&views);
+        }
+        for (p, slot) in slots.into_iter().enumerate() {
+            let Some(rep) = slot else { continue };
+            let wkr = topo.worker_at(p);
+            if let Some(theta) = rep.theta {
+                thetas[wkr] = theta;
+            }
+            if let Some(view) = rep.view {
+                views[wkr] = view;
+            }
+        }
+        if let (Some(tracker), Some(latch)) = (tracker.as_mut(), rho_latch.as_ref()) {
+            // Adaptive ρ excludes fault injection (validated above), so
+            // worker id == position here and the residual math is the
+            // threaded driver's, bit for bit.
+            let point = tracker.end_iteration(k, &thetas, &views, rho, &topo);
+            rho = opts.rho_policy.next_rho(rho, &point);
+            residuals.push(point);
+            latch.publish(k, rho);
+        }
+        rounds += topo.len() as u64;
+        iterations_run = k;
+        if k % eval_every == 0 {
+            let chain_thetas: Vec<Vec<f32>> = (0..topo.len())
+                .map(|p| thetas[topo.worker_at(p)].clone())
+                .collect();
+            let value = metric(objective_sum, &chain_thetas);
+            let point = CurvePoint {
+                iteration: k,
+                comm_rounds: rounds,
+                bits: comm.bits,
+                energy_joules: 0.0,
+                compute_secs: 0.0,
+                value,
+            };
+            recorder.push(point);
+            observer.on_eval(&point);
+            let stop = opts.stop_below.map(|t| value <= t).unwrap_or(false)
+                || opts.stop_above.map(|t| value >= t).unwrap_or(false);
+            if telemetry.enabled() {
+                let t = clock.now_ns();
+                telemetry.record(t, Event::Eval { iteration: k, value });
+                if stop {
+                    telemetry.record(t, Event::EarlyStop { iteration: k, value });
+                }
+            }
+            if stop {
+                stop_at.store(k, Ordering::Release);
+                telemetry.flush_to(observer);
+                break 'iters;
+            }
+        }
+        telemetry.flush_to(observer);
+    }
+
+    for h in handles {
+        let _ = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("tcp worker thread panicked"))??;
+    }
+    let thetas_out: Vec<Vec<f32>> = if membership.live_count() < 2 {
+        membership.live().iter().map(|&w| thetas[w].clone()).collect()
+    } else {
+        (0..topo.len())
+            .map(|p| thetas[topo.worker_at(p)].clone())
+            .collect()
+    };
+    Ok(RunSummary {
+        driver: "tcp",
+        wall_secs: wall.elapsed().as_secs_f64(),
+        recorder,
+        comm,
+        residuals,
+        iterations_run,
+        thetas: thetas_out,
+        sim: None,
+        metrics: metrics.snapshot(),
+    })
+}
+
+/// The leader's side of a re-stitch: one charged full-precision resync
+/// per survivor (ascending position, matching the sim), then the
+/// re-stitch event itself.
+fn leader_restitch_accounting(
+    topo: &Topology,
+    dims: usize,
+    k: u64,
+    comm: &mut CommStats,
+    telemetry: &mut TelemetrySink,
+    clock: &WallClock,
+) {
+    let t = clock.now_ns();
+    for p in 0..topo.len() {
+        let wkr = topo.worker_at(p);
+        comm.record(resync_bits(dims), 0.0);
+        if telemetry.enabled() {
+            telemetry.record(
+                t,
+                Event::Resync {
+                    iteration: k,
+                    worker: wkr,
+                },
+            );
+        }
+    }
+    if telemetry.enabled() {
+        telemetry.record(
+            t,
+            Event::Restitch {
+                iteration: k,
+                survivors: topo.len(),
+            },
+        );
+    }
+}
+
+/// Host one worker of a multi-process fleet: bind `tcp.listen`, mesh
+/// with every peer in `tcp.peers` (position order), and drive the local
+/// solver. Leaderless — see [`run_tcp_on`] for what that excludes.
+#[allow(clippy::too_many_arguments)]
+fn run_multiprocess(
+    topo: &Topology,
+    cfg: &GadmmConfig,
+    tcp: &TcpConfig,
+    dropouts: &[Dropout],
+    points: Vec<Point>,
+    solvers: Vec<Box<dyn WorkerSolver>>,
+    opts: &RunOptions,
+    seed: u64,
+    initial_theta: Option<&[f32]>,
+) -> anyhow::Result<RunSummary> {
+    let wall = Instant::now();
+    let n = solvers.len();
+    let listen = tcp.listen.as_deref().expect("multi-process mode has listen");
+    anyhow::ensure!(
+        dropouts.is_empty(),
+        "fault injection needs the single-process harness (drop --listen/--peers)"
+    );
+    anyhow::ensure!(
+        matches!(opts.rho_policy, RhoPolicy::Fixed),
+        "adaptive rho needs a leader; multi-process tcp runs are fixed-rho"
+    );
+    anyhow::ensure!(
+        tcp.peers.len() == n,
+        "peers must name every worker in position order (got {}, workers {n})",
+        tcp.peers.len()
+    );
+    let me = tcp
+        .peers
+        .iter()
+        .position(|a| a == listen)
+        .ok_or_else(|| anyhow::anyhow!("listen address {listen} is not in the peers list"))?;
+    let addrs: Vec<SocketAddr> = tcp
+        .peers
+        .iter()
+        .map(|a| {
+            a.parse()
+                .map_err(|e| anyhow::anyhow!("bad peer address {a}: {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let d = solvers[0].dims();
+    let timeout = Duration::from_millis(tcp.timeout_ms.max(1));
+    let listener = TcpListener::bind(addrs[me])?;
+    let streams = connect_mesh(me, listener, &addrs, Instant::now() + timeout)?;
+    let mesh = into_mesh(n, d, streams)?;
+
+    // Every process forks the full RNG fan so worker `me` gets the same
+    // stream it would in a single-process run of the same seed.
+    let mut root = Rng::seed_from_u64(seed);
+    let mut rngs: Vec<Rng> = (0..n).map(|p| root.fork(p as u64)).collect();
+    let rng = rngs.swap_remove(me);
+    let mut solvers = solvers;
+    let solver = solvers.swap_remove(me);
+    let (is_head, links) = links_for(topo, me, d);
+    let worker = Worker {
+        me,
+        dims: d,
+        cfg: cfg.clone(),
+        fault: tcp.fault_mode,
+        topo: topo.clone(),
+        membership: Membership::new(points),
+        schedule: DropoutSchedule::new(dropouts),
+        scheduled: vec![false; n],
+        is_head,
+        links,
+        streams: mesh.streams,
+        inbox: mesh.inbox,
+        pending: VecDeque::new(),
+        down: vec![false; n],
+        rng,
+        timeout,
+        report: None,
+        iterations: opts.iterations,
+        eval_every: opts.normalized_eval_every(),
+        needs_objective: false,
+        stop_at: Arc::new(AtomicU64::new(u64::MAX)),
+        rho_latch: None,
+        cluster: None,
+        my_generation: 0,
+        initial_theta: initial_theta.map(|t| t.to_vec()),
+    };
+    let exit = worker_main(worker, solver)?;
+    Ok(RunSummary {
+        driver: "tcp",
+        wall_secs: wall.elapsed().as_secs_f64(),
+        recorder: Recorder::new("tcp-worker"),
+        comm: exit.comm,
+        residuals: Vec::new(),
+        iterations_run: exit.iterations,
+        thetas: vec![exit.theta],
+        sim: None,
+        metrics: RunMetrics::disabled().snapshot(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressorConfig, QuantConfig};
+    use crate::coordinator::threaded::run_threaded;
+    use crate::data::linreg::{LinRegDataset, LinRegSpec};
+    use crate::data::partition::Partition;
+    use crate::metrics::NoopObserver;
+    use crate::model::linreg::LinRegProblem;
+    use crate::net::geometry::collinear;
+
+    fn solvers(workers: usize, rho: f32, seed: u64) -> (LinRegDataset, Vec<Box<dyn WorkerSolver>>) {
+        let spec = LinRegSpec {
+            samples: 1_200,
+            ..LinRegSpec::default()
+        };
+        let data = LinRegDataset::synthesize(&spec, seed);
+        let part = Partition::contiguous(data.samples(), workers);
+        let problem = LinRegProblem::new(&data, &part, rho);
+        let boxed: Vec<Box<dyn WorkerSolver>> = problem
+            .into_workers()
+            .into_iter()
+            .map(|w| Box::new(w) as Box<dyn WorkerSolver>)
+            .collect();
+        (data, boxed)
+    }
+
+    fn quant_cfg(workers: usize) -> GadmmConfig {
+        GadmmConfig {
+            workers,
+            rho: 1600.0,
+            dual_step: 1.0,
+            compressor: CompressorConfig::Stochastic(QuantConfig::default()),
+            threads: 0,
+        }
+    }
+
+    fn opts(iterations: u64) -> RunOptions {
+        RunOptions {
+            iterations,
+            eval_every: 1,
+            ..RunOptions::default()
+        }
+    }
+
+    #[test]
+    fn mesh_delivers_frames_and_reports_closes() {
+        let mut meshes = local_mesh(3, 4, Duration::from_secs(10)).unwrap();
+        let msg = Message {
+            from: 0,
+            round: 7,
+            payload: Payload::Full(vec![1.0, 2.0, 3.0, 4.0]),
+        };
+        meshes[0].streams[1]
+            .as_mut()
+            .unwrap()
+            .write_all(&wire::encode_frame(&msg))
+            .unwrap();
+        match meshes[1].inbox.recv_timeout(Duration::from_secs(10)).unwrap() {
+            NetEvent::Frame(got) => {
+                assert_eq!(got.from, 0);
+                assert_eq!(got.round, 7);
+                match got.payload {
+                    Payload::Full(v) => assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]),
+                    other => panic!("variant changed across the wire: {other:?}"),
+                }
+            }
+            NetEvent::PeerDown(_) => panic!("expected a frame"),
+        }
+        // Closing 0's socket to 1 surfaces as PeerDown(0) on 1's inbox.
+        meshes[0].streams[1]
+            .as_ref()
+            .unwrap()
+            .shutdown(Shutdown::Both)
+            .unwrap();
+        match meshes[1].inbox.recv_timeout(Duration::from_secs(10)).unwrap() {
+            NetEvent::PeerDown(p) => assert_eq!(p, 0),
+            NetEvent::Frame(_) => panic!("expected a close"),
+        }
+    }
+
+    #[test]
+    fn tcp_matches_threaded_bit_for_bit() {
+        let workers = 4;
+        let (data, boxed) = solvers(workers, 1600.0, 21);
+        let (_, f_star) = data.optimum();
+        let cfg = quant_cfg(workers);
+        let thr = run_threaded(&cfg, boxed, &opts(120), 7, |obj_sum, _| {
+            (obj_sum - f_star).abs()
+        })
+        .unwrap();
+
+        let (_, boxed) = solvers(workers, 1600.0, 21);
+        let topo = Topology::line(workers);
+        let tcp = run_tcp_on(
+            &topo,
+            &cfg,
+            &TcpConfig::default(),
+            &[],
+            collinear(workers, 50.0),
+            boxed,
+            &opts(120),
+            7,
+            None,
+            true,
+            |obj_sum, _| (obj_sum - f_star).abs(),
+            &mut NoopObserver,
+        )
+        .unwrap();
+
+        assert_eq!(tcp.driver, "tcp");
+        assert_eq!(tcp.thetas, thr.thetas, "trajectories diverged");
+        assert_eq!(tcp.comm.bits, thr.comm.bits);
+        assert_eq!(tcp.comm.transmissions, thr.comm.transmissions);
+        assert_eq!(tcp.recorder.points.len(), thr.recorder.points.len());
+        for (a, b) in tcp.recorder.points.iter().zip(&thr.recorder.points) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.comm_rounds, b.comm_rounds);
+        }
+    }
+
+    #[test]
+    fn announced_dropout_restitches_over_sockets() {
+        let workers = 5;
+        let (_, boxed) = solvers(workers, 1600.0, 23);
+        let cfg = GadmmConfig {
+            compressor: CompressorConfig::FullPrecision,
+            ..quant_cfg(workers)
+        };
+        let topo = Topology::line(workers);
+        let summary = run_tcp_on(
+            &topo,
+            &cfg,
+            &TcpConfig::default(),
+            &[Dropout {
+                worker: 2,
+                at_iteration: 5,
+            }],
+            collinear(workers, 50.0),
+            boxed,
+            &opts(40),
+            11,
+            None,
+            true,
+            |obj_sum, _| obj_sum,
+            &mut NoopObserver,
+        )
+        .unwrap();
+        assert_eq!(summary.iterations_run, 40);
+        assert_eq!(summary.thetas.len(), 4, "survivor chain after the dropout");
+        assert!(summary.final_value().is_finite());
+        // 4 pre-dropout iterations × 5 workers, the 4 resync broadcasts,
+        // then 36 × 4 survivors.
+        assert_eq!(summary.comm.transmissions, 4 * 5 + 4 + 36 * 4);
+    }
+
+    #[test]
+    fn detected_crash_recovers_over_sockets() {
+        let workers = 5;
+        let (_, boxed) = solvers(workers, 1600.0, 25);
+        let cfg = GadmmConfig {
+            compressor: CompressorConfig::FullPrecision,
+            ..quant_cfg(workers)
+        };
+        let topo = Topology::line(workers);
+        let tcp_cfg = TcpConfig {
+            fault_mode: TcpFaultMode::Detected,
+            ..TcpConfig::default()
+        };
+        let summary = run_tcp_on(
+            &topo,
+            &cfg,
+            &tcp_cfg,
+            &[Dropout {
+                worker: 1,
+                at_iteration: 6,
+            }],
+            collinear(workers, 50.0),
+            boxed,
+            &opts(40),
+            13,
+            None,
+            true,
+            |obj_sum, _| obj_sum,
+            &mut NoopObserver,
+        )
+        .unwrap();
+        assert_eq!(summary.iterations_run, 40);
+        assert_eq!(summary.thetas.len(), 4, "survivor chain after the crash");
+        assert!(summary.final_value().is_finite());
+    }
+
+    #[test]
+    fn multiprocess_mode_rejects_fault_injection() {
+        let workers = 2;
+        let (_, boxed) = solvers(workers, 1600.0, 27);
+        let cfg = GadmmConfig {
+            compressor: CompressorConfig::FullPrecision,
+            ..quant_cfg(workers)
+        };
+        let topo = Topology::line(workers);
+        let tcp_cfg = TcpConfig {
+            listen: Some("127.0.0.1:47001".into()),
+            peers: vec!["127.0.0.1:47001".into(), "127.0.0.1:47002".into()],
+            ..TcpConfig::default()
+        };
+        let err = run_tcp_on(
+            &topo,
+            &cfg,
+            &tcp_cfg,
+            &[Dropout {
+                worker: 0,
+                at_iteration: 2,
+            }],
+            collinear(workers, 50.0),
+            boxed,
+            &opts(5),
+            3,
+            None,
+            true,
+            |obj_sum, _| obj_sum,
+            &mut NoopObserver,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("single-process"), "{err}");
+    }
+}

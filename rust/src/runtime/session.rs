@@ -36,7 +36,7 @@
 
 use anyhow::Context as _;
 
-use crate::config::{ExperimentConfig, GadmmConfig, SimConfig};
+use crate::config::{Dropout, ExperimentConfig, GadmmConfig, SimConfig, TcpConfig};
 use crate::coordinator::engine::{GadmmEngine, InvalidRunOptions, RunOptions};
 use crate::coordinator::simulated::SimulatedGadmm;
 use crate::coordinator::threaded::run_threaded_on;
@@ -55,7 +55,8 @@ use crate::model::mlp::{MlpDims, MlpProblem};
 use crate::model::scale::DiagLinRegProblem;
 use crate::coordinator::residuals::RhoPolicy;
 use crate::model::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
-use crate::net::geometry::collinear;
+use crate::net::geometry::{collinear, Point};
+use crate::net::tcp::run_tcp_on;
 use crate::net::topology::{Topology, TopologyKind};
 
 /// Default disagreement penalty for the `logreg` task (its per-worker
@@ -66,7 +67,7 @@ pub const LOGREG_RHO: f32 = 50.0;
 /// The valid `--problem` spellings, cited by parse errors.
 pub const PROBLEM_KINDS: &str = "linreg, diag-linreg, mlp, logreg";
 /// The valid `--driver` spellings, cited by parse errors.
-pub const DRIVER_KINDS: &str = "engine, threaded, sim";
+pub const DRIVER_KINDS: &str = "engine, threaded, sim, tcp";
 
 /// The problem registry: which local problem (and figure of merit) a
 /// session trains.
@@ -119,6 +120,10 @@ pub enum DriverKind {
     Threaded,
     /// The discrete-event network simulator.
     Sim,
+    /// Real TCP sockets speaking the versioned wire format — a local
+    /// loopback cluster by default, or one worker of a multi-process
+    /// deployment via `TcpConfig::listen`/`peers`.
+    Tcp,
 }
 
 impl DriverKind {
@@ -128,6 +133,7 @@ impl DriverKind {
             "engine" | "deterministic" => Ok(DriverKind::Engine),
             "threaded" | "threads" | "distributed" => Ok(DriverKind::Threaded),
             "sim" | "simulated" | "simulator" => Ok(DriverKind::Sim),
+            "tcp" | "sockets" => Ok(DriverKind::Tcp),
             other => Err(format!(
                 "unknown driver {other:?}; valid drivers: {DRIVER_KINDS}"
             )),
@@ -139,6 +145,7 @@ impl DriverKind {
             DriverKind::Engine => "engine",
             DriverKind::Threaded => "threaded",
             DriverKind::Sim => "sim",
+            DriverKind::Tcp => "tcp",
         }
     }
 }
@@ -353,8 +360,8 @@ impl SessionProblem for LogRegSession {
 // Drivers
 // ---------------------------------------------------------------------
 
-/// One execution substrate behind the Session facade. All three
-/// implementations honor every [`RunOptions`] field and return the same
+/// One execution substrate behind the Session facade. Every
+/// implementation honors every [`RunOptions`] field and returns the same
 /// [`RunSummary`].
 pub trait Driver {
     /// Which substrate this is.
@@ -525,6 +532,58 @@ impl Driver for SimDriver {
     }
 }
 
+/// The real-socket runtime behind the [`Driver`] trait: a loopback TCP
+/// cluster by default, or one worker of a multi-process deployment when
+/// `TcpConfig::listen` is set. Like [`ThreadedDriver`], its solvers move
+/// onto the worker threads, so it runs exactly once.
+pub struct TcpDriver {
+    cfg: GadmmConfig,
+    topo: Topology,
+    seed: u64,
+    tcp: TcpConfig,
+    dropouts: Vec<Dropout>,
+    points: Vec<Point>,
+    problem: Option<Box<dyn SessionProblem>>,
+}
+
+impl Driver for TcpDriver {
+    fn kind(&self) -> DriverKind {
+        DriverKind::Tcp
+    }
+
+    fn run(
+        &mut self,
+        opts: &RunOptions,
+        observer: &mut dyn Observer,
+    ) -> anyhow::Result<RunSummary> {
+        opts.validate()?;
+        let mut problem = self.problem.take().ok_or_else(|| {
+            anyhow::anyhow!(
+                "a tcp session can only run once: its solvers moved onto the \
+                 worker threads on the first run"
+            )
+        })?;
+        let init = problem.initial_theta();
+        let solvers = problem.take_workers();
+        let needs_objective = problem.metric_kind() == MetricKind::LossGap;
+        let evaluator = problem;
+        run_tcp_on(
+            &self.topo,
+            &self.cfg,
+            &self.tcp,
+            &self.dropouts,
+            self.points.clone(),
+            solvers,
+            opts,
+            self.seed,
+            init.as_deref(),
+            needs_objective,
+            move |objective_sum, thetas| evaluator.evaluate(objective_sum, thetas),
+            observer,
+        )
+    }
+}
+
 // ---------------------------------------------------------------------
 // The Session builder
 // ---------------------------------------------------------------------
@@ -582,6 +641,7 @@ struct Resolved {
     topology: TopologyKind,
     gadmm: GadmmConfig,
     sim: SimConfig,
+    tcp: TcpConfig,
     opts: RunOptions,
     seed: u64,
     scale_dims: usize,
@@ -686,6 +746,13 @@ impl Session {
 
     pub fn sim_config(mut self, sim: SimConfig) -> Session {
         self.cfg.sim = sim;
+        self
+    }
+
+    /// Socket endpoints, timeout, and fault-detection mode for the tcp
+    /// driver (ignored by the in-process drivers).
+    pub fn tcp_config(mut self, tcp: TcpConfig) -> Session {
+        self.cfg.tcp = tcp;
         self
     }
 
@@ -841,6 +908,7 @@ impl Session {
             topology: cfg.topology,
             gadmm,
             sim: cfg.sim.clone(),
+            tcp: cfg.tcp.clone(),
             opts,
             seed: cfg.seed,
             scale_dims: cfg.scale_dims,
@@ -969,6 +1037,30 @@ impl Session {
                     r.seed,
                 ))
             }
+            DriverKind::Tcp => {
+                // Like the threaded runtime, the tcp harness maps solver p
+                // onto position p.
+                for p in 0..topo.len() {
+                    anyhow::ensure!(
+                        topo.worker_at(p) == p,
+                        "tcp sessions require identity position order"
+                    );
+                }
+                // Same collinear geometry as the sim driver, so the shared
+                // membership layer re-stitches both over identical
+                // nearest-neighbor chains (the tcp-vs-sim dropout
+                // equivalence suite depends on it).
+                let points = collinear(r.gadmm.workers, 50.0);
+                Box::new(TcpDriver {
+                    cfg: r.gadmm.clone(),
+                    topo,
+                    seed: r.seed,
+                    tcp: r.tcp.clone(),
+                    dropouts: r.sim.dropouts.clone(),
+                    points,
+                    problem: Some(problem),
+                })
+            }
         })
     }
 
@@ -1022,8 +1114,13 @@ mod tests {
         assert_eq!(DriverKind::parse("engine").unwrap(), DriverKind::Engine);
         assert_eq!(DriverKind::parse("threaded").unwrap(), DriverKind::Threaded);
         assert_eq!(DriverKind::parse("sim").unwrap(), DriverKind::Sim);
+        assert_eq!(DriverKind::parse("tcp").unwrap(), DriverKind::Tcp);
+        assert_eq!(DriverKind::parse("sockets").unwrap(), DriverKind::Tcp);
+        // Unknown names cite the offending value and the whole valid set.
         let err = DriverKind::parse("gpu").unwrap_err();
         assert!(err.contains("gpu") && err.contains("sim"), "{err}");
+        assert!(err.contains("engine") && err.contains("threaded"), "{err}");
+        assert!(err.contains("tcp"), "{err}");
     }
 
     #[test]
@@ -1102,7 +1199,12 @@ mod tests {
 
     #[test]
     fn session_runs_logreg_on_every_driver_to_target() {
-        for kind in [DriverKind::Engine, DriverKind::Threaded, DriverKind::Sim] {
+        for kind in [
+            DriverKind::Engine,
+            DriverKind::Threaded,
+            DriverKind::Sim,
+            DriverKind::Tcp,
+        ] {
             let summary = Session::new(ProblemKind::LogReg)
                 .quick(true)
                 .workers(4)

@@ -128,10 +128,30 @@ pub enum Event {
         to: usize,
         attempts: u32,
     },
-    /// Sim transport: a worker dropped out before this iteration.
+    /// Transport (sim or tcp): a worker dropped out before this iteration.
     Dropout { iteration: u64, worker: usize },
-    /// Sim transport: survivors re-stitched into a new chain.
+    /// Transport (sim or tcp): survivors re-stitched into a new chain
+    /// through the shared `coordinator::membership` plan.
     Restitch { iteration: u64, survivors: usize },
+    /// TCP transport: a socket connection between two workers was
+    /// established (dial or accept). `iteration` is 0 for the initial
+    /// fleet bring-up, or the iteration whose re-stitch dialed the link.
+    Connected {
+        iteration: u64,
+        worker: usize,
+        peer: usize,
+    },
+    /// TCP transport: a worker observed a peer's connection close (EOF or
+    /// socket error) — the crash-detection signal feeding the membership
+    /// layer.
+    Disconnected {
+        iteration: u64,
+        worker: usize,
+        peer: usize,
+    },
+    /// TCP transport: a survivor re-anchored its neighbors with a
+    /// full-precision resync broadcast after a re-stitch.
+    Resync { iteration: u64, worker: usize },
     /// An evaluation point was recorded.
     Eval { iteration: u64, value: f64 },
     /// The early-stop threshold was crossed; the run halts after this.
@@ -154,13 +174,17 @@ impl Event {
             Event::FrameAbandoned { .. } => "frame_abandoned",
             Event::Dropout { .. } => "dropout",
             Event::Restitch { .. } => "restitch",
+            Event::Connected { .. } => "connected",
+            Event::Disconnected { .. } => "disconnected",
+            Event::Resync { .. } => "resync",
             Event::Eval { .. } => "eval",
             Event::EarlyStop { .. } => "early_stop",
         }
     }
 
-    /// Transport-layer events only the sim can produce (frames, ARQ,
-    /// dropouts, re-stitches). The golden cross-driver trace compares the
+    /// Transport-layer events only a networked driver can produce (sim:
+    /// frames, ARQ, dropouts, re-stitches; tcp: connections, detected
+    /// disconnects, resyncs). The golden cross-driver trace compares the
     /// *algorithmic* subsequence — everything that is not transport.
     pub fn is_transport(&self) -> bool {
         matches!(
@@ -169,6 +193,9 @@ impl Event {
                 | Event::FrameAbandoned { .. }
                 | Event::Dropout { .. }
                 | Event::Restitch { .. }
+                | Event::Connected { .. }
+                | Event::Disconnected { .. }
+                | Event::Resync { .. }
         )
     }
 
@@ -185,6 +212,9 @@ impl Event {
             | Event::FrameAbandoned { iteration, .. }
             | Event::Dropout { iteration, .. }
             | Event::Restitch { iteration, .. }
+            | Event::Connected { iteration, .. }
+            | Event::Disconnected { iteration, .. }
+            | Event::Resync { iteration, .. }
             | Event::Eval { iteration, .. }
             | Event::EarlyStop { iteration, .. } => *iteration,
         }
@@ -235,11 +265,16 @@ impl Event {
                 obj.set("to", Json::Num(*to as f64));
                 obj.set("attempts", Json::Num(*attempts as f64));
             }
-            Event::Dropout { worker, .. } => {
+            Event::Dropout { worker, .. } | Event::Resync { worker, .. } => {
                 obj.set("worker", Json::Num(*worker as f64));
             }
             Event::Restitch { survivors, .. } => {
                 obj.set("survivors", Json::Num(*survivors as f64));
+            }
+            Event::Connected { worker, peer, .. }
+            | Event::Disconnected { worker, peer, .. } => {
+                obj.set("worker", Json::Num(*worker as f64));
+                obj.set("peer", Json::Num(*peer as f64));
             }
             Event::Eval { value, .. } | Event::EarlyStop { value, .. } => {
                 obj.set("value", Json::Num(*value));
@@ -442,6 +477,23 @@ mod tests {
         assert!(Event::Restitch {
             iteration: 1,
             survivors: 4
+        }
+        .is_transport());
+        assert!(Event::Connected {
+            iteration: 0,
+            worker: 0,
+            peer: 1
+        }
+        .is_transport());
+        assert!(Event::Disconnected {
+            iteration: 7,
+            worker: 1,
+            peer: 2
+        }
+        .is_transport());
+        assert!(Event::Resync {
+            iteration: 7,
+            worker: 1
         }
         .is_transport());
         assert!(!Event::Compress {

@@ -132,6 +132,57 @@ fn engine_threaded_and_sim_agree_per_scheme_and_topology() {
     }
 }
 
+/// The tcp driver on ideal loopback is the simulator bit-for-bit: same
+/// seed, same curve, same communication totals, same final models —
+/// across the quantizing, censoring, and per-block compressors on both
+/// line and ring topologies. Real sockets change the transport, not one
+/// bit of the algorithm.
+#[test]
+fn tcp_matches_sim_per_scheme_and_topology() {
+    let opts = RunOptions {
+        iterations: 30,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+        ..RunOptions::default()
+    };
+    let layered =
+        CompressorConfig::parse("layers:all=stochastic@4", QuantConfig::default()).unwrap();
+    let tcp_schemes: Vec<(&str, CompressorConfig)> = vec![
+        ("stochastic", CompressorConfig::Stochastic(QuantConfig::default())),
+        (
+            "censored",
+            CompressorConfig::Censored {
+                quant: QuantConfig::default(),
+                tau0: 0.01,
+                decay: 1.0,
+            },
+        ),
+        ("layers", layered),
+    ];
+    for topology in [TopologyKind::Line, TopologyKind::Ring] {
+        for (scheme, compressor) in &tcp_schemes {
+            let name = format!("{scheme} on {}", topology.name());
+            let run = |driver| {
+                session(
+                    ProblemKind::LinReg,
+                    driver,
+                    topology,
+                    compressor.clone(),
+                    opts.clone(),
+                )
+                .run()
+                .unwrap_or_else(|e| panic!("{name}: {driver:?} failed: {e}"))
+            };
+            let sim = run(DriverKind::Sim);
+            let tcp = run(DriverKind::Tcp);
+            assert_eq!(sim.driver, "sim");
+            assert_eq!(tcp.driver, "tcp");
+            assert_bit_equal(&name, &sim, &tcp);
+        }
+    }
+}
+
 /// RunOptions are honored uniformly: the same early-stop threshold makes
 /// every driver halt at the same iteration with the same final state.
 #[test]

@@ -1,0 +1,240 @@
+//! The shared membership/resync protocol over real sockets: the tcp
+//! driver's fault handling is the *same* state machine the simulator
+//! promotes into `coordinator::membership`, so a scheduled (announced)
+//! dropout over TCP must reproduce the simulator's run bit for bit —
+//! curve, communication ledger, and surviving models — and a *detected*
+//! crash (sockets break mid-run, survivors negotiate a re-stitch
+//! boundary) must recover to a smaller healthy chain.
+
+use qgadmm::coordinator::engine::RunOptions;
+use qgadmm::prelude::*;
+
+const WORKERS: usize = 6;
+const SEED: u64 = 424;
+
+fn dropout_sim_cfg(dropouts: Vec<Dropout>) -> SimConfig {
+    let mut sim = SimConfig::ideal();
+    sim.dropouts = dropouts;
+    sim
+}
+
+fn session(driver: DriverKind, sim: SimConfig, iterations: u64) -> Session {
+    Session::new(ProblemKind::LinReg)
+        .quick(true)
+        .workers(WORKERS)
+        .seed(SEED)
+        .driver(driver)
+        .sim_config(sim)
+        .options(RunOptions {
+            iterations,
+            eval_every: 1,
+            stop_below: None,
+            stop_above: None,
+            ..RunOptions::default()
+        })
+}
+
+fn assert_bit_equal(name: &str, a: &RunSummary, b: &RunSummary) {
+    assert_eq!(a.recorder.points.len(), b.recorder.points.len(), "{name}: curve lengths");
+    for (pa, pb) in a.recorder.points.iter().zip(&b.recorder.points) {
+        assert_eq!(pa.iteration, pb.iteration, "{name}: iteration axis");
+        assert_eq!(
+            pa.value.to_bits(),
+            pb.value.to_bits(),
+            "{name}: metric diverged at iteration {} ({} vs {})",
+            pa.iteration,
+            a.driver,
+            b.driver
+        );
+        assert_eq!(pa.bits, pb.bits, "{name}: bit curve at {}", pa.iteration);
+        assert_eq!(pa.comm_rounds, pb.comm_rounds, "{name}: round counting");
+    }
+    assert_eq!(a.iterations_run, b.iterations_run, "{name}: run lengths");
+    assert_eq!(a.comm.bits, b.comm.bits, "{name}: total bits");
+    assert_eq!(a.comm.transmissions, b.comm.transmissions, "{name}: transmissions");
+    assert_eq!(a.comm.censored, b.comm.censored, "{name}: censored tallies");
+    assert_eq!(a.thetas, b.thetas, "{name}: surviving models");
+}
+
+/// The announced-fault pin: a scheduled dropout over real loopback
+/// sockets is the simulator's dropout bit for bit — the victim leaves at
+/// its iteration boundary, the survivors re-stitch over the same
+/// nearest-neighbor chain, pay the same per-survivor resync bits, and
+/// continue to the same models.
+#[test]
+fn announced_dropout_on_tcp_matches_the_simulator() {
+    let dropouts = vec![Dropout {
+        worker: 2,
+        at_iteration: 5,
+    }];
+    let sim = session(DriverKind::Sim, dropout_sim_cfg(dropouts.clone()), 30)
+        .run()
+        .unwrap();
+    let tcp = session(DriverKind::Tcp, dropout_sim_cfg(dropouts), 30)
+        .run()
+        .unwrap();
+    assert_eq!(sim.driver, "sim");
+    assert_eq!(tcp.driver, "tcp");
+    assert_eq!(tcp.thetas.len(), WORKERS - 1, "one worker left the fleet");
+    assert_bit_equal("announced dropout", &sim, &tcp);
+}
+
+/// Two staggered dropouts still agree — the second re-stitch happens on
+/// an already-shrunk chain, exercising the membership layer's global-id
+/// bookkeeping rather than a one-shot special case.
+#[test]
+fn staggered_dropouts_on_tcp_match_the_simulator() {
+    let dropouts = vec![
+        Dropout {
+            worker: 1,
+            at_iteration: 4,
+        },
+        Dropout {
+            worker: 4,
+            at_iteration: 9,
+        },
+    ];
+    let sim = session(DriverKind::Sim, dropout_sim_cfg(dropouts.clone()), 25)
+        .run()
+        .unwrap();
+    let tcp = session(DriverKind::Tcp, dropout_sim_cfg(dropouts), 25)
+        .run()
+        .unwrap();
+    assert_eq!(tcp.thetas.len(), WORKERS - 2);
+    assert_bit_equal("staggered dropouts", &sim, &tcp);
+}
+
+/// The detected-fault path: the victim's sockets simply break mid-run
+/// (no announcement), the survivors discover the crash through their
+/// connection readers, agree on a re-stitch boundary through the shared
+/// membership layer, and run the remaining iterations on the healthy
+/// chain. Detection timing is wall-clock dependent, so this pins the
+/// protocol outcome (fleet size, full iteration count, finite models),
+/// not a bit-exact curve.
+#[test]
+fn detected_crash_recovers_over_sockets() {
+    let dropouts = vec![Dropout {
+        worker: 1,
+        at_iteration: 6,
+    }];
+    let summary = session(DriverKind::Tcp, dropout_sim_cfg(dropouts), 40)
+        .tcp_config(TcpConfig {
+            fault_mode: TcpFaultMode::Detected,
+            ..TcpConfig::default()
+        })
+        .run()
+        .unwrap();
+    assert_eq!(summary.driver, "tcp");
+    assert_eq!(
+        summary.iterations_run, 40,
+        "survivors must complete the full run after the re-stitch"
+    );
+    assert_eq!(summary.thetas.len(), WORKERS - 1);
+    assert!(summary.final_value().is_finite());
+    for theta in &summary.thetas {
+        assert!(theta.iter().all(|x| x.is_finite()), "survivor model diverged");
+    }
+}
+
+/// The protocol is visible in the telemetry stream: an announced dropout
+/// over TCP emits the same transport narrative the simulator does —
+/// Dropout, one Resync per survivor, then the Restitch marker — all at
+/// the scheduled iteration.
+#[cfg(feature = "telemetry")]
+#[test]
+fn announced_dropout_emits_the_shared_membership_trace() {
+    struct Collector {
+        events: Vec<TraceEvent>,
+    }
+    impl Observer for Collector {
+        fn on_record(&mut self, record: &Record) {
+            self.events.push(record.event.clone());
+        }
+        fn wants_telemetry(&self) -> bool {
+            true
+        }
+    }
+
+    let dropouts = vec![Dropout {
+        worker: 2,
+        at_iteration: 5,
+    }];
+    let mut obs = Collector { events: Vec::new() };
+    session(DriverKind::Tcp, dropout_sim_cfg(dropouts), 12)
+        .run_observed(&mut obs)
+        .unwrap();
+
+    let dropout: Vec<_> = obs
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Dropout { iteration, worker } => Some((*iteration, *worker)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(dropout, vec![(5, 2)], "exactly one dropout, at its schedule");
+
+    let resyncs = obs
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Resync { iteration: 5, .. }))
+        .count();
+    assert_eq!(resyncs, WORKERS - 1, "every survivor resyncs its mirrors");
+
+    let restitch: Vec<_> = obs
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Restitch {
+                iteration,
+                survivors,
+            } => Some((*iteration, *survivors)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(restitch, vec![(5, WORKERS - 1)], "one re-stitch over the survivors");
+}
+
+/// Detected crashes narrate too: survivors report who they lost
+/// (Disconnected) before the shared layer re-stitches.
+#[cfg(feature = "telemetry")]
+#[test]
+fn detected_crash_emits_disconnects_and_a_restitch() {
+    struct Collector {
+        events: Vec<TraceEvent>,
+    }
+    impl Observer for Collector {
+        fn on_record(&mut self, record: &Record) {
+            self.events.push(record.event.clone());
+        }
+        fn wants_telemetry(&self) -> bool {
+            true
+        }
+    }
+
+    let dropouts = vec![Dropout {
+        worker: 1,
+        at_iteration: 6,
+    }];
+    let mut obs = Collector { events: Vec::new() };
+    session(DriverKind::Tcp, dropout_sim_cfg(dropouts), 40)
+        .tcp_config(TcpConfig {
+            fault_mode: TcpFaultMode::Detected,
+            ..TcpConfig::default()
+        })
+        .run_observed(&mut obs)
+        .unwrap();
+
+    let disconnects = obs
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Disconnected { peer: 1, .. }))
+        .count();
+    assert!(disconnects >= 1, "someone must report the broken socket");
+    let restitches = obs
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Restitch { survivors, .. } if *survivors == WORKERS - 1))
+        .count();
+    assert_eq!(restitches, 1, "exactly one re-stitch over the survivors");
+}

@@ -1,8 +1,9 @@
 //! Cross-driver trace determinism — the telemetry analogue of
 //! `session_equivalence`: on an ideal network with a shared seed, the
-//! engine, threaded, and simulated drivers must emit the *same ordered
-//! event sequence* (timestamps stripped, transport events excluded —
-//! frame deliveries and dropouts exist only where a network does).
+//! engine, threaded, simulated, and tcp drivers must emit the *same
+//! ordered event sequence* (timestamps stripped, transport events
+//! excluded — frame deliveries, connection bring-up, and dropouts exist
+//! only where a network does).
 //!
 //! This is the golden-trace pin: any reordering of the canonical
 //! per-iteration sequence (IterStart, head phase with its compresses,
@@ -72,13 +73,15 @@ fn drivers_emit_one_golden_trace_on_an_ideal_network() {
     };
     let engine = golden_run(DriverKind::Engine, opts.clone());
     let threaded = golden_run(DriverKind::Threaded, opts.clone());
-    let sim = golden_run(DriverKind::Sim, opts);
+    let sim = golden_run(DriverKind::Sim, opts.clone());
+    let tcp = golden_run(DriverKind::Tcp, opts);
 
     // 6 workers: IterStart + 3 phase spans (6 records) + 6 compresses +
     // IterEnd = 14 per iteration; evals at k = 2 and 4.
     assert_eq!(engine.len(), 5 * 14 + 2);
     assert_eq!(engine, threaded, "engine vs threaded traces diverge");
     assert_eq!(engine, sim, "engine vs sim traces diverge");
+    assert_eq!(engine, tcp, "engine vs tcp traces diverge");
 
     // Spot-check the canonical shape of iteration 1: heads (positions
     // 0, 2, 4) compress inside the head phase, tails inside the tail
@@ -127,10 +130,12 @@ fn early_stop_cascade_traces_identically() {
     };
     let engine = golden_run(DriverKind::Engine, opts.clone());
     let threaded = golden_run(DriverKind::Threaded, opts.clone());
-    let sim = golden_run(DriverKind::Sim, opts);
+    let sim = golden_run(DriverKind::Sim, opts.clone());
+    let tcp = golden_run(DriverKind::Tcp, opts);
 
     assert_eq!(engine, threaded, "engine vs threaded early-stop traces diverge");
     assert_eq!(engine, sim, "engine vs sim early-stop traces diverge");
+    assert_eq!(engine, tcp, "engine vs tcp early-stop traces diverge");
     // Two full iterations, then the eval that crosses and the stop.
     assert_eq!(engine.len(), 2 * 14 + 2);
     assert_eq!(engine[engine.len() - 2].name(), "eval");
