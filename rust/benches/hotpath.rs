@@ -383,6 +383,26 @@ fn main() {
     topology.set("ring_ns", Json::Num(ring_per * 1e9));
     topology.set("ring_over_line", Json::Num(ring_per / seq_per.max(1e-12)));
 
+    // --- O(1) topology position lookup (relink/restitch hot path) ------------
+    // `position_of` runs once per worker per relink; at 10⁵ workers the
+    // old linear scan made every re-stitch O(n²). The inverse-permutation
+    // table must keep this flat regardless of fleet size.
+    {
+        let big = qgadmm::net::hier::HierTopology::build(
+            100_000,
+            10_000,
+            qgadmm::net::hier::InnerKind::Line,
+        )
+        .expect("hier builds at 100k workers");
+        let mut id = 0usize;
+        let lookup_per = res.bench("topology_lookup hier n=100k", 0.2, || {
+            // Stride coprime to n so lookups sweep the whole id space.
+            id = (id + 7_919) % 100_000;
+            std::hint::black_box(big.topo.position_of(id));
+        });
+        topology.set("lookup_ns", Json::Num(lookup_per * 1e9));
+    }
+
     // --- MLP local step (the Q-SGADMM hot spot) ------------------------------
     let img = ImageDataset::synthesize(
         &ImageSpec {

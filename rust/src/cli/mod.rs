@@ -48,7 +48,7 @@ USAGE:
   qgadmm run           [--problem P --driver D --workers N --rho R --bits B
                         --compressor S --iters K --topology T ...]
                        one Session: problem x compressor x topology x driver
-  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|fig_layerwise|all> [options]
+  qgadmm figures --fig <fig2|fig3|fig4|fig5|fig6|fig7|fig8|thm2|fig_sim|fig_topo|fig_comp|fig_layerwise|fig_scale|all> [options]
   qgadmm train-linreg  alias of `run --problem linreg`  (supports --use-xla true)
   qgadmm train-dnn     alias of `run --problem mlp`
   qgadmm train-scale   alias of `run --problem diag-linreg`  (--dims D)
@@ -86,7 +86,11 @@ COMMON OPTIONS (also accepted from --config <file> as key = value lines):
                        1 = sequential; any value is bit-for-bit identical)
   --dims D             model dimension for train-scale (default 10000)
   --topology T         communication graph: line (default), ring (even N),
-                       star, grid2d, random[:p] — any bipartite topology;
+                       star, grid2d, random[:p], or hier:<groups>[:<inner>]
+                       (inner: line [default], ring, star, grid2d) — groups
+                       run the inner topology under one leader each, leaders
+                       chained; on the sim driver the event queue shards per
+                       group and dropouts re-stitch group-locally;
                        the XLA backend supports line/ring only (degree <= 2)
   --out DIR            results directory (default: results)
   --use-xla BOOL       execute local solves through the PJRT artifacts

@@ -1733,7 +1733,27 @@ mod tests {
         assert_eq!(cfg.topology, TopologyKind::RandomBipartite { p: 0.4 });
 
         let mut kv = KvMap::new();
+        kv.set("topology", "hier:10:ring");
+        cfg.apply_kv(&kv).unwrap();
+        assert_eq!(
+            cfg.topology,
+            TopologyKind::Hier {
+                groups: 10,
+                inner: crate::net::hier::InnerKind::Ring
+            }
+        );
+
+        let mut kv = KvMap::new();
         kv.set("topology", "hexagon");
+        assert!(matches!(
+            cfg.apply_kv(&kv),
+            Err(ConfigError::BadValue { .. })
+        ));
+
+        // The hier grammar rejects malformed group counts through the same
+        // typed error path.
+        let mut kv = KvMap::new();
+        kv.set("topology", "hier:zero");
         assert!(matches!(
             cfg.apply_kv(&kv),
             Err(ConfigError::BadValue { .. })

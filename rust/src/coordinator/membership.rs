@@ -23,6 +23,7 @@
 
 use crate::config::Dropout;
 use crate::net::geometry::Point;
+use crate::net::hier::{HierLayout, HierTopology, InnerKind};
 use crate::net::topology::Topology;
 
 /// Bits one full-precision resync broadcast charges for a
@@ -100,6 +101,33 @@ impl Membership {
         let sub = Topology::nearest_neighbor_chain(&pts);
         let order: Vec<usize> = (0..sub.len()).map(|p| survivors[sub.worker_at(p)]).collect();
         Some(Topology::chain_over(order))
+    }
+
+    /// Group-aware re-stitch plan for hierarchical topologies: each group
+    /// keeps its surviving members (chained in their original position
+    /// order — the inner shape degrades to a chain, the same
+    /// minimum-energy repair policy as the flat plan), leadership falls
+    /// deterministically to the **lowest surviving position** in the
+    /// group, emptied groups disappear, and the surviving leaders
+    /// re-chain on the outer tier. `None` when fewer than two workers
+    /// survive overall.
+    ///
+    /// Like [`Self::restitch_plan`], the plan is a pure function of the
+    /// membership view (plus the layout every party already shares), so
+    /// identical views re-stitch identically with no coordination.
+    pub fn restitch_plan_grouped(&self, layout: &HierLayout) -> Option<(Topology, HierLayout)> {
+        if self.live_count() < 2 {
+            return None;
+        }
+        let groups: Vec<Vec<usize>> = layout
+            .groups()
+            .iter()
+            .map(|g| g.iter().copied().filter(|&w| self.is_alive(w)).collect::<Vec<usize>>())
+            .filter(|g| !g.is_empty())
+            .collect();
+        let h = HierTopology::assemble(groups, InnerKind::Line)
+            .expect("line-inner grouped assembly is always bipartite and connected");
+        Some((h.topo, h.layout))
     }
 }
 
@@ -195,6 +223,93 @@ mod tests {
         let pb = b.restitch_plan().unwrap();
         let ids = |t: &Topology| (0..t.len()).map(|p| t.worker_at(p)).collect::<Vec<_>>();
         assert_eq!(ids(&pa), ids(&pb));
+    }
+
+    #[test]
+    fn restitch_plan_with_two_survivors_is_the_minimal_chain() {
+        // All-but-two dropout: the smallest fleet that can still run.
+        let mut m = Membership::new(collinear(6, 50.0));
+        for w in [0, 2, 3, 5] {
+            m.mark_dead(w);
+        }
+        let topo = m.restitch_plan().expect("two survivors re-stitch");
+        assert_eq!(topo.len(), 2);
+        assert_eq!(topo.edge_count(), 1);
+        let mut ids: Vec<usize> = (0..2).map(|p| topo.worker_at(p)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 4]);
+    }
+
+    #[test]
+    fn all_but_one_dropout_cannot_restitch() {
+        // Single survivor — flat and grouped plans both refuse.
+        let layout = HierTopology::build(6, 2, InnerKind::Line).unwrap().layout;
+        let mut m = Membership::new(collinear(6, 50.0));
+        for w in [0, 1, 2, 4, 5] {
+            m.mark_dead(w);
+        }
+        assert_eq!(m.live_count(), 1);
+        assert!(m.restitch_plan().is_none());
+        assert!(m.restitch_plan_grouped(&layout).is_none());
+    }
+
+    #[test]
+    fn grouped_restitch_reelects_the_lowest_surviving_position() {
+        // hier(6, 2): groups [0,1,2] and [3,4,5], leaders 0 and 3. Kill
+        // leader 0 — leadership must fall to worker 1, the lowest
+        // surviving position in the group, and the outer chain must link
+        // the new leader to leader 3.
+        let layout = HierTopology::build(6, 2, InnerKind::Line).unwrap().layout;
+        assert_eq!(layout.leaders(), vec![0, 3]);
+        let mut m = Membership::new(collinear(6, 50.0));
+        m.mark_dead(0);
+        let (topo, new_layout) = m.restitch_plan_grouped(&layout).expect("5 survivors");
+        assert_eq!(new_layout.leaders(), vec![1, 3], "deterministic re-election");
+        assert!(topo.validate());
+        assert_eq!(topo.len(), 5);
+        // Inner chains 1–2 and 3–4–5, plus the outer leader link 1–3.
+        assert_eq!(topo.edge_count(), 1 + 2 + 1);
+        let (p1, p3) = (topo.position_of(1), topo.position_of(3));
+        assert!(
+            topo.edges().contains(&(p1, p3)) || topo.edges().contains(&(p3, p1)),
+            "outer chain must join the surviving leaders"
+        );
+    }
+
+    #[test]
+    fn grouped_restitch_drops_empty_groups_and_keeps_lone_survivors() {
+        // hier(6, 3): groups [0,1], [2,3], [4,5]. Kill both of the middle
+        // group and one of the last: the middle group disappears, the
+        // last group's lone survivor joins the outer chain as its leader.
+        let layout = HierTopology::build(6, 3, InnerKind::Line).unwrap().layout;
+        let mut m = Membership::new(collinear(6, 50.0));
+        for w in [2, 3, 5] {
+            m.mark_dead(w);
+        }
+        let (topo, new_layout) = m.restitch_plan_grouped(&layout).expect("3 survivors");
+        assert_eq!(new_layout.num_groups(), 2);
+        assert_eq!(new_layout.leaders(), vec![0, 4]);
+        assert_eq!(new_layout.groups()[1], vec![4], "lone survivor leads alone");
+        assert!(topo.validate());
+        assert_eq!(topo.len(), 3);
+        assert_eq!(topo.edge_count(), 2, "inner 0–1 plus outer 0–4");
+    }
+
+    #[test]
+    fn identical_views_produce_identical_grouped_plans() {
+        let layout = HierTopology::build(8, 2, InnerKind::Line).unwrap().layout;
+        let mut a = Membership::new(collinear(8, 25.0));
+        let mut b = a.clone();
+        for w in [4, 1] {
+            a.mark_dead(w);
+            b.mark_dead(w);
+        }
+        let (pa, la) = a.restitch_plan_grouped(&layout).unwrap();
+        let (pb, lb) = b.restitch_plan_grouped(&layout).unwrap();
+        assert_eq!(la, lb);
+        let ids = |t: &Topology| (0..t.len()).map(|p| t.worker_at(p)).collect::<Vec<_>>();
+        assert_eq!(ids(&pa), ids(&pb));
+        assert_eq!(pa.edges(), pb.edges());
     }
 
     #[test]

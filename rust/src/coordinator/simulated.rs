@@ -57,10 +57,11 @@ use crate::metrics::report::{RunSummary, SimExt};
 use crate::metrics::{BroadcastEvent, NoopObserver, Observer};
 use crate::model::{LinkBuf, LocalProblem, NeighborLink};
 use crate::net::geometry::Point;
+use crate::net::hier::HierLayout;
 use crate::net::topology::Topology;
 use crate::quant::compress::CompressOutcome;
-use crate::quant::{Compressor, CompressorKind, Mirror};
-use crate::sim::{ComputeModel, EventQueue, SimNet, SimTime};
+use crate::quant::{apply_payload_slice, Compressor, CompressorKind};
+use crate::sim::{ComputeModel, ShardedEventQueue, SimNet, SimTime};
 use crate::telemetry::{Event, Phase, TelemetrySink};
 use crate::sim::link::NetStats;
 use crate::util::rng::Rng;
@@ -107,20 +108,23 @@ pub enum TraceEvent {
     Restitch { iteration: u64, survivors: usize },
 }
 
-/// One incident link's complete per-worker state: the neighbor's *worker
-/// id*, the λ sign this end sees, the dual, and the mirror of the
-/// neighbor's broadcast state. Kept in the topology's incident-edge order.
+/// One incident link: the neighbor's *worker id* and the λ sign this end
+/// sees. Kept in the topology's incident-edge order. The link's float
+/// state (dual + neighbor mirror) lives in [`WorkerState::link_state`],
+/// one flat `2·d` block per link, so a 100k-worker fleet is a handful of
+/// large arenas instead of millions of tiny heap vectors.
 struct SimLink {
     peer: usize,
     sign: f32,
-    lambda: Vec<f32>,
-    mirror: Mirror,
 }
 
 struct WorkerState {
     theta: Vec<f32>,
     /// Incident links, in the topology's incident-edge order.
     links: Vec<SimLink>,
+    /// Flat per-link arena: link `i` owns `link_state[i·2d .. (i+1)·2d]` —
+    /// λ in the first `d` floats, the neighbor's mirrored θ̂ in the second.
+    link_state: Vec<f32>,
     /// What this worker's neighbors believe its model to be.
     own_view: Vec<f32>,
     compressor: CompressorKind,
@@ -130,6 +134,13 @@ struct WorkerState {
     /// Simulator-side randomness (compute jitter), independent stream.
     compute_rng: Rng,
     compute_scale: f64,
+}
+
+impl WorkerState {
+    /// Link `i`'s `(λ, mirror θ̂)` halves, writable.
+    fn link_block_mut(&mut self, i: usize, d: usize) -> (&mut [f32], &mut [f32]) {
+        self.link_state[i * 2 * d..(i + 1) * 2 * d].split_at_mut(d)
+    }
 }
 
 enum SimEvent {
@@ -157,7 +168,22 @@ pub struct SimulatedGadmm<P: LocalProblem> {
     workers: Vec<WorkerState>,
     net: SimNet,
     compute: ComputeModel,
-    queue: EventQueue<SimEvent>,
+    /// Sharded by hierarchical group when a [`HierLayout`] is installed;
+    /// one shard (flat-queue semantics) otherwise.
+    queue: ShardedEventQueue<SimEvent>,
+    /// Event-queue shard per worker id; all zero without a hier layout.
+    shard_of: Vec<usize>,
+    /// Grouped layout mirroring `topo` when running a `hier:` topology;
+    /// drives queue sharding and grouped restitch.
+    hier: Option<HierLayout>,
+    /// Queue high-water mark carried across queue replacements
+    /// (re-shards); the final figure-facing number also folds in the
+    /// current queue's own peak.
+    queue_peak: usize,
+    /// Streaming evaluation: skip the run-local recorder curves and hand
+    /// every point to the observer only — O(1) curve memory at 10⁵
+    /// workers.
+    streaming: bool,
     now: SimTime,
     iteration: u64,
     rounds: u64,
@@ -237,6 +263,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             workers.push(WorkerState {
                 theta: vec![0.0; d],
                 links: Vec::new(),
+                link_state: Vec::new(),
                 own_view: vec![0.0; d],
                 compressor: cfg.compressor.build_for(&layout),
                 model_rng: rng.expect("topology covers every worker"),
@@ -267,7 +294,11 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             workers,
             net,
             compute,
-            queue: EventQueue::new(),
+            queue: ShardedEventQueue::new(1),
+            shard_of: vec![0; n],
+            hier: None,
+            queue_peak: 0,
+            streaming: false,
             now: SimTime::ZERO,
             iteration: 0,
             rounds: 0,
@@ -305,25 +336,59 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 .map(|e| SimLink {
                     peer: self.topo.worker_at(e.peer),
                     sign: e.sign,
-                    lambda: vec![0.0; d],
-                    mirror: Mirror::new(d),
                 })
                 .collect();
-            self.workers[w].links = links;
+            let ws = &mut self.workers[w];
+            ws.link_state.clear();
+            ws.link_state.resize(links.len() * 2 * d, 0.0);
+            ws.links = links;
         }
+    }
+
+    /// Install the grouped layout backing a `hier:` topology: the event
+    /// queue re-shards to one heap per group (worker → shard via the
+    /// layout's group map) and re-stitches go through
+    /// [`Membership::restitch_plan_grouped`]. Call between iterations —
+    /// the queue must be drained.
+    pub fn set_hier_layout(&mut self, layout: HierLayout) {
+        assert!(self.queue.is_empty(), "re-shard requires a drained queue");
+        self.queue_peak = self.queue_peak.max(self.queue.peak());
+        self.queue = ShardedEventQueue::new(layout.num_groups().max(1));
+        for &w in &self.chain {
+            self.shard_of[w] = layout
+                .group_of(w)
+                .expect("hier layout must cover every live worker");
+        }
+        self.hier = Some(layout);
+    }
+
+    /// Stream evaluation points through the attached [`Observer`] only:
+    /// the run-local recorder/retransmission/stale curves stay empty, so
+    /// long sweeps at large n hold O(1) curve memory. The returned
+    /// summary's curves are empty in this mode.
+    pub fn set_streaming(&mut self, on: bool) {
+        self.streaming = on;
+    }
+
+    /// Event-queue high-water mark across the whole run, spanning
+    /// re-shards. Bounds the sim's O(active events) memory claim.
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak.max(self.queue.peak())
     }
 
     /// Start every worker from the same known vector (seed-shared init),
     /// mirroring `GadmmEngine::set_initial_theta`.
     pub fn set_initial_theta(&mut self, theta0: &[f32]) {
-        assert_eq!(theta0.len(), self.dims);
+        let d = self.dims;
+        assert_eq!(theta0.len(), d);
         for &w in &self.chain.clone() {
             let ws = &mut self.workers[w];
             ws.theta.copy_from_slice(theta0);
             ws.own_view.copy_from_slice(theta0);
             ws.compressor.reset_to(theta0);
-            for l in ws.links.iter_mut() {
-                l.mirror.reset_to(theta0);
+            for i in 0..ws.links.len() {
+                let (_, mirror) = ws.link_block_mut(i, d);
+                mirror.copy_from_slice(theta0);
             }
         }
     }
@@ -432,12 +497,27 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     /// over their deployment points), reset duals, and re-anchor every
     /// mirror with a charged full-precision resync broadcast.
     fn restitch(&mut self, iter: u64) {
-        let Some(plan) = self.membership.restitch_plan() else {
+        // Grouped fleets re-stitch group-locally (inners degrade to line
+        // chains, leaders re-elected to the lowest surviving position);
+        // flat fleets keep the nearest-neighbor chain repair.
+        let plan = match &self.hier {
+            Some(layout) => self
+                .membership
+                .restitch_plan_grouped(layout)
+                .map(|(t, l)| (t, Some(l))),
+            None => self.membership.restitch_plan().map(|t| (t, None)),
+        };
+        let Some((topo, new_layout)) = plan else {
             self.chain = self.membership.live();
             return;
         };
-        self.topo = plan;
+        self.topo = topo;
         self.relink();
+        if let Some(layout) = new_layout {
+            // Restitch runs between iterations, so the queue is drained
+            // and re-sharding to the surviving groups is safe.
+            self.set_hier_layout(layout);
+        }
 
         // Resync: every survivor broadcasts its current model in full
         // precision (assumed reliable — ARQ without cap), so sender
@@ -464,12 +544,13 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 let dist = self.points[w].distance(&self.points[nb]);
                 resync_secs = resync_secs.max(self.net.latency().delivery_secs(frame_bytes, dist));
                 let nbs = &mut self.workers[nb];
-                nbs.links
-                    .iter_mut()
-                    .find(|l| l.peer == w)
-                    .expect("links are symmetric after relink")
-                    .mirror
-                    .reset_to(&theta);
+                let j = nbs
+                    .links
+                    .iter()
+                    .position(|l| l.peer == w)
+                    .expect("links are symmetric after relink");
+                let (_, mirror) = nbs.link_block_mut(j, d);
+                mirror.copy_from_slice(&theta);
             }
         }
         self.net.stats.delivered += links;
@@ -550,7 +631,8 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                     self.compute.sample_secs(ws.compute_scale, &mut ws.compute_rng)
                 };
                 let at = ready[w].max(iter_start).plus_secs_f64(ct);
-                self.queue.schedule(at, SimEvent::SolveDone { worker: w });
+                self.queue
+                    .schedule(self.shard_of[w], at, SimEvent::SolveDone { worker: w });
             }
             if tele {
                 // Depth right after scheduling = this phase's solve fan-out.
@@ -597,11 +679,15 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         let step = self.cfg.dual_step * self.rho;
         let d = self.dims;
         for &w in &self.chain {
-            let ws = &mut self.workers[w];
-            let own = &ws.own_view;
-            for l in ws.links.iter_mut() {
-                let nb = l.mirror.theta_hat();
-                let lam = &mut l.lambda;
+            let WorkerState {
+                links,
+                link_state,
+                own_view,
+                ..
+            } = &mut self.workers[w];
+            let own = own_view.as_slice();
+            for (i, l) in links.iter().enumerate() {
+                let (lam, nb) = link_state[i * 2 * d..(i + 1) * 2 * d].split_at_mut(d);
                 if l.sign > 0.0 {
                     for j in 0..d {
                         lam[j] += step * (nb[j] - own[j]);
@@ -703,17 +789,24 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     /// Local solve + broadcast for worker `w`.
     fn handle_solve_done(&mut self, w: usize, iter: u64) {
         {
-            let ws = &mut self.workers[w];
+            let d = self.dims;
+            let WorkerState {
+                theta,
+                links,
+                link_state,
+                ..
+            } = &mut self.workers[w];
             let mut buf = LinkBuf::new();
-            for l in &ws.links {
+            for (i, l) in links.iter().enumerate() {
+                let (lam, nb) = link_state[i * 2 * d..(i + 1) * 2 * d].split_at(d);
                 buf.push(NeighborLink {
                     sign: l.sign,
-                    lambda: l.lambda.as_slice(),
-                    theta: l.mirror.theta_hat(),
+                    lambda: lam,
+                    theta: nb,
                 });
             }
             let ctx = buf.ctx(self.rho);
-            self.problem.solve(w, &ctx, &mut ws.theta);
+            self.problem.solve(w, &ctx, theta);
         }
 
         let (payload, outcome) = {
@@ -772,6 +865,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             let tx = self.net.transmit(w, nb, frame.len(), dist, self.now);
             match tx.deliver_at {
                 Some(at) => self.queue.schedule(
+                    self.shard_of[nb],
                     at,
                     SimEvent::Frame {
                         from: w,
@@ -826,13 +920,15 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
         if !self.membership.is_alive(to) {
             return;
         }
+        let d = self.dims;
         let ws = &mut self.workers[to];
         // Sender may no longer be a neighbor (re-stitched mid-flight
         // frames): drop silently.
-        let Some(link) = ws.links.iter_mut().find(|l| l.peer == from) else {
+        let Some(i) = ws.links.iter().position(|l| l.peer == from) else {
             return;
         };
-        link.mirror.apply_payload(&msg.payload);
+        let (_, mirror) = ws.link_block_mut(i, d);
+        apply_payload_slice(mirror, &msg.payload);
         ready[to] = ready[to].max(t);
         if self.sim.record_trace {
             self.trace.push(TraceEvent::Delivered {
@@ -917,16 +1013,20 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                     compute_secs: self.now.as_secs_f64(),
                     value,
                 };
-                recorder.push(point);
                 observer.on_eval(&point);
-                retransmissions.push(CurvePoint {
-                    value: self.net.stats.retransmissions as f64,
-                    ..point
-                });
-                stale.push(CurvePoint {
-                    value: self.net.stats.abandoned as f64,
-                    ..point
-                });
+                if !self.streaming {
+                    // Streaming mode keeps curve memory O(1): points flow
+                    // to the observer only.
+                    recorder.push(point);
+                    retransmissions.push(CurvePoint {
+                        value: self.net.stats.retransmissions as f64,
+                        ..point
+                    });
+                    stale.push(CurvePoint {
+                        value: self.net.stats.abandoned as f64,
+                        ..point
+                    });
+                }
                 let crossed = opts.stop_below.map(|t| value <= t).unwrap_or(false)
                     || opts.stop_above.map(|t| value >= t).unwrap_or(false);
                 if self.telemetry.enabled() {
@@ -993,6 +1093,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
                 sim_secs: self.now.as_secs_f64(),
                 time_to_target_secs,
                 restitches: self.restitches,
+                queue_peak: self.queue_peak() as u64,
             }),
         }
     }

@@ -13,6 +13,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig_comp;
 pub mod fig_layerwise;
+pub mod fig_scale;
 pub mod fig_sim;
 pub mod fig_topo;
 pub mod helpers;
@@ -21,13 +22,14 @@ pub mod thm2;
 use crate::config::ExperimentConfig;
 
 /// All known figure ids, in paper order (`fig_sim`, `fig_topo`,
-/// `fig_comp`, and `fig_layerwise` extend the paper with the
+/// `fig_comp`, `fig_layerwise`, and `fig_scale` extend the paper with the
 /// discrete-event simulator's loss-vs-time-to-target panel, the
 /// bipartite-topology sweep, the compression-scheme bits-to-target
-/// sweep, and the layer-wise vs uniform MLP comparison).
+/// sweep, the layer-wise vs uniform MLP comparison, and the hierarchical
+/// 10³–10⁵-worker scale-out sweep).
 pub const ALL_FIGS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "thm2", "fig_sim", "fig_topo",
-    "fig_comp", "fig_layerwise",
+    "fig_comp", "fig_layerwise", "fig_scale",
 ];
 
 /// Dispatch a figure id (or `all`).
@@ -45,6 +47,7 @@ pub fn run(fig: &str, cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()>
         "fig_topo" => fig_topo::run(cfg, quick),
         "fig_comp" => fig_comp::run(cfg, quick),
         "fig_layerwise" => fig_layerwise::run(cfg, quick),
+        "fig_scale" => fig_scale::run(cfg, quick),
         "all" => {
             for f in ALL_FIGS {
                 run(f, cfg, quick)?;

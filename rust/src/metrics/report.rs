@@ -39,6 +39,9 @@ pub struct SimExt {
     pub time_to_target_secs: Option<f64>,
     /// Topology re-stitches after worker dropouts.
     pub restitches: u64,
+    /// Event-queue high-water mark over the whole run (across re-shards)
+    /// — the measurable side of the sim's O(active events) memory claim.
+    pub queue_peak: u64,
 }
 
 /// Result of a run through any of the three runtimes — what
@@ -170,6 +173,7 @@ impl RunSummary {
             // One frame abandoned at the ARQ cap == one stale-mirror round.
             obj.set("frames_abandoned", Json::Num(ext.net.abandoned as f64));
             obj.set("restitches", Json::Num(ext.restitches as f64));
+            obj.set("queue_peak", Json::Num(ext.queue_peak as f64));
         }
         if !self.metrics.is_empty() {
             obj.set("metrics", self.metrics.to_json());
@@ -398,6 +402,7 @@ mod tests {
             "frames_abandoned",
             "censored_rounds",
             "restitches",
+            "queue_peak",
             "curve",
         ] {
             assert!(j.get(key).is_some(), "missing sim report key {key}");

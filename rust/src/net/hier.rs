@@ -1,0 +1,333 @@
+//! Hierarchical grouped topologies — the GGADMM "grouped" axis at scale.
+//!
+//! A [`HierTopology`] partitions `n` workers into `g` groups, builds an
+//! inner bipartite topology per group (reusing the existing
+//! [`Topology`] constructors), elects one **leader** per group (the
+//! group's first position), and chains the leaders on an outer tier.
+//! Per-worker degree is then bounded by the inner topology regardless of
+//! `n` — the property that makes 10⁴–10⁶ workers a memory problem the
+//! flat constructors cannot solve: a 100k-worker chain has diameter
+//! 100k−1, while `hier:10000` (inner groups of 10) has diameter
+//! ≈ 10k + 2·5 across the leader tier and keeps every inner link local
+//! to its group.
+//!
+//! **Consensus consistency.** The assembled graph is one flat bipartite
+//! [`Topology`]: inner edges group by group, then the outer leader chain,
+//! with edge index = λ index as everywhere else. Leaders therefore carry
+//! both inner and outer λ/θ̂ link state through the same degree-general
+//! `NeighborCtx` the math layer already uses — a leader's primal update
+//! (eq. (14)/(16)) sums over *all* incident links, inner and outer alike,
+//! so the single-graph GADMM convergence argument (arXiv 2009.06459's
+//! generalized bipartite form) applies unchanged. The only construction
+//! subtlety is the 2-coloring: every inner constructor colors its local
+//! position 0 (the leader) a head, so the whole coloring of every
+//! odd-indexed group is flipped — leaders then alternate
+//! head/tail/head/… along the outer chain, keeping the outer links
+//! bipartite while a flip obviously preserves inner bipartiteness.
+//!
+//! ```
+//! use qgadmm::net::hier::{HierTopology, InnerKind};
+//!
+//! let h = HierTopology::build(12, 3, InnerKind::Line).unwrap();
+//! assert!(h.topo.validate());
+//! assert_eq!(h.layout.num_groups(), 3);
+//! assert_eq!(h.layout.leaders(), vec![0, 4, 8]);
+//! // Leaders alternate colors so the outer chain is bipartite.
+//! assert!(h.topo.is_head(0) && !h.topo.is_head(4) && h.topo.is_head(8));
+//! ```
+
+use super::topology::{Topology, TopologyError};
+
+/// The per-group inner topology family of a `hier:<groups>[:<inner>]`
+/// graph. A subset of [`super::topology::TopologyKind`]: the random
+/// family is excluded (a disconnected draw inside one group would reject
+/// the whole hierarchy) and nesting is not supported.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerKind {
+    /// Chain within each group (default).
+    Line,
+    /// Even cycle within each group (needs even group sizes ≥ 4).
+    Ring,
+    /// The leader is the hub of its group.
+    Star,
+    /// Most-square grid factorization of the group size.
+    Grid2d,
+}
+
+impl InnerKind {
+    /// Parse the `<inner>` segment of `hier:<groups>:<inner>`.
+    pub fn parse(text: &str) -> Result<InnerKind, String> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "line" | "chain" => Ok(InnerKind::Line),
+            "ring" | "cycle" => Ok(InnerKind::Ring),
+            "star" => Ok(InnerKind::Star),
+            "grid" | "grid2d" => Ok(InnerKind::Grid2d),
+            other => Err(format!(
+                "unknown inner topology {other:?} (expected line, ring, star, or grid2d)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InnerKind::Line => "line",
+            InnerKind::Ring => "ring",
+            InnerKind::Star => "star",
+            InnerKind::Grid2d => "grid2d",
+        }
+    }
+}
+
+/// Who belongs to which group, and who leads it. Worker ids are global
+/// (stable across re-stitches); each group's member list is in position
+/// order, and the leader is always the first member.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierLayout {
+    /// Global worker ids per group, in position order.
+    groups: Vec<Vec<usize>>,
+    /// `group_of[id]` — `usize::MAX` for ids not in the layout.
+    group_of: Vec<usize>,
+}
+
+impl HierLayout {
+    fn from_groups(groups: Vec<Vec<usize>>) -> HierLayout {
+        let max_id = groups.iter().flatten().copied().max().unwrap_or(0);
+        let mut group_of = vec![usize::MAX; max_id + 1];
+        for (g, members) in groups.iter().enumerate() {
+            for &w in members {
+                group_of[w] = g;
+            }
+        }
+        HierLayout { groups, group_of }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Global worker ids per group, in position order.
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    /// Group index of worker `id`, if it belongs to the layout.
+    pub fn group_of(&self, id: usize) -> Option<usize> {
+        match self.group_of.get(id) {
+            Some(&g) if g != usize::MAX => Some(g),
+            _ => None,
+        }
+    }
+
+    /// The leader of `group`: its lowest-position member.
+    pub fn leader(&self, group: usize) -> usize {
+        self.groups[group][0]
+    }
+
+    /// All leaders, in group order.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g[0]).collect()
+    }
+}
+
+/// A hierarchical grouped topology: the assembled flat bipartite graph
+/// plus the group bookkeeping the runtime needs (event-queue sharding,
+/// grouped re-stitch, leader re-election).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierTopology {
+    pub topo: Topology,
+    pub layout: HierLayout,
+}
+
+impl HierTopology {
+    /// Partition workers `0..n` into `groups` contiguous groups (the first
+    /// `n % groups` groups take the extra worker), build `inner` within
+    /// each, and chain the group leaders. Identity position order, so the
+    /// result passes the threaded/tcp drivers' identity guards unchanged.
+    pub fn build(n: usize, groups: usize, inner: InnerKind) -> Result<HierTopology, TopologyError> {
+        if groups == 0 {
+            return Err(TopologyError::HierInvalid {
+                groups,
+                n,
+                why: "needs at least one group",
+            });
+        }
+        if n < 2 {
+            return Err(TopologyError::TooSmall {
+                kind: "hier",
+                min: 2,
+                n,
+            });
+        }
+        if groups > n {
+            return Err(TopologyError::HierInvalid {
+                groups,
+                n,
+                why: "more groups than workers",
+            });
+        }
+        let base = n / groups;
+        let rem = n % groups;
+        let mut next = 0usize;
+        let members: Vec<Vec<usize>> = (0..groups)
+            .map(|g| {
+                let size = base + usize::from(g < rem);
+                let ids: Vec<usize> = (next..next + size).collect();
+                next += size;
+                ids
+            })
+            .collect();
+        HierTopology::assemble(members, inner)
+    }
+
+    /// Assemble a hierarchy from explicit member lists (each in desired
+    /// position order; every group non-empty). Shared by [`Self::build`]
+    /// and the grouped re-stitch path in `coordinator::membership`, which
+    /// re-assembles over the survivors with line inners.
+    pub fn assemble(
+        groups: Vec<Vec<usize>>,
+        inner: InnerKind,
+    ) -> Result<HierTopology, TopologyError> {
+        assert!(
+            groups.iter().all(|g| !g.is_empty()),
+            "hier groups must be non-empty"
+        );
+        let mut order = Vec::new();
+        let mut head = Vec::new();
+        let mut edges = Vec::new();
+        let mut leader_pos = Vec::with_capacity(groups.len());
+        for (gi, members) in groups.iter().enumerate() {
+            let offset = order.len();
+            let size = members.len();
+            // Every inner constructor colors local position 0 — the leader
+            // — a head; flipping whole odd-indexed groups makes leaders
+            // alternate colors, so the outer chain below stays bipartite.
+            let flip = gi % 2 == 1;
+            if size == 1 {
+                order.push(members[0]);
+                head.push(!flip);
+            } else {
+                let sub = match inner {
+                    InnerKind::Line => Topology::line(size),
+                    InnerKind::Ring => Topology::ring(size)?,
+                    InnerKind::Star => Topology::star(size),
+                    InnerKind::Grid2d => Topology::grid2d_auto(size),
+                };
+                for (l, &id) in members.iter().enumerate() {
+                    order.push(id);
+                    head.push(sub.is_head(l) != flip);
+                }
+                for &(u, v) in sub.edges() {
+                    edges.push((offset + u, offset + v));
+                }
+            }
+            leader_pos.push(offset);
+        }
+        for i in 0..leader_pos.len().saturating_sub(1) {
+            edges.push((leader_pos[i], leader_pos[i + 1]));
+        }
+        let topo = Topology::build(order, head, edges)?;
+        Ok(HierTopology {
+            topo,
+            layout: HierLayout::from_groups(groups),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_evenly_with_remainder_up_front() {
+        let h = HierTopology::build(11, 3, InnerKind::Line).unwrap();
+        let sizes: Vec<usize> = h.layout.groups().iter().map(|g| g.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 3]);
+        assert_eq!(h.layout.leaders(), vec![0, 4, 8]);
+        assert_eq!(h.layout.group_of(5), Some(1));
+        assert_eq!(h.layout.group_of(99), None);
+        assert!(h.topo.validate());
+        // Identity position order (threaded/tcp guard).
+        for p in 0..h.topo.len() {
+            assert_eq!(h.topo.worker_at(p), p);
+        }
+    }
+
+    #[test]
+    fn every_inner_kind_yields_a_valid_two_coloring() {
+        for inner in [InnerKind::Line, InnerKind::Ring, InnerKind::Star, InnerKind::Grid2d] {
+            // Group size 4 satisfies the ring's even-≥4 constraint.
+            let h = HierTopology::build(16, 4, inner).unwrap();
+            assert!(h.topo.validate(), "invalid hier topology for {inner:?}");
+            for &(u, v) in h.topo.edges() {
+                assert_ne!(h.topo.is_head(u), h.topo.is_head(v));
+            }
+        }
+    }
+
+    #[test]
+    fn leaders_alternate_colors_along_the_outer_chain() {
+        let h = HierTopology::build(20, 5, InnerKind::Star).unwrap();
+        let leaders = h.layout.leaders();
+        for (i, &l) in leaders.iter().enumerate() {
+            let p = h.topo.position_of(l);
+            assert_eq!(h.topo.is_head(p), i % 2 == 0, "leader {l} of group {i}");
+        }
+        // Leader degree: inner star hub (group size − 1) + outer links.
+        let p0 = h.topo.position_of(leaders[0]);
+        assert_eq!(h.topo.degree(p0), 3 + 1, "end leader: hub + one outer link");
+        let p2 = h.topo.position_of(leaders[2]);
+        assert_eq!(h.topo.degree(p2), 3 + 2, "mid leader: hub + two outer links");
+    }
+
+    #[test]
+    fn degenerate_group_counts() {
+        // One group: just the inner topology, no outer links.
+        let h = HierTopology::build(6, 1, InnerKind::Ring).unwrap();
+        assert_eq!(h.topo.edge_count(), 6);
+        // As many groups as workers: singleton groups chained at the
+        // leader tier — exactly a line.
+        let h = HierTopology::build(5, 5, InnerKind::Line).unwrap();
+        assert_eq!(h.topo.edge_count(), 4);
+        for p in 0..4 {
+            assert!(h.topo.edges().contains(&(p, p + 1)));
+        }
+    }
+
+    #[test]
+    fn invalid_shapes_are_rejected() {
+        assert!(matches!(
+            HierTopology::build(6, 0, InnerKind::Line).unwrap_err(),
+            TopologyError::HierInvalid { .. }
+        ));
+        assert!(matches!(
+            HierTopology::build(3, 5, InnerKind::Line).unwrap_err(),
+            TopologyError::HierInvalid { .. }
+        ));
+        // Ring inners need even group sizes ≥ 4: 10 workers in 2 groups of
+        // 5 is an odd cycle inside each group.
+        assert!(matches!(
+            HierTopology::build(10, 2, InnerKind::Ring).unwrap_err(),
+            TopologyError::OddRing { n: 5 }
+        ));
+    }
+
+    #[test]
+    fn inner_kind_parse() {
+        assert_eq!(InnerKind::parse("line").unwrap(), InnerKind::Line);
+        assert_eq!(InnerKind::parse("RING").unwrap(), InnerKind::Ring);
+        assert_eq!(InnerKind::parse("grid").unwrap(), InnerKind::Grid2d);
+        assert!(InnerKind::parse("hexagon").is_err());
+        assert_eq!(InnerKind::Star.name(), "star");
+    }
+
+    #[test]
+    fn scales_to_one_hundred_thousand_workers() {
+        // Construction must stay linear: 100k workers in 10k groups of 10.
+        let h = HierTopology::build(100_000, 10_000, InnerKind::Line).unwrap();
+        assert_eq!(h.topo.len(), 100_000);
+        // 10k inner chains of 10 (9 edges) + 9 999 outer links.
+        assert_eq!(h.topo.edge_count(), 10_000 * 9 + 9_999);
+        // O(1) lookups at scale.
+        assert_eq!(h.topo.position_of(99_999), 99_999);
+    }
+}

@@ -15,5 +15,6 @@
 
 pub mod channel;
 pub mod geometry;
+pub mod hier;
 pub mod tcp;
 pub mod topology;

@@ -66,6 +66,12 @@ pub enum TopologyError {
          edge probability or reseed"
     )]
     Disconnected { reached: usize, n: usize },
+    #[error("hier:{groups} cannot partition {n} workers: {why}")]
+    HierInvalid {
+        groups: usize,
+        n: usize,
+        why: &'static str,
+    },
 }
 
 /// One incident link as stored in a position's adjacency list: the edge
@@ -96,6 +102,10 @@ pub struct IncidentEdge {
 #[derive(Clone, Debug, PartialEq)]
 pub struct Topology {
     order: Vec<usize>,
+    /// Inverse permutation: `pos_of[id]` is the position of worker `id`
+    /// (`usize::MAX` for ids not in the topology), so [`Topology::position_of`]
+    /// is O(1) on the per-broadcast hot path instead of an O(n) scan.
+    pos_of: Vec<usize>,
     head: Vec<bool>,
     /// Position pairs `(u, v)`; the index in this list is the λ index.
     edges: Vec<(usize, usize)>,
@@ -269,8 +279,9 @@ impl Topology {
     /// Assemble and check a topology: every edge must join the two color
     /// classes and the graph must be connected. Structural misuse
     /// (out-of-range endpoints, self-loops) panics — the public
-    /// constructors never produce it.
-    fn build(
+    /// constructors never produce it. Crate-internal so `net::hier` can
+    /// assemble grouped graphs from explicit parts.
+    pub(crate) fn build(
         order: Vec<usize>,
         head: Vec<bool>,
         edges: Vec<(usize, usize)>,
@@ -300,8 +311,13 @@ impl Topology {
                 sign: 1.0,
             });
         }
+        let mut pos_of = vec![usize::MAX; order.iter().max().map_or(0, |&m| m + 1)];
+        for (p, &id) in order.iter().enumerate() {
+            pos_of[id] = p;
+        }
         Ok(Topology {
             order,
+            pos_of,
             head,
             edges,
             adj,
@@ -321,12 +337,13 @@ impl Topology {
         self.order[pos]
     }
 
-    /// Position of worker `id`.
+    /// Position of worker `id`. O(1): reads the inverse-permutation table
+    /// built at construction.
     pub fn position_of(&self, id: usize) -> usize {
-        self.order
-            .iter()
-            .position(|&w| w == id)
-            .expect("worker not in topology")
+        match self.pos_of.get(id) {
+            Some(&p) if p != usize::MAX => p,
+            _ => panic!("worker {id} not in topology"),
+        }
     }
 
     /// Is position `pos` a head? Heads and tails are the two color classes
@@ -406,6 +423,12 @@ impl Topology {
         if ids.len() != n {
             return false;
         }
+        // The O(1) lookup table must invert `order` exactly.
+        for (p, &id) in self.order.iter().enumerate() {
+            if self.pos_of.get(id) != Some(&p) {
+                return false;
+            }
+        }
         let mut seen = std::collections::BTreeSet::new();
         for &(u, v) in &self.edges {
             if u >= n || v >= n || u == v {
@@ -484,6 +507,13 @@ fn chain_link_cost(order: &[usize], points: &[Point], a: usize, b: usize) -> f64
     points[order[a]].distance(&points[order[b]])
 }
 
+/// The full set of valid `--topology` / `topology=` values, quoted by the
+/// parse error so an unknown name names every alternative (the same
+/// pattern as `runtime::session`'s `DRIVER_KINDS`).
+pub const TOPOLOGY_KINDS: &str =
+    "line, ring, star, grid2d, random[:p], hier:<groups>[:<inner>] \
+     (inner: line, ring, star, grid2d)";
+
 /// A named topology family, as selected by the `topology=` config key /
 /// `--topology` CLI flag. [`TopologyKind::build`] instantiates it for a
 /// worker count.
@@ -499,40 +529,71 @@ pub enum TopologyKind {
     Grid2d,
     /// Random head/tail bipartite graph with edge probability `p`.
     RandomBipartite { p: f64 },
+    /// Hierarchical grouped topology: `groups` groups each running an
+    /// `inner` topology, one leader per group, leaders chained on an
+    /// outer tier (see [`crate::net::hier`]).
+    Hier {
+        groups: usize,
+        inner: crate::net::hier::InnerKind,
+    },
 }
 
 impl TopologyKind {
     /// Parse a CLI/config name: `line` (or `chain`), `ring` (or `cycle`),
     /// `star`, `grid2d` (or `grid`), `random` (or `random:<p>` /
     /// `random_bipartite:<p>` for an explicit edge probability; bare
-    /// `random` uses p = 0.5).
+    /// `random` uses p = 0.5), or `hier:<groups>[:<inner>]` (inner
+    /// defaults to `line`).
     pub fn parse(text: &str) -> Result<TopologyKind, String> {
+        use crate::net::hier::InnerKind;
         let t = text.trim().to_ascii_lowercase();
         match t.as_str() {
-            "line" | "chain" => Ok(TopologyKind::Line),
-            "ring" | "cycle" => Ok(TopologyKind::Ring),
-            "star" => Ok(TopologyKind::Star),
-            "grid" | "grid2d" => Ok(TopologyKind::Grid2d),
-            "random" | "random_bipartite" => Ok(TopologyKind::RandomBipartite { p: 0.5 }),
-            _ => {
-                let ptext = t
-                    .strip_prefix("random:")
-                    .or_else(|| t.strip_prefix("random_bipartite:"))
-                    .ok_or_else(|| {
-                        format!(
-                            "unknown topology {text:?} (expected line, ring, star, \
-                             grid2d, or random[:p])"
-                        )
-                    })?;
-                let p: f64 = ptext
-                    .parse()
-                    .map_err(|_| format!("bad edge probability {ptext:?} in topology {text:?}"))?;
-                if !(0.0..=1.0).contains(&p) {
-                    return Err(format!("edge probability {p} outside [0, 1]"));
-                }
-                Ok(TopologyKind::RandomBipartite { p })
+            "line" | "chain" => return Ok(TopologyKind::Line),
+            "ring" | "cycle" => return Ok(TopologyKind::Ring),
+            "star" => return Ok(TopologyKind::Star),
+            "grid" | "grid2d" => return Ok(TopologyKind::Grid2d),
+            "random" | "random_bipartite" => {
+                return Ok(TopologyKind::RandomBipartite { p: 0.5 })
             }
+            _ => {}
         }
+        if let Some(rest) = t.strip_prefix("hier:") {
+            let (gtext, itext) = match rest.split_once(':') {
+                Some((g, i)) => (g, Some(i)),
+                None => (rest, None),
+            };
+            let groups: usize = gtext.parse().map_err(|_| {
+                format!(
+                    "bad group count {gtext:?} in topology {text:?} \
+                     (expected hier:<groups>[:<inner>])"
+                )
+            })?;
+            if groups == 0 {
+                return Err(format!("topology {text:?} needs at least one group"));
+            }
+            let inner = match itext {
+                Some(i) => {
+                    InnerKind::parse(i).map_err(|why| format!("{why} in topology {text:?}"))?
+                }
+                None => InnerKind::Line,
+            };
+            return Ok(TopologyKind::Hier { groups, inner });
+        }
+        if let Some(ptext) = t
+            .strip_prefix("random:")
+            .or_else(|| t.strip_prefix("random_bipartite:"))
+        {
+            let p: f64 = ptext
+                .parse()
+                .map_err(|_| format!("bad edge probability {ptext:?} in topology {text:?}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("edge probability {p} outside [0, 1]"));
+            }
+            return Ok(TopologyKind::RandomBipartite { p });
+        }
+        Err(format!(
+            "unknown topology {text:?}; valid topologies: {TOPOLOGY_KINDS}"
+        ))
     }
 
     /// Instantiate for `n` workers. `seed` only matters for
@@ -546,6 +607,9 @@ impl TopologyKind {
             TopologyKind::RandomBipartite { p } => {
                 Topology::random_bipartite(n, seed ^ 0x7090_10B1, p)
             }
+            TopologyKind::Hier { groups, inner } => {
+                crate::net::hier::HierTopology::build(n, groups, inner).map(|h| h.topo)
+            }
         }
     }
 
@@ -557,6 +621,7 @@ impl TopologyKind {
             TopologyKind::Star => "star",
             TopologyKind::Grid2d => "grid2d",
             TopologyKind::RandomBipartite { .. } => "random_bipartite",
+            TopologyKind::Hier { .. } => "hier",
         }
     }
 }
@@ -718,6 +783,23 @@ mod tests {
         assert!(TopologyKind::parse("hexagon").is_err());
         assert!(TopologyKind::parse("random:1.5").is_err());
         assert!(TopologyKind::parse("random:abc").is_err());
+        assert_eq!(
+            TopologyKind::parse("hier:4").unwrap(),
+            TopologyKind::Hier {
+                groups: 4,
+                inner: crate::net::hier::InnerKind::Line
+            }
+        );
+        assert_eq!(
+            TopologyKind::parse("hier:3:star").unwrap(),
+            TopologyKind::Hier {
+                groups: 3,
+                inner: crate::net::hier::InnerKind::Star
+            }
+        );
+        assert!(TopologyKind::parse("hier").is_err(), "group count required");
+        assert!(TopologyKind::parse("hier:0").is_err());
+        assert!(TopologyKind::parse("hier:2:hexagon").is_err());
 
         assert_eq!(TopologyKind::Line.build(6, 1).unwrap().edge_count(), 5);
         assert!(TopologyKind::Ring.build(7, 1).is_err());
@@ -806,5 +888,36 @@ mod tests {
         for pos in 0..t.len() {
             assert_eq!(t.position_of(t.worker_at(pos)), pos);
         }
+    }
+
+    #[test]
+    fn position_of_handles_sparse_global_ids() {
+        // A re-stitched sub-topology keeps non-contiguous global ids; the
+        // O(1) inverse table must cover the gaps and reject absent ids.
+        let t = Topology::chain_over(vec![7, 2, 9]);
+        assert_eq!(t.position_of(7), 0);
+        assert_eq!(t.position_of(2), 1);
+        assert_eq!(t.position_of(9), 2);
+        assert!(std::panic::catch_unwind(|| t.position_of(3)).is_err());
+        assert!(std::panic::catch_unwind(|| t.position_of(100)).is_err());
+    }
+
+    #[test]
+    fn unknown_topology_error_names_the_full_valid_set() {
+        let err = TopologyKind::parse("hexagon").unwrap_err();
+        for name in ["line", "ring", "star", "grid2d", "random[:p]", "hier:<groups>[:<inner>]"] {
+            assert!(err.contains(name), "error {err:?} must name {name}");
+        }
+    }
+
+    #[test]
+    fn hier_kind_builds_a_valid_bipartite_graph() {
+        let kind = TopologyKind::parse("hier:3").unwrap();
+        let t = kind.build(12, 1).unwrap();
+        assert!(t.validate());
+        assert_eq!(t.len(), 12);
+        // 3 inner chains of 4 (3 edges each) + 2 outer leader links.
+        assert_eq!(t.edge_count(), 3 * 3 + 2);
+        assert_eq!(kind.name(), "hier");
     }
 }

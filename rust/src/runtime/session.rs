@@ -56,6 +56,7 @@ use crate::model::scale::DiagLinRegProblem;
 use crate::coordinator::residuals::RhoPolicy;
 use crate::model::{BlockLayout, LocalProblem, NeighborCtx, WorkerSolver};
 use crate::net::geometry::{collinear, Point};
+use crate::net::hier::{HierLayout, HierTopology};
 use crate::net::tcp::run_tcp_on;
 use crate::net::topology::{Topology, TopologyKind};
 
@@ -500,6 +501,13 @@ impl SimDriver {
             sim.set_initial_theta(&init);
         }
         SimDriver { sim }
+    }
+
+    /// Install the grouped layout of a `hier:` topology: the event queue
+    /// shards per group and dropouts re-stitch group-locally with leader
+    /// re-election instead of collapsing to one global chain.
+    pub fn install_hier(&mut self, layout: HierLayout) {
+        self.sim.set_hier_layout(layout);
     }
 }
 
@@ -984,7 +992,17 @@ impl Session {
     pub fn into_driver(self) -> anyhow::Result<Box<dyn Driver>> {
         let r = self.resolve();
         r.opts.validate().map_err(|e: InvalidRunOptions| anyhow::anyhow!(e))?;
-        let topo = r.topology.build(r.gadmm.workers, r.seed)?;
+        // `hier:` topologies keep their grouped layout alongside the flat
+        // bipartite graph: the sim driver shards its event queue and
+        // re-stitches group-locally from it; the lock-step drivers run the
+        // flat graph (the math only sees the bipartite edge list).
+        let (topo, hier) = match r.topology {
+            TopologyKind::Hier { groups, inner } => {
+                let h = HierTopology::build(r.gadmm.workers, groups, inner)?;
+                (h.topo, Some(h.layout))
+            }
+            k => (k.build(r.gadmm.workers, r.seed)?, None),
+        };
         let problem = Self::build_problem(&r);
         assert_eq!(
             problem.workers(),
@@ -1028,14 +1046,18 @@ impl Session {
                 // Deterministic collinear deployment (50 m spacing) — the
                 // same geometry the sim equivalence suites pin.
                 let points = collinear(r.gadmm.workers, 50.0);
-                Box::new(SimDriver::new(
+                let mut driver = SimDriver::new(
                     r.gadmm.clone(),
                     r.sim.clone(),
                     problem,
                     topo,
                     points,
                     r.seed,
-                ))
+                );
+                if let Some(layout) = hier {
+                    driver.install_hier(layout);
+                }
+                Box::new(driver)
             }
             DriverKind::Tcp => {
                 // Like the threaded runtime, the tcp harness maps solver p
@@ -1178,6 +1200,27 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(err.to_string().contains("eval_every"), "{err}");
+    }
+
+    #[test]
+    fn hier_topology_builds_on_every_local_driver() {
+        // hier:3 over 12 workers: engine and threaded run the flat
+        // bipartite graph; the sim driver additionally installs the
+        // grouped layout (sharded queue + group-local restitch).
+        for driver in [DriverKind::Engine, DriverKind::Threaded, DriverKind::Sim] {
+            let summary = Session::new(ProblemKind::LinReg)
+                .quick(true)
+                .workers(12)
+                .driver(driver)
+                .topology(TopologyKind::parse("hier:3").unwrap())
+                .iterations(30)
+                .eval_every(5)
+                .seed(7)
+                .run()
+                .unwrap();
+            assert!(summary.final_value().is_finite());
+            assert_eq!(summary.thetas.len(), 12);
+        }
     }
 
     #[test]

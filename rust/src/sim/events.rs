@@ -1,9 +1,16 @@
-//! Deterministic discrete-event queue.
+//! Deterministic discrete-event queues.
 //!
-//! A binary heap keyed by `(time, sequence)`: events pop in time order,
-//! and events scheduled for the same instant pop in the order they were
-//! scheduled. The payload type `E` needs no ordering of its own, so any
-//! event enum can ride the queue.
+//! [`EventQueue`] is a binary heap keyed by `(time, sequence)`: events pop
+//! in time order, and events scheduled for the same instant pop in the
+//! order they were scheduled. The payload type `E` needs no ordering of
+//! its own, so any event enum can ride the queue.
+//!
+//! [`ShardedEventQueue`] is the scale-out variant: per-shard heaps (one
+//! per hierarchical group at 10⁴–10⁵ workers) merged through a frontier
+//! heap of shard heads. The sequence counter is **global**, so the pop
+//! order is bit-identical to a single [`EventQueue`] fed the same
+//! schedule — sharding changes memory locality and per-heap size, never
+//! determinism.
 
 use super::clock::SimTime;
 use std::cmp::Ordering;
@@ -87,6 +94,154 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// A shard-head key in the merge frontier. Reversed ordering on
+/// `(time, seq)` like [`Scheduled`], so the frontier heap surfaces the
+/// globally earliest shard head.
+struct FrontierKey {
+    time: SimTime,
+    seq: u64,
+    shard: usize,
+}
+
+impl PartialEq for FrontierKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for FrontierKey {}
+
+impl PartialOrd for FrontierKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FrontierKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Per-shard binary heaps with a lazily-invalidated merge frontier.
+///
+/// Invariant: every non-empty shard's current head has at least one live
+/// entry in the frontier — maintained by pushing a frontier key whenever
+/// a schedule creates a new shard head and whenever a pop exposes one.
+/// Stale frontier entries (keys that are no longer their shard's head)
+/// are discarded on pop; since sequence numbers are globally unique, a
+/// key matches at most one event, so staleness detection is exact.
+///
+/// `schedule`/`pop` are O(log(shard size) + log(frontier)); with `g`
+/// balanced shards that is the same asymptotics as one big heap, but each
+/// shard heap stays `g`× smaller — the point at 10⁵ workers, where one
+/// flat heap's working set no longer fits in cache.
+pub struct ShardedEventQueue<E> {
+    shards: Vec<BinaryHeap<Scheduled<E>>>,
+    frontier: BinaryHeap<FrontierKey>,
+    seq: u64,
+    len: usize,
+    peak: usize,
+}
+
+impl<E> ShardedEventQueue<E> {
+    /// `shards` ≥ 1 (one shard behaves exactly like [`EventQueue`]).
+    pub fn new(shards: usize) -> ShardedEventQueue<E> {
+        assert!(shards >= 1, "need at least one shard");
+        ShardedEventQueue {
+            shards: (0..shards).map(|_| BinaryHeap::new()).collect(),
+            frontier: BinaryHeap::new(),
+            seq: 0,
+            len: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// High-water mark of pending events — the sim's O(active events)
+    /// memory claim, made measurable.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Schedule `event` at virtual time `at` on `shard`.
+    pub fn schedule(&mut self, shard: usize, at: SimTime, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        let heap = &mut self.shards[shard];
+        heap.push(Scheduled {
+            time: at,
+            seq,
+            event,
+        });
+        // New shard head ⇒ it needs a frontier entry (the old head's entry
+        // goes stale and is discarded on pop).
+        if heap.peek().map(|h| h.seq) == Some(seq) {
+            self.frontier.push(FrontierKey {
+                time: at,
+                seq,
+                shard,
+            });
+        }
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+    }
+
+    /// Pop the globally earliest event — identical `(time, seq)` order to
+    /// a single [`EventQueue`] fed the same schedule calls.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        loop {
+            let top = self.frontier.pop()?;
+            let heap = &mut self.shards[top.shard];
+            match heap.peek() {
+                Some(h) if h.time == top.time && h.seq == top.seq => {
+                    let s = heap.pop().expect("peeked Some");
+                    if let Some(nh) = heap.peek() {
+                        self.frontier.push(FrontierKey {
+                            time: nh.time,
+                            seq: nh.seq,
+                            shard: top.shard,
+                        });
+                    }
+                    self.len -= 1;
+                    return Some((s.time, s.event));
+                }
+                // Stale entry: its event was already popped, or a newer
+                // earlier event displaced it as head (which pushed its own
+                // entry) — safe to drop.
+                _ => continue,
+            }
+        }
+    }
+
+    /// Time of the next event without popping it (discards stale frontier
+    /// entries on the way).
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while let Some(top) = self.frontier.peek() {
+            let stale = self.shards[top.shard]
+                .peek()
+                .map(|h| h.time != top.time || h.seq != top.seq)
+                .unwrap_or(true);
+            if !stale {
+                return Some(top.time);
+            }
+            self.frontier.pop();
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +283,67 @@ mod tests {
         assert_eq!(q.pop(), Some((SimTime(7), 2)));
         assert_eq!(q.pop(), Some((SimTime(10), 1)));
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn sharded_pop_order_is_bit_identical_to_the_flat_queue() {
+        use crate::util::rng::Rng;
+
+        // Same (time, event) schedule stream through a flat queue and a
+        // 7-shard queue (shard chosen per event), with interleaved pops:
+        // the global (time, seq) pop order must match exactly.
+        let mut rng = Rng::seed_from_u64(42);
+        let mut flat = EventQueue::new();
+        let mut sharded = ShardedEventQueue::new(7);
+        let mut popped_flat = Vec::new();
+        let mut popped_sharded = Vec::new();
+        for step in 0..2_000 {
+            if rng.uniform() < 0.6 {
+                let t = SimTime(rng.below(50) as u64);
+                let shard = rng.below(7);
+                flat.schedule(t, step);
+                sharded.schedule(shard, t, step);
+            } else {
+                assert_eq!(flat.peek_time(), sharded.peek_time());
+                popped_flat.push(flat.pop());
+                popped_sharded.push(sharded.pop());
+            }
+            assert_eq!(flat.len(), sharded.len());
+        }
+        while let Some(e) = flat.pop() {
+            popped_flat.push(Some(e));
+        }
+        while let Some(e) = sharded.pop() {
+            popped_sharded.push(Some(e));
+        }
+        assert_eq!(popped_flat, popped_sharded);
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn sharded_queue_tracks_its_peak_depth() {
+        let mut q = ShardedEventQueue::new(3);
+        assert_eq!(q.num_shards(), 3);
+        for i in 0..10 {
+            q.schedule(i % 3, SimTime(i as u64), i);
+        }
+        assert_eq!(q.peak(), 10);
+        while q.pop().is_some() {}
+        q.schedule(0, SimTime(1), 0);
+        assert_eq!(q.peak(), 10, "peak is a high-water mark, not current len");
+    }
+
+    #[test]
+    fn sharded_single_shard_matches_eventqueue_semantics() {
+        let mut q = ShardedEventQueue::new(1);
+        q.schedule(0, SimTime(30), "c");
+        q.schedule(0, SimTime(10), "a");
+        q.schedule(0, SimTime(10), "b");
+        assert_eq!(q.peek_time(), Some(SimTime(10)));
+        assert_eq!(q.pop(), Some((SimTime(10), "a")));
+        assert_eq!(q.pop(), Some((SimTime(10), "b")));
+        assert_eq!(q.pop(), Some((SimTime(30), "c")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek_time(), None);
     }
 }

@@ -28,5 +28,5 @@ pub mod events;
 pub mod link;
 
 pub use clock::SimTime;
-pub use events::EventQueue;
+pub use events::{EventQueue, ShardedEventQueue};
 pub use link::{ComputeModel, LatencyModel, LinkState, LossModel, NetStats, SimNet};

@@ -1,0 +1,153 @@
+//! Hierarchical topology equivalence: a `hier:` grouped graph is just
+//! another bipartite [`Topology`] to the math, so at small n all three
+//! local drivers must produce bit-for-bit identical runs on it — the
+//! sim driver additionally carrying the grouped machinery (sharded
+//! event queue, grouped restitch) that must not perturb a single bit.
+//!
+//! Also pins convergence: the hier graph is connected, so Q-GADMM on it
+//! reaches the same loss-gap tolerance as the flat chain.
+
+use qgadmm::config::{CompressorConfig, QuantConfig, SimConfig};
+use qgadmm::coordinator::engine::RunOptions;
+use qgadmm::metrics::report::RunSummary;
+use qgadmm::net::topology::TopologyKind;
+use qgadmm::runtime::session::{DriverKind, ProblemKind, Session};
+
+const WORKERS: usize = 12;
+const SEED: u64 = 4242;
+
+fn hier3() -> TopologyKind {
+    TopologyKind::parse("hier:3").expect("hier:3 parses")
+}
+
+fn session(
+    driver: DriverKind,
+    topology: TopologyKind,
+    compressor: CompressorConfig,
+    opts: RunOptions,
+) -> Session {
+    let mut s = Session::new(ProblemKind::LinReg)
+        .quick(true)
+        .workers(WORKERS)
+        .seed(SEED)
+        .driver(driver)
+        .topology(topology)
+        .compressor(compressor)
+        .options(opts);
+    if driver == DriverKind::Sim {
+        s = s.sim_config(SimConfig::ideal());
+    }
+    s
+}
+
+fn assert_bit_equal(name: &str, a: &RunSummary, b: &RunSummary) {
+    assert_eq!(
+        a.recorder.points.len(),
+        b.recorder.points.len(),
+        "{name}: curve lengths diverged ({} vs {})",
+        a.driver,
+        b.driver
+    );
+    for (pa, pb) in a.recorder.points.iter().zip(&b.recorder.points) {
+        assert_eq!(pa.iteration, pb.iteration, "{name}: iteration axis diverged");
+        assert_eq!(
+            pa.value.to_bits(),
+            pb.value.to_bits(),
+            "{name}: metric diverged at iteration {} ({} vs {})",
+            pa.iteration,
+            a.driver,
+            b.driver
+        );
+        assert_eq!(pa.bits, pb.bits, "{name}: bit curve diverged at {}", pa.iteration);
+    }
+    assert_eq!(a.comm.bits, b.comm.bits, "{name}: total bits diverged");
+    assert_eq!(
+        a.comm.transmissions, b.comm.transmissions,
+        "{name}: transmission tallies diverged"
+    );
+    assert_eq!(a.thetas.len(), b.thetas.len(), "{name}: fleet sizes diverged");
+    for (p, (ta, tb)) in a.thetas.iter().zip(&b.thetas).enumerate() {
+        assert_eq!(
+            ta, tb,
+            "{name}: final theta diverged at position {p} ({} vs {})",
+            a.driver, b.driver
+        );
+    }
+}
+
+/// 12 workers in 3 groups: engine, threaded, and sim runs are
+/// bit-identical for a flat stochastic scheme and for a layered spec
+/// (linreg's single `all` block) — the sim's sharded queue and grouped
+/// layout change scheduling data structures, never outcomes.
+#[test]
+fn hier_runs_bit_equal_across_local_drivers() {
+    let opts = RunOptions {
+        iterations: 40,
+        eval_every: 1,
+        stop_below: None,
+        stop_above: None,
+        ..RunOptions::default()
+    };
+    let schemes: Vec<(&str, CompressorConfig)> = vec![
+        (
+            "stochastic",
+            CompressorConfig::Stochastic(QuantConfig::default()),
+        ),
+        (
+            "layers",
+            CompressorConfig::parse("layers:all=stochastic@4", QuantConfig::default())
+                .expect("layered spec parses"),
+        ),
+    ];
+    for (scheme, compressor) in schemes {
+        let name = format!("{scheme} on hier:3");
+        let run = |driver| {
+            session(driver, hier3(), compressor.clone(), opts.clone())
+                .run()
+                .unwrap_or_else(|e| panic!("{name}: run failed: {e}"))
+        };
+        let engine = run(DriverKind::Engine);
+        let threaded = run(DriverKind::Threaded);
+        let sim = run(DriverKind::Sim);
+        assert_bit_equal(&name, &engine, &threaded);
+        assert_bit_equal(&name, &engine, &sim);
+    }
+}
+
+/// The hier graph must converge to the same tolerance as the flat chain:
+/// same workload, same stopping rule, both cross the loss-gap target
+/// before the iteration cap.
+#[test]
+fn hier_converges_like_the_flat_chain() {
+    const TARGET: f64 = 1e-3;
+    let opts = RunOptions {
+        iterations: 4_000,
+        eval_every: 1,
+        stop_below: Some(TARGET),
+        stop_above: None,
+        ..RunOptions::default()
+    };
+    let run = |topology: TopologyKind| {
+        session(
+            DriverKind::Engine,
+            topology,
+            CompressorConfig::Stochastic(QuantConfig::default()),
+            opts.clone(),
+        )
+        .run()
+        .expect("run completes")
+    };
+    for (name, summary) in [("chain", run(TopologyKind::Line)), ("hier:3", run(hier3()))] {
+        assert!(
+            summary.final_value() <= TARGET,
+            "{name} never reached the {TARGET:.0e} loss-gap target \
+             (gap {:.3e} after {} iterations)",
+            summary.final_value(),
+            summary.iterations_run
+        );
+        assert!(
+            summary.iterations_run < 4_000,
+            "{name} only hit the target at the cap"
+        );
+    }
+}
