@@ -1,0 +1,31 @@
+//! `cargo run --bin tidy` — run the repo's static-analysis pass and exit
+//! nonzero on any violation. The same checks run under `cargo test`
+//! (`tests/tidy.rs`) and in the CI `tidy` job; this binary exists for
+//! fast local iteration and for printing the recomputed wire-schema
+//! fingerprint when a schema change is intentional.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use qgadmm::util::tidy;
+
+fn main() -> ExitCode {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    match tidy::check_repo(manifest_dir) {
+        Ok(violations) if violations.is_empty() => {
+            eprintln!("tidy: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("tidy: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("tidy: cannot scan the tree: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

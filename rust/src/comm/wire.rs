@@ -96,6 +96,15 @@ pub fn overhead_bound(payload: &Payload) -> u64 {
     }
 }
 
+/// Committed fingerprint of the wire schema: FNV-1a 64 over a canonical
+/// string of [`WIRE_VERSION`], the `Payload` variant list (declaration
+/// order), and the `TAG_*` name/value table (declaration order). The tidy
+/// `wire-schema` lint recomputes this from source on every run; a mismatch
+/// means the schema changed, and the fix is to bump [`WIRE_VERSION`] and
+/// paste the recomputed value the lint reports — never to silently edit
+/// the schema in place.
+pub const WIRE_SCHEMA_FINGERPRINT: u64 = 0x957e_1bfe_31d8_df75;
+
 const MAGIC: u8 = 0xA9;
 const TAG_STOP: u8 = 0;
 const TAG_FULL: u8 = 1;

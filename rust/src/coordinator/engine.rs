@@ -703,7 +703,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
     where
         F: FnMut(&Self) -> f64,
     {
-        let wall = std::time::Instant::now();
+        let wall = WallClock::start();
         let eval_every = opts.normalized_eval_every();
         self.rho_policy = opts.rho_policy;
         self.watch_broadcasts = observer.wants_broadcasts();
@@ -778,7 +778,7 @@ impl<P: LocalProblem> GadmmEngine<P> {
         self.metrics = RunMetrics::disabled();
         RunSummary {
             driver: "engine",
-            wall_secs: wall.elapsed().as_secs_f64(),
+            wall_secs: wall.elapsed_secs(),
             recorder,
             comm: self.comm.clone(),
             residuals,

@@ -125,8 +125,11 @@ impl Membership {
             .map(|g| g.iter().copied().filter(|&w| self.is_alive(w)).collect::<Vec<usize>>())
             .filter(|g| !g.is_empty())
             .collect();
-        let h = HierTopology::assemble(groups, InnerKind::Line)
-            .expect("line-inner grouped assembly is always bipartite and connected");
+        // Line-inner grouped assembly is always bipartite and connected,
+        // so this only fails on a logic bug upstream — degrade to "no
+        // plan" (callers abort the re-stitch) rather than panicking a
+        // live protocol participant.
+        let h = HierTopology::assemble(groups, InnerKind::Line).ok()?;
         Some((h.topo, h.layout))
     }
 }

@@ -62,7 +62,7 @@ use crate::net::topology::Topology;
 use crate::quant::compress::CompressOutcome;
 use crate::quant::{apply_payload_slice, Compressor, CompressorKind};
 use crate::sim::{ComputeModel, ShardedEventQueue, SimNet, SimTime};
-use crate::telemetry::{Event, Phase, TelemetrySink};
+use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
 use crate::sim::link::NetStats;
 use crate::util::rng::Rng;
 
@@ -974,7 +974,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
     where
         F: FnMut(&Self) -> f64,
     {
-        let wall = std::time::Instant::now();
+        let wall = WallClock::start();
         let eval_every = opts.normalized_eval_every();
         self.rho_policy = opts.rho_policy;
         self.residuals.clear();
@@ -1077,7 +1077,7 @@ impl<P: LocalProblem> SimulatedGadmm<P> {
             driver: "sim",
             // Host time spent *simulating*; the virtual clock is
             // `SimExt::sim_secs` below.
-            wall_secs: wall.elapsed().as_secs_f64(),
+            wall_secs: wall.elapsed_secs(),
             recorder,
             comm: self.comm.clone(),
             // Populated on adaptive-ρ runs; empty under `Fixed`.

@@ -48,6 +48,7 @@ use crate::net::topology::Topology;
 use crate::quant::{Compressor, Mirror};
 use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
 use crate::util::rng::Rng;
+use crate::util::sync::PoisonTolerantMutex;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -80,7 +81,8 @@ impl RhoLatch {
 
     /// Publish ρ for iteration `completed + 1`.
     pub(crate) fn publish(&self, completed: u64, rho_next: f32) {
-        let mut s = self.state.lock().expect("rho latch poisoned");
+        // lock-order: 10 rho latch is a leaf lock (nothing acquired under it)
+        let mut s = self.state.lock_unpoisoned();
         *s = (completed, rho_next);
         self.cv.notify_all();
     }
@@ -88,12 +90,16 @@ impl RhoLatch {
     /// Block until ρ for iteration `k` is known (the leader has completed
     /// `k − 1`), then return it.
     pub(crate) fn rho_for(&self, k: u64) -> anyhow::Result<f32> {
-        let mut s = self.state.lock().expect("rho latch poisoned");
+        // lock-order: 10 rho latch is a leaf lock (nothing acquired under it)
+        let mut s = self.state.lock_unpoisoned();
         while s.0 < k - 1 {
+            // A poisoned latch means a peer worker panicked mid-publish;
+            // the tuple state is still well-formed, so keep waiting and
+            // let the starvation timeout below surface the stall.
             let (next, timeout) = self
                 .cv
                 .wait_timeout(s, RECV_TIMEOUT)
-                .expect("rho latch poisoned");
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             s = next;
             if timeout.timed_out() && s.0 < k - 1 {
                 anyhow::bail!("rho latch starved waiting for iteration {k}");
@@ -189,7 +195,7 @@ pub fn run_threaded_on(
     mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
     observer: &mut dyn Observer,
 ) -> anyhow::Result<RunSummary> {
-    let wall = std::time::Instant::now();
+    let wall = WallClock::start();
     let n = solvers.len();
     assert_eq!(cfg.workers, n, "config/solver count mismatch");
     assert_eq!(topo.len(), n, "topology/solver count mismatch");
@@ -331,7 +337,9 @@ pub fn run_threaded_on(
             );
             pending.entry(rep.iteration).or_default().push(rep);
         }
-        let batch = pending.remove(&k).expect("just completed");
+        let Some(batch) = pending.remove(&k) else {
+            anyhow::bail!("leader lost the completed report batch for iteration {k}");
+        };
         // Reports arrive in nondeterministic thread order; slot them by
         // position so the objective sum (float addition is order-
         // sensitive) is accumulated exactly like the engine's
@@ -342,10 +350,13 @@ pub fn run_threaded_on(
             assert!(slots[p].is_none(), "duplicate report from position {p}");
             slots[p] = Some(rep);
         }
-        let reps: Vec<WorkerReport> = slots
-            .into_iter()
-            .map(|s| s.expect("leader counted n reports for this iteration"))
-            .collect();
+        let mut reps: Vec<WorkerReport> = Vec::with_capacity(n);
+        for (p, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(rep) => reps.push(rep),
+                None => anyhow::bail!("leader missing the iteration-{k} report from position {p}"),
+            }
+        }
         let mut objective_sum = 0.0f64;
         for rep in &reps {
             objective_sum += rep.objective;
@@ -509,7 +520,7 @@ pub fn run_threaded_on(
     }
     Ok(RunSummary {
         driver: "threaded",
-        wall_secs: wall.elapsed().as_secs_f64(),
+        wall_secs: wall.elapsed_secs(),
         recorder,
         comm,
         // Populated on adaptive-ρ runs (where the leader reconstructs the

@@ -22,6 +22,7 @@ use crate::metrics::Observer;
 use crate::model::scale::DiagLinRegProblem;
 use crate::net::geometry::collinear;
 use crate::net::hier::{HierTopology, InnerKind};
+use crate::telemetry::WallClock;
 use std::path::Path;
 
 /// Streams every eval point into a small curve instead of letting the
@@ -102,9 +103,9 @@ pub fn run(cfg: &ExperimentConfig, quick: bool) -> anyhow::Result<()> {
         let mut obs = StreamingCurve {
             rec: Recorder::new(&format!("Q-GADMM hier n={n}")),
         };
-        let wall = std::time::Instant::now();
+        let wall = WallClock::start();
         let summary = sim.run_observed(&opts, |s| (s.global_objective() - f_star).abs(), &mut obs);
-        let wall_secs = wall.elapsed().as_secs_f64();
+        let wall_secs = wall.elapsed_secs();
 
         let queue_peak = summary.sim_ext().queue_peak;
         assert!(

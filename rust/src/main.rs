@@ -116,7 +116,7 @@ fn family(problem: ProblemKind) -> &'static str {
 fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
     let variant = variant_name(&cfg.gadmm.compressor, family(cfg.problem));
     let results_dir = cfg.results_dir.clone();
-    let wall = std::time::Instant::now();
+    let wall = qgadmm::telemetry::WallClock::start();
     let trace_jsonl = cfg.trace_jsonl.clone();
     let chrome_trace = cfg.chrome_trace.clone();
     let summary = if cfg.use_xla {
@@ -132,7 +132,7 @@ fn run_session(cfg: ExperimentConfig) -> anyhow::Result<()> {
         println!("{}", session.describe());
         session.run()?
     };
-    let wall = wall.elapsed().as_secs_f64();
+    let wall = wall.elapsed_secs();
     if let Some(path) = &trace_jsonl {
         println!("telemetry trace (JSONL) written to {path}");
     }

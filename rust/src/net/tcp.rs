@@ -47,15 +47,16 @@ use crate::net::geometry::Point;
 use crate::net::topology::Topology;
 use crate::quant::compress::CompressorKind;
 use crate::quant::{Compressor, Mirror};
-use crate::telemetry::{Event, Phase, TelemetrySink, WallClock};
+use crate::telemetry::{Deadline, Event, Phase, TelemetrySink, WallClock};
 use crate::util::rng::Rng;
+use crate::util::sync::PoisonTolerantMutex;
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Round tag of a re-stitch resync frame (`Payload::Full` re-anchor).
 /// `u64::MAX` stays the stop marker, matching the threaded driver.
@@ -123,7 +124,7 @@ fn connect_mesh(
     me: usize,
     listener: TcpListener,
     addrs: &[SocketAddr],
-    deadline: Instant,
+    deadline: Deadline,
 ) -> anyhow::Result<Vec<(usize, TcpStream)>> {
     let n = addrs.len();
     let mut out = Vec::with_capacity(n.saturating_sub(1));
@@ -132,7 +133,7 @@ fn connect_mesh(
             match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e) => {
-                    if Instant::now() >= deadline {
+                    if deadline.expired() {
                         anyhow::bail!("worker {me} could not dial worker {peer} at {addr}: {e}");
                     }
                     std::thread::sleep(Duration::from_millis(2));
@@ -161,7 +162,7 @@ fn connect_mesh(
                 accepted += 1;
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
+                if deadline.expired() {
                     anyhow::bail!(
                         "worker {me} timed out accepting mesh connections ({accepted}/{me})"
                     );
@@ -202,7 +203,7 @@ fn local_mesh(n: usize, dims: usize, timeout: Duration) -> anyhow::Result<Vec<Me
         .iter()
         .map(|l| l.local_addr())
         .collect::<std::io::Result<_>>()?;
-    let deadline = Instant::now() + timeout;
+    let deadline = Deadline::after(timeout);
     let mut joins = Vec::with_capacity(n);
     for (me, listener) in listeners.into_iter().enumerate() {
         let addrs = addrs.clone();
@@ -237,12 +238,17 @@ fn recv_where(
     timeout: Duration,
     mut want: impl FnMut(&Message) -> bool,
 ) -> anyhow::Result<Got> {
+    // `remove(i)` is `Some` by construction (`i` was just found); if it
+    // ever were not, falling through to the live recv path below is a
+    // safe (if slower) recovery, so no panic path is needed here.
     if let Some(i) = pending.iter().position(|m| want(m)) {
-        return Ok(Got::Frame(pending.remove(i).expect("position just found")));
+        if let Some(m) = pending.remove(i) {
+            return Ok(Got::Frame(m));
+        }
     }
-    let deadline = Instant::now() + timeout;
+    let deadline = Deadline::after(timeout);
     loop {
-        let remain = deadline.saturating_duration_since(Instant::now());
+        let remain = deadline.remaining();
         match inbox.recv_timeout(remain) {
             Ok(NetEvent::Frame(m)) => {
                 if matches!(m.payload, Payload::Stop) {
@@ -321,7 +327,8 @@ impl Cluster {
     /// Register that `me` is starting iteration `k`; returns the pending
     /// plan if its boundary is due and `me` has not executed it yet.
     fn begin_iteration(&self, me: usize, k: u64, my_generation: u64) -> Boundary {
-        let mut s = self.state.lock().expect("cluster state poisoned");
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        let mut s = self.state.lock_unpoisoned();
         if s.aborted {
             return Boundary::Aborted;
         }
@@ -341,75 +348,69 @@ impl Cluster {
     /// Record a death observed by `by`. Creates or extends the recovery
     /// plan; a death while a plan is mid-execution aborts the run.
     fn mark_dead(&self, victim: usize, by: usize) {
-        let mut s = self.state.lock().expect("cluster state poisoned");
-        if victim >= s.dead.len() || s.dead[victim] {
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        let mut s = self.state.lock_unpoisoned();
+        let st = &mut *s;
+        if victim >= st.dead.len() || st.dead[victim] {
             return;
         }
-        s.dead[victim] = true;
-        s.detected_by[victim] = by;
+        st.dead[victim] = true;
+        st.detected_by[victim] = by;
         let live_started = || {
-            s.started
+            st.started
                 .iter()
                 .enumerate()
-                .filter(|&(w, _)| !s.dead[w])
+                .filter(|&(w, _)| !st.dead[w])
                 .map(|(_, &k)| k)
         };
         let max_started = live_started().max().unwrap_or(0);
         let min_started = live_started().min().unwrap_or(0);
-        let dead = s.dead.clone();
-        enum Action {
-            Fresh(u64),
-            Extend,
-            Abort,
-        }
-        let action = match &s.plan {
-            None => Action::Fresh(1),
-            Some(p) if !p.launched => Action::Extend,
-            // The previous plan is fully retired once every live worker
-            // has moved past its boundary; a new death then starts a new
-            // generation.
-            Some(p) if min_started > p.at => Action::Fresh(p.generation + 1),
-            Some(_) => Action::Abort,
-        };
-        match action {
-            Action::Fresh(generation) => {
-                s.plan = Some(RestitchPlan {
+        let dead = st.dead.clone();
+        match &mut st.plan {
+            // An unlaunched plan absorbs the new death: push the boundary
+            // past every live worker again and refresh the dead set.
+            Some(p) if !p.launched => {
+                p.at = p.at.max(max_started + 1);
+                p.dead = dead;
+            }
+            // A death while a plan is mid-execution aborts the run
+            // (cascading recovery is out of scope).
+            Some(p) if min_started <= p.at => st.aborted = true,
+            // No plan, or the previous one fully retired (every live
+            // worker moved past its boundary): start a fresh generation.
+            plan => {
+                let generation = plan.as_ref().map(|p| p.generation + 1).unwrap_or(1);
+                *plan = Some(RestitchPlan {
                     at: max_started + 1,
                     generation,
                     dead,
                     launched: false,
                 });
             }
-            Action::Extend => {
-                let p = s.plan.as_mut().expect("extend requires a plan");
-                p.at = p.at.max(max_started + 1);
-                p.dead = dead;
-            }
-            Action::Abort => s.aborted = true,
         }
     }
 
     fn aborted(&self) -> bool {
-        self.state.lock().expect("cluster state poisoned").aborted
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        self.state.lock_unpoisoned().aborted
     }
 
     fn dead_snapshot(&self) -> Vec<bool> {
-        self.state
-            .lock()
-            .expect("cluster state poisoned")
-            .dead
-            .clone()
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        self.state.lock_unpoisoned().dead.clone()
     }
 
     fn detected_by(&self, worker: usize) -> usize {
-        self.state.lock().expect("cluster state poisoned").detected_by[worker]
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        self.state.lock_unpoisoned().detected_by[worker]
     }
 
     /// The leader's view of a due plan: returns `(generation, dead)` when
     /// a plan with boundary at or before `k` exists that the leader has
     /// not folded into its accounting yet.
     fn plan_due(&self, k: u64, after_generation: u64) -> Option<(u64, Vec<bool>)> {
-        let s = self.state.lock().expect("cluster state poisoned");
+        // lock-order: 20 cluster table is a leaf lock (nothing acquired under it)
+        let s = self.state.lock_unpoisoned();
         match &s.plan {
             Some(p) if p.at <= k && p.generation > after_generation => {
                 Some((p.generation, p.dead.clone()))
@@ -429,11 +430,14 @@ struct LinkState {
 }
 
 /// Build the link states for `me` under `topo` (fresh duals and mirrors
-/// — exactly the post-re-stitch state the sim produces).
-fn links_for(topo: &Topology, me: usize, dims: usize) -> (bool, Vec<LinkState>) {
-    let pos = (0..topo.len())
-        .find(|&p| topo.worker_at(p) == me)
-        .expect("worker appears in its own topology");
+/// — exactly the post-re-stitch state the sim produces). Errors if `me`
+/// is not in `topo` — a protocol bug (e.g. a survivor re-stitched onto a
+/// plan that excludes it), surfaced as a run failure rather than a panic
+/// inside a live fleet.
+fn links_for(topo: &Topology, me: usize, dims: usize) -> anyhow::Result<(bool, Vec<LinkState>)> {
+    let Some(pos) = (0..topo.len()).find(|&p| topo.worker_at(p) == me) else {
+        anyhow::bail!("worker {me} does not appear in its own topology");
+    };
     let links = topo
         .incident(pos)
         .iter()
@@ -444,7 +448,7 @@ fn links_for(topo: &Topology, me: usize, dims: usize) -> (bool, Vec<LinkState>) 
             mirror: Mirror::new(dims),
         })
         .collect();
-    (topo.is_head(pos), links)
+    Ok((topo.is_head(pos), links))
 }
 
 /// Per-iteration worker report to the leader — the threaded driver's
@@ -641,7 +645,7 @@ impl Worker {
             return Ok(Flow::Exhausted);
         };
         self.topo = plan;
-        let (is_head, links) = links_for(&self.topo, self.me, self.dims);
+        let (is_head, links) = links_for(&self.topo, self.me, self.dims)?;
         self.is_head = is_head;
         self.links = links;
         compressor.reset_to(theta);
@@ -1007,7 +1011,7 @@ fn run_single_process(
     mut metric: impl FnMut(f64, &[Vec<f32>]) -> f64,
     observer: &mut dyn Observer,
 ) -> anyhow::Result<RunSummary> {
-    let wall = Instant::now();
+    let wall = WallClock::start();
     let n = solvers.len();
     let d = solvers[0].dims();
     if let Some(init) = initial_theta {
@@ -1052,7 +1056,7 @@ fn run_single_process(
         .zip(meshes.into_iter().zip(rngs.into_iter()))
         .enumerate()
     {
-        let (is_head, links) = links_for(topo, me, d);
+        let (is_head, links) = links_for(topo, me, d)?;
         let worker = Worker {
             me,
             dims: d,
@@ -1174,7 +1178,9 @@ fn run_single_process(
                 }
             }
             TcpFaultMode::Detected => {
-                let cl = cluster.as_ref().expect("detected mode has a cluster");
+                let Some(cl) = cluster.as_ref() else {
+                    anyhow::bail!("detected fault mode is missing its cluster table");
+                };
                 if cl.aborted() {
                     anyhow::bail!("cascading crash during recovery is unsupported");
                 }
@@ -1219,7 +1225,7 @@ fn run_single_process(
         // Collect this iteration's reports. The expected set shrinks when
         // the cluster learns of deaths (detected mode); a dead worker
         // that reported k before dying still counts.
-        let deadline = Instant::now() + timeout;
+        let deadline = Deadline::after(timeout);
         loop {
             let reported = pending.get(&k);
             let have = reported.map(|v| v.len()).unwrap_or(0);
@@ -1258,10 +1264,7 @@ fn run_single_process(
                             anyhow::bail!("cascading crash during recovery is unsupported");
                         }
                     }
-                    anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "leader starved at iteration {k}"
-                    );
+                    anyhow::ensure!(!deadline.expired(), "leader starved at iteration {k}");
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     anyhow::bail!("leader lost every worker at iteration {k}")
@@ -1450,7 +1453,7 @@ fn run_single_process(
     };
     Ok(RunSummary {
         driver: "tcp",
-        wall_secs: wall.elapsed().as_secs_f64(),
+        wall_secs: wall.elapsed_secs(),
         recorder,
         comm,
         residuals,
@@ -1512,9 +1515,11 @@ fn run_multiprocess(
     seed: u64,
     initial_theta: Option<&[f32]>,
 ) -> anyhow::Result<RunSummary> {
-    let wall = Instant::now();
+    let wall = WallClock::start();
     let n = solvers.len();
-    let listen = tcp.listen.as_deref().expect("multi-process mode has listen");
+    let Some(listen) = tcp.listen.as_deref() else {
+        anyhow::bail!("multi-process tcp mode requires --listen");
+    };
     anyhow::ensure!(
         dropouts.is_empty(),
         "fault injection needs the single-process harness (drop --listen/--peers)"
@@ -1544,7 +1549,7 @@ fn run_multiprocess(
     let d = solvers[0].dims();
     let timeout = Duration::from_millis(tcp.timeout_ms.max(1));
     let listener = TcpListener::bind(addrs[me])?;
-    let streams = connect_mesh(me, listener, &addrs, Instant::now() + timeout)?;
+    let streams = connect_mesh(me, listener, &addrs, Deadline::after(timeout))?;
     let mesh = into_mesh(n, d, streams)?;
 
     // Every process forks the full RNG fan so worker `me` gets the same
@@ -1554,7 +1559,7 @@ fn run_multiprocess(
     let rng = rngs.swap_remove(me);
     let mut solvers = solvers;
     let solver = solvers.swap_remove(me);
-    let (is_head, links) = links_for(topo, me, d);
+    let (is_head, links) = links_for(topo, me, d)?;
     let worker = Worker {
         me,
         dims: d,
@@ -1585,7 +1590,7 @@ fn run_multiprocess(
     let exit = worker_main(worker, solver)?;
     Ok(RunSummary {
         driver: "tcp",
-        wall_secs: wall.elapsed().as_secs_f64(),
+        wall_secs: wall.elapsed_secs(),
         recorder: Recorder::new("tcp-worker"),
         comm: exit.comm,
         residuals: Vec::new(),

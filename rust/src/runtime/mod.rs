@@ -10,7 +10,11 @@ pub mod session;
 pub mod solver;
 
 use crate::util::json::Json;
-use std::collections::HashMap;
+// BTreeMap, not HashMap: every map on a driver-reachable path iterates in
+// a deterministic (sorted) order by construction, so manifest walks can
+// never perturb bit-for-bit cross-driver equivalence. Enforced by the
+// tidy `determinism-collections` lint (`cargo run --bin tidy`).
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Runtime failure modes.
@@ -42,13 +46,13 @@ pub struct ArtifactMeta {
     pub file: PathBuf,
     pub inputs: Vec<Vec<usize>>,
     pub outputs: Vec<Vec<usize>>,
-    pub constants: HashMap<String, f64>,
+    pub constants: BTreeMap<String, f64>,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
-    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
 impl Manifest {
@@ -71,7 +75,7 @@ impl Manifest {
         let Json::Obj(map) = arts else {
             return Err(RuntimeError::Manifest("'artifacts' not an object".into()));
         };
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         for (name, meta) in map {
             let shapes = |key: &str| -> Result<Vec<Vec<usize>>, RuntimeError> {
                 meta.get(key)
@@ -97,7 +101,7 @@ impl Manifest {
                 .get("file")
                 .and_then(|f| f.as_str())
                 .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing file")))?;
-            let mut constants = HashMap::new();
+            let mut constants = BTreeMap::new();
             if let Some(Json::Obj(cs)) = meta.get("constants") {
                 for (k, v) in cs {
                     if let Some(x) = v.as_f64() {
@@ -176,7 +180,7 @@ impl Artifact {
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    compiled: std::cell::RefCell<HashMap<String, std::rc::Rc<Artifact>>>,
+    compiled: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Artifact>>>,
 }
 
 impl Runtime {
@@ -189,7 +193,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            compiled: std::cell::RefCell::new(HashMap::new()),
+            compiled: std::cell::RefCell::new(BTreeMap::new()),
         })
     }
 

@@ -44,7 +44,7 @@ pub mod export;
 
 use crate::metrics::Observer;
 use crate::util::json::Json;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use export::TelemetryOptions;
 
@@ -396,6 +396,51 @@ impl WallClock {
             Some(origin) => origin.elapsed().as_nanos() as u64,
             None => 0,
         }
+    }
+
+    /// Seconds since `start()` (always 0.0 for an inactive clock).
+    ///
+    /// This — together with [`Deadline`] — is the only sanctioned wall-time
+    /// surface outside this module: the tidy `determinism-clock` lint
+    /// forbids raw `Instant`/`SystemTime` reads everywhere else in `src/`,
+    /// so measured time stays an observation that can never feed back into
+    /// the bit-exact iteration math.
+    #[inline]
+    pub fn elapsed_secs(&self) -> f64 {
+        match self.origin {
+            Some(origin) => origin.elapsed().as_secs_f64(),
+            None => 0.0,
+        }
+    }
+}
+
+/// A wall-clock deadline for protocol timeouts (TCP handshakes, receive
+/// waits). Like [`WallClock`], it exists so that code outside `telemetry`
+/// never touches `Instant` directly.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `timeout` from now.
+    pub fn after(timeout: Duration) -> Deadline {
+        Deadline {
+            at: Instant::now() + timeout,
+        }
+    }
+
+    /// True once the deadline has passed.
+    #[inline]
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Time left before the deadline (`Duration::ZERO` once expired) —
+    /// suitable for bounded `read_timeout`/`wait_timeout` arguments.
+    #[inline]
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
     }
 }
 

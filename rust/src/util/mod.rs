@@ -5,9 +5,12 @@
 //! needs: a fast seedable PRNG ([`rng`]), summary statistics and empirical
 //! CDFs ([`stats`]), a JSON emitter and a small recursive-descent JSON
 //! parser ([`json`]) used for the artifact manifest and metric reports, and
-//! a stopwatch ([`timer`]).
+//! a stopwatch ([`timer`]), poison-tolerant locking ([`sync`]), and the
+//! repo's own static-analysis pass ([`tidy`]).
 
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
+pub mod tidy;
 pub mod timer;

@@ -1,0 +1,52 @@
+//! Poison-tolerant locking for the protocol paths.
+//!
+//! `std::sync::Mutex` poisons itself when a holder panics, and every
+//! subsequent `.lock().unwrap()` then panics too — so one crashed worker
+//! thread cascades into deadlocked or dead peers. The shared state guarded
+//! by the runtime's mutexes (`RhoLatch`, the TCP `Cluster` table) is
+//! plain-old-data that is valid after any partial update, so the protocol
+//! paths deliberately *ignore* poisoning: survivors keep serving the
+//! membership protocol and the dropout re-stitch logic decides what to do
+//! about the dead peer.
+//!
+//! The tidy `panic-safety` lint forbids `unwrap`/`expect` in those modules,
+//! which is what pushes lock acquisition through this helper.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Extension trait: acquire a mutex, recovering the guard from a poisoned
+/// lock instead of panicking.
+pub trait PoisonTolerantMutex<T> {
+    /// Like `Mutex::lock`, but a poisoned lock yields the inner guard
+    /// rather than an error. Infallible.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> PoisonTolerantMutex<T> for Mutex<T> {
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_unpoisoned();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = m.lock_unpoisoned();
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*m.lock_unpoisoned(), 8);
+    }
+}

@@ -1,0 +1,412 @@
+//! Per-file line/token lints and the `tidy:allow` suppression grammar.
+//!
+//! Scanning is deliberately token-level (exactly like rust-lang/rust's
+//! `tidy`): each line is split at its first `//` into code and comment,
+//! token lints search the code part with identifier-boundary checks, and
+//! annotations are read from the comment part. Needles whose scope covers
+//! this module's own source are assembled with `concat!` so the pass
+//! never flags itself.
+//!
+//! Suppression grammar — the annotation must *begin* the comment text
+//! (prose mentions elsewhere in a comment are ignored):
+//!
+//! ```text
+//! // tidy:allow(<lint>[, <lint>...]): <non-empty reason>
+//! ```
+//!
+//! placed either trailing the violating line or alone on the line above.
+//! A recognizable annotation with a missing/empty reason, an unknown lint
+//! name, or a missing `)` is a `tidy-allow` violation — which is itself
+//! unsuppressible.
+
+use super::{
+    violation, Violation, DETERMINISM_CLOCK, DETERMINISM_COLLECTIONS, HYGIENE_FEATURES,
+    HYGIENE_UNSAFE, KNOWN_LINTS, LOCK_ORDER, PANIC_SAFETY, TIDY_ALLOW,
+};
+
+/// Directories (under `src/`) where hash containers are forbidden: these
+/// are the driver-reachable paths whose iteration order feeds figures,
+/// frames, or state updates.
+const COLLECTION_SCOPED_DIRS: &[&str] = &[
+    "src/coordinator/",
+    "src/sim/",
+    "src/net/",
+    "src/comm/",
+    "src/quant/",
+    "src/runtime/",
+];
+
+/// Protocol-critical files where panicking escape hatches are forbidden.
+const PANIC_CRITICAL_FILES: &[&str] = &[
+    "src/comm/wire.rs",
+    "src/net/tcp.rs",
+    "src/coordinator/membership.rs",
+    "src/coordinator/threaded.rs",
+];
+
+/// Files whose lock sites must carry rank annotations.
+const LOCK_DISCIPLINED_FILES: &[&str] = &["src/coordinator/threaded.rs", "src/net/tcp.rs"];
+
+const COLLECTION_NEEDLES: &[&str] = &[concat!("Hash", "Map"), concat!("Hash", "Set")];
+const CLOCK_NEEDLES: &[&str] = &[concat!("Inst", "ant::now"), concat!("Sys", "temTime")];
+const PANIC_NEEDLES: &[&str] = &[
+    concat!(".unw", "rap()"),
+    concat!(".exp", "ect("),
+    concat!("pan", "ic!"),
+    concat!("unreach", "able!"),
+];
+const LOCK_NEEDLES: &[&str] = &[concat!(".lo", "ck("), concat!(".lock_unpois", "oned(")];
+const UNSAFE_NEEDLE: &str = concat!("uns", "afe");
+const FEATURE_WORD: &str = concat!("feat", "ure");
+const ALLOW_NEEDLE: &str = concat!("tidy:al", "low(");
+const LOCK_ANNOTATION: &str = concat!("lock-or", "der:");
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// True if `needle` occurs in `code` as a token: where the needle starts
+/// or ends with an identifier character, the neighboring character must
+/// not be one (so `Inst…::now` never matches an identifier that merely
+/// embeds it, but `.method(`-shaped needles match anywhere).
+fn has_token(code: &str, needle: &str) -> bool {
+    let nb = needle.as_bytes();
+    if nb.is_empty() {
+        return false;
+    }
+    let check_before = is_ident_byte(nb[0]);
+    let check_after = is_ident_byte(nb[nb.len() - 1]);
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(off) = code[start..].find(needle) {
+        let at = start + off;
+        let end = at + needle.len();
+        let ok_before = !check_before || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let ok_after = !check_after || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if ok_before && ok_after {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Split a line at its first `//` into (code, comment). Token-level on
+/// purpose: a `//` inside a string literal splits early, which can only
+/// make the code part *smaller* (a missed detection, never a false one).
+fn split_comment(line: &str) -> (&str, &str) {
+    match line.find("//") {
+        Some(i) => (&line[..i], &line[i..]),
+        None => (line, ""),
+    }
+}
+
+/// The comment's text with its `//`/`///`/`//!` opener stripped.
+fn comment_text(comment: &str) -> &str {
+    comment
+        .trim_start_matches('/')
+        .trim_start_matches('!')
+        .trim_start()
+}
+
+enum AllowParse {
+    None,
+    Allow(Vec<String>),
+    Malformed(String),
+}
+
+/// Parse a suppression annotation at the start of a comment's text.
+fn parse_allow(comment: &str) -> AllowParse {
+    let Some(rest) = comment_text(comment).strip_prefix(ALLOW_NEEDLE) else {
+        return AllowParse::None;
+    };
+    let Some(close) = rest.find(')') else {
+        return AllowParse::Malformed("suppression annotation is missing its `)`".to_string());
+    };
+    let names: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    if names.iter().any(|n| n.is_empty()) {
+        return AllowParse::Malformed("suppression annotation has an empty lint name".to_string());
+    }
+    let after = rest[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix(':') else {
+        return AllowParse::Malformed(
+            "suppression annotation is missing its `: <reason>`".to_string(),
+        );
+    };
+    if reason.trim().is_empty() {
+        return AllowParse::Malformed(
+            "suppression annotation must give a non-empty reason".to_string(),
+        );
+    }
+    AllowParse::Allow(names)
+}
+
+/// Parse a lock-rank annotation at the start of a comment's text:
+/// `Some(Ok(rank))`, `Some(Err(why-it-is-malformed))`, or `None` when the
+/// comment is not a lock annotation at all.
+fn parse_lock_annotation(comment: &str) -> Option<Result<u64, String>> {
+    let rest = comment_text(comment).strip_prefix(LOCK_ANNOTATION)?;
+    let mut words = rest.split_whitespace();
+    let Some(rank_txt) = words.next() else {
+        return Some(Err("lock annotation is missing its rank".to_string()));
+    };
+    let Ok(rank) = rank_txt.parse::<u64>() else {
+        return Some(Err(format!(
+            "lock annotation rank {rank_txt:?} is not an integer"
+        )));
+    };
+    if words.next().is_none() {
+        return Some(Err(
+            "lock annotation needs a `<why>` after the rank".to_string()
+        ));
+    }
+    Some(Ok(rank))
+}
+
+/// Extract feature names from `cfg(feature = "...")`-shaped code.
+fn cfg_feature_names(code: &str) -> Vec<String> {
+    let bytes = code.as_bytes();
+    let mut found = Vec::new();
+    let mut start = 0;
+    while let Some(off) = code[start..].find(FEATURE_WORD) {
+        let at = start + off;
+        let end = at + FEATURE_WORD.len();
+        start = end;
+        if at > 0 && is_ident_byte(bytes[at - 1]) {
+            continue;
+        }
+        let rest = code[end..].trim_start();
+        let Some(rest) = rest.strip_prefix('=') else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('"') else {
+            continue;
+        };
+        if let Some(close) = rest.find('"') {
+            found.push(rest[..close].to_string());
+        }
+    }
+    found
+}
+
+/// A new function begins on this line (resets the lock-rank watermark).
+fn fn_boundary(code: &str) -> bool {
+    has_token(code, "fn")
+}
+
+/// Run every per-file lint over one source file. `label` is the
+/// repo-relative path (forward slashes) that selects which lint scopes
+/// apply; `features` is the declared `[features]` list from `Cargo.toml`.
+pub fn check_source(label: &str, text: &str, features: &[String]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let collections_scope = COLLECTION_SCOPED_DIRS.iter().any(|d| label.starts_with(d));
+    let clock_scope = label.starts_with("src/") && !label.starts_with("src/telemetry/");
+    let panic_scope = PANIC_CRITICAL_FILES.contains(&label);
+    let lock_scope = LOCK_DISCIPLINED_FILES.contains(&label);
+
+    let lines: Vec<&str> = text.lines().collect();
+
+    // Pass 1: suppression annotations (and their own grammar violations).
+    let mut allows: Vec<Vec<String>> = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        let (_, comment) = split_comment(line);
+        match parse_allow(comment) {
+            AllowParse::None => allows.push(Vec::new()),
+            AllowParse::Allow(names) => {
+                for name in &names {
+                    if !KNOWN_LINTS.contains(&name.as_str()) {
+                        out.push(violation(
+                            TIDY_ALLOW,
+                            label,
+                            i + 1,
+                            format!("suppression annotation names unknown lint {name:?}"),
+                        ));
+                    }
+                }
+                allows.push(names);
+            }
+            AllowParse::Malformed(msg) => {
+                out.push(violation(TIDY_ALLOW, label, i + 1, msg));
+                allows.push(Vec::new());
+            }
+        }
+    }
+    let allowed = |i: usize, lint: &str| {
+        allows[i].iter().any(|n| n == lint) || (i > 0 && allows[i - 1].iter().any(|n| n == lint))
+    };
+
+    // Everything at/after a top-level `#[cfg(test)]` is unit-test code,
+    // exempt from the panic-safety lint (tests may unwrap freely).
+    let test_start = lines
+        .iter()
+        .position(|l| *l == "#[cfg(test)]")
+        .unwrap_or(lines.len());
+
+    // Pass 2: token lints.
+    let mut lock_watermark: Option<u64> = None;
+    for (i, line) in lines.iter().enumerate() {
+        let (code, comment) = split_comment(line);
+
+        if collections_scope && !allowed(i, DETERMINISM_COLLECTIONS) {
+            for needle in COLLECTION_NEEDLES {
+                if has_token(code, needle) {
+                    out.push(violation(
+                        DETERMINISM_COLLECTIONS,
+                        label,
+                        i + 1,
+                        format!(
+                            "{needle} on a driver-reachable path: iteration order is \
+                             nondeterministic; use BTreeMap/BTreeSet or an index-keyed Vec"
+                        ),
+                    ));
+                }
+            }
+        }
+
+        if clock_scope && !allowed(i, DETERMINISM_CLOCK) {
+            for needle in CLOCK_NEEDLES {
+                if has_token(code, needle) {
+                    out.push(violation(
+                        DETERMINISM_CLOCK,
+                        label,
+                        i + 1,
+                        format!(
+                            "{needle} outside src/telemetry/: route wall-clock reads \
+                             through telemetry::WallClock or telemetry::Deadline"
+                        ),
+                    ));
+                }
+            }
+        }
+
+        if panic_scope && i < test_start && !allowed(i, PANIC_SAFETY) {
+            for needle in PANIC_NEEDLES {
+                if has_token(code, needle) {
+                    out.push(violation(
+                        PANIC_SAFETY,
+                        label,
+                        i + 1,
+                        format!(
+                            "{needle} in a protocol-critical module: return a typed \
+                             error instead (a panicking participant can deadlock the fleet)"
+                        ),
+                    ));
+                }
+            }
+        }
+
+        if !allowed(i, HYGIENE_UNSAFE) && has_token(code, UNSAFE_NEEDLE) {
+            out.push(violation(
+                HYGIENE_UNSAFE,
+                label,
+                i + 1,
+                format!("{UNSAFE_NEEDLE} code is forbidden repo-wide"),
+            ));
+        }
+
+        if code.contains("cfg") {
+            for feat in cfg_feature_names(code) {
+                if !features.iter().any(|f| f == &feat) && !allowed(i, HYGIENE_FEATURES) {
+                    out.push(violation(
+                        HYGIENE_FEATURES,
+                        label,
+                        i + 1,
+                        format!(
+                            "cfg names feature {feat:?}, which is not declared under \
+                             [features] in Cargo.toml"
+                        ),
+                    ));
+                }
+            }
+        }
+
+        if lock_scope {
+            if fn_boundary(code) {
+                lock_watermark = None;
+            }
+            let locks_here = LOCK_NEEDLES.iter().any(|n| code.contains(n));
+            if locks_here && !allowed(i, LOCK_ORDER) {
+                let mut ann = parse_lock_annotation(comment);
+                if ann.is_none() && i > 0 {
+                    ann = parse_lock_annotation(split_comment(lines[i - 1]).1);
+                }
+                match ann {
+                    None => out.push(violation(
+                        LOCK_ORDER,
+                        label,
+                        i + 1,
+                        format!(
+                            "lock acquisition without a `{LOCK_ANNOTATION} <rank> <why>` \
+                             comment on this or the preceding line"
+                        ),
+                    )),
+                    Some(Err(msg)) => out.push(violation(LOCK_ORDER, label, i + 1, msg)),
+                    Some(Ok(rank)) => {
+                        if let Some(w) = lock_watermark {
+                            if rank < w {
+                                out.push(violation(
+                                    LOCK_ORDER,
+                                    label,
+                                    i + 1,
+                                    format!(
+                                        "lock rank {rank} acquired after rank {w} in the \
+                                         same function; ranks must be nondecreasing"
+                                    ),
+                                ));
+                            }
+                        }
+                        lock_watermark = Some(lock_watermark.map_or(rank, |w| w.max(rank)));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let m = HashMap::new();", COLLECTION_NEEDLES[0]));
+        assert!(!has_token("let m = MyHashMapper::new();", COLLECTION_NEEDLES[0]));
+        assert!(has_token("fn main() {}", "fn"));
+        assert!(!has_token("Box<dyn Fn()>", "fn"));
+    }
+
+    #[test]
+    fn allow_grammar() {
+        let good = format!("// {ALLOW_NEEDLE}{DETERMINISM_CLOCK}): benchmarking only");
+        assert!(matches!(parse_allow(&good), AllowParse::Allow(v) if v.len() == 1));
+        let no_reason = format!("// {ALLOW_NEEDLE}{DETERMINISM_CLOCK})");
+        assert!(matches!(parse_allow(&no_reason), AllowParse::Malformed(_)));
+        let prose = format!("// see the {ALLOW_NEEDLE}...) docs");
+        assert!(matches!(parse_allow(&prose), AllowParse::None));
+    }
+
+    #[test]
+    fn lock_annotation_grammar() {
+        assert_eq!(
+            parse_lock_annotation(&format!("// {LOCK_ANNOTATION} 20 leaf lock")),
+            Some(Ok(20))
+        );
+        assert!(matches!(
+            parse_lock_annotation(&format!("// {LOCK_ANNOTATION} leaf lock")),
+            Some(Err(_))
+        ));
+        assert_eq!(parse_lock_annotation("// plain comment"), None);
+    }
+
+    #[test]
+    fn cfg_feature_extraction() {
+        let code = "#[cfg(feature = \"telemetry\")]";
+        assert_eq!(cfg_feature_names(code), vec!["telemetry".to_string()]);
+        assert!(cfg_feature_names("#[cfg(test)]").is_empty());
+    }
+}

@@ -1,0 +1,331 @@
+//! The cross-file `wire-schema` lint: keeps the `Payload` enum, the
+//! `TAG_*` table, the encode/decode matches in `comm/wire.rs`, the codec
+//! round-trip tests, and the committed [`WIRE_SCHEMA_FINGERPRINT`]
+//! mutually exhaustive.
+//!
+//! [`WIRE_SCHEMA_FINGERPRINT`]: crate::comm::wire::WIRE_SCHEMA_FINGERPRINT
+//!
+//! The fingerprint is FNV-1a 64 over a canonical description of the
+//! schema — the wire version, the `Payload` variant list in declaration
+//! order, and the `TAG_*` name/value table in declaration order:
+//!
+//! ```text
+//! wire-schema:v3;payload=Full,...,Stop;tags=STOP=0,...,BLOCKS=5
+//! ```
+//!
+//! Any edit to the enum, the tags, or the version changes the hash, and
+//! the lint then demands two deliberate acts: bump `WIRE_VERSION` and
+//! commit the recomputed fingerprint. There is no way to change what the
+//! bytes mean while old peers still accept the frames.
+
+use super::{violation, Violation, WIRE_SCHEMA};
+
+const PAYLOAD_LABEL: &str = "src/comm/mod.rs";
+const WIRE_LABEL: &str = "src/comm/wire.rs";
+const CODEC_LABEL: &str = "tests/wire_codec.rs";
+
+/// The functions whose union must name every `Payload` variant on the
+/// encode side, and likewise on the decode side.
+const ENCODE_FNS: &[&str] = &["tag_of", "encode_body"];
+const DECODE_FNS: &[&str] = &["decode_frame", "decode_flat_body", "decode_blocks"];
+
+/// Feature names declared under `[features]` in a `Cargo.toml`.
+pub fn declared_features(cargo_toml: &str) -> Vec<String> {
+    let mut in_features = false;
+    let mut out = Vec::new();
+    for line in cargo_toml.lines() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            in_features = t == "[features]";
+            continue;
+        }
+        if in_features {
+            if let Some(eq) = t.find('=') {
+                let key = t[..eq].trim();
+                if !key.is_empty() && !key.starts_with('#') {
+                    out.push(key.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The `Payload` variant names in declaration order, with the 1-indexed
+/// line of the enum header.
+pub fn payload_variants(src: &str) -> Option<(usize, Vec<String>)> {
+    let mut lines = src.lines().enumerate();
+    let (header, _) = lines.find(|(_, l)| l.starts_with("pub enum Payload"))?;
+    let mut variants = Vec::new();
+    for (_, line) in lines {
+        if line == "}" {
+            return Some((header + 1, variants));
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with("//") || t.starts_with("#[") {
+            continue;
+        }
+        let name: String = t
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            variants.push(name);
+        }
+    }
+    None
+}
+
+/// The `const TAG_* : u8 = N;` table in declaration order, as
+/// `(1-indexed line, name-after-TAG_, value)`.
+pub fn wire_tags(src: &str) -> Vec<(usize, String, u64)> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let t = line.trim().trim_start_matches("pub ");
+        let Some(rest) = t.strip_prefix("const TAG_") else {
+            continue;
+        };
+        let Some(colon) = rest.find(':') else { continue };
+        let name = rest[..colon].trim().to_string();
+        let Some(eq) = rest.find('=') else { continue };
+        let value_txt = rest[eq + 1..].trim().trim_end_matches(';').trim();
+        if let Ok(value) = value_txt.parse::<u64>() {
+            out.push((i + 1, name, value));
+        }
+    }
+    out
+}
+
+/// `(1-indexed line, value)` of a `const NAME: <ty> = <int>;` item, where
+/// the integer may use `_` separators and a `0x` prefix.
+fn const_int(src: &str, name: &str) -> Option<(usize, u64)> {
+    for (i, line) in src.lines().enumerate() {
+        let t = line.trim().trim_start_matches("pub ");
+        let Some(rest) = t.strip_prefix("const ") else {
+            continue;
+        };
+        if !rest.starts_with(name) {
+            continue;
+        }
+        let eq = rest.find('=')?;
+        let txt: String = rest[eq + 1..]
+            .trim()
+            .trim_end_matches(';')
+            .chars()
+            .filter(|c| *c != '_')
+            .collect();
+        let value = match txt.strip_prefix("0x") {
+            Some(hex) => u64::from_str_radix(hex, 16).ok()?,
+            None => txt.parse().ok()?,
+        };
+        return Some((i + 1, value));
+    }
+    None
+}
+
+/// FNV-1a 64 (offset 0xcbf29ce484222325, prime 0x100000001b3).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The canonical-schema fingerprint for a version, variant list, and tag
+/// table (see the module docs for the string layout).
+pub fn schema_fingerprint(version: u64, variants: &[String], tags: &[(usize, String, u64)]) -> u64 {
+    let vs = variants.join(",");
+    let ts: Vec<String> = tags.iter().map(|(_, n, v)| format!("{n}={v}")).collect();
+    fnv1a64(&format!(
+        "wire-schema:v{version};payload={vs};tags={}",
+        ts.join(",")
+    ))
+}
+
+/// The body of a column-0 `fn name(...)` item (through its column-0 `}`),
+/// with the 1-indexed line it starts on.
+fn fn_region<'a>(src: &'a str, name: &str) -> Option<(usize, &'a str)> {
+    let mut start = None;
+    let mut offset = 0;
+    for (i, line) in src.lines().enumerate() {
+        match start {
+            None => {
+                let sig = line.strip_prefix("pub ").unwrap_or(line);
+                if sig.starts_with("fn ") && sig.contains(&format!("fn {name}(")) {
+                    start = Some((i + 1, offset));
+                }
+            }
+            Some((line1, from)) => {
+                if line == "}" {
+                    return Some((line1, &src[from..offset + line.len()]));
+                }
+            }
+        }
+        offset += line.len() + 1;
+    }
+    None
+}
+
+/// Run the wire-schema lint over the three relevant sources.
+pub fn check_wire(payload_src: &str, wire_src: &str, codec_tests: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+
+    let Some((enum_line, variants)) = payload_variants(payload_src) else {
+        out.push(violation(
+            WIRE_SCHEMA,
+            PAYLOAD_LABEL,
+            0,
+            "cannot locate `pub enum Payload`".to_string(),
+        ));
+        return out;
+    };
+    let tags = wire_tags(wire_src);
+    let Some((_, version)) = const_int(wire_src, "WIRE_VERSION") else {
+        out.push(violation(
+            WIRE_SCHEMA,
+            WIRE_LABEL,
+            0,
+            "cannot locate `WIRE_VERSION`".to_string(),
+        ));
+        return out;
+    };
+
+    if tags.len() != variants.len() {
+        out.push(violation(
+            WIRE_SCHEMA,
+            WIRE_LABEL,
+            tags.first().map_or(0, |(l, _, _)| *l),
+            format!(
+                "{} TAG_* constants for {} Payload variants",
+                tags.len(),
+                variants.len()
+            ),
+        ));
+    }
+    for (i, (line, name, value)) in tags.iter().enumerate() {
+        if tags[..i].iter().any(|(_, _, v)| v == value) {
+            out.push(violation(
+                WIRE_SCHEMA,
+                WIRE_LABEL,
+                *line,
+                format!("TAG_{name} reuses wire tag value {value}"),
+            ));
+        }
+    }
+    for v in &variants {
+        let upper = v.to_uppercase();
+        if !tags.iter().any(|(_, n, _)| *n == upper) {
+            out.push(violation(
+                WIRE_SCHEMA,
+                PAYLOAD_LABEL,
+                enum_line,
+                format!("Payload::{v} has no TAG_{upper} constant in comm/wire.rs"),
+            ));
+        }
+    }
+
+    let mut side = |fns: &[&str], what: &str| {
+        let mut anchor = 0;
+        let mut union = String::new();
+        for name in fns {
+            match fn_region(wire_src, name) {
+                Some((line, body)) => {
+                    if anchor == 0 {
+                        anchor = line;
+                    }
+                    union.push_str(body);
+                }
+                None => out.push(violation(
+                    WIRE_SCHEMA,
+                    WIRE_LABEL,
+                    0,
+                    format!("cannot locate `fn {name}` for the {what} check"),
+                )),
+            }
+        }
+        for v in &variants {
+            if !union.contains(&format!("Payload::{v}")) {
+                out.push(violation(
+                    WIRE_SCHEMA,
+                    WIRE_LABEL,
+                    anchor,
+                    format!("Payload::{v} is not handled on the {what} side ({fns:?})"),
+                ));
+            }
+        }
+    };
+    side(ENCODE_FNS, "encode");
+    side(DECODE_FNS, "decode");
+
+    for v in &variants {
+        if !codec_tests.contains(&format!("Payload::{v}")) {
+            out.push(violation(
+                WIRE_SCHEMA,
+                CODEC_LABEL,
+                0,
+                format!("Payload::{v} is never exercised by the codec round-trip tests"),
+            ));
+        }
+    }
+
+    let computed = schema_fingerprint(version, &variants, &tags);
+    match const_int(wire_src, "WIRE_SCHEMA_FINGERPRINT") {
+        None => out.push(violation(
+            WIRE_SCHEMA,
+            WIRE_LABEL,
+            0,
+            "cannot locate `WIRE_SCHEMA_FINGERPRINT`".to_string(),
+        )),
+        Some((line, committed)) if committed != computed => out.push(violation(
+            WIRE_SCHEMA,
+            WIRE_LABEL,
+            line,
+            format!(
+                "wire schema changed: committed fingerprint {committed:#018x}, source \
+                 hashes to {computed:#018x}; bump WIRE_VERSION and update \
+                 WIRE_SCHEMA_FINGERPRINT to the new value"
+            ),
+        )),
+        Some(_) => {}
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_parse() {
+        let toml =
+            "[package]\nname = \"x\"\n\n[features]\ndefault = [\"telemetry\"]\ntelemetry = []\n";
+        assert_eq!(declared_features(toml), vec!["default", "telemetry"]);
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a 64 published test vector.
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn const_int_forms() {
+        assert_eq!(const_int("pub const A: u8 = 3;", "A"), Some((1, 3)));
+        assert_eq!(
+            const_int("const F: u64 = 0x957e_1bfe;", "F"),
+            Some((1, 0x957e_1bfe))
+        );
+    }
+
+    #[test]
+    fn fn_region_extracts_column0_items() {
+        let src = "fn a() {\n    body_a();\n}\n\npub fn b(x: u8) -> u8 {\n    x\n}\n";
+        let (line, body) = fn_region(src, "b").unwrap();
+        assert_eq!(line, 5);
+        assert!(body.contains("x: u8"));
+        assert!(fn_region(src, "missing").is_none());
+    }
+}

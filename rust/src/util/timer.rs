@@ -1,7 +1,11 @@
 //! Wall-clock stopwatch + simple scoped timing, used by the benchmark
 //! harness and by Fig. 8 (loss/accuracy vs local computation time).
+//!
+//! Built on [`WallClock`] rather than raw `Instant` so that `telemetry`
+//! stays the single module that reads the OS clock (the tidy
+//! `determinism-clock` lint enforces this).
 
-use std::time::{Duration, Instant};
+use crate::telemetry::WallClock;
 
 /// A resettable stopwatch accumulating elapsed time across start/stop
 /// intervals. Fig. 8 accumulates *local computation* time only (the
@@ -9,8 +13,8 @@ use std::time::{Duration, Instant};
 /// starts/stops this watch around the compute sections.
 #[derive(Clone, Debug)]
 pub struct Stopwatch {
-    accumulated: Duration,
-    started: Option<Instant>,
+    accumulated_ns: u64,
+    running: Option<WallClock>,
 }
 
 impl Default for Stopwatch {
@@ -22,48 +26,46 @@ impl Default for Stopwatch {
 impl Stopwatch {
     pub fn new() -> Self {
         Stopwatch {
-            accumulated: Duration::ZERO,
-            started: None,
+            accumulated_ns: 0,
+            running: None,
         }
     }
 
     pub fn start(&mut self) {
-        if self.started.is_none() {
-            self.started = Some(Instant::now());
+        if self.running.is_none() {
+            self.running = Some(WallClock::start());
         }
     }
 
     pub fn stop(&mut self) {
-        if let Some(t0) = self.started.take() {
-            self.accumulated += t0.elapsed();
+        if let Some(clock) = self.running.take() {
+            self.accumulated_ns += clock.now_ns();
         }
     }
 
     /// Total accumulated seconds (includes a currently-running interval).
     pub fn seconds(&self) -> f64 {
-        let mut d = self.accumulated;
-        if let Some(t0) = self.started {
-            d += t0.elapsed();
-        }
-        d.as_secs_f64()
+        let live_ns = self.running.map(|c| c.now_ns()).unwrap_or(0);
+        (self.accumulated_ns + live_ns) as f64 / 1e9
     }
 
     pub fn reset(&mut self) {
-        self.accumulated = Duration::ZERO;
-        self.started = None;
+        self.accumulated_ns = 0;
+        self.running = None;
     }
 }
 
 /// Time a closure, returning `(result, seconds)`.
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
+    let clock = WallClock::start();
     let out = f();
-    (out, t0.elapsed().as_secs_f64())
+    (out, clock.elapsed_secs())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn stopwatch_accumulates() {

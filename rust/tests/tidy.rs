@@ -1,0 +1,182 @@
+//! Tier-1 enforcement of the `qgadmm-tidy` static-analysis pass.
+//!
+//! Two halves:
+//!
+//! 1. `repo_is_tidy` runs the full pass over the real tree — so `cargo
+//!    test` fails (naming lint and file:line) the moment someone
+//!    reintroduces a hash container on a driver path, a raw clock read, a
+//!    panicking escape hatch in a protocol module, an unannotated lock
+//!    site, or an unsynchronized wire-schema edit.
+//! 2. The fixture tests feed the deliberately-dirty files under
+//!    `tidy_fixtures/` (excluded from the repo walk, never compiled)
+//!    through the scanner with synthetic labels, proving every lint
+//!    family both fires and stays quiet where it should.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use qgadmm::util::tidy::{
+    self, source, wire, DETERMINISM_CLOCK, DETERMINISM_COLLECTIONS, HYGIENE_FEATURES,
+    HYGIENE_UNSAFE, LOCK_ORDER, PANIC_SAFETY, TIDY_ALLOW, WIRE_SCHEMA,
+};
+
+fn manifest_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn features() -> Vec<String> {
+    vec!["default".to_string(), "telemetry".to_string()]
+}
+
+/// Scan fixture text under a synthetic repo label, returning lint names.
+fn lints(label: &str, text: &str) -> Vec<&'static str> {
+    source::check_source(label, text, &features())
+        .into_iter()
+        .map(|v| v.lint)
+        .collect()
+}
+
+#[test]
+fn repo_is_tidy() {
+    let violations = tidy::check_repo(manifest_dir()).expect("scan the repo tree");
+    assert!(
+        violations.is_empty(),
+        "tidy violations in the tree:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn violations_render_as_file_line_lint() {
+    let found = source::check_source(
+        "src/coordinator/fixture.rs",
+        include_str!("tidy_fixtures/collections_bad.rs"),
+        &features(),
+    );
+    let first = found.first().expect("fixture must fire");
+    let rendered = first.to_string();
+    assert!(rendered.starts_with("src/coordinator/fixture.rs:"));
+    assert!(rendered.contains(&format!("[{DETERMINISM_COLLECTIONS}]")));
+}
+
+#[test]
+fn collections_fixture_fires_in_scope_only() {
+    let bad = include_str!("tidy_fixtures/collections_bad.rs");
+    let fired = lints("src/coordinator/fixture.rs", bad);
+    assert_eq!(fired, vec![DETERMINISM_COLLECTIONS; 3]);
+    // The same text outside the determinism-scoped directories is fine.
+    assert!(lints("src/figures/fixture.rs", bad).is_empty());
+}
+
+#[test]
+fn collections_fixture_passes_with_ordered_maps_and_allows() {
+    let ok = include_str!("tidy_fixtures/collections_ok.rs");
+    assert!(lints("src/coordinator/fixture.rs", ok).is_empty());
+}
+
+#[test]
+fn clock_fixture_fires_outside_telemetry_only() {
+    let bad = include_str!("tidy_fixtures/clock_bad.rs");
+    assert_eq!(lints("src/quant/fixture.rs", bad), vec![DETERMINISM_CLOCK; 3]);
+    assert!(lints("src/telemetry/fixture.rs", bad).is_empty());
+}
+
+#[test]
+fn panic_fixture_fires_in_protocol_files_only() {
+    let bad = include_str!("tidy_fixtures/panic_bad.rs");
+    assert_eq!(lints("src/comm/wire.rs", bad), vec![PANIC_SAFETY; 2]);
+    assert_eq!(lints("src/coordinator/membership.rs", bad), vec![PANIC_SAFETY; 2]);
+    assert!(lints("src/comm/other.rs", bad).is_empty());
+}
+
+#[test]
+fn panic_fixture_passes_with_typed_fallbacks_and_test_exemption() {
+    let ok = include_str!("tidy_fixtures/panic_ok.rs");
+    assert!(lints("src/net/tcp.rs", ok).is_empty());
+}
+
+#[test]
+fn lock_fixture_fires_on_missing_malformed_and_inverted_ranks() {
+    let bad = include_str!("tidy_fixtures/lock_bad.rs");
+    assert_eq!(lints("src/coordinator/threaded.rs", bad), vec![LOCK_ORDER; 3]);
+    // Lock discipline only binds in the two threaded/networked modules.
+    assert!(lints("src/coordinator/engine.rs", bad).is_empty());
+}
+
+#[test]
+fn lock_fixture_passes_with_nondecreasing_annotated_ranks() {
+    let ok = include_str!("tidy_fixtures/lock_ok.rs");
+    assert!(lints("src/net/tcp.rs", ok).is_empty());
+}
+
+#[test]
+fn malformed_allow_fires_the_unsuppressible_meta_lint() {
+    let bad = include_str!("tidy_fixtures/allow_bad.rs");
+    assert_eq!(lints("src/util/fixture.rs", bad), vec![TIDY_ALLOW; 3]);
+}
+
+#[test]
+fn hygiene_fixture_fires_everywhere() {
+    let bad = include_str!("tidy_fixtures/hygiene_bad.rs");
+    let fired = lints("benches/fixture.rs", bad);
+    assert_eq!(fired, vec![HYGIENE_FEATURES, HYGIENE_UNSAFE]);
+    let ok = include_str!("tidy_fixtures/hygiene_ok.rs");
+    assert!(lints("benches/fixture.rs", ok).is_empty());
+}
+
+fn wire_sources() -> (String, String, String) {
+    let root = manifest_dir();
+    let read = |p: PathBuf| fs::read_to_string(&p).expect("read wire-schema source");
+    (
+        read(root.join("src").join("comm").join("mod.rs")),
+        read(root.join("src").join("comm").join("wire.rs")),
+        read(root.join("tests").join("wire_codec.rs")),
+    )
+}
+
+#[test]
+fn wire_schema_is_exhaustive_and_fingerprinted() {
+    let (payload, wire_src, codec) = wire_sources();
+    let violations = wire::check_wire(&payload, &wire_src, &codec);
+    assert!(
+        violations.is_empty(),
+        "wire-schema violations:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn deleting_a_decode_arm_fires_wire_schema() {
+    let (payload, wire_src, codec) = wire_sources();
+    let broken = wire_src.replace("Payload::Sparse(decode_sparse", "sparse_stub(decode_sparse");
+    assert_ne!(broken, wire_src, "the Sparse decode arm must exist to delete");
+    let violations = wire::check_wire(&payload, &broken, &codec);
+    assert_eq!(violations.len(), 1);
+    assert_eq!(violations[0].lint, WIRE_SCHEMA);
+    assert!(violations[0].message.contains("Payload::Sparse"));
+    assert!(violations[0].message.contains("decode"));
+}
+
+#[test]
+fn schema_edit_without_fingerprint_update_fires_wire_schema() {
+    let (payload, wire_src, codec) = wire_sources();
+    let bumped = wire_src.replace(
+        "pub const WIRE_VERSION: u8 = 3;",
+        "pub const WIRE_VERSION: u8 = 4;",
+    );
+    assert_ne!(bumped, wire_src, "WIRE_VERSION must be where we expect it");
+    let violations = wire::check_wire(&payload, &bumped, &codec);
+    assert_eq!(violations.len(), 1);
+    assert_eq!(violations[0].lint, WIRE_SCHEMA);
+    assert!(violations[0].message.contains("bump WIRE_VERSION"));
+    assert!(violations[0].file.ends_with("wire.rs"));
+    assert!(violations[0].line > 0);
+}

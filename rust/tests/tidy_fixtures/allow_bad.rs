@@ -1,0 +1,5 @@
+// Fixture: must fire the unsuppressible `tidy-allow` meta-lint three
+// ways — missing reason, unknown lint name, missing close paren.
+pub fn a() {} // tidy:allow(determinism-collections)
+pub fn b() {} // tidy:allow(no-such-lint): the lint name is wrong
+pub fn c() {} // tidy:allow(panic-safety

@@ -1,0 +1,12 @@
+// Fixture: must fire `determinism-clock` twice when labeled under src/
+// outside src/telemetry/.
+use std::time::Instant;
+
+pub fn now_secs() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,7 @@
+// Fixture: must fire `determinism-collections` when labeled as a file in
+// a determinism-scoped directory (never compiled; scanned by tests/tidy.rs).
+use std::collections::HashMap;
+
+pub fn route_table() -> HashMap<usize, usize> {
+    HashMap::new()
+}

@@ -1,0 +1,15 @@
+// Fixture: must pass `determinism-collections` clean — ordered maps, a
+// hash-container mention in prose only, and a properly suppressed use.
+use std::collections::BTreeMap;
+
+// A HashMap here would be flagged; BTreeMap iterates in key order.
+pub fn route_table() -> BTreeMap<usize, usize> {
+    BTreeMap::new()
+}
+
+// tidy:allow(determinism-collections): profiling scratch map, never iterated
+use std::collections::HashMap;
+
+pub fn scratch_len(m: &HashMap<usize, usize>) -> usize { // tidy:allow(determinism-collections): same scratch map
+    m.len()
+}

@@ -1,0 +1,8 @@
+// Fixture: must fire `hygiene-features` (undeclared cfg feature) and the
+// unsafe-token hygiene lint.
+#[cfg(feature = "quantum-teleport")]
+pub fn teleport() {}
+
+pub unsafe fn raw_read(p: *const u8) -> u8 {
+    *p
+}

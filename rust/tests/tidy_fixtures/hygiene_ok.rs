@@ -1,0 +1,6 @@
+// Fixture: must pass hygiene clean — only declared features are cfg'd.
+#[cfg(feature = "telemetry")]
+pub fn traced() {}
+
+#[cfg(not(feature = "telemetry"))]
+pub fn untraced() {}

@@ -1,0 +1,18 @@
+// Fixture: must fire `lock-order` three ways when labeled as a
+// lock-disciplined file — missing annotation, malformed rank, and a rank
+// inversion inside one function.
+pub fn publish(&self) {
+    let mut s = self.state.lock_unpoisoned();
+    *s += 1;
+}
+
+pub fn malformed(&self) {
+    let _g = self.state.lock_unpoisoned(); // lock-order: leaf lock with no rank
+}
+
+pub fn inverted(&self) {
+    // lock-order: 20 cluster table first
+    let _a = self.cluster.lock_unpoisoned();
+    // lock-order: 10 rho latch second — wrong way around
+    let _b = self.latch.lock_unpoisoned();
+}

@@ -1,0 +1,20 @@
+// Fixture: must pass `lock-order` clean — every acquisition annotated,
+// ranks nondecreasing per function, watermark reset at function
+// boundaries.
+pub fn publish(&self) {
+    // lock-order: 10 rho latch is a leaf lock
+    let mut s = self.state.lock_unpoisoned();
+    *s += 1;
+}
+
+pub fn sweep(&self) {
+    // lock-order: 10 rho latch first
+    let _a = self.latch.lock_unpoisoned();
+    // lock-order: 20 cluster table after the latch
+    let _b = self.cluster.lock_unpoisoned();
+}
+
+pub fn fresh_function_resets_the_watermark(&self) {
+    // lock-order: 10 back down to the latch rank
+    let _g = self.latch.lock_unpoisoned();
+}

@@ -1,0 +1,9 @@
+// Fixture: must fire `panic-safety` twice when labeled as a
+// protocol-critical file.
+pub fn parse_header(b: &[u8]) -> u32 {
+    let first = b.first().unwrap();
+    if *first != 0xA9 {
+        panic!("bad magic");
+    }
+    u32::from(*first)
+}

@@ -1,0 +1,20 @@
+// Fixture: must pass `panic-safety` clean even under a protocol-critical
+// label — typed fallbacks in shipping code, free unwraps only after the
+// top-level `#[cfg(test)]` marker.
+pub fn parse_header(b: &[u8]) -> Option<u32> {
+    let first = b.first()?;
+    Some(u32::from(*first))
+}
+
+pub fn rho_or_default(v: Option<f64>) -> f64 {
+    v.unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unit() {
+        assert_eq!(super::rho_or_default(None), 1.0);
+        super::parse_header(&[7]).unwrap();
+    }
+}
